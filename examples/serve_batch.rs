@@ -1,0 +1,120 @@
+//! End-to-end serving driver (the EXPERIMENTS.md §E2E run).
+//!
+//!     cargo run --release --example serve_batch -- --model sim-130m \
+//!         --requests 32 --clients 4
+//!
+//! Boots the full stack — PJRT runtime → engine replicas under the router →
+//! TCP server — then drives it with concurrent closed-loop clients over
+//! real sockets, streaming text prompts sampled from the bundled corpus.
+//! Reports throughput, latency percentiles and batcher occupancy: the
+//! continuous-batching scheduler the paper's §6 declares compatible with
+//! its O(1) cache primitive, realised.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+use mamba2_serve::coordinator::{Engine, EngineConfig, Router};
+use mamba2_serve::eval::{corpus, Tokenizer};
+use mamba2_serve::runtime::{ModelSession, Runtime};
+use mamba2_serve::server::{Client, Server};
+use mamba2_serve::util::cli::Cli;
+use mamba2_serve::util::json::Json;
+use mamba2_serve::util::prng::Rng;
+use mamba2_serve::util::stats::Summary;
+
+fn main() -> Result<()> {
+    mamba2_serve::util::logging::init();
+    let cli = Cli::new("serve_batch", "end-to-end serving benchmark")
+        .opt("model", "sim-130m", "model config")
+        .opt("replicas", "1", "engine replicas")
+        .opt("batch-cap", "4", "continuous-batching slots")
+        .opt("requests", "32", "total requests")
+        .opt("clients", "4", "concurrent clients")
+        .opt("gen-tokens", "24", "tokens per request")
+        .parse_env();
+
+    let rt = Runtime::new(&mamba2_serve::artifacts_dir())?;
+    println!("platform: {}", rt.platform());
+    let model = cli.get("model");
+
+    // --- boot the full stack ------------------------------------------
+    let mut replicas = Vec::new();
+    for _ in 0..cli.get_usize("replicas") {
+        let session = ModelSession::new(Arc::clone(&rt), &model)?;
+        replicas.push(Arc::new(Engine::start(session, EngineConfig {
+            batch_cap: cli.get_usize("batch-cap"),
+            ..Default::default()
+        })?));
+    }
+    let router = Arc::new(Router::new(replicas));
+    let tokenizer = Arc::new(Tokenizer::train(corpus::BUNDLED, 256));
+    let server = Server::new(Arc::clone(&router), Arc::clone(&tokenizer));
+    let (atx, arx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        server.serve("127.0.0.1:0", 8, move |a| {
+            atx.send(a.to_string()).unwrap();
+        }).unwrap();
+    });
+    let addr = arx.recv()?;
+    println!("serving {model} on {addr}");
+
+    // --- drive it over real sockets -----------------------------------
+    let n_requests = cli.get_usize("requests");
+    let n_clients = cli.get_usize("clients");
+    let gen_tokens = cli.get_usize("gen-tokens");
+    let sentences: Vec<&str> = corpus::BUNDLED
+        .split(". ")
+        .filter(|s| s.len() > 24)
+        .collect();
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        let addr = addr.clone();
+        let mut rng = Rng::new(c as u64 + 1);
+        let prompts: Vec<String> = (0..n_requests / n_clients)
+            .map(|_| {
+                let s = sentences[rng.below(sentences.len() as u64) as usize];
+                s.chars().take(24 + rng.below(40) as usize).collect()
+            })
+            .collect();
+        handles.push(std::thread::spawn(move || -> Result<Vec<f64>> {
+            let mut client = Client::connect(&addr)?;
+            assert!(client.ping()?);
+            let mut lat = Vec::new();
+            for p in prompts {
+                let t = Instant::now();
+                let r = client.generate(&p, gen_tokens)?;
+                if let Some(e) = r.get("error") {
+                    anyhow::bail!("server error: {e}");
+                }
+                assert_eq!(r.get("n").and_then(Json::as_u64),
+                           Some(gen_tokens as u64));
+                lat.push(t.elapsed().as_secs_f64());
+            }
+            Ok(lat)
+        }));
+    }
+    let mut latencies = Vec::new();
+    for h in handles {
+        latencies.extend(h.join().unwrap()?);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    // --- report ---------------------------------------------------------
+    let s = Summary::of(&latencies);
+    let total_tokens = (latencies.len() * gen_tokens) as f64;
+    println!("\n=== serve_batch results ===");
+    println!("requests completed : {}", latencies.len());
+    println!("wall time          : {wall:.2} s");
+    println!("request throughput : {:.2} req/s", latencies.len() as f64 / wall);
+    println!("token throughput   : {:.1} tok/s", total_tokens / wall);
+    println!("latency p50 / p90 / p99 : {:.1} / {:.1} / {:.1} ms",
+             s.p50 * 1e3, s.p90 * 1e3, s.p99 * 1e3);
+    for i in 0..router.n_replicas() {
+        let snap = router.replica(i).metrics.snapshot();
+        println!("replica {i}: {}", snap.render());
+    }
+    println!("\nrecord this block in EXPERIMENTS.md §E2E");
+    Ok(())
+}

@@ -1,0 +1,100 @@
+//! End-to-end training driver: train a Mamba-2 on the bundled corpus from
+//! rust, through the AOT train-step executable, logging the loss curve.
+//!
+//!     cargo run --release --example train_tiny -- --steps 200
+//!
+//! Python never runs here: the fwd+bwd+Adam graph was lowered once by
+//! `make artifacts`; this binary feeds tokenized corpus batches and carries
+//! (params, m, v) across steps, then saves the trained checkpoint to a
+//! .mbt the server / perplexity example can load.
+
+use anyhow::Result;
+use mamba2_serve::eval::corpus::eval_text;
+use mamba2_serve::eval::Tokenizer;
+use mamba2_serve::runtime::{ModelSession, Runtime};
+use mamba2_serve::tensor::{save_mbt, Tensor};
+use mamba2_serve::util::cli::Cli;
+use mamba2_serve::util::prng::Rng;
+
+fn main() -> Result<()> {
+    mamba2_serve::util::logging::init();
+    let cli = Cli::new("train_tiny", "train a Mamba-2 from rust via the \
+                        AOT train-step artifact")
+        .opt("model", "sim-130m", "config (must have train artifacts: \
+              sim-130m/370m/780m)")
+        .opt("steps", "200", "training steps")
+        .opt("seq", "64", "sequence length bucket (32|64|128)")
+        .opt("out", "trained.mbt", "checkpoint output path")
+        .opt("log-every", "10", "steps between loss prints")
+        .parse_env();
+
+    let rt = Runtime::new(&mamba2_serve::artifacts_dir())?;
+    let model = cli.get("model");
+    let seq = cli.get_usize("seq");
+    let steps = cli.get_usize("steps");
+    let session = ModelSession::new(rt.clone(), &model)?;
+    let exe = format!("{model}.train_chunked.t{seq}");
+    rt.load(&exe)?;
+    println!("training {model} ({:.1}M params) for {steps} steps at seq {seq}",
+             session.cfg().n_params_total as f64 / 1e6);
+
+    // tokenized corpus (byte-level; ids < 512 = model vocab)
+    let tok = Tokenizer::bytes_only();
+    let data = tok.encode(&eval_text(4000));
+    println!("corpus: {} tokens", data.len());
+
+    // training state lives on the host between steps
+    let mut params = session.params_host.clone();
+    let mut m: Vec<Tensor> = params.iter()
+        .map(|p| Tensor::zeros_f32(&p.name, &p.dims)).collect();
+    let mut v = m.clone();
+    let n = params.len();
+
+    let mut rng = Rng::new(0);
+    let mut losses = Vec::new();
+    let t0 = std::time::Instant::now();
+    for step in 1..=steps {
+        let start = rng.below((data.len() - seq - 1) as u64) as usize;
+        let window: Vec<i32> = data[start..start + seq + 1].to_vec();
+        let mut extras = params.clone();
+        extras.extend(m.iter().cloned());
+        extras.extend(v.iter().cloned());
+        extras.push(Tensor::f32("step", &[], &[step as f32]));
+        extras.push(Tensor::i32("tokens", &[1, seq as i64 + 1], &window));
+        let outs = rt.exec(&exe, None, extras, true)?;
+        // outputs: params' (n), m' (n), v' (n), loss
+        let loss = outs[3 * n].as_f32()[0];
+        losses.push(loss as f64);
+        for (i, t) in outs.into_iter().enumerate() {
+            if i < n {
+                params[i] = Tensor { name: params[i].name.clone(), ..t };
+            } else if i < 2 * n {
+                m[i - n] = t;
+            } else if i < 3 * n {
+                v[i - 2 * n] = t;
+            }
+        }
+        if step % cli.get_usize("log-every") == 0 || step == 1 {
+            let recent: f64 = losses.iter().rev().take(10).sum::<f64>()
+                / losses.len().min(10) as f64;
+            println!("step {step:4}  loss {loss:.4}  (avg10 {recent:.4})  \
+                      [{:.1} steps/s]",
+                     step as f64 / t0.elapsed().as_secs_f64());
+        }
+    }
+
+    let first10: f64 = losses.iter().take(10).sum::<f64>() / 10.0;
+    let last10: f64 = losses.iter().rev().take(10).sum::<f64>() / 10.0;
+    println!("\nloss: first-10 avg {first10:.4} → last-10 avg {last10:.4} \
+              ({:.1}% reduction)",
+             (1.0 - last10 / first10) * 100.0);
+    assert!(last10 < first10, "training must reduce loss");
+
+    let out = cli.get("out");
+    save_mbt(std::path::Path::new(&out), &params)?;
+    println!("checkpoint saved to {out} — try:\n  cargo run --release \
+              --example perplexity_eval -- --model {model} --weights {out}\n  \
+              cargo run --release --bin mamba2-serve -- --model {model} \
+              --weights {out}");
+    Ok(())
+}

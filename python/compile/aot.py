@@ -1,0 +1,361 @@
+"""AOT lowering pipeline: JAX → HLO text artifacts + manifest + params + goldens.
+
+Run once via ``make artifacts`` (``python -m compile.aot``).  Everything the
+rust binary needs at runtime lands in ``artifacts/``:
+
+    manifest.json      — every executable: file, arg/output specs, XLA cost
+                         analysis (flops / bytes), memory analysis, lowering
+                         + CPU-compile wall times, config dicts
+    <cfg>.params.mbt   — seeded random-init parameters, canonical order
+    hlo/<name>.hlo.txt — HLO text (NOT serialized protos: jax ≥ 0.5 emits
+                         64-bit instruction ids that xla_extension 0.5.1
+                         rejects; the text parser reassigns ids)
+    goldens/*.mbt      — python-side reference outputs for rust integration
+                         tests (tokens bitwise, logits to 1e-4)
+
+Shape-bucket policy: AOT executables are static-shape; the rust engine picks
+the largest prefill bucket ≤ prompt length and feeds the remainder through
+decode_step (see rust/src/coordinator/engine.rs).
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import train as T
+from .cache import MambaCache
+from .configs import SIM_CONFIGS, SIM_TO_PAPER, get_config
+from .params import (flatten_params, init_params, param_order, save_mbt,
+                     save_params, unflatten_params)
+
+# ------------------------------------------------------------- buckets ----
+
+PREFILL_BUCKETS = [16, 64, 256, 512]          # prompt lengths (chunk=16 ×)
+DECODE_LOOP_BUCKETS = [16, 32, 64, 128, 256]  # generation lengths
+FORWARD_BUCKETS = [16, 32, 64, 128, 256, 512]  # non-cached baseline lengths
+TRAIN_SEQ_BUCKETS = [32, 64, 128]             # Table 13 sim of {512,1024,2048}
+TRAIN_CONFIGS = ["sim-130m", "sim-370m", "sim-780m"]
+BATCH_CAP = 4                                 # continuous-batching slot count
+PARAM_SEED = 0
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(x):
+    return {"shape": list(np.shape(x)),
+            "dtype": str(np.asarray(x).dtype) if not hasattr(x, "dtype")
+            else str(x.dtype)}
+
+
+class Emitter:
+    def __init__(self, out_dir):
+        self.out_dir = out_dir
+        self.hlo_dir = os.path.join(out_dir, "hlo")
+        os.makedirs(self.hlo_dir, exist_ok=True)
+        self.manifest = {"format": 1, "batch_cap": BATCH_CAP,
+                         "prefill_buckets": PREFILL_BUCKETS,
+                         "decode_loop_buckets": DECODE_LOOP_BUCKETS,
+                         "forward_buckets": FORWARD_BUCKETS,
+                         "train_seq_buckets": TRAIN_SEQ_BUCKETS,
+                         "configs": {}, "executables": []}
+
+    def emit(self, name, fn, args, *, config, entrypoint, n_params,
+             meta=None):
+        """Lower fn(*args) and record the artifact."""
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*args)
+        hlo = to_hlo_text(lowered)
+        lower_s = time.time() - t0
+        path = os.path.join(self.hlo_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(hlo)
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+        cost = {}
+        try:
+            ca = compiled.cost_analysis()
+            if isinstance(ca, list):
+                ca = ca[0]
+            for k in ("flops", "bytes accessed", "transcendentals"):
+                if k in ca:
+                    cost[k.replace(" ", "_")] = float(ca[k])
+        except Exception:
+            pass
+        mem = {}
+        try:
+            ma = compiled.memory_analysis()
+            for k in ("temp_size_in_bytes", "argument_size_in_bytes",
+                      "output_size_in_bytes", "generated_code_size_in_bytes"):
+                v = getattr(ma, k, None)
+                if v is not None:
+                    mem[k] = int(v)
+        except Exception:
+            pass
+
+        flat_args = jax.tree.leaves(args)
+        entry = {
+            "name": name,
+            "file": f"hlo/{name}.hlo.txt",
+            "config": config,
+            "entrypoint": entrypoint,
+            "n_params": n_params,
+            "n_args": len(flat_args),
+            "args": [_spec(a) for a in flat_args],
+            "cost": cost,
+            "memory": mem,
+            "lower_seconds": round(lower_s, 4),
+            "cpu_compile_seconds": round(compile_s, 4),
+            "hlo_bytes": len(hlo),
+        }
+        if meta:
+            entry.update(meta)
+        self.manifest["executables"].append(entry)
+        print(f"  {name}: lower {lower_s:.2f}s compile {compile_s:.2f}s "
+              f"flops={cost.get('flops', 0):.3g}")
+        return compiled
+
+    def save(self):
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(self.manifest, f, indent=1, sort_keys=True)
+
+
+def emit_config(em: Emitter, cfg_name: str, fast: bool):
+    cfg = get_config(cfg_name)
+    key = jax.random.PRNGKey(PARAM_SEED)
+    params = init_params(cfg, key)
+    flat = flatten_params(cfg, params)
+    n_params = len(flat)
+    save_params(os.path.join(em.out_dir, f"{cfg_name}.params.mbt"), cfg, params)
+    cd = cfg.to_dict()
+    cd["paper_scale"] = SIM_TO_PAPER.get(cfg_name)
+    cd["param_order"] = param_order(cfg)
+    em.manifest["configs"][cfg_name] = cd
+
+    def with_params(fn):
+        def wrapped(*args):
+            p = unflatten_params(cfg, args[:n_params])
+            return fn(p, *args[n_params:])
+        return wrapped
+
+    i32 = jnp.int32
+    tok2 = lambda b, t: jax.ShapeDtypeStruct((b, t), i32)
+    tok1 = lambda b: jax.ShapeDtypeStruct((b,), i32)
+    cache_spec = lambda b: MambaCache(
+        jax.ShapeDtypeStruct((cfg.n_layer, b, cfg.nheads, cfg.headdim,
+                              cfg.d_state), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.n_layer, b, cfg.d_conv_ch,
+                              cfg.d_conv - 1), jnp.float32))
+
+    prefill_buckets = PREFILL_BUCKETS if not fast else PREFILL_BUCKETS[:2]
+    loop_buckets = DECODE_LOOP_BUCKETS if not fast else DECODE_LOOP_BUCKETS[:2]
+    fwd_buckets = FORWARD_BUCKETS if not fast else FORWARD_BUCKETS[:3]
+
+    for t in prefill_buckets:
+        em.emit(f"{cfg_name}.prefill.t{t}",
+                with_params(lambda p, tk: M.prefill(cfg, p, tk)),
+                (*flat, tok2(1, t)), config=cfg_name,
+                entrypoint="prefill", n_params=n_params,
+                meta={"bucket": t, "batch": 1})
+
+    # batched prefill at bucket 16 for continuous-batching admission
+    em.emit(f"{cfg_name}.prefill.b{BATCH_CAP}.t16",
+            with_params(lambda p, tk: M.prefill(cfg, p, tk)),
+            (*flat, tok2(BATCH_CAP, 16)), config=cfg_name,
+            entrypoint="prefill", n_params=n_params,
+            meta={"bucket": 16, "batch": BATCH_CAP})
+
+    for b in (1, BATCH_CAP):
+        em.emit(f"{cfg_name}.decode_step.b{b}",
+                with_params(lambda p, ssm, conv, tk: M.decode_step(
+                    cfg, p, MambaCache(ssm, conv), tk)),
+                (*flat, cache_spec(b).ssm, cache_spec(b).conv, tok1(b)),
+                config=cfg_name, entrypoint="decode_step", n_params=n_params,
+                meta={"batch": b})
+
+    for g in loop_buckets:
+        em.emit(f"{cfg_name}.decode_loop.g{g}",
+                with_params(lambda p, ssm, conv, tk, g=g: M.decode_loop(
+                    cfg, p, MambaCache(ssm, conv), tk, g)),
+                (*flat, cache_spec(1).ssm, cache_spec(1).conv, tok1(1)),
+                config=cfg_name, entrypoint="decode_loop", n_params=n_params,
+                meta={"bucket": g, "batch": 1})
+
+    for t in fwd_buckets:
+        em.emit(f"{cfg_name}.forward_full.t{t}",
+                with_params(lambda p, tk: M.forward_full(cfg, p, tk)),
+                (*flat, tok2(1, t)), config=cfg_name,
+                entrypoint="forward_full", n_params=n_params,
+                meta={"bucket": t, "batch": 1})
+
+
+def emit_ablations(em: Emitter):
+    """Table 7 (masking) and Table 8 (decay precision) artifact variants."""
+    from dataclasses import replace
+
+    # Table 7: dynamic row-wise masking, paper used 1.3B @ 1024 → sim-1.3b @ 64
+    base = get_config("sim-1.3b")
+    for mode in ("static", "dynamic"):
+        cfg = replace(base, mask_mode=mode, name=f"sim-1.3b-{mode}mask")
+        key = jax.random.PRNGKey(PARAM_SEED)
+        params = init_params(base, key)      # identical weights
+        flat = flatten_params(base, params)
+        n = len(flat)
+        em.emit(f"ablation.mask_{mode}.prefill.t64",
+                lambda *a, cfg=cfg, n=n: M.prefill(
+                    cfg, unflatten_params(cfg, a[:n]), a[n]),
+                (*flat, jax.ShapeDtypeStruct((1, 64), jnp.int32)),
+                config="sim-1.3b", entrypoint="prefill", n_params=n,
+                meta={"bucket": 64, "batch": 1, "ablation": f"mask_{mode}"})
+
+    # Table 8: bf16 decay exponentiation, paper used 130M → sim-130m
+    base = get_config("sim-130m")
+    for dd in ("float32", "bfloat16"):
+        cfg = replace(base, decay_dtype=dd, name=f"sim-130m-{dd}decay")
+        key = jax.random.PRNGKey(PARAM_SEED)
+        params = init_params(base, key)
+        flat = flatten_params(base, params)
+        n = len(flat)
+        em.emit(f"ablation.decay_{dd}.forward.t64",
+                lambda *a, cfg=cfg, n=n: M.forward_full(
+                    cfg, unflatten_params(cfg, a[:n]), a[n]),
+                (*flat, jax.ShapeDtypeStruct((1, 64), jnp.int32)),
+                config="sim-130m", entrypoint="forward_full", n_params=n,
+                meta={"bucket": 64, "batch": 1, "ablation": f"decay_{dd}"})
+
+    # Pallas-kernel variants (L1 parity artifacts): tiny prefill + step
+    cfg = get_config("tiny")
+    key = jax.random.PRNGKey(PARAM_SEED)
+    params = init_params(cfg, key)
+    flat = flatten_params(cfg, params)
+    n = len(flat)
+    em.emit("ablation.pallas.prefill.t32",
+            lambda *a: M.prefill(cfg, unflatten_params(cfg, a[:n]), a[n],
+                                 kernel="pallas"),
+            (*flat, jax.ShapeDtypeStruct((1, 32), jnp.int32)),
+            config="tiny", entrypoint="prefill", n_params=n,
+            meta={"bucket": 32, "batch": 1, "ablation": "pallas_kernel"})
+    em.emit("ablation.pallas.decode_step.b1",
+            lambda *a: M.decode_step(
+                cfg, unflatten_params(cfg, a[:n]),
+                MambaCache(a[n], a[n + 1]), a[n + 2], kernel="pallas"),
+            (*flat,
+             jax.ShapeDtypeStruct((cfg.n_layer, 1, cfg.nheads, cfg.headdim,
+                                   cfg.d_state), jnp.float32),
+             jax.ShapeDtypeStruct((cfg.n_layer, 1, cfg.d_conv_ch,
+                                   cfg.d_conv - 1), jnp.float32),
+             jax.ShapeDtypeStruct((1,), jnp.int32)),
+            config="tiny", entrypoint="decode_step", n_params=n,
+            meta={"batch": 1, "ablation": "pallas_kernel"})
+
+
+def emit_train(em: Emitter, fast: bool):
+    cfgs = TRAIN_CONFIGS if not fast else TRAIN_CONFIGS[:1]
+    buckets = TRAIN_SEQ_BUCKETS if not fast else TRAIN_SEQ_BUCKETS[:1]
+    for cfg_name in cfgs:
+        cfg = get_config(cfg_name)
+        key = jax.random.PRNGKey(PARAM_SEED)
+        params = init_params(cfg, key)
+        flat = flatten_params(cfg, params)
+        n = len(flat)
+        zeros = [jnp.zeros_like(a) for a in flat]
+        for t in buckets:
+            for mode in ("chunked", "sequential"):
+                def fn(*a, mode=mode, t=t):
+                    p = unflatten_params(cfg, a[:n])
+                    m = unflatten_params(cfg, a[n:2 * n])
+                    v = unflatten_params(cfg, a[2 * n:3 * n])
+                    step, toks = a[3 * n], a[3 * n + 1]
+                    p2, m2, v2, loss = T.train_step(cfg, p, m, v, step, toks,
+                                                    mode=mode)
+                    return (*flatten_params(cfg, p2),
+                            *flatten_params(cfg, m2),
+                            *flatten_params(cfg, v2), loss)
+                em.emit(f"{cfg_name}.train_{mode}.t{t}", fn,
+                        (*flat, *zeros, *zeros,
+                         jax.ShapeDtypeStruct((), jnp.float32),
+                         jax.ShapeDtypeStruct((1, t + 1), jnp.int32)),
+                        config=cfg_name, entrypoint=f"train_{mode}",
+                        n_params=n, meta={"bucket": t, "batch": 1})
+
+
+def emit_goldens(em: Emitter):
+    """Reference outputs for rust integration tests (tiny config)."""
+    gold_dir = os.path.join(em.out_dir, "goldens")
+    os.makedirs(gold_dir, exist_ok=True)
+    cfg = get_config("tiny")
+    with jax.default_matmul_precision("highest"):
+        params = init_params(cfg, jax.random.PRNGKey(PARAM_SEED))
+        rng = np.random.default_rng(42)
+        tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 32)),
+                             dtype=jnp.int32)
+        logits, cache = M.prefill(cfg, params, tokens)
+        last = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+        gen, cache2 = M.decode_loop(cfg, params, cache, last, 16)
+        # host-driven chain must match the compiled loop bitwise
+        c, tokh, outs = cache, last, []
+        for _ in range(16):
+            lg, c = M.decode_step(cfg, params, c, tokh)
+            tokh = jnp.argmax(lg, -1).astype(jnp.int32)
+            outs.append(tokh)
+        host_gen = jnp.stack(outs, axis=1)
+        assert (host_gen == gen).all(), "scan/host divergence at build time!"
+        full_logits = M.forward_full(cfg, params, tokens)
+        save_mbt(os.path.join(gold_dir, "tiny.mbt"), [
+            ("tokens", np.asarray(tokens, np.int32)),
+            ("prefill_logits", np.asarray(logits, np.float32)),
+            ("cache_ssm", np.asarray(cache.ssm, np.float32)),
+            ("cache_conv", np.asarray(cache.conv, np.float32)),
+            ("gen_tokens", np.asarray(gen, np.int32)),
+            ("forward_full_logits", np.asarray(full_logits, np.float32)),
+        ])
+    print("  goldens: tiny.mbt (scan==host verified)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--configs", nargs="*",
+                    default=list(SIM_CONFIGS.keys()))
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer buckets (CI smoke)")
+    ap.add_argument("--skip-train", action="store_true")
+    ap.add_argument("--skip-ablations", action="store_true")
+    args = ap.parse_args()
+
+    out = os.path.abspath(args.out)
+    os.makedirs(out, exist_ok=True)
+    em = Emitter(out)
+    t0 = time.time()
+    for cfg_name in args.configs:
+        print(f"[{cfg_name}]")
+        emit_config(em, cfg_name, args.fast)
+    if not args.skip_ablations:
+        print("[ablations]")
+        emit_ablations(em)
+    if not args.skip_train:
+        print("[train]")
+        emit_train(em, args.fast)
+    print("[goldens]")
+    emit_goldens(em)
+    em.save()
+    n = len(em.manifest["executables"])
+    print(f"wrote {n} executables + manifest in {time.time() - t0:.1f}s -> {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""The O(1) autoregressive cache as a registered JAX PyTree (paper §3.4).
+
+One dataclass holds the per-layer SSM states and depthwise-conv windows for
+the whole stack.  Registering it as a PyTree means its array leaves trace
+into ``jax.jit`` and ``lax.fori_loop`` — the compiled decode loop carries the
+cache on device with zero host round-trips, which is the paper's central
+portability mechanism (Figure 1).
+
+Neither leaf depends on sequence length:
+  * ``ssm``  : (n_layer, B, nheads, headdim, d_state)
+  * ``conv`` : (n_layer, B, d_conv_ch, d_conv - 1)
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class MambaCache:
+    """Fixed-size autoregressive state for one batch of sequences."""
+
+    ssm: jax.Array    # (n_layer, B, h, p, n)
+    conv: jax.Array   # (n_layer, B, d_conv_ch, k-1)
+
+    def tree_flatten(self):
+        return (self.ssm, self.conv), None
+
+    @classmethod
+    def tree_unflatten(cls, _aux, children):
+        return cls(*children)
+
+    @classmethod
+    def zeros(cls, cfg: ModelConfig, batch: int, dtype=jnp.float32):
+        return cls(
+            ssm=jnp.zeros((cfg.n_layer, batch, cfg.nheads, cfg.headdim,
+                           cfg.d_state), dtype),
+            conv=jnp.zeros((cfg.n_layer, batch, cfg.d_conv_ch,
+                            cfg.d_conv - 1), dtype),
+        )
+
+    def nbytes(self) -> int:
+        """On-device footprint — constant in prefix length (paper Fig. 3)."""
+        return self.ssm.size * self.ssm.dtype.itemsize \
+            + self.conv.size * self.conv.dtype.itemsize
+
+    def slot(self, i: int) -> "MambaCache":
+        """View of one batch slot (used by tests mirroring the rust pool)."""
+        return MambaCache(self.ssm[:, i:i + 1], self.conv[:, i:i + 1])

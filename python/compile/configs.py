@@ -1,0 +1,126 @@
+"""Model configurations.
+
+Two families:
+
+* ``PAPER_CONFIGS`` — the five HuggingFace ``state-spaces/mamba2-*`` checkpoint
+  shapes, recorded verbatim. Used ONLY for roofline / cost arithmetic (the
+  rust ``perf`` module projects TPU-v6e / L40S utilisation from these shapes);
+  never lowered to executables in this repo (no network, no checkpoints).
+
+* ``SIM_CONFIGS`` — a proportionally-shaped ladder that preserves every
+  structural property the paper's claims depend on (diagonal-per-head A,
+  chunked recurrence, head_dim/d_state ratio, expand factor, conv width) at
+  CPU-executable scale.  All artifacts are lowered from these.
+
+See DESIGN.md §4 (Substitutions).
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    n_layer: int
+    vocab_size: int = 512
+    d_state: int = 32
+    headdim: int = 32
+    expand: int = 2
+    d_conv: int = 4
+    chunk_size: int = 16
+    # --- ablation / precision switches (paper §3.3) ---
+    decay_dtype: str = "float32"     # Table 8: "float32" | "bfloat16"
+    mask_mode: str = "static"        # Table 7: "static" | "dynamic"
+    norm_eps: float = 1e-5
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def nheads(self) -> int:
+        assert self.d_inner % self.headdim == 0
+        return self.d_inner // self.headdim
+
+    @property
+    def d_conv_ch(self) -> int:
+        """Channels passing through the causal depthwise conv (x, B, C)."""
+        return self.d_inner + 2 * self.nheads * self.d_state
+
+    @property
+    def d_in_proj(self) -> int:
+        """in_proj output: z, xBC, dt."""
+        return 2 * self.d_inner + 2 * self.nheads * self.d_state + self.nheads
+
+    def n_params(self) -> int:
+        """Exact parameter count (tied embedding)."""
+        n = self.vocab_size * self.d_model            # embed (tied lm head)
+        per_layer = (
+            self.d_model * self.d_in_proj             # in_proj
+            + self.d_conv * self.d_conv_ch            # conv_w
+            + self.d_conv_ch                          # conv_b
+            + 3 * self.nheads                         # A_log, dt_bias, D
+            + self.d_inner                            # norm_w
+            + self.d_inner * self.d_model             # out_proj
+            + self.d_model                            # ln_w
+        )
+        n += self.n_layer * per_layer
+        n += self.d_model                             # final norm
+        return n
+
+    def to_dict(self):
+        d = asdict(self)
+        d["d_inner"] = self.d_inner
+        d["nheads"] = self.nheads
+        d["d_conv_ch"] = self.d_conv_ch
+        d["d_in_proj"] = self.d_in_proj
+        d["n_params"] = self.n_params()
+        return d
+
+
+# The real checkpoint shapes (state-spaces/mamba2-*; Dao & Gu 2024 defaults:
+# d_state=128, headdim=64, expand=2, d_conv=4, chunk=256, vocab=50288).
+PAPER_CONFIGS = {
+    "130m": ModelConfig("130m", d_model=768, n_layer=24, vocab_size=50288,
+                        d_state=128, headdim=64, chunk_size=256),
+    "370m": ModelConfig("370m", d_model=1024, n_layer=48, vocab_size=50288,
+                        d_state=128, headdim=64, chunk_size=256),
+    "780m": ModelConfig("780m", d_model=1536, n_layer=36, vocab_size=50288,
+                        d_state=128, headdim=64, chunk_size=256),
+    "1.3b": ModelConfig("1.3b", d_model=2048, n_layer=48, vocab_size=50288,
+                        d_state=128, headdim=64, chunk_size=256),
+    "2.7b": ModelConfig("2.7b", d_model=2560, n_layer=64, vocab_size=50288,
+                        d_state=128, headdim=64, chunk_size=256),
+}
+
+# CPU-executable ladder: same structure, ~1000x smaller. Ratios between
+# adjacent scales track the paper ladder (~2.1x params per step).
+SIM_CONFIGS = {
+    "tiny":     ModelConfig("tiny", d_model=64, n_layer=2),
+    "sim-130m": ModelConfig("sim-130m", d_model=96, n_layer=3),
+    "sim-370m": ModelConfig("sim-370m", d_model=128, n_layer=6),
+    "sim-780m": ModelConfig("sim-780m", d_model=192, n_layer=9),
+    "sim-1.3b": ModelConfig("sim-1.3b", d_model=256, n_layer=12),
+    "sim-2.7b": ModelConfig("sim-2.7b", d_model=320, n_layer=16),
+}
+
+# map sim scale -> paper scale it stands in for
+SIM_TO_PAPER = {
+    "sim-130m": "130m",
+    "sim-370m": "370m",
+    "sim-780m": "780m",
+    "sim-1.3b": "1.3b",
+    "sim-2.7b": "2.7b",
+}
+
+ALL_CONFIGS = {**SIM_CONFIGS}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name in ALL_CONFIGS:
+        return ALL_CONFIGS[name]
+    if name in PAPER_CONFIGS:
+        return PAPER_CONFIGS[name]
+    raise KeyError(f"unknown config {name!r}; have {sorted(ALL_CONFIGS)} "
+                   f"+ paper {sorted(PAPER_CONFIGS)}")

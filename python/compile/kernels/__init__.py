@@ -1,0 +1,6 @@
+"""Layer-1 Pallas kernels + pure-jnp reference oracles."""
+
+from . import ref  # noqa: F401
+from .segsum import decay_matrix_pallas  # noqa: F401
+from .ssd import ssd_chunk_pallas, ssd_cross_pallas  # noqa: F401
+from .step import decode_step_pallas  # noqa: F401

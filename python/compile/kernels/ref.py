@@ -1,0 +1,127 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Two independent references:
+
+* ``ssd_chunk_ref`` — the quadratic-within-chunk dual form, written with the
+  exact einsum signatures of paper Appendix C.
+* ``ssd_sequential_ref`` — the naive O(T) sequential recurrence
+  ``h_t = Ā h_{t-1} + B̄ x_t, y_t = C h_t`` (paper Eq. 2).  This plays the
+  role of the Triton reference implementation in the parity experiments:
+  an *independent* implementation of the same math, against which the
+  chunked/kernelised path must agree to float32 rounding.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from ..ops import segsum
+
+
+def ssd_chunk_ref(xdt, dA, B, C):
+    """Intra-chunk dual form + per-chunk states, einsums per Appendix C.
+
+    Args:
+      xdt: (b, c, l, h, p)  inputs pre-multiplied by dt
+      dA:  (b, h, c, l)     per-step log decay (f32)
+      B:   (b, c, l, h, n)
+      C:   (b, c, l, h, n)
+    Returns:
+      Y_diag:      (b, c, l, h, p)
+      states:      (b, c, h, p, n)   per-chunk summary states
+      chunk_decay: (b, h, c)         exp(sum of dA over the chunk)
+      state_decay: (b, h, c, l)      exp(cumsum dA)  (for the cross term)
+    """
+    dAcs = jnp.cumsum(dA, axis=-1)
+    Ldec = jnp.exp(segsum(dA))
+    Y = jnp.einsum("bclhn,bcshn,bhcls,bcshp->bclhp", C, B, Ldec, xdt)
+    decay_states = jnp.exp(dAcs[..., -1:] - dAcs)          # (b,h,c,l)
+    states = jnp.einsum("bclhn,bhcl,bclhp->bchpn", B, decay_states, xdt)
+    chunk_decay = jnp.exp(dAcs[..., -1])
+    state_decay = jnp.exp(dAcs)
+    return Y, states, chunk_decay, state_decay
+
+
+def ssd_cross_ref(C, prev_states, state_decay):
+    """Cross-chunk contribution: Y_off = (C · prev_state) ⊙ exp(cumsum dA)."""
+    return jnp.einsum("bclhn,bchpn,bhcl->bclhp", C, prev_states, state_decay)
+
+
+def chunk_scan_ref(states, chunk_decay, init=None):
+    """Inter-chunk recurrence over summary states (paper Alg. 1 line 8).
+
+    Args:
+      states:      (b, c, h, p, n)
+      chunk_decay: (b, h, c)
+      init:        (b, h, p, n) state entering chunk 0 (zeros if None)
+    Returns:
+      prev_states: (b, c, h, p, n)  state entering each chunk
+      final_state: (b, h, p, n)
+    """
+    if init is None:
+        init = jnp.zeros_like(states[:, 0])
+
+    def step(carry, inp):
+        s, d = inp
+        nxt = carry * d[..., None, None] + s
+        return nxt, carry
+
+    xs = (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 2, 0))
+    final, prev = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(prev, 0, 1), final
+
+
+def ssd_reference(xdt, dA, B, C, init=None):
+    """Full chunked SSD output via the reference pieces."""
+    Y, states, chunk_decay, state_decay = ssd_chunk_ref(xdt, dA, B, C)
+    prev_states, final = chunk_scan_ref(states, chunk_decay, init)
+    Yoff = ssd_cross_ref(C, prev_states, state_decay)
+    return Y + Yoff, final
+
+
+def ssd_sequential_ref(xdt, dA, B, C, init=None):
+    """Naive sequential recurrence (paper Eq. 2) — the independent oracle.
+
+    Same value-semantics as ``ssd_reference`` but flattened over chunks:
+      xdt: (b, t, h, p), dA: (b, h, t), B, C: (b, t, h, n)
+    Returns y: (b, t, h, p), final_state: (b, h, p, n)
+    """
+    b, t, h, p = xdt.shape
+    n = B.shape[-1]
+    if init is None:
+        init = jnp.zeros((b, h, p, n), dtype=jnp.float32)
+
+    def step(hstate, inp):
+        x_t, dA_t, B_t, C_t = inp
+        dAe = jnp.exp(dA_t)                                # (b,h)
+        dBx = jnp.einsum("bhn,bhp->bhpn", B_t, x_t)
+        hstate = hstate * dAe[..., None, None] + dBx
+        y_t = jnp.einsum("bhpn,bhn->bhp", hstate, C_t)
+        return hstate, y_t
+
+    xs = (jnp.moveaxis(xdt, 1, 0), jnp.moveaxis(dA, 2, 0),
+          jnp.moveaxis(B, 1, 0), jnp.moveaxis(C, 1, 0))
+    final, ys = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(ys, 0, 1), final
+
+
+def decode_step_ref(ssm_state, xdt, dA, B, C):
+    """Single-token recurrence (paper Alg. 2 lines 10–11).
+
+    ssm_state: (b, h, p, n); xdt: (b, h, p); dA: (b, h); B, C: (b, h, n)
+    """
+    dAe = jnp.exp(dA)
+    dBx = jnp.einsum("bhn,bhp->bhpn", B, xdt)
+    new_state = ssm_state * dAe[..., None, None] + dBx
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, C)
+    return y, new_state
+
+
+def conv_step_ref(conv_state, x, conv_w, conv_b):
+    """Depthwise conv over the sliding window (paper Alg. 2 lines 7–8).
+
+    conv_state: (b, ch, k-1) cached inputs; x: (b, ch) new input;
+    conv_w: (k, ch); conv_b: (ch,)
+    """
+    full = jnp.concatenate([conv_state, x[:, :, None]], axis=-1)  # (b, ch, k)
+    y = jnp.einsum("bck,kc->bc", full, conv_w) + conv_b
+    return jax.nn.silu(y), full[:, :, 1:]

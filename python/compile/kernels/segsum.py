@@ -1,0 +1,33 @@
+"""Standalone Pallas segment-sum / decay-matrix kernel.
+
+Computes ``tril(exp(segsum(dA)))`` — the lower-triangular matrix of
+accumulated decay factors (paper Alg. 1 line 5).  Exists standalone for the
+kernel test-suite and the masking micro-bench; the fused SSD kernel inlines
+the same computation.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _decay_matrix_kernel(dA_ref, out_ref):
+    dA = dA_ref[0, :]                       # (L,)
+    L = dA.shape[0]
+    cs = jnp.cumsum(dA)
+    diff = cs[:, None] - cs[None, :]
+    mask = jnp.tril(jnp.ones((L, L), dtype=bool))
+    out_ref[0, :, :] = jnp.exp(jnp.where(mask, diff, -jnp.inf))
+
+
+def decay_matrix_pallas(dA, interpret=True):
+    """dA: (m, L) log-decays → (m, L, L) decay matrices."""
+    m, L = dA.shape
+    return pl.pallas_call(
+        _decay_matrix_kernel,
+        grid=(m,),
+        in_specs=[pl.BlockSpec((1, L), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, L, L), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, L, L), jnp.float32),
+        interpret=interpret,
+    )(dA.astype(jnp.float32))

@@ -1,0 +1,114 @@
+"""Pallas SSD kernels (Layer 1).
+
+The paper's compute hot-spot — the intra-chunk dual form
+
+    Y_diag = (L ⊙ C Bᵀ) X          (paper Eq. 3, Alg. 1 lines 5–7)
+
+— expressed as Pallas kernels gridded over (batch, chunk, head).  Each grid
+cell owns one (L, p) input tile, one (L, n) B/C tile and the (L, L) decay
+matrix, mirroring the VMEM-resident tiling a real TPU lowering would use
+(DESIGN.md §6 gives the VMEM/MXU arithmetic at paper scale).
+
+Kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot run
+Mosaic custom-calls, so interpret mode decomposes each kernel into plain HLO
+that any backend executes.  Correctness is pinned against ``ref.py`` by
+``python/tests/test_kernels.py`` (hypothesis sweeps shapes and dtypes).
+
+TPU adaptation notes (DESIGN.md §Hardware-Adaptation): the block shapes are
+chosen so that, under a real Mosaic lowering, the (L,n)/(L,p) operands tile
+the 128×128 MXU and the per-cell working set (≈0.5 MB at paper scale) double
+buffers inside the 16 MB of VMEM; the HBM↔VMEM schedule the CUDA reference
+expresses with threadblocks is expressed here with BlockSpec index maps.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_chunk_kernel(xdt_ref, dA_ref, B_ref, C_ref,
+                      y_ref, states_ref, cdecay_ref, sdecay_ref):
+    """One (batch, chunk, head) cell of the SSD dual form."""
+    xdt = xdt_ref[0, 0, :, 0, :]            # (L, p)
+    dA = dA_ref[0, 0, 0, :]                 # (L,)
+    B = B_ref[0, 0, :, 0, :]                # (L, n)
+    C = C_ref[0, 0, :, 0, :]                # (L, n)
+    L = dA.shape[0]
+
+    cs = jnp.cumsum(dA)                     # (L,)
+    diff = cs[:, None] - cs[None, :]        # segment sums
+    mask = jnp.tril(jnp.ones((L, L), dtype=bool))
+    Ldec = jnp.exp(jnp.where(mask, diff, -jnp.inf))
+
+    CB = C @ B.T                            # (L, L) — MXU tile
+    y_ref[0, 0, :, 0, :] = (CB * Ldec) @ xdt
+
+    decay_states = jnp.exp(cs[-1] - cs)     # (L,)
+    # states = Bᵀ (decay ⊙ xdt) → stored (p, n)
+    states_ref[0, 0, 0, :, :] = (xdt * decay_states[:, None]).T @ B
+    cdecay_ref[0, 0, 0] = jnp.exp(cs[-1])
+    sdecay_ref[0, 0, 0, :] = jnp.exp(cs)
+
+
+def ssd_chunk_pallas(xdt, dA, B, C, interpret=True):
+    """Pallas version of ``ref.ssd_chunk_ref`` (identical signature/returns)."""
+    b, c, L, h, p = xdt.shape
+    n = B.shape[-1]
+    f32 = jnp.float32
+    grid = (b, c, h)
+    out = pl.pallas_call(
+        _ssd_chunk_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, L, 1, p), lambda i, j, k: (i, j, 0, k, 0)),
+            pl.BlockSpec((1, 1, 1, L), lambda i, j, k: (i, k, j, 0)),
+            pl.BlockSpec((1, 1, L, 1, n), lambda i, j, k: (i, j, 0, k, 0)),
+            pl.BlockSpec((1, 1, L, 1, n), lambda i, j, k: (i, j, 0, k, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, L, 1, p), lambda i, j, k: (i, j, 0, k, 0)),
+            pl.BlockSpec((1, 1, 1, p, n), lambda i, j, k: (i, j, k, 0, 0)),
+            pl.BlockSpec((1, 1, 1), lambda i, j, k: (i, k, j)),
+            pl.BlockSpec((1, 1, 1, L), lambda i, j, k: (i, k, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, c, L, h, p), f32),
+            jax.ShapeDtypeStruct((b, c, h, p, n), f32),
+            jax.ShapeDtypeStruct((b, h, c), f32),
+            jax.ShapeDtypeStruct((b, h, c, L), f32),
+        ],
+        interpret=interpret,
+    )(xdt.astype(f32), dA.astype(f32), B.astype(f32), C.astype(f32))
+    return tuple(out)
+
+
+def _ssd_cross_kernel(ydiag_ref, C_ref, prev_ref, sdecay_ref, y_ref):
+    """Add the cross-chunk term: Y = Y_diag + (C · prev_state) ⊙ exp(cumsum dA)."""
+    ydiag = ydiag_ref[0, 0, :, 0, :]        # (L, p)
+    C = C_ref[0, 0, :, 0, :]                # (L, n)
+    prev = prev_ref[0, 0, 0, :, :]          # (p, n)
+    sdecay = sdecay_ref[0, 0, 0, :]         # (L,)
+    y_ref[0, 0, :, 0, :] = ydiag + (C @ prev.T) * sdecay[:, None]
+
+
+def ssd_cross_pallas(Y_diag, C, prev_states, state_decay, interpret=True):
+    """Pallas version of ``ref.ssd_cross_ref`` fused with the Y_diag add."""
+    b, c, L, h, p = Y_diag.shape
+    n = C.shape[-1]
+    f32 = jnp.float32
+    return pl.pallas_call(
+        _ssd_cross_kernel,
+        grid=(b, c, h),
+        in_specs=[
+            pl.BlockSpec((1, 1, L, 1, p), lambda i, j, k: (i, j, 0, k, 0)),
+            pl.BlockSpec((1, 1, L, 1, n), lambda i, j, k: (i, j, 0, k, 0)),
+            pl.BlockSpec((1, 1, 1, p, n), lambda i, j, k: (i, j, k, 0, 0)),
+            pl.BlockSpec((1, 1, 1, L), lambda i, j, k: (i, k, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, L, 1, p), lambda i, j, k: (i, j, 0, k, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, c, L, h, p), f32),
+        interpret=interpret,
+    )(Y_diag.astype(f32), C.astype(f32), prev_states.astype(f32),
+      state_decay.astype(f32))

@@ -1,0 +1,50 @@
+"""Pallas decode-step kernel: the O(1) recurrence (paper Alg. 2 lines 10–11).
+
+One grid cell per (batch, head): update the (p, n) SSM state tile and emit
+the head output.  This is the entire per-token SSM cost — independent of the
+prefix length, which is the paper's O(1) caching claim at kernel level.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _decode_step_kernel(ssm_ref, xdt_ref, dA_ref, B_ref, C_ref,
+                        y_ref, new_ssm_ref):
+    ssm = ssm_ref[0, 0, :, :]               # (p, n)
+    xdt = xdt_ref[0, 0, :]                  # (p,)
+    dA = dA_ref[0, 0]                       # ()
+    B = B_ref[0, 0, :]                      # (n,)
+    C = C_ref[0, 0, :]                      # (n,)
+    new = ssm * jnp.exp(dA) + xdt[:, None] * B[None, :]
+    new_ssm_ref[0, 0, :, :] = new
+    y_ref[0, 0, :] = new @ C
+
+
+def decode_step_pallas(ssm_state, xdt, dA, B, C, interpret=True):
+    """Pallas version of ``ref.decode_step_ref`` (identical returns)."""
+    b, h, p, n = ssm_state.shape
+    f32 = jnp.float32
+    y, new_state = pl.pallas_call(
+        _decode_step_kernel,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((1, 1, p, n), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, p), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1, n), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, n), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, p), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, p), f32),
+            jax.ShapeDtypeStruct((b, h, p, n), f32),
+        ],
+        interpret=interpret,
+    )(ssm_state.astype(f32), xdt.astype(f32), dA.astype(f32),
+      B.astype(f32), C.astype(f32))
+    return y, new_state

@@ -1,0 +1,171 @@
+"""Layer 2: the full Mamba-2 model in functional JAX.
+
+Entry points (all AOT-lowered by ``aot.py``):
+
+  * ``prefill``            — chunked-parallel prompt processing (Alg. 1)
+  * ``decode_step``        — one O(1) cached token step (Alg. 2 body)
+  * ``decode_loop``        — compiled on-device ``fori_loop`` over decode_step
+                             with on-device argmax (the "Cached (scan)" path)
+  * ``forward_full``       — non-cached baseline: full forward, no cache
+  * ``logits_for_scoring`` — forward over a window, returns logits (perplexity)
+
+Precision rules (paper §3.3): residual stream f32; decay params log-space
+f32, exponentiated at compute time; norm variance in f32; matmul precision
+left to the backend ("highest" is set during golden generation in aot.py).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .cache import MambaCache
+from .configs import ModelConfig
+from .kernels import ref as kref
+from .ops import decay_from_dt, gated_rmsnorm, rmsnorm
+from .ssd_layer import ssd_chunked
+
+
+# ---------------------------------------------------------------- blocks ---
+
+def _split_zxbcdt(cfg: ModelConfig, zxbcdt):
+    d_x = cfg.d_conv_ch
+    return jnp.split(zxbcdt, [cfg.d_inner, cfg.d_inner + d_x], axis=-1)
+
+
+def mamba_block_seq(cfg: ModelConfig, lp, x, init_state=None, kernel="jnp"):
+    """Sequence-mode Mamba-2 block: x (b, t, d) → (y, conv_state, ssm_state).
+
+    t must be a multiple of cfg.chunk_size.
+    """
+    b, t, _ = x.shape
+    zxbcdt = x @ lp["in_proj"]
+    z, xBC, dt = _split_zxbcdt(cfg, zxbcdt)
+
+    # causal depthwise conv over the full sequence
+    pad = jnp.pad(xBC, ((0, 0), (cfg.d_conv - 1, 0), (0, 0)))
+    conv = sum(pad[:, i:i + t] * lp["conv_w"][i][None, None, :]
+               for i in range(cfg.d_conv))
+    xBC = jax.nn.silu(conv + lp["conv_b"])
+    # cache the last k-1 *pre-activation* inputs for decode
+    conv_state = pad[:, t:t + cfg.d_conv - 1].transpose(0, 2, 1)
+
+    xs, B, C = jnp.split(
+        xBC, [cfg.d_inner, cfg.d_inner + cfg.nheads * cfg.d_state], axis=-1)
+    dt = jax.nn.softplus(dt + lp["dt_bias"])                    # (b, t, h)
+    dA = decay_from_dt(lp["A_log"], dt, cfg.decay_dtype)        # (b, t, h)
+
+    nc = t // cfg.chunk_size
+    L = cfg.chunk_size
+    xh = xs.reshape(b, nc, L, cfg.nheads, cfg.headdim)
+    Bh = B.reshape(b, nc, L, cfg.nheads, cfg.d_state)
+    Ch = C.reshape(b, nc, L, cfg.nheads, cfg.d_state)
+    dtc = dt.reshape(b, nc, L, cfg.nheads)
+    dAc = dA.reshape(b, nc, L, cfg.nheads).transpose(0, 3, 1, 2)  # (b,h,c,l)
+
+    y, final_state = ssd_chunked(
+        xh * dtc[..., None], dAc, Bh, Ch, init_state,
+        kernel=kernel, mask_mode=cfg.mask_mode)
+    y = y + xh * lp["D"][None, None, None, :, None]
+    y = y.reshape(b, t, cfg.d_inner)
+    y = gated_rmsnorm(y, z, lp["norm_w"], cfg.norm_eps)
+    return y @ lp["out_proj"], conv_state, final_state
+
+
+def mamba_block_step(cfg: ModelConfig, lp, x, conv_state, ssm_state,
+                     kernel="jnp"):
+    """Single-token Mamba-2 block: x (b, d) + cache → (y, conv', ssm')."""
+    zxbcdt = x @ lp["in_proj"]
+    z, xBC, dt = _split_zxbcdt(cfg, zxbcdt)
+
+    xBC_act, new_conv = kref.conv_step_ref(conv_state, xBC,
+                                           lp["conv_w"], lp["conv_b"])
+    xs, B, C = jnp.split(
+        xBC_act, [cfg.d_inner, cfg.d_inner + cfg.nheads * cfg.d_state],
+        axis=-1)
+    dt = jax.nn.softplus(dt + lp["dt_bias"])                    # (b, h)
+    dA = decay_from_dt(lp["A_log"], dt, cfg.decay_dtype)        # (b, h)
+
+    bsz = x.shape[0]
+    xh = xs.reshape(bsz, cfg.nheads, cfg.headdim)
+    Bh = B.reshape(bsz, cfg.nheads, cfg.d_state)
+    Ch = C.reshape(bsz, cfg.nheads, cfg.d_state)
+
+    if kernel == "pallas":
+        from .kernels.step import decode_step_pallas
+        y, new_ssm = decode_step_pallas(ssm_state, xh * dt[..., None], dA, Bh, Ch)
+    else:
+        y, new_ssm = kref.decode_step_ref(ssm_state, xh * dt[..., None], dA,
+                                          Bh, Ch)
+    y = y + xh * lp["D"][None, :, None]
+    y = y.reshape(bsz, cfg.d_inner)
+    y = gated_rmsnorm(y, z, lp["norm_w"], cfg.norm_eps)
+    return y @ lp["out_proj"], new_conv, new_ssm
+
+
+# ----------------------------------------------------------- entry points ---
+
+def prefill(cfg: ModelConfig, params, tokens, kernel="jnp"):
+    """tokens (b, t) int32, t % chunk == 0 → (logits, MambaCache)."""
+    x = params["embed"][tokens].astype(jnp.float32)
+    conv_states, ssm_states = [], []
+    for lp in params["layers"]:
+        h = rmsnorm(x, lp["ln_w"], cfg.norm_eps)
+        y, cs, ss = mamba_block_seq(cfg, lp, h, kernel=kernel)
+        x = x + y                              # residual kept in f32
+        conv_states.append(cs)
+        ssm_states.append(ss)
+    x = rmsnorm(x, params["lnf_w"], cfg.norm_eps)
+    logits = x @ params["embed"].T             # tied head
+    cache = MambaCache(jnp.stack(ssm_states), jnp.stack(conv_states))
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params, cache: MambaCache, token,
+                kernel="jnp"):
+    """token (b,) int32 + cache → (logits (b, V), cache')."""
+    x = params["embed"][token].astype(jnp.float32)
+    ncs, nss = [], []
+    for i, lp in enumerate(params["layers"]):
+        h = rmsnorm(x, lp["ln_w"], cfg.norm_eps)
+        y, cs, ss = mamba_block_step(cfg, lp, h, cache.conv[i], cache.ssm[i],
+                                     kernel=kernel)
+        x = x + y
+        ncs.append(cs)
+        nss.append(ss)
+    x = rmsnorm(x, params["lnf_w"], cfg.norm_eps)
+    logits = x @ params["embed"].T
+    return logits, MambaCache(jnp.stack(nss), jnp.stack(ncs))
+
+
+def decode_loop(cfg: ModelConfig, params, cache: MambaCache, token, n_steps,
+                kernel="jnp"):
+    """Compiled on-device greedy generation: the "Cached (scan)" path.
+
+    The cache is a PyTree, so the whole loop body — embed, N blocks, head,
+    argmax, cache update — is one compiled XLA program; the host launches it
+    once (paper Fig. 1).
+    Returns (tokens (b, n_steps) i32, cache').
+    """
+    b = token.shape[0]
+
+    def body(i, carry):
+        cache, tok, out = carry
+        logits, cache = decode_step(cfg, params, cache, tok, kernel=kernel)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out = jax.lax.dynamic_update_index_in_dim(out, nxt, i, 1)
+        return cache, nxt, out
+
+    out = jnp.zeros((b, n_steps), dtype=jnp.int32)
+    cache, _, out = jax.lax.fori_loop(0, n_steps, body, (cache, token, out))
+    return out, cache
+
+
+def forward_full(cfg: ModelConfig, params, tokens, kernel="jnp"):
+    """Non-cached baseline: full forward over all tokens, logits only."""
+    logits, _ = prefill(cfg, params, tokens, kernel=kernel)
+    return logits
+
+
+def last_logits(cfg: ModelConfig, params, tokens, kernel="jnp"):
+    """Non-cached decode primitive: recompute everything, return last logits."""
+    logits, _ = prefill(cfg, params, tokens, kernel=kernel)
+    return logits[:, -1]

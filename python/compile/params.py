@@ -1,0 +1,139 @@
+"""Parameter init, deterministic flattening, and the .mbt tensor store.
+
+The rust runtime consumes parameters as a flat, ordered list of f32 arrays
+(HLO executable parameters are positional).  ``param_order`` defines that
+order once; ``aot.py`` records it in the manifest and ``save_mbt`` writes the
+arrays in the same order.
+
+.mbt ("mamba tensors") format, little-endian:
+    magic  u32 = 0x4D425431 ("MBT1")
+    count  u32
+    per tensor:
+        name_len u32, name utf-8 bytes
+        dtype    u32 (0 = f32, 1 = i32)
+        rank     u32, dims u64 × rank
+        data     (raw, row-major)
+"""
+
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig
+
+MAGIC = 0x4D425431
+
+LAYER_KEYS = ["in_proj", "conv_w", "conv_b", "A_log", "dt_bias", "D",
+              "norm_w", "out_proj", "ln_w"]
+
+
+def init_params(cfg: ModelConfig, key):
+    """Random init following mamba2 conventions (A in [1,16), dt bias via
+    softplus-inverse of a log-uniform dt target)."""
+    ks = jax.random.split(key, 2 + cfg.n_layer)
+    params = {"embed": (jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model))
+                        * 0.02).astype(jnp.float32)}
+    layers = []
+    for i in range(cfg.n_layer):
+        k = jax.random.split(ks[2 + i], 4)
+        A = jnp.linspace(1.0, 16.0, cfg.nheads)
+        dt = jnp.exp(jax.random.uniform(k[3], (cfg.nheads,))
+                     * (np.log(0.1) - np.log(0.001)) + np.log(0.001))
+        dt = jnp.clip(dt, 1e-4, None)
+        layers.append({
+            "in_proj": (jax.random.normal(k[0], (cfg.d_model, cfg.d_in_proj))
+                        * (cfg.d_model ** -0.5)).astype(jnp.float32),
+            "conv_w": (jax.random.normal(k[1], (cfg.d_conv, cfg.d_conv_ch))
+                       * (cfg.d_conv ** -0.5)).astype(jnp.float32),
+            "conv_b": jnp.zeros((cfg.d_conv_ch,), jnp.float32),
+            "A_log": jnp.log(A).astype(jnp.float32),
+            "dt_bias": (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32),
+            "D": jnp.ones((cfg.nheads,), jnp.float32),
+            "norm_w": jnp.ones((cfg.d_inner,), jnp.float32),
+            "out_proj": (jax.random.normal(k[2], (cfg.d_inner, cfg.d_model))
+                         * (cfg.d_inner ** -0.5) / (2 * cfg.n_layer) ** 0.5
+                         ).astype(jnp.float32),
+            "ln_w": jnp.ones((cfg.d_model,), jnp.float32),
+        })
+    params["layers"] = layers
+    params["lnf_w"] = jnp.ones((cfg.d_model,), jnp.float32)
+    return params
+
+
+def param_order(cfg: ModelConfig):
+    """Canonical flat ordering: embed, per-layer keys, final norm."""
+    names = ["embed"]
+    for i in range(cfg.n_layer):
+        names += [f"layers.{i}.{k}" for k in LAYER_KEYS]
+    names.append("lnf_w")
+    return names
+
+
+def flatten_params(cfg: ModelConfig, params):
+    flat = [params["embed"]]
+    for i in range(cfg.n_layer):
+        flat += [params["layers"][i][k] for k in LAYER_KEYS]
+    flat.append(params["lnf_w"])
+    return flat
+
+
+def unflatten_params(cfg: ModelConfig, flat):
+    it = iter(flat)
+    params = {"embed": next(it), "layers": []}
+    for _ in range(cfg.n_layer):
+        params["layers"].append({k: next(it) for k in LAYER_KEYS})
+    params["lnf_w"] = next(it)
+    return params
+
+
+_DTYPES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+_DTYPES_INV = {0: np.float32, 1: np.int32}
+
+
+def save_mbt(path, named_arrays):
+    """named_arrays: list of (name, np.ndarray)."""
+    with open(path, "wb") as f:
+        f.write(struct.pack("<II", MAGIC, len(named_arrays)))
+        for name, arr in named_arrays:
+            arr = np.ascontiguousarray(arr)
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<II", _DTYPES[arr.dtype], arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<Q", d))
+            f.write(arr.tobytes())
+
+
+def load_mbt(path):
+    """Returns list of (name, np.ndarray) in file order."""
+    out = []
+    with open(path, "rb") as f:
+        magic, count = struct.unpack("<II", f.read(8))
+        assert magic == MAGIC, f"bad magic {magic:#x}"
+        for _ in range(count):
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode()
+            dt, rank = struct.unpack("<II", f.read(8))
+            dims = struct.unpack(f"<{rank}Q", f.read(8 * rank)) if rank else ()
+            dtype = np.dtype(_DTYPES_INV[dt])
+            n = int(np.prod(dims)) if dims else 1
+            arr = np.frombuffer(f.read(n * dtype.itemsize), dtype=dtype)
+            out.append((name, arr.reshape(dims)))
+    return out
+
+
+def save_params(path, cfg: ModelConfig, params):
+    names = param_order(cfg)
+    flat = flatten_params(cfg, params)
+    save_mbt(path, [(n, np.asarray(a, np.float32)) for n, a in zip(names, flat)])
+
+
+def load_params(path, cfg: ModelConfig):
+    named = load_mbt(path)
+    want = param_order(cfg)
+    got = [n for n, _ in named]
+    assert got == want, f"param order mismatch: {got[:3]}... vs {want[:3]}..."
+    return unflatten_params(cfg, [jnp.asarray(a) for _, a in named])

@@ -1,0 +1,53 @@
+"""Chunked SSD at model level (paper Algorithm 1 core).
+
+Two interchangeable backends for the intra-chunk dual form:
+
+* ``kernel="jnp"``   — the paper's compiler-first path: bare einsums with the
+  exact Appendix-C signatures, fully fusable by XLA.  Default for the
+  throughput artifacts.
+* ``kernel="pallas"`` — the Layer-1 Pallas kernels (interpret-lowered).
+  Structurally identical tiling to a real TPU Mosaic lowering; used for the
+  kernel-parity artifacts and kernel micro-benches.
+
+Both produce identical values (pinned by tests) — which is itself the
+paper's point: the structural conditions, not the kernel, carry the speed.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import ref as kref
+from .kernels.ssd import ssd_chunk_pallas, ssd_cross_pallas
+from .ops import segsum
+
+
+def ssd_chunked(xdt, dA, B, C, init_state=None, kernel="jnp",
+                mask_mode="static"):
+    """Chunked SSD forward.
+
+    Args:
+      xdt: (b, c, l, h, p) dt-premultiplied inputs
+      dA:  (b, h, c, l) per-step log decay (f32)
+      B, C: (b, c, l, h, n)
+      init_state: (b, h, p, n) state entering chunk 0 (None = zeros)
+      kernel: "jnp" | "pallas"
+      mask_mode: "static" | "dynamic" (Table 7 ablation; jnp path only)
+    Returns:
+      y: (b, c, l, h, p), final_state: (b, h, p, n)
+    """
+    if kernel == "pallas":
+        Y, states, chunk_decay, state_decay = ssd_chunk_pallas(xdt, dA, B, C)
+        prev_states, final = kref.chunk_scan_ref(states, chunk_decay, init_state)
+        y = ssd_cross_pallas(Y, C, prev_states, state_decay)
+        return y, final
+
+    # --- compiler-first jnp path (Appendix C einsums verbatim) ---
+    dAcs = jnp.cumsum(dA, axis=-1)
+    Ldec = jnp.exp(segsum(dA, mask_mode=mask_mode))
+    Y = jnp.einsum("bclhn,bcshn,bhcls,bcshp->bclhp", C, B, Ldec, xdt)
+    decay_states = jnp.exp(dAcs[..., -1:] - dAcs)
+    states = jnp.einsum("bclhn,bhcl,bclhp->bchpn", B, decay_states, xdt)
+    chunk_decay = jnp.exp(dAcs[..., -1])
+    prev_states, final = kref.chunk_scan_ref(states, chunk_decay, init_state)
+    state_decay = jnp.exp(dAcs)
+    Yoff = jnp.einsum("bclhn,bchpn,bhcl->bclhp", C, prev_states, state_decay)
+    return Y + Yoff, final

@@ -1,0 +1,90 @@
+"""Training step (fwd + bwd + Adam) for the Table-13 comparison and the
+end-to-end training example.
+
+The whole optimiser update lives in the compiled graph, so the rust driver
+executes one program per step: (params, m, v, step, tokens) → (params', m',
+v', loss).  Two variants are lowered:
+
+  * ``mode="chunked"``    — the compiler-first SSD path (paper "JAX" column)
+  * ``mode="sequential"`` — the naive sequential-scan recurrence standing in
+    for the kernelised reference (paper "Triton" column); see DESIGN.md §4.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels.ref import ssd_sequential_ref
+from .model import mamba_block_seq, prefill
+from .ops import decay_from_dt, gated_rmsnorm, rmsnorm
+
+
+def _forward_sequential(cfg: ModelConfig, params, tokens):
+    """Forward pass using the naive sequential recurrence in every block."""
+    x = params["embed"][tokens].astype(jnp.float32)
+    b, t = tokens.shape
+    for lp in params["layers"]:
+        h = rmsnorm(x, lp["ln_w"], cfg.norm_eps)
+        zxbcdt = h @ lp["in_proj"]
+        d_x = cfg.d_conv_ch
+        z, xBC, dt = jnp.split(zxbcdt, [cfg.d_inner, cfg.d_inner + d_x], -1)
+        pad = jnp.pad(xBC, ((0, 0), (cfg.d_conv - 1, 0), (0, 0)))
+        conv = sum(pad[:, i:i + t] * lp["conv_w"][i][None, None, :]
+                   for i in range(cfg.d_conv))
+        xBC = jax.nn.silu(conv + lp["conv_b"])
+        xs, B, C = jnp.split(
+            xBC, [cfg.d_inner, cfg.d_inner + cfg.nheads * cfg.d_state], -1)
+        dt = jax.nn.softplus(dt + lp["dt_bias"])
+        dA = decay_from_dt(lp["A_log"], dt, cfg.decay_dtype)
+        xh = xs.reshape(b, t, cfg.nheads, cfg.headdim)
+        Bh = B.reshape(b, t, cfg.nheads, cfg.d_state)
+        Ch = C.reshape(b, t, cfg.nheads, cfg.d_state)
+        y, _ = ssd_sequential_ref(xh * dt[..., None],
+                                  dA.transpose(0, 2, 1), Bh, Ch)
+        y = y + xh * lp["D"][None, None, :, None]
+        y = y.reshape(b, t, cfg.d_inner)
+        y = gated_rmsnorm(y, z, lp["norm_w"], cfg.norm_eps)
+        x = x + y @ lp["out_proj"]
+    x = rmsnorm(x, params["lnf_w"], cfg.norm_eps)
+    return x @ params["embed"].T
+
+
+def loss_fn(cfg: ModelConfig, params, tokens, mode="chunked"):
+    """Next-token cross-entropy over tokens (b, t+1): predict t from <t."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    if mode == "chunked":
+        logits, _ = prefill(cfg, params, inp)
+    else:
+        logits = _forward_sequential(cfg, params, inp)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def adam_update(p, g, m, v, step, lr=3e-3, b1=0.9, b2=0.95, eps=1e-8):
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * g * g
+    mh = m / (1 - b1 ** step)
+    vh = v / (1 - b2 ** step)
+    return p - lr * mh / (jnp.sqrt(vh) + eps), m, v
+
+
+def train_step(cfg: ModelConfig, params, m, v, step, tokens,
+               mode="chunked", lr=3e-3):
+    """One fwd+bwd+Adam step, fully in-graph.
+
+    params/m/v are matching PyTrees; step is a float32 scalar (1-based).
+    Returns (params', m', v', loss).
+    """
+    loss, grads = jax.value_and_grad(
+        lambda p: loss_fn(cfg, p, tokens, mode))(params)
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(m)
+    flat_v = jax.tree.leaves(v)
+    ups = [adam_update(p, g, mm, vv, step, lr)
+           for p, g, mm, vv in zip(flat_p, flat_g, flat_m, flat_v)]
+    params2 = jax.tree.unflatten(treedef, [u[0] for u in ups])
+    m2 = jax.tree.unflatten(treedef, [u[1] for u in ups])
+    v2 = jax.tree.unflatten(treedef, [u[2] for u in ups])
+    return params2, m2, v2, loss

@@ -1,0 +1,94 @@
+"""AOT pipeline units: HLO text emission, manifest fields, golden layout.
+
+(The full lowering of all configs is exercised by `make artifacts`; these
+tests keep the fast path honest without re-lowering everything.)
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.configs import SIM_CONFIGS, get_config
+from compile.params import load_mbt, save_mbt
+
+
+def test_to_hlo_text_emits_parseable_text():
+    lowered = jax.jit(lambda x: (x @ x.T,)).lower(
+        jax.ShapeDtypeStruct((4, 4), jnp.float32))
+    txt = aot.to_hlo_text(lowered)
+    assert "HloModule" in txt
+    assert "ENTRY" in txt
+    # text, not proto: must be valid utf-8/ascii-ish
+    txt.encode()
+
+
+def test_to_hlo_text_multi_output_tuple_root():
+    lowered = jax.jit(lambda x: (x + 1, x * 2, jnp.argmax(x))).lower(
+        jax.ShapeDtypeStruct((4,), jnp.float32))
+    txt = aot.to_hlo_text(lowered)
+    assert "tuple" in txt  # rust side decomposes a tuple root
+
+
+def test_bucket_constants_are_chunk_aligned():
+    chunk = get_config("tiny").chunk_size
+    for b in aot.PREFILL_BUCKETS + aot.FORWARD_BUCKETS:
+        assert b % chunk == 0, f"bucket {b} not chunk-aligned"
+    assert sorted(aot.DECODE_LOOP_BUCKETS) == aot.DECODE_LOOP_BUCKETS
+
+
+def test_spec_helper():
+    s = aot._spec(jnp.zeros((2, 3), jnp.int32))
+    assert s == {"shape": [2, 3], "dtype": "int32"}
+
+
+def test_mbt_roundtrip_mixed_dtypes(tmp_path):
+    p = tmp_path / "x.mbt"
+    save_mbt(p, [("a", np.arange(6, dtype=np.float32).reshape(2, 3)),
+                 ("b", np.array([1, -2], dtype=np.int32))])
+    back = load_mbt(p)
+    assert back[0][0] == "a"
+    np.testing.assert_array_equal(back[0][1],
+                                  np.arange(6, dtype=np.float32).reshape(2, 3))
+    assert back[1][1].dtype == np.int32
+
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built")
+class TestBuiltManifest:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_all_sim_configs_present(self, manifest):
+        for name in SIM_CONFIGS:
+            assert name in manifest["configs"]
+
+    def test_every_executable_file_exists(self, manifest):
+        for e in manifest["executables"]:
+            assert os.path.exists(os.path.join(ART, e["file"])), e["name"]
+            assert e["n_args"] == len(e["args"])
+            assert e["n_params"] <= e["n_args"]
+
+    def test_cost_analysis_recorded(self, manifest):
+        with_flops = [e for e in manifest["executables"]
+                      if e.get("cost", {}).get("flops", 0) > 0]
+        assert len(with_flops) >= 0.9 * len(manifest["executables"])
+
+    def test_param_counts_match_configs(self, manifest):
+        for name, c in manifest["configs"].items():
+            cfg = get_config(name)
+            assert c["n_params"] == cfg.n_params()
+            assert c["param_order"][0] == "embed"
+            assert c["param_order"][-1] == "lnf_w"
+
+    def test_goldens_exist(self):
+        assert os.path.exists(os.path.join(ART, "goldens", "tiny.mbt"))

@@ -1,0 +1,197 @@
+"""L1 correctness: every Pallas kernel against the pure-jnp oracle.
+
+Hypothesis sweeps the shape/dtype space; fixed seeds keep runs deterministic.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (decay_matrix_pallas, decode_step_pallas, ref,
+                             ssd_chunk_pallas, ssd_cross_pallas)
+from compile.ops import segsum
+
+ATOL = 2e-5
+RTOL = 2e-5
+
+
+def _rand(key, *shape):
+    return jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def _ssd_inputs(seed, b, c, L, h, p, n):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    xdt = _rand(ks[0], b, c, L, h, p)
+    # realistic decays: negative log-decay from softplus
+    dA = -jax.nn.softplus(_rand(ks[1], b, h, c, L))
+    B = _rand(ks[2], b, c, L, h, n)
+    C = _rand(ks[3], b, c, L, h, n)
+    return xdt, dA, B, C
+
+
+shape_strategy = st.tuples(
+    st.integers(1, 3),          # b
+    st.integers(1, 4),          # c
+    st.sampled_from([4, 8, 16]),  # L
+    st.integers(1, 4),          # h
+    st.sampled_from([4, 8, 16]),  # p
+    st.sampled_from([4, 8]),    # n
+)
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=shape_strategy, seed=st.integers(0, 2**16))
+def test_ssd_chunk_pallas_matches_ref(shape, seed):
+    xdt, dA, B, C = _ssd_inputs(seed, *shape)
+    Yr, Sr, cdr, sdr = ref.ssd_chunk_ref(xdt, dA, B, C)
+    Yp, Sp, cdp, sdp = ssd_chunk_pallas(xdt, dA, B, C)
+    np.testing.assert_allclose(Yr, Yp, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(Sr, Sp, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(cdr, cdp, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(sdr, sdp, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(shape=shape_strategy, seed=st.integers(0, 2**16))
+def test_ssd_cross_pallas_matches_ref(shape, seed):
+    xdt, dA, B, C = _ssd_inputs(seed, *shape)
+    Yr, Sr, cdr, sdr = ref.ssd_chunk_ref(xdt, dA, B, C)
+    prev, _ = ref.chunk_scan_ref(Sr, cdr)
+    want = Yr + ref.ssd_cross_ref(C, prev, sdr)
+    got = ssd_cross_pallas(Yr, C, prev, sdr)
+    np.testing.assert_allclose(want, got, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(1, 4), h=st.integers(1, 4),
+       p=st.sampled_from([4, 16]), n=st.sampled_from([4, 8]),
+       seed=st.integers(0, 2**16))
+def test_decode_step_pallas_matches_ref(b, h, p, n, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    ssm = _rand(ks[0], b, h, p, n)
+    xdt = _rand(ks[1], b, h, p)
+    dA = -jax.nn.softplus(_rand(ks[2], b, h))
+    B, C = _rand(ks[3], b, h, n), _rand(ks[4], b, h, n)
+    yr, sr = ref.decode_step_ref(ssm, xdt, dA, B, C)
+    yp, sp = decode_step_pallas(ssm, xdt, dA, B, C)
+    np.testing.assert_allclose(yr, yp, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(sr, sp, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(1, 8), L=st.sampled_from([2, 4, 8, 16]),
+       seed=st.integers(0, 2**16))
+def test_decay_matrix_pallas_matches_segsum(m, L, seed):
+    dA = -jax.nn.softplus(_rand(jax.random.PRNGKey(seed), m, L))
+    got = decay_matrix_pallas(dA)
+    want = jnp.exp(segsum(dA))
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_decay_matrix_is_lower_triangular():
+    dA = -jnp.ones((2, 8)) * 0.5
+    m = np.asarray(decay_matrix_pallas(dA))
+    assert (np.triu(m[0], k=1) == 0).all()
+    np.testing.assert_allclose(np.diag(m[0]), 1.0, atol=1e-6)
+
+
+def test_decay_matrix_accumulates_decay():
+    # constant decay a per step → M[i, j] = exp(a)^(i-j)
+    a = -0.3
+    dA = jnp.full((1, 6), a)
+    m = np.asarray(decay_matrix_pallas(dA))[0]
+    for i in range(6):
+        for j in range(i + 1):
+            np.testing.assert_allclose(m[i, j], np.exp(a * (i - j)),
+                                       rtol=1e-5)
+
+
+# ------------------------------------------------------ duality property ---
+
+@settings(max_examples=10, deadline=None)
+@given(shape=shape_strategy, seed=st.integers(0, 2**16))
+def test_state_space_duality(shape, seed):
+    """Chunked dual form == naive sequential recurrence (paper §3.1)."""
+    b, c, L, h, p, n = shape
+    xdt, dA, B, C = _ssd_inputs(seed, *shape)
+    Yc, fc = ref.ssd_reference(xdt, dA, B, C)
+    Ys, fs = ref.ssd_sequential_ref(
+        xdt.reshape(b, c * L, h, p), dA.reshape(b, h, c * L),
+        B.reshape(b, c * L, h, n), C.reshape(b, c * L, h, n))
+    np.testing.assert_allclose(Yc.reshape(b, c * L, h, p), Ys,
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(fc, fs, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(shape=shape_strategy, seed=st.integers(0, 2**16))
+def test_duality_with_initial_state(shape, seed):
+    """Duality also holds from a non-zero initial state (prefill → decode)."""
+    b, c, L, h, p, n = shape
+    xdt, dA, B, C = _ssd_inputs(seed, *shape)
+    init = _rand(jax.random.PRNGKey(seed + 1), b, h, p, n)
+    Yc, fc = ref.ssd_reference(xdt, dA, B, C, init)
+    Ys, fs = ref.ssd_sequential_ref(
+        xdt.reshape(b, c * L, h, p), dA.reshape(b, h, c * L),
+        B.reshape(b, c * L, h, n), C.reshape(b, c * L, h, n), init)
+    np.testing.assert_allclose(Yc.reshape(b, c * L, h, p), Ys,
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(fc, fs, rtol=1e-4, atol=1e-4)
+
+
+def test_conv_step_matches_full_conv():
+    """Stepping the conv cache token-by-token == full causal conv."""
+    k, ch, t, b = 4, 6, 10, 2
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = _rand(ks[0], b, t, ch)
+    w = _rand(ks[1], k, ch)
+    bias = _rand(ks[2], ch)
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    full = sum(pad[:, i:i + t] * w[i][None, None, :] for i in range(k))
+    full = jax.nn.silu(full + bias)
+    conv_state = jnp.zeros((b, ch, k - 1))
+    outs = []
+    for i in range(t):
+        y, conv_state = ref.conv_step_ref(conv_state, x[:, i], w, bias)
+        outs.append(y)
+    got = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(full, got, rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------- edge behaviour ---
+
+def test_ssd_zero_decay_accumulates_everything():
+    """dA = 0 (no decay) → the state is a plain sum of B xᵀ outer products."""
+    b, c, L, h, p, n = 1, 2, 4, 1, 3, 2
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    xdt = _rand(ks[0], b, c, L, h, p)
+    B = _rand(ks[1], b, c, L, h, n)
+    C = _rand(ks[2], b, c, L, h, n)
+    dA = jnp.zeros((b, h, c, L))
+    _, fin = ref.ssd_reference(xdt, dA, B, C)
+    want = jnp.einsum("bclhn,bclhp->bhpn", B, xdt)
+    np.testing.assert_allclose(fin, want, rtol=1e-5, atol=1e-5)
+
+
+def test_ssd_strong_decay_forgets():
+    """Very strong decay → output ≈ instantaneous term C·(B xᵀ) only."""
+    b, c, L, h, p, n = 1, 1, 8, 1, 4, 4
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    xdt = _rand(ks[0], b, c, L, h, p)
+    B = _rand(ks[1], b, c, L, h, n)
+    C = _rand(ks[2], b, c, L, h, n)
+    dA = jnp.full((b, h, c, L), -50.0)
+    Y, _ = ref.ssd_reference(xdt, dA, B, C)
+    inst = jnp.einsum("bclhn,bclhn,bclhp->bclhp",
+                      C, B, xdt)  # diagonal of L is exp(0)=1
+    np.testing.assert_allclose(Y, inst, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("L", [1, 2, 16])
+def test_single_chunk_sizes(L):
+    xdt, dA, B, C = _ssd_inputs(7, 1, 1, L, 2, 4, 4)
+    Yr, *_ = ref.ssd_chunk_ref(xdt, dA, B, C)
+    Yp, *_ = ssd_chunk_pallas(xdt, dA, B, C)
+    np.testing.assert_allclose(Yr, Yp, rtol=RTOL, atol=ATOL)

@@ -1,0 +1,181 @@
+"""L2 invariants: prefill/decode equivalences, cache PyTree, precision rules.
+
+These are the properties the paper's §3.3–3.4 claims rest on:
+the cached path must be *exactly* the same function as the full forward.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.cache import MambaCache
+from compile.configs import SIM_CONFIGS, get_config
+from compile.params import (flatten_params, init_params, load_params,
+                            param_order, save_params, unflatten_params)
+
+CFG = get_config("tiny")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    rng = np.random.default_rng(1)
+    return jnp.asarray(rng.integers(0, CFG.vocab_size, (2, 32)), jnp.int32)
+
+
+def test_prefill_shapes(params, tokens):
+    logits, cache = M.prefill(CFG, params, tokens)
+    assert logits.shape == (2, 32, CFG.vocab_size)
+    assert cache.ssm.shape == (CFG.n_layer, 2, CFG.nheads, CFG.headdim,
+                               CFG.d_state)
+    assert cache.conv.shape == (CFG.n_layer, 2, CFG.d_conv_ch, CFG.d_conv - 1)
+
+
+def test_prefill_prefix_consistency(params, tokens):
+    """Logits for a prefix don't depend on what follows (causality)."""
+    full, _ = M.prefill(CFG, params, tokens)
+    half, _ = M.prefill(CFG, params, tokens[:, :16])
+    np.testing.assert_allclose(full[:, :16], half, rtol=1e-4, atol=1e-4)
+
+
+def test_decode_step_chain_matches_full_forward(params, tokens):
+    """Prefill + decode_step chain == one big forward (the O(1) cache is
+    exact, not approximate)."""
+    t_pre = 16
+    logits_pre, cache = M.prefill(CFG, params, tokens[:, :t_pre])
+    full, _ = M.prefill(CFG, params, tokens)
+    got = [logits_pre]
+    for i in range(t_pre, 32):
+        lg, cache = M.decode_step(CFG, params, cache, tokens[:, i])
+        got.append(lg[:, None])
+    got = jnp.concatenate(got, axis=1)
+    np.testing.assert_allclose(full, got, rtol=2e-4, atol=2e-4)
+
+
+def test_decode_loop_matches_host_loop(params, tokens):
+    """Compiled fori_loop decode == host-driven decode, token-for-token."""
+    logits, cache = M.prefill(CFG, params, tokens[:1])
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+    gen, _ = M.decode_loop(CFG, params, cache, tok, 12)
+    c, t, outs = cache, tok, []
+    for _ in range(12):
+        lg, c = M.decode_step(CFG, params, c, t)
+        t = jnp.argmax(lg, -1).astype(jnp.int32)
+        outs.append(t)
+    host = jnp.stack(outs, axis=1)
+    assert (np.asarray(gen) == np.asarray(host)).all()
+
+
+def test_decode_batch_independence(params, tokens):
+    """Batched decode == per-sequence decode (continuous batching is safe)."""
+    logits, cache = M.prefill(CFG, params, tokens)
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+    lg_b, cache_b = M.decode_step(CFG, params, cache, tok)
+    for i in range(2):
+        sub = MambaCache(cache.ssm[:, i:i + 1], cache.conv[:, i:i + 1])
+        lg_i, _ = M.decode_step(CFG, params, sub, tok[i:i + 1])
+        np.testing.assert_allclose(lg_b[i:i + 1], lg_i, rtol=1e-5, atol=1e-5)
+
+
+def test_pallas_and_jnp_paths_agree(params, tokens):
+    """The L1 Pallas kernels and the compiler-first jnp path are the same
+    function (paper's structural-conditions argument, kernel-level)."""
+    lj, cj = M.prefill(CFG, params, tokens, kernel="jnp")
+    lp, cp = M.prefill(CFG, params, tokens, kernel="pallas")
+    np.testing.assert_allclose(lj, lp, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(cj.ssm, cp.ssm, rtol=2e-4, atol=2e-4)
+    tok = jnp.argmax(lj[:, -1], -1).astype(jnp.int32)
+    sj, _ = M.decode_step(CFG, params, cj, tok, kernel="jnp")
+    sp, _ = M.decode_step(CFG, params, cp, tok, kernel="pallas")
+    np.testing.assert_allclose(sj, sp, rtol=2e-4, atol=2e-4)
+
+
+def test_mask_modes_bitwise_identical(params, tokens):
+    """Table 7: dynamic row-wise masking is bitwise identical to static."""
+    cfg_dyn = dataclasses.replace(CFG, mask_mode="dynamic")
+    ls, _ = M.prefill(CFG, params, tokens)
+    ld, _ = M.prefill(cfg_dyn, params, tokens)
+    assert (np.asarray(ls) == np.asarray(ld)).all()
+
+
+def test_decay_bf16_shifts_logits(params, tokens):
+    """Table 8: bf16 decay exponentiation produces a visible logit error."""
+    cfg_bf = dataclasses.replace(CFG, decay_dtype="bfloat16")
+    lf, _ = M.prefill(CFG, params, tokens)
+    lb, _ = M.prefill(cfg_bf, params, tokens)
+    err = float(jnp.max(jnp.abs(lf - lb)))
+    assert err > 1e-6, "bf16 decay should differ from f32"
+
+
+def test_cache_pytree_roundtrip():
+    cache = MambaCache.zeros(CFG, 3)
+    leaves, treedef = jax.tree.flatten(cache)
+    assert len(leaves) == 2
+    back = jax.tree.unflatten(treedef, leaves)
+    assert isinstance(back, MambaCache)
+    assert back.ssm.shape == cache.ssm.shape
+    assert cache.nbytes() == (cache.ssm.size + cache.conv.size) * 4
+
+
+def test_cache_traces_through_jit(params):
+    """The PyTree cache must pass through jit boundaries (paper §3.4)."""
+    @jax.jit
+    def step(cache, tok):
+        return M.decode_step(CFG, params, cache, tok)
+    cache = MambaCache.zeros(CFG, 1)
+    lg, cache2 = step(cache, jnp.zeros((1,), jnp.int32))
+    assert isinstance(cache2, MambaCache)
+    assert lg.shape == (1, CFG.vocab_size)
+
+
+def test_cache_size_independent_of_seq_len(params):
+    for t in (16, 64):
+        rng = np.random.default_rng(0)
+        toks = jnp.asarray(rng.integers(0, CFG.vocab_size, (1, t)), jnp.int32)
+        _, cache = M.prefill(CFG, params, toks)
+        assert cache.nbytes() == MambaCache.zeros(CFG, 1).nbytes()
+
+
+def test_residual_stream_is_f32(params, tokens):
+    logits, _ = M.prefill(CFG, params, tokens)
+    assert logits.dtype == jnp.float32
+
+
+def test_param_roundtrip(tmp_path, params):
+    p = tmp_path / "t.mbt"
+    save_params(p, CFG, params)
+    back = load_params(p, CFG)
+    for a, b in zip(flatten_params(CFG, params), flatten_params(CFG, back)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b))
+
+
+def test_param_order_matches_count():
+    names = param_order(CFG)
+    flat = flatten_params(CFG, init_params(CFG, jax.random.PRNGKey(1)))
+    assert len(names) == len(flat)
+    total = sum(int(np.prod(a.shape)) for a in flat)
+    assert total == CFG.n_params()
+
+
+@pytest.mark.parametrize("name", list(SIM_CONFIGS))
+def test_config_param_counts(name):
+    cfg = get_config(name)
+    flat = flatten_params(cfg, init_params(cfg, jax.random.PRNGKey(0)))
+    assert sum(int(np.prod(a.shape)) for a in flat) == cfg.n_params()
+    assert cfg.d_inner % cfg.headdim == 0
+
+
+def test_unflatten_inverse():
+    flat = flatten_params(CFG, init_params(CFG, jax.random.PRNGKey(2)))
+    again = flatten_params(CFG, unflatten_params(CFG, flat))
+    for a, b in zip(flat, again):
+        assert a is b

@@ -1,0 +1,77 @@
+//! §Perf harness: the L3 hot-path levers, measured before/after.
+//!
+//!   1. params resident on device (`execute_b`) vs re-uploaded as literals
+//!      every call — the dominant per-call cost at small model scale
+//!   2. compiled decode loop (scan) vs host-driven step loop — launch and
+//!      output-roundtrip amortisation
+//!   3. batched decode step vs sequential single steps — the continuous
+//!      batcher's amortisation of the per-launch cost
+//!
+//! Results go to EXPERIMENTS.md §Perf.
+
+use mamba2_serve::bench_support::{open_runtime, quick};
+use mamba2_serve::coordinator::SingleStream;
+use mamba2_serve::runtime::{CacheState, ModelSession};
+use mamba2_serve::util::benchkit::{save_results, Bench, Table};
+
+fn main() {
+    let rt = open_runtime();
+    let models = if quick() { vec!["sim-130m"] }
+                 else { vec!["sim-130m", "sim-1.3b"] };
+    let mut bench = Bench::new().with_protocol(3, 7).quiet();
+    let mut t = Table::new(
+        "§Perf: hot-path levers (decode_step ms, CPU)",
+        &["Model", "Lever", "before ms", "after ms", "speedup"]);
+
+    for sim in &models {
+        let mut session = ModelSession::new(rt.clone(), sim).unwrap();
+        let cfg = session.cfg().clone();
+        let cache = CacheState::zeros(&cfg, 1);
+
+        // lever 1: literal-path vs resident params
+        session.literal_path = true;
+        let before = bench.measure(&format!("{sim}.step.literals"), 1.0,
+            || { session.decode_step(&cache, &[7]).unwrap(); })
+            .summary.mean;
+        session.literal_path = false;
+        let after = bench.measure(&format!("{sim}.step.resident"), 1.0,
+            || { session.decode_step(&cache, &[7]).unwrap(); })
+            .summary.mean;
+        t.row(vec![sim.to_string(), "resident device params".into(),
+                   format!("{:.3}", before * 1e3),
+                   format!("{:.3}", after * 1e3),
+                   format!("{:.2}x", before / after)]);
+
+        // lever 2: host loop vs compiled scan loop (32 tokens)
+        let ss = SingleStream::new(&session);
+        let prompt: Vec<i32> = (1..17).collect();
+        let host = bench.measure(&format!("{sim}.gen.host"), 32.0,
+            || { ss.generate_host(&prompt, 32).unwrap(); })
+            .summary.mean;
+        let scan = bench.measure(&format!("{sim}.gen.scan"), 32.0,
+            || { ss.generate_scan(&prompt, 32).unwrap(); })
+            .summary.mean;
+        t.row(vec![sim.to_string(), "compiled decode loop".into(),
+                   format!("{:.2}", host * 1e3),
+                   format!("{:.2}", scan * 1e3),
+                   format!("{:.2}x", host / scan)]);
+
+        // lever 3: batched step (4 seqs/launch) vs 4 single steps
+        let cache4 = CacheState::zeros(&cfg, 4);
+        let single4 = bench.measure(&format!("{sim}.step.4x1"), 4.0, || {
+            for _ in 0..4 {
+                session.decode_step(&cache, &[7]).unwrap();
+            }
+        }).summary.mean;
+        let batched = bench.measure(&format!("{sim}.step.1x4"), 4.0, || {
+            session.decode_step(&cache4, &[7, 8, 9, 10]).unwrap();
+        }).summary.mean;
+        t.row(vec![sim.to_string(), "batched decode (4 seqs)".into(),
+                   format!("{:.2}", single4 * 1e3),
+                   format!("{:.2}", batched * 1e3),
+                   format!("{:.2}x", single4 / batched)]);
+        eprintln!("  [{sim}] done");
+    }
+    t.print();
+    save_results("perf_hotpath", &[&t]);
+}

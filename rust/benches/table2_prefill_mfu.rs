@@ -1,0 +1,94 @@
+//! Paper Table 2 + Figure 4(a) + Figure 6: prefill model-FLOP utilisation.
+//!
+//! MFU = (F_XLA / t_wall) / peak (paper Eq. 4). F_XLA comes from the XLA
+//! cost analysis recorded in the manifest at AOT time — exactly the paper's
+//! numerator. CPU MFU is measured; TPU-v6e MFU is projected from the
+//! analytic cost model at paper scale.
+
+use mamba2_serve::bench_support::{open_runtime, paper_config, quick,
+                                  SIM_MODELS};
+use mamba2_serve::perf::sim::project_prefill;
+use mamba2_serve::perf::{mfu, CPU_HOST, TPU_V6E};
+use mamba2_serve::runtime::ModelSession;
+use mamba2_serve::util::benchkit::{save_results, Bench, Table};
+
+/// Paper Table 2 (prefill MFU %, prompt lengths 1024/4096/8192).
+const PAPER_T2: [(&str, [f64; 3]); 5] = [
+    ("130M", [6.22, 8.23, 7.68]),
+    ("370M", [7.47, 9.04, 7.60]),
+    ("780M", [10.62, 11.33, 8.20]),
+    ("1.3B", [12.53, 11.67, 8.39]),
+    ("2.7B", [15.23, 12.96, 9.71]),
+];
+
+fn main() {
+    let rt = open_runtime();
+    let prompts: Vec<usize> = if quick() { vec![64] } else { vec![64, 256, 512] };
+    let models: Vec<_> = if quick() { SIM_MODELS[..2].to_vec() }
+                         else { SIM_MODELS.to_vec() };
+
+    let mut bench = Bench::new().quiet();
+    let mut measured = Table::new(
+        "Measured prefill MFU % (CPU backend; F_XLA from manifest cost \
+         analysis)",
+        &["Model", "t=64", "t=256", "t=512", "tokens/s @512"]);
+
+    for (sim, _) in &models {
+        let session = ModelSession::new(rt.clone(), sim).unwrap();
+        let mut row = vec![sim.to_string()];
+        let mut last_tps = 0.0;
+        for &t in &prompts {
+            let name = format!("{sim}.prefill.t{t}");
+            let spec = rt.manifest.find(&name).unwrap().clone();
+            let tokens: Vec<i32> = (0..t as i32).map(|i| i % 512).collect();
+            let m = bench.measure(&name, t as f64, || {
+                session.prefill(&tokens, 1).unwrap();
+            });
+            row.push(format!("{:.2}",
+                             mfu(&spec, m.summary.mean,
+                                 CPU_HOST.peak_tflops) * 100.0));
+            last_tps = m.throughput();
+        }
+        while row.len() < 4 { row.push("-".into()); }
+        row.push(format!("{last_tps:.0}"));
+        measured.row(row);
+        eprintln!("  [{sim}] done");
+    }
+    measured.print();
+
+    // -------- projection at paper scale vs paper Table 2 -------------
+    let mut proj = Table::new(
+        "Projected TPU v6e prefill MFU % vs paper Table 2 (batch 1, bf16)",
+        &["Model", "proj 1024", "paper 1024", "proj 4096", "paper 4096",
+          "proj 8192", "paper 8192"]);
+    for (scale, paper_vals) in PAPER_T2 {
+        let c = paper_config(scale);
+        let mut row = vec![scale.to_string()];
+        for (i, &t) in [1024usize, 4096, 8192].iter().enumerate() {
+            let p = project_prefill(&c, t, &TPU_V6E, 2.0);
+            row.push(format!("{:.2}", p.mfu * 100.0));
+            row.push(format!("{:.2}", paper_vals[i]));
+        }
+        proj.row(row);
+    }
+    proj.print();
+
+    // shape check: MFU increases with model size (paper Fig. 6)
+    let mut shape = Table::new("Shape checks", &["Claim", "Holds"]);
+    if !quick() {
+        let m_small = bench.get("sim-130m.prefill.t512").unwrap();
+        let m_big = bench.get("sim-2.7b.prefill.t512").unwrap();
+        let spec_s = rt.manifest.find("sim-130m.prefill.t512").unwrap();
+        let spec_b = rt.manifest.find("sim-2.7b.prefill.t512").unwrap();
+        let mfu_s = mfu(spec_s, m_small.summary.mean, CPU_HOST.peak_tflops);
+        let mfu_b = mfu(spec_b, m_big.summary.mean, CPU_HOST.peak_tflops);
+        shape.row(vec![
+            format!("MFU rises with scale: {:.2}% -> {:.2}%",
+                    mfu_s * 100.0, mfu_b * 100.0),
+            (mfu_b > mfu_s).to_string(),
+        ]);
+    }
+    shape.print();
+
+    save_results("table2_prefill_mfu", &[&measured, &proj, &shape]);
+}

@@ -1,0 +1,87 @@
+//! Paper Table 4: single-stream decode on NVIDIA L40S — same source,
+//! second hardware target.
+//!
+//! The portability claim: identical artifacts, different roofline. We
+//! project the paper-scale configs under the L40S roofline and verify the
+//! paper's shape claims (seq-len independence; host-loop penalty at small
+//! scale; absolute numbers below the TPU's).
+
+use mamba2_serve::bench_support::paper_config;
+use mamba2_serve::perf::sim::{project_decode, Strategy};
+use mamba2_serve::perf::{L40S, TPU_V6E};
+use mamba2_serve::util::benchkit::{save_results, Table};
+
+/// Paper Table 4 (tokens/s on L40S) at g = 128 / 1024 / 4096.
+const PAPER_T4: [(&str, [f64; 3], [f64; 3], [f64; 3]); 5] = [
+    ("130M", [240.2, 267.1, 314.2], [178.4, 141.9, 188.5],
+     [203.3, 115.8, 20.3]),
+    ("370M", [154.3, 165.1, 148.0], [104.1, 98.8, 112.3],
+     [125.4, 36.9, 7.2]),
+    ("780M", [110.2, 106.4, 108.0], [107.2, 118.5, 99.6],
+     [97.3, 20.4, 3.9]),
+    ("1.3B", [67.2, 71.3, 71.0], [71.1, 72.4, 72.5], [65.2, 12.7, 2.7]),
+    ("2.7B", [35.4, 36.3, 36.1], [37.2, 37.1, 37.1], [34.8, 6.7, 1.5]),
+];
+
+fn main() {
+    let gl = [128usize, 1024, 4096];
+    let mut t = Table::new(
+        "Projected NVIDIA L40S decode throughput vs paper Table 4 \
+         (tokens/s, batch 1, bf16)",
+        &["Model", "Method", "proj 128", "paper 128", "proj 1024",
+          "paper 1024", "proj 4096", "paper 4096"]);
+    for (scale, scan_ref, host_ref, nc_ref) in PAPER_T4 {
+        let c = paper_config(scale);
+        for (method, strat, refs) in [
+            ("Cached (scan)", Strategy::CachedScan, scan_ref),
+            ("Cached (host)", Strategy::CachedHost, host_ref),
+        ] {
+            let mut row = vec![scale.to_string(), method.to_string()];
+            for (i, &g) in gl.iter().enumerate() {
+                let p = project_decode(&c, g, match strat {
+                    Strategy::CachedScan => Strategy::CachedScan,
+                    Strategy::CachedHost => Strategy::CachedHost,
+                    _ => unreachable!(),
+                }, &L40S, 2.0);
+                row.push(format!("{:.1}", g as f64 / p.seconds));
+                row.push(format!("{:.1}", refs[i]));
+            }
+            t.row(row);
+        }
+        let mut row = vec![scale.to_string(), "Non-Cached".into()];
+        for (i, &g) in gl.iter().enumerate() {
+            let p = project_decode(&c, g, Strategy::NonCached { prompt: 16 },
+                                   &L40S, 2.0);
+            row.push(format!("{:.1}", g as f64 / p.seconds));
+            row.push(format!("{:.1}", nc_ref[i]));
+        }
+        t.row(row);
+    }
+    t.print();
+
+    // shape checks: L40S < v6e absolute; scan flat; crossover of host gap
+    let mut shape = Table::new("Shape checks", &["Claim", "Value", "Holds"]);
+    for (scale, ..) in PAPER_T4 {
+        let c = paper_config(scale);
+        let l = project_decode(&c, 1024, Strategy::CachedScan, &L40S, 2.0);
+        let v = project_decode(&c, 1024, Strategy::CachedScan, &TPU_V6E, 2.0);
+        shape.row(vec![
+            format!("{scale}: L40S slower than v6e"),
+            format!("{:.0} vs {:.0} tok/s",
+                    1024.0 / l.seconds, 1024.0 / v.seconds),
+            (l.seconds > v.seconds).to_string(),
+        ]);
+        let a = project_decode(&c, 128, Strategy::CachedScan, &L40S, 2.0);
+        let b = project_decode(&c, 4096, Strategy::CachedScan, &L40S, 2.0);
+        let r = (128.0 / a.seconds) / (4096.0 / b.seconds);
+        shape.row(vec![
+            format!("{scale}: seq-len independent on L40S"),
+            format!("tps ratio {r:.3}"),
+            ((r - 1.0).abs() < 0.05).to_string(),
+        ]);
+    }
+    shape.print();
+    save_results("table4_l40s_decode", &[&t, &shape]);
+    println!("(projection only: no L40S in this environment — \
+              DESIGN.md §4 substitution)");
+}

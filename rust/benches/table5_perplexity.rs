@@ -1,0 +1,130 @@
+//! Paper Table 5 + Figure 5: perplexity parity between the cached path and
+//! the reference path, and batch-size invariance.
+//!
+//! The paper compares its JAX implementation against the Triton reference
+//! (`mamba_ssm`) on WikiText-103 and finds |Δ PPL| ≤ 5e-4. The structural
+//! equivalent here (DESIGN.md §4): the *cached decode* scoring path vs the
+//! *non-cached strided forward* scoring path on the bundled corpus — two
+//! independent routes through the same weights whose agreement is the
+//! measured quantity.
+
+use mamba2_serve::bench_support::{open_runtime, quick, SIM_MODELS};
+use mamba2_serve::eval::corpus::eval_text;
+use mamba2_serve::eval::tokenizer::Tokenizer;
+use mamba2_serve::eval::{cached_perplexity, strided_perplexity};
+use mamba2_serve::runtime::ModelSession;
+use mamba2_serve::util::benchkit::{save_results, Table};
+
+/// Paper Table 5: WikiText-103 PPL (Triton, JAX, |Δ|).
+const PAPER_T5: [(&str, f64, f64, f64); 5] = [
+    ("130M", 18.7023, 18.7019, 0.0004),
+    ("370M", 13.1247, 13.1244, 0.0003),
+    ("780M", 10.8892, 10.8886, 0.0005),
+    ("1.3B", 9.5708, 9.5704, 0.0004),
+    ("2.7B", 8.3252, 8.3250, 0.0002),
+];
+
+fn main() {
+    let rt = open_runtime();
+    let tok = Tokenizer::bytes_only(); // byte ids < 512 = model vocab
+    let text = eval_text(0);
+    let mut tokens = tok.encode(&text);
+    let budget = if quick() { 400 } else { 1200 };
+    tokens.truncate(budget);
+    let models: Vec<_> = if quick() { SIM_MODELS[..1].to_vec() }
+                         else { SIM_MODELS.to_vec() };
+
+    let mut t = Table::new(
+        "Perplexity parity: strided reference path vs cached decode path \
+         (bundled corpus; paper Table 5 alongside)",
+        &["Model", "Ref PPL", "Cached PPL", "|Δ|", "paper Triton",
+          "paper JAX", "paper |Δ|"]);
+    let mut max_delta = 0.0f64;
+    for (i, (sim, paper)) in models.iter().enumerate() {
+        let session = ModelSession::new(rt.clone(), sim).unwrap();
+        // reference: non-cached strided forward (window 256, stride 128 —
+        // the paper's 1024/512 protocol scaled to sim buckets)
+        let r = strided_perplexity(&session, &tokens, 256, 128).unwrap();
+        // implementation under test: prefill + O(1) cached scoring
+        let span = 512.min(tokens.len());
+        let c = cached_perplexity(&session, &tokens[..span], 256).unwrap();
+        // parity claim is about identical contexts: rescore the same span
+        // in ONE window so both paths condition on the same history
+        let r2 = strided_perplexity(&session, &tokens[..span], span, span)
+            .unwrap();
+        let delta = (c.ppl - r2.ppl).abs();
+        max_delta = max_delta.max(delta);
+        let (_, pt, pj, pd) = PAPER_T5[i.min(4)];
+        t.row(vec![sim.to_string(),
+                   format!("{:.4}", r2.ppl),
+                   format!("{:.4}", c.ppl),
+                   format!("{delta:.5}"),
+                   format!("{pt:.4}"), format!("{pj:.4}"),
+                   format!("{pd:.4}")]);
+        eprintln!("  [{sim}] full-corpus ref ppl {:.3} over {} tokens",
+                  r.ppl, r.n_tokens);
+        let _ = paper;
+    }
+    t.print();
+    println!("max |Δ| = {max_delta:.6} (paper bound: 5e-4; both paths share \
+              weights, differ in compute route — same comparison structure)");
+
+    // ------------------- Figure 5: batch-size invariance -----------------
+    let mut f5 = Table::new(
+        "Fig 5: perplexity vs batch size (sim-130m)",
+        &["Batch", "PPL", "|Δ vs b=1|"]);
+    let session = ModelSession::new(rt.clone(), "sim-130m").unwrap();
+    let w = 16; // batched prefill bucket
+    // score the same 4 windows at batch 1 and batch 4
+    let windows: Vec<Vec<i32>> = (0..4)
+        .map(|i| tokens[i * w..(i + 1) * w + 1].to_vec())
+        .collect();
+    let nll_b1: f64 = windows.iter().map(|win| {
+        let pre = session.prefill(&win[..w], 1).unwrap();
+        window_nll(&pre.logits, win, w)
+    }).sum();
+    // batch 4: one batched prefill over the stacked windows
+    let stacked: Vec<i32> = windows.iter()
+        .flat_map(|win| win[..w].iter().copied()).collect();
+    let pre4 = session.prefill(&stacked, 4).unwrap();
+    let v = *pre4.logits.dims.last().unwrap() as usize;
+    let all = pre4.logits.as_f32();
+    let mut nll_b4 = 0.0f64;
+    for (b, win) in windows.iter().enumerate() {
+        let base = b * w * v;
+        for pos in 0..w {
+            if pos + 1 > w { break; }
+            let row = &all[base + pos * v..base + (pos + 1) * v];
+            let target = if pos + 1 < w { win[pos + 1] } else { win[w] };
+            nll_b4 -= logp(row, target as usize);
+        }
+    }
+    let n = (w * 4) as f64;
+    let p1 = (nll_b1 / n).exp();
+    let p4 = (nll_b4 / n).exp();
+    f5.row(vec!["1".into(), format!("{p1:.4}"), "0".into()]);
+    f5.row(vec!["4".into(), format!("{p4:.4}"),
+                format!("{:.6}", (p4 - p1).abs())]);
+    f5.print();
+    println!("(paper Fig 5: PPL invariant to batch size — |Δ| at f32 \
+              rounding scale)");
+    save_results("table5_perplexity", &[&t, &f5]);
+}
+
+fn logp(row: &[f32], target: usize) -> f64 {
+    let m = row.iter().copied().fold(f32::MIN, f32::max) as f64;
+    let z: f64 = row.iter().map(|&x| ((x as f64) - m).exp()).sum();
+    (row[target] as f64 - m) - z.ln()
+}
+
+fn window_nll(logits: &mamba2_serve::tensor::Tensor, win: &[i32], w: usize)
+    -> f64 {
+    let v = *logits.dims.last().unwrap() as usize;
+    let all = logits.as_f32();
+    let mut nll = 0.0;
+    for pos in 0..w {
+        let row = &all[pos * v..(pos + 1) * v];
+        nll -= logp(row, win[pos + 1] as usize);
+    }
+    nll
+}

@@ -1,0 +1,117 @@
+//! Shared scaffolding for the paper-table bench targets (`benches/`).
+//!
+//! Every bench prints (a) the values measured on the CPU backend, (b) the
+//! projected TPU-v6e / L40S values where the paper's exhibit is
+//! hardware-specific, and (c) the paper's own reported numbers alongside,
+//! then saves machine-readable results under `bench_results/`.
+
+use std::sync::Arc;
+
+use crate::runtime::{ConfigInfo, Runtime};
+
+/// The five sim scales, smallest→largest, with their paper counterparts.
+pub const SIM_MODELS: [(&str, &str); 5] = [
+    ("sim-130m", "130M"),
+    ("sim-370m", "370M"),
+    ("sim-780m", "780M"),
+    ("sim-1.3b", "1.3B"),
+    ("sim-2.7b", "2.7B"),
+];
+
+/// Paper-scale config shapes for the roofline projections.
+///
+/// NOTE: this repo's model family uses per-head B/C projections (a grouped
+/// SSD variant, ngroups = nheads), while the released
+/// `state-spaces/mamba2-*` checkpoints share one B/C across heads
+/// (ngroups = 1). The derived parameter counts below therefore exceed the
+/// checkpoint names (~1.8×); the roofline constants are calibrated against
+/// the paper's *measured* throughputs, so the shape difference is absorbed
+/// by the calibration and the projected *trends* are what carry
+/// (DESIGN.md §4).
+pub fn paper_config(scale: &str) -> ConfigInfo {
+    let (d_model, n_layer) = match scale {
+        "130M" => (768, 24),
+        "370M" => (1024, 48),
+        "780M" => (1536, 36),
+        "1.3B" => (2048, 48),
+        "2.7B" => (2560, 64),
+        _ => panic!("unknown paper scale {scale}"),
+    };
+    let d_state = 128;
+    let headdim = 64;
+    let d_inner = 2 * d_model;
+    let nheads = d_inner / headdim;
+    let d_conv = 4;
+    let d_conv_ch = d_inner + 2 * nheads * d_state;
+    let d_in_proj = 2 * d_inner + 2 * nheads * d_state + nheads;
+    let vocab = 50288;
+    let per_layer = d_model * d_in_proj
+        + d_conv * d_conv_ch + d_conv_ch
+        + 3 * nheads + d_inner + d_inner * d_model + d_model;
+    let n_params = vocab * d_model + n_layer * per_layer + d_model;
+    ConfigInfo {
+        name: scale.to_string(),
+        d_model,
+        n_layer,
+        vocab_size: vocab,
+        d_state,
+        headdim,
+        nheads,
+        d_inner,
+        d_conv,
+        d_conv_ch,
+        chunk_size: 256,
+        n_params_total: n_params as u64,
+        paper_scale: Some(scale.to_string()),
+        param_order: vec![],
+    }
+}
+
+pub fn open_runtime() -> Arc<Runtime> {
+    let rt = Runtime::new(&crate::artifacts_dir()).unwrap_or_else(|e| {
+        eprintln!("cannot open artifacts ({e}); run `make artifacts` first");
+        std::process::exit(1);
+    });
+    rt
+}
+
+/// `--quick` / BENCH_QUICK trims sweeps for CI smoke runs.
+pub fn quick() -> bool {
+    std::env::args().any(|a| a == "--quick") ||
+        std::env::var("BENCH_QUICK").is_ok()
+}
+
+pub fn fmt_f(x: f64, prec: usize) -> String {
+    format!("{x:.prec$}")
+}
+
+pub fn fmt_pct(x: f64) -> String {
+    format!("{:.2}", x * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_configs_scale_monotonically() {
+        // the grouped-B/C variant overestimates the checkpoint names by a
+        // roughly constant factor (see paper_config docs); what the
+        // projections rely on is the *ladder*: counts grow monotonically
+        // and each step is within the paper's ~1.7–3.5× spacing
+        let scales = ["130M", "370M", "780M", "1.3B", "2.7B"];
+        let counts: Vec<f64> = scales.iter()
+            .map(|s| paper_config(s).n_params_total as f64).collect();
+        for w in counts.windows(2) {
+            let ratio = w[1] / w[0];
+            assert!(ratio > 1.5 && ratio < 4.0, "ladder step {ratio}");
+        }
+        // and the variant factor vs the advertised names stays bounded
+        for (scale, want_m) in [("130M", 130.0), ("2.7B", 2700.0)] {
+            let m = paper_config(scale).n_params_total as f64 / 1e6;
+            let factor = m / want_m;
+            assert!(factor > 1.0 && factor < 2.5,
+                    "{scale}: variant factor {factor:.2}");
+        }
+    }
+}

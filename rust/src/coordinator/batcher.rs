@@ -1,0 +1,211 @@
+//! Continuous batcher: join/leave at decode-step granularity.
+//!
+//! Pure scheduling logic (no runtime dependency) so the invariants are
+//! property-testable: sequences join as slots free up, leave the moment
+//! they finish, and the decode batch never contains two sequences in the
+//! same slot. vLLM needs paged KV blocks to do this; the O(1) SSM cache
+//! makes the state a fixed slot (see slots.rs).
+
+use std::collections::VecDeque;
+
+use super::request::{GenRequest, Sampling};
+use super::slots::{SlotId, SlotPool};
+
+#[derive(Debug, Clone)]
+pub struct ActiveSeq {
+    pub req_id: u64,
+    pub slot: SlotId,
+    pub last_token: i32,
+    pub generated: usize,
+    pub max_new_tokens: usize,
+    pub sampling: Sampling,
+    pub stop_token: Option<i32>,
+}
+
+#[derive(Debug)]
+pub struct Batcher {
+    pub queue: VecDeque<GenRequest>,
+    pub slots: SlotPool,
+    /// slot index → active sequence
+    active: Vec<Option<ActiveSeq>>,
+    /// cap on admissions per engine iteration (bounds decode starvation
+    /// caused by long prefills — the prefill/decode interleaving policy)
+    pub max_admissions_per_iter: usize,
+    pub queue_peak: usize,
+}
+
+pub enum Admission {
+    /// request admitted into `slot`; engine must prefill and install cache
+    Admit(GenRequest, SlotId),
+    /// nothing to admit (queue empty or pool full or cap reached)
+    None,
+}
+
+impl Batcher {
+    pub fn new(batch_cap: usize) -> Batcher {
+        Batcher {
+            queue: VecDeque::new(),
+            slots: SlotPool::new(batch_cap),
+            active: (0..batch_cap).map(|_| None).collect(),
+            max_admissions_per_iter: batch_cap.max(1),
+            queue_peak: 0,
+        }
+    }
+
+    pub fn submit(&mut self, req: GenRequest) {
+        self.queue.push_back(req);
+        self.queue_peak = self.queue_peak.max(self.queue.len());
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.active.iter().filter(|a| a.is_some()).count()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty() && self.active_count() == 0
+    }
+
+    /// Try to admit the next queued request (FCFS).
+    pub fn next_admission(&mut self, admitted_this_iter: usize) -> Admission {
+        if admitted_this_iter >= self.max_admissions_per_iter {
+            return Admission::None;
+        }
+        if self.queue.is_empty() || self.slots.is_full() {
+            return Admission::None;
+        }
+        let req = self.queue.pop_front().unwrap();
+        let slot = self.slots.alloc(req.id).expect("pool not full");
+        Admission::Admit(req, slot)
+    }
+
+    /// Install an admitted sequence after its prefill completed.
+    pub fn activate(&mut self, seq: ActiveSeq) {
+        let idx = seq.slot.0;
+        assert!(self.active[idx].is_none(), "slot {idx} already active");
+        assert_eq!(self.slots.owner(seq.slot), Some(seq.req_id),
+                   "slot owner mismatch");
+        self.active[idx] = Some(seq);
+    }
+
+    /// Sequences currently decoding, in slot order.
+    pub fn active_seqs(&self) -> Vec<&ActiveSeq> {
+        self.active.iter().flatten().collect()
+    }
+
+    pub fn active_mut(&mut self, slot: SlotId) -> Option<&mut ActiveSeq> {
+        self.active[slot.0].as_mut()
+    }
+
+    /// Record one generated token for the sequence in `slot`; retires the
+    /// sequence (freeing the slot) when done. Returns (finished, token).
+    pub fn advance(&mut self, slot: SlotId, token: i32) -> bool {
+        let seq = self.active[slot.0].as_mut().expect("slot active");
+        seq.last_token = token;
+        seq.generated += 1;
+        let stop = seq.stop_token == Some(token);
+        let done = stop || seq.generated >= seq.max_new_tokens;
+        if done {
+            self.active[slot.0] = None;
+            self.slots.free(slot);
+        }
+        done
+    }
+
+    /// Abort a sequence (client disconnect / failure injection).
+    pub fn abort(&mut self, slot: SlotId) {
+        if self.active[slot.0].take().is_some() {
+            self.slots.free(slot);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, n: usize) -> GenRequest {
+        GenRequest { id, prompt: vec![1, 2, 3], max_new_tokens: n,
+                     sampling: Sampling::Greedy, stop_token: None }
+    }
+
+    fn admit_all(b: &mut Batcher) -> Vec<(u64, SlotId)> {
+        let mut out = Vec::new();
+        while let Admission::Admit(r, s) = b.next_admission(out.len()) {
+            let id = r.id;
+            b.activate(ActiveSeq { req_id: id, slot: s, last_token: 0,
+                                   generated: 0, max_new_tokens:
+                                   r.max_new_tokens, sampling: r.sampling,
+                                   stop_token: r.stop_token });
+            out.push((id, s));
+        }
+        out
+    }
+
+    #[test]
+    fn fcfs_admission_up_to_capacity() {
+        let mut b = Batcher::new(2);
+        for i in 0..4 {
+            b.submit(req(i, 5));
+        }
+        let adm = admit_all(&mut b);
+        assert_eq!(adm.len(), 2);
+        assert_eq!(adm[0].0, 0);
+        assert_eq!(adm[1].0, 1);
+        assert_eq!(b.queued(), 2);
+        assert_eq!(b.active_count(), 2);
+    }
+
+    #[test]
+    fn retire_frees_slot_for_next() {
+        let mut b = Batcher::new(1);
+        b.submit(req(1, 2));
+        b.submit(req(2, 1));
+        let adm = admit_all(&mut b);
+        let slot = adm[0].1;
+        assert!(!b.advance(slot, 9));  // 1/2
+        assert!(b.advance(slot, 9));   // 2/2 → retired
+        assert_eq!(b.active_count(), 0);
+        let adm2 = admit_all(&mut b);
+        assert_eq!(adm2.len(), 1);
+        assert_eq!(adm2[0].0, 2);
+    }
+
+    #[test]
+    fn stop_token_retires_early() {
+        let mut b = Batcher::new(1);
+        let mut r = req(1, 100);
+        r.stop_token = Some(7);
+        b.submit(r);
+        let adm = admit_all(&mut b);
+        assert!(!b.advance(adm[0].1, 3));
+        assert!(b.advance(adm[0].1, 7));
+    }
+
+    #[test]
+    fn admission_cap_bounds_prefill_burst() {
+        let mut b = Batcher::new(4);
+        b.max_admissions_per_iter = 2;
+        for i in 0..4 {
+            b.submit(req(i, 5));
+        }
+        let mut n = 0;
+        while let Admission::Admit(..) = b.next_admission(n) {
+            n += 1;
+        }
+        assert_eq!(n, 2);
+    }
+
+    #[test]
+    fn abort_frees() {
+        let mut b = Batcher::new(1);
+        b.submit(req(1, 10));
+        let adm = admit_all(&mut b);
+        b.abort(adm[0].1);
+        assert_eq!(b.active_count(), 0);
+        assert!(!b.slots.is_full());
+    }
+}

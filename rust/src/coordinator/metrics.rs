@@ -1,0 +1,135 @@
+//! Serving metrics: counters + latency histograms, lock-light.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::LogHistogram;
+
+#[derive(Default)]
+pub struct Metrics {
+    pub requests_submitted: AtomicU64,
+    pub requests_completed: AtomicU64,
+    pub requests_failed: AtomicU64,
+    pub requests_queued_peak: AtomicU64,
+    pub tokens_generated: AtomicU64,
+    pub prefill_tokens: AtomicU64,
+    pub decode_steps: AtomicU64,
+    pub batch_occupancy_sum: AtomicU64,
+    /// histograms guarded by one mutex (recorded off the hot loop)
+    hist: Mutex<Hists>,
+    started: Mutex<Option<Instant>>,
+}
+
+#[derive(Default)]
+struct Hists {
+    ttft: LogHistogram,       // time to first token
+    e2e: LogHistogram,        // request end-to-end latency
+    step: LogHistogram,       // engine decode-step wall time
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        let m = Metrics::default();
+        *m.started.lock().unwrap() = Some(Instant::now());
+        m
+    }
+
+    pub fn inc(counter: &AtomicU64, v: u64) {
+        counter.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn record_ttft(&self, secs: f64) {
+        self.hist.lock().unwrap().ttft.record(secs);
+    }
+    pub fn record_e2e(&self, secs: f64) {
+        self.hist.lock().unwrap().e2e.record(secs);
+    }
+    pub fn record_step(&self, secs: f64) {
+        self.hist.lock().unwrap().step.record(secs);
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let h = self.hist.lock().unwrap();
+        let elapsed = self.started.lock().unwrap()
+            .map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
+        let steps = self.decode_steps.load(Ordering::Relaxed);
+        Snapshot {
+            elapsed_s: elapsed,
+            submitted: self.requests_submitted.load(Ordering::Relaxed),
+            completed: self.requests_completed.load(Ordering::Relaxed),
+            failed: self.requests_failed.load(Ordering::Relaxed),
+            tokens_generated: self.tokens_generated.load(Ordering::Relaxed),
+            prefill_tokens: self.prefill_tokens.load(Ordering::Relaxed),
+            decode_steps: steps,
+            mean_batch_occupancy: if steps == 0 { 0.0 } else {
+                self.batch_occupancy_sum.load(Ordering::Relaxed) as f64
+                    / steps as f64
+            },
+            ttft_p50: h.ttft.quantile(0.5),
+            ttft_p99: h.ttft.quantile(0.99),
+            e2e_p50: h.e2e.quantile(0.5),
+            e2e_p99: h.e2e.quantile(0.99),
+            step_mean: h.step.mean(),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub elapsed_s: f64,
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub tokens_generated: u64,
+    pub prefill_tokens: u64,
+    pub decode_steps: u64,
+    pub mean_batch_occupancy: f64,
+    pub ttft_p50: f64,
+    pub ttft_p99: f64,
+    pub e2e_p50: f64,
+    pub e2e_p99: f64,
+    pub step_mean: f64,
+}
+
+impl Snapshot {
+    pub fn throughput_tps(&self) -> f64 {
+        if self.elapsed_s == 0.0 {
+            0.0
+        } else {
+            self.tokens_generated as f64 / self.elapsed_s
+        }
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "requests: {}/{} done ({} failed) | tokens: {} ({:.1} tok/s) | \
+             decode steps: {} (occupancy {:.2}) | ttft p50/p99: \
+             {:.1}/{:.1} ms | e2e p50/p99: {:.1}/{:.1} ms",
+            self.completed, self.submitted, self.failed,
+            self.tokens_generated, self.throughput_tps(),
+            self.decode_steps, self.mean_batch_occupancy,
+            self.ttft_p50 * 1e3, self.ttft_p99 * 1e3,
+            self.e2e_p50 * 1e3, self.e2e_p99 * 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_hists() {
+        let m = Metrics::new();
+        Metrics::inc(&m.tokens_generated, 10);
+        Metrics::inc(&m.decode_steps, 5);
+        Metrics::inc(&m.batch_occupancy_sum, 15);
+        m.record_ttft(0.010);
+        m.record_e2e(0.100);
+        let s = m.snapshot();
+        assert_eq!(s.tokens_generated, 10);
+        assert!((s.mean_batch_occupancy - 3.0).abs() < 1e-9);
+        assert!(s.ttft_p50 > 0.005 && s.ttft_p50 < 0.02);
+        assert!(!s.render().is_empty());
+    }
+}

@@ -1,0 +1,22 @@
+//! Layer-3 coordinator: the serving system around the O(1) cache.
+//!
+//! * `slots`   — fixed-size state-slot pool (vLLM block-manager analogue)
+//! * `batcher` — continuous batching at decode-step granularity
+//! * `engine`  — generation loop over the PJRT session
+//! * `router`  — least-loaded placement across engine replicas
+//! * `request` — request/response streaming types
+//! * `metrics` — counters + latency histograms
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod slots;
+
+pub use batcher::{ActiveSeq, Admission, Batcher};
+pub use engine::{Engine, EngineConfig, EngineHandle, SingleStream};
+pub use metrics::{Metrics, Snapshot};
+pub use request::{Event, GenRequest, ResponseStream, Sampling};
+pub use router::Router;
+pub use slots::{SlotId, SlotPool};

@@ -1,0 +1,116 @@
+//! Generation requests and streaming responses.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sampling {
+    /// Deterministic on-device argmax (the paper's inference protocol).
+    Greedy,
+    /// Host-side top-k sampling with a per-request seed.
+    TopK { k: usize, seed: u64 },
+}
+
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub sampling: Sampling,
+    /// stop generating if this token is produced
+    pub stop_token: Option<i32>,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Event {
+    /// incremental tokens (streaming)
+    Tokens(Vec<i32>),
+    /// request finished; total generated count
+    Done { n_generated: usize },
+    /// request failed
+    Error(String),
+}
+
+/// Per-request response stream + timing probes.
+pub struct ResponseStream {
+    pub rx: mpsc::Receiver<Event>,
+}
+
+pub struct ResponseSink {
+    pub id: u64,
+    pub tx: mpsc::Sender<Event>,
+    pub submitted_at: Instant,
+    pub first_token_at: Option<Instant>,
+    pub tokens_sent: usize,
+}
+
+impl ResponseSink {
+    pub fn send_tokens(&mut self, toks: &[i32]) {
+        if self.first_token_at.is_none() && !toks.is_empty() {
+            self.first_token_at = Some(Instant::now());
+        }
+        self.tokens_sent += toks.len();
+        let _ = self.tx.send(Event::Tokens(toks.to_vec()));
+    }
+
+    pub fn finish(&mut self) {
+        let _ = self.tx.send(Event::Done { n_generated: self.tokens_sent });
+    }
+
+    pub fn fail(&mut self, msg: &str) {
+        let _ = self.tx.send(Event::Error(msg.to_string()));
+    }
+}
+
+pub fn channel(id: u64) -> (ResponseSink, ResponseStream) {
+    let (tx, rx) = mpsc::channel();
+    (
+        ResponseSink { id, tx, submitted_at: Instant::now(),
+                       first_token_at: None, tokens_sent: 0 },
+        ResponseStream { rx },
+    )
+}
+
+impl ResponseStream {
+    /// Block until Done/Error; returns all tokens.
+    pub fn collect(self) -> Result<Vec<i32>, String> {
+        let mut out = Vec::new();
+        loop {
+            match self.rx.recv() {
+                Ok(Event::Tokens(t)) => out.extend(t),
+                Ok(Event::Done { .. }) => return Ok(out),
+                Ok(Event::Error(e)) => return Err(e),
+                Err(_) => return Err("engine dropped stream".into()),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_roundtrip() {
+        let (mut sink, stream) = channel(1);
+        sink.send_tokens(&[1, 2]);
+        sink.send_tokens(&[3]);
+        sink.finish();
+        assert_eq!(stream.collect().unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn stream_error() {
+        let (mut sink, stream) = channel(2);
+        sink.send_tokens(&[1]);
+        sink.fail("boom");
+        assert_eq!(stream.collect().unwrap_err(), "boom");
+    }
+
+    #[test]
+    fn dropped_sink_is_error() {
+        let (sink, stream) = channel(3);
+        drop(sink);
+        assert!(stream.collect().is_err());
+    }
+}

@@ -1,0 +1,71 @@
+//! Request router over engine replicas (least-loaded placement).
+//!
+//! Each replica is one `EngineHandle` with its own session + slot pool.
+//! Placement = fewest in-flight requests, ties broken round-robin — the
+//! same policy vllm-project/router defaults to for stateless workers.
+//! (SSM state never migrates: the O(1) cache lives and dies with the
+//! replica that admitted the request.)
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::engine::EngineHandle;
+use super::request::{ResponseStream, Sampling};
+
+pub struct Router {
+    replicas: Vec<Arc<EngineHandle>>,
+    rr: AtomicU64,
+}
+
+impl Router {
+    pub fn new(replicas: Vec<Arc<EngineHandle>>) -> Router {
+        assert!(!replicas.is_empty());
+        Router { replicas, rr: AtomicU64::new(0) }
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// In-flight load of replica i (submitted − completed − failed).
+    fn load(&self, i: usize) -> u64 {
+        let m = &self.replicas[i].metrics;
+        let s = m.requests_submitted.load(Ordering::Relaxed);
+        let c = m.requests_completed.load(Ordering::Relaxed);
+        let f = m.requests_failed.load(Ordering::Relaxed);
+        s.saturating_sub(c + f)
+    }
+
+    /// Least-loaded replica index (round-robin tiebreak).
+    pub fn pick(&self) -> usize {
+        let start = self.rr.fetch_add(1, Ordering::Relaxed) as usize
+            % self.replicas.len();
+        let mut best = start;
+        let mut best_load = self.load(start);
+        for k in 1..self.replicas.len() {
+            let i = (start + k) % self.replicas.len();
+            let l = self.load(i);
+            if l < best_load {
+                best = i;
+                best_load = l;
+            }
+        }
+        best
+    }
+
+    pub fn submit(&self, prompt: Vec<i32>, max_new_tokens: usize,
+                  sampling: Sampling) -> ResponseStream {
+        let i = self.pick();
+        self.replicas[i].submit(prompt, max_new_tokens, sampling)
+    }
+
+    pub fn replica(&self, i: usize) -> &Arc<EngineHandle> {
+        &self.replicas[i]
+    }
+
+    pub fn total_completed(&self) -> u64 {
+        self.replicas.iter()
+            .map(|r| r.metrics.requests_completed.load(Ordering::Relaxed))
+            .sum()
+    }
+}

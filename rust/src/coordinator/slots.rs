@@ -1,0 +1,124 @@
+//! State-slot pool — the O(1)-cache analogue of vLLM's KV block manager.
+//!
+//! Because the Mamba-2 cache is a *fixed-size* state per sequence (paper
+//! §3.4), admission control degenerates from paged block accounting to a
+//! fixed pool of identical slots: one slot per concurrently-decoding
+//! sequence, zero fragmentation, O(1) alloc/free. This is the concrete
+//! payoff of the paper's "cache primitive is compatible with such
+//! schedulers" remark (§6 Inference batch policies) — this module plus
+//! `batcher.rs` is that scheduler.
+
+use std::collections::VecDeque;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SlotId(pub usize);
+
+#[derive(Debug)]
+pub struct SlotPool {
+    capacity: usize,
+    free: VecDeque<usize>,
+    /// request id occupying each slot (None = free)
+    owners: Vec<Option<u64>>,
+    /// lifetime counters
+    pub total_allocs: u64,
+    pub total_frees: u64,
+    pub peak_used: usize,
+}
+
+impl SlotPool {
+    pub fn new(capacity: usize) -> SlotPool {
+        SlotPool {
+            capacity,
+            free: (0..capacity).collect(),
+            owners: vec![None; capacity],
+            total_allocs: 0,
+            total_frees: 0,
+            peak_used: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn used(&self) -> usize {
+        self.capacity - self.free.len()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.free.is_empty()
+    }
+
+    /// O(1) allocation; returns None when the pool is exhausted
+    /// (the batcher then queues the request).
+    pub fn alloc(&mut self, owner: u64) -> Option<SlotId> {
+        let idx = self.free.pop_front()?;
+        debug_assert!(self.owners[idx].is_none());
+        self.owners[idx] = Some(owner);
+        self.total_allocs += 1;
+        self.peak_used = self.peak_used.max(self.used());
+        Some(SlotId(idx))
+    }
+
+    /// O(1) free. Panics on double-free — that's a coordinator bug.
+    pub fn free(&mut self, slot: SlotId) {
+        assert!(slot.0 < self.capacity, "slot out of range");
+        assert!(self.owners[slot.0].is_some(), "double free of {slot:?}");
+        self.owners[slot.0] = None;
+        self.free.push_back(slot.0);
+        self.total_frees += 1;
+    }
+
+    pub fn owner(&self, slot: SlotId) -> Option<u64> {
+        self.owners.get(slot.0).copied().flatten()
+    }
+
+    pub fn occupied(&self) -> Vec<(SlotId, u64)> {
+        self.owners
+            .iter()
+            .enumerate()
+            .filter_map(|(i, o)| o.map(|r| (SlotId(i), r)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_cycle() {
+        let mut p = SlotPool::new(2);
+        let a = p.alloc(1).unwrap();
+        let b = p.alloc(2).unwrap();
+        assert_ne!(a, b);
+        assert!(p.alloc(3).is_none());
+        assert!(p.is_full());
+        p.free(a);
+        let c = p.alloc(3).unwrap();
+        assert_eq!(c, a); // reuse
+        assert_eq!(p.owner(c), Some(3));
+        assert_eq!(p.used(), 2);
+        assert_eq!(p.peak_used, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut p = SlotPool::new(1);
+        let a = p.alloc(1).unwrap();
+        p.free(a);
+        p.free(a);
+    }
+
+    #[test]
+    fn occupied_listing() {
+        let mut p = SlotPool::new(3);
+        let a = p.alloc(10).unwrap();
+        let _b = p.alloc(20).unwrap();
+        p.free(a);
+        let occ = p.occupied();
+        assert_eq!(occ.len(), 1);
+        assert_eq!(occ[0].1, 20);
+    }
+}

@@ -1,0 +1,129 @@
+//! Evaluation corpus: a bundled public-domain-style text plus a
+//! deterministic synthetic generator (Markov babble) for volume.
+//!
+//! Stands in for the WikiText-103 validation split (DESIGN.md §4): the
+//! perplexity exhibits measure *implementation agreement*, not language
+//! quality, so any fixed text with natural statistics serves.
+
+use crate::util::prng::Rng;
+
+/// ~4 KB of hand-written encyclopedic prose in WikiText register.
+pub const BUNDLED: &str = concat!(
+    "= State space models =\n\n",
+    "A state space model describes the evolution of a system through a ",
+    "latent state vector that is updated at every time step . The update ",
+    "combines the previous state with the current input , and the output ",
+    "is read from the state through a projection . Linear time invariant ",
+    "forms of the model admit a convolutional view , in which the output ",
+    "is the input convolved with an impulse response determined by the ",
+    "state matrices . Selective forms make the update depend on the input ",
+    "itself , which lets the model retain or discard information over ",
+    "long horizons .\n\n",
+    "= = Discretisation = = \n\n",
+    "Continuous formulations are discretised before use on digital ",
+    "hardware . The zero order hold rule replaces the matrix exponential ",
+    "with a scalar exponential when the state matrix is diagonal , and ",
+    "the resulting recurrence unrolls across fixed windows of the ",
+    "sequence . Larger windows raise the arithmetic intensity of the ",
+    "computation , while smaller windows shift the balance toward ",
+    "sequential overhead between windows .\n\n",
+    "= = Hardware mapping = = \n\n",
+    "Modern accelerators expose matrix units that favour large contiguous ",
+    "operands . A computation expressed as batched contractions over ",
+    "static shapes can be tiled onto these units by a compiler , and the ",
+    "surrounding element wise operations fuse into the same region of the ",
+    "program . Data dependent control flow breaks this fusion and forces ",
+    "round trips between the host and the device , which dominates the ",
+    "cost of short operations .\n\n",
+    "= = Caching = = \n\n",
+    "Autoregressive generation reuses the state computed for the prefix ",
+    "of the sequence . Because the state has a fixed size , the memory ",
+    "held by the cache does not grow with the length of the prefix , and ",
+    "each generation step reads and writes the same number of bytes . ",
+    "Attention based models instead keep a record of every previous ",
+    "position , so their cache grows linearly and the cost of a step ",
+    "grows with the sequence .\n\n",
+    "= = Evaluation = = \n\n",
+    "Perplexity over held out text measures the quality of a language ",
+    "model , and agreement between two implementations of the same model ",
+    "is measured by the difference of their perplexities under matched ",
+    "conditions . Differences at the scale of floating point rounding ",
+    "indicate functional equivalence , while larger differences point to ",
+    "a divergence in the computation itself .\n",
+);
+
+/// Deterministic word-level Markov generator seeded from the bundled text.
+pub struct SyntheticCorpus {
+    rng: Rng,
+    words: Vec<String>,
+    chain: std::collections::HashMap<String, Vec<String>>,
+}
+
+impl SyntheticCorpus {
+    pub fn new(seed: u64) -> SyntheticCorpus {
+        let words: Vec<String> =
+            BUNDLED.split_whitespace().map(String::from).collect();
+        let mut chain: std::collections::HashMap<String, Vec<String>> =
+            std::collections::HashMap::new();
+        for w in words.windows(2) {
+            chain.entry(w[0].clone()).or_default().push(w[1].clone());
+        }
+        SyntheticCorpus { rng: Rng::new(seed), words, chain }
+    }
+
+    /// Generate ~n_words of Markov text.
+    pub fn generate(&mut self, n_words: usize) -> String {
+        let mut cur = self.rng.choose(&self.words).clone();
+        let mut out = Vec::with_capacity(n_words);
+        out.push(cur.clone());
+        for _ in 1..n_words {
+            let next = match self.chain.get(&cur) {
+                Some(cands) if !cands.is_empty() =>
+                    self.rng.choose(cands).clone(),
+                _ => self.rng.choose(&self.words).clone(),
+            };
+            out.push(next.clone());
+            cur = next;
+        }
+        out.join(" ")
+    }
+}
+
+/// The full evaluation text: bundled prose + `extra_words` of synthetic
+/// continuation (seeded, so every run sees identical data).
+pub fn eval_text(extra_words: usize) -> String {
+    let mut s = String::from(BUNDLED);
+    if extra_words > 0 {
+        let mut syn = SyntheticCorpus::new(0x57A7E);
+        s.push(' ');
+        s.push_str(&syn.generate(extra_words));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bundled_is_nontrivial() {
+        assert!(BUNDLED.len() > 2000);
+        assert!(BUNDLED.contains("state space"));
+    }
+
+    #[test]
+    fn synthetic_deterministic() {
+        let a = SyntheticCorpus::new(1).generate(100);
+        let b = SyntheticCorpus::new(1).generate(100);
+        assert_eq!(a, b);
+        let c = SyntheticCorpus::new(2).generate(100);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn eval_text_scales() {
+        let t0 = eval_text(0);
+        let t1 = eval_text(500);
+        assert!(t1.len() > t0.len() + 1000);
+    }
+}

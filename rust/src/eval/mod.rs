@@ -1,0 +1,8 @@
+//! Evaluation substrates: tokenizer, corpus, perplexity.
+
+pub mod corpus;
+pub mod perplexity;
+pub mod tokenizer;
+
+pub use perplexity::{cached_perplexity, strided_perplexity, PplResult};
+pub use tokenizer::Tokenizer;

@@ -1,0 +1,162 @@
+//! Strided perplexity evaluation (paper §4.6 protocol).
+//!
+//! WikiText-103 protocol at paper scale: stride 512 over the validation
+//! split. Here the window/stride scale with the sim configs' forward
+//! buckets; the measured quantity — |PPL_a − PPL_b| between two
+//! implementations of the same model under matched conditions — is
+//! identical in structure to Table 5.
+
+use anyhow::Result;
+
+use crate::runtime::ModelSession;
+use crate::tensor::Tensor;
+
+/// Sum of log-probs of `tokens[i+1]` under logits at position i, for
+/// positions [from, to). logits: (1, T, V).
+fn window_nll(logits: &Tensor, tokens: &[i32], from: usize, to: usize)
+    -> (f64, usize) {
+    let v = *logits.dims.last().unwrap() as usize;
+    let vals = logits.as_f32();
+    let mut nll = 0.0f64;
+    let mut count = 0;
+    for pos in from..to {
+        if pos + 1 >= tokens.len() {
+            break;
+        }
+        let row = &vals[pos * v..(pos + 1) * v];
+        // log-softmax in f64 for a stable reduction
+        let m = row.iter().copied().fold(f32::MIN, f32::max) as f64;
+        let z: f64 = row.iter().map(|&x| ((x as f64) - m).exp()).sum();
+        let target = tokens[pos + 1] as usize;
+        let logp = (row[target] as f64 - m) - z.ln();
+        nll -= logp;
+        count += 1;
+    }
+    (nll, count)
+}
+
+pub struct PplResult {
+    pub ppl: f64,
+    pub nll: f64,
+    pub n_tokens: usize,
+    pub n_windows: usize,
+}
+
+/// Strided evaluation: slide a window of `window` tokens by `stride`,
+/// scoring only the last `stride` positions of each window (so every token
+/// is scored once with at least `window - stride` tokens of context).
+pub fn strided_perplexity(
+    session: &ModelSession,
+    tokens: &[i32],
+    window: usize,
+    stride: usize,
+) -> Result<PplResult> {
+    assert!(stride <= window && stride > 0);
+    // AOT shapes: forward_full exists only at bucket lengths, so every
+    // window must be exactly `window` long. If the text is shorter than
+    // one window, score the largest bucket that fits.
+    let mut tokens = tokens;
+    if tokens.len() < window {
+        let buckets = &session.rt.manifest.forward_buckets;
+        let b = crate::runtime::Manifest::pick_bucket(buckets, tokens.len())
+            .unwrap_or(tokens.len());
+        tokens = &tokens[..b.min(tokens.len())];
+        let logits = session.forward_full(tokens)?;
+        let (nll, count) = window_nll(&logits, tokens, 0, tokens.len());
+        return Ok(PplResult { ppl: (nll / count.max(1) as f64).exp(), nll,
+                              n_tokens: count, n_windows: 1 });
+    }
+    let mut nll = 0.0;
+    let mut count = 0usize;
+    let mut n_windows = 0usize;
+    let mut start = 0usize;
+    let mut scored_to = 0usize; // absolute index of first unscored position
+    loop {
+        // the final window ends exactly at len (shifted back if needed so
+        // its length stays a valid bucket)
+        let start_eff = start.min(tokens.len() - window);
+        let w = &tokens[start_eff..start_eff + window];
+        let logits = session.forward_full(w)?;
+        let score_from = scored_to - start_eff;
+        let (wn, wc) = window_nll(&logits, w, score_from, w.len());
+        nll += wn;
+        count += wc;
+        n_windows += 1;
+        scored_to = start_eff + window;
+        if start_eff + window >= tokens.len() {
+            break;
+        }
+        start = start_eff + stride;
+    }
+    Ok(PplResult {
+        ppl: (nll / count.max(1) as f64).exp(),
+        nll,
+        n_tokens: count,
+        n_windows,
+    })
+}
+
+/// Perplexity via the cached decode path: prefill a context bucket, then
+/// score the remaining tokens through decode_step. Structurally the paper's
+/// "JAX implementation" column vs `strided_perplexity` on the non-cached
+/// path as the reference column.
+pub fn cached_perplexity(
+    session: &ModelSession,
+    tokens: &[i32],
+    prefill_bucket: usize,
+) -> Result<PplResult> {
+    assert!(tokens.len() > prefill_bucket);
+    let pre = session.prefill(&tokens[..prefill_bucket], 1)?;
+    let (mut nll, mut count) =
+        window_nll(&pre.logits, tokens, 0, prefill_bucket);
+    let mut cache = pre.cache;
+    for pos in prefill_bucket..tokens.len() - 1 {
+        let step = session.decode_step(&cache, &tokens[pos..=pos])?;
+        cache = step.cache;
+        let row = step.logits.as_f32();
+        let m = row.iter().copied().fold(f32::MIN, f32::max) as f64;
+        let z: f64 = row.iter().map(|&x| ((x as f64) - m).exp()).sum();
+        let logp = (row[tokens[pos + 1] as usize] as f64 - m) - z.ln();
+        nll -= logp;
+        count += 1;
+    }
+    Ok(PplResult {
+        ppl: (nll / count.max(1) as f64).exp(),
+        nll,
+        n_tokens: count,
+        n_windows: 1,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_nll_uniform_logits() {
+        // uniform logits → nll per token = ln(V)
+        let v = 8;
+        let t = 5;
+        let logits = Tensor::f32("l", &[1, t, v], &vec![0.0; (t * v) as usize]);
+        let tokens: Vec<i32> = (0..t as i32).collect();
+        let (nll, count) = window_nll(&logits, &tokens, 0, t as usize);
+        assert_eq!(count, (t - 1) as usize);
+        let per = nll / count as f64;
+        assert!((per - (v as f64).ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn window_nll_peaked_logits() {
+        // logits that put all mass on the true next token → nll ≈ 0
+        let v = 4usize;
+        let tokens = vec![0i32, 1, 2, 3];
+        let mut vals = vec![-100.0f32; 4 * v];
+        for pos in 0..3 {
+            vals[pos * v + tokens[pos + 1] as usize] = 100.0;
+        }
+        let logits = Tensor::f32("l", &[1, 4, v as i64], &vals);
+        let (nll, count) = window_nll(&logits, &tokens, 0, 4);
+        assert_eq!(count, 3);
+        assert!(nll.abs() < 1e-6);
+    }
+}

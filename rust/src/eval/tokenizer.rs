@@ -1,0 +1,194 @@
+//! Byte-fallback BPE tokenizer (vocab 512 = 256 bytes + 256 learned merges).
+//!
+//! Stands in for the GPT-NeoX tokenizer the HuggingFace checkpoints use
+//! (DESIGN.md §4): every byte is a base token so encode∘decode is exact on
+//! arbitrary input, and 256 merges learned from the bundled corpus compress
+//! common English bigraphs. Train/encode/decode are all deterministic.
+
+use std::collections::HashMap;
+
+pub const BYTE_VOCAB: usize = 256;
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    /// merges[i] = (left, right) producing token BYTE_VOCAB + i
+    pub merges: Vec<(i32, i32)>,
+    /// rank lookup for encode
+    ranks: HashMap<(i32, i32), usize>,
+}
+
+impl Tokenizer {
+    /// Byte-level tokenizer with no merges (vocab = 256).
+    pub fn bytes_only() -> Tokenizer {
+        Tokenizer { merges: Vec::new(), ranks: HashMap::new() }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        BYTE_VOCAB + self.merges.len()
+    }
+
+    /// Learn `n_merges` BPE merges from `corpus` (greedy most-frequent-pair).
+    pub fn train(corpus: &str, n_merges: usize) -> Tokenizer {
+        let mut toks: Vec<i32> =
+            corpus.bytes().map(|b| b as i32).collect();
+        let mut merges = Vec::with_capacity(n_merges);
+        for m in 0..n_merges {
+            let mut counts: HashMap<(i32, i32), usize> = HashMap::new();
+            for w in toks.windows(2) {
+                *counts.entry((w[0], w[1])).or_insert(0) += 1;
+            }
+            // deterministic tie-break: highest count, then smallest pair
+            let best = counts.into_iter()
+                .max_by_key(|&((a, b), c)| (c, std::cmp::Reverse((a, b))));
+            let Some(((a, b), c)) = best else { break };
+            if c < 2 {
+                break;
+            }
+            let new_id = (BYTE_VOCAB + m) as i32;
+            merges.push((a, b));
+            toks = merge_pass(&toks, (a, b), new_id);
+        }
+        let ranks = merges.iter().enumerate()
+            .map(|(i, &p)| (p, i)).collect();
+        Tokenizer { merges, ranks }
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut toks: Vec<i32> = text.bytes().map(|b| b as i32).collect();
+        if self.merges.is_empty() || toks.len() < 2 {
+            return toks;
+        }
+        // standard BPE: repeatedly apply the lowest-rank applicable merge
+        loop {
+            let mut best: Option<(usize, usize)> = None; // (rank, pos)
+            for (i, w) in toks.windows(2).enumerate() {
+                if let Some(&r) = self.ranks.get(&(w[0], w[1])) {
+                    if best.map_or(true, |(br, _)| r < br) {
+                        best = Some((r, i));
+                    }
+                }
+            }
+            let Some((rank, _)) = best else { break };
+            let pair = self.merges[rank];
+            toks = merge_pass(&toks, pair, (BYTE_VOCAB + rank) as i32);
+        }
+        toks
+    }
+
+    pub fn decode(&self, tokens: &[i32]) -> String {
+        let mut bytes = Vec::with_capacity(tokens.len() * 2);
+        for &t in tokens {
+            self.expand(t, &mut bytes);
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    fn expand(&self, t: i32, out: &mut Vec<u8>) {
+        if (0..BYTE_VOCAB as i32).contains(&t) {
+            out.push(t as u8);
+        } else {
+            let idx = t as usize - BYTE_VOCAB;
+            if idx < self.merges.len() {
+                let (a, b) = self.merges[idx];
+                self.expand(a, out);
+                self.expand(b, out);
+            }
+            // unknown ids (model can emit any of vocab) decode to nothing
+        }
+    }
+
+    // ------------------------------------------------------ store -----
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        let mut s = String::new();
+        for (a, b) in &self.merges {
+            s.push_str(&format!("{a} {b}\n"));
+        }
+        Ok(std::fs::write(path, s)?)
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Tokenizer> {
+        let text = std::fs::read_to_string(path)?;
+        let mut merges = Vec::new();
+        for line in text.lines() {
+            let mut it = line.split_whitespace();
+            let a: i32 = it.next().unwrap_or("0").parse()?;
+            let b: i32 = it.next().unwrap_or("0").parse()?;
+            merges.push((a, b));
+        }
+        let ranks = merges.iter().enumerate()
+            .map(|(i, &p)| (p, i)).collect();
+        Ok(Tokenizer { merges, ranks })
+    }
+}
+
+fn merge_pass(toks: &[i32], pair: (i32, i32), new_id: i32) -> Vec<i32> {
+    let mut out = Vec::with_capacity(toks.len());
+    let mut i = 0;
+    while i < toks.len() {
+        if i + 1 < toks.len() && (toks[i], toks[i + 1]) == pair {
+            out.push(new_id);
+            i += 2;
+        } else {
+            out.push(toks[i]);
+            i += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_only_roundtrip() {
+        let t = Tokenizer::bytes_only();
+        let s = "hello, wörld! 🙂";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn trained_roundtrip_and_compresses() {
+        let corpus = "the cat sat on the mat. the cat sat on the hat. \
+                      the dog sat on the log."
+            .repeat(20);
+        let t = Tokenizer::train(&corpus, 50);
+        assert!(!t.merges.is_empty());
+        let s = "the cat sat on the log.";
+        let enc = t.encode(s);
+        assert!(enc.len() < s.len(), "{} !< {}", enc.len(), s.len());
+        assert_eq!(t.decode(&enc), s);
+    }
+
+    #[test]
+    fn roundtrip_on_unseen_bytes() {
+        let t = Tokenizer::train(&"abc ".repeat(50), 10);
+        let s = "ZZZ\u{00}\u{ff}";
+        let enc = t.encode(s.into());
+        assert_eq!(t.decode(&enc), s);
+    }
+
+    #[test]
+    fn save_load(){
+        let dir = std::env::temp_dir().join("tok_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("merges.txt");
+        let t = Tokenizer::train(&"hello world ".repeat(30), 20);
+        t.save(&p).unwrap();
+        let t2 = Tokenizer::load(&p).unwrap();
+        assert_eq!(t.merges, t2.merges);
+        assert_eq!(t.encode("hello world"), t2.encode("hello world"));
+    }
+
+    #[test]
+    fn decode_ignores_out_of_range() {
+        let t = Tokenizer::bytes_only();
+        assert_eq!(t.decode(&[104, 105, 400]), "hi");
+    }
+
+    #[test]
+    fn encode_deterministic() {
+        let t = Tokenizer::train(&"abab ".repeat(40), 8);
+        assert_eq!(t.encode("ababab"), t.encode("ababab"));
+    }
+}

@@ -1,0 +1,26 @@
+//! mamba2-serve — compiler-first Mamba-2 (SSD) inference with portable
+//! O(1) autoregressive caching.
+//!
+//! Three-layer architecture (DESIGN.md):
+//!   L1/L2 (python, build-time only): Pallas SSD kernels + JAX model,
+//!     AOT-lowered to HLO text artifacts by `make artifacts`.
+//!   L3 (this crate): PJRT runtime loading those artifacts + the serving
+//!     coordinator (continuous batching over O(1) state slots).
+
+pub mod bench_support;
+pub mod coordinator;
+pub mod eval;
+pub mod perf;
+pub mod runtime;
+pub mod server;
+pub mod tensor;
+pub mod util;
+
+/// Default artifacts directory (overridable with --artifacts / M2_ARTIFACTS).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("M2_ARTIFACTS") {
+        return p.into();
+    }
+    // crate root/artifacts
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

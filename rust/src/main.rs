@@ -1,0 +1,67 @@
+//! mamba2-serve: the serving binary.
+//!
+//!   mamba2-serve --model sim-130m --addr 127.0.0.1:7433 --replicas 1
+//!
+//! Loads AOT artifacts, starts engine replicas under the router, and serves
+//! the line-JSON protocol (see server/mod.rs).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use mamba2_serve::coordinator::{Engine, EngineConfig, Router};
+use mamba2_serve::eval::corpus;
+use mamba2_serve::eval::Tokenizer;
+use mamba2_serve::runtime::{ModelSession, Runtime};
+use mamba2_serve::server::Server;
+use mamba2_serve::util::cli::Cli;
+use mamba2_serve::{artifacts_dir, log_info};
+
+fn main() -> Result<()> {
+    mamba2_serve::util::logging::init();
+    let cli = Cli::new("mamba2-serve",
+                       "compiler-first Mamba-2 serving coordinator")
+        .opt("model", "sim-130m", "model config (see manifest)")
+        .opt("addr", "127.0.0.1:7433", "listen address")
+        .opt("replicas", "1", "engine replicas")
+        .opt("batch-cap", "4", "continuous-batching slots per replica")
+        .opt("threads", "8", "server worker threads")
+        .opt("artifacts", "", "artifacts dir (default: repo artifacts/)")
+        .opt("weights", "", "optional trained checkpoint (.mbt)")
+        .parse_env();
+
+    let dir = if cli.get("artifacts").is_empty() {
+        artifacts_dir()
+    } else {
+        cli.get("artifacts").into()
+    };
+    let rt = Runtime::new(&dir)?;
+    log_info!("platform={} artifacts={}", rt.platform(), dir.display());
+    rt.manifest.validate()?;
+
+    let model = cli.get("model");
+    let mut replicas = Vec::new();
+    for i in 0..cli.get_usize("replicas") {
+        let mut session = ModelSession::new(Arc::clone(&rt), &model)?;
+        if !cli.get("weights").is_empty() {
+            let w = mamba2_serve::tensor::load_mbt(
+                std::path::Path::new(&cli.get("weights")))?;
+            session.load_weights(w)?;
+            log_info!("replica {i}: loaded weights {}", cli.get("weights"));
+        }
+        let cfg = EngineConfig {
+            batch_cap: cli.get_usize("batch-cap"),
+            ..Default::default()
+        };
+        replicas.push(Arc::new(Engine::start(session, cfg)?));
+        log_info!("replica {i}: engine started (batch_cap={})",
+                  cli.get_usize("batch-cap"));
+    }
+    let router = Arc::new(Router::new(replicas));
+    let tokenizer = Arc::new(Tokenizer::train(corpus::BUNDLED, 256));
+    log_info!("tokenizer: vocab {}", tokenizer.vocab_size());
+
+    let server = Server::new(router, tokenizer);
+    server.serve(&cli.get("addr"), cli.get_usize("threads"), |a| {
+        log_info!("serving {model} on {a}");
+    })
+}

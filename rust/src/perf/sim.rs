@@ -1,0 +1,275 @@
+//! Hardware projection: replay an executable's XLA cost stream under a
+//! target roofline to estimate its wall-clock on hardware we don't have.
+//!
+//! The projection scales paper-shape configs from sim-shape costs: the
+//! manifest carries (FLOPs, bytes) for the sim-scale executable, and the
+//! analytic model below recomputes both for the corresponding paper-scale
+//! config, then divides by the target roofline. Decode-loop programs add
+//! one launch overhead per *program*, host-driven loops one per *step* —
+//! which is exactly the mechanism behind the paper's Table 1 scan-vs-host
+//! gap.
+
+use crate::runtime::ConfigInfo;
+
+use super::roofline::Roofline;
+
+#[derive(Debug, Clone)]
+pub struct Projection {
+    pub seconds: f64,
+    pub flops: f64,
+    pub bytes: f64,
+    pub mfu: f64,
+    pub hbu: f64,
+}
+
+/// Analytic FLOP count for one decode step of a config (per sequence).
+/// Dominated by the dense projections; einsum terms follow Alg. 2.
+pub fn decode_step_flops(c: &ConfigInfo) -> f64 {
+    let d = c.d_model as f64;
+    let di = c.d_inner as f64;
+    let h = c.nheads as f64;
+    let n = c.d_state as f64;
+    let p = c.headdim as f64;
+    let ch = c.d_conv_ch as f64;
+    let k = c.d_conv as f64;
+    let v = c.vocab_size as f64;
+    let per_layer = 2.0 * d * (2.0 * di + 2.0 * h * n + h)  // in_proj
+        + 2.0 * ch * k                                       // conv step
+        + 3.0 * h * p * n * 2.0                              // SSM update+read
+        + 2.0 * di * d                                       // out_proj
+        + 6.0 * di;                                          // norms/gates
+    c.n_layer as f64 * per_layer + 2.0 * d * v               // lm head
+}
+
+/// Analytic bytes accessed for one decode step: weights once + O(1) cache
+/// read/write + activations (f32 on sim configs, bf16 on paper configs
+/// would halve this; we keep f32 to match the artifacts).
+pub fn decode_step_bytes(c: &ConfigInfo, dtype_bytes: f64) -> f64 {
+    let weights = c.n_params_total as f64 * dtype_bytes;
+    let cache = c.cache_bytes_per_seq() as f64 * 2.0; // read + write
+    let acts = (c.d_model + c.d_inner * 2 + c.vocab_size) as f64
+        * dtype_bytes * 4.0;
+    weights + cache + acts
+}
+
+/// Analytic FLOPs for chunked prefill of `t` tokens (paper Alg. 1).
+pub fn prefill_flops(c: &ConfigInfo, t: usize) -> f64 {
+    let tf = t as f64;
+    let d = c.d_model as f64;
+    let di = c.d_inner as f64;
+    let h = c.nheads as f64;
+    let n = c.d_state as f64;
+    let p = c.headdim as f64;
+    let l = c.chunk_size as f64;
+    let v = c.vocab_size as f64;
+    let nc = tf / l;
+    let per_layer = 2.0 * tf * d * (2.0 * di + 2.0 * h * n + h) // in_proj
+        + 2.0 * tf * c.d_conv_ch as f64 * c.d_conv as f64      // conv
+        + nc * h * (2.0 * l * l * n + 2.0 * l * l * p)         // intra-chunk
+        + nc * h * 2.0 * l * p * n * 2.0                       // states+cross
+        + 2.0 * tf * di * d;                                   // out_proj
+    c.n_layer as f64 * per_layer + 2.0 * tf * d * v
+}
+
+pub fn prefill_bytes(c: &ConfigInfo, t: usize, dtype_bytes: f64) -> f64 {
+    // B_XLA is an UNFUSED byte count (paper §4.1): every intermediate of
+    // the softplus/exp/mask/einsum chain is counted as HBM traffic. The
+    // factor ~4 reflects the intermediates each fused region materializes
+    // in that accounting (calibrated against the paper's batch-1 MFU
+    // being bandwidth-limited at 6–15%).
+    const UNFUSED: f64 = 4.0;
+    let weights = c.n_params_total as f64 * dtype_bytes;
+    let acts = t as f64
+        * (c.d_model as f64 * 6.0
+           + c.d_inner as f64 * 6.0
+           + (c.nheads * c.d_state) as f64 * 4.0)
+        * dtype_bytes
+        * c.n_layer as f64
+        * UNFUSED;
+    let decay = (t / c.chunk_size).max(1) as f64
+        * (c.chunk_size * c.chunk_size) as f64
+        * c.nheads as f64 * 4.0 * c.n_layer as f64 * UNFUSED;
+    weights + acts + decay + t as f64 * c.vocab_size as f64 * dtype_bytes
+}
+
+/// Project a chunked prefill on `target`, including the O(N_c) serial
+/// inter-chunk scan dispatch that reduces measured MFU at long prompts
+/// (paper §4.4: "beyond 4096 tokens the sequential inter-chunk scan adds
+/// O(N_c) serial dispatch overhead").
+pub fn project_prefill(c: &ConfigInfo, t: usize, target: &Roofline,
+                       dtype_bytes: f64) -> Projection {
+    let f = prefill_flops(c, t);
+    let b = prefill_bytes(c, t, dtype_bytes);
+    let nc = (t / c.chunk_size).max(1) as f64;
+    let scan_overhead =
+        nc * c.n_layer as f64 * 6.0 * target.per_op_dispatch_s;
+    let seconds = target.time_for(f, b) + scan_overhead;
+    Projection {
+        seconds,
+        flops: f,
+        bytes: b,
+        mfu: (f / seconds) / (target.peak_tflops * 1e12),
+        hbu: (b / seconds) / (target.peak_gbps * 1e9),
+    }
+}
+
+/// Project one decode step on `target` (per sequence, batch 1).
+pub fn project_time(flops: f64, bytes: f64, target: &Roofline)
+    -> Projection {
+    let seconds = target.time_for(flops, bytes);
+    Projection {
+        seconds,
+        flops,
+        bytes,
+        mfu: (flops / seconds) / (target.peak_tflops * 1e12),
+        hbu: (bytes / seconds) / (target.peak_gbps * 1e9),
+    }
+}
+
+/// Project a whole decode strategy for `g` generated tokens.
+pub enum Strategy {
+    /// compiled on-device loop: one launch, g steps back-to-back
+    CachedScan,
+    /// host-driven: one launch + host sync per step
+    CachedHost,
+    /// recompute the full prefix every step
+    NonCached { prompt: usize },
+}
+
+pub fn project_decode(c: &ConfigInfo, g: usize, strategy: Strategy,
+                      target: &Roofline, dtype_bytes: f64) -> Projection {
+    let sf = decode_step_flops(c);
+    let sb = decode_step_bytes(c, dtype_bytes);
+    match strategy {
+        Strategy::CachedScan => {
+            // inside the compiled loop each layer dispatches ~8 fused
+            // regions; at small scale these dispatch bubbles, not
+            // flops/bytes, set the floor (L40S 130M: ~3 ms/step of launches)
+            let dispatch = c.n_layer as f64 * 8.0 * target.per_op_dispatch_s;
+            let step = target.time_for(sf, sb) - target.launch_overhead_s
+                + dispatch;
+            let total = step * g as f64 + target.launch_overhead_s;
+            Projection {
+                seconds: total,
+                flops: sf * g as f64,
+                bytes: sb * g as f64,
+                mfu: (sf * g as f64 / total) / (target.peak_tflops * 1e12),
+                hbu: (sb * g as f64 / total) / (target.peak_gbps * 1e9),
+            }
+        }
+        Strategy::CachedHost => {
+            // host dispatch pipelines against device compute: per-step time
+            // is max(step, host_dispatch), so the penalty dissolves once
+            // per-step compute dominates (paper Table 1 at ≥780M)
+            let dispatch = c.n_layer as f64 * 8.0 * target.per_op_dispatch_s;
+            let step = target.time_for(sf, sb) + dispatch;
+            let per = step.max(target.host_dispatch_s);
+            let total = per * g as f64;
+            Projection {
+                seconds: total,
+                flops: sf * g as f64,
+                bytes: sb * g as f64,
+                mfu: (sf * g as f64 / total) / (target.peak_tflops * 1e12),
+                hbu: (sb * g as f64 / total) / (target.peak_gbps * 1e9),
+            }
+        }
+        Strategy::NonCached { prompt } => {
+            let mut total = 0.0;
+            let mut flops = 0.0;
+            let mut bytes = 0.0;
+            for i in 0..g {
+                let t = prompt + i + 1;
+                // round up to the chunk grid like the real bucketed path
+                let t = t.next_power_of_two().max(c.chunk_size);
+                let f = prefill_flops(c, t);
+                let b = prefill_bytes(c, t, dtype_bytes);
+                total += target.time_for(f, b);
+                flops += f;
+                bytes += b;
+            }
+            Projection {
+                seconds: total,
+                flops,
+                bytes,
+                mfu: (flops / total) / (target.peak_tflops * 1e12),
+                hbu: (bytes / total) / (target.peak_gbps * 1e9),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perf::roofline::TPU_V6E;
+
+    fn paper_cfg(d_model: usize, n_layer: usize) -> ConfigInfo {
+        let d_inner = 2 * d_model;
+        let nheads = d_inner / 64;
+        let d_conv_ch = d_inner + 2 * nheads * 128;
+        let n_params = (d_model * (2 * d_inner + 2 * nheads * 128 + nheads)
+            + d_inner * d_model) * n_layer
+            + 50288 * d_model;
+        ConfigInfo {
+            name: "p".into(), d_model, n_layer, vocab_size: 50288,
+            d_state: 128, headdim: 64, nheads, d_inner, d_conv: 4,
+            d_conv_ch, chunk_size: 256,
+            n_params_total: n_params as u64, paper_scale: None,
+            param_order: vec![],
+        }
+    }
+
+    #[test]
+    fn decode_is_memory_bound_on_v6e() {
+        // paper §5: cached decode is bandwidth-bound at every scale
+        let c = paper_cfg(768, 24); // 130m-ish
+        let ai = decode_step_flops(&c) / decode_step_bytes(&c, 2.0);
+        assert!(ai < TPU_V6E.ridge_intensity(),
+                "decode AI {ai} should be « ridge");
+    }
+
+    #[test]
+    fn scan_beats_host_at_small_scale_converges_at_large() {
+        // paper Table 1: 2.4x at 130M, converged at 2.7B
+        let small = paper_cfg(768, 24);
+        let s_scan = project_decode(&small, 128, Strategy::CachedScan,
+                                    &TPU_V6E, 2.0).seconds;
+        let s_host = project_decode(&small, 128, Strategy::CachedHost,
+                                    &TPU_V6E, 2.0).seconds;
+        let ratio_small = s_host / s_scan;
+        let big = paper_cfg(2560, 64);
+        let b_scan = project_decode(&big, 128, Strategy::CachedScan,
+                                    &TPU_V6E, 2.0).seconds;
+        let b_host = project_decode(&big, 128, Strategy::CachedHost,
+                                    &TPU_V6E, 2.0).seconds;
+        let ratio_big = b_host / b_scan;
+        assert!(ratio_small > 1.8, "small-scale host penalty {ratio_small}");
+        assert!(ratio_big < 1.1, "large-scale convergence {ratio_big}");
+    }
+
+    #[test]
+    fn noncached_grows_superlinearly() {
+        // per-token cost of the recompute baseline must grow with the
+        // sequence (the paper's Fig. 2c collapse); cached per-token cost
+        // stays flat
+        let c = paper_cfg(768, 24);
+        let short = project_decode(&c, 128, Strategy::NonCached { prompt: 16 },
+                                   &TPU_V6E, 2.0).seconds;
+        let long = project_decode(&c, 2048, Strategy::NonCached { prompt: 16 },
+                                  &TPU_V6E, 2.0).seconds;
+        let per_short = short / 128.0;
+        let per_long = long / 2048.0;
+        assert!(per_long / per_short > 3.0,
+                "per-token growth {}", per_long / per_short);
+    }
+
+    #[test]
+    fn cached_scan_seq_len_independent() {
+        let c = paper_cfg(1024, 48);
+        let a = project_decode(&c, 64, Strategy::CachedScan, &TPU_V6E, 2.0);
+        let b = project_decode(&c, 256, Strategy::CachedScan, &TPU_V6E, 2.0);
+        let tps_a = 64.0 / a.seconds;
+        let tps_b = 256.0 / b.seconds;
+        assert!((tps_a - tps_b).abs() / tps_a < 0.02);
+    }
+}

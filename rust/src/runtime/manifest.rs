@@ -1,0 +1,311 @@
+//! Typed view over `artifacts/manifest.json` (written by python aot.py).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub shape: Vec<i64>,
+    pub dtype: String,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct CostInfo {
+    pub flops: f64,
+    pub bytes_accessed: f64,
+    pub transcendentals: f64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct MemoryInfo {
+    pub temp_bytes: u64,
+    pub argument_bytes: u64,
+    pub output_bytes: u64,
+    pub code_bytes: u64,
+}
+
+impl MemoryInfo {
+    /// Peak working set of one execution (args + temps + outputs).
+    pub fn peak_bytes(&self) -> u64 {
+        self.argument_bytes + self.temp_bytes + self.output_bytes
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ExecutableSpec {
+    pub name: String,
+    pub file: String,
+    pub config: String,
+    pub entrypoint: String,
+    pub n_params: usize,
+    pub n_args: usize,
+    pub args: Vec<ArgSpec>,
+    pub cost: CostInfo,
+    pub memory: MemoryInfo,
+    pub bucket: Option<usize>,
+    pub batch: Option<usize>,
+    pub ablation: Option<String>,
+    pub lower_seconds: f64,
+    pub cpu_compile_seconds: f64,
+    pub hlo_bytes: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ConfigInfo {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layer: usize,
+    pub vocab_size: usize,
+    pub d_state: usize,
+    pub headdim: usize,
+    pub nheads: usize,
+    pub d_inner: usize,
+    pub d_conv: usize,
+    pub d_conv_ch: usize,
+    pub chunk_size: usize,
+    pub n_params_total: u64,
+    pub paper_scale: Option<String>,
+    pub param_order: Vec<String>,
+}
+
+impl ConfigInfo {
+    /// O(1) cache footprint for one sequence, bytes (f32).
+    pub fn cache_bytes_per_seq(&self) -> u64 {
+        let ssm = self.n_layer * self.nheads * self.headdim * self.d_state;
+        let conv = self.n_layer * self.d_conv_ch * (self.d_conv - 1);
+        ((ssm + conv) * 4) as u64
+    }
+
+    pub fn param_bytes(&self) -> u64 {
+        self.n_params_total * 4
+    }
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub batch_cap: usize,
+    pub prefill_buckets: Vec<usize>,
+    pub decode_loop_buckets: Vec<usize>,
+    pub forward_buckets: Vec<usize>,
+    pub train_seq_buckets: Vec<usize>,
+    pub configs: BTreeMap<String, ConfigInfo>,
+    pub executables: Vec<ExecutableSpec>,
+}
+
+fn usize_at(j: &Json, k: &str) -> Result<usize> {
+    j.get(k)
+        .and_then(Json::as_u64)
+        .map(|v| v as usize)
+        .with_context(|| format!("manifest missing uint field {k:?}"))
+}
+
+fn vec_usize(j: &Json, k: &str) -> Result<Vec<usize>> {
+    Ok(j.get(k)
+        .and_then(Json::as_arr)
+        .with_context(|| format!("manifest missing array {k:?}"))?
+        .iter()
+        .filter_map(Json::as_u64)
+        .map(|v| v as usize)
+        .collect())
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts`?)",
+                                     path.display()))?;
+        let j = Json::parse(&text).context("parse manifest.json")?;
+
+        let mut configs = BTreeMap::new();
+        for (name, c) in j.get("configs").and_then(Json::as_obj)
+            .context("manifest.configs")? {
+            let param_order = c.get("param_order").and_then(Json::as_arr)
+                .context("param_order")?
+                .iter()
+                .filter_map(Json::as_str)
+                .map(String::from)
+                .collect();
+            configs.insert(name.clone(), ConfigInfo {
+                name: name.clone(),
+                d_model: usize_at(c, "d_model")?,
+                n_layer: usize_at(c, "n_layer")?,
+                vocab_size: usize_at(c, "vocab_size")?,
+                d_state: usize_at(c, "d_state")?,
+                headdim: usize_at(c, "headdim")?,
+                nheads: usize_at(c, "nheads")?,
+                d_inner: usize_at(c, "d_inner")?,
+                d_conv: usize_at(c, "d_conv")?,
+                d_conv_ch: usize_at(c, "d_conv_ch")?,
+                chunk_size: usize_at(c, "chunk_size")?,
+                n_params_total: c.get("n_params").and_then(Json::as_u64)
+                    .context("n_params")?,
+                paper_scale: c.get("paper_scale").and_then(Json::as_str)
+                    .map(String::from),
+                param_order,
+            });
+        }
+
+        let mut executables = Vec::new();
+        for e in j.get("executables").and_then(Json::as_arr)
+            .context("manifest.executables")? {
+            let args = e.get("args").and_then(Json::as_arr)
+                .context("args")?
+                .iter()
+                .map(|a| ArgSpec {
+                    shape: a.get("shape").and_then(Json::as_arr)
+                        .map(|v| v.iter()
+                             .filter_map(Json::as_i64).collect())
+                        .unwrap_or_default(),
+                    dtype: a.get("dtype").and_then(Json::as_str)
+                        .unwrap_or("float32").to_string(),
+                })
+                .collect();
+            let cost = e.get("cost").map(|c| CostInfo {
+                flops: c.get("flops").and_then(Json::as_f64).unwrap_or(0.0),
+                bytes_accessed: c.get("bytes_accessed").and_then(Json::as_f64)
+                    .unwrap_or(0.0),
+                transcendentals: c.get("transcendentals")
+                    .and_then(Json::as_f64).unwrap_or(0.0),
+            }).unwrap_or_default();
+            let memory = e.get("memory").map(|m| MemoryInfo {
+                temp_bytes: m.get("temp_size_in_bytes")
+                    .and_then(Json::as_u64).unwrap_or(0),
+                argument_bytes: m.get("argument_size_in_bytes")
+                    .and_then(Json::as_u64).unwrap_or(0),
+                output_bytes: m.get("output_size_in_bytes")
+                    .and_then(Json::as_u64).unwrap_or(0),
+                code_bytes: m.get("generated_code_size_in_bytes")
+                    .and_then(Json::as_u64).unwrap_or(0),
+            }).unwrap_or_default();
+            executables.push(ExecutableSpec {
+                name: e.get("name").and_then(Json::as_str)
+                    .context("exe name")?.to_string(),
+                file: e.get("file").and_then(Json::as_str)
+                    .context("exe file")?.to_string(),
+                config: e.get("config").and_then(Json::as_str)
+                    .unwrap_or("").to_string(),
+                entrypoint: e.get("entrypoint").and_then(Json::as_str)
+                    .unwrap_or("").to_string(),
+                n_params: usize_at(e, "n_params")?,
+                n_args: usize_at(e, "n_args")?,
+                args,
+                cost,
+                memory,
+                bucket: e.get("bucket").and_then(Json::as_u64)
+                    .map(|v| v as usize),
+                batch: e.get("batch").and_then(Json::as_u64)
+                    .map(|v| v as usize),
+                ablation: e.get("ablation").and_then(Json::as_str)
+                    .map(String::from),
+                lower_seconds: e.get("lower_seconds").and_then(Json::as_f64)
+                    .unwrap_or(0.0),
+                cpu_compile_seconds: e.get("cpu_compile_seconds")
+                    .and_then(Json::as_f64).unwrap_or(0.0),
+                hlo_bytes: e.get("hlo_bytes").and_then(Json::as_u64)
+                    .unwrap_or(0),
+            });
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            batch_cap: usize_at(&j, "batch_cap")?,
+            prefill_buckets: vec_usize(&j, "prefill_buckets")?,
+            decode_loop_buckets: vec_usize(&j, "decode_loop_buckets")?,
+            forward_buckets: vec_usize(&j, "forward_buckets")?,
+            train_seq_buckets: vec_usize(&j, "train_seq_buckets")?,
+            configs,
+            executables,
+        })
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ConfigInfo> {
+        self.configs.get(name)
+            .with_context(|| format!("config {name:?} not in manifest \
+                                      (have: {:?})",
+                                     self.configs.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn find(&self, name: &str) -> Result<&ExecutableSpec> {
+        self.executables.iter().find(|e| e.name == name)
+            .with_context(|| format!("executable {name:?} not in manifest"))
+    }
+
+    /// All executables for (config, entrypoint), sorted by bucket.
+    pub fn for_entrypoint(&self, config: &str, entrypoint: &str)
+        -> Vec<&ExecutableSpec> {
+        let mut v: Vec<_> = self.executables.iter()
+            .filter(|e| e.config == config && e.entrypoint == entrypoint
+                    && e.ablation.is_none())
+            .collect();
+        v.sort_by_key(|e| e.bucket.unwrap_or(0));
+        v
+    }
+
+    pub fn hlo_path(&self, spec: &ExecutableSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+
+    pub fn params_path(&self, config: &str) -> PathBuf {
+        self.dir.join(format!("{config}.params.mbt"))
+    }
+
+    /// Largest bucket ≤ n, or the smallest bucket if none fit.
+    pub fn pick_bucket(buckets: &[usize], n: usize) -> Option<usize> {
+        let mut best = None;
+        for &b in buckets {
+            if b <= n && best.map_or(true, |x| b > x) {
+                best = Some(b);
+            }
+        }
+        best.or_else(|| buckets.iter().copied().min())
+    }
+
+    /// Smallest bucket ≥ n (for padded workloads), or largest available.
+    pub fn pick_bucket_ceil(buckets: &[usize], n: usize) -> Option<usize> {
+        buckets.iter().copied().filter(|&b| b >= n).min()
+            .or_else(|| buckets.iter().copied().max())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        for e in &self.executables {
+            let p = self.hlo_path(e);
+            if !p.exists() {
+                bail!("manifest references missing HLO file {}", p.display());
+            }
+            if e.args.len() != e.n_args {
+                bail!("{}: arg spec count {} != n_args {}",
+                      e.name, e.args.len(), e.n_args);
+            }
+        }
+        for name in self.configs.keys() {
+            let p = self.params_path(name);
+            if !p.exists() {
+                bail!("missing params file {}", p.display());
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_selection() {
+        let b = vec![16, 64, 256];
+        assert_eq!(Manifest::pick_bucket(&b, 100), Some(64));
+        assert_eq!(Manifest::pick_bucket(&b, 16), Some(16));
+        assert_eq!(Manifest::pick_bucket(&b, 8), Some(16)); // fallback min
+        assert_eq!(Manifest::pick_bucket(&b, 1000), Some(256));
+        assert_eq!(Manifest::pick_bucket_ceil(&b, 100), Some(256));
+        assert_eq!(Manifest::pick_bucket_ceil(&b, 300), Some(256));
+        assert_eq!(Manifest::pick_bucket(&[], 5), None);
+    }
+}

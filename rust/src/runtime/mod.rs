@@ -1,0 +1,8 @@
+//! PJRT runtime: load AOT HLO artifacts, compile once, execute from rust.
+
+pub mod manifest;
+pub mod session;
+
+pub use manifest::{ConfigInfo, ExecutableSpec, Manifest};
+pub use session::{argmax, CacheState, ModelSession, PrefillOut, Runtime,
+                  StepOut};

@@ -1,0 +1,191 @@
+//! Line-delimited-JSON TCP server + client.
+//!
+//! Protocol (one JSON object per line):
+//!   → {"op":"generate","prompt":"text","max_new_tokens":32,"top_k":0}
+//!   ← {"tokens":[..],"text":"...","n":32,"ms":12.3}           (final)
+//!   → {"op":"metrics"}            ← snapshot object
+//!   → {"op":"ping"}               ← {"ok":true}
+//!
+//! tokio is unavailable offline; the server runs a thread-pool accept loop
+//! over std::net — adequate for the batch sizes this CPU target serves.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{Router, Sampling};
+use crate::eval::tokenizer::Tokenizer;
+use crate::util::json::Json;
+use crate::util::threadpool::ThreadPool;
+
+pub struct Server {
+    router: Arc<Router>,
+    tokenizer: Arc<Tokenizer>,
+}
+
+impl Server {
+    pub fn new(router: Arc<Router>, tokenizer: Arc<Tokenizer>) -> Server {
+        Server { router, tokenizer }
+    }
+
+    /// Bind and serve until the process exits. Returns the bound address
+    /// through the callback (port 0 supported for tests).
+    pub fn serve(&self, addr: &str, threads: usize,
+                 on_bound: impl FnOnce(std::net::SocketAddr)) -> Result<()> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("bind {addr}"))?;
+        on_bound(listener.local_addr()?);
+        let pool = ThreadPool::new(threads);
+        for stream in listener.incoming() {
+            let stream = match stream {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            let router = Arc::clone(&self.router);
+            let tok = Arc::clone(&self.tokenizer);
+            pool.execute(move || {
+                let _ = handle_conn(stream, router, tok);
+            });
+        }
+        Ok(())
+    }
+}
+
+fn handle_conn(stream: TcpStream, router: Arc<Router>,
+               tok: Arc<Tokenizer>) -> Result<()> {
+    let peer = stream.peer_addr().ok();
+    crate::log_debug!("conn from {peer:?}");
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut out = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        let req = match Json::parse(line.trim()) {
+            Ok(j) => j,
+            Err(e) => {
+                write_json(&mut out, &Json::obj(vec![
+                    ("error", Json::str(format!("bad json: {e}"))),
+                ]))?;
+                continue;
+            }
+        };
+        match req.get("op").and_then(Json::as_str) {
+            Some("ping") => {
+                write_json(&mut out, &Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                ]))?;
+            }
+            Some("metrics") => {
+                let mut reps = Vec::new();
+                for i in 0..router.n_replicas() {
+                    let s = router.replica(i).metrics.snapshot();
+                    reps.push(Json::obj(vec![
+                        ("completed", Json::num(s.completed as f64)),
+                        ("tokens", Json::num(s.tokens_generated as f64)),
+                        ("tok_per_s", Json::num(s.throughput_tps())),
+                        ("ttft_p50_ms", Json::num(s.ttft_p50 * 1e3)),
+                        ("e2e_p99_ms", Json::num(s.e2e_p99 * 1e3)),
+                        ("occupancy", Json::num(s.mean_batch_occupancy)),
+                    ]));
+                }
+                write_json(&mut out, &Json::obj(vec![
+                    ("replicas", Json::Arr(reps)),
+                ]))?;
+            }
+            Some("generate") => {
+                let t0 = Instant::now();
+                let prompt_text = req.get("prompt").and_then(Json::as_str)
+                    .unwrap_or("");
+                let n = req.get("max_new_tokens").and_then(Json::as_u64)
+                    .unwrap_or(32) as usize;
+                let k = req.get("top_k").and_then(Json::as_u64)
+                    .unwrap_or(0) as usize;
+                let seed = req.get("seed").and_then(Json::as_u64)
+                    .unwrap_or(0);
+                let prompt = tok.encode(prompt_text);
+                let sampling = if k == 0 {
+                    Sampling::Greedy
+                } else {
+                    Sampling::TopK { k, seed }
+                };
+                let stream = router.submit(prompt, n, sampling);
+                match stream.collect() {
+                    Ok(tokens) => {
+                        let text = tok.decode(&tokens);
+                        write_json(&mut out, &Json::obj(vec![
+                            ("tokens", Json::Arr(tokens.iter()
+                                .map(|&t| Json::num(t as f64)).collect())),
+                            ("text", Json::str(text)),
+                            ("n", Json::num(tokens.len() as f64)),
+                            ("ms", Json::num(
+                                t0.elapsed().as_secs_f64() * 1e3)),
+                        ]))?;
+                    }
+                    Err(e) => {
+                        write_json(&mut out, &Json::obj(vec![
+                            ("error", Json::str(e)),
+                        ]))?;
+                    }
+                }
+            }
+            _ => {
+                write_json(&mut out, &Json::obj(vec![
+                    ("error", Json::str("unknown op")),
+                ]))?;
+            }
+        }
+    }
+}
+
+fn write_json(w: &mut impl Write, j: &Json) -> Result<()> {
+    writeln!(w, "{j}")?;
+    w.flush()?;
+    Ok(())
+}
+
+// ----------------------------------------------------------- client -----
+
+/// Blocking client for the line-JSON protocol.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connect {addr}"))?;
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+        })
+    }
+
+    pub fn call(&mut self, req: &Json) -> Result<Json> {
+        writeln!(self.writer, "{req}")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Ok(Json::parse(line.trim())?)
+    }
+
+    pub fn generate(&mut self, prompt: &str, max_new_tokens: usize)
+        -> Result<Json> {
+        self.call(&Json::obj(vec![
+            ("op", Json::str("generate")),
+            ("prompt", Json::str(prompt)),
+            ("max_new_tokens", Json::num(max_new_tokens as f64)),
+        ]))
+    }
+
+    pub fn ping(&mut self) -> Result<bool> {
+        let r = self.call(&Json::obj(vec![("op", Json::str("ping"))]))?;
+        Ok(r.get("ok").and_then(Json::as_bool).unwrap_or(false))
+    }
+}

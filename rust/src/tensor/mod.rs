@@ -1,0 +1,264 @@
+//! Host-side tensors and the `.mbt` tensor-store format.
+//!
+//! The format is defined by `python/compile/params.py` (magic "MBT1"):
+//! parameters, goldens and trained checkpoints all travel through it.
+
+use std::fmt;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+pub const MBT_MAGIC: u32 = 0x4D42_5431;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn size(self) -> usize {
+        4
+    }
+    fn code(self) -> u32 {
+        match self {
+            DType::F32 => 0,
+            DType::I32 => 1,
+        }
+    }
+    fn from_code(c: u32) -> Result<Self> {
+        Ok(match c {
+            0 => DType::F32,
+            1 => DType::I32,
+            _ => bail!("unknown dtype code {c}"),
+        })
+    }
+}
+
+/// A named, shaped host tensor. Data is stored as raw little-endian bytes to
+/// avoid a copy when building `xla::Literal`s.
+#[derive(Clone)]
+pub struct Tensor {
+    pub name: String,
+    pub dtype: DType,
+    pub dims: Vec<i64>,
+    pub data: Vec<u8>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor({} {:?} {:?}, {} bytes)", self.name, self.dtype,
+               self.dims, self.data.len())
+    }
+}
+
+impl Tensor {
+    pub fn f32(name: &str, dims: &[i64], vals: &[f32]) -> Tensor {
+        assert_eq!(numel(dims), vals.len());
+        let mut data = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor { name: name.into(), dtype: DType::F32,
+                 dims: dims.to_vec(), data }
+    }
+
+    pub fn i32(name: &str, dims: &[i64], vals: &[i32]) -> Tensor {
+        assert_eq!(numel(dims), vals.len());
+        let mut data = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor { name: name.into(), dtype: DType::I32,
+                 dims: dims.to_vec(), data }
+    }
+
+    pub fn zeros_f32(name: &str, dims: &[i64]) -> Tensor {
+        Tensor { name: name.into(), dtype: DType::F32, dims: dims.to_vec(),
+                 data: vec![0; numel(dims) * 4] }
+    }
+
+    pub fn numel(&self) -> usize {
+        numel(&self.dims)
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn as_f32(&self) -> Vec<f32> {
+        assert_eq!(self.dtype, DType::F32);
+        self.data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    }
+
+    pub fn as_i32(&self) -> Vec<i32> {
+        assert_eq!(self.dtype, DType::I32);
+        self.data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    }
+
+    /// Convert to an XLA literal (reshaped to dims).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self.dtype {
+            DType::F32 => xla::Literal::vec1(self.as_f32().as_slice()),
+            DType::I32 => xla::Literal::vec1(self.as_i32().as_slice()),
+        };
+        if self.dims.is_empty() {
+            // rank-0: reshape to scalar
+            Ok(lit.reshape(&[])?)
+        } else {
+            Ok(lit.reshape(&self.dims)?)
+        }
+    }
+
+    /// Build from an XLA literal fetched off-device.
+    pub fn from_literal(name: &str, lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<i64> = shape.dims().to_vec();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                Ok(Tensor::f32(name, &dims, &lit.to_vec::<f32>()?))
+            }
+            xla::ElementType::S32 => {
+                Ok(Tensor::i32(name, &dims, &lit.to_vec::<i32>()?))
+            }
+            t => bail!("unsupported literal type {t:?}"),
+        }
+    }
+
+    /// Max |a - b| between two f32 tensors of identical shape.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        let a = self.as_f32();
+        let b = other.as_f32();
+        assert_eq!(a.len(), b.len());
+        a.iter()
+            .zip(&b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max)
+    }
+}
+
+pub fn numel(dims: &[i64]) -> usize {
+    // empty product is 1 (rank-0 scalar); an explicit 0-dim yields 0
+    dims.iter().product::<i64>() as usize
+}
+
+// ------------------------------------------------------------- store ----
+
+pub fn save_mbt(path: &Path, tensors: &[Tensor]) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?,
+    );
+    f.write_all(&MBT_MAGIC.to_le_bytes())?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for t in tensors {
+        let nb = t.name.as_bytes();
+        f.write_all(&(nb.len() as u32).to_le_bytes())?;
+        f.write_all(nb)?;
+        f.write_all(&t.dtype.code().to_le_bytes())?;
+        f.write_all(&(t.dims.len() as u32).to_le_bytes())?;
+        for d in &t.dims {
+            f.write_all(&(*d as u64).to_le_bytes())?;
+        }
+        f.write_all(&t.data)?;
+    }
+    Ok(())
+}
+
+pub fn load_mbt(path: &Path) -> Result<Vec<Tensor>> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?,
+    );
+    let mut u32buf = [0u8; 4];
+    let mut u64buf = [0u8; 8];
+    f.read_exact(&mut u32buf)?;
+    let magic = u32::from_le_bytes(u32buf);
+    if magic != MBT_MAGIC {
+        bail!("bad .mbt magic {magic:#x} in {}", path.display());
+    }
+    f.read_exact(&mut u32buf)?;
+    let count = u32::from_le_bytes(u32buf);
+    let mut out = Vec::with_capacity(count as usize);
+    for _ in 0..count {
+        f.read_exact(&mut u32buf)?;
+        let nlen = u32::from_le_bytes(u32buf) as usize;
+        let mut name = vec![0u8; nlen];
+        f.read_exact(&mut name)?;
+        f.read_exact(&mut u32buf)?;
+        let dtype = DType::from_code(u32::from_le_bytes(u32buf))?;
+        f.read_exact(&mut u32buf)?;
+        let rank = u32::from_le_bytes(u32buf) as usize;
+        let mut dims = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            f.read_exact(&mut u64buf)?;
+            dims.push(u64::from_le_bytes(u64buf) as i64);
+        }
+        let mut data = vec![0u8; numel(&dims) * dtype.size()];
+        f.read_exact(&mut data)?;
+        out.push(Tensor { name: String::from_utf8(name)?, dtype, dims, data });
+    }
+    Ok(out)
+}
+
+/// Find a tensor by name in a loaded store.
+pub fn find<'a>(tensors: &'a [Tensor], name: &str) -> Result<&'a Tensor> {
+    tensors
+        .iter()
+        .find(|t| t.name == name)
+        .with_context(|| format!("tensor {name:?} not found"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("mbt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.mbt");
+        let ts = vec![
+            Tensor::f32("a", &[2, 3], &[1., 2., 3., 4., 5., 6.]),
+            Tensor::i32("b", &[4], &[1, -2, 3, -4]),
+            Tensor::f32("scalar", &[], &[7.5]),
+        ];
+        save_mbt(&p, &ts).unwrap();
+        let back = load_mbt(&p).unwrap();
+        assert_eq!(back.len(), 3);
+        assert_eq!(back[0].as_f32(), ts[0].as_f32());
+        assert_eq!(back[1].as_i32(), ts[1].as_i32());
+        assert_eq!(back[2].dims, Vec::<i64>::new());
+        assert_eq!(find(&back, "b").unwrap().as_i32()[1], -2);
+        assert!(find(&back, "nope").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("mbt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.mbt");
+        std::fs::write(&p, b"NOPE....").unwrap();
+        assert!(load_mbt(&p).is_err());
+    }
+
+    #[test]
+    fn max_abs_diff() {
+        let a = Tensor::f32("a", &[3], &[1.0, 2.0, 3.0]);
+        let b = Tensor::f32("b", &[3], &[1.0, 2.5, 2.0]);
+        assert!((a.max_abs_diff(&b) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn numel_rank0() {
+        assert_eq!(numel(&[]), 1);
+        assert_eq!(numel(&[2, 0]), 0);
+    }
+}

@@ -1,0 +1,235 @@
+//! Criterion-style benchmark harness (criterion is unavailable offline).
+//!
+//! Each `cargo bench` target is a `harness = false` binary that builds a
+//! `Bench`, registers measurements, and prints paper-style tables. The
+//! protocol mirrors the paper's §4.1: JIT/compile warm-up first, then N
+//! timed runs, report mean ± stddev (the paper reports rsd < 0.3%).
+
+use std::time::Instant;
+
+use super::stats::Summary;
+
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub summary: Summary,
+    /// user-defined throughput denominator (e.g. tokens) per iteration
+    pub work: f64,
+}
+
+impl Measurement {
+    /// work units per second (tokens/s when work = tokens per iteration).
+    pub fn throughput(&self) -> f64 {
+        if self.summary.mean == 0.0 {
+            0.0
+        } else {
+            self.work / self.summary.mean
+        }
+    }
+}
+
+pub struct Bench {
+    pub warmup: usize,
+    pub runs: usize,
+    pub results: Vec<Measurement>,
+    quiet: bool,
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        // --quick halves the protocol for CI smoke runs
+        let quick = std::env::args().any(|a| a == "--quick")
+            || std::env::var("BENCH_QUICK").is_ok();
+        Bench {
+            warmup: if quick { 1 } else { 3 },
+            runs: if quick { 2 } else { 5 },
+            results: Vec::new(),
+            quiet: false,
+        }
+    }
+
+    pub fn with_protocol(mut self, warmup: usize, runs: usize) -> Self {
+        self.warmup = warmup;
+        self.runs = runs;
+        self
+    }
+
+    pub fn quiet(mut self) -> Self {
+        self.quiet = true;
+        self
+    }
+
+    /// Measure `f` (seconds per call), with `work` units per call.
+    pub fn measure<F: FnMut()>(&mut self, name: &str, work: f64, mut f: F)
+        -> &Measurement {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.runs);
+        for _ in 0..self.runs {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let m = Measurement { name: name.to_string(),
+                              summary: Summary::of(&samples), work };
+        if !self.quiet {
+            eprintln!(
+                "  bench {name}: {:.3} ms ± {:.1}% ({:.1} work/s)",
+                m.summary.mean * 1e3,
+                m.summary.rsd() * 100.0,
+                m.throughput()
+            );
+        }
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    /// Measure a closure that returns its own duration (for loops that
+    /// amortise sync overhead across many internal steps).
+    pub fn measure_timed<F: FnMut() -> f64>(&mut self, name: &str, work: f64,
+                                            mut f: F) -> &Measurement {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.runs);
+        for _ in 0..self.runs {
+            samples.push(f());
+        }
+        let m = Measurement { name: name.to_string(),
+                              summary: Summary::of(&samples), work };
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Measurement> {
+        self.results.iter().find(|m| m.name == name)
+    }
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// ------------------------------------------------------------ tables ----
+
+/// Fixed-width table printer matching the paper's layout.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table { title: title.to_string(),
+                headers: headers.iter().map(|s| s.to_string()).collect(),
+                rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut s = format!("\n== {} ==\n", self.title);
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        s.push_str(&fmt_row(&self.headers));
+        s.push('\n');
+        s.push_str(&"-".repeat(widths.iter().sum::<usize>()
+                               + 2 * (widths.len() - 1)));
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(&fmt_row(row));
+            s.push('\n');
+        }
+        s
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+
+    /// Machine-readable dump next to the human table.
+    pub fn to_json(&self) -> super::json::Json {
+        use super::json::Json;
+        Json::obj(vec![
+            ("title", Json::str(self.title.clone())),
+            ("headers",
+             Json::Arr(self.headers.iter().cloned().map(Json::Str).collect())),
+            ("rows",
+             Json::Arr(self.rows.iter()
+                 .map(|r| Json::Arr(
+                     r.iter().cloned().map(Json::Str).collect()))
+                 .collect())),
+        ])
+    }
+}
+
+/// Write bench results under bench_results/<name>.json.
+pub fn save_results(name: &str, tables: &[&Table]) {
+    use super::json::Json;
+    let dir = std::path::Path::new("bench_results");
+    let _ = std::fs::create_dir_all(dir);
+    let j = Json::Arr(tables.iter().map(|t| t.to_json()).collect());
+    let _ = std::fs::write(dir.join(format!("{name}.json")), j.to_string());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_runs() {
+        let mut b = Bench::new().with_protocol(1, 4).quiet();
+        let mut calls = 0;
+        b.measure("t", 1.0, || {
+            calls += 1;
+        });
+        assert_eq!(calls, 5);
+        assert_eq!(b.results[0].summary.n, 4);
+    }
+
+    #[test]
+    fn throughput() {
+        let m = Measurement {
+            name: "x".into(),
+            summary: Summary::of(&[0.5, 0.5]),
+            work: 100.0,
+        };
+        assert!((m.throughput() - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_render() {
+        let mut t = Table::new("T", &["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let r = t.render();
+        assert!(r.contains("== T =="));
+        assert!(r.contains("a  bb"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_arity_checked() {
+        let mut t = Table::new("T", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+}

@@ -1,0 +1,203 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positionals, and
+//! generated `--help`. Declarative enough for every binary in this repo.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+struct Spec {
+    name: String,
+    help: String,
+    takes_value: bool,
+    default: Option<String>,
+}
+
+#[derive(Debug, Default)]
+pub struct Cli {
+    bin: String,
+    about: String,
+    specs: Vec<Spec>,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positionals: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(bin: &str, about: &str) -> Self {
+        Cli { bin: bin.into(), about: about.into(), ..Default::default() }
+    }
+
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.specs.push(Spec { name: name.into(), help: help.into(),
+                               takes_value: true,
+                               default: Some(default.into()) });
+        self
+    }
+
+    pub fn req(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(Spec { name: name.into(), help: help.into(),
+                               takes_value: true, default: None });
+        self
+    }
+
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(Spec { name: name.into(), help: help.into(),
+                               takes_value: false, default: None });
+        self
+    }
+
+    pub fn parse_env(self) -> Self {
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse(&args) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("error: {e}\n");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    pub fn parse(mut self, args: &[String]) -> Result<Self, String> {
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                println!("{}", self.help_text());
+                std::process::exit(0);
+            }
+            if let Some(rest) = a.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}"))?
+                    .clone();
+                if spec.takes_value {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .ok_or_else(|| {
+                                    format!("--{key} requires a value")
+                                })?
+                                .clone()
+                        }
+                    };
+                    self.values.insert(key, v);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(format!("--{key} takes no value"));
+                    }
+                    self.flags.insert(key, true);
+                }
+            } else {
+                self.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        // check required
+        for s in &self.specs {
+            if s.takes_value
+                && s.default.is_none()
+                && !self.values.contains_key(&s.name)
+            {
+                return Err(format!("missing required option --{}", s.name));
+            }
+        }
+        Ok(self)
+    }
+
+    pub fn get(&self, name: &str) -> String {
+        if let Some(v) = self.values.get(name) {
+            return v.clone();
+        }
+        self.specs
+            .iter()
+            .find(|s| s.name == name)
+            .and_then(|s| s.default.clone())
+            .unwrap_or_else(|| panic!("undeclared option --{name}"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name).parse().unwrap_or_else(|_| {
+            eprintln!("error: --{name} must be an integer");
+            std::process::exit(2);
+        })
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name).parse().unwrap_or_else(|_| {
+            eprintln!("error: --{name} must be a number");
+            std::process::exit(2);
+        })
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nOPTIONS:\n", self.bin, self.about);
+        for spec in &self.specs {
+            let meta = if spec.takes_value { " <value>" } else { "" };
+            let def = match &spec.default {
+                Some(d) => format!(" [default: {d}]"),
+                None if spec.takes_value => " [required]".to_string(),
+                None => String::new(),
+            };
+            s.push_str(&format!("  --{}{meta}\n        {}{def}\n",
+                                spec.name, spec.help));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let c = Cli::new("t", "")
+            .opt("model", "tiny", "")
+            .flag("verbose", "")
+            .parse(&argv(&["--model", "sim-130m", "--verbose"]))
+            .unwrap();
+        assert_eq!(c.get("model"), "sim-130m");
+        assert!(c.has("verbose"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let c = Cli::new("t", "").opt("n", "1", "")
+            .parse(&argv(&["--n=42"])).unwrap();
+        assert_eq!(c.get_usize("n"), 42);
+    }
+
+    #[test]
+    fn required_missing() {
+        assert!(Cli::new("t", "").req("x", "").parse(&argv(&[])).is_err());
+    }
+
+    #[test]
+    fn unknown_option() {
+        assert!(Cli::new("t", "").parse(&argv(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn positionals() {
+        let c = Cli::new("t", "").opt("k", "v", "")
+            .parse(&argv(&["a", "--k", "x", "b"])).unwrap();
+        assert_eq!(c.positionals, vec!["a", "b"]);
+    }
+}

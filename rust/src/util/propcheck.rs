@@ -1,0 +1,198 @@
+//! Mini property-based testing framework (proptest is unavailable offline).
+//!
+//! `Gen` produces random values from a seeded `Rng`; `check` runs a property
+//! over N cases and, on failure, greedily shrinks the failing input via the
+//! value's `Shrink` implementation before reporting.
+//!
+//! Used by the coordinator invariant suites (slot pool, batcher, scheduler,
+//! tokenizer) — see `rust/tests/prop_coordinator.rs`.
+
+use super::prng::Rng;
+
+/// A generator of random values.
+pub struct Gen<T> {
+    f: Box<dyn Fn(&mut Rng) -> T>,
+}
+
+impl<T: 'static> Gen<T> {
+    pub fn new(f: impl Fn(&mut Rng) -> T + 'static) -> Self {
+        Gen { f: Box::new(f) }
+    }
+    pub fn sample(&self, rng: &mut Rng) -> T {
+        (self.f)(rng)
+    }
+    pub fn map<U: 'static>(self, g: impl Fn(T) -> U + 'static) -> Gen<U> {
+        Gen::new(move |r| g(self.sample(r)))
+    }
+}
+
+pub fn usize_in(lo: usize, hi: usize) -> Gen<usize> {
+    Gen::new(move |r| lo + r.below((hi - lo + 1) as u64) as usize)
+}
+
+pub fn u64_any() -> Gen<u64> {
+    Gen::new(|r| r.next_u64())
+}
+
+pub fn vec_of<T: 'static>(elem: Gen<T>, max_len: usize) -> Gen<Vec<T>> {
+    Gen::new(move |r| {
+        let n = r.below(max_len as u64 + 1) as usize;
+        (0..n).map(|_| elem.sample(r)).collect()
+    })
+}
+
+/// Types that know how to propose strictly-smaller variants of themselves.
+pub trait Shrink: Sized + Clone {
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out
+    }
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        // remove halves, then single elements, then shrink one element
+        out.push(self[..self.len() / 2].to_vec());
+        out.push(self[self.len() / 2..].to_vec());
+        for i in 0..self.len().min(8) {
+            let mut v = self.clone();
+            v.remove(i);
+            out.push(v);
+        }
+        for i in 0..self.len().min(4) {
+            for s in self[i].shrink() {
+                let mut v = self.clone();
+                v[i] = s;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 200, seed: 0xC0FFEE, max_shrink_steps: 500 }
+    }
+}
+
+/// Run `prop` over `cfg.cases` random inputs; panic with the (shrunken)
+/// counterexample on failure.
+pub fn check<T, F>(cfg: &Config, gen: &Gen<T>, prop: F)
+where
+    T: Shrink + std::fmt::Debug + 'static,
+    F: Fn(&T) -> bool,
+{
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = gen.sample(&mut rng);
+        if !prop(&input) {
+            let shrunk = shrink_loop(input, &prop, cfg.max_shrink_steps);
+            panic!(
+                "property failed (case {case}/{}):\n  counterexample: {:?}",
+                cfg.cases, shrunk
+            );
+        }
+    }
+}
+
+fn shrink_loop<T, F>(mut failing: T, prop: &F, max_steps: usize) -> T
+where
+    T: Shrink + std::fmt::Debug,
+    F: Fn(&T) -> bool,
+{
+    let mut steps = 0;
+    'outer: while steps < max_steps {
+        for cand in failing.shrink() {
+            steps += 1;
+            if !prop(&cand) {
+                failing = cand;
+                continue 'outer;
+            }
+            if steps >= max_steps {
+                break;
+            }
+        }
+        break;
+    }
+    failing
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_true_property() {
+        check(&Config::default(), &usize_in(0, 100), |&x| x <= 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "counterexample")]
+    fn fails_false_property() {
+        check(&Config::default(), &usize_in(0, 100), |&x| x < 50);
+    }
+
+    #[test]
+    fn shrinks_to_minimal() {
+        // property: all elements < 90. Failing vectors should shrink toward
+        // a single element >= 90.
+        let gen = vec_of(usize_in(0, 99), 20);
+        let mut rng = Rng::new(1);
+        // find a failing input first
+        let mut failing = None;
+        for _ in 0..1000 {
+            let v = gen.sample(&mut rng);
+            if v.iter().any(|&x| x >= 90) {
+                failing = Some(v);
+                break;
+            }
+        }
+        let shrunk = shrink_loop(failing.unwrap(),
+                                 &|v: &Vec<usize>| v.iter().all(|&x| x < 90),
+                                 500);
+        assert_eq!(shrunk.len(), 1);
+        assert!(shrunk[0] >= 90);
+    }
+
+    #[test]
+    fn gen_map() {
+        let g = usize_in(1, 5).map(|x| x * 10);
+        let mut r = Rng::new(2);
+        for _ in 0..50 {
+            let v = g.sample(&mut r);
+            assert!(v % 10 == 0 && (10..=50).contains(&v));
+        }
+    }
+}

@@ -1,0 +1,162 @@
+//! Integration: continuous-batching engine end-to-end on the tiny config.
+
+use std::sync::{Arc, OnceLock};
+
+use mamba2_serve::coordinator::{Engine, EngineConfig, Router, Sampling,
+                                SingleStream};
+use mamba2_serve::runtime::{ModelSession, Runtime};
+
+fn rt() -> Arc<Runtime> {
+    static RT: OnceLock<Arc<Runtime>> = OnceLock::new();
+    RT.get_or_init(|| {
+        Runtime::new(&mamba2_serve::artifacts_dir()).expect("artifacts")
+    })
+    .clone()
+}
+
+fn session() -> ModelSession {
+    ModelSession::new(rt(), "tiny").unwrap()
+}
+
+#[test]
+fn single_request_roundtrip() {
+    let eng = Engine::start(session(), EngineConfig::default()).unwrap();
+    let stream = eng.submit(vec![1, 2, 3, 4, 5], 8, Sampling::Greedy);
+    let toks = stream.collect().unwrap();
+    assert_eq!(toks.len(), 8);
+    let snap = eng.metrics.snapshot();
+    assert_eq!(snap.completed, 1);
+    assert_eq!(snap.tokens_generated, 8);
+}
+
+#[test]
+fn batched_equals_single_stream_greedy() {
+    // continuous batching must not change greedy outputs (batch
+    // independence — the serving-level version of the paper's Fig. 5
+    // batch-invariance claim)
+    let sess = session();
+    let ss = SingleStream::new(&sess);
+    let prompts: Vec<Vec<i32>> = vec![
+        (1..17).collect(),
+        (40..56).collect(),
+        (100..116).collect(),
+    ];
+    let mut want = Vec::new();
+    for p in &prompts {
+        want.push(ss.generate_host(p, 6).unwrap());
+    }
+    let eng = Engine::start(session(), EngineConfig::default()).unwrap();
+    let streams: Vec<_> = prompts.iter()
+        .map(|p| eng.submit(p.clone(), 6, Sampling::Greedy))
+        .collect();
+    for (i, s) in streams.into_iter().enumerate() {
+        let got = s.collect().unwrap();
+        assert_eq!(got, want[i], "request {i} diverged under batching");
+    }
+}
+
+#[test]
+fn oversubscription_queues_and_completes() {
+    // more requests than slots: all must complete
+    let eng = Engine::start(session(), EngineConfig {
+        batch_cap: 2,
+        ..Default::default()
+    }).unwrap();
+    let streams: Vec<_> = (0..7)
+        .map(|i| eng.submit(vec![i as i32 + 1; 8], 5, Sampling::Greedy))
+        .collect();
+    for s in streams {
+        assert_eq!(s.collect().unwrap().len(), 5);
+    }
+    let snap = eng.metrics.snapshot();
+    assert_eq!(snap.completed, 7);
+    assert_eq!(snap.failed, 0);
+    assert!(snap.mean_batch_occupancy > 1.0,
+            "batching should overlap requests (occupancy {})",
+            snap.mean_batch_occupancy);
+}
+
+#[test]
+fn varying_lengths_join_and_leave() {
+    // sequences of different generation lengths enter and retire at
+    // different steps — the continuous part of continuous batching
+    let eng = Engine::start(session(), EngineConfig {
+        batch_cap: 4,
+        ..Default::default()
+    }).unwrap();
+    let lens = [2usize, 9, 5, 13, 1, 7];
+    let streams: Vec<_> = lens.iter().enumerate()
+        .map(|(i, &n)| eng.submit(vec![(i + 1) as i32; 4], n,
+                                  Sampling::Greedy))
+        .collect();
+    for (s, &n) in streams.into_iter().zip(&lens) {
+        assert_eq!(s.collect().unwrap().len(), n);
+    }
+}
+
+#[test]
+fn topk_sampling_is_seeded_and_valid() {
+    let eng = Engine::start(session(), EngineConfig::default()).unwrap();
+    let a = eng.submit_req(mamba2_serve::coordinator::GenRequest {
+        id: 900, prompt: vec![1, 2, 3], max_new_tokens: 6,
+        sampling: Sampling::TopK { k: 4, seed: 7 }, stop_token: None,
+    }).collect().unwrap();
+    let b = eng.submit_req(mamba2_serve::coordinator::GenRequest {
+        id: 900, prompt: vec![1, 2, 3], max_new_tokens: 6,
+        sampling: Sampling::TopK { k: 4, seed: 7 }, stop_token: None,
+    }).collect().unwrap();
+    assert_eq!(a, b, "same seed must reproduce");
+    let vocab = 512;
+    assert!(a.iter().all(|&t| t >= 0 && t < vocab));
+}
+
+#[test]
+fn long_prompt_uses_bucket_plus_steps() {
+    // prompt length 23 = bucket 16 + 7 steps; must still match the
+    // host-loop reference built on the same policy
+    let sess = session();
+    let ss = SingleStream::new(&sess);
+    let prompt: Vec<i32> = (1..24).collect();
+    let eng = Engine::start(session(), EngineConfig::default()).unwrap();
+    let got = eng.submit(prompt.clone(), 5, Sampling::Greedy)
+        .collect().unwrap();
+    let want = ss.generate_host(&prompt, 5).unwrap();
+    assert_eq!(got, want);
+}
+
+#[test]
+fn router_balances_across_replicas() {
+    let r1 = Arc::new(Engine::start(session(),
+                                    EngineConfig::default()).unwrap());
+    let r2 = Arc::new(Engine::start(session(),
+                                    EngineConfig::default()).unwrap());
+    let router = Router::new(vec![r1, r2]);
+    let streams: Vec<_> = (0..6)
+        .map(|_| router.submit(vec![1, 2, 3], 3, Sampling::Greedy))
+        .collect();
+    for s in streams {
+        assert_eq!(s.collect().unwrap().len(), 3);
+    }
+    assert_eq!(router.total_completed(), 6);
+    // both replicas saw work
+    let c0 = router.replica(0).metrics.snapshot().completed;
+    let c1 = router.replica(1).metrics.snapshot().completed;
+    assert!(c0 > 0 && c1 > 0, "load balancing failed: {c0}/{c1}");
+}
+
+#[test]
+fn stop_token_ends_generation_early() {
+    let sess = session();
+    let ss = SingleStream::new(&sess);
+    // find what greedy generates, then use its 3rd token as stop
+    let prompt: Vec<i32> = (1..17).collect();
+    let ref_gen = ss.generate_host(&prompt, 8).unwrap();
+    let stop = ref_gen[2];
+    let eng = Engine::start(session(), EngineConfig::default()).unwrap();
+    let got = eng.submit_req(mamba2_serve::coordinator::GenRequest {
+        id: 1, prompt, max_new_tokens: 8, sampling: Sampling::Greedy,
+        stop_token: Some(stop),
+    }).collect().unwrap();
+    assert_eq!(got.len(), 3);
+    assert_eq!(*got.last().unwrap(), stop);
+}

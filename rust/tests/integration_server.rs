@@ -1,0 +1,107 @@
+//! Integration: TCP line-JSON server end-to-end (bind :0, real sockets).
+
+use std::sync::{Arc, OnceLock};
+use std::time::Duration;
+
+use mamba2_serve::coordinator::{Engine, EngineConfig, Router};
+use mamba2_serve::eval::{corpus, Tokenizer};
+use mamba2_serve::runtime::{ModelSession, Runtime};
+use mamba2_serve::server::{Client, Server};
+use mamba2_serve::util::json::Json;
+
+fn rt() -> Arc<Runtime> {
+    static RT: OnceLock<Arc<Runtime>> = OnceLock::new();
+    RT.get_or_init(|| {
+        Runtime::new(&mamba2_serve::artifacts_dir()).expect("artifacts")
+    })
+    .clone()
+}
+
+fn start_server() -> String {
+    let session = ModelSession::new(rt(), "tiny").unwrap();
+    let eng = Arc::new(Engine::start(session, EngineConfig::default())
+                       .unwrap());
+    let router = Arc::new(Router::new(vec![eng]));
+    let tok = Arc::new(Tokenizer::train(corpus::BUNDLED, 64));
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let server = Server::new(router, tok);
+        server.serve("127.0.0.1:0", 4, move |addr| {
+            tx.send(addr.to_string()).unwrap();
+        }).unwrap();
+    });
+    rx.recv_timeout(Duration::from_secs(30)).expect("server bound")
+}
+
+fn addr() -> String {
+    static A: OnceLock<String> = OnceLock::new();
+    A.get_or_init(start_server).clone()
+}
+
+#[test]
+fn ping() {
+    let mut c = Client::connect(&addr()).unwrap();
+    assert!(c.ping().unwrap());
+}
+
+#[test]
+fn generate_roundtrip() {
+    let mut c = Client::connect(&addr()).unwrap();
+    let r = c.generate("state space", 6).unwrap();
+    assert!(r.get("error").is_none(), "{r}");
+    assert_eq!(r.get("n").and_then(Json::as_u64), Some(6));
+    assert_eq!(r.get("tokens").and_then(Json::as_arr).unwrap().len(), 6);
+}
+
+#[test]
+fn concurrent_clients() {
+    let addr = addr();
+    let mut handles = Vec::new();
+    for i in 0..4 {
+        let a = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut c = Client::connect(&a).unwrap();
+            let r = c.generate(&format!("prompt {i}"), 4).unwrap();
+            assert!(r.get("error").is_none(), "{r}");
+            r.get("n").and_then(Json::as_u64).unwrap()
+        }));
+    }
+    for h in handles {
+        assert_eq!(h.join().unwrap(), 4);
+    }
+}
+
+#[test]
+fn metrics_endpoint() {
+    let mut c = Client::connect(&addr()).unwrap();
+    // ensure at least one request happened
+    let _ = c.generate("x", 2).unwrap();
+    let m = c.call(&Json::obj(vec![("op", Json::str("metrics"))])).unwrap();
+    let reps = m.get("replicas").and_then(Json::as_arr).unwrap();
+    assert_eq!(reps.len(), 1);
+    assert!(reps[0].get("tokens").and_then(Json::as_f64).unwrap() >= 2.0);
+}
+
+#[test]
+fn malformed_json_gets_error_not_disconnect() {
+    use std::io::{BufRead, BufReader, Write};
+    let stream = std::net::TcpStream::connect(addr()).unwrap();
+    let mut r = BufReader::new(stream.try_clone().unwrap());
+    let mut w = stream;
+    writeln!(w, "this is not json").unwrap();
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    assert!(line.contains("error"));
+    // connection still alive:
+    writeln!(w, "{}", Json::obj(vec![("op", Json::str("ping"))])).unwrap();
+    line.clear();
+    r.read_line(&mut line).unwrap();
+    assert!(line.contains("true"));
+}
+
+#[test]
+fn unknown_op_is_error() {
+    let mut c = Client::connect(&addr()).unwrap();
+    let r = c.call(&Json::obj(vec![("op", Json::str("frobnicate"))])).unwrap();
+    assert!(r.get("error").is_some());
+}

@@ -1,0 +1,200 @@
+//! Property-based suites over the coordinator substrates (propcheck).
+
+use mamba2_serve::coordinator::batcher::{ActiveSeq, Admission, Batcher};
+use mamba2_serve::coordinator::request::{GenRequest, Sampling};
+use mamba2_serve::coordinator::slots::SlotPool;
+use mamba2_serve::eval::Tokenizer;
+use mamba2_serve::util::json::Json;
+use mamba2_serve::util::prng::Rng;
+use mamba2_serve::util::propcheck::{check, usize_in, vec_of, Config};
+
+// ------------------------------------------------------------ slot pool ---
+
+#[test]
+fn prop_slot_pool_conservation() {
+    // any interleaving of allocs/frees keeps used + free == capacity and
+    // never double-assigns a slot
+    let gen = vec_of(usize_in(0, 2), 200); // 0,1 = alloc; 2 = free-random
+    check(&Config { cases: 300, ..Default::default() }, &gen, |ops| {
+        let mut pool = SlotPool::new(8);
+        let mut held = Vec::new();
+        let mut rng = Rng::new(42);
+        for &op in ops {
+            if op < 2 {
+                if let Some(s) = pool.alloc(op as u64) {
+                    if held.contains(&s) {
+                        return false; // double-assignment!
+                    }
+                    held.push(s);
+                }
+            } else if !held.is_empty() {
+                let i = rng.below(held.len() as u64) as usize;
+                pool.free(held.swap_remove(i));
+            }
+            if pool.used() + (pool.capacity() - pool.used()) != 8 {
+                return false;
+            }
+            if pool.used() != held.len() {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_slot_pool_never_exceeds_capacity() {
+    let gen = usize_in(1, 64);
+    check(&Config::default(), &gen, |&cap| {
+        let mut pool = SlotPool::new(cap);
+        for i in 0..cap + 10 {
+            pool.alloc(i as u64);
+        }
+        pool.used() == cap && pool.is_full()
+    });
+}
+
+// -------------------------------------------------------------- batcher ---
+
+fn mk_req(id: u64, n: usize) -> GenRequest {
+    GenRequest { id, prompt: vec![1], max_new_tokens: n.max(1),
+                 sampling: Sampling::Greedy, stop_token: None }
+}
+
+#[test]
+fn prop_batcher_completes_all_requests() {
+    // for any request-length mix, driving the batcher to idle generates
+    // exactly max_new_tokens per request and never leaks a slot
+    let gen = vec_of(usize_in(1, 9), 24);
+    check(&Config { cases: 200, ..Default::default() }, &gen, |lens| {
+        let mut b = Batcher::new(3);
+        for (i, &n) in lens.iter().enumerate() {
+            b.submit(mk_req(i as u64, n));
+        }
+        let mut produced = vec![0usize; lens.len()];
+        let mut guard = 0;
+        while !b.is_idle() {
+            guard += 1;
+            if guard > 10_000 {
+                return false; // livelock
+            }
+            let mut admitted = 0;
+            while let Admission::Admit(req, slot) = b.next_admission(admitted)
+            {
+                admitted += 1;
+                // model "prefill produced first token"
+                produced[req.id as usize] += 1;
+                if req.max_new_tokens == 1 {
+                    b.slots.free(slot);
+                    continue;
+                }
+                b.activate(ActiveSeq {
+                    req_id: req.id, slot, last_token: 0, generated: 1,
+                    max_new_tokens: req.max_new_tokens,
+                    sampling: req.sampling, stop_token: None,
+                });
+            }
+            let act: Vec<_> = b.active_seqs().iter()
+                .map(|s| s.slot).collect();
+            for slot in act {
+                let id = b.slots.owner(slot).unwrap() as usize;
+                produced[id] += 1;
+                b.advance(slot, 5);
+            }
+        }
+        produced.iter().zip(lens).all(|(&p, &n)| p == n.max(1))
+            && b.slots.used() == 0
+    });
+}
+
+#[test]
+fn prop_batcher_active_never_exceeds_cap() {
+    let gen = vec_of(usize_in(1, 5), 30);
+    check(&Config { cases: 150, ..Default::default() }, &gen, |lens| {
+        let cap = 4;
+        let mut b = Batcher::new(cap);
+        for (i, &n) in lens.iter().enumerate() {
+            b.submit(mk_req(i as u64, n));
+        }
+        let mut guard = 0;
+        while !b.is_idle() && guard < 10_000 {
+            guard += 1;
+            let mut admitted = 0;
+            while let Admission::Admit(req, slot) = b.next_admission(admitted)
+            {
+                admitted += 1;
+                b.activate(ActiveSeq {
+                    req_id: req.id, slot, last_token: 0, generated: 0,
+                    max_new_tokens: req.max_new_tokens,
+                    sampling: req.sampling, stop_token: None,
+                });
+                if b.active_count() > cap {
+                    return false;
+                }
+            }
+            let act: Vec<_> = b.active_seqs().iter()
+                .map(|s| s.slot).collect();
+            for slot in act {
+                b.advance(slot, 1);
+            }
+        }
+        b.is_idle()
+    });
+}
+
+// ------------------------------------------------------------ tokenizer ---
+
+#[test]
+fn prop_tokenizer_roundtrip_ascii() {
+    let corpus = "the quick brown fox jumps over the lazy dog . ".repeat(30);
+    let tok = Tokenizer::train(&corpus, 64);
+    let gen = vec_of(usize_in(32, 126), 80)
+        .map(|bytes| bytes.into_iter()
+             .map(|b| b as u8 as char).collect::<String>());
+    let mut rng = Rng::new(9);
+    for _ in 0..300 {
+        let s = gen.sample(&mut rng);
+        assert_eq!(tok.decode(&tok.encode(&s)), s, "roundtrip failed: {s:?}");
+    }
+}
+
+#[test]
+fn prop_tokenizer_ids_in_vocab() {
+    let tok = Tokenizer::train(&"state space model ".repeat(50), 100);
+    let v = tok.vocab_size() as i32;
+    let gen = vec_of(usize_in(0, 255), 60);
+    check(&Config { cases: 200, ..Default::default() }, &gen, |bytes| {
+        let s: String = bytes.iter()
+            .map(|&b| b as u8 as char).collect();
+        tok.encode(&s).iter().all(|&t| t >= 0 && t < v)
+    });
+}
+
+// ------------------------------------------------------------------ json ---
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 1),
+            2 => Json::Num((rng.range(-1_000_000, 1_000_000) as f64) / 8.0),
+            3 => Json::Str((0..rng.below(12))
+                .map(|_| (32 + rng.below(94)) as u8 as char)
+                .collect()),
+            4 => Json::Arr((0..rng.below(5))
+                .map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::Obj((0..rng.below(5))
+                .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                .collect()),
+        }
+    }
+    let mut rng = Rng::new(0x4A534F4Eu64);
+    for _ in 0..500 {
+        let j = random_json(&mut rng, 3);
+        let s = j.to_string();
+        let back = Json::parse(&s)
+            .unwrap_or_else(|e| panic!("reparse failed on {s}: {e}"));
+        assert_eq!(j, back, "roundtrip mismatch for {s}");
+    }
+}
