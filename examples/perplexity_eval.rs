@@ -7,26 +7,28 @@
 //! cached O(1) path and reports both perplexities and their difference —
 //! the paper's Table 5 parity quantity.
 
-use anyhow::Result;
 use mamba2_serve::eval::corpus::eval_text;
 use mamba2_serve::eval::{cached_perplexity, strided_perplexity, Tokenizer};
-use mamba2_serve::runtime::{ModelSession, Runtime};
+use mamba2_serve::runtime::{open_backend, Backend};
 use mamba2_serve::tensor::load_mbt;
 use mamba2_serve::util::cli::Cli;
+use mamba2_serve::util::error::Result;
 
 fn main() -> Result<()> {
     mamba2_serve::util::logging::init();
     let cli = Cli::new("perplexity_eval", "strided perplexity on the \
                         bundled corpus")
         .opt("model", "sim-130m", "model config")
+        .opt("backend", "auto", "inference backend: auto|reference|xla")
         .opt("weights", "", "optional trained checkpoint (.mbt)")
         .opt("window", "256", "scoring window")
         .opt("stride", "128", "stride (paper: 512 at window 1024)")
         .opt("tokens", "1500", "corpus tokens to score")
         .parse_env();
 
-    let rt = Runtime::new(&mamba2_serve::artifacts_dir())?;
-    let mut session = ModelSession::new(rt, &cli.get("model"))?;
+    let mut session = open_backend(&cli.get("model"), &cli.get("backend"),
+                                   &mamba2_serve::artifacts_dir())?;
+    println!("backend: {} ({})", session.name(), session.platform());
     if !cli.get("weights").is_empty() {
         let w = load_mbt(std::path::Path::new(&cli.get("weights")))?;
         session.load_weights(w)?;
@@ -42,7 +44,8 @@ fn main() -> Result<()> {
              tokens.len(), cli.get_usize("window"), cli.get_usize("stride"));
 
     let t0 = std::time::Instant::now();
-    let r = strided_perplexity(&session, &tokens, cli.get_usize("window"),
+    let r = strided_perplexity(session.as_ref(), &tokens,
+                               cli.get_usize("window"),
                                cli.get_usize("stride"))?;
     println!("strided (reference) : ppl {:.4}  ({} tokens, {} windows, \
               {:.1}s)",
@@ -53,8 +56,9 @@ fn main() -> Result<()> {
     // implementation, not protocol
     let w = cli.get_usize("window");
     let span = (2 * w).min(tokens.len());
-    let c = cached_perplexity(&session, &tokens[..span], w)?;
-    let r2 = strided_perplexity(&session, &tokens[..span], span, span)?;
+    let c = cached_perplexity(session.as_ref(), &tokens[..span], w)?;
+    let r2 = strided_perplexity(session.as_ref(), &tokens[..span], span,
+                                span)?;
     println!("same-context parity : strided {:.6} vs cached {:.6} \
               (|Δ| = {:.2e}, paper bound 5e-4)",
              r2.ppl, c.ppl, (r2.ppl - c.ppl).abs());

@@ -3,27 +3,30 @@
 //!     cargo run --release --example quickstart -- --model sim-130m
 //!
 //! Demonstrates the three decode strategies of paper Table 1 on one prompt
-//! and prints their agreement + timing.
+//! and prints their agreement + timing. Runs hermetically on the
+//! pure-Rust reference backend by default; pass `--backend xla` (with a
+//! build `--features xla` and AOT artifacts) for the PJRT path.
 
 use std::time::Instant;
 
-use anyhow::Result;
 use mamba2_serve::coordinator::SingleStream;
 use mamba2_serve::eval::{corpus, Tokenizer};
-use mamba2_serve::runtime::{ModelSession, Runtime};
+use mamba2_serve::runtime::{open_backend, Backend};
 use mamba2_serve::util::cli::Cli;
+use mamba2_serve::util::error::Result;
 
 fn main() -> Result<()> {
     mamba2_serve::util::logging::init();
     let cli = Cli::new("quickstart", "generate text with a Mamba-2 model")
         .opt("model", "sim-130m", "model config")
+        .opt("backend", "auto", "inference backend: auto|reference|xla")
         .opt("prompt", "A state space model describes", "text prompt")
         .opt("tokens", "48", "tokens to generate")
         .parse_env();
 
-    let rt = Runtime::new(&mamba2_serve::artifacts_dir())?;
-    println!("platform: {}", rt.platform());
-    let session = ModelSession::new(rt, &cli.get("model"))?;
+    let session = open_backend(&cli.get("model"), &cli.get("backend"),
+                               &mamba2_serve::artifacts_dir())?;
+    println!("backend: {} ({})", session.name(), session.platform());
     let cfg = session.cfg().clone();
     println!("model: {} ({:.1}M params, {} layers, d_model {})",
              cfg.name, cfg.n_params_total as f64 / 1e6, cfg.n_layer,
@@ -34,13 +37,13 @@ fn main() -> Result<()> {
     let tok = Tokenizer::train(corpus::BUNDLED, 256);
     let prompt = tok.encode(&cli.get("prompt"));
     let n = cli.get_usize("tokens");
-    let ss = SingleStream::new(&session);
+    let ss = SingleStream::new(session.as_ref());
 
     println!("\nprompt ({} tokens): {:?}", prompt.len(),
              cli.get("prompt"));
-    // one-time XLA compile (paper Table 12) happens on first use; warm up
-    // so the timings below reflect steady-state inference
-    print!("compiling executables (one-time)... ");
+    // one-time compile (XLA backend, paper Table 12) happens on first
+    // use; warm up so the timings below reflect steady-state inference
+    print!("warming up (compiles executables on the xla backend)... ");
     let t0 = Instant::now();
     let _ = ss.generate_scan(&prompt, n)?;
     let _ = ss.generate_noncached(&prompt, 2)?;

@@ -3,8 +3,9 @@
 //!     cargo run --release --example serve_batch -- --model sim-130m \
 //!         --requests 32 --clients 4
 //!
-//! Boots the full stack — PJRT runtime → engine replicas under the router →
-//! TCP server — then drives it with concurrent closed-loop clients over
+//! Boots the full stack — inference backend (reference or XLA) → engine
+//! replicas under the router → TCP server — then drives it with
+//! concurrent closed-loop clients over
 //! real sockets, streaming text prompts sampled from the bundled corpus.
 //! Reports throughput, latency percentiles and batcher occupancy: the
 //! continuous-batching scheduler the paper's §6 declares compatible with
@@ -13,12 +14,12 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::Result;
 use mamba2_serve::coordinator::{Engine, EngineConfig, Router};
 use mamba2_serve::eval::{corpus, Tokenizer};
-use mamba2_serve::runtime::{ModelSession, Runtime};
+use mamba2_serve::runtime::{open_backend_replicas, Backend};
 use mamba2_serve::server::{Client, Server};
 use mamba2_serve::util::cli::Cli;
+use mamba2_serve::util::error::Result;
 use mamba2_serve::util::json::Json;
 use mamba2_serve::util::prng::Rng;
 use mamba2_serve::util::stats::Summary;
@@ -27,6 +28,7 @@ fn main() -> Result<()> {
     mamba2_serve::util::logging::init();
     let cli = Cli::new("serve_batch", "end-to-end serving benchmark")
         .opt("model", "sim-130m", "model config")
+        .opt("backend", "auto", "inference backend: auto|reference|xla")
         .opt("replicas", "1", "engine replicas")
         .opt("batch-cap", "4", "continuous-batching slots")
         .opt("requests", "32", "total requests")
@@ -34,14 +36,16 @@ fn main() -> Result<()> {
         .opt("gen-tokens", "24", "tokens per request")
         .parse_env();
 
-    let rt = Runtime::new(&mamba2_serve::artifacts_dir())?;
-    println!("platform: {}", rt.platform());
     let model = cli.get("model");
+    let backends = open_backend_replicas(
+        &model, &cli.get("backend"), &mamba2_serve::artifacts_dir(),
+        cli.get_usize("replicas"))?;
+    println!("backend: {} ({})", backends[0].name(),
+             backends[0].platform());
 
     // --- boot the full stack ------------------------------------------
     let mut replicas = Vec::new();
-    for _ in 0..cli.get_usize("replicas") {
-        let session = ModelSession::new(Arc::clone(&rt), &model)?;
+    for session in backends {
         replicas.push(Arc::new(Engine::start(session, EngineConfig {
             batch_cap: cli.get_usize("batch-cap"),
             ..Default::default()
@@ -86,7 +90,7 @@ fn main() -> Result<()> {
                 let t = Instant::now();
                 let r = client.generate(&p, gen_tokens)?;
                 if let Some(e) = r.get("error") {
-                    anyhow::bail!("server error: {e}");
+                    mamba2_serve::bail!("server error: {e}");
                 }
                 assert_eq!(r.get("n").and_then(Json::as_u64),
                            Some(gen_tokens as u64));

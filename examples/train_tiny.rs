@@ -8,12 +8,12 @@
 //! (params, m, v) across steps, then saves the trained checkpoint to a
 //! .mbt the server / perplexity example can load.
 
-use anyhow::Result;
 use mamba2_serve::eval::corpus::eval_text;
 use mamba2_serve::eval::Tokenizer;
 use mamba2_serve::runtime::{ModelSession, Runtime};
 use mamba2_serve::tensor::{save_mbt, Tensor};
 use mamba2_serve::util::cli::Cli;
+use mamba2_serve::util::error::Result;
 use mamba2_serve::util::prng::Rng;
 
 fn main() -> Result<()> {

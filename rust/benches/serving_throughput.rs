@@ -10,14 +10,12 @@
 
 use std::sync::Arc;
 
-use mamba2_serve::bench_support::{open_runtime, quick};
+use mamba2_serve::bench_support::{open_backend, quick};
 use mamba2_serve::coordinator::{Engine, EngineConfig, Sampling};
-use mamba2_serve::runtime::ModelSession;
 use mamba2_serve::util::benchkit::{save_results, Table};
 use mamba2_serve::util::prng::Rng;
 
 fn main() {
-    let rt = open_runtime();
     let model = "sim-130m";
     let n_requests = if quick() { 8 } else { 24 };
     let gen_len = 24;
@@ -28,7 +26,7 @@ fn main() {
           "e2e p99 ms", "mean occupancy"]);
 
     for &conc in if quick() { &[1usize, 4][..] } else { &[1usize, 2, 4] } {
-        let session = ModelSession::new(rt.clone(), model).unwrap();
+        let session = open_backend(model);
         let eng = Arc::new(Engine::start(session, EngineConfig {
             batch_cap: 4,
             ..Default::default()

@@ -9,12 +9,11 @@
 //! independent; non-cached collapses; the host-loop penalty appears at
 //! small scale and dissolves at large scale.
 
-use mamba2_serve::bench_support::{open_runtime, paper_config, quick,
+use mamba2_serve::bench_support::{open_backend, paper_config, quick,
                                   SIM_MODELS};
 use mamba2_serve::coordinator::SingleStream;
 use mamba2_serve::perf::sim::{project_decode, Strategy};
 use mamba2_serve::perf::TPU_V6E;
-use mamba2_serve::runtime::ModelSession;
 use mamba2_serve::util::benchkit::{save_results, Bench, Table};
 
 /// Paper Table 1 reference rows (tokens/s on TPU v6e) at g=128/1024/4096.
@@ -27,7 +26,6 @@ const PAPER_T1: [(&str, [f64; 3], [f64; 3], [f64; 3]); 5] = [
 ];
 
 fn main() {
-    let rt = open_runtime();
     let prompt: Vec<i32> = (1..17).collect(); // paper: prompt fixed at 16
     let gens: Vec<usize> = if quick() { vec![32] } else { vec![32, 128, 256] };
     let gens_nc: Vec<usize> = if quick() { vec![16] } else { vec![32, 128] };
@@ -43,8 +41,8 @@ fn main() {
         &["Model", "Method", "g=32", "g=128", "g=256"]);
 
     for (sim, _paper) in &models {
-        let session = ModelSession::new(rt.clone(), sim).unwrap();
-        let ss = SingleStream::new(&session);
+        let session = open_backend(sim);
+        let ss = SingleStream::new(session.as_ref());
 
         let mut row_scan = vec![sim.to_string(), "Cached (scan)".into()];
         let mut row_host = vec![sim.to_string(), "Cached (host)".into()];

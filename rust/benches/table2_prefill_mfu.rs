@@ -1,15 +1,16 @@
 //! Paper Table 2 + Figure 4(a) + Figure 6: prefill model-FLOP utilisation.
 //!
-//! MFU = (F_XLA / t_wall) / peak (paper Eq. 4). F_XLA comes from the XLA
-//! cost analysis recorded in the manifest at AOT time — exactly the paper's
-//! numerator. CPU MFU is measured; TPU-v6e MFU is projected from the
-//! analytic cost model at paper scale.
+//! MFU = (F / t_wall) / peak (paper Eq. 4). The numerator comes from the
+//! backend's cost model: the XLA cost analysis recorded in the manifest
+//! at AOT time (exactly the paper's F_XLA) on the xla backend, the
+//! analytic model over the same config shapes on the reference backend.
+//! CPU MFU is measured; TPU-v6e MFU is projected at paper scale.
 
-use mamba2_serve::bench_support::{open_runtime, paper_config, quick,
+use mamba2_serve::bench_support::{open_backend, paper_config, quick,
                                   SIM_MODELS};
 use mamba2_serve::perf::sim::project_prefill;
 use mamba2_serve::perf::{mfu, CPU_HOST, TPU_V6E};
-use mamba2_serve::runtime::ModelSession;
+use mamba2_serve::runtime::Backend;
 use mamba2_serve::util::benchkit::{save_results, Bench, Table};
 
 /// Paper Table 2 (prefill MFU %, prompt lengths 1024/4096/8192).
@@ -22,32 +23,32 @@ const PAPER_T2: [(&str, [f64; 3]); 5] = [
 ];
 
 fn main() {
-    let rt = open_runtime();
     let prompts: Vec<usize> = if quick() { vec![64] } else { vec![64, 256, 512] };
     let models: Vec<_> = if quick() { SIM_MODELS[..2].to_vec() }
                          else { SIM_MODELS.to_vec() };
 
     let mut bench = Bench::new().quiet();
     let mut measured = Table::new(
-        "Measured prefill MFU % (CPU backend; F_XLA from manifest cost \
-         analysis)",
+        "Measured prefill MFU % (CPU; F from the backend's cost model)",
         &["Model", "t=64", "t=256", "t=512", "tokens/s @512"]);
 
+    let mut costs = Vec::new(); // (name, cost) for the shape check below
     for (sim, _) in &models {
-        let session = ModelSession::new(rt.clone(), sim).unwrap();
+        let session = open_backend(sim);
         let mut row = vec![sim.to_string()];
         let mut last_tps = 0.0;
         for &t in &prompts {
             let name = format!("{sim}.prefill.t{t}");
-            let spec = rt.manifest.find(&name).unwrap().clone();
+            let cost = session.cost("prefill", Some(t), 1);
             let tokens: Vec<i32> = (0..t as i32).map(|i| i % 512).collect();
             let m = bench.measure(&name, t as f64, || {
                 session.prefill(&tokens, 1).unwrap();
             });
             row.push(format!("{:.2}",
-                             mfu(&spec, m.summary.mean,
+                             mfu(&cost, m.summary.mean,
                                  CPU_HOST.peak_tflops) * 100.0));
             last_tps = m.throughput();
+            costs.push((name, cost));
         }
         while row.len() < 4 { row.push("-".into()); }
         row.push(format!("{last_tps:.0}"));
@@ -78,10 +79,13 @@ fn main() {
     if !quick() {
         let m_small = bench.get("sim-130m.prefill.t512").unwrap();
         let m_big = bench.get("sim-2.7b.prefill.t512").unwrap();
-        let spec_s = rt.manifest.find("sim-130m.prefill.t512").unwrap();
-        let spec_b = rt.manifest.find("sim-2.7b.prefill.t512").unwrap();
-        let mfu_s = mfu(spec_s, m_small.summary.mean, CPU_HOST.peak_tflops);
-        let mfu_b = mfu(spec_b, m_big.summary.mean, CPU_HOST.peak_tflops);
+        let find = |n: &str| {
+            costs.iter().find(|c| c.0 == n).unwrap().1.clone()
+        };
+        let cost_s = find("sim-130m.prefill.t512");
+        let cost_b = find("sim-2.7b.prefill.t512");
+        let mfu_s = mfu(&cost_s, m_small.summary.mean, CPU_HOST.peak_tflops);
+        let mfu_b = mfu(&cost_b, m_big.summary.mean, CPU_HOST.peak_tflops);
         shape.row(vec![
             format!("MFU rises with scale: {:.2}% -> {:.2}%",
                     mfu_s * 100.0, mfu_b * 100.0),

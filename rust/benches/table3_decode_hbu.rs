@@ -1,16 +1,18 @@
 //! Paper Table 3 + Figure 4(b): decode hardware-bandwidth utilisation.
 //!
-//! HBU = (B_XLA / t_wall) / peak BW (paper Eq. 5); B_XLA is the unfused
-//! byte count from XLA cost analysis, so HBU is an upper bound — the same
-//! caveat the paper states in §4.1. The paper's claim under test: HBU is
+//! HBU = (B / t_wall) / peak BW (paper Eq. 5); B is the unfused byte
+//! count from the backend's cost model (XLA cost analysis on the xla
+//! backend, the analytic model on the reference backend), so HBU is an
+//! upper bound — the same caveat the paper states in §4.1. The paper's
+//! claim under test: HBU is
 //! constant across sequence lengths (<1.7pp spread) because each step
 //! touches the same fixed-size state.
 
-use mamba2_serve::bench_support::{open_runtime, paper_config, quick,
+use mamba2_serve::bench_support::{open_backend, paper_config, quick,
                                   SIM_MODELS};
 use mamba2_serve::perf::sim::{decode_step_bytes, decode_step_flops};
 use mamba2_serve::perf::{hbu, CPU_HOST, TPU_V6E};
-use mamba2_serve::runtime::{CacheState, ModelSession};
+use mamba2_serve::runtime::Backend;
 use mamba2_serve::util::benchkit::{save_results, Bench, Table};
 
 /// Paper Table 3: decode HBU % by sequence length (128..4096).
@@ -24,7 +26,6 @@ const PAPER_T3: [(&str, f64, f64); 5] = [
 ];
 
 fn main() {
-    let rt = open_runtime();
     let models: Vec<_> = if quick() { SIM_MODELS[..2].to_vec() }
                          else { SIM_MODELS.to_vec() };
     // "sequence length" for cached decode = how much prefix was consumed
@@ -33,13 +34,12 @@ fn main() {
 
     let mut bench = Bench::new().quiet();
     let mut measured = Table::new(
-        "Measured decode-step HBU % (CPU backend; B_XLA from manifest)",
+        "Measured decode-step HBU % (CPU; B from the backend's cost model)",
         &["Model", "prefix=16", "prefix=256", "spread pp", "step ms"]);
 
     for (sim, _) in &models {
-        let session = ModelSession::new(rt.clone(), sim).unwrap();
-        let spec = rt.manifest
-            .find(&format!("{sim}.decode_step.b1")).unwrap().clone();
+        let session = open_backend(sim);
+        let cost = session.cost("decode_step", None, 1);
         let mut row = vec![sim.to_string()];
         let mut hbus = Vec::new();
         let mut step_ms = 0.0;
@@ -49,7 +49,7 @@ fn main() {
             let m = bench.measure(
                 &format!("{sim}.step.pre{pre}"), 1.0,
                 || { session.decode_step(&cache, &[7]).unwrap(); });
-            let h = hbu(&spec, m.summary.mean, CPU_HOST.peak_gbps);
+            let h = hbu(&cost, m.summary.mean, CPU_HOST.peak_gbps);
             hbus.push(h);
             row.push(format!("{:.2}", h * 100.0));
             step_ms = m.summary.mean * 1e3;
@@ -61,8 +61,6 @@ fn main() {
         row.push(format!("{spread:.2}"));
         row.push(format!("{step_ms:.2}"));
         measured.row(row);
-        // keep the zero-prefix cache around for dummy use
-        let _ = CacheState::zeros(session.cfg(), 1);
         eprintln!("  [{sim}] done");
     }
     measured.print();

@@ -8,11 +8,11 @@
 //! independent routes through the same weights whose agreement is the
 //! measured quantity.
 
-use mamba2_serve::bench_support::{open_runtime, quick, SIM_MODELS};
+use mamba2_serve::bench_support::{open_backend, quick, SIM_MODELS};
 use mamba2_serve::eval::corpus::eval_text;
 use mamba2_serve::eval::tokenizer::Tokenizer;
 use mamba2_serve::eval::{cached_perplexity, strided_perplexity};
-use mamba2_serve::runtime::ModelSession;
+use mamba2_serve::runtime::Backend;
 use mamba2_serve::util::benchkit::{save_results, Table};
 
 /// Paper Table 5: WikiText-103 PPL (Triton, JAX, |Δ|).
@@ -25,7 +25,6 @@ const PAPER_T5: [(&str, f64, f64, f64); 5] = [
 ];
 
 fn main() {
-    let rt = open_runtime();
     let tok = Tokenizer::bytes_only(); // byte ids < 512 = model vocab
     let text = eval_text(0);
     let mut tokens = tok.encode(&text);
@@ -41,16 +40,17 @@ fn main() {
           "paper JAX", "paper |Δ|"]);
     let mut max_delta = 0.0f64;
     for (i, (sim, paper)) in models.iter().enumerate() {
-        let session = ModelSession::new(rt.clone(), sim).unwrap();
+        let session = open_backend(sim);
+        let session = session.as_ref();
         // reference: non-cached strided forward (window 256, stride 128 —
         // the paper's 1024/512 protocol scaled to sim buckets)
-        let r = strided_perplexity(&session, &tokens, 256, 128).unwrap();
+        let r = strided_perplexity(session, &tokens, 256, 128).unwrap();
         // implementation under test: prefill + O(1) cached scoring
         let span = 512.min(tokens.len());
-        let c = cached_perplexity(&session, &tokens[..span], 256).unwrap();
+        let c = cached_perplexity(session, &tokens[..span], 256).unwrap();
         // parity claim is about identical contexts: rescore the same span
         // in ONE window so both paths condition on the same history
-        let r2 = strided_perplexity(&session, &tokens[..span], span, span)
+        let r2 = strided_perplexity(session, &tokens[..span], span, span)
             .unwrap();
         let delta = (c.ppl - r2.ppl).abs();
         max_delta = max_delta.max(delta);
@@ -73,7 +73,7 @@ fn main() {
     let mut f5 = Table::new(
         "Fig 5: perplexity vs batch size (sim-130m)",
         &["Batch", "PPL", "|Δ vs b=1|"]);
-    let session = ModelSession::new(rt.clone(), "sim-130m").unwrap();
+    let session = open_backend("sim-130m");
     let w = 16; // batched prefill bucket
     // score the same 4 windows at batch 1 and batch 4
     let windows: Vec<Vec<i32>> = (0..4)

@@ -10,7 +10,7 @@
 use std::path::Path;
 
 use mamba2_serve::bench_support::open_runtime;
-use mamba2_serve::runtime::ModelSession;
+use mamba2_serve::runtime::{Backend, ModelSession};
 use mamba2_serve::tensor::{find, load_mbt};
 use mamba2_serve::util::benchkit::{save_results, Table};
 

@@ -5,9 +5,8 @@
 //! hardware-specific, and (c) the paper's own reported numbers alongside,
 //! then saves machine-readable results under `bench_results/`.
 
-use std::sync::Arc;
-
-use crate::runtime::{ConfigInfo, Runtime};
+use crate::runtime::{open_backend as open_backend_checked, Backend,
+                     ConfigInfo};
 
 /// The five sim scales, smallest→largest, with their paper counterparts.
 pub const SIM_MODELS: [(&str, &str); 5] = [
@@ -67,11 +66,33 @@ pub fn paper_config(scale: &str) -> ConfigInfo {
     }
 }
 
-pub fn open_runtime() -> Arc<Runtime> {
-    let rt = Runtime::new(&crate::artifacts_dir()).unwrap_or_else(|e| {
-        eprintln!("cannot open artifacts ({e}); run `make artifacts` first");
-        std::process::exit(1);
-    });
+/// Open a backend for a bench target: XLA over the AOT artifacts when
+/// compiled in and present, the hermetic reference backend otherwise.
+/// Selection goes through `runtime::open_backend("auto", ..)`, which
+/// honours the `M2_BACKEND=reference|xla` env var override.
+pub fn open_backend(model: &str) -> Box<dyn Backend> {
+    match open_backend_checked(model, "auto", &crate::artifacts_dir()) {
+        Ok(b) => {
+            eprintln!("  [{model}] backend: {} ({})", b.name(),
+                      b.platform());
+            b
+        }
+        Err(e) => {
+            eprintln!("cannot open backend for {model}: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// Open the raw XLA runtime (artifact-introspection benches only).
+#[cfg(feature = "xla")]
+pub fn open_runtime() -> std::sync::Arc<crate::runtime::Runtime> {
+    let rt = crate::runtime::Runtime::new(&crate::artifacts_dir())
+        .unwrap_or_else(|e| {
+            eprintln!("cannot open artifacts ({e}); run `make artifacts` \
+                       first");
+            std::process::exit(1);
+        });
     rt
 }
 

@@ -1,7 +1,9 @@
-//! Generation engine: drives the PJRT session under the continuous batcher.
+//! Generation engine: drives one inference backend under the continuous
+//! batcher (DESIGN.md §3).
 //!
-//! One engine owns one `ModelSession`, one batched `CacheState` of
-//! `batch_cap` slots, and a request queue. The loop:
+//! One engine owns one `Box<dyn Backend>` — the pure-Rust reference
+//! backend or the PJRT/XLA session, chosen at startup — one batched
+//! `CacheState` of `batch_cap` slots, and a request queue. The loop:
 //!
 //!   1. drain newly submitted requests into the batcher queue
 //!   2. admit queued requests while slots are free (bounded per iteration):
@@ -20,14 +22,13 @@ use std::sync::Arc;
 use std::thread;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
-
 use super::batcher::{ActiveSeq, Admission, Batcher};
 use super::metrics::Metrics;
 use super::request::{channel, GenRequest, ResponseSink,
                      ResponseStream, Sampling};
-use crate::runtime::{CacheState, Manifest, ModelSession};
+use crate::runtime::{argmax_last, Backend, CacheState, Manifest};
 use crate::tensor::Tensor;
+use crate::util::error::Result;
 use crate::util::prng::Rng;
 
 pub struct EngineConfig {
@@ -96,7 +97,7 @@ impl Drop for EngineHandle {
 }
 
 pub struct Engine {
-    session: ModelSession,
+    session: Box<dyn Backend>,
     cfg: EngineConfig,
     batcher: Batcher,
     cache: CacheState,
@@ -110,17 +111,18 @@ pub struct Engine {
 }
 
 impl Engine {
-    /// Spawn the engine loop on its own thread.
-    pub fn start(session: ModelSession, cfg: EngineConfig)
+    /// Spawn the engine loop on its own thread, driving `session`
+    /// (any [`Backend`]: reference or XLA).
+    pub fn start(session: Box<dyn Backend>, cfg: EngineConfig)
         -> Result<EngineHandle> {
         let metrics = Arc::new(Metrics::new());
         let m2 = Arc::clone(&metrics);
         let (tx, rx) = mpsc::channel::<Msg>();
         let model_cfg = session.cfg().clone();
-        // the batched decode executable has a fixed width (artifact
+        // the batched decode executable has a fixed width (backend
         // batch_cap); the engine's logical slot count may be smaller, but
-        // the device cache always spans the full executable width
-        let exe_batch = session.rt.manifest.batch_cap;
+        // the batched cache always spans the full executable width
+        let exe_batch = session.batch_cap();
         let slots = cfg.batch_cap.min(exe_batch).max(1);
         let cache = CacheState::zeros(&model_cfg, exe_batch);
         let mut eng = Engine {
@@ -340,24 +342,24 @@ fn sample(logits: &Tensor, sampling: Sampling, rng: &mut Rng) -> i32 {
 
 // ------------------------------------------------- single-stream paths ---
 
-/// The paper's three decode strategies over one sequence (Table 1).
+/// The paper's three decode strategies over one sequence (Table 1),
+/// backend-agnostic.
 pub struct SingleStream<'a> {
-    pub session: &'a ModelSession,
+    pub session: &'a dyn Backend,
 }
 
 impl<'a> SingleStream<'a> {
-    pub fn new(session: &'a ModelSession) -> Self {
+    pub fn new(session: &'a dyn Backend) -> Self {
         SingleStream { session }
     }
 
-    /// "Cached (scan)": compiled on-device fori_loop, one launch per bucket.
+    /// "Cached (scan)": the fused decode loop, one launch per bucket.
     pub fn generate_scan(&self, prompt: &[i32], n: usize)
         -> Result<Vec<i32>> {
         let (mut cache, last_logits) = self.session.prefill_any(prompt)?;
-        let first = ModelSession::argmax_last(&last_logits)[0];
+        let first = argmax_last(&last_logits)[0];
         let mut out = vec![first];
-        let buckets =
-            self.session.rt.manifest.decode_loop_buckets.clone();
+        let buckets = self.session.decode_loop_buckets();
         let mut remaining = n.saturating_sub(1);
         let mut tok = first;
         while remaining > 0 {
@@ -379,12 +381,12 @@ impl<'a> SingleStream<'a> {
     pub fn generate_host(&self, prompt: &[i32], n: usize)
         -> Result<Vec<i32>> {
         let (mut cache, last_logits) = self.session.prefill_any(prompt)?;
-        let mut tok = ModelSession::argmax_last(&last_logits)[0];
+        let mut tok = argmax_last(&last_logits)[0];
         let mut out = vec![tok];
         for _ in 1..n {
             let step = self.session.decode_step(&cache, &[tok])?;
             cache = step.cache;
-            tok = ModelSession::argmax_last(&step.logits)[0];
+            tok = argmax_last(&step.logits)[0];
             out.push(tok);
         }
         Ok(out)
@@ -394,7 +396,7 @@ impl<'a> SingleStream<'a> {
     /// every generated token (the baseline the paper's Figure 2 collapses).
     pub fn generate_noncached(&self, prompt: &[i32], n: usize)
         -> Result<Vec<i32>> {
-        let fwd_buckets = self.session.rt.manifest.forward_buckets.clone();
+        let fwd_buckets = self.session.forward_buckets();
         let mut ctx = prompt.to_vec();
         let mut out = Vec::new();
         for _ in 0..n {
@@ -406,18 +408,18 @@ impl<'a> SingleStream<'a> {
             let tok = match Manifest::pick_bucket(&fwd_buckets, ctx.len()) {
                 Some(b) if b <= ctx.len() && b == ctx.len() => {
                     let logits = self.session.forward_full(&ctx)?;
-                    ModelSession::argmax_last(&logits)[0]
+                    argmax_last(&logits)[0]
                 }
                 Some(b) if b <= ctx.len() => {
                     let window = &ctx[ctx.len() - b..];
                     let logits = self.session.forward_full(window)?;
-                    ModelSession::argmax_last(&logits)[0]
+                    argmax_last(&logits)[0]
                 }
                 _ => {
                     // context shorter than every bucket: exact recompute
                     // from scratch via the step chain
                     let (_, last) = self.session.prefill_any(&ctx)?;
-                    ModelSession::argmax_last(&last)[0]
+                    argmax_last(&last)[0]
                 }
             };
             out.push(tok);

@@ -1,8 +1,9 @@
-//! Layer-3 coordinator: the serving system around the O(1) cache.
+//! Layer-3 coordinator: the serving system around the O(1) cache
+//! (DESIGN.md §3).
 //!
 //! * `slots`   — fixed-size state-slot pool (vLLM block-manager analogue)
 //! * `batcher` — continuous batching at decode-step granularity
-//! * `engine`  — generation loop over the PJRT session
+//! * `engine`  — generation loop over any `runtime::Backend`
 //! * `router`  — least-loaded placement across engine replicas
 //! * `request` — request/response streaming types
 //! * `metrics` — counters + latency histograms

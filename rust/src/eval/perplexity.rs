@@ -6,10 +6,9 @@
 //! implementations of the same model under matched conditions — is
 //! identical in structure to Table 5.
 
-use anyhow::Result;
-
-use crate::runtime::ModelSession;
+use crate::runtime::Backend;
 use crate::tensor::Tensor;
+use crate::util::error::Result;
 
 /// Sum of log-probs of `tokens[i+1]` under logits at position i, for
 /// positions [from, to). logits: (1, T, V).
@@ -46,19 +45,20 @@ pub struct PplResult {
 /// scoring only the last `stride` positions of each window (so every token
 /// is scored once with at least `window - stride` tokens of context).
 pub fn strided_perplexity(
-    session: &ModelSession,
+    session: &dyn Backend,
     tokens: &[i32],
     window: usize,
     stride: usize,
 ) -> Result<PplResult> {
     assert!(stride <= window && stride > 0);
-    // AOT shapes: forward_full exists only at bucket lengths, so every
-    // window must be exactly `window` long. If the text is shorter than
-    // one window, score the largest bucket that fits.
+    // Bucketed shapes: forward_full exists only at bucket lengths, so
+    // every window must be exactly `window` long. If the text is shorter
+    // than one window, score the largest bucket that fits.
     let mut tokens = tokens;
     if tokens.len() < window {
-        let buckets = &session.rt.manifest.forward_buckets;
-        let b = crate::runtime::Manifest::pick_bucket(buckets, tokens.len())
+        let buckets = session.forward_buckets();
+        let b = crate::runtime::Manifest::pick_bucket(&buckets,
+                                                     tokens.len())
             .unwrap_or(tokens.len());
         tokens = &tokens[..b.min(tokens.len())];
         let logits = session.forward_full(tokens)?;
@@ -101,7 +101,7 @@ pub fn strided_perplexity(
 /// "JAX implementation" column vs `strided_perplexity` on the non-cached
 /// path as the reference column.
 pub fn cached_perplexity(
-    session: &ModelSession,
+    session: &dyn Backend,
     tokens: &[i32],
     prefill_bucket: usize,
 ) -> Result<PplResult> {

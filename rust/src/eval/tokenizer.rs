@@ -98,7 +98,8 @@ impl Tokenizer {
     }
 
     // ------------------------------------------------------ store -----
-    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+    pub fn save(&self, path: &std::path::Path)
+        -> crate::util::error::Result<()> {
         let mut s = String::new();
         for (a, b) in &self.merges {
             s.push_str(&format!("{a} {b}\n"));
@@ -106,7 +107,8 @@ impl Tokenizer {
         Ok(std::fs::write(path, s)?)
     }
 
-    pub fn load(path: &std::path::Path) -> anyhow::Result<Tokenizer> {
+    pub fn load(path: &std::path::Path)
+        -> crate::util::error::Result<Tokenizer> {
         let text = std::fs::read_to_string(path)?;
         let mut merges = Vec::new();
         for line in text.lines() {

@@ -1,11 +1,22 @@
 //! mamba2-serve — compiler-first Mamba-2 (SSD) inference with portable
 //! O(1) autoregressive caching.
 //!
-//! Three-layer architecture (DESIGN.md):
-//!   L1/L2 (python, build-time only): Pallas SSD kernels + JAX model,
-//!     AOT-lowered to HLO text artifacts by `make artifacts`.
-//!   L3 (this crate): PJRT runtime loading those artifacts + the serving
-//!     coordinator (continuous batching over O(1) state slots).
+//! Three-layer architecture (see `DESIGN.md` at the repo root, and
+//! `README.md` for the quickstart + wire protocol):
+//!
+//!   * **L1/L2** (`python/`, build-time only): Pallas SSD kernels + JAX
+//!     model, AOT-lowered to HLO text artifacts by `make artifacts`.
+//!   * **L3** (this crate): pluggable inference backends behind
+//!     [`runtime::Backend`] — the hermetic pure-Rust
+//!     [`runtime::ReferenceBackend`] (default) and the PJRT/XLA session
+//!     over the AOT artifacts (`--features xla`) — plus the serving
+//!     coordinator (continuous batching over O(1) state slots), the TCP
+//!     line-JSON [`server`], the [`eval`] substrates and the [`perf`]
+//!     projection models.
+//!
+//! The default build is hermetic: no external crates, no Python, no
+//! artifacts. `cargo test` exercises the full serving stack end-to-end on
+//! the reference backend.
 
 pub mod bench_support;
 pub mod coordinator;
@@ -16,7 +27,18 @@ pub mod server;
 pub mod tensor;
 pub mod util;
 
-/// Default artifacts directory (overridable with --artifacts / M2_ARTIFACTS).
+/// Resolve the AOT artifacts directory (XLA backend only). This is the
+/// single source of truth for the override mechanisms, in precedence
+/// order:
+///
+/// 1. the `--artifacts <dir>` flag of the binaries — when given, they
+///    use it directly and never call this function,
+/// 2. the `M2_ARTIFACTS` environment variable,
+/// 3. `<crate root>/artifacts` (where `make artifacts` writes).
+///
+/// The reference backend never reads artifacts; `"auto"` backend
+/// selection probes `<dir>/manifest.json` to decide whether the XLA path
+/// is usable.
 pub fn artifacts_dir() -> std::path::PathBuf {
     if let Ok(p) = std::env::var("M2_ARTIFACTS") {
         return p.into();

@@ -2,30 +2,44 @@
 //!
 //!   mamba2-serve --model sim-130m --addr 127.0.0.1:7433 --replicas 1
 //!
-//! Loads AOT artifacts, starts engine replicas under the router, and serves
-//! the line-JSON protocol (see server/mod.rs).
+//! Starts engine replicas under the router and serves the line-JSON
+//! protocol (see server/mod.rs and the README protocol table).
+//!
+//! Backend selection (`--backend`):
+//!   * `auto` (default) — PJRT/XLA over AOT artifacts when the binary was
+//!     built with `--features xla` and `<artifacts>/manifest.json`
+//!     exists; the hermetic pure-Rust reference backend otherwise.
+//!   * `reference` / `xla` — force one; `xla` errors cleanly when not
+//!     compiled in.
+//!
+//! The artifacts directory comes from `--artifacts` or the `M2_ARTIFACTS`
+//! env var (see `mamba2_serve::artifacts_dir`).
 
 use std::sync::Arc;
 
-use anyhow::Result;
 use mamba2_serve::coordinator::{Engine, EngineConfig, Router};
 use mamba2_serve::eval::corpus;
 use mamba2_serve::eval::Tokenizer;
-use mamba2_serve::runtime::{ModelSession, Runtime};
+use mamba2_serve::runtime::{open_backend_replicas, Backend};
 use mamba2_serve::server::Server;
 use mamba2_serve::util::cli::Cli;
+use mamba2_serve::util::error::Result;
 use mamba2_serve::{artifacts_dir, log_info};
 
 fn main() -> Result<()> {
     mamba2_serve::util::logging::init();
     let cli = Cli::new("mamba2-serve",
                        "compiler-first Mamba-2 serving coordinator")
-        .opt("model", "sim-130m", "model config (see manifest)")
+        .opt("model", "sim-130m", "model config (tiny, sim-130m ... \
+              sim-2.7b)")
+        .opt("backend", "auto", "inference backend: auto|reference|xla \
+              (auto honours the M2_BACKEND env var)")
         .opt("addr", "127.0.0.1:7433", "listen address")
         .opt("replicas", "1", "engine replicas")
         .opt("batch-cap", "4", "continuous-batching slots per replica")
         .opt("threads", "8", "server worker threads")
-        .opt("artifacts", "", "artifacts dir (default: repo artifacts/)")
+        .opt("artifacts", "", "artifacts dir (default: M2_ARTIFACTS or \
+              <crate>/artifacts; xla backend only)")
         .opt("weights", "", "optional trained checkpoint (.mbt)")
         .parse_env();
 
@@ -34,25 +48,30 @@ fn main() -> Result<()> {
     } else {
         cli.get("artifacts").into()
     };
-    let rt = Runtime::new(&dir)?;
-    log_info!("platform={} artifacts={}", rt.platform(), dir.display());
-    rt.manifest.validate()?;
-
     let model = cli.get("model");
+    let n_replicas = cli.get_usize("replicas");
+    let backends =
+        open_backend_replicas(&model, &cli.get("backend"), &dir,
+                              n_replicas)?;
+
     let mut replicas = Vec::new();
-    for i in 0..cli.get_usize("replicas") {
-        let mut session = ModelSession::new(Arc::clone(&rt), &model)?;
+    for (i, mut backend) in backends.into_iter().enumerate() {
+        if i == 0 {
+            log_info!("backend={} platform={} model={} ({:.1}M params)",
+                      backend.name(), backend.platform(), model,
+                      backend.cfg().n_params_total as f64 / 1e6);
+        }
         if !cli.get("weights").is_empty() {
             let w = mamba2_serve::tensor::load_mbt(
                 std::path::Path::new(&cli.get("weights")))?;
-            session.load_weights(w)?;
+            backend.load_weights(w)?;
             log_info!("replica {i}: loaded weights {}", cli.get("weights"));
         }
         let cfg = EngineConfig {
             batch_cap: cli.get_usize("batch-cap"),
             ..Default::default()
         };
-        replicas.push(Arc::new(Engine::start(session, cfg)?));
+        replicas.push(Arc::new(Engine::start(backend, cfg)?));
         log_info!("replica {i}: engine started (batch_cap={})",
                   cli.get_usize("batch-cap"));
     }

@@ -17,56 +17,46 @@ pub mod sim;
 pub use roofline::{Roofline, CPU_HOST, L40S, TPU_V6E};
 pub use sim::{project_time, Projection};
 
-use crate::runtime::ExecutableSpec;
+use crate::runtime::CostInfo;
 
-/// Model-FLOP utilisation (paper Eq. 4).
-pub fn mfu(spec: &ExecutableSpec, wall_seconds: f64, peak_tflops: f64)
-    -> f64 {
+/// Model-FLOP utilisation (paper Eq. 4). `cost` comes from any backend's
+/// [`crate::runtime::Backend::cost`] — the XLA compiler's cost analysis
+/// on that path, the analytic model on the reference path.
+pub fn mfu(cost: &CostInfo, wall_seconds: f64, peak_tflops: f64) -> f64 {
     if wall_seconds <= 0.0 || peak_tflops <= 0.0 {
         return 0.0;
     }
-    (spec.cost.flops / wall_seconds) / (peak_tflops * 1e12)
+    (cost.flops / wall_seconds) / (peak_tflops * 1e12)
 }
 
 /// Hardware-bandwidth utilisation (paper Eq. 5). B_XLA is an unfused byte
 /// count, so this is an upper bound — same caveat as the paper's §4.1.
-pub fn hbu(spec: &ExecutableSpec, wall_seconds: f64, peak_gbps: f64) -> f64 {
+pub fn hbu(cost: &CostInfo, wall_seconds: f64, peak_gbps: f64) -> f64 {
     if wall_seconds <= 0.0 || peak_gbps <= 0.0 {
         return 0.0;
     }
-    (spec.cost.bytes_accessed / wall_seconds) / (peak_gbps * 1e9)
+    (cost.bytes_accessed / wall_seconds) / (peak_gbps * 1e9)
 }
 
-/// Arithmetic intensity of an executable (FLOPs per byte accessed).
-pub fn arithmetic_intensity(spec: &ExecutableSpec) -> f64 {
-    if spec.cost.bytes_accessed == 0.0 {
+/// Arithmetic intensity of one invocation (FLOPs per byte accessed).
+pub fn arithmetic_intensity(cost: &CostInfo) -> f64 {
+    if cost.bytes_accessed == 0.0 {
         return 0.0;
     }
-    spec.cost.flops / spec.cost.bytes_accessed
+    cost.flops / cost.bytes_accessed
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::manifest::{ArgSpec, CostInfo, ExecutableSpec,
-                                   MemoryInfo};
 
-    fn spec(flops: f64, bytes: f64) -> ExecutableSpec {
-        ExecutableSpec {
-            name: "t".into(), file: "f".into(), config: "c".into(),
-            entrypoint: "e".into(), n_params: 0, n_args: 0,
-            args: Vec::<ArgSpec>::new(),
-            cost: CostInfo { flops, bytes_accessed: bytes,
-                             transcendentals: 0.0 },
-            memory: MemoryInfo::default(),
-            bucket: None, batch: None, ablation: None,
-            lower_seconds: 0.0, cpu_compile_seconds: 0.0, hlo_bytes: 0,
-        }
+    fn cost(flops: f64, bytes: f64) -> CostInfo {
+        CostInfo { flops, bytes_accessed: bytes, transcendentals: 0.0 }
     }
 
     #[test]
     fn mfu_hbu_formulas() {
-        let s = spec(1e12, 1e9);
+        let s = cost(1e12, 1e9);
         // 1e12 flops in 1s on a 10 TFLOP part = 10% MFU
         assert!((mfu(&s, 1.0, 10.0) - 0.1).abs() < 1e-12);
         // 1e9 bytes in 1s on a 10 GB/s part = 10% HBU
@@ -76,7 +66,7 @@ mod tests {
 
     #[test]
     fn degenerate_inputs() {
-        let s = spec(1e12, 0.0);
+        let s = cost(1e12, 0.0);
         assert_eq!(mfu(&s, 0.0, 10.0), 0.0);
         assert_eq!(arithmetic_intensity(&s), 0.0);
     }

@@ -1,0 +1,347 @@
+//! The pluggable inference-backend contract (DESIGN.md §2).
+//!
+//! The paper's portability claim is that SSD inference needs only four
+//! entry points — chunked prefill, the O(1) cached decode step, a fused
+//! decode loop, and the non-cached full forward — plus a fixed-size,
+//! host-copyable cache. [`Backend`] is that contract as a trait: the
+//! serving coordinator (engine, router, server), the eval substrates and
+//! the paper-table benches are all written against `dyn Backend`, so the
+//! same continuous-batching stack runs on
+//!
+//!   * [`crate::runtime::ReferenceBackend`] — pure Rust over
+//!     `tensor::math`, hermetic, no artifacts required (the default), and
+//!   * `ModelSession` (runtime::session) — the PJRT/XLA path over AOT
+//!     HLO artifacts (`--features xla`),
+//!
+//! and any future target (a GPU runtime, an NPU — cf. XAMBA) only has to
+//! fill in the same four calls.
+//!
+//! [`CacheState`] lives here rather than with either backend because it is
+//! the *interchange* type: host-resident, layout-stable
+//! (`(n_layer, B, ...)` f32), with O(1)-per-sequence slot copy/clear — the
+//! property continuous batching builds on (DESIGN.md §3).
+
+use crate::tensor::Tensor;
+use crate::util::error::Result;
+
+use super::manifest::{ConfigInfo, CostInfo, Manifest};
+
+// ---------------------------------------------------------------- cache ---
+
+/// Host-side snapshot of the O(1) cache for one batch of sequences.
+///
+/// Constant-size per sequence regardless of prefix length (paper §3.4):
+/// `ssm` is the SSD recurrence state, `conv` the depthwise-conv sliding
+/// window of *pre-activation* inputs.
+#[derive(Clone, Debug)]
+pub struct CacheState {
+    pub ssm: Tensor,   // (n_layer, B, h, p, n) f32
+    pub conv: Tensor,  // (n_layer, B, ch, k-1) f32
+}
+
+impl CacheState {
+    pub fn zeros(cfg: &ConfigInfo, batch: usize) -> CacheState {
+        CacheState {
+            ssm: Tensor::zeros_f32("ssm", &[
+                cfg.n_layer as i64, batch as i64, cfg.nheads as i64,
+                cfg.headdim as i64, cfg.d_state as i64]),
+            conv: Tensor::zeros_f32("conv", &[
+                cfg.n_layer as i64, batch as i64, cfg.d_conv_ch as i64,
+                cfg.d_conv as i64 - 1]),
+        }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.ssm.dims[1] as usize
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.ssm.nbytes() + self.conv.nbytes()
+    }
+
+    /// Copy one sequence slot from `src[src_slot]` into `self[dst_slot]`
+    /// (continuous-batching admission: move a prefilled cache into the
+    /// batched cache).
+    pub fn copy_slot_from(&mut self, dst_slot: usize, src: &CacheState,
+                          src_slot: usize) {
+        copy_slot(&mut self.ssm, dst_slot, &src.ssm, src_slot);
+        copy_slot(&mut self.conv, dst_slot, &src.conv, src_slot);
+    }
+
+    /// Zero one slot (sequence retired).
+    pub fn clear_slot(&mut self, slot: usize) {
+        zero_slot(&mut self.ssm, slot);
+        zero_slot(&mut self.conv, slot);
+    }
+}
+
+/// Copy batch-slot `src_slot` of `src` (dim 1) into slot `dst_slot` of `dst`.
+fn copy_slot(dst: &mut Tensor, dst_slot: usize, src: &Tensor,
+             src_slot: usize) {
+    let (l, bd, rest) = slot_geometry(&dst.dims);
+    let (_, bs, rest2) = slot_geometry(&src.dims);
+    assert_eq!(rest, rest2, "slot shape mismatch");
+    assert!(dst_slot < bd && src_slot < bs);
+    let row = rest * 4;
+    for layer in 0..l {
+        let d0 = (layer * bd + dst_slot) * row;
+        let s0 = (layer * bs + src_slot) * row;
+        dst.data[d0..d0 + row].copy_from_slice(&src.data[s0..s0 + row]);
+    }
+}
+
+fn zero_slot(t: &mut Tensor, slot: usize) {
+    let (l, b, rest) = slot_geometry(&t.dims);
+    assert!(slot < b);
+    let row = rest * 4;
+    for layer in 0..l {
+        let d0 = (layer * b + slot) * row;
+        t.data[d0..d0 + row].fill(0);
+    }
+}
+
+fn slot_geometry(dims: &[i64]) -> (usize, usize, usize) {
+    let l = dims[0] as usize;
+    let b = dims[1] as usize;
+    let rest: usize = dims[2..].iter().product::<i64>() as usize;
+    (l, b, rest)
+}
+
+// -------------------------------------------------------------- outputs ---
+
+/// Result of a prefill call.
+pub struct PrefillOut {
+    pub logits: Tensor,  // (B, T, V)
+    pub cache: CacheState,
+}
+
+/// Result of a decode_step call.
+pub struct StepOut {
+    pub logits: Tensor,  // (B, V)
+    pub cache: CacheState,
+}
+
+// ---------------------------------------------------------------- trait ---
+
+/// One loaded model on one execution substrate.
+///
+/// The inference methods are `&self`: backends are internally
+/// synchronised (the XLA backend confines device objects to a worker
+/// thread; the reference backend is pure data), so an engine thread and
+/// benches can share one. Only `load_weights` mutates.
+pub trait Backend: Send {
+    /// Short backend identifier, e.g. `"reference"` or `"xla-pjrt"`.
+    fn name(&self) -> &'static str;
+
+    /// Human-readable execution platform (e.g. PJRT's platform name).
+    fn platform(&self) -> String;
+
+    /// Shape/config of the loaded model.
+    fn cfg(&self) -> &ConfigInfo;
+
+    /// Width of the batched decode executable — the continuous-batching
+    /// slot count the backend was built for.
+    fn batch_cap(&self) -> usize;
+
+    /// Prompt-length buckets the chunked-parallel prefill supports.
+    fn prefill_buckets(&self) -> Vec<usize>;
+
+    /// Generation-length buckets of the fused decode loop.
+    fn decode_loop_buckets(&self) -> Vec<usize>;
+
+    /// Sequence-length buckets of the non-cached full forward.
+    fn forward_buckets(&self) -> Vec<usize>;
+
+    /// Replace the model weights (e.g. a trained checkpoint), given in the
+    /// config's canonical `param_order`.
+    fn load_weights(&mut self, tensors: Vec<Tensor>) -> Result<()>;
+
+    /// Chunked-parallel prefill over exactly one bucket length.
+    /// `tokens.len()` must equal `batch * t` for a supported `(batch, t)`.
+    fn prefill(&self, tokens: &[i32], batch: usize) -> Result<PrefillOut>;
+
+    /// One cached decode step for every slot in `cache`
+    /// (`tokens.len() == cache.batch()`); O(1) work per sequence.
+    fn decode_step(&self, cache: &CacheState, tokens: &[i32])
+        -> Result<StepOut>;
+
+    /// Fused greedy decode loop: generate `bucket` tokens from `token`
+    /// without per-step host round trips (batch-1 only).
+    fn decode_loop(&self, cache: &CacheState, token: i32, bucket: usize)
+        -> Result<(Vec<i32>, CacheState)>;
+
+    /// Non-cached baseline: recompute the full forward, return all logits
+    /// (1, T, V).
+    fn forward_full(&self, tokens: &[i32]) -> Result<Tensor>;
+
+    /// Cost of one invocation of `entrypoint` at `bucket`/`batch`, for the
+    /// MFU/HBU exhibits (paper Eqs. 4–5). The XLA backend reports the
+    /// compiler's cost analysis from the manifest; the default is the
+    /// analytic model of `perf::sim` over the same config shapes.
+    fn cost(&self, entrypoint: &str, bucket: Option<usize>, batch: usize)
+        -> CostInfo {
+        analytic_cost(self.cfg(), entrypoint, bucket, batch)
+    }
+
+    /// Exact-prefix prefill for arbitrary prompt lengths: largest bucket ≤
+    /// len via the chunked-parallel path, remainder through the O(1)
+    /// decode step (the AOT shape-bucket policy, honoured identically by
+    /// every backend so greedy outputs are backend-independent). Returns
+    /// the cache and the logits after the final prompt token.
+    fn prefill_any(&self, prompt: &[i32]) -> Result<(CacheState, Tensor)> {
+        assert!(!prompt.is_empty());
+        let cfg = self.cfg().clone();
+        let buckets = self.prefill_buckets();
+        let mut cache = CacheState::zeros(&cfg, 1);
+        let mut logits: Option<Tensor> = None;
+        let mut pos = 0;
+        if let Some(b) = Manifest::pick_bucket(&buckets, prompt.len()) {
+            if b <= prompt.len() {
+                let out = self.prefill(&prompt[..b], 1)?;
+                cache = out.cache;
+                // keep only the final position's row
+                let v = *out.logits.dims.last().unwrap();
+                let all = out.logits.as_f32();
+                logits = Some(Tensor::f32(
+                    "last", &[1, v],
+                    &all[all.len() - v as usize..]));
+                pos = b;
+            }
+        }
+        while pos < prompt.len() {
+            let out = self.decode_step(&cache, &prompt[pos..=pos])?;
+            cache = out.cache;
+            logits = Some(out.logits);
+            pos += 1;
+        }
+        Ok((cache, logits.expect("non-empty prompt")))
+    }
+}
+
+/// Analytic (FLOPs, bytes) for one entrypoint invocation — the fallback
+/// cost model when no compiler cost analysis exists for the backend.
+pub fn analytic_cost(cfg: &ConfigInfo, entrypoint: &str,
+                     bucket: Option<usize>, batch: usize) -> CostInfo {
+    use crate::perf::sim::{decode_step_bytes, decode_step_flops,
+                           prefill_bytes, prefill_flops};
+    const F32: f64 = 4.0; // reference + sim artifacts are all f32
+    let b = batch.max(1) as f64;
+    let weights = cfg.n_params_total as f64 * F32;
+    match entrypoint {
+        "prefill" | "forward_full" => {
+            let t = bucket.unwrap_or(cfg.chunk_size);
+            CostInfo {
+                flops: prefill_flops(cfg, t) * b,
+                // weights are read once per launch, activations per seq
+                bytes_accessed: weights
+                    + (prefill_bytes(cfg, t, F32) - weights) * b,
+                transcendentals: 0.0,
+            }
+        }
+        "decode_step" => CostInfo {
+            flops: decode_step_flops(cfg) * b,
+            bytes_accessed: weights
+                + (decode_step_bytes(cfg, F32) - weights) * b,
+            transcendentals: 0.0,
+        },
+        "decode_loop" => {
+            let g = bucket.unwrap_or(1) as f64;
+            CostInfo {
+                flops: decode_step_flops(cfg) * b * g,
+                bytes_accessed: (weights
+                    + (decode_step_bytes(cfg, F32) - weights) * b) * g,
+                transcendentals: 0.0,
+            }
+        }
+        _ => CostInfo::default(),
+    }
+}
+
+// --------------------------------------------------------------- argmax ---
+
+/// Index of the maximum of one logit row.
+pub fn argmax(row: &[f32]) -> i32 {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &x) in row.iter().enumerate() {
+        if x > bv {
+            bv = x;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// Greedy argmax over the last position of (B, V) or (B, T, V) logits.
+pub fn argmax_last(logits: &Tensor) -> Vec<i32> {
+    let v = *logits.dims.last().unwrap() as usize;
+    let vals = logits.as_f32();
+    let b = logits.dims[0] as usize;
+    let stride = vals.len() / b;
+    (0..b)
+        .map(|i| {
+            let row = &vals[i * stride + stride - v..i * stride + stride];
+            argmax(row)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basics() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+        assert_eq!(argmax(&[-1.0, -2.0]), 0);
+    }
+
+    #[test]
+    fn argmax_last_2d_3d() {
+        let l2 = Tensor::f32("x", &[2, 3], &[0., 1., 0., 5., 0., 0.]);
+        assert_eq!(argmax_last(&l2), vec![1, 0]);
+        let l3 = Tensor::f32("x", &[1, 2, 3], &[9., 0., 0., 0., 0., 4.]);
+        assert_eq!(argmax_last(&l3), vec![2]);
+    }
+
+    #[test]
+    fn cache_slot_ops() {
+        let cfg = super::super::manifest::sim_config("tiny").unwrap();
+        let mut a = CacheState::zeros(&cfg, 4);
+        let mut b = CacheState::zeros(&cfg, 1);
+        for x in b.ssm.data.iter_mut() {
+            *x = 7;
+        }
+        a.copy_slot_from(2, &b, 0);
+        let per = cfg.nheads * cfg.headdim * cfg.d_state;
+        let f = a.ssm.as_f32();
+        for layer in 0..cfg.n_layer {
+            for slot in 0..4 {
+                let base = (layer * 4 + slot) * per;
+                let sum: f32 = f[base..base + per].iter().sum();
+                if slot == 2 {
+                    assert!(sum != 0.0);
+                } else {
+                    assert_eq!(sum, 0.0);
+                }
+            }
+        }
+        a.clear_slot(2);
+        assert!(a.ssm.as_f32().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn analytic_cost_scales() {
+        let cfg = super::super::manifest::sim_config("tiny").unwrap();
+        let p16 = analytic_cost(&cfg, "prefill", Some(16), 1);
+        let p64 = analytic_cost(&cfg, "prefill", Some(64), 1);
+        assert!(p64.flops > p16.flops);
+        let s1 = analytic_cost(&cfg, "decode_step", None, 1);
+        let s4 = analytic_cost(&cfg, "decode_step", None, 4);
+        assert!(s4.flops > 3.9 * s1.flops && s4.flops < 4.1 * s1.flops);
+        // weights counted once per launch: bytes grow sublinearly in batch
+        assert!(s4.bytes_accessed < 4.0 * s1.bytes_accessed);
+        let g = analytic_cost(&cfg, "decode_loop", Some(8), 1);
+        assert!((g.flops / s1.flops - 8.0).abs() < 1e-9);
+    }
+}

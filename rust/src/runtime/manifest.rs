@@ -1,10 +1,13 @@
-//! Typed view over `artifacts/manifest.json` (written by python aot.py).
+//! Model/executable metadata: the typed view over `artifacts/manifest.json`
+//! (written by python aot.py) plus the built-in sim-config table and
+//! shape-bucket policy that the artifact-free reference backend shares
+//! with the AOT pipeline (DESIGN.md §2).
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
-
+use crate::bail;
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
 
 #[derive(Debug, Clone)]
@@ -54,6 +57,45 @@ pub struct ExecutableSpec {
     pub hlo_bytes: u64,
 }
 
+// --------------------------------------------------- built-in configs ----
+//
+// Mirrors python/compile/{configs,aot}.py so the reference backend needs
+// no Python-produced metadata. The numbers must stay in lock-step with
+// the AOT pipeline: the same bucket policy is what makes greedy outputs
+// identical across backends (DESIGN.md §2).
+
+/// Prompt-length buckets lowered by aot.py (chunk=16 multiples).
+pub const PREFILL_BUCKETS: &[usize] = &[16, 64, 256, 512];
+/// Generation-length buckets of the fused decode loop.
+pub const DECODE_LOOP_BUCKETS: &[usize] = &[16, 32, 64, 128, 256];
+/// Sequence-length buckets of the non-cached baseline forward.
+pub const FORWARD_BUCKETS: &[usize] = &[16, 32, 64, 128, 256, 512];
+/// Continuous-batching slot count the batched artifacts are built for.
+pub const BATCH_CAP: usize = 4;
+
+/// Per-layer parameter names in canonical order (params.py LAYER_KEYS).
+pub const LAYER_KEYS: [&str; 9] = [
+    "in_proj", "conv_w", "conv_b", "A_log", "dt_bias", "D",
+    "norm_w", "out_proj", "ln_w",
+];
+
+/// The CPU-executable sim ladder (configs.py SIM_CONFIGS): same structure
+/// as the paper checkpoints — diagonal-per-head A, chunked recurrence,
+/// headdim/d_state ratio, expand 2, conv width 4 — at ~1000x smaller
+/// scale. Returns `None` for unknown names.
+pub fn sim_config(name: &str) -> Option<ConfigInfo> {
+    let (d_model, n_layer) = match name {
+        "tiny" => (64, 2),
+        "sim-130m" => (96, 3),
+        "sim-370m" => (128, 6),
+        "sim-780m" => (192, 9),
+        "sim-1.3b" => (256, 12),
+        "sim-2.7b" => (320, 16),
+        _ => return None,
+    };
+    Some(ConfigInfo::sim_shape(name, d_model, n_layer))
+}
+
 #[derive(Debug, Clone)]
 pub struct ConfigInfo {
     pub name: String,
@@ -73,6 +115,59 @@ pub struct ConfigInfo {
 }
 
 impl ConfigInfo {
+    /// Build a sim-family config from its two free parameters, deriving
+    /// every dependent shape exactly as configs.py does (vocab 512,
+    /// d_state 32, headdim 32, expand 2, d_conv 4, chunk 16).
+    pub fn sim_shape(name: &str, d_model: usize, n_layer: usize)
+        -> ConfigInfo {
+        let vocab_size = 512;
+        let d_state = 32;
+        let headdim = 32;
+        let d_conv = 4;
+        let chunk_size = 16;
+        let d_inner = 2 * d_model;
+        assert_eq!(d_inner % headdim, 0);
+        let nheads = d_inner / headdim;
+        let d_conv_ch = d_inner + 2 * nheads * d_state;
+        let d_in_proj = 2 * d_inner + 2 * nheads * d_state + nheads;
+        let per_layer = d_model * d_in_proj        // in_proj
+            + d_conv * d_conv_ch + d_conv_ch       // conv_w, conv_b
+            + 3 * nheads                           // A_log, dt_bias, D
+            + d_inner                              // norm_w
+            + d_inner * d_model                    // out_proj
+            + d_model;                             // ln_w
+        let n_params_total =
+            (vocab_size * d_model + n_layer * per_layer + d_model) as u64;
+        let mut param_order = vec!["embed".to_string()];
+        for i in 0..n_layer {
+            for k in LAYER_KEYS {
+                param_order.push(format!("layers.{i}.{k}"));
+            }
+        }
+        param_order.push("lnf_w".to_string());
+        ConfigInfo {
+            name: name.to_string(),
+            d_model,
+            n_layer,
+            vocab_size,
+            d_state,
+            headdim,
+            nheads,
+            d_inner,
+            d_conv,
+            d_conv_ch,
+            chunk_size,
+            n_params_total,
+            paper_scale: None,
+            param_order,
+        }
+    }
+
+    /// in_proj output width: z, xBC, dt.
+    pub fn d_in_proj(&self) -> usize {
+        2 * self.d_inner + 2 * self.nheads * self.d_state + self.nheads
+    }
+
     /// O(1) cache footprint for one sequence, bytes (f32).
     pub fn cache_bytes_per_seq(&self) -> u64 {
         let ssm = self.n_layer * self.nheads * self.headdim * self.d_state;
@@ -307,5 +402,35 @@ mod tests {
         assert_eq!(Manifest::pick_bucket_ceil(&b, 100), Some(256));
         assert_eq!(Manifest::pick_bucket_ceil(&b, 300), Some(256));
         assert_eq!(Manifest::pick_bucket(&[], 5), None);
+    }
+
+    #[test]
+    fn sim_configs_match_python_shapes() {
+        // tiny: d_model 64 → d_inner 128, 4 heads, d_conv_ch 384,
+        // d_in_proj 516 (configs.py derivations)
+        let c = sim_config("tiny").unwrap();
+        assert_eq!(c.d_inner, 128);
+        assert_eq!(c.nheads, 4);
+        assert_eq!(c.d_conv_ch, 384);
+        assert_eq!(c.d_in_proj(), 516);
+        assert_eq!(c.vocab_size, 512);
+        assert_eq!(c.chunk_size, 16);
+        // param_order: embed + 9 keys × n_layer + lnf_w
+        assert_eq!(c.param_order.len(), 1 + 9 * c.n_layer + 1);
+        assert_eq!(c.param_order[0], "embed");
+        assert_eq!(c.param_order[1], "layers.0.in_proj");
+        assert_eq!(c.param_order.last().unwrap(), "lnf_w");
+        // exact count: embed 512*64 + per-layer + final norm
+        let per_layer = 64 * 516 + 4 * 384 + 384 + 3 * 4 + 128
+            + 128 * 64 + 64;
+        assert_eq!(c.n_params_total,
+                   (512 * 64 + 2 * per_layer + 64) as u64);
+        // the ladder grows monotonically
+        let names = ["tiny", "sim-130m", "sim-370m", "sim-780m",
+                     "sim-1.3b", "sim-2.7b"];
+        let counts: Vec<u64> = names.iter()
+            .map(|n| sim_config(n).unwrap().n_params_total).collect();
+        assert!(counts.windows(2).all(|w| w[1] > w[0]));
+        assert!(sim_config("nope").is_none());
     }
 }

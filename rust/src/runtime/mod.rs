@@ -1,8 +1,176 @@
-//! PJRT runtime: load AOT HLO artifacts, compile once, execute from rust.
+//! Runtime layer: pluggable inference backends behind one trait
+//! (DESIGN.md §2).
+//!
+//! * [`backend`] — the [`Backend`] contract (prefill / O(1) decode step /
+//!   decode loop / full forward) plus the host-side [`CacheState`]
+//!   interchange type and its slot operations.
+//! * [`reference`] — the hermetic pure-Rust SSD backend (default).
+//! * `session` — the PJRT/XLA backend over AOT HLO artifacts
+//!   (`--features xla`; see `Cargo.toml` for how to enable it).
+//! * [`manifest`] — model/executable metadata: the typed manifest.json
+//!   view plus the built-in sim-config table and bucket policy.
+//!
+//! [`open_backend`] / [`open_backend_replicas`] pick a backend at runtime:
+//! `"reference"`, `"xla"`, or `"auto"` (XLA when compiled in *and*
+//! artifacts are present, reference otherwise). The artifacts directory
+//! is resolved once, by [`crate::artifacts_dir`] (`--artifacts` flag /
+//! `M2_ARTIFACTS` env var).
 
+pub mod backend;
 pub mod manifest;
+pub mod reference;
+#[cfg(feature = "xla")]
 pub mod session;
 
-pub use manifest::{ConfigInfo, ExecutableSpec, Manifest};
-pub use session::{argmax, CacheState, ModelSession, PrefillOut, Runtime,
-                  StepOut};
+pub use backend::{analytic_cost, argmax, argmax_last, Backend, CacheState,
+                  PrefillOut, StepOut};
+pub use manifest::{sim_config, ConfigInfo, CostInfo, ExecutableSpec,
+                   Manifest};
+pub use reference::ReferenceBackend;
+#[cfg(feature = "xla")]
+pub use session::{ModelSession, Runtime};
+
+use std::path::Path;
+
+use crate::bail;
+use crate::util::error::Result;
+
+/// Default weight seed for the reference backend (matches aot.py
+/// PARAM_SEED in spirit: deterministic, shared across replicas).
+pub const REFERENCE_SEED: u64 = 0;
+
+/// Open `n` backends for `model` — one per engine replica.
+///
+/// `kind` is `"reference"`, `"xla"`, or `"auto"`. `"auto"` first defers
+/// to the `M2_BACKEND` env var when set (so benches and scripts can
+/// steer binaries that default to auto), then probes the artifacts dir.
+/// On the XLA path all replicas — and all subsequent opens against the
+/// same artifacts dir — share one compiled `Runtime` (compile-once);
+/// reference replicas are independent but deterministically identical
+/// (same seed).
+pub fn open_backend_replicas(model: &str, kind: &str, artifacts: &Path,
+                             n: usize) -> Result<Vec<Box<dyn Backend>>> {
+    if n == 0 {
+        bail!("replica count must be at least 1");
+    }
+    let env_kind;
+    let kind = if kind == "auto" {
+        match std::env::var("M2_BACKEND") {
+            Ok(v) if !v.is_empty() => {
+                env_kind = v;
+                env_kind.as_str()
+            }
+            _ => "auto",
+        }
+    } else {
+        kind
+    };
+    let use_xla = match kind {
+        "reference" => false,
+        "xla" => {
+            if cfg!(feature = "xla") {
+                true
+            } else {
+                bail!("backend \"xla\" requested but this binary was \
+                       built without --features xla");
+            }
+        }
+        "auto" => {
+            cfg!(feature = "xla") && artifacts.join("manifest.json").exists()
+        }
+        other => bail!("unknown backend {other:?} \
+                        (want reference | xla | auto)"),
+    };
+    if !use_xla {
+        let mut out: Vec<Box<dyn Backend>> = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(Box::new(ReferenceBackend::seeded(model,
+                                                       REFERENCE_SEED)?));
+        }
+        return Ok(out);
+    }
+    xla_replicas(model, artifacts, n)
+}
+
+/// Open one backend for `model` (see [`open_backend_replicas`]).
+pub fn open_backend(model: &str, kind: &str, artifacts: &Path)
+    -> Result<Box<dyn Backend>> {
+    Ok(open_backend_replicas(model, kind, artifacts, 1)?
+        .pop()
+        .expect("one replica"))
+}
+
+#[cfg(feature = "xla")]
+fn xla_replicas(model: &str, artifacts: &Path, n: usize)
+    -> Result<Vec<Box<dyn Backend>>> {
+    use std::collections::HashMap;
+    use std::sync::{Arc, Mutex, OnceLock};
+    // One Runtime per artifacts dir per process: the compile-once cache
+    // must be shared across replicas AND across successive open calls
+    // (benches open one backend per model/iteration — recompiling every
+    // executable each time would repeat the very cost Table 12 measures).
+    static RUNTIMES: OnceLock<
+        Mutex<HashMap<std::path::PathBuf, Arc<Runtime>>>> = OnceLock::new();
+    let map = RUNTIMES.get_or_init(|| Mutex::new(HashMap::new()));
+    let rt = {
+        let mut m = map.lock().unwrap();
+        match m.get(artifacts) {
+            Some(rt) => Arc::clone(rt),
+            None => {
+                let rt = Runtime::new(artifacts)?;
+                rt.manifest.validate()?;
+                m.insert(artifacts.to_path_buf(), Arc::clone(&rt));
+                rt
+            }
+        }
+    };
+    let mut out: Vec<Box<dyn Backend>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(Box::new(ModelSession::new(Arc::clone(&rt), model)?));
+    }
+    Ok(out)
+}
+
+#[cfg(not(feature = "xla"))]
+fn xla_replicas(_model: &str, _artifacts: &Path, _n: usize)
+    -> Result<Vec<Box<dyn Backend>>> {
+    bail!("xla backend not compiled in")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_reference_backend() {
+        let b = open_backend("tiny", "reference",
+                             Path::new("/nonexistent")).unwrap();
+        assert_eq!(b.name(), "reference");
+        assert_eq!(b.cfg().d_model, 64);
+        assert_eq!(b.batch_cap(), manifest::BATCH_CAP);
+    }
+
+    #[test]
+    fn auto_falls_back_to_reference_without_artifacts() {
+        let b = open_backend("tiny", "auto",
+                             Path::new("/nonexistent")).unwrap();
+        assert_eq!(b.name(), "reference");
+    }
+
+    #[test]
+    fn unknown_kind_is_clean_error() {
+        let e = open_backend("tiny", "tpu", Path::new("/tmp"))
+            .err().unwrap().to_string();
+        assert!(e.contains("unknown backend"), "{e}");
+    }
+
+    #[test]
+    fn replicas_are_identical_models() {
+        let v = open_backend_replicas("tiny", "reference",
+                                      Path::new("/x"), 2).unwrap();
+        let t: Vec<i32> = (1..17).collect();
+        let a = v[0].prefill(&t, 1).unwrap();
+        let b = v[1].prefill(&t, 1).unwrap();
+        assert_eq!(a.logits.as_f32(), b.logits.as_f32());
+    }
+}

@@ -1,4 +1,7 @@
-//! PJRT runtime: compile-once executable registry + per-model sessions.
+//! PJRT runtime: compile-once executable registry + per-model sessions
+//! (the XLA implementation of the `Backend` trait — DESIGN.md §2; built
+//! only with `--features xla`, and requires AOT HLO artifacts from
+//! `make artifacts`).
 //!
 //! Load path: `HloModuleProto::from_text_file` → `XlaComputation` →
 //! `PjRtClient::compile` (HLO **text** is the interchange format — jax ≥ 0.5
@@ -26,10 +29,13 @@ use std::path::{Path, PathBuf};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
 
-use anyhow::{anyhow, bail, Context, Result};
-
-use super::manifest::{ExecutableSpec, Manifest};
 use crate::tensor::{load_mbt, Tensor};
+use crate::util::error::{Context, Result};
+use crate::{anyhow, bail};
+
+use super::backend::{analytic_cost, Backend, CacheState, PrefillOut,
+                     StepOut};
+use super::manifest::{CostInfo, ExecutableSpec, Manifest};
 
 // ---------------------------------------------------------- xla thread ---
 
@@ -252,94 +258,6 @@ impl Runtime {
 
 // -------------------------------------------------------------- session ---
 
-/// Host-side snapshot of the O(1) cache for one batch of sequences.
-#[derive(Clone, Debug)]
-pub struct CacheState {
-    pub ssm: Tensor,   // (n_layer, B, h, p, n) f32
-    pub conv: Tensor,  // (n_layer, B, ch, k-1) f32
-}
-
-impl CacheState {
-    pub fn zeros(cfg: &super::manifest::ConfigInfo, batch: usize)
-        -> CacheState {
-        CacheState {
-            ssm: Tensor::zeros_f32("ssm", &[
-                cfg.n_layer as i64, batch as i64, cfg.nheads as i64,
-                cfg.headdim as i64, cfg.d_state as i64]),
-            conv: Tensor::zeros_f32("conv", &[
-                cfg.n_layer as i64, batch as i64, cfg.d_conv_ch as i64,
-                cfg.d_conv as i64 - 1]),
-        }
-    }
-
-    pub fn batch(&self) -> usize {
-        self.ssm.dims[1] as usize
-    }
-
-    pub fn nbytes(&self) -> usize {
-        self.ssm.nbytes() + self.conv.nbytes()
-    }
-
-    /// Copy one sequence slot from `src[src_slot]` into `self[dst_slot]`
-    /// (continuous-batching admission: move a prefilled cache into the
-    /// batched cache).
-    pub fn copy_slot_from(&mut self, dst_slot: usize, src: &CacheState,
-                          src_slot: usize) {
-        copy_slot(&mut self.ssm, dst_slot, &src.ssm, src_slot);
-        copy_slot(&mut self.conv, dst_slot, &src.conv, src_slot);
-    }
-
-    /// Zero one slot (sequence retired).
-    pub fn clear_slot(&mut self, slot: usize) {
-        zero_slot(&mut self.ssm, slot);
-        zero_slot(&mut self.conv, slot);
-    }
-}
-
-/// Copy batch-slot `src_slot` of `src` (dim 1) into slot `dst_slot` of `dst`.
-fn copy_slot(dst: &mut Tensor, dst_slot: usize, src: &Tensor,
-             src_slot: usize) {
-    let (l, bd, rest) = slot_geometry(&dst.dims);
-    let (_, bs, rest2) = slot_geometry(&src.dims);
-    assert_eq!(rest, rest2, "slot shape mismatch");
-    assert!(dst_slot < bd && src_slot < bs);
-    let row = rest * 4;
-    for layer in 0..l {
-        let d0 = (layer * bd + dst_slot) * row;
-        let s0 = (layer * bs + src_slot) * row;
-        dst.data[d0..d0 + row].copy_from_slice(&src.data[s0..s0 + row]);
-    }
-}
-
-fn zero_slot(t: &mut Tensor, slot: usize) {
-    let (l, b, rest) = slot_geometry(&t.dims);
-    assert!(slot < b);
-    let row = rest * 4;
-    for layer in 0..l {
-        let d0 = (layer * b + slot) * row;
-        t.data[d0..d0 + row].fill(0);
-    }
-}
-
-fn slot_geometry(dims: &[i64]) -> (usize, usize, usize) {
-    let l = dims[0] as usize;
-    let b = dims[1] as usize;
-    let rest: usize = dims[2..].iter().product::<i64>() as usize;
-    (l, b, rest)
-}
-
-/// Result of a prefill call.
-pub struct PrefillOut {
-    pub logits: Tensor,  // (B, T, V)
-    pub cache: CacheState,
-}
-
-/// Result of a decode_step call.
-pub struct StepOut {
-    pub logits: Tensor,  // (B, V)
-    pub cache: CacheState,
-}
-
 /// Per-model handle: host params + a device-resident param set keyed by a
 /// unique session id.
 pub struct ModelSession {
@@ -474,40 +392,11 @@ impl ModelSession {
         Ok((gen.as_i32(), CacheState { ssm, conv }))
     }
 
-    /// Exact-prefix prefill for arbitrary prompt lengths: largest bucket ≤
-    /// len via the chunked-parallel executable, remainder through the O(1)
-    /// decode step (the AOT shape-bucket policy). Returns the cache and the
-    /// logits after the final prompt token.
-    pub fn prefill_any(&self, prompt: &[i32])
-        -> Result<(CacheState, Tensor)> {
-        assert!(!prompt.is_empty());
-        let cfg = self.cfg().clone();
-        let buckets = self.rt.manifest.prefill_buckets.clone();
-        let mut cache = CacheState::zeros(&cfg, 1);
-        let mut logits: Option<Tensor> = None;
-        let mut pos = 0;
-        if let Some(b) = super::Manifest::pick_bucket(&buckets, prompt.len())
-        {
-            if b <= prompt.len() {
-                let out = self.prefill(&prompt[..b], 1)?;
-                cache = out.cache;
-                // keep only the final position's row
-                let v = *out.logits.dims.last().unwrap();
-                let all = out.logits.as_f32();
-                logits = Some(Tensor::f32(
-                    "last", &[1, v],
-                    &all[all.len() - v as usize..]));
-                pos = b;
-            }
-        }
-        while pos < prompt.len() {
-            let out = self.decode_step(&cache, &prompt[pos..=pos])?;
-            cache = out.cache;
-            logits = Some(out.logits);
-            pos += 1;
-        }
-        Ok((cache, logits.expect("non-empty prompt")))
-    }
+    // NOTE: the exact-prefix `prefill_any` bucket policy lives ONLY in
+    // the `Backend` trait default (runtime::backend) — it must be
+    // honoured identically by every backend so greedy outputs are
+    // backend-independent, so there is deliberately no inherent copy
+    // here. Callers invoke it through the trait.
 
     /// Non-cached baseline: recompute the full forward, return all logits.
     pub fn forward_full(&self, tokens: &[i32]) -> Result<Tensor> {
@@ -518,31 +407,88 @@ impl ModelSession {
         outs.into_iter().next().context("no output")
     }
 
-    /// Greedy argmax over the last position of (B, V) or (B, T, V) logits.
+    /// Greedy argmax over the last position of (B, V) or (B, T, V) logits
+    /// (kept as an associated fn for backwards compatibility; the free
+    /// function lives in `runtime::backend`).
     pub fn argmax_last(logits: &Tensor) -> Vec<i32> {
-        let v = *logits.dims.last().unwrap() as usize;
-        let vals = logits.as_f32();
-        let b = logits.dims[0] as usize;
-        let stride = vals.len() / b;
-        (0..b)
-            .map(|i| {
-                let row = &vals[i * stride + stride - v..i * stride + stride];
-                argmax(row)
-            })
-            .collect()
+        super::backend::argmax_last(logits)
     }
 }
 
-pub fn argmax(row: &[f32]) -> i32 {
-    let mut best = 0;
-    let mut bv = f32::NEG_INFINITY;
-    for (i, &x) in row.iter().enumerate() {
-        if x > bv {
-            bv = x;
-            best = i;
-        }
+/// The XLA/PJRT implementation of the pluggable backend contract
+/// (DESIGN.md §2): every entry point delegates to the AOT executables,
+/// and the cost model reports the compiler's own cost analysis recorded
+/// in the manifest (the paper's F_XLA / B_XLA numerators).
+impl Backend for ModelSession {
+    fn name(&self) -> &'static str {
+        "xla-pjrt"
     }
-    best as i32
+
+    fn platform(&self) -> String {
+        self.rt.platform()
+    }
+
+    fn cfg(&self) -> &super::manifest::ConfigInfo {
+        ModelSession::cfg(self)
+    }
+
+    fn batch_cap(&self) -> usize {
+        self.rt.manifest.batch_cap
+    }
+
+    fn prefill_buckets(&self) -> Vec<usize> {
+        self.rt.manifest.prefill_buckets.clone()
+    }
+
+    fn decode_loop_buckets(&self) -> Vec<usize> {
+        self.rt.manifest.decode_loop_buckets.clone()
+    }
+
+    fn forward_buckets(&self) -> Vec<usize> {
+        self.rt.manifest.forward_buckets.clone()
+    }
+
+    fn load_weights(&mut self, tensors: Vec<Tensor>) -> Result<()> {
+        ModelSession::load_weights(self, tensors)
+    }
+
+    fn prefill(&self, tokens: &[i32], batch: usize) -> Result<PrefillOut> {
+        ModelSession::prefill(self, tokens, batch)
+    }
+
+    fn decode_step(&self, cache: &CacheState, tokens: &[i32])
+        -> Result<StepOut> {
+        ModelSession::decode_step(self, cache, tokens)
+    }
+
+    fn decode_loop(&self, cache: &CacheState, token: i32, bucket: usize)
+        -> Result<(Vec<i32>, CacheState)> {
+        ModelSession::decode_loop(self, cache, token, bucket)
+    }
+
+    fn forward_full(&self, tokens: &[i32]) -> Result<Tensor> {
+        ModelSession::forward_full(self, tokens)
+    }
+
+    fn cost(&self, entrypoint: &str, bucket: Option<usize>, batch: usize)
+        -> CostInfo {
+        // Warn on EVERY fallback (unknown entrypoint spec or missing
+        // manifest entry): MFU/HBU exhibits on this backend claim the
+        // XLA cost analysis as their numerator, so substituting the
+        // analytic model must never happen silently.
+        match self.exe_name(entrypoint, batch, bucket) {
+            Ok(name) => match self.rt.manifest.find(&name) {
+                Ok(spec) => return spec.cost.clone(),
+                Err(_) => crate::log_warn!(
+                    "no manifest cost for {name}; falling back to the \
+                     analytic model"),
+            },
+            Err(e) => crate::log_warn!(
+                "no manifest cost for {entrypoint}/{bucket:?}/b{batch} \
+                 ({e}); falling back to the analytic model"),
+        }
+        analytic_cost(ModelSession::cfg(self), entrypoint, bucket, batch)
+    }
 }
 
 fn take3(outs: Vec<Tensor>) -> Result<(Tensor, Tensor, Tensor)> {
@@ -553,52 +499,6 @@ fn take3(outs: Vec<Tensor>) -> Result<(Tensor, Tensor, Tensor)> {
     Ok((it.next().unwrap(), it.next().unwrap(), it.next().unwrap()))
 }
 
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn argmax_basics() {
-        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
-        assert_eq!(argmax(&[-1.0, -2.0]), 0);
-    }
-
-    #[test]
-    fn cache_slot_ops() {
-        let cfg = crate::runtime::manifest::ConfigInfo {
-            name: "t".into(), d_model: 4, n_layer: 2, vocab_size: 8,
-            d_state: 3, headdim: 2, nheads: 2, d_inner: 4, d_conv: 3,
-            d_conv_ch: 16, chunk_size: 4, n_params_total: 0,
-            paper_scale: None, param_order: vec![],
-        };
-        let mut a = CacheState::zeros(&cfg, 4);
-        let mut b = CacheState::zeros(&cfg, 1);
-        for x in b.ssm.data.iter_mut() {
-            *x = 7;
-        }
-        a.copy_slot_from(2, &b, 0);
-        let f = a.ssm.as_f32();
-        let per = 2 * 2 * 3;
-        for layer in 0..2 {
-            for slot in 0..4 {
-                let base = (layer * 4 + slot) * per;
-                let sum: f32 = f[base..base + per].iter().sum();
-                if slot == 2 {
-                    assert!(sum != 0.0);
-                } else {
-                    assert_eq!(sum, 0.0);
-                }
-            }
-        }
-        a.clear_slot(2);
-        assert!(a.ssm.as_f32().iter().all(|&x| x == 0.0));
-    }
-
-    #[test]
-    fn argmax_last_2d_3d() {
-        let l2 = Tensor::f32("x", &[2, 3], &[0., 1., 0., 5., 0., 0.]);
-        assert_eq!(ModelSession::argmax_last(&l2), vec![1, 0]);
-        let l3 = Tensor::f32("x", &[1, 2, 3], &[9., 0., 0., 0., 0., 4.]);
-        assert_eq!(ModelSession::argmax_last(&l3), vec![2]);
-    }
-}
+// (CacheState / argmax unit tests live with their types in backend.rs;
+// the executable-level tests for this backend are the xla-gated
+// integration suite, tests/integration_runtime.rs.)

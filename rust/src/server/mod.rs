@@ -1,20 +1,26 @@
-//! Line-delimited-JSON TCP server + client.
+//! Line-delimited-JSON TCP server + client (DESIGN.md §3; the full wire
+//! protocol table lives in README.md).
 //!
-//! Protocol (one JSON object per line):
-//!   → {"op":"generate","prompt":"text","max_new_tokens":32,"top_k":0}
+//! Protocol (one JSON object per line, response on one line):
+//!   → {"op":"generate","prompt":"text","max_new_tokens":32,
+//!      "top_k":0,"seed":0}
 //!   ← {"tokens":[..],"text":"...","n":32,"ms":12.3}           (final)
-//!   → {"op":"metrics"}            ← snapshot object
+//!   → {"op":"metrics"}            ← {"replicas":[{..counters..}]}
 //!   → {"op":"ping"}               ← {"ok":true}
+//!   (anything else)               ← {"error":"..."} — the connection
+//!                                    stays open after errors
 //!
 //! tokio is unavailable offline; the server runs a thread-pool accept loop
 //! over std::net — adequate for the batch sizes this CPU target serves.
+//! The server is backend-agnostic: it only sees the `Router` over engine
+//! replicas, each driving any `runtime::Backend`.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 use crate::coordinator::{Router, Sampling};
 use crate::eval::tokenizer::Tokenizer;

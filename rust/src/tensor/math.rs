@@ -1,0 +1,160 @@
+//! Dense f32 kernels for the pure-Rust reference backend (DESIGN.md §2).
+//!
+//! The SSD algorithm is einsum-dominated by construction ("Transformers
+//! are SSMs", Dao & Gu 2024), so the whole reference backend reduces to
+//! the handful of contractions here: a row-major matmul (`ikj` loop order
+//! so the inner loop streams both operands), a transposed-B variant for
+//! the tied lm head, and the pointwise nonlinearities with the paper's
+//! §3.3 precision rules (variance reductions in f32; decays kept in
+//! log-space and exponentiated at compute time).
+
+/// C (m,n) = A (m,k) @ B (k,n), row-major, f32 accumulation.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize)
+    -> Vec<f32> {
+    assert_eq!(a.len(), m * k, "matmul: A shape");
+    assert_eq!(b.len(), k * n, "matmul: B shape");
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        let crow = &mut c[i * n..(i + 1) * n];
+        for p in 0..k {
+            // no zero-skip: 0·NaN must propagate exactly like XLA's dense
+            // matmul so corrupt weights surface identically on both
+            // backends
+            let aip = a[i * k + p];
+            let brow = &b[p * n..(p + 1) * n];
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += aip * bv;
+            }
+        }
+    }
+    c
+}
+
+/// C (m,n) = A (m,k) @ Bᵀ where B is (n,k) row-major — dot-product form,
+/// used for the tied embedding head (`logits = x @ embed.T`).
+pub fn matmul_bt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize)
+    -> Vec<f32> {
+    assert_eq!(a.len(), m * k, "matmul_bt: A shape");
+    assert_eq!(b.len(), n * k, "matmul_bt: B shape");
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            c[i * n + j] = dot(arow, &b[j * k..(j + 1) * k]);
+        }
+    }
+    c
+}
+
+/// Dot product with f32 accumulation (matches XLA's f32 "highest" path on
+/// the sim configs — all artifacts are f32).
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        s += x * y;
+    }
+    s
+}
+
+/// y += alpha * x (the einsum inner loop of the intra-chunk dual form).
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yv, xv) in y.iter_mut().zip(x) {
+        *yv += alpha * xv;
+    }
+}
+
+/// Numerically stable softplus: `log1p(exp(-|x|)) + max(x, 0)`.
+pub fn softplus(x: f32) -> f32 {
+    (-x.abs()).exp().ln_1p() + x.max(0.0)
+}
+
+/// SiLU / swish: `x * sigmoid(x)`.
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// RMSNorm one row in place: `x * rsqrt(mean(x²) + eps) * w`, variance
+/// reduction in f32 (paper §3.3).
+pub fn rmsnorm_row(x: &mut [f32], w: &[f32], eps: f32) {
+    debug_assert_eq!(x.len(), w.len());
+    let mut ss = 0.0f32;
+    for &v in x.iter() {
+        ss += v * v;
+    }
+    let scale = 1.0 / (ss / x.len() as f32 + eps).sqrt();
+    for (v, wv) in x.iter_mut().zip(w) {
+        *v = *v * scale * wv;
+    }
+}
+
+/// Gated RMSNorm rows: `rmsnorm(x ⊙ silu(z)) * w` — the Mamba-2 output
+/// norm, gate applied pre-normalisation.
+pub fn gated_rmsnorm_rows(x: &mut [f32], z: &[f32], w: &[f32], d: usize,
+                          eps: f32) {
+    debug_assert_eq!(x.len(), z.len());
+    debug_assert_eq!(x.len() % d, 0);
+    for (xv, zv) in x.iter_mut().zip(z) {
+        *xv *= silu(*zv);
+    }
+    for row in x.chunks_exact_mut(d) {
+        rmsnorm_row(row, w, eps);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        // [1 2; 3 4] @ [5 6; 7 8] = [19 22; 43 50]
+        let c = matmul(&[1., 2., 3., 4.], &[5., 6., 7., 8.], 2, 2, 2);
+        assert_eq!(c, vec![19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn matmul_bt_matches_matmul() {
+        let a = [1.0f32, 2., 3., 4., 5., 6.]; // (2,3)
+        let b = [7.0f32, 8., 9., 10., 11., 12.]; // (3,2)
+        let want = matmul(&a, &b, 2, 3, 2);
+        // Bᵀ row-major is (2,3): [7 9 11; 8 10 12]
+        let bt = [7.0f32, 9., 11., 8., 10., 12.];
+        assert_eq!(matmul_bt(&a, &bt, 2, 3, 2), want);
+    }
+
+    #[test]
+    fn softplus_stable_and_correct() {
+        assert!((softplus(0.0) - 2.0f32.ln()).abs() < 1e-6);
+        assert!((softplus(100.0) - 100.0).abs() < 1e-4);
+        assert!(softplus(-100.0) >= 0.0);
+        assert!(softplus(-100.0) < 1e-6);
+        // softplus(1) = ln(1 + e)
+        assert!((softplus(1.0) - (1.0 + 1.0f32.exp()).ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn silu_fixed_points() {
+        assert_eq!(silu(0.0), 0.0);
+        assert!((silu(1.0) - 1.0 / (1.0 + (-1.0f32).exp())).abs() < 1e-7);
+        assert!(silu(-20.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rmsnorm_unit_variance() {
+        let mut x = vec![3.0f32, -3.0, 3.0, -3.0];
+        let w = vec![1.0f32; 4];
+        rmsnorm_row(&mut x, &w, 0.0);
+        // mean square of output must be 1
+        let ms: f32 = x.iter().map(|v| v * v).sum::<f32>() / 4.0;
+        assert!((ms - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn axpy_accumulates() {
+        let mut y = vec![1.0f32, 2.0];
+        axpy(2.0, &[10.0, 20.0], &mut y);
+        assert_eq!(y, vec![21.0, 42.0]);
+    }
+}

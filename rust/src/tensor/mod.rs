@@ -1,13 +1,19 @@
-//! Host-side tensors and the `.mbt` tensor-store format.
+//! Host-side tensors, dense f32 kernels, and the `.mbt` tensor-store
+//! format (DESIGN.md §1).
 //!
-//! The format is defined by `python/compile/params.py` (magic "MBT1"):
-//! parameters, goldens and trained checkpoints all travel through it.
+//! The store format is defined by `python/compile/params.py` (magic
+//! "MBT1"): parameters, goldens and trained checkpoints all travel
+//! through it. The `math` submodule holds the matmul/einsum helpers the
+//! pure-Rust reference backend is built from.
 
 use std::fmt;
 use std::io::{Read, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{Context, Result};
+use crate::bail;
+
+pub mod math;
 
 pub const MBT_MAGIC: u32 = 0x4D42_5431;
 
@@ -103,7 +109,8 @@ impl Tensor {
             .collect()
     }
 
-    /// Convert to an XLA literal (reshaped to dims).
+    /// Convert to an XLA literal (reshaped to dims). XLA backend only.
+    #[cfg(feature = "xla")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let lit = match self.dtype {
             DType::F32 => xla::Literal::vec1(self.as_f32().as_slice()),
@@ -117,7 +124,8 @@ impl Tensor {
         }
     }
 
-    /// Build from an XLA literal fetched off-device.
+    /// Build from an XLA literal fetched off-device. XLA backend only.
+    #[cfg(feature = "xla")]
     pub fn from_literal(name: &str, lit: &xla::Literal) -> Result<Tensor> {
         let shape = lit.array_shape()?;
         let dims: Vec<i64> = shape.dims().to_vec();

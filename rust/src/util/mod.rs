@@ -1,9 +1,10 @@
 //! Offline-substrate utilities: everything that would normally be an
-//! external crate (serde_json, clap, rand, criterion, proptest, tokio's
-//! pool) implemented in-repo. See DESIGN.md §1.
+//! external crate (anyhow, serde_json, clap, rand, criterion, proptest,
+//! tokio's pool) implemented in-repo. See DESIGN.md §1.
 
 pub mod benchkit;
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod logging;
 pub mod prng;

@@ -1,21 +1,14 @@
-//! Integration: continuous-batching engine end-to-end on the tiny config.
+//! Integration: continuous-batching engine end-to-end on the tiny config,
+//! hermetically on the pure-Rust reference backend (no artifacts needed).
 
-use std::sync::{Arc, OnceLock};
+use std::sync::Arc;
 
 use mamba2_serve::coordinator::{Engine, EngineConfig, Router, Sampling,
                                 SingleStream};
-use mamba2_serve::runtime::{ModelSession, Runtime};
+use mamba2_serve::runtime::{Backend, ReferenceBackend};
 
-fn rt() -> Arc<Runtime> {
-    static RT: OnceLock<Arc<Runtime>> = OnceLock::new();
-    RT.get_or_init(|| {
-        Runtime::new(&mamba2_serve::artifacts_dir()).expect("artifacts")
-    })
-    .clone()
-}
-
-fn session() -> ModelSession {
-    ModelSession::new(rt(), "tiny").unwrap()
+fn session() -> Box<dyn Backend> {
+    Box::new(ReferenceBackend::seeded("tiny", 0).unwrap())
 }
 
 #[test]
@@ -35,7 +28,7 @@ fn batched_equals_single_stream_greedy() {
     // independence — the serving-level version of the paper's Fig. 5
     // batch-invariance claim)
     let sess = session();
-    let ss = SingleStream::new(&sess);
+    let ss = SingleStream::new(sess.as_ref());
     let prompts: Vec<Vec<i32>> = vec![
         (1..17).collect(),
         (40..56).collect(),
@@ -115,7 +108,7 @@ fn long_prompt_uses_bucket_plus_steps() {
     // prompt length 23 = bucket 16 + 7 steps; must still match the
     // host-loop reference built on the same policy
     let sess = session();
-    let ss = SingleStream::new(&sess);
+    let ss = SingleStream::new(sess.as_ref());
     let prompt: Vec<i32> = (1..24).collect();
     let eng = Engine::start(session(), EngineConfig::default()).unwrap();
     let got = eng.submit(prompt.clone(), 5, Sampling::Greedy)
@@ -147,7 +140,7 @@ fn router_balances_across_replicas() {
 #[test]
 fn stop_token_ends_generation_early() {
     let sess = session();
-    let ss = SingleStream::new(&sess);
+    let ss = SingleStream::new(sess.as_ref());
     // find what greedy generates, then use its 3rd token as stop
     let prompt: Vec<i32> = (1..17).collect();
     let ref_gen = ss.generate_host(&prompt, 8).unwrap();

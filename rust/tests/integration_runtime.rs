@@ -1,13 +1,18 @@
-//! Integration: rust runtime vs python goldens over the real artifacts.
+//! Integration: rust XLA runtime vs python goldens over the real
+//! artifacts.
 //!
 //! Tokens must match bitwise; logits/hidden state to the paper's Table 6
-//! tolerances (1e-4 / 2e-4). Requires `make artifacts`.
+//! tolerances (1e-4 / 2e-4). Requires `make artifacts` and
+//! `--features xla`; the whole file compiles away on the hermetic
+//! default build (the backend-agnostic equivalents live in
+//! integration_reference.rs).
+#![cfg(feature = "xla")]
 
 use std::path::Path;
 use std::sync::{Arc, OnceLock};
 
 use mamba2_serve::coordinator::SingleStream;
-use mamba2_serve::runtime::{CacheState, ModelSession, Runtime};
+use mamba2_serve::runtime::{Backend, CacheState, ModelSession, Runtime};
 use mamba2_serve::tensor::{find, load_mbt};
 
 fn rt() -> Arc<Runtime> {

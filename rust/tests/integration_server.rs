@@ -1,24 +1,18 @@
-//! Integration: TCP line-JSON server end-to-end (bind :0, real sockets).
+//! Integration: TCP line-JSON server end-to-end (bind :0, real sockets),
+//! hermetically on the pure-Rust reference backend (no artifacts needed).
 
 use std::sync::{Arc, OnceLock};
 use std::time::Duration;
 
 use mamba2_serve::coordinator::{Engine, EngineConfig, Router};
 use mamba2_serve::eval::{corpus, Tokenizer};
-use mamba2_serve::runtime::{ModelSession, Runtime};
+use mamba2_serve::runtime::{Backend, ReferenceBackend};
 use mamba2_serve::server::{Client, Server};
 use mamba2_serve::util::json::Json;
 
-fn rt() -> Arc<Runtime> {
-    static RT: OnceLock<Arc<Runtime>> = OnceLock::new();
-    RT.get_or_init(|| {
-        Runtime::new(&mamba2_serve::artifacts_dir()).expect("artifacts")
-    })
-    .clone()
-}
-
 fn start_server() -> String {
-    let session = ModelSession::new(rt(), "tiny").unwrap();
+    let session: Box<dyn Backend> =
+        Box::new(ReferenceBackend::seeded("tiny", 0).unwrap());
     let eng = Arc::new(Engine::start(session, EngineConfig::default())
                        .unwrap());
     let router = Arc::new(Router::new(vec![eng]));
