@@ -5,19 +5,24 @@
 //!
 //! Boots the full stack — inference backend (reference or XLA) → engine
 //! replicas under the router → TCP server — then drives it with
-//! concurrent closed-loop clients over
-//! real sockets, streaming text prompts sampled from the bundled corpus.
-//! Reports throughput, latency percentiles and batcher occupancy: the
-//! continuous-batching scheduler the paper's §6 declares compatible with
-//! its O(1) cache primitive, realised.
+//! concurrent closed-loop clients over real sockets, streaming text
+//! prompts sampled from the bundled corpus. By default the clients speak
+//! protocol v2: each request streams one delta frame per decode step
+//! (so TTFT is measured at the first delta, client-side) and every
+//! `--cancel-every`-th request is cancelled mid-stream to exercise the
+//! slot-freeing path under load. `--stream false` falls back to the v1
+//! blocking `generate`. Reports throughput, latency percentiles and
+//! batcher occupancy: the continuous-batching scheduler the paper's §6
+//! declares compatible with its O(1) cache primitive, realised.
 
 use std::sync::Arc;
 use std::time::Instant;
 
-use mamba2_serve::coordinator::{Engine, EngineConfig, Router};
+use mamba2_serve::coordinator::{Engine, EngineConfig, GenerateParams,
+                                Router};
 use mamba2_serve::eval::{corpus, Tokenizer};
 use mamba2_serve::runtime::{open_backend_replicas, Backend};
-use mamba2_serve::server::{Client, Server};
+use mamba2_serve::server::{Client, Frame, Server};
 use mamba2_serve::util::cli::Cli;
 use mamba2_serve::util::error::Result;
 use mamba2_serve::util::json::Json;
@@ -34,6 +39,9 @@ fn main() -> Result<()> {
         .opt("requests", "32", "total requests")
         .opt("clients", "4", "concurrent clients")
         .opt("gen-tokens", "24", "tokens per request")
+        .opt("stream", "true", "drive the v2 streaming protocol")
+        .opt("cancel-every", "0", "cancel every Nth request mid-stream \
+              (0 = never)")
         .parse_env();
 
     let model = cli.get("model");
@@ -67,6 +75,8 @@ fn main() -> Result<()> {
     let n_requests = cli.get_usize("requests");
     let n_clients = cli.get_usize("clients");
     let gen_tokens = cli.get_usize("gen-tokens");
+    let streaming = cli.get("stream") != "false";
+    let cancel_every = cli.get_usize("cancel-every");
     let sentences: Vec<&str> = corpus::BUNDLED
         .split(". ")
         .filter(|s| s.len() > 24)
@@ -82,26 +92,80 @@ fn main() -> Result<()> {
                 s.chars().take(24 + rng.below(40) as usize).collect()
             })
             .collect();
-        handles.push(std::thread::spawn(move || -> Result<Vec<f64>> {
+        handles.push(std::thread::spawn(
+            // returns (e2e latencies, ttfts, cancelled count)
+            move || -> Result<(Vec<f64>, Vec<f64>, usize)> {
             let mut client = Client::connect(&addr)?;
             assert!(client.ping()?);
             let mut lat = Vec::new();
-            for p in prompts {
+            let mut ttfts = Vec::new();
+            let mut cancelled = 0usize;
+            for (ri, p) in prompts.iter().enumerate() {
                 let t = Instant::now();
-                let r = client.generate(&p, gen_tokens)?;
-                if let Some(e) = r.get("error") {
-                    mamba2_serve::bail!("server error: {e}");
+                let params = GenerateParams::new()
+                    .max_new_tokens(gen_tokens);
+                if !streaming {
+                    let r = client.generate(p, gen_tokens)?;
+                    if let Some(e) = r.get("error") {
+                        mamba2_serve::bail!("server error: {e}");
+                    }
+                    assert_eq!(r.get("n").and_then(Json::as_u64),
+                               Some(gen_tokens as u64));
+                    lat.push(t.elapsed().as_secs_f64());
+                    continue;
                 }
-                assert_eq!(r.get("n").and_then(Json::as_u64),
-                           Some(gen_tokens as u64));
-                lat.push(t.elapsed().as_secs_f64());
+                // (needs enough tokens for the cancel to land mid-stream)
+                let cancel_this = cancel_every > 0 && gen_tokens > 3
+                    && (ri + 1) % cancel_every == 0;
+                let mut s = client.generate_stream(p, &params)?;
+                let mut n_tokens = 0usize;
+                let mut finish = String::new();
+                loop {
+                    match s.next_frame()? {
+                        Some(Frame::Delta { tokens, .. }) => {
+                            if n_tokens == 0 {
+                                ttfts.push(t.elapsed().as_secs_f64());
+                            }
+                            n_tokens += tokens.len();
+                            // cancel mid-stream after a couple of deltas
+                            if cancel_this && n_tokens == 2 {
+                                s.cancel()?;
+                            }
+                        }
+                        Some(Frame::Done { finish_reason, .. }) => {
+                            finish = finish_reason;
+                            break;
+                        }
+                        Some(Frame::Error(e)) => {
+                            mamba2_serve::bail!("server error: {e}");
+                        }
+                        None => break,
+                    }
+                }
+                if cancel_this && finish == "cancelled" {
+                    assert!(n_tokens < gen_tokens,
+                            "cancel must land before max_new_tokens");
+                    cancelled += 1;
+                } else {
+                    // either a normal request, or a cancel that lost the
+                    // race to the stream finishing on its own — both end
+                    // as a full-length completion
+                    assert_eq!(finish, "length");
+                    assert_eq!(n_tokens, gen_tokens);
+                    lat.push(t.elapsed().as_secs_f64());
+                }
             }
-            Ok(lat)
+            Ok((lat, ttfts, cancelled))
         }));
     }
     let mut latencies = Vec::new();
+    let mut ttfts = Vec::new();
+    let mut cancelled = 0usize;
     for h in handles {
-        latencies.extend(h.join().unwrap()?);
+        let (l, tt, cx) = h.join().unwrap()?;
+        latencies.extend(l);
+        ttfts.extend(tt);
+        cancelled += cx;
     }
     let wall = t0.elapsed().as_secs_f64();
 
@@ -109,12 +173,22 @@ fn main() -> Result<()> {
     let s = Summary::of(&latencies);
     let total_tokens = (latencies.len() * gen_tokens) as f64;
     println!("\n=== serve_batch results ===");
+    println!("protocol           : {}",
+             if streaming { "v2 streaming" } else { "v1 blocking" });
     println!("requests completed : {}", latencies.len());
+    println!("requests cancelled : {cancelled} (client-side), {} \
+              (engine counters)", router.total_cancelled());
     println!("wall time          : {wall:.2} s");
-    println!("request throughput : {:.2} req/s", latencies.len() as f64 / wall);
+    println!("request throughput : {:.2} req/s",
+             latencies.len() as f64 / wall);
     println!("token throughput   : {:.1} tok/s", total_tokens / wall);
     println!("latency p50 / p90 / p99 : {:.1} / {:.1} / {:.1} ms",
              s.p50 * 1e3, s.p90 * 1e3, s.p99 * 1e3);
+    if !ttfts.is_empty() {
+        let tf = Summary::of(&ttfts);
+        println!("client-side ttft p50 / p99 : {:.1} / {:.1} ms",
+                 tf.p50 * 1e3, tf.p99 * 1e3);
+    }
     for i in 0..router.n_replicas() {
         let snap = router.replica(i).metrics.snapshot();
         println!("replica {i}: {}", snap.render());

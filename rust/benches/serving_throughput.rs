@@ -11,7 +11,7 @@
 use std::sync::Arc;
 
 use mamba2_serve::bench_support::{open_backend, quick};
-use mamba2_serve::coordinator::{Engine, EngineConfig, Sampling};
+use mamba2_serve::coordinator::{Engine, EngineConfig, GenerateParams};
 use mamba2_serve::util::benchkit::{save_results, Table};
 use mamba2_serve::util::prng::Rng;
 
@@ -44,7 +44,8 @@ fn main() {
                     let plen = 4 + crng.below(12) as usize;
                     let prompt: Vec<i32> = (0..plen)
                         .map(|_| crng.below(512) as i32).collect();
-                    let s = eng.submit(prompt, gen_len, Sampling::Greedy);
+                    let s = eng.generate(prompt, GenerateParams::new()
+                        .max_new_tokens(gen_len));
                     s.collect().unwrap();
                 }
                 let _ = c;

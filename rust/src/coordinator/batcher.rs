@@ -2,13 +2,14 @@
 //!
 //! Pure scheduling logic (no runtime dependency) so the invariants are
 //! property-testable: sequences join as slots free up, leave the moment
-//! they finish, and the decode batch never contains two sequences in the
-//! same slot. vLLM needs paged KV blocks to do this; the O(1) SSM cache
-//! makes the state a fixed slot (see slots.rs).
+//! they finish (length, stop token, or cancellation), and the decode
+//! batch never contains two sequences in the same slot. vLLM needs paged
+//! KV blocks to do this; the O(1) SSM cache makes the state a fixed slot
+//! (see slots.rs).
 
 use std::collections::VecDeque;
 
-use super::request::{GenRequest, Sampling};
+use super::request::{FinishReason, GenRequest, Sampling};
 use super::slots::{SlotId, SlotPool};
 
 #[derive(Debug, Clone)]
@@ -19,7 +20,7 @@ pub struct ActiveSeq {
     pub generated: usize,
     pub max_new_tokens: usize,
     pub sampling: Sampling,
-    pub stop_token: Option<i32>,
+    pub stop_tokens: Vec<i32>,
 }
 
 #[derive(Debug)]
@@ -100,22 +101,43 @@ impl Batcher {
         self.active[slot.0].as_mut()
     }
 
+    /// Slot of the active sequence owned by `req_id` (cancellation path).
+    pub fn slot_of(&self, req_id: u64) -> Option<SlotId> {
+        self.active.iter().flatten()
+            .find(|s| s.req_id == req_id)
+            .map(|s| s.slot)
+    }
+
+    /// Remove a still-queued (not yet admitted) request. Returns it so
+    /// the caller can settle its response stream.
+    pub fn cancel_queued(&mut self, req_id: u64) -> Option<GenRequest> {
+        let idx = self.queue.iter().position(|r| r.id == req_id)?;
+        self.queue.remove(idx)
+    }
+
     /// Record one generated token for the sequence in `slot`; retires the
-    /// sequence (freeing the slot) when done. Returns (finished, token).
-    pub fn advance(&mut self, slot: SlotId, token: i32) -> bool {
+    /// sequence (freeing the slot) when done. `Some(reason)` = finished.
+    pub fn advance(&mut self, slot: SlotId, token: i32)
+        -> Option<FinishReason> {
         let seq = self.active[slot.0].as_mut().expect("slot active");
         seq.last_token = token;
         seq.generated += 1;
-        let stop = seq.stop_token == Some(token);
-        let done = stop || seq.generated >= seq.max_new_tokens;
-        if done {
+        let reason = if seq.stop_tokens.contains(&token) {
+            Some(FinishReason::StopToken)
+        } else if seq.generated >= seq.max_new_tokens {
+            Some(FinishReason::Length)
+        } else {
+            None
+        };
+        if reason.is_some() {
             self.active[slot.0] = None;
             self.slots.free(slot);
         }
-        done
+        reason
     }
 
-    /// Abort a sequence (client disconnect / failure injection).
+    /// Abort an active sequence mid-decode (cancel op, client disconnect,
+    /// stream drop, or failure injection): frees the slot immediately.
     pub fn abort(&mut self, slot: SlotId) {
         if self.active[slot.0].take().is_some() {
             self.slots.free(slot);
@@ -126,21 +148,33 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::request::GenerateParams;
 
     fn req(id: u64, n: usize) -> GenRequest {
-        GenRequest { id, prompt: vec![1, 2, 3], max_new_tokens: n,
-                     sampling: Sampling::Greedy, stop_token: None }
+        GenRequest {
+            id,
+            prompt: vec![1, 2, 3],
+            params: GenerateParams::new().max_new_tokens(n),
+        }
+    }
+
+    fn activate_from(b: &mut Batcher, r: &GenRequest, s: SlotId) {
+        b.activate(ActiveSeq {
+            req_id: r.id,
+            slot: s,
+            last_token: 0,
+            generated: 0,
+            max_new_tokens: r.params.max_new_tokens,
+            sampling: r.params.sampling(),
+            stop_tokens: r.params.stop_tokens.clone(),
+        });
     }
 
     fn admit_all(b: &mut Batcher) -> Vec<(u64, SlotId)> {
         let mut out = Vec::new();
         while let Admission::Admit(r, s) = b.next_admission(out.len()) {
-            let id = r.id;
-            b.activate(ActiveSeq { req_id: id, slot: s, last_token: 0,
-                                   generated: 0, max_new_tokens:
-                                   r.max_new_tokens, sampling: r.sampling,
-                                   stop_token: r.stop_token });
-            out.push((id, s));
+            activate_from(b, &r, s);
+            out.push((r.id, s));
         }
         out
     }
@@ -166,8 +200,8 @@ mod tests {
         b.submit(req(2, 1));
         let adm = admit_all(&mut b);
         let slot = adm[0].1;
-        assert!(!b.advance(slot, 9));  // 1/2
-        assert!(b.advance(slot, 9));   // 2/2 → retired
+        assert_eq!(b.advance(slot, 9), None);                       // 1/2
+        assert_eq!(b.advance(slot, 9), Some(FinishReason::Length)); // 2/2
         assert_eq!(b.active_count(), 0);
         let adm2 = admit_all(&mut b);
         assert_eq!(adm2.len(), 1);
@@ -178,11 +212,12 @@ mod tests {
     fn stop_token_retires_early() {
         let mut b = Batcher::new(1);
         let mut r = req(1, 100);
-        r.stop_token = Some(7);
+        r.params = r.params.stop_token(7).stop_token(9);
         b.submit(r);
         let adm = admit_all(&mut b);
-        assert!(!b.advance(adm[0].1, 3));
-        assert!(b.advance(adm[0].1, 7));
+        assert_eq!(b.advance(adm[0].1, 3), None);
+        // either of the request's stop tokens retires it
+        assert_eq!(b.advance(adm[0].1, 9), Some(FinishReason::StopToken));
     }
 
     #[test]
@@ -207,5 +242,31 @@ mod tests {
         b.abort(adm[0].1);
         assert_eq!(b.active_count(), 0);
         assert!(!b.slots.is_full());
+    }
+
+    #[test]
+    fn cancel_queued_removes_request() {
+        let mut b = Batcher::new(1);
+        b.submit(req(1, 10));
+        b.submit(req(2, 10));
+        b.submit(req(3, 10));
+        let got = b.cancel_queued(2).expect("request 2 queued");
+        assert_eq!(got.id, 2);
+        assert_eq!(b.queued(), 2);
+        assert!(b.cancel_queued(2).is_none(), "already removed");
+        // remaining order preserved
+        let adm = admit_all(&mut b);
+        assert_eq!(adm[0].0, 1);
+    }
+
+    #[test]
+    fn slot_of_finds_active_sequence() {
+        let mut b = Batcher::new(2);
+        b.submit(req(7, 5));
+        let adm = admit_all(&mut b);
+        assert_eq!(b.slot_of(7), Some(adm[0].1));
+        assert_eq!(b.slot_of(99), None);
+        b.abort(adm[0].1);
+        assert_eq!(b.slot_of(7), None);
     }
 }

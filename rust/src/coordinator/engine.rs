@@ -5,12 +5,16 @@
 //! backend or the PJRT/XLA session, chosen at startup — one batched
 //! `CacheState` of `batch_cap` slots, and a request queue. The loop:
 //!
-//!   1. drain newly submitted requests into the batcher queue
+//!   1. drain newly submitted requests and cancel signals into the
+//!      batcher: a cancel for a queued request removes it before it ever
+//!      prefills; a cancel for an active sequence aborts it and frees its
+//!      slot mid-decode
 //!   2. admit queued requests while slots are free (bounded per iteration):
 //!      prefill on the single-stream executables, then copy the resulting
 //!      O(1) cache into the sequence's batch slot
 //!   3. run one batched decode step for all active slots; sample, stream,
-//!      retire finished sequences
+//!      retire finished sequences. A send to a dropped `ResponseStream`
+//!      is treated as an implicit cancel (the client stopped reading).
 //!
 //! Single-stream helpers (`generate_scan` / `generate_host` /
 //! `generate_noncached`) expose the paper's three decode strategies
@@ -18,14 +22,14 @@
 
 use std::sync::atomic::Ordering;
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
 use super::batcher::{ActiveSeq, Admission, Batcher};
+use super::request::{channel, FinishReason, GenRequest, GenerateParams,
+                     ResponseSink, ResponseStream, Sampling};
 use super::metrics::Metrics;
-use super::request::{channel, GenRequest, ResponseSink,
-                     ResponseStream, Sampling};
 use crate::runtime::{argmax_last, Backend, CacheState, Manifest};
 use crate::tensor::Tensor;
 use crate::util::error::Result;
@@ -47,6 +51,10 @@ impl Default for EngineConfig {
 
 enum Msg {
     Submit(GenRequest, ResponseSink),
+    /// stop request `id` and free its slot, finishing with the given
+    /// reason (`Cancelled` = abandonment; `StopString` = the
+    /// detokenising layer completed it — counted as completed)
+    Cancel(u64, FinishReason),
     Shutdown,
 }
 
@@ -59,17 +67,30 @@ pub struct EngineHandle {
 }
 
 impl EngineHandle {
-    pub fn submit(&self, prompt: Vec<i32>, max_new_tokens: usize,
-                  sampling: Sampling) -> ResponseStream {
+    /// Submit a generation request built from [`GenerateParams`];
+    /// the engine assigns the request id. The returned stream delivers
+    /// one `Event::Tokens` per decode step; dropping it (or calling
+    /// `cancel()` on it) frees the request's slot mid-decode.
+    pub fn generate(&self, prompt: Vec<i32>, params: GenerateParams)
+        -> ResponseStream {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let req = GenRequest { id, prompt, max_new_tokens, sampling,
-                               stop_token: None };
-        self.submit_req(req)
+        self.submit_req(GenRequest { id, prompt, params })
     }
 
+    /// Lower-level entry taking a pre-built request (caller-chosen id;
+    /// ids share the cancel namespace with `generate`-assigned ones).
     pub fn submit_req(&self, req: GenRequest) -> ResponseStream {
         Metrics::inc(&self.metrics.requests_submitted, 1);
-        let (sink, stream) = channel(req.id);
+        let (sink, mut stream) = channel(req.id);
+        // Mutex because CancelFn must be Sync and mpsc::Sender is not on
+        // older toolchains; cancels are rare, contention is irrelevant
+        let cancel_tx = Mutex::new(self.tx.clone());
+        let cancel_id = req.id;
+        stream.attach_cancel(Arc::new(move |reason| {
+            if let Ok(tx) = cancel_tx.lock() {
+                let _ = tx.send(Msg::Cancel(cancel_id, reason));
+            }
+        }));
         if self.tx.send(Msg::Submit(req, sink)).is_err() {
             // engine gone: surface as error stream
             let (mut s2, stream2) = channel(0);
@@ -77,6 +98,12 @@ impl EngineHandle {
             return stream2;
         }
         stream
+    }
+
+    /// Cancel the request with engine id `id`. Idempotent: unknown or
+    /// already-finished ids are ignored.
+    pub fn cancel(&self, id: u64) {
+        let _ = self.tx.send(Msg::Cancel(id, FinishReason::Cancelled));
     }
 
     pub fn shutdown(mut self) {
@@ -171,6 +198,10 @@ impl Engine {
                     self.batcher.submit(req);
                     continue; // drain more before stepping
                 }
+                Some(Msg::Cancel(id, reason)) => {
+                    self.cancel_request(id, reason);
+                    continue;
+                }
                 Some(Msg::Shutdown) => return,
                 None => {}
             }
@@ -183,6 +214,8 @@ impl Engine {
                         admitted += 1;
                         if let Err(e) = self.admit(&req, slot) {
                             self.fail_slot(slot.0, req.id, &e.to_string());
+                            // the slot was allocated but never activated
+                            self.batcher.slots.free(slot);
                         }
                     }
                     Admission::None => break,
@@ -216,47 +249,108 @@ impl Engine {
         Some(self.pending_sinks.swap_remove(idx))
     }
 
+    /// Stop `id` wherever it currently lives: still queued → remove it
+    /// before it ever prefills; actively decoding → abort the sequence
+    /// and free its slot + cache immediately. Unknown/finished → no-op.
+    /// `reason == StopString` counts as a completed request (the
+    /// detokenising layer finished it, the client got a full answer);
+    /// anything else counts as cancelled. The e2e histogram only ever
+    /// sees completed requests, so latency percentiles stay comparable
+    /// across workloads with different cancel rates.
+    fn cancel_request(&mut self, id: u64, reason: FinishReason) {
+        let completed = reason == FinishReason::StopString;
+        if let Some(slot) = self.batcher.slot_of(id) {
+            self.batcher.abort(slot);
+            self.clear_slot_state(slot.0);
+            if completed {
+                Metrics::inc(&self.metrics.requests_completed, 1);
+            } else {
+                Metrics::inc(&self.metrics.requests_cancelled, 1);
+            }
+            if let Some(mut sink) = self.sinks[slot.0].take() {
+                if completed {
+                    self.metrics.record_e2e(
+                        sink.submitted_at.elapsed().as_secs_f64());
+                }
+                sink.finish(reason);
+            }
+        } else if let Some(req) = self.batcher.cancel_queued(id) {
+            // leaves the queue without a prefill: count it as admitted so
+            // queue_depth (submitted − admitted) stays exact
+            Metrics::inc(&self.metrics.requests_admitted, 1);
+            if completed {
+                Metrics::inc(&self.metrics.requests_completed, 1);
+            } else {
+                Metrics::inc(&self.metrics.requests_cancelled, 1);
+            }
+            if let Some(mut sink) = self.take_sink(req.id) {
+                sink.finish(reason);
+            }
+        }
+    }
+
+    /// Clear the per-slot engine state (cache contents + sampling rng)
+    /// after the batcher slot itself was freed/aborted. Every teardown
+    /// path — retire, cancel, implicit cancel, failure — goes through
+    /// here so a new slot-state field only needs clearing in one place.
+    fn clear_slot_state(&mut self, slot: usize) {
+        self.cache.clear_slot(slot);
+        self.rngs[slot] = None;
+    }
+
     /// Prefill `req` and install its cache into `slot`.
     fn admit(&mut self, req: &GenRequest, slot: super::slots::SlotId)
         -> Result<()> {
-        let sink = self.take_sink(req.id);
+        Metrics::inc(&self.metrics.requests_admitted, 1);
+        // the sink stays in pending_sinks until prefill succeeded, so a
+        // prefill error still reaches the client through fail_slot
         let (cache1, first_logits) = self.session.prefill_any(&req.prompt)?;
         Metrics::inc(&self.metrics.prefill_tokens, req.prompt.len() as u64);
         // install into batch slot
         self.cache.copy_slot_from(slot.0, &cache1, 0);
-        let mut rng = Rng::new(match req.sampling {
-            Sampling::TopK { seed, .. } => seed,
-            _ => req.id,
+        let sampling = req.params.sampling();
+        let mut rng = Rng::new(match sampling {
+            Sampling::TopK { seed, .. } | Sampling::TopP { seed, .. } => seed,
+            Sampling::Greedy => req.id,
         });
-        let first = sample(&first_logits, req.sampling, &mut rng);
+        let first = sample(&first_logits, sampling, &mut rng);
         self.rngs[slot.0] = Some(rng);
-        let mut sink = sink.expect("sink for admitted request");
-        sink.send_tokens(&[first]);
+        let mut sink = self.take_sink(req.id)
+            .expect("sink for admitted request");
+        let alive = sink.send_tokens(&[first]);
         self.metrics.record_ttft(sink.submitted_at.elapsed().as_secs_f64());
         Metrics::inc(&self.metrics.tokens_generated, 1);
-        let done = req.max_new_tokens <= 1
-            || req.stop_token == Some(first);
-        if done {
-            // count BEFORE releasing the stream so observers that sync on
-            // Done always see the updated counters
-            Metrics::inc(&self.metrics.requests_completed, 1);
-            self.metrics.record_e2e(
-                sink.submitted_at.elapsed().as_secs_f64());
-            sink.finish();
+        if !alive {
+            // stream dropped before its first token: implicit cancel
+            Metrics::inc(&self.metrics.requests_cancelled, 1);
             self.batcher.slots.free(slot);
-            self.cache.clear_slot(slot.0);
+            self.clear_slot_state(slot.0);
             return Ok(());
         }
+        // activate, then run the first token through the batcher's own
+        // finish decision so stop-token/length logic lives in ONE place
+        // (Batcher::advance) for the first and every later token alike
         self.sinks[slot.0] = Some(sink);
         self.batcher.activate(ActiveSeq {
             req_id: req.id,
             slot,
             last_token: first,
-            generated: 1,
-            max_new_tokens: req.max_new_tokens,
-            sampling: req.sampling,
-            stop_token: req.stop_token,
+            generated: 0,
+            max_new_tokens: req.params.max_new_tokens,
+            sampling,
+            stop_tokens: req.params.stop_tokens.clone(),
         });
+        if let Some(r) = self.batcher.advance(slot, first) {
+            // count BEFORE releasing the stream so observers that sync on
+            // Done always see the updated counters
+            Metrics::inc(&self.metrics.requests_completed, 1);
+            if let Some(mut sink) = self.sinks[slot.0].take() {
+                self.metrics.record_e2e(
+                    sink.submitted_at.elapsed().as_secs_f64());
+                sink.finish(r);
+            }
+            self.clear_slot_state(slot.0);
+        }
         Ok(())
     }
 
@@ -283,19 +377,27 @@ impl Engine {
             let tok = sample(&row, seq.sampling, &mut rng);
             self.rngs[seq.slot.0] = Some(rng);
             Metrics::inc(&self.metrics.tokens_generated, 1);
-            if let Some(sink) = self.sinks[seq.slot.0].as_mut() {
-                sink.send_tokens(&[tok]);
+            let alive = match self.sinks[seq.slot.0].as_mut() {
+                Some(sink) => sink.send_tokens(&[tok]),
+                None => true,
+            };
+            if !alive {
+                // the client dropped the stream mid-decode: implicit
+                // cancel — free the slot now, not at max_new_tokens
+                Metrics::inc(&self.metrics.requests_cancelled, 1);
+                self.batcher.abort(seq.slot);
+                self.clear_slot_state(seq.slot.0);
+                self.sinks[seq.slot.0] = None;
+                continue;
             }
-            let done = self.batcher.advance(seq.slot, tok);
-            if done {
+            if let Some(reason) = self.batcher.advance(seq.slot, tok) {
                 Metrics::inc(&self.metrics.requests_completed, 1);
                 if let Some(mut sink) = self.sinks[seq.slot.0].take() {
                     self.metrics.record_e2e(
                         sink.submitted_at.elapsed().as_secs_f64());
-                    sink.finish();
+                    sink.finish(reason);
                 }
-                self.cache.clear_slot(seq.slot.0);
-                self.rngs[seq.slot.0] = None;
+                self.clear_slot_state(seq.slot.0);
             }
         }
         Ok(())
@@ -308,7 +410,7 @@ impl Engine {
         } else if let Some(mut sink) = self.take_sink(id) {
             sink.fail(msg);
         }
-        self.cache.clear_slot(slot);
+        self.clear_slot_state(slot);
     }
 }
 
@@ -318,26 +420,73 @@ fn sample(logits: &Tensor, sampling: Sampling, rng: &mut Rng) -> i32 {
     let row = &vals[vals.len() - v..];
     match sampling {
         Sampling::Greedy => crate::runtime::argmax(row),
-        Sampling::TopK { k, .. } => {
-            let mut idx: Vec<usize> = (0..v).collect();
-            idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap());
+        Sampling::TopK { k, temperature, .. } => {
+            if temperature <= 0.0 {
+                return crate::runtime::argmax(row);
+            }
+            let idx = sorted_desc(row);
             let k = k.max(1).min(v);
-            let top = &idx[..k];
-            // softmax over top-k
-            let m = top.iter().map(|&i| row[i]).fold(f32::MIN, f32::max);
-            let ws: Vec<f64> = top.iter()
-                .map(|&i| ((row[i] - m) as f64).exp()).collect();
+            weighted_pick(&idx[..k], row, temperature, rng)
+        }
+        Sampling::TopP { p, temperature, .. } => {
+            if temperature <= 0.0 {
+                return crate::runtime::argmax(row);
+            }
+            let idx = sorted_desc(row);
+            // softmax over the full vocab, then the smallest prefix whose
+            // cumulative mass reaches p (always at least one candidate)
+            let t = temperature.max(1e-6) as f64;
+            let m = row[idx[0]] as f64;
+            let ws: Vec<f64> = idx.iter()
+                .map(|&i| (((row[i] as f64) - m) / t).exp()).collect();
             let total: f64 = ws.iter().sum();
-            let mut r = rng.f64() * total;
+            let mut cut = idx.len();
+            let mut cum = 0.0;
             for (j, w) in ws.iter().enumerate() {
-                r -= w;
-                if r <= 0.0 {
-                    return top[j] as i32;
+                cum += w / total;
+                if cum >= p as f64 {
+                    cut = j + 1;
+                    break;
                 }
             }
-            top[k - 1] as i32
+            // sample within the nucleus from the weights just computed
+            // (identical to weighted_pick's — idx[0] is the global max)
+            let nucleus: f64 = ws[..cut].iter().sum();
+            let mut r = rng.f64() * nucleus;
+            for (j, w) in ws[..cut].iter().enumerate() {
+                r -= w;
+                if r <= 0.0 {
+                    return idx[j] as i32;
+                }
+            }
+            idx[cut - 1] as i32
         }
     }
+}
+
+/// Vocab indices sorted by descending logit.
+fn sorted_desc(row: &[f32]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..row.len()).collect();
+    idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap());
+    idx
+}
+
+/// Sample among `cands` (indices into `row`) ∝ softmax(logit / T).
+fn weighted_pick(cands: &[usize], row: &[f32], temperature: f32,
+                 rng: &mut Rng) -> i32 {
+    let t = temperature.max(1e-6) as f64;
+    let m = cands.iter().map(|&i| row[i]).fold(f32::MIN, f32::max) as f64;
+    let ws: Vec<f64> = cands.iter()
+        .map(|&i| (((row[i] as f64) - m) / t).exp()).collect();
+    let total: f64 = ws.iter().sum();
+    let mut r = rng.f64() * total;
+    for (j, w) in ws.iter().enumerate() {
+        r -= w;
+        if r <= 0.0 {
+            return cands[j] as i32;
+        }
+    }
+    cands[cands.len() - 1] as i32
 }
 
 // ------------------------------------------------- single-stream paths ---
@@ -439,11 +588,33 @@ mod tests {
         let mut rng = Rng::new(0);
         assert_eq!(sample(&t, Sampling::Greedy, &mut rng), 1);
         // top-1 == greedy
-        assert_eq!(sample(&t, Sampling::TopK { k: 1, seed: 0 }, &mut rng), 1);
+        let s1 = Sampling::TopK { k: 1, temperature: 1.0, seed: 0 };
+        assert_eq!(sample(&t, s1, &mut rng), 1);
         // top-2 only ever returns index 1 or 2
         for _ in 0..50 {
-            let s = sample(&t, Sampling::TopK { k: 2, seed: 0 }, &mut rng);
+            let s = sample(&t, Sampling::TopK { k: 2, temperature: 1.0,
+                                                seed: 0 }, &mut rng);
             assert!(s == 1 || s == 2);
+        }
+    }
+
+    #[test]
+    fn sample_topp_and_temperature() {
+        let t = Tensor::f32("l", &[1, 4], &[0.0, 5.0, 1.0, -1.0]);
+        let mut rng = Rng::new(0);
+        // tiny nucleus keeps only the argmax
+        let s = Sampling::TopP { p: 0.05, temperature: 1.0, seed: 0 };
+        assert_eq!(sample(&t, s, &mut rng), 1);
+        // zero temperature degenerates to argmax for both samplers
+        let s = Sampling::TopP { p: 1.0, temperature: 0.0, seed: 0 };
+        assert_eq!(sample(&t, s, &mut rng), 1);
+        let s = Sampling::TopK { k: 4, temperature: 0.0, seed: 0 };
+        assert_eq!(sample(&t, s, &mut rng), 1);
+        // p = 0.99 over these logits keeps exactly indices {1, 2}
+        for _ in 0..50 {
+            let s = sample(&t, Sampling::TopP { p: 0.99, temperature: 1.0,
+                                                seed: 0 }, &mut rng);
+            assert!(s == 1 || s == 2, "nucleus leaked: {s}");
         }
     }
 }

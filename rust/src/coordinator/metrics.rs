@@ -9,8 +9,15 @@ use crate::util::stats::LogHistogram;
 #[derive(Default)]
 pub struct Metrics {
     pub requests_submitted: AtomicU64,
+    /// requests that left the admission queue — actual prefill admissions
+    /// plus queued requests removed by cancellation, so
+    /// `queue_depth = submitted − admitted` is exact at all times
+    pub requests_admitted: AtomicU64,
     pub requests_completed: AtomicU64,
     pub requests_failed: AtomicU64,
+    /// cancelled mid-flight: explicit cancel op, client disconnect, or
+    /// response-stream drop — whether queued or actively decoding
+    pub requests_cancelled: AtomicU64,
     pub requests_queued_peak: AtomicU64,
     pub tokens_generated: AtomicU64,
     pub prefill_tokens: AtomicU64,
@@ -39,6 +46,25 @@ impl Metrics {
         counter.fetch_add(v, Ordering::Relaxed);
     }
 
+    /// Requests submitted but not yet admitted to a slot — the number
+    /// waiting in the batcher queue. This is the same quantity the
+    /// `metrics` op surfaces as `queue_depth`.
+    pub fn queue_depth(&self) -> u64 {
+        let s = self.requests_submitted.load(Ordering::Relaxed);
+        let a = self.requests_admitted.load(Ordering::Relaxed);
+        s.saturating_sub(a)
+    }
+
+    /// Requests submitted but not yet settled (completed, failed, or
+    /// cancelled) — queued + decoding. `Router::load` places on this.
+    pub fn in_flight(&self) -> u64 {
+        let s = self.requests_submitted.load(Ordering::Relaxed);
+        let c = self.requests_completed.load(Ordering::Relaxed);
+        let f = self.requests_failed.load(Ordering::Relaxed);
+        let x = self.requests_cancelled.load(Ordering::Relaxed);
+        s.saturating_sub(c + f + x)
+    }
+
     pub fn record_ttft(&self, secs: f64) {
         self.hist.lock().unwrap().ttft.record(secs);
     }
@@ -57,8 +83,12 @@ impl Metrics {
         Snapshot {
             elapsed_s: elapsed,
             submitted: self.requests_submitted.load(Ordering::Relaxed),
+            admitted: self.requests_admitted.load(Ordering::Relaxed),
             completed: self.requests_completed.load(Ordering::Relaxed),
             failed: self.requests_failed.load(Ordering::Relaxed),
+            cancelled: self.requests_cancelled.load(Ordering::Relaxed),
+            queue_depth: self.queue_depth(),
+            in_flight: self.in_flight(),
             tokens_generated: self.tokens_generated.load(Ordering::Relaxed),
             prefill_tokens: self.prefill_tokens.load(Ordering::Relaxed),
             decode_steps: steps,
@@ -79,8 +109,12 @@ impl Metrics {
 pub struct Snapshot {
     pub elapsed_s: f64,
     pub submitted: u64,
+    pub admitted: u64,
     pub completed: u64,
     pub failed: u64,
+    pub cancelled: u64,
+    pub queue_depth: u64,
+    pub in_flight: u64,
     pub tokens_generated: u64,
     pub prefill_tokens: u64,
     pub decode_steps: u64,
@@ -103,10 +137,12 @@ impl Snapshot {
 
     pub fn render(&self) -> String {
         format!(
-            "requests: {}/{} done ({} failed) | tokens: {} ({:.1} tok/s) | \
+            "requests: {}/{} done ({} failed, {} cancelled, queue {}) | \
+             tokens: {} ({:.1} tok/s) | \
              decode steps: {} (occupancy {:.2}) | ttft p50/p99: \
              {:.1}/{:.1} ms | e2e p50/p99: {:.1}/{:.1} ms",
-            self.completed, self.submitted, self.failed,
+            self.completed, self.submitted, self.failed, self.cancelled,
+            self.queue_depth,
             self.tokens_generated, self.throughput_tps(),
             self.decode_steps, self.mean_batch_occupancy,
             self.ttft_p50 * 1e3, self.ttft_p99 * 1e3,
@@ -131,5 +167,21 @@ mod tests {
         assert!((s.mean_batch_occupancy - 3.0).abs() < 1e-9);
         assert!(s.ttft_p50 > 0.005 && s.ttft_p50 < 0.02);
         assert!(!s.render().is_empty());
+    }
+
+    #[test]
+    fn queue_depth_and_in_flight_arithmetic() {
+        let m = Metrics::new();
+        Metrics::inc(&m.requests_submitted, 10);
+        Metrics::inc(&m.requests_admitted, 7);
+        Metrics::inc(&m.requests_completed, 4);
+        Metrics::inc(&m.requests_failed, 1);
+        Metrics::inc(&m.requests_cancelled, 2);
+        assert_eq!(m.queue_depth(), 3);   // 10 submitted − 7 admitted
+        assert_eq!(m.in_flight(), 3);     // 10 − (4 + 1 + 2)
+        let s = m.snapshot();
+        assert_eq!(s.queue_depth, 3);
+        assert_eq!(s.in_flight, 3);
+        assert_eq!(s.cancelled, 2);
     }
 }

@@ -3,9 +3,11 @@
 //!
 //! * `slots`   — fixed-size state-slot pool (vLLM block-manager analogue)
 //! * `batcher` — continuous batching at decode-step granularity
-//! * `engine`  — generation loop over any `runtime::Backend`
+//! * `engine`  — generation loop over any `runtime::Backend`, with
+//!   mid-decode cancellation that frees slots the moment a client
+//!   stops caring
 //! * `router`  — least-loaded placement across engine replicas
-//! * `request` — request/response streaming types
+//! * `request` — `GenerateParams` builder + cancellable response streams
 //! * `metrics` — counters + latency histograms
 
 pub mod batcher;
@@ -18,6 +20,7 @@ pub mod slots;
 pub use batcher::{ActiveSeq, Admission, Batcher};
 pub use engine::{Engine, EngineConfig, EngineHandle, SingleStream};
 pub use metrics::{Metrics, Snapshot};
-pub use request::{Event, GenRequest, ResponseStream, Sampling};
+pub use request::{CancelFn, Event, FinishReason, GenRequest,
+                  GenerateParams, ResponseStream, Sampling};
 pub use router::Router;
 pub use slots::{SlotId, SlotPool};

@@ -1,39 +1,214 @@
-//! Generation requests and streaming responses.
+//! Generation requests and streaming responses — the v2 request surface.
+//!
+//! [`GenerateParams`] is the single builder every entry point takes
+//! (`EngineHandle::generate`, `Router::generate`, the wire protocol's
+//! `generate` op): max tokens, sampling (greedy / top-k / top-p with
+//! temperature and a per-request seed), multiple stop tokens, stop
+//! strings, and the echo flag. [`ResponseStream`] is streaming- and
+//! cancellation-first: every token arrives as an [`Event`] the moment it
+//! is sampled, and dropping the stream (or calling
+//! [`ResponseStream::cancel`]) propagates a cancel signal into the engine
+//! that frees the request's batch slot mid-decode.
 
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::Instant;
 
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Sampling {
     /// Deterministic on-device argmax (the paper's inference protocol).
     Greedy,
-    /// Host-side top-k sampling with a per-request seed.
-    TopK { k: usize, seed: u64 },
+    /// Host-side top-k sampling with temperature and a per-request seed.
+    TopK { k: usize, temperature: f32, seed: u64 },
+    /// Nucleus (top-p) sampling with temperature and a per-request seed.
+    TopP { p: f32, temperature: f32, seed: u64 },
+}
+
+/// Why a request stopped producing tokens.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// `max_new_tokens` reached.
+    Length,
+    /// one of the request's stop tokens was generated
+    StopToken,
+    /// a stop string completed in the decoded text (decided at the
+    /// detokenising layer — the engine itself never emits this)
+    StopString,
+    /// cancelled: explicit cancel op, client disconnect, or stream drop
+    Cancelled,
+}
+
+impl FinishReason {
+    /// Wire-protocol spelling (`finish_reason` field of the usage frame).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FinishReason::Length => "length",
+            FinishReason::StopToken => "stop_token",
+            FinishReason::StopString => "stop_string",
+            FinishReason::Cancelled => "cancelled",
+        }
+    }
+}
+
+/// Builder for everything a generation request can ask for. Replaces the
+/// old positional `submit(prompt, n, sampling)` signatures.
+///
+/// ```
+/// use mamba2_serve::coordinator::GenerateParams;
+/// let p = GenerateParams::new()
+///     .max_new_tokens(64)
+///     .top_k(40)
+///     .temperature(0.8)
+///     .seed(7)
+///     .stop_token(2)
+///     .stop_string("\n\n");
+/// assert_eq!(p.max_new_tokens, 64);
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenerateParams {
+    pub max_new_tokens: usize,
+    /// top-k truncation; 0 disables (then `top_p` decides)
+    pub top_k: usize,
+    /// nucleus mass; 1.0 disables (then sampling is greedy unless a
+    /// non-neutral temperature asks for full-vocab sampling)
+    pub top_p: f32,
+    /// softmax temperature for top-k/top-p; ≤ 0 degenerates to argmax
+    pub temperature: f32,
+    /// per-request sampling seed (same seed + same prompt reproduces)
+    pub seed: u64,
+    /// stop the moment any of these tokens is generated
+    pub stop_tokens: Vec<i32>,
+    /// stop when any of these strings completes in the decoded text
+    /// (matched by the detokenising layer, which truncates the text at
+    /// the match and cancels the engine-side request)
+    pub stop_strings: Vec<String>,
+    /// include the prompt in the response text/tokens
+    pub echo: bool,
+}
+
+impl Default for GenerateParams {
+    fn default() -> Self {
+        GenerateParams {
+            max_new_tokens: 32,
+            top_k: 0,
+            top_p: 1.0,
+            temperature: 1.0,
+            seed: 0,
+            stop_tokens: Vec::new(),
+            stop_strings: Vec::new(),
+            echo: false,
+        }
+    }
+}
+
+impl GenerateParams {
+    pub fn new() -> Self {
+        GenerateParams::default()
+    }
+
+    pub fn max_new_tokens(mut self, n: usize) -> Self {
+        self.max_new_tokens = n.max(1);
+        self
+    }
+
+    /// Reset to greedy decoding (clears top-k/top-p/temperature).
+    pub fn greedy(mut self) -> Self {
+        self.top_k = 0;
+        self.top_p = 1.0;
+        self.temperature = 1.0;
+        self
+    }
+
+    pub fn top_k(mut self, k: usize) -> Self {
+        self.top_k = k;
+        self
+    }
+
+    pub fn top_p(mut self, p: f32) -> Self {
+        self.top_p = p;
+        self
+    }
+
+    pub fn temperature(mut self, t: f32) -> Self {
+        self.temperature = t;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    /// Append one stop token (a request may carry several).
+    pub fn stop_token(mut self, t: i32) -> Self {
+        self.stop_tokens.push(t);
+        self
+    }
+
+    /// Append one stop string.
+    pub fn stop_string(mut self, s: impl Into<String>) -> Self {
+        self.stop_strings.push(s.into());
+        self
+    }
+
+    pub fn echo(mut self, on: bool) -> Self {
+        self.echo = on;
+        self
+    }
+
+    /// Resolve the effective sampling strategy: top-k wins when set,
+    /// then top-p (a non-neutral temperature alone means full-vocab
+    /// temperature sampling, i.e. nucleus with p = 1), else greedy.
+    pub fn sampling(&self) -> Sampling {
+        if self.top_k > 0 {
+            Sampling::TopK {
+                k: self.top_k,
+                temperature: self.temperature,
+                seed: self.seed,
+            }
+        } else if self.top_p < 1.0 || self.temperature != 1.0 {
+            Sampling::TopP {
+                p: self.top_p.min(1.0),
+                temperature: self.temperature,
+                seed: self.seed,
+            }
+        } else {
+            Sampling::Greedy
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
 pub struct GenRequest {
     pub id: u64,
     pub prompt: Vec<i32>,
-    pub max_new_tokens: usize,
-    pub sampling: Sampling,
-    /// stop generating if this token is produced
-    pub stop_token: Option<i32>,
+    pub params: GenerateParams,
 }
 
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum Event {
     /// incremental tokens (streaming)
     Tokens(Vec<i32>),
-    /// request finished; total generated count
-    Done { n_generated: usize },
+    /// request finished; total generated count and why it stopped
+    Done { n_generated: usize, reason: FinishReason },
     /// request failed
     Error(String),
 }
 
-/// Per-request response stream + timing probes.
+/// Cancel hook a [`ResponseStream`] carries back to its engine. The
+/// argument is the finish reason the engine should report (and count):
+/// `Cancelled` for true abandonment, `StopString` when the detokenising
+/// layer completed the request via a stop string (counted as completed,
+/// not cancelled).
+pub type CancelFn = Arc<dyn Fn(FinishReason) + Send + Sync>;
+
+/// Per-request response stream. Dropping it before the terminal event
+/// fires the attached cancel hook, so an abandoned stream frees its
+/// engine slot instead of decoding to `max_new_tokens` for nobody.
 pub struct ResponseStream {
-    pub rx: mpsc::Receiver<Event>,
+    rx: mpsc::Receiver<Event>,
+    cancel: Option<CancelFn>,
+    finished: bool,
 }
 
 pub struct ResponseSink {
@@ -45,16 +220,22 @@ pub struct ResponseSink {
 }
 
 impl ResponseSink {
-    pub fn send_tokens(&mut self, toks: &[i32]) {
+    /// Send incremental tokens. Returns `false` when the receiving
+    /// [`ResponseStream`] is gone — the engine treats that as an
+    /// implicit cancel and frees the slot.
+    pub fn send_tokens(&mut self, toks: &[i32]) -> bool {
         if self.first_token_at.is_none() && !toks.is_empty() {
             self.first_token_at = Some(Instant::now());
         }
         self.tokens_sent += toks.len();
-        let _ = self.tx.send(Event::Tokens(toks.to_vec()));
+        self.tx.send(Event::Tokens(toks.to_vec())).is_ok()
     }
 
-    pub fn finish(&mut self) {
-        let _ = self.tx.send(Event::Done { n_generated: self.tokens_sent });
+    pub fn finish(&mut self, reason: FinishReason) {
+        let _ = self.tx.send(Event::Done {
+            n_generated: self.tokens_sent,
+            reason,
+        });
     }
 
     pub fn fail(&mut self, msg: &str) {
@@ -67,20 +248,87 @@ pub fn channel(id: u64) -> (ResponseSink, ResponseStream) {
     (
         ResponseSink { id, tx, submitted_at: Instant::now(),
                        first_token_at: None, tokens_sent: 0 },
-        ResponseStream { rx },
+        ResponseStream { rx, cancel: None, finished: false },
     )
 }
 
 impl ResponseStream {
-    /// Block until Done/Error; returns all tokens.
-    pub fn collect(self) -> Result<Vec<i32>, String> {
+    /// Attach the engine's cancel hook (called by `submit_req`).
+    pub fn attach_cancel(&mut self, f: CancelFn) {
+        self.cancel = Some(f);
+    }
+
+    /// Clone of the cancel hook, for registries that must cancel the
+    /// request later without holding the stream (e.g. the server's
+    /// per-connection id table).
+    pub fn cancel_fn(&self) -> Option<CancelFn> {
+        self.cancel.clone()
+    }
+
+    /// Signal the engine to stop this request and free its slot. The
+    /// stream still delivers buffered tokens followed by a
+    /// `Done { reason: Cancelled }` terminal event. Idempotent.
+    pub fn cancel(&self) {
+        self.cancel_as(FinishReason::Cancelled);
+    }
+
+    /// Like [`cancel`](Self::cancel) but with an explicit finish reason
+    /// — the detokenising layer uses `StopString` so a stop-string
+    /// finish frees the slot yet still counts as a completed request.
+    pub fn cancel_as(&self, reason: FinishReason) {
+        if let Some(c) = &self.cancel {
+            c(reason);
+        }
+    }
+
+    /// Blocking pull of the next event; `None` once the terminal event
+    /// (`Done`/`Error`) has been delivered. An engine that went away
+    /// mid-stream surfaces as one `Error` event.
+    pub fn next_event(&mut self) -> Option<Event> {
+        if self.finished {
+            return None;
+        }
+        match self.rx.recv() {
+            Ok(ev) => {
+                if matches!(ev, Event::Done { .. } | Event::Error(_)) {
+                    self.finished = true;
+                }
+                Some(ev)
+            }
+            Err(_) => {
+                self.finished = true;
+                Some(Event::Error("engine dropped stream".into()))
+            }
+        }
+    }
+
+    /// Block until Done/Error; returns all tokens plus the finish reason.
+    pub fn collect_with_reason(mut self)
+        -> Result<(Vec<i32>, FinishReason), String> {
         let mut out = Vec::new();
         loop {
-            match self.rx.recv() {
-                Ok(Event::Tokens(t)) => out.extend(t),
-                Ok(Event::Done { .. }) => return Ok(out),
-                Ok(Event::Error(e)) => return Err(e),
-                Err(_) => return Err("engine dropped stream".into()),
+            match self.next_event() {
+                Some(Event::Tokens(t)) => out.extend(t),
+                Some(Event::Done { reason, .. }) => return Ok((out, reason)),
+                Some(Event::Error(e)) => return Err(e),
+                None => return Err("stream already consumed".into()),
+            }
+        }
+    }
+
+    /// Block until Done/Error; returns all tokens.
+    pub fn collect(self) -> Result<Vec<i32>, String> {
+        self.collect_with_reason().map(|(t, _)| t)
+    }
+}
+
+impl Drop for ResponseStream {
+    fn drop(&mut self) {
+        // dropping an unfinished stream IS a cancellation: the client
+        // stopped caring, so the engine must get its slot back
+        if !self.finished {
+            if let Some(c) = &self.cancel {
+                c(FinishReason::Cancelled);
             }
         }
     }
@@ -89,14 +337,25 @@ impl ResponseStream {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
     fn stream_roundtrip() {
         let (mut sink, stream) = channel(1);
         sink.send_tokens(&[1, 2]);
         sink.send_tokens(&[3]);
-        sink.finish();
+        sink.finish(FinishReason::Length);
         assert_eq!(stream.collect().unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn stream_reports_reason() {
+        let (mut sink, stream) = channel(1);
+        sink.send_tokens(&[9]);
+        sink.finish(FinishReason::StopToken);
+        let (toks, reason) = stream.collect_with_reason().unwrap();
+        assert_eq!(toks, vec![9]);
+        assert_eq!(reason, FinishReason::StopToken);
     }
 
     #[test]
@@ -112,5 +371,65 @@ mod tests {
         let (sink, stream) = channel(3);
         drop(sink);
         assert!(stream.collect().is_err());
+    }
+
+    #[test]
+    fn send_to_dropped_stream_reports_dead() {
+        let (mut sink, stream) = channel(4);
+        drop(stream);
+        assert!(!sink.send_tokens(&[1]));
+    }
+
+    #[test]
+    fn drop_before_done_fires_cancel() {
+        let fired = Arc::new(AtomicUsize::new(0));
+        let f2 = Arc::clone(&fired);
+        let (_sink, mut stream) = channel(5);
+        stream.attach_cancel(Arc::new(move |reason| {
+            assert_eq!(reason, FinishReason::Cancelled);
+            f2.fetch_add(1, Ordering::SeqCst);
+        }));
+        drop(stream);
+        assert_eq!(fired.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn drop_after_done_does_not_cancel() {
+        let fired = Arc::new(AtomicUsize::new(0));
+        let f2 = Arc::clone(&fired);
+        let (mut sink, mut stream) = channel(6);
+        stream.attach_cancel(Arc::new(move |_| {
+            f2.fetch_add(1, Ordering::SeqCst);
+        }));
+        sink.finish(FinishReason::Length);
+        while stream.next_event().is_some() {}
+        drop(stream);
+        assert_eq!(fired.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn params_builder_resolves_sampling() {
+        assert_eq!(GenerateParams::new().sampling(), Sampling::Greedy);
+        assert_eq!(
+            GenerateParams::new().top_k(5).temperature(0.5).seed(3)
+                .sampling(),
+            Sampling::TopK { k: 5, temperature: 0.5, seed: 3 });
+        assert_eq!(
+            GenerateParams::new().top_p(0.9).sampling(),
+            Sampling::TopP { p: 0.9, temperature: 1.0, seed: 0 });
+        // temperature alone means full-vocab temperature sampling
+        assert_eq!(
+            GenerateParams::new().temperature(0.7).sampling(),
+            Sampling::TopP { p: 1.0, temperature: 0.7, seed: 0 });
+        // builder accumulates stops
+        let p = GenerateParams::new().stop_token(1).stop_token(2)
+            .stop_string("ab");
+        assert_eq!(p.stop_tokens, vec![1, 2]);
+        assert_eq!(p.stop_strings, vec!["ab".to_string()]);
+    }
+
+    #[test]
+    fn max_new_tokens_floor_is_one() {
+        assert_eq!(GenerateParams::new().max_new_tokens(0).max_new_tokens, 1);
     }
 }

@@ -5,12 +5,20 @@
 //! same policy vllm-project/router defaults to for stateless workers.
 //! (SSM state never migrates: the O(1) cache lives and dies with the
 //! replica that admitted the request.)
+//!
+//! Cancellation rides the stream, not the router: the `ResponseStream`
+//! returned by [`Router::generate`] carries the owning replica's cancel
+//! hook (`cancel()` / `cancel_fn()`), so a cancel signal goes straight to
+//! the engine that holds the slot. Engine-assigned ids are only unique
+//! per replica, which is why there is deliberately no `Router::cancel(id)`
+//! — broadcasting an id could kill an unrelated request on another
+//! replica.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use super::engine::EngineHandle;
-use super::request::{ResponseStream, Sampling};
+use super::request::{GenerateParams, ResponseStream};
 
 pub struct Router {
     replicas: Vec<Arc<EngineHandle>>,
@@ -27,13 +35,10 @@ impl Router {
         self.replicas.len()
     }
 
-    /// In-flight load of replica i (submitted − completed − failed).
+    /// In-flight load of replica i — the same `in_flight` number the
+    /// `metrics` op surfaces, so operators see what placement sees.
     fn load(&self, i: usize) -> u64 {
-        let m = &self.replicas[i].metrics;
-        let s = m.requests_submitted.load(Ordering::Relaxed);
-        let c = m.requests_completed.load(Ordering::Relaxed);
-        let f = m.requests_failed.load(Ordering::Relaxed);
-        s.saturating_sub(c + f)
+        self.replicas[i].metrics.in_flight()
     }
 
     /// Least-loaded replica index (round-robin tiebreak).
@@ -53,10 +58,14 @@ impl Router {
         best
     }
 
-    pub fn submit(&self, prompt: Vec<i32>, max_new_tokens: usize,
-                  sampling: Sampling) -> ResponseStream {
+    /// Place a generation request on the least-loaded replica. The
+    /// returned stream is cancellable (drop, `cancel()`, or a stashed
+    /// `cancel_fn()`), and the cancel propagates to that replica's
+    /// engine and batcher, freeing the slot mid-decode.
+    pub fn generate(&self, prompt: Vec<i32>, params: GenerateParams)
+        -> ResponseStream {
         let i = self.pick();
-        self.replicas[i].submit(prompt, max_new_tokens, sampling)
+        self.replicas[i].generate(prompt, params)
     }
 
     pub fn replica(&self, i: usize) -> &Arc<EngineHandle> {
@@ -66,6 +75,12 @@ impl Router {
     pub fn total_completed(&self) -> u64 {
         self.replicas.iter()
             .map(|r| r.metrics.requests_completed.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    pub fn total_cancelled(&self) -> u64 {
+        self.replicas.iter()
+            .map(|r| r.metrics.requests_cancelled.load(Ordering::Relaxed))
             .sum()
     }
 }

@@ -76,11 +76,21 @@ impl Tokenizer {
     }
 
     pub fn decode(&self, tokens: &[i32]) -> String {
+        String::from_utf8_lossy(&self.decode_bytes(tokens)).into_owned()
+    }
+
+    /// Byte-exact decode. Token → byte expansion is context-free, so
+    /// incremental decoding (one token at a time) concatenates to exactly
+    /// the full decode — the property the server's streaming text deltas
+    /// and stop-string scanner rely on. Unlike [`decode`](Self::decode),
+    /// this never applies lossy UTF-8 replacement, so a multi-byte
+    /// character split across two tokens survives reassembly.
+    pub fn decode_bytes(&self, tokens: &[i32]) -> Vec<u8> {
         let mut bytes = Vec::with_capacity(tokens.len() * 2);
         for &t in tokens {
             self.expand(t, &mut bytes);
         }
-        String::from_utf8_lossy(&bytes).into_owned()
+        bytes
     }
 
     fn expand(&self, t: i32, out: &mut Vec<u8>) {

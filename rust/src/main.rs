@@ -3,7 +3,9 @@
 //!   mamba2-serve --model sim-130m --addr 127.0.0.1:7433 --replicas 1
 //!
 //! Starts engine replicas under the router and serves the line-JSON
-//! protocol (see server/mod.rs and the README protocol table).
+//! protocol, v1 (blocking generate) + v2 (streaming deltas, request
+//! ids, cancellation, stop tokens/strings, echo) — see server/mod.rs
+//! and the README protocol table.
 //!
 //! Backend selection (`--backend`):
 //!   * `auto` (default) — PJRT/XLA over AOT artifacts when the binary was
@@ -81,6 +83,7 @@ fn main() -> Result<()> {
 
     let server = Server::new(router, tokenizer);
     server.serve(&cli.get("addr"), cli.get_usize("threads"), |a| {
-        log_info!("serving {model} on {a}");
+        log_info!("serving {model} on {a} (protocol v1+v2: streaming, \
+                   cancellation, stop tokens/strings)");
     })
 }

@@ -1,40 +1,70 @@
 //! Line-delimited-JSON TCP server + client (DESIGN.md §3; the full wire
 //! protocol table lives in README.md).
 //!
-//! Protocol (one JSON object per line, response on one line):
-//!   → {"op":"generate","prompt":"text","max_new_tokens":32,
-//!      "top_k":0,"seed":0}
-//!   ← {"tokens":[..],"text":"...","n":32,"ms":12.3}           (final)
-//!   → {"op":"metrics"}            ← {"replicas":[{..counters..}]}
-//!   → {"op":"ping"}               ← {"ok":true}
-//!   (anything else)               ← {"error":"..."} — the connection
-//!                                    stays open after errors
+//! **v1** (unchanged, byte-compatible): a `generate` request using only
+//! `prompt`/`max_new_tokens`/`top_k`/`seed` blocks and answers with one
+//! `{"tokens":[..],"text":"...","n":N,"ms":12.3}` line.
+//!
+//! **v2** adds streaming and cancellation. `"stream":true` on `generate`
+//! emits one delta frame per decode step plus a final usage frame, every
+//! frame tagged with the request `id` so one connection can multiplex
+//! several streams; `{"op":"cancel","id":N}` stops an in-flight stream
+//! and frees its engine slot mid-decode (so does dropping the
+//! connection). Requests may carry multiple `stop_tokens` and
+//! `stop_strings` — stop strings are matched here, at the detokenising
+//! layer, over the *byte* stream so a match split across a token
+//! boundary still truncates the decoded text exactly; the engine side is
+//! then cancelled to free the slot. `echo:true` prepends the prompt to
+//! the response (an initial delta frame when streaming).
 //!
 //! tokio is unavailable offline; the server runs a thread-pool accept loop
 //! over std::net — adequate for the batch sizes this CPU target serves.
-//! The server is backend-agnostic: it only sees the `Router` over engine
-//! replicas, each driving any `runtime::Backend`.
+//! Streaming requests hand their event pump to a dedicated thread so the
+//! connection's read loop keeps accepting ops (that is what makes
+//! `cancel` and stream multiplexing work). The server is
+//! backend-agnostic: it only sees the `Router` over engine replicas, each
+//! driving any `runtime::Backend`.
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::util::error::{Context, Result};
 
-use crate::coordinator::{Router, Sampling};
+use crate::coordinator::{CancelFn, Event, FinishReason, GenerateParams,
+                         ResponseStream, Router};
 use crate::eval::tokenizer::Tokenizer;
 use crate::util::json::Json;
 use crate::util::threadpool::ThreadPool;
 
+/// Server-side counters that live outside any engine replica.
+#[derive(Default)]
+pub struct ServerMetrics {
+    /// connections that ended with an I/O or protocol-layer error
+    /// (surfaced as `conn_errors` by the `metrics` op)
+    pub conn_errors: AtomicU64,
+}
+
 pub struct Server {
     router: Arc<Router>,
     tokenizer: Arc<Tokenizer>,
+    metrics: Arc<ServerMetrics>,
 }
+
+/// Per-connection table: wire-protocol request id → engine cancel hook.
+type InflightMap = Arc<Mutex<HashMap<u64, CancelFn>>>;
 
 impl Server {
     pub fn new(router: Arc<Router>, tokenizer: Arc<Tokenizer>) -> Server {
-        Server { router, tokenizer }
+        Server { router, tokenizer,
+                 metrics: Arc::new(ServerMetrics::default()) }
+    }
+
+    pub fn metrics(&self) -> Arc<ServerMetrics> {
+        Arc::clone(&self.metrics)
     }
 
     /// Bind and serve until the process exits. Returns the bound address
@@ -52,8 +82,13 @@ impl Server {
             };
             let router = Arc::clone(&self.router);
             let tok = Arc::clone(&self.tokenizer);
+            let sm = Arc::clone(&self.metrics);
             pool.execute(move || {
-                let _ = handle_conn(stream, router, tok);
+                if let Err(e) = handle_conn(stream, router, tok,
+                                            Arc::clone(&sm)) {
+                    crate::log_warn!("connection error: {e}");
+                    sm.conn_errors.fetch_add(1, Ordering::Relaxed);
+                }
             });
         }
         Ok(())
@@ -61,12 +96,31 @@ impl Server {
 }
 
 fn handle_conn(stream: TcpStream, router: Arc<Router>,
-               tok: Arc<Tokenizer>) -> Result<()> {
+               tok: Arc<Tokenizer>, smetrics: Arc<ServerMetrics>)
+    -> Result<()> {
     let peer = stream.peer_addr().ok();
     crate::log_debug!("conn from {peer:?}");
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut out = stream;
+    let reader = BufReader::new(stream.try_clone()?);
+    let writer = Arc::new(Mutex::new(stream));
+    let inflight: InflightMap = Arc::new(Mutex::new(HashMap::new()));
+    let result = conn_loop(reader, &writer, &router, &tok, &smetrics,
+                           &inflight);
+    // client disconnect (clean EOF or error): cancel every stream still
+    // in flight on this connection so the engine slots free immediately
+    let leftover: Vec<CancelFn> = inflight.lock().unwrap()
+        .drain().map(|(_, c)| c).collect();
+    for c in leftover {
+        c(FinishReason::Cancelled);
+    }
+    result
+}
+
+fn conn_loop(mut reader: BufReader<TcpStream>,
+             writer: &Arc<Mutex<TcpStream>>, router: &Arc<Router>,
+             tok: &Arc<Tokenizer>, smetrics: &Arc<ServerMetrics>,
+             inflight: &InflightMap) -> Result<()> {
     let mut line = String::new();
+    let mut next_auto_id: u64 = 1;
     loop {
         line.clear();
         if reader.read_line(&mut line)? == 0 {
@@ -75,7 +129,7 @@ fn handle_conn(stream: TcpStream, router: Arc<Router>,
         let req = match Json::parse(line.trim()) {
             Ok(j) => j,
             Err(e) => {
-                write_json(&mut out, &Json::obj(vec![
+                write_frame(writer, &Json::obj(vec![
                     ("error", Json::str(format!("bad json: {e}"))),
                 ]))?;
                 continue;
@@ -83,7 +137,7 @@ fn handle_conn(stream: TcpStream, router: Arc<Router>,
         };
         match req.get("op").and_then(Json::as_str) {
             Some("ping") => {
-                write_json(&mut out, &Json::obj(vec![
+                write_frame(writer, &Json::obj(vec![
                     ("ok", Json::Bool(true)),
                 ]))?;
             }
@@ -93,6 +147,9 @@ fn handle_conn(stream: TcpStream, router: Arc<Router>,
                     let s = router.replica(i).metrics.snapshot();
                     reps.push(Json::obj(vec![
                         ("completed", Json::num(s.completed as f64)),
+                        ("cancelled", Json::num(s.cancelled as f64)),
+                        ("queue_depth", Json::num(s.queue_depth as f64)),
+                        ("in_flight", Json::num(s.in_flight as f64)),
                         ("tokens", Json::num(s.tokens_generated as f64)),
                         ("tok_per_s", Json::num(s.throughput_tps())),
                         ("ttft_p50_ms", Json::num(s.ttft_p50 * 1e3)),
@@ -100,48 +157,48 @@ fn handle_conn(stream: TcpStream, router: Arc<Router>,
                         ("occupancy", Json::num(s.mean_batch_occupancy)),
                     ]));
                 }
-                write_json(&mut out, &Json::obj(vec![
+                write_frame(writer, &Json::obj(vec![
                     ("replicas", Json::Arr(reps)),
+                    ("conn_errors", Json::num(
+                        smetrics.conn_errors.load(Ordering::Relaxed)
+                            as f64)),
                 ]))?;
             }
-            Some("generate") => {
-                let t0 = Instant::now();
-                let prompt_text = req.get("prompt").and_then(Json::as_str)
-                    .unwrap_or("");
-                let n = req.get("max_new_tokens").and_then(Json::as_u64)
-                    .unwrap_or(32) as usize;
-                let k = req.get("top_k").and_then(Json::as_u64)
-                    .unwrap_or(0) as usize;
-                let seed = req.get("seed").and_then(Json::as_u64)
-                    .unwrap_or(0);
-                let prompt = tok.encode(prompt_text);
-                let sampling = if k == 0 {
-                    Sampling::Greedy
-                } else {
-                    Sampling::TopK { k, seed }
-                };
-                let stream = router.submit(prompt, n, sampling);
-                match stream.collect() {
-                    Ok(tokens) => {
-                        let text = tok.decode(&tokens);
-                        write_json(&mut out, &Json::obj(vec![
-                            ("tokens", Json::Arr(tokens.iter()
-                                .map(|&t| Json::num(t as f64)).collect())),
-                            ("text", Json::str(text)),
-                            ("n", Json::num(tokens.len() as f64)),
-                            ("ms", Json::num(
-                                t0.elapsed().as_secs_f64() * 1e3)),
-                        ]))?;
-                    }
-                    Err(e) => {
-                        write_json(&mut out, &Json::obj(vec![
-                            ("error", Json::str(e)),
-                        ]))?;
+            Some("cancel") => match req.get("id").and_then(Json::as_u64) {
+                None => {
+                    write_frame(writer, &Json::obj(vec![
+                        ("error", Json::str("cancel requires a numeric \
+                                             id")),
+                    ]))?;
+                }
+                Some(id) => {
+                    let hook = inflight.lock().unwrap().get(&id).cloned();
+                    match hook {
+                        Some(c) => {
+                            // no ack frame: the stream's terminal
+                            // "cancelled" frame IS the acknowledgment.
+                            // (An in-band ack could race the terminal
+                            // frame and desync later blocking reads.)
+                            c(FinishReason::Cancelled);
+                        }
+                        None => {
+                            // structured error: the op failed but the
+                            // connection (and other streams) live on
+                            write_frame(writer, &Json::obj(vec![
+                                ("id", Json::num(id as f64)),
+                                ("error", Json::str("unknown or finished \
+                                                     id")),
+                            ]))?;
+                        }
                     }
                 }
+            },
+            Some("generate") => {
+                op_generate(&req, writer, router, tok, inflight,
+                            &mut next_auto_id)?;
             }
             _ => {
-                write_json(&mut out, &Json::obj(vec![
+                write_frame(writer, &Json::obj(vec![
                     ("error", Json::str("unknown op")),
                 ]))?;
             }
@@ -149,18 +206,601 @@ fn handle_conn(stream: TcpStream, router: Arc<Router>,
     }
 }
 
-fn write_json(w: &mut impl Write, j: &Json) -> Result<()> {
-    writeln!(w, "{j}")?;
-    w.flush()?;
+/// Cap on concurrently streaming requests per connection (each owns a
+/// pump thread while queued or decoding).
+const MAX_STREAMS_PER_CONN: usize = 32;
+
+/// Fields whose presence marks a request as protocol v2 (their absence
+/// keeps the non-streaming response byte-compatible with v1).
+const V2_KEYS: &[&str] = &["id", "stream", "top_p", "temperature",
+                           "stop_token", "stop_tokens", "stop_strings",
+                           "echo"];
+
+fn is_v2(req: &Json) -> bool {
+    V2_KEYS.iter().any(|k| req.get(k).is_some())
+}
+
+/// Decode the wire fields of a `generate` request into [`GenerateParams`].
+fn parse_params(req: &Json) -> GenerateParams {
+    let mut p = GenerateParams::new()
+        .max_new_tokens(req.get("max_new_tokens").and_then(Json::as_u64)
+                        .unwrap_or(32) as usize)
+        .top_k(req.get("top_k").and_then(Json::as_u64)
+               .unwrap_or(0) as usize)
+        .seed(req.get("seed").and_then(Json::as_u64).unwrap_or(0));
+    if let Some(tp) = req.get("top_p").and_then(Json::as_f64) {
+        p = p.top_p(tp as f32);
+    }
+    if let Some(t) = req.get("temperature").and_then(Json::as_f64) {
+        p = p.temperature(t as f32);
+    }
+    if let Some(t) = req.get("stop_token").and_then(Json::as_i64) {
+        p = p.stop_token(t as i32);
+    }
+    if let Some(a) = req.get("stop_tokens").and_then(Json::as_arr) {
+        for v in a {
+            if let Some(t) = v.as_i64() {
+                p = p.stop_token(t as i32);
+            }
+        }
+    }
+    if let Some(a) = req.get("stop_strings").and_then(Json::as_arr) {
+        for v in a {
+            if let Some(s) = v.as_str() {
+                p = p.stop_string(s);
+            }
+        }
+    }
+    if req.get("echo").and_then(Json::as_bool).unwrap_or(false) {
+        p = p.echo(true);
+    }
+    p
+}
+
+fn op_generate(req: &Json, writer: &Arc<Mutex<TcpStream>>,
+               router: &Arc<Router>, tok: &Arc<Tokenizer>,
+               inflight: &InflightMap, next_auto_id: &mut u64)
+    -> Result<()> {
+    let t0 = Instant::now();
+    let prompt_text = req.get("prompt").and_then(Json::as_str)
+        .unwrap_or("").to_string();
+    let params = parse_params(req);
+    let v2 = is_v2(req);
+    let streaming = req.get("stream").and_then(Json::as_bool)
+        .unwrap_or(false);
+    let prompt = tok.encode(&prompt_text);
+    let prompt_len = prompt.len();
+
+    if !streaming {
+        // ------------------------------------- blocking (v1-shaped) ---
+        // A blocking client that disconnects mid-generate would
+        // otherwise pin its slot until max_new_tokens: probe the socket
+        // every few tokens (peek under the write lock — non-destructive,
+        // pipelined request bytes just mean "alive") and let the pump's
+        // client-gone path cancel the engine side.
+        let probe_writer = Arc::clone(writer);
+        let mut since_probe = 0usize;
+        let stream = router.generate(prompt.clone(), params.clone());
+        let out = pump_generate(stream, tok, &params.stop_strings, t0,
+                                |ts, _| {
+            since_probe += ts.len().max(1);
+            if since_probe >= 16 {
+                since_probe = 0;
+                if !peer_alive(&probe_writer) {
+                    crate::bail!("client disconnected");
+                }
+            }
+            Ok(())
+        });
+        if out.client_gone {
+            return Ok(()); // nothing left to answer; read loop sees EOF
+        }
+        if let Some(e) = out.error {
+            let mut fields = vec![("error", Json::str(e))];
+            if let Some(id) = req.get("id").and_then(Json::as_u64) {
+                fields.push(("id", Json::num(id as f64)));
+            }
+            return write_frame(writer, &Json::obj(fields));
+        }
+        let mut tokens = out.tokens;
+        let mut text = out.text;
+        let n = tokens.len();
+        if params.echo {
+            text = format!("{prompt_text}{text}");
+            let mut all = prompt.clone();
+            all.extend(&tokens);
+            tokens = all;
+        }
+        let e2e_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let mut fields = vec![
+            ("tokens", Json::Arr(tokens.iter()
+                .map(|&t| Json::num(t as f64)).collect())),
+            ("text", Json::str(text)),
+            ("n", Json::num(n as f64)),
+            ("ms", Json::num(e2e_ms)),
+        ];
+        if v2 {
+            if let Some(id) = req.get("id").and_then(Json::as_u64) {
+                fields.push(("id", Json::num(id as f64)));
+            }
+            fields.push(("finish_reason", Json::str(out.reason.as_str())));
+            fields.push(("usage",
+                         usage_json(prompt_len, n, out.ttft_ms, e2e_ms)));
+        }
+        return write_frame(writer, &Json::obj(fields));
+    }
+
+    // --------------------------------------------------- streaming ---
+    let wire_id = match req.get("id").and_then(Json::as_u64) {
+        Some(id) => id,
+        None => {
+            let g = inflight.lock().unwrap();
+            while g.contains_key(next_auto_id) {
+                *next_auto_id += 1;
+            }
+            let id = *next_auto_id;
+            *next_auto_id += 1;
+            id
+        }
+    };
+    {
+        let g = inflight.lock().unwrap();
+        if g.contains_key(&wire_id) {
+            // terminal frame (done:true) so stream readers don't hang
+            return write_frame(writer, &Json::obj(vec![
+                ("id", Json::num(wire_id as f64)),
+                ("done", Json::Bool(true)),
+                ("error", Json::str("id already in flight on this \
+                                     connection")),
+            ]));
+        }
+        // each streaming request owns a pump thread for its whole
+        // queued+decode lifetime: bound them per connection so one
+        // client pipelining thousands of streams can't spawn threads
+        // without limit
+        if g.len() >= MAX_STREAMS_PER_CONN {
+            return write_frame(writer, &Json::obj(vec![
+                ("id", Json::num(wire_id as f64)),
+                ("done", Json::Bool(true)),
+                ("error", Json::str("too many concurrent streams on \
+                                     this connection")),
+            ]));
+        }
+    }
+    let stream = router.generate(prompt, params.clone());
+    if let Some(c) = stream.cancel_fn() {
+        inflight.lock().unwrap().insert(wire_id, c);
+    }
+    // the pump owns the stream on its own thread so this connection's
+    // read loop keeps accepting ops (cancel, more generates, ...)
+    let writer2 = Arc::clone(writer);
+    let tok2 = Arc::clone(tok);
+    let inflight2 = Arc::clone(inflight);
+    let echo_text = if params.echo { Some(prompt_text) } else { None };
+    let stop_strings = params.stop_strings.clone();
+    std::thread::Builder::new()
+        .name("stream-pump".into())
+        .spawn(move || {
+            if let Some(p) = &echo_text {
+                // echo rides an initial delta frame
+                let _ = write_frame(&writer2, &delta_frame(wire_id, &[], p));
+            }
+            let out = pump_generate(stream, &tok2, &stop_strings, t0,
+                                    |ts, text| {
+                write_frame(&writer2, &delta_frame(wire_id, ts, text))
+            });
+            if out.client_gone {
+                inflight2.lock().unwrap().remove(&wire_id);
+                return; // connection dead: nothing left to write
+            }
+            let e2e_ms = t0.elapsed().as_secs_f64() * 1e3;
+            let frame = if let Some(e) = out.error {
+                Json::obj(vec![
+                    ("id", Json::num(wire_id as f64)),
+                    ("done", Json::Bool(true)),
+                    ("error", Json::str(e)),
+                ])
+            } else {
+                Json::obj(vec![
+                    ("id", Json::num(wire_id as f64)),
+                    ("done", Json::Bool(true)),
+                    ("finish_reason", Json::str(out.reason.as_str())),
+                    ("usage", usage_json(prompt_len, out.tokens.len(),
+                                         out.ttft_ms, e2e_ms)),
+                ])
+            };
+            // terminal frame BEFORE unregistering: a client that saw the
+            // frame and reuses the id must not race our old map entry
+            let _ = write_frame(&writer2, &frame);
+            inflight2.lock().unwrap().remove(&wire_id);
+        })?;
     Ok(())
+}
+
+/// Result of pumping one generation stream to completion.
+struct GenOutcome {
+    /// generated tokens, truncated at a stop-string match
+    tokens: Vec<i32>,
+    /// decoded text, truncated at a stop-string match
+    text: String,
+    reason: FinishReason,
+    ttft_ms: f64,
+    error: Option<String>,
+    /// the delta callback failed (client disconnected mid-stream)
+    client_gone: bool,
+}
+
+/// Drive a [`ResponseStream`] to its terminal event, decoding tokens,
+/// scanning for stop strings over the byte stream, and calling
+/// `on_delta(tokens, text)` once per engine event. Text AND token ids
+/// are held back in lockstep until they can no longer complete a stop
+/// match, so emitted deltas never contain any part of a stop string and
+/// the streamed token ids always agree with the final (truncated)
+/// result and `usage.completion_tokens`. On a match the engine side is
+/// stopped (freeing the batch slot) and the result truncated. A failing
+/// `on_delta` is treated as a client disconnect → cancel.
+fn pump_generate(mut stream: ResponseStream, tok: &Tokenizer,
+                 stop_strings: &[String], t0: Instant,
+                 mut on_delta: impl FnMut(&[i32], &str) -> Result<()>)
+    -> GenOutcome {
+    let mut scan = StopScan::new(stop_strings);
+    let mut tokens: Vec<i32> = Vec::new();
+    // cumulative decoded-byte end offset of each token (for truncation)
+    let mut tok_ends: Vec<usize> = Vec::new();
+    // tokens whose bytes are still held back, with their end offsets
+    let mut pending: std::collections::VecDeque<(i32, usize)> =
+        std::collections::VecDeque::new();
+    let mut ttft_ms = 0.0;
+    let mut reason = FinishReason::Length;
+    let mut error = None;
+    let mut client_gone = false;
+    loop {
+        match stream.next_event() {
+            Some(Event::Tokens(ts)) => {
+                if tokens.is_empty() && !ts.is_empty() {
+                    ttft_ms = t0.elapsed().as_secs_f64() * 1e3;
+                }
+                for &t in &ts {
+                    scan.push(&tok.decode_bytes(&[t]));
+                    tokens.push(t);
+                    tok_ends.push(scan.total_len());
+                    pending.push_back((t, scan.total_len()));
+                }
+                if scan.matched() {
+                    // stop string completed: free the engine slot now —
+                    // as a *completed* request, not a cancelled one
+                    stream.cancel_as(FinishReason::StopString);
+                    reason = FinishReason::StopString;
+                    drain(&mut stream);
+                    break;
+                }
+                let emit = scan.take_emittable();
+                let ready = drain_ready(&mut pending, scan.emitted());
+                if (!ready.is_empty() || !emit.is_empty())
+                    && on_delta(&ready, &emit).is_err() {
+                    stream.cancel();
+                    reason = FinishReason::Cancelled;
+                    client_gone = true;
+                    drain(&mut stream);
+                    break;
+                }
+            }
+            Some(Event::Done { reason: r, .. }) => {
+                reason = r;
+                break;
+            }
+            Some(Event::Error(e)) => {
+                error = Some(e);
+                break;
+            }
+            None => break,
+        }
+    }
+    if let Some(m) = scan.match_at() {
+        // keep only tokens whose decoded bytes lie entirely before the
+        // match — the wire result never leaks past the stop string
+        let keep = tok_ends.iter().filter(|&&e| e <= m).count();
+        tokens.truncate(keep);
+    }
+    if !client_gone && error.is_none() {
+        // flush what is still held back (partial stop-string prefixes,
+        // or the run-up to the match itself), tokens and text together
+        let tail = scan.take_tail();
+        let ready = drain_ready(&mut pending, scan.emitted());
+        if !tail.is_empty() || !ready.is_empty() {
+            let _ = on_delta(&ready, &tail);
+        }
+    }
+    GenOutcome { text: scan.final_text(), tokens, reason, ttft_ms, error,
+                 client_gone }
+}
+
+/// Pop the held-back tokens whose decoded bytes now lie entirely within
+/// the emitted prefix (`end offset <= upto`).
+fn drain_ready(pending: &mut std::collections::VecDeque<(i32, usize)>,
+               upto: usize) -> Vec<i32> {
+    let mut out = Vec::new();
+    while pending.front().is_some_and(|&(_, e)| e <= upto) {
+        out.push(pending.pop_front().unwrap().0);
+    }
+    out
+}
+
+/// Consume buffered events until the engine acknowledges the cancel
+/// with its terminal event.
+fn drain(stream: &mut ResponseStream) {
+    while let Some(ev) = stream.next_event() {
+        if matches!(ev, Event::Done { .. } | Event::Error(_)) {
+            break;
+        }
+    }
+}
+
+/// Incremental stop-string scanner over the decoded **byte** stream, so
+/// a stop string split across a token boundary (or a multi-byte UTF-8
+/// character) still matches and truncates exactly. Semantics: the first
+/// stop string to *complete* in the stream wins (earliest match
+/// position on ties within one push) — output already emitted cannot be
+/// recalled to favour a longer match that completes later. Each push
+/// searches only the window that can contain a new match, so long
+/// streams stay O(n · pattern).
+struct StopScan {
+    pats: Vec<Vec<u8>>,
+    buf: Vec<u8>,
+    emitted: usize,
+    match_at: Option<usize>,
+}
+
+impl StopScan {
+    fn new(stop_strings: &[String]) -> StopScan {
+        StopScan {
+            pats: stop_strings.iter()
+                .filter(|s| !s.is_empty())
+                .map(|s| s.as_bytes().to_vec())
+                .collect(),
+            buf: Vec::new(),
+            emitted: 0,
+            match_at: None,
+        }
+    }
+
+    fn push(&mut self, bytes: &[u8]) {
+        if self.match_at.is_some() {
+            return;
+        }
+        let old_len = self.buf.len();
+        self.buf.extend_from_slice(bytes);
+        let mut best: Option<usize> = None;
+        for p in &self.pats {
+            // every previous push scanned the buffer, so a new match
+            // must involve at least one new byte: searching only the
+            // window that can contain one keeps long streams O(n)
+            let from = old_len.saturating_sub(p.len() - 1);
+            if let Some(i) = find_sub(&self.buf[from..], p) {
+                let i = i + from;
+                best = Some(best.map_or(i, |b: usize| b.min(i)));
+            }
+        }
+        self.match_at = best;
+    }
+
+    fn matched(&self) -> bool {
+        self.match_at.is_some()
+    }
+
+    fn match_at(&self) -> Option<usize> {
+        self.match_at
+    }
+
+    fn total_len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Byte offset up to which text has been released to the client.
+    fn emitted(&self) -> usize {
+        self.emitted
+    }
+
+    /// End of the text this request will ever deliver: the earliest
+    /// stop-string match, else everything decoded so far.
+    fn end(&self) -> usize {
+        self.match_at.unwrap_or(self.buf.len())
+    }
+
+    /// Bytes that can no longer participate in a future stop match
+    /// (everything except the longest buffer suffix that is a proper
+    /// prefix of some stop string), floored to a UTF-8 boundary.
+    fn take_emittable(&mut self) -> String {
+        let mut hold = 0;
+        for p in &self.pats {
+            let maxl = (p.len() - 1).min(self.buf.len());
+            for l in (1..=maxl).rev() {
+                if self.buf.ends_with(&p[..l]) {
+                    hold = hold.max(l);
+                    break;
+                }
+            }
+        }
+        let safe = utf8_floor(&self.buf, self.buf.len() - hold);
+        self.take_to(safe)
+    }
+
+    /// Everything not yet emitted, up to `end()`.
+    fn take_tail(&mut self) -> String {
+        self.take_to(self.end())
+    }
+
+    fn take_to(&mut self, to: usize) -> String {
+        let to = to.max(self.emitted);
+        let s = String::from_utf8_lossy(&self.buf[self.emitted..to])
+            .into_owned();
+        self.emitted = to;
+        s
+    }
+
+    /// Full (stop-truncated) text of the request.
+    fn final_text(&self) -> String {
+        String::from_utf8_lossy(&self.buf[..self.end()]).into_owned()
+    }
+}
+
+fn find_sub(hay: &[u8], needle: &[u8]) -> Option<usize> {
+    if needle.is_empty() || hay.len() < needle.len() {
+        return None;
+    }
+    hay.windows(needle.len()).position(|w| w == needle)
+}
+
+/// Largest `j <= i` that does not split a UTF-8 character of `b` —
+/// including an incomplete multi-byte sequence still waiting for its
+/// continuation bytes at the end of the buffer.
+fn utf8_floor(b: &[u8], i: usize) -> usize {
+    let i = i.min(b.len());
+    if i == 0 {
+        return 0;
+    }
+    // lead byte of the character containing position i-1
+    let mut l = i - 1;
+    while l > 0 && (b[l] & 0xC0) == 0x80 {
+        l -= 1;
+    }
+    if (b[l] & 0xC0) == 0x80 {
+        return 0; // nothing but continuation bytes: hold everything
+    }
+    if l + utf8_char_len(b[l]) <= i {
+        i // the character is complete before the cut
+    } else {
+        l // the cut splits it: floor to its lead byte
+    }
+}
+
+fn utf8_char_len(lead: u8) -> usize {
+    match lead {
+        0xF0..=0xF7 => 4,
+        0xE0..=0xEF => 3,
+        0xC0..=0xDF => 2,
+        _ => 1,
+    }
+}
+
+fn usage_json(prompt_tokens: usize, completion_tokens: usize,
+              ttft_ms: f64, e2e_ms: f64) -> Json {
+    Json::obj(vec![
+        ("prompt_tokens", Json::num(prompt_tokens as f64)),
+        ("completion_tokens", Json::num(completion_tokens as f64)),
+        ("ttft_ms", Json::num(ttft_ms)),
+        ("e2e_ms", Json::num(e2e_ms)),
+    ])
+}
+
+fn delta_frame(id: u64, tokens: &[i32], text: &str) -> Json {
+    Json::obj(vec![
+        ("id", Json::num(id as f64)),
+        ("delta", Json::obj(vec![
+            ("tokens", Json::Arr(tokens.iter()
+                .map(|&t| Json::num(t as f64)).collect())),
+            ("text", Json::str(text)),
+        ])),
+    ])
+}
+
+fn write_frame(w: &Mutex<TcpStream>, j: &Json) -> Result<()> {
+    // render outside the lock and write the whole line in one syscall:
+    // Json's recursive Display would otherwise issue one write() per
+    // fragment on the unbuffered socket, all while holding the writer
+    // mutex that every pump and the read loop share
+    let mut line = j.to_string();
+    line.push('\n');
+    let mut g = w.lock().unwrap();
+    g.write_all(line.as_bytes())?;
+    g.flush()?;
+    Ok(())
+}
+
+/// Non-destructive liveness check: a one-byte non-blocking peek under
+/// the write lock. `WouldBlock`, pipelined request bytes, and `Ok(0)`
+/// (FIN — a half-closed write side, e.g. `printf ... | nc` scripting
+/// clients that still read the response) all mean "keep serving"; only
+/// a hard socket error (connection reset and friends) means the peer
+/// is truly gone. Orderly disconnects of blocking requests are instead
+/// noticed when the response write fails; streaming requests detect
+/// every disconnect at the next delta write. Holding the write lock
+/// keeps the non-blocking toggle from racing a concurrent streaming
+/// pump's write.
+fn peer_alive(w: &Mutex<TcpStream>) -> bool {
+    let g = w.lock().unwrap();
+    if g.set_nonblocking(true).is_err() {
+        return false;
+    }
+    let mut byte = [0u8; 1];
+    let r = g.peek(&mut byte);
+    let restored = g.set_nonblocking(false).is_ok();
+    restored
+        && match r {
+            Ok(_) => true,
+            Err(e) => e.kind() == std::io::ErrorKind::WouldBlock,
+        }
+}
+
+/// Build the wire-level `generate` request for [`GenerateParams`]
+/// (shared by [`Client`] and external drivers).
+pub fn generate_request_json(prompt: &str, p: &GenerateParams,
+                             id: Option<u64>, stream: bool) -> Json {
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("op", Json::str("generate")),
+        ("prompt", Json::str(prompt)),
+        ("max_new_tokens", Json::num(p.max_new_tokens as f64)),
+    ];
+    if p.top_k > 0 {
+        fields.push(("top_k", Json::num(p.top_k as f64)));
+    }
+    if p.top_p < 1.0 {
+        fields.push(("top_p", Json::num(p.top_p as f64)));
+    }
+    if p.temperature != 1.0 {
+        fields.push(("temperature", Json::num(p.temperature as f64)));
+    }
+    if p.seed != 0 {
+        fields.push(("seed", Json::num(p.seed as f64)));
+    }
+    if !p.stop_tokens.is_empty() {
+        fields.push(("stop_tokens", Json::Arr(p.stop_tokens.iter()
+            .map(|&t| Json::num(t as f64)).collect())));
+    }
+    if !p.stop_strings.is_empty() {
+        fields.push(("stop_strings", Json::Arr(p.stop_strings.iter()
+            .map(|s| Json::str(s.clone())).collect())));
+    }
+    if p.echo {
+        fields.push(("echo", Json::Bool(true)));
+    }
+    if let Some(id) = id {
+        fields.push(("id", Json::num(id as f64)));
+    }
+    if stream {
+        fields.push(("stream", Json::Bool(true)));
+    }
+    Json::obj(fields)
 }
 
 // ----------------------------------------------------------- client -----
 
-/// Blocking client for the line-JSON protocol.
+/// Blocking client for the line-JSON protocol (v1 + v2).
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    next_id: u64,
+}
+
+/// One frame of a streaming `generate` as seen by [`Client::generate_stream`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// incremental tokens + safe-to-display text
+    Delta { tokens: Vec<i32>, text: String },
+    /// terminal usage frame
+    Done { finish_reason: String, usage: Json },
+    /// terminal error frame
+    Error(String),
 }
 
 impl Client {
@@ -170,6 +810,7 @@ impl Client {
         Ok(Client {
             reader: BufReader::new(stream.try_clone()?),
             writer: stream,
+            next_id: 1,
         })
     }
 
@@ -181,6 +822,7 @@ impl Client {
         Ok(Json::parse(line.trim())?)
     }
 
+    /// v1 blocking generate (greedy, default fields only).
     pub fn generate(&mut self, prompt: &str, max_new_tokens: usize)
         -> Result<Json> {
         self.call(&Json::obj(vec![
@@ -190,8 +832,208 @@ impl Client {
         ]))
     }
 
+    /// v2 blocking generate with full [`GenerateParams`]; the response
+    /// carries `id`, `finish_reason`, and `usage`.
+    pub fn generate_with(&mut self, prompt: &str, params: &GenerateParams)
+        -> Result<Json> {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.call(&generate_request_json(prompt, params, Some(id), false))
+    }
+
+    /// v2 streaming generate: returns an iterator of [`Frame`]s
+    /// (deltas, then one terminal `Done`/`Error`). Call
+    /// [`GenStream::cancel`] to stop it server-side mid-decode.
+    pub fn generate_stream<'a>(&'a mut self, prompt: &str,
+                               params: &GenerateParams)
+        -> Result<GenStream<'a>> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let req = generate_request_json(prompt, params, Some(id), true);
+        writeln!(self.writer, "{req}")?;
+        self.writer.flush()?;
+        Ok(GenStream { c: self, id, done: false })
+    }
+
+    /// Fire a cancel for request `id`. A found id produces no ack —
+    /// the stream's terminal `"cancelled"` frame is the acknowledgment;
+    /// an unknown/finished id produces an in-band structured error
+    /// frame (which an active [`GenStream`] skips).
+    pub fn cancel(&mut self, id: u64) -> Result<()> {
+        writeln!(self.writer, "{}", Json::obj(vec![
+            ("op", Json::str("cancel")),
+            ("id", Json::num(id as f64)),
+        ]))?;
+        self.writer.flush()?;
+        Ok(())
+    }
+
     pub fn ping(&mut self) -> Result<bool> {
         let r = self.call(&Json::obj(vec![("op", Json::str("ping"))]))?;
         Ok(r.get("ok").and_then(Json::as_bool).unwrap_or(false))
+    }
+}
+
+/// Iterator over the frames of one streaming generate (single-stream
+/// consumption; multiplexing clients should speak the wire protocol
+/// directly and demux frames by `id`).
+pub struct GenStream<'a> {
+    c: &'a mut Client,
+    pub id: u64,
+    done: bool,
+}
+
+impl<'a> GenStream<'a> {
+    /// Next frame for this request; `None` after the terminal frame.
+    pub fn next_frame(&mut self) -> Result<Option<Frame>> {
+        if self.done {
+            return Ok(None);
+        }
+        let mut line = String::new();
+        loop {
+            line.clear();
+            if self.c.reader.read_line(&mut line)? == 0 {
+                self.done = true;
+                return Ok(Some(Frame::Error(
+                    "server closed connection".into())));
+            }
+            let j = Json::parse(line.trim())?;
+            if let Some(d) = j.get("delta") {
+                let tokens = d.get("tokens").and_then(Json::as_arr)
+                    .map(|a| a.iter().filter_map(Json::as_i64)
+                         .map(|t| t as i32).collect())
+                    .unwrap_or_default();
+                let text = d.get("text").and_then(Json::as_str)
+                    .unwrap_or("").to_string();
+                return Ok(Some(Frame::Delta { tokens, text }));
+            }
+            if j.get("done").and_then(Json::as_bool).unwrap_or(false) {
+                self.done = true;
+                if let Some(e) = j.get("error").and_then(Json::as_str) {
+                    return Ok(Some(Frame::Error(e.to_string())));
+                }
+                let finish_reason = j.get("finish_reason")
+                    .and_then(Json::as_str).unwrap_or("").to_string();
+                let usage = j.get("usage").cloned().unwrap_or(Json::Null);
+                return Ok(Some(Frame::Done { finish_reason, usage }));
+            }
+            // anything else on the line (structured errors for other
+            // ops, e.g. a cancel of an unknown id) is skipped by this
+            // single-stream reader
+        }
+    }
+
+    /// Cancel this stream server-side; frames already in flight still
+    /// arrive, then the terminal frame reports `"cancelled"`.
+    pub fn cancel(&mut self) -> Result<()> {
+        let id = self.id;
+        self.c.cancel(id)
+    }
+}
+
+impl<'a> Iterator for GenStream<'a> {
+    type Item = Result<Frame>;
+
+    fn next(&mut self) -> Option<Result<Frame>> {
+        match self.next_frame() {
+            Ok(Some(f)) => Some(Ok(f)),
+            Ok(None) => None,
+            Err(e) => {
+                self.done = true;
+                Some(Err(e))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stop_scan_exact_and_cross_boundary() {
+        let stops = vec!["END".to_string()];
+        let mut s = StopScan::new(&stops);
+        s.push(b"hello E");            // 'E' could start a match: held
+        assert!(!s.matched());
+        let first = s.take_emittable();
+        assert_eq!(first, "hello ");   // the 'E' is held back
+        s.push(b"ND trailing");        // completes across the boundary
+        assert!(s.matched());
+        assert_eq!(s.match_at(), Some(6));
+        assert_eq!(s.final_text(), "hello ");
+        // nothing between emitted and the match start remains
+        assert_eq!(s.take_tail(), "");
+    }
+
+    #[test]
+    fn stop_scan_earliest_of_multiple() {
+        let stops = vec!["xyz".to_string(), "lo".to_string()];
+        let mut s = StopScan::new(&stops);
+        s.push(b"hello world");
+        assert_eq!(s.match_at(), Some(3)); // "lo" at offset 3
+        assert_eq!(s.final_text(), "hel");
+    }
+
+    #[test]
+    fn stop_scan_no_match_flushes_everything() {
+        let stops = vec!["ZZZ".to_string()];
+        let mut s = StopScan::new(&stops);
+        s.push(b"abc");
+        s.push(b"def");
+        let mut out = s.take_emittable();
+        out.push_str(&s.take_tail());
+        assert_eq!(out, "abcdef");
+        assert_eq!(s.final_text(), "abcdef");
+    }
+
+    #[test]
+    fn stop_scan_holds_partial_utf8() {
+        // 'é' = 0xC3 0xA9 split across two pushes must not be emitted
+        // as replacement characters
+        let mut s = StopScan::new(&[]);
+        s.push(&[0xC3]);
+        assert_eq!(s.take_emittable(), "");
+        s.push(&[0xA9]);
+        let mut out = s.take_emittable();
+        out.push_str(&s.take_tail());
+        assert_eq!(out, "é");
+    }
+
+    #[test]
+    fn utf8_floor_walks_to_boundary() {
+        let b = "aé".as_bytes(); // [0x61, 0xC3, 0xA9]
+        assert_eq!(utf8_floor(b, 3), 3);
+        assert_eq!(utf8_floor(b, 2), 1); // inside 'é'
+        assert_eq!(utf8_floor(b, 1), 1);
+        assert_eq!(utf8_floor(b, 0), 0);
+    }
+
+    #[test]
+    fn v2_detection() {
+        let v1 = Json::parse(
+            r#"{"op":"generate","prompt":"x","max_new_tokens":4}"#)
+            .unwrap();
+        assert!(!is_v2(&v1));
+        let v2 = Json::parse(
+            r#"{"op":"generate","prompt":"x","stop_token":3}"#).unwrap();
+        assert!(is_v2(&v2));
+    }
+
+    #[test]
+    fn request_json_roundtrips_params() {
+        let p = GenerateParams::new().max_new_tokens(9).top_k(4).seed(3)
+            .stop_token(7).stop_string("ab").echo(true);
+        let j = generate_request_json("hi", &p, Some(5), true);
+        let back = parse_params(&j);
+        assert_eq!(back.max_new_tokens, 9);
+        assert_eq!(back.top_k, 4);
+        assert_eq!(back.seed, 3);
+        assert_eq!(back.stop_tokens, vec![7]);
+        assert_eq!(back.stop_strings, vec!["ab".to_string()]);
+        assert!(back.echo);
+        assert_eq!(j.get("id").and_then(Json::as_u64), Some(5));
+        assert_eq!(j.get("stream").and_then(Json::as_bool), Some(true));
+        assert!(is_v2(&j));
     }
 }

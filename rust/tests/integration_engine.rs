@@ -1,9 +1,14 @@
 //! Integration: continuous-batching engine end-to-end on the tiny config,
 //! hermetically on the pure-Rust reference backend (no artifacts needed).
+//! Covers the v2 request surface: `GenerateParams`, multiple stop tokens,
+//! and cancellation (explicit, queued, and stream-drop) freeing slots
+//! mid-decode.
 
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-use mamba2_serve::coordinator::{Engine, EngineConfig, Router, Sampling,
+use mamba2_serve::coordinator::{Engine, EngineConfig, Event, FinishReason,
+                                GenRequest, GenerateParams, Router,
                                 SingleStream};
 use mamba2_serve::runtime::{Backend, ReferenceBackend};
 
@@ -14,12 +19,16 @@ fn session() -> Box<dyn Backend> {
 #[test]
 fn single_request_roundtrip() {
     let eng = Engine::start(session(), EngineConfig::default()).unwrap();
-    let stream = eng.submit(vec![1, 2, 3, 4, 5], 8, Sampling::Greedy);
-    let toks = stream.collect().unwrap();
+    let stream = eng.generate(vec![1, 2, 3, 4, 5],
+                              GenerateParams::new().max_new_tokens(8));
+    let (toks, reason) = stream.collect_with_reason().unwrap();
     assert_eq!(toks.len(), 8);
+    assert_eq!(reason, FinishReason::Length);
     let snap = eng.metrics.snapshot();
     assert_eq!(snap.completed, 1);
     assert_eq!(snap.tokens_generated, 8);
+    assert_eq!(snap.queue_depth, 0);
+    assert_eq!(snap.in_flight, 0);
 }
 
 #[test]
@@ -40,7 +49,8 @@ fn batched_equals_single_stream_greedy() {
     }
     let eng = Engine::start(session(), EngineConfig::default()).unwrap();
     let streams: Vec<_> = prompts.iter()
-        .map(|p| eng.submit(p.clone(), 6, Sampling::Greedy))
+        .map(|p| eng.generate(p.clone(),
+                              GenerateParams::new().max_new_tokens(6)))
         .collect();
     for (i, s) in streams.into_iter().enumerate() {
         let got = s.collect().unwrap();
@@ -56,7 +66,8 @@ fn oversubscription_queues_and_completes() {
         ..Default::default()
     }).unwrap();
     let streams: Vec<_> = (0..7)
-        .map(|i| eng.submit(vec![i as i32 + 1; 8], 5, Sampling::Greedy))
+        .map(|i| eng.generate(vec![i as i32 + 1; 8],
+                              GenerateParams::new().max_new_tokens(5)))
         .collect();
     for s in streams {
         assert_eq!(s.collect().unwrap().len(), 5);
@@ -64,6 +75,7 @@ fn oversubscription_queues_and_completes() {
     let snap = eng.metrics.snapshot();
     assert_eq!(snap.completed, 7);
     assert_eq!(snap.failed, 0);
+    assert_eq!(snap.queue_depth, 0, "admitted must catch up to submitted");
     assert!(snap.mean_batch_occupancy > 1.0,
             "batching should overlap requests (occupancy {})",
             snap.mean_batch_occupancy);
@@ -79,8 +91,9 @@ fn varying_lengths_join_and_leave() {
     }).unwrap();
     let lens = [2usize, 9, 5, 13, 1, 7];
     let streams: Vec<_> = lens.iter().enumerate()
-        .map(|(i, &n)| eng.submit(vec![(i + 1) as i32; 4], n,
-                                  Sampling::Greedy))
+        .map(|(i, &n)| eng.generate(vec![(i + 1) as i32; 4],
+                                    GenerateParams::new()
+                                        .max_new_tokens(n)))
         .collect();
     for (s, &n) in streams.into_iter().zip(&lens) {
         assert_eq!(s.collect().unwrap().len(), n);
@@ -90,17 +103,27 @@ fn varying_lengths_join_and_leave() {
 #[test]
 fn topk_sampling_is_seeded_and_valid() {
     let eng = Engine::start(session(), EngineConfig::default()).unwrap();
-    let a = eng.submit_req(mamba2_serve::coordinator::GenRequest {
-        id: 900, prompt: vec![1, 2, 3], max_new_tokens: 6,
-        sampling: Sampling::TopK { k: 4, seed: 7 }, stop_token: None,
+    let params = GenerateParams::new().max_new_tokens(6).top_k(4).seed(7);
+    let a = eng.submit_req(GenRequest {
+        id: 900, prompt: vec![1, 2, 3], params: params.clone(),
     }).collect().unwrap();
-    let b = eng.submit_req(mamba2_serve::coordinator::GenRequest {
-        id: 900, prompt: vec![1, 2, 3], max_new_tokens: 6,
-        sampling: Sampling::TopK { k: 4, seed: 7 }, stop_token: None,
+    let b = eng.submit_req(GenRequest {
+        id: 901, prompt: vec![1, 2, 3], params,
     }).collect().unwrap();
     assert_eq!(a, b, "same seed must reproduce");
     let vocab = 512;
     assert!(a.iter().all(|&t| t >= 0 && t < vocab));
+}
+
+#[test]
+fn topp_sampling_is_seeded_and_valid() {
+    let eng = Engine::start(session(), EngineConfig::default()).unwrap();
+    let params = GenerateParams::new().max_new_tokens(6).top_p(0.9)
+        .temperature(0.8).seed(11);
+    let a = eng.generate(vec![4, 5, 6], params.clone()).collect().unwrap();
+    let b = eng.generate(vec![4, 5, 6], params).collect().unwrap();
+    assert_eq!(a, b, "same seed must reproduce");
+    assert!(a.iter().all(|&t| t >= 0 && t < 512));
 }
 
 #[test]
@@ -111,7 +134,8 @@ fn long_prompt_uses_bucket_plus_steps() {
     let ss = SingleStream::new(sess.as_ref());
     let prompt: Vec<i32> = (1..24).collect();
     let eng = Engine::start(session(), EngineConfig::default()).unwrap();
-    let got = eng.submit(prompt.clone(), 5, Sampling::Greedy)
+    let got = eng.generate(prompt.clone(),
+                           GenerateParams::new().max_new_tokens(5))
         .collect().unwrap();
     let want = ss.generate_host(&prompt, 5).unwrap();
     assert_eq!(got, want);
@@ -125,7 +149,8 @@ fn router_balances_across_replicas() {
                                     EngineConfig::default()).unwrap());
     let router = Router::new(vec![r1, r2]);
     let streams: Vec<_> = (0..6)
-        .map(|_| router.submit(vec![1, 2, 3], 3, Sampling::Greedy))
+        .map(|_| router.generate(vec![1, 2, 3],
+                                 GenerateParams::new().max_new_tokens(3)))
         .collect();
     for s in streams {
         assert_eq!(s.collect().unwrap().len(), 3);
@@ -146,10 +171,136 @@ fn stop_token_ends_generation_early() {
     let ref_gen = ss.generate_host(&prompt, 8).unwrap();
     let stop = ref_gen[2];
     let eng = Engine::start(session(), EngineConfig::default()).unwrap();
-    let got = eng.submit_req(mamba2_serve::coordinator::GenRequest {
-        id: 1, prompt, max_new_tokens: 8, sampling: Sampling::Greedy,
-        stop_token: Some(stop),
-    }).collect().unwrap();
+    let (got, reason) = eng.generate(prompt,
+        GenerateParams::new().max_new_tokens(8).stop_token(stop))
+        .collect_with_reason().unwrap();
     assert_eq!(got.len(), 3);
     assert_eq!(*got.last().unwrap(), stop);
+    assert_eq!(reason, FinishReason::StopToken);
+}
+
+#[test]
+fn any_of_multiple_stop_tokens_ends_generation() {
+    let sess = session();
+    let ss = SingleStream::new(sess.as_ref());
+    let prompt: Vec<i32> = (1..17).collect();
+    let ref_gen = ss.generate_host(&prompt, 8).unwrap();
+    // the earliest of the two stops wins
+    let eng = Engine::start(session(), EngineConfig::default()).unwrap();
+    let (got, reason) = eng.generate(prompt,
+        GenerateParams::new().max_new_tokens(8)
+            .stop_token(ref_gen[4]).stop_token(ref_gen[1]))
+        .collect_with_reason().unwrap();
+    assert_eq!(got.len(), 2);
+    assert_eq!(*got.last().unwrap(), ref_gen[1]);
+    assert_eq!(reason, FinishReason::StopToken);
+}
+
+// ------------------------------------------------------- cancellation ---
+
+/// Poll a metrics counter until it reaches `want` (engine side-effects
+/// are asynchronous to the test thread).
+fn wait_for(mut get: impl FnMut() -> u64, want: u64, what: &str) {
+    let t0 = Instant::now();
+    while get() < want {
+        assert!(t0.elapsed() < Duration::from_secs(30),
+                "timed out waiting for {what} >= {want} (at {})", get());
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+#[test]
+fn cancel_mid_decode_frees_slot_and_counts() {
+    // batch_cap 1: if the cancelled request leaked its slot, the second
+    // request could never be admitted and this test would time out
+    let eng = Engine::start(session(), EngineConfig {
+        batch_cap: 1,
+        ..Default::default()
+    }).unwrap();
+    let huge = 100_000;
+    let mut s = eng.generate(vec![1, 2, 3, 4],
+                             GenerateParams::new().max_new_tokens(huge));
+    // wait until it is actually decoding
+    match s.next_event() {
+        Some(Event::Tokens(t)) => assert!(!t.is_empty()),
+        other => panic!("expected first tokens, got {other:?}"),
+    }
+    s.cancel();
+    // buffered tokens may still arrive, then the cancelled terminal event
+    let mut reason = None;
+    while let Some(ev) = s.next_event() {
+        if let Event::Done { reason: r, .. } = ev {
+            reason = Some(r);
+        }
+    }
+    assert_eq!(reason, Some(FinishReason::Cancelled));
+    // slot reuse: a fresh request completes on the single slot
+    let out = eng.generate(vec![5, 6],
+                           GenerateParams::new().max_new_tokens(3))
+        .collect().unwrap();
+    assert_eq!(out.len(), 3);
+    let snap = eng.metrics.snapshot();
+    assert_eq!(snap.cancelled, 1);
+    assert_eq!(snap.completed, 1);
+    assert!(snap.tokens_generated < huge as u64 / 2,
+            "cancel must land long before max_new_tokens \
+             (generated {})", snap.tokens_generated);
+    assert_eq!(snap.in_flight, 0);
+}
+
+#[test]
+fn dropped_stream_cancels_and_frees_slot() {
+    let eng = Engine::start(session(), EngineConfig {
+        batch_cap: 1,
+        ..Default::default()
+    }).unwrap();
+    let mut s = eng.generate(vec![7, 8, 9],
+                             GenerateParams::new().max_new_tokens(100_000));
+    // ensure it was admitted before abandoning it
+    assert!(matches!(s.next_event(), Some(Event::Tokens(_))));
+    drop(s); // drop IS the cancel signal
+    wait_for(|| eng.metrics.snapshot().cancelled, 1, "requests_cancelled");
+    // the slot must be free again for new work
+    let out = eng.generate(vec![1],
+                           GenerateParams::new().max_new_tokens(2))
+        .collect().unwrap();
+    assert_eq!(out.len(), 2);
+}
+
+#[test]
+fn cancel_of_queued_request_removes_it_before_prefill() {
+    let eng = Engine::start(session(), EngineConfig {
+        batch_cap: 1,
+        ..Default::default()
+    }).unwrap();
+    // slot hog
+    let mut hog = eng.generate(vec![1, 2],
+                               GenerateParams::new()
+                                   .max_new_tokens(100_000));
+    assert!(matches!(hog.next_event(), Some(Event::Tokens(_))));
+    // queued behind the hog
+    let queued = eng.generate(vec![3, 4],
+                              GenerateParams::new().max_new_tokens(5));
+    queued.cancel();
+    let (toks, reason) = queued.collect_with_reason().unwrap();
+    assert!(toks.is_empty(), "queue-cancelled request generated tokens");
+    assert_eq!(reason, FinishReason::Cancelled);
+    hog.cancel();
+    while hog.next_event().is_some() {}
+    let snap = eng.metrics.snapshot();
+    assert_eq!(snap.cancelled, 2);
+    assert_eq!(snap.queue_depth, 0,
+               "queue-cancel must keep queue_depth exact");
+    assert_eq!(snap.in_flight, 0);
+}
+
+#[test]
+fn cancel_unknown_id_is_a_noop() {
+    let eng = Engine::start(session(), EngineConfig::default()).unwrap();
+    eng.cancel(424242); // must not disturb anything
+    let out = eng.generate(vec![1, 2],
+                           GenerateParams::new().max_new_tokens(3))
+        .collect().unwrap();
+    assert_eq!(out.len(), 3);
+    assert_eq!(eng.metrics.snapshot().cancelled, 0);
 }

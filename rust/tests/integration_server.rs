@@ -1,20 +1,27 @@
 //! Integration: TCP line-JSON server end-to-end (bind :0, real sockets),
 //! hermetically on the pure-Rust reference backend (no artifacts needed).
+//! Covers protocol v1 byte-compatibility and the v2 surface: streaming
+//! deltas + usage frames, multiplexed ids, cancellation (op and
+//! disconnect) freeing slots mid-decode, stop tokens/strings, echo.
 
+use std::io::{BufRead, BufReader, Write};
 use std::sync::{Arc, OnceLock};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use mamba2_serve::coordinator::{Engine, EngineConfig, Router};
+use mamba2_serve::coordinator::{Engine, EngineConfig, GenerateParams,
+                                Router};
 use mamba2_serve::eval::{corpus, Tokenizer};
 use mamba2_serve::runtime::{Backend, ReferenceBackend};
-use mamba2_serve::server::{Client, Server};
+use mamba2_serve::server::{Client, Frame, Server};
 use mamba2_serve::util::json::Json;
 
-fn start_server() -> String {
+fn spawn_server(batch_cap: usize) -> String {
     let session: Box<dyn Backend> =
         Box::new(ReferenceBackend::seeded("tiny", 0).unwrap());
-    let eng = Arc::new(Engine::start(session, EngineConfig::default())
-                       .unwrap());
+    let eng = Arc::new(Engine::start(session, EngineConfig {
+        batch_cap,
+        ..Default::default()
+    }).unwrap());
     let router = Arc::new(Router::new(vec![eng]));
     let tok = Arc::new(Tokenizer::train(corpus::BUNDLED, 64));
     let (tx, rx) = std::sync::mpsc::channel();
@@ -27,9 +34,29 @@ fn start_server() -> String {
     rx.recv_timeout(Duration::from_secs(30)).expect("server bound")
 }
 
+/// Shared default server (batch_cap 4) for tests that don't need slot
+/// starvation; cancellation tests spawn their own cap-1 servers.
 fn addr() -> String {
     static A: OnceLock<String> = OnceLock::new();
-    A.get_or_init(start_server).clone()
+    A.get_or_init(|| spawn_server(4)).clone()
+}
+
+/// Poll the `metrics` op until `field` (on replica 0) reaches `want`.
+fn wait_replica_metric(addr: &str, field: &str, want: f64) {
+    let mut c = Client::connect(addr).unwrap();
+    let t0 = Instant::now();
+    loop {
+        let m = c.call(&Json::obj(vec![("op", Json::str("metrics"))]))
+            .unwrap();
+        let v = m.get("replicas").and_then(Json::as_arr).unwrap()[0]
+            .get(field).and_then(Json::as_f64).unwrap();
+        if v >= want {
+            return;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(30),
+                "timed out waiting for {field} >= {want} (at {v})");
+        std::thread::sleep(Duration::from_millis(5));
+    }
 }
 
 #[test]
@@ -45,6 +72,23 @@ fn generate_roundtrip() {
     assert!(r.get("error").is_none(), "{r}");
     assert_eq!(r.get("n").and_then(Json::as_u64), Some(6));
     assert_eq!(r.get("tokens").and_then(Json::as_arr).unwrap().len(), 6);
+}
+
+#[test]
+fn v1_response_shape_is_byte_compatible() {
+    // a v1 request (no v2 fields) must answer with exactly the v1 keys
+    let stream = std::net::TcpStream::connect(addr()).unwrap();
+    let mut r = BufReader::new(stream.try_clone().unwrap());
+    let mut w = stream;
+    writeln!(w, r#"{{"op":"generate","prompt":"state","max_new_tokens":4}}"#)
+        .unwrap();
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    let j = Json::parse(line.trim()).unwrap();
+    let keys: Vec<&str> = j.as_obj().unwrap()
+        .keys().map(|k| k.as_str()).collect();
+    assert_eq!(keys, vec!["ms", "n", "text", "tokens"],
+               "v1 response shape changed: {line}");
 }
 
 #[test]
@@ -74,11 +118,16 @@ fn metrics_endpoint() {
     let reps = m.get("replicas").and_then(Json::as_arr).unwrap();
     assert_eq!(reps.len(), 1);
     assert!(reps[0].get("tokens").and_then(Json::as_f64).unwrap() >= 2.0);
+    // v2 additions: queue_depth / in_flight / cancelled per replica,
+    // conn_errors for the server itself
+    assert!(reps[0].get("queue_depth").and_then(Json::as_f64).is_some());
+    assert!(reps[0].get("in_flight").and_then(Json::as_f64).is_some());
+    assert!(reps[0].get("cancelled").and_then(Json::as_f64).is_some());
+    assert!(m.get("conn_errors").and_then(Json::as_f64).is_some());
 }
 
 #[test]
 fn malformed_json_gets_error_not_disconnect() {
-    use std::io::{BufRead, BufReader, Write};
     let stream = std::net::TcpStream::connect(addr()).unwrap();
     let mut r = BufReader::new(stream.try_clone().unwrap());
     let mut w = stream;
@@ -94,8 +143,291 @@ fn malformed_json_gets_error_not_disconnect() {
 }
 
 #[test]
+fn protocol_error_mid_connection_keeps_streaming_usable() {
+    // an erroring op mid-connection must not kill a later streaming
+    // generate (raw malformed JSON is covered above)
+    let mut c = Client::connect(&addr()).unwrap();
+    c.call(&Json::parse("{\"op\":\"nonsense\"}").unwrap()).unwrap();
+    let mut s = c.generate_stream("state space",
+                                  &GenerateParams::new().max_new_tokens(3))
+        .unwrap();
+    let mut n = 0;
+    for f in &mut s {
+        match f.unwrap() {
+            Frame::Delta { tokens, .. } => n += tokens.len(),
+            Frame::Done { finish_reason, .. } => {
+                assert_eq!(finish_reason, "length");
+            }
+            Frame::Error(e) => panic!("stream error: {e}"),
+        }
+    }
+    assert_eq!(n, 3);
+}
+
+#[test]
 fn unknown_op_is_error() {
     let mut c = Client::connect(&addr()).unwrap();
     let r = c.call(&Json::obj(vec![("op", Json::str("frobnicate"))])).unwrap();
     assert!(r.get("error").is_some());
+}
+
+// -------------------------------------------------------- streaming ---
+
+#[test]
+fn streaming_delta_per_step_with_final_usage_frame() {
+    let mut c = Client::connect(&addr()).unwrap();
+    // blocking reference for the same deterministic greedy request
+    let want = c.generate("state space", 6).unwrap();
+    let want_text = want.get("text").and_then(Json::as_str).unwrap()
+        .to_string();
+
+    let mut s = c.generate_stream("state space",
+                                  &GenerateParams::new().max_new_tokens(6))
+        .unwrap();
+    let mut n_tokens = 0;
+    let mut n_deltas = 0;
+    let mut text = String::new();
+    let mut done: Option<(String, Json)> = None;
+    while let Some(f) = s.next_frame().unwrap() {
+        match f {
+            Frame::Delta { tokens, text: t } => {
+                n_deltas += 1;
+                n_tokens += tokens.len();
+                text.push_str(&t);
+            }
+            Frame::Done { finish_reason, usage } => {
+                done = Some((finish_reason, usage));
+            }
+            Frame::Error(e) => panic!("stream error: {e}"),
+        }
+    }
+    // ≥ 1 delta frame per decode step: 6 tokens, one token per step
+    assert_eq!(n_tokens, 6);
+    assert!(n_deltas >= 6, "expected one delta per decode step, got \
+                            {n_deltas}");
+    assert_eq!(text, want_text,
+               "streamed text must equal the blocking result");
+    let (reason, usage) = done.expect("final usage frame");
+    assert_eq!(reason, "length");
+    assert!(usage.get("prompt_tokens").and_then(Json::as_u64).unwrap() >= 1);
+    assert_eq!(usage.get("completion_tokens").and_then(Json::as_u64),
+               Some(6));
+    let ttft = usage.get("ttft_ms").and_then(Json::as_f64).unwrap();
+    let e2e = usage.get("e2e_ms").and_then(Json::as_f64).unwrap();
+    assert!(ttft > 0.0 && e2e >= ttft, "ttft {ttft} e2e {e2e}");
+}
+
+#[test]
+fn two_streams_multiplex_one_connection() {
+    // dedicated server so scheduling is not perturbed by other tests
+    let addr = spawn_server(4);
+    let stream = std::net::TcpStream::connect(&addr).unwrap();
+    let mut r = BufReader::new(stream.try_clone().unwrap());
+    let mut w = stream;
+    // long stream first, short one right behind it on the same socket
+    writeln!(w, r#"{{"op":"generate","prompt":"state space model","max_new_tokens":60,"stream":true,"id":1}}"#).unwrap();
+    writeln!(w, r#"{{"op":"generate","prompt":"another prompt","max_new_tokens":5,"stream":true,"id":2}}"#).unwrap();
+    let mut counts = [0usize; 3];
+    let mut done_order = Vec::new();
+    let mut line = String::new();
+    while done_order.len() < 2 {
+        line.clear();
+        assert!(r.read_line(&mut line).unwrap() > 0, "server closed");
+        let j = Json::parse(line.trim()).unwrap();
+        let id = j.get("id").and_then(Json::as_u64).unwrap() as usize;
+        assert!(id == 1 || id == 2, "unexpected id {id}");
+        if let Some(d) = j.get("delta") {
+            counts[id] += d.get("tokens").and_then(Json::as_arr)
+                .unwrap().len();
+        } else if j.get("done").and_then(Json::as_bool) == Some(true) {
+            done_order.push(id);
+        }
+    }
+    assert_eq!(counts[1], 60, "stream 1 token count");
+    assert_eq!(counts[2], 5, "stream 2 token count");
+    // frames interleave by id: the short stream finishes while the long
+    // one is still decoding
+    assert_eq!(done_order, vec![2, 1],
+               "streams did not interleave: {done_order:?}");
+}
+
+// ----------------------------------------------------- cancellation ---
+
+#[test]
+fn cancel_op_frees_slot_mid_decode() {
+    // cap-1 server: if the cancelled stream leaked its slot, the
+    // follow-up generate could never be admitted
+    let addr = spawn_server(1);
+    let mut c = Client::connect(&addr).unwrap();
+    let huge = 100_000;
+    let mut s = c.generate_stream(
+        "state space",
+        &GenerateParams::new().max_new_tokens(huge)).unwrap();
+    // let it decode a little, then cancel mid-stream
+    let mut n_tokens = 0;
+    let mut finish = String::new();
+    let mut usage = Json::Null;
+    while let Some(f) = s.next_frame().unwrap() {
+        match f {
+            Frame::Delta { tokens, .. } => {
+                n_tokens += tokens.len();
+                if n_tokens == 2 {
+                    s.cancel().unwrap();
+                }
+            }
+            Frame::Done { finish_reason, usage: u } => {
+                finish = finish_reason;
+                usage = u;
+            }
+            Frame::Error(e) => panic!("stream error: {e}"),
+        }
+    }
+    assert_eq!(finish, "cancelled");
+    assert!(n_tokens < huge,
+            "cancel must land before max_new_tokens ({n_tokens})");
+    assert!(usage.get("completion_tokens").and_then(Json::as_u64)
+            .unwrap() < huge as u64);
+    // slot reuse on the single slot — this would hang forever if the
+    // cancel had not freed it
+    let r = c.generate("state", 4).unwrap();
+    assert_eq!(r.get("n").and_then(Json::as_u64), Some(4));
+    wait_replica_metric(&addr, "cancelled", 1.0);
+}
+
+#[test]
+fn cancel_unknown_id_returns_structured_error() {
+    let mut c = Client::connect(&addr()).unwrap();
+    let r = c.call(&Json::obj(vec![
+        ("op", Json::str("cancel")),
+        ("id", Json::num(987654.0)),
+    ])).unwrap();
+    assert_eq!(r.get("id").and_then(Json::as_u64), Some(987654));
+    assert!(r.get("error").and_then(Json::as_str).unwrap()
+            .contains("unknown"));
+    // connection still usable afterwards
+    assert!(c.ping().unwrap());
+}
+
+#[test]
+fn client_disconnect_cancels_inflight_and_frees_slot() {
+    let addr = spawn_server(1);
+    {
+        let stream = std::net::TcpStream::connect(&addr).unwrap();
+        let mut r = BufReader::new(stream.try_clone().unwrap());
+        let mut w = stream;
+        writeln!(w, r#"{{"op":"generate","prompt":"state","max_new_tokens":100000,"stream":true,"id":9}}"#).unwrap();
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap(); // first delta: it is decoding
+        assert!(line.contains("delta"), "{line}");
+        // drop both halves: client walks away mid-stream
+    }
+    wait_replica_metric(&addr, "cancelled", 1.0);
+    // the slot must be free for a fresh connection
+    let mut c = Client::connect(&addr).unwrap();
+    let r = c.generate("state", 3).unwrap();
+    assert_eq!(r.get("n").and_then(Json::as_u64), Some(3));
+}
+
+// ------------------------------------------- stop tokens and strings ---
+
+#[test]
+fn stop_token_via_wire_protocol() {
+    let mut c = Client::connect(&addr()).unwrap();
+    let base = c.generate("state space", 8).unwrap();
+    let toks = base.get("tokens").and_then(Json::as_arr).unwrap();
+    assert_eq!(toks.len(), 8);
+    let stop = toks[2].as_i64().unwrap() as i32;
+    let r = c.generate_with("state space",
+                            &GenerateParams::new().max_new_tokens(8)
+                                .stop_token(stop)).unwrap();
+    assert_eq!(r.get("n").and_then(Json::as_u64), Some(3),
+               "stop token must end generation early: {r}");
+    assert_eq!(r.get("finish_reason").and_then(Json::as_str),
+               Some("stop_token"));
+    let got = r.get("tokens").and_then(Json::as_arr).unwrap();
+    assert_eq!(got.last().unwrap().as_i64().unwrap() as i32, stop);
+}
+
+#[test]
+fn stop_string_truncates_even_across_token_boundary() {
+    let mut c = Client::connect(&addr()).unwrap();
+    let base = c.generate("state space", 16).unwrap();
+    let text = base.get("text").and_then(Json::as_str).unwrap().to_string();
+    let toks: Vec<i32> = base.get("tokens").and_then(Json::as_arr).unwrap()
+        .iter().map(|t| t.as_i64().unwrap() as i32).collect();
+    // reconstruct the server's tokenizer (training is deterministic) to
+    // find a stop string that SPANS a token boundary: last char of one
+    // token's text + first char of the next token's text
+    let tok = Tokenizer::train(corpus::BUNDLED, 64);
+    let pieces: Vec<String> = toks.iter().map(|&t| tok.decode(&[t]))
+        .collect();
+    assert_eq!(pieces.concat(), text, "incremental decode must concat");
+    let mut stop: Option<String> = None;
+    for w in pieces.windows(2) {
+        if let (Some(a), Some(b)) = (w[0].chars().last(), w[1].chars().next())
+        {
+            stop = Some(format!("{a}{b}"));
+            break;
+        }
+    }
+    // fall back to any interior 2-char window (still exercises the wire
+    // path) if the model only produced out-of-vocab/empty pieces
+    let stop = stop.or_else(|| {
+        let cs: Vec<char> = text.chars().collect();
+        (cs.len() >= 2).then(|| cs[..2].iter().collect())
+    });
+    let Some(stop) = stop else {
+        eprintln!("skipping: generated text too short for a stop string");
+        return;
+    };
+    let cut = text.find(&stop).expect("stop string comes from the text");
+    let want = &text[..cut];
+
+    let r = c.generate_with("state space",
+                            &GenerateParams::new().max_new_tokens(16)
+                                .stop_string(stop.clone())).unwrap();
+    assert_eq!(r.get("finish_reason").and_then(Json::as_str),
+               Some("stop_string"), "{r}");
+    assert_eq!(r.get("text").and_then(Json::as_str), Some(want),
+               "text must truncate exactly at the first {stop:?} match");
+    // and the token list never leaks past the match
+    let got_n = r.get("n").and_then(Json::as_u64).unwrap();
+    assert!(got_n <= 16);
+    // streamed variant agrees with the blocking one
+    let mut s = c.generate_stream(
+        "state space",
+        &GenerateParams::new().max_new_tokens(16)
+            .stop_string(stop.clone())).unwrap();
+    let mut streamed = String::new();
+    let mut finish = String::new();
+    while let Some(f) = s.next_frame().unwrap() {
+        match f {
+            Frame::Delta { text: t, .. } => streamed.push_str(&t),
+            Frame::Done { finish_reason, .. } => finish = finish_reason,
+            Frame::Error(e) => panic!("stream error: {e}"),
+        }
+    }
+    assert_eq!(finish, "stop_string");
+    assert_eq!(streamed, want, "streamed deltas must truncate identically");
+}
+
+// ------------------------------------------------------------- echo ---
+
+#[test]
+fn echo_prepends_prompt() {
+    let mut c = Client::connect(&addr()).unwrap();
+    let plain = c.generate("state space", 4).unwrap();
+    let plain_text = plain.get("text").and_then(Json::as_str).unwrap()
+        .to_string();
+    let r = c.generate_with("state space",
+                            &GenerateParams::new().max_new_tokens(4)
+                                .echo(true)).unwrap();
+    let text = r.get("text").and_then(Json::as_str).unwrap();
+    assert_eq!(text, format!("state space{plain_text}"));
+    // n stays the completion count; tokens include the prompt
+    assert_eq!(r.get("n").and_then(Json::as_u64), Some(4));
+    let usage = r.get("usage").unwrap();
+    let p = usage.get("prompt_tokens").and_then(Json::as_u64).unwrap();
+    assert_eq!(r.get("tokens").and_then(Json::as_arr).unwrap().len() as u64,
+               p + 4);
 }

@@ -1,7 +1,7 @@
 //! Property-based suites over the coordinator substrates (propcheck).
 
 use mamba2_serve::coordinator::batcher::{ActiveSeq, Admission, Batcher};
-use mamba2_serve::coordinator::request::{GenRequest, Sampling};
+use mamba2_serve::coordinator::request::{GenRequest, GenerateParams};
 use mamba2_serve::coordinator::slots::SlotPool;
 use mamba2_serve::eval::Tokenizer;
 use mamba2_serve::util::json::Json;
@@ -57,8 +57,8 @@ fn prop_slot_pool_never_exceeds_capacity() {
 // -------------------------------------------------------------- batcher ---
 
 fn mk_req(id: u64, n: usize) -> GenRequest {
-    GenRequest { id, prompt: vec![1], max_new_tokens: n.max(1),
-                 sampling: Sampling::Greedy, stop_token: None }
+    GenRequest { id, prompt: vec![1],
+                 params: GenerateParams::new().max_new_tokens(n.max(1)) }
 }
 
 #[test]
@@ -84,14 +84,14 @@ fn prop_batcher_completes_all_requests() {
                 admitted += 1;
                 // model "prefill produced first token"
                 produced[req.id as usize] += 1;
-                if req.max_new_tokens == 1 {
+                if req.params.max_new_tokens == 1 {
                     b.slots.free(slot);
                     continue;
                 }
                 b.activate(ActiveSeq {
                     req_id: req.id, slot, last_token: 0, generated: 1,
-                    max_new_tokens: req.max_new_tokens,
-                    sampling: req.sampling, stop_token: None,
+                    max_new_tokens: req.params.max_new_tokens,
+                    sampling: req.params.sampling(), stop_tokens: vec![],
                 });
             }
             let act: Vec<_> = b.active_seqs().iter()
@@ -99,7 +99,7 @@ fn prop_batcher_completes_all_requests() {
             for slot in act {
                 let id = b.slots.owner(slot).unwrap() as usize;
                 produced[id] += 1;
-                b.advance(slot, 5);
+                let _ = b.advance(slot, 5);
             }
         }
         produced.iter().zip(lens).all(|(&p, &n)| p == n.max(1))
@@ -125,8 +125,8 @@ fn prop_batcher_active_never_exceeds_cap() {
                 admitted += 1;
                 b.activate(ActiveSeq {
                     req_id: req.id, slot, last_token: 0, generated: 0,
-                    max_new_tokens: req.max_new_tokens,
-                    sampling: req.sampling, stop_token: None,
+                    max_new_tokens: req.params.max_new_tokens,
+                    sampling: req.params.sampling(), stop_tokens: vec![],
                 });
                 if b.active_count() > cap {
                     return false;
@@ -135,10 +135,75 @@ fn prop_batcher_active_never_exceeds_cap() {
             let act: Vec<_> = b.active_seqs().iter()
                 .map(|s| s.slot).collect();
             for slot in act {
-                b.advance(slot, 1);
+                let _ = b.advance(slot, 1);
             }
         }
         b.is_idle()
+    });
+}
+
+#[test]
+fn prop_batcher_cancels_never_leak_slots() {
+    // any interleaving of submits, cancels (of queued OR active
+    // requests), and engine iterations must drain to an idle batcher
+    // with every slot returned — the invariant the engine's
+    // cancellation path relies on
+    fn iterate(b: &mut Batcher, live: &mut Vec<u64>) {
+        let mut adm = 0;
+        while let Admission::Admit(req, slot) = b.next_admission(adm) {
+            adm += 1;
+            b.activate(ActiveSeq {
+                req_id: req.id, slot, last_token: 0, generated: 1,
+                max_new_tokens: req.params.max_new_tokens,
+                sampling: req.params.sampling(), stop_tokens: vec![],
+            });
+        }
+        let act: Vec<_> = b.active_seqs().iter().map(|s| s.slot).collect();
+        for slot in act {
+            let id = b.slots.owner(slot).unwrap();
+            if b.advance(slot, 1).is_some() {
+                live.retain(|&x| x != id);
+            }
+        }
+    }
+    let gen = vec_of(usize_in(0, 4), 40);
+    check(&Config { cases: 200, ..Default::default() }, &gen, |ops| {
+        let mut b = Batcher::new(2);
+        let mut rng = Rng::new(7);
+        let mut next_id = 0u64;
+        let mut live: Vec<u64> = Vec::new();
+        for &op in ops {
+            match op {
+                0 | 1 => {
+                    b.submit(mk_req(next_id, 3));
+                    live.push(next_id);
+                    next_id += 1;
+                }
+                2 => {
+                    if live.is_empty() {
+                        continue;
+                    }
+                    let i = rng.below(live.len() as u64) as usize;
+                    let id = live.swap_remove(i);
+                    // cancel wherever the request currently lives
+                    if let Some(slot) = b.slot_of(id) {
+                        b.abort(slot);
+                    } else if b.cancel_queued(id).is_none() {
+                        return false; // neither active nor queued: lost!
+                    }
+                }
+                _ => iterate(&mut b, &mut live),
+            }
+        }
+        let mut guard = 0;
+        while !b.is_idle() {
+            guard += 1;
+            if guard > 10_000 {
+                return false; // livelock
+            }
+            iterate(&mut b, &mut live);
+        }
+        live.is_empty() && b.slots.used() == 0
     });
 }
 
