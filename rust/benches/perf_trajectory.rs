@@ -1,0 +1,127 @@
+//! Perf-trajectory harness: the repo's cross-PR performance trail.
+//!
+//! Measures the two hot paths of the serving stack on the active backend
+//! and emits the schema-pinned `BENCH_<tag>.json` (see
+//! `bench_support::validate_trajectory_json` and README §Benchmarks):
+//!
+//!   * batch-fused decode: tokens/s at B ∈ {1, 4, 16} from realistic
+//!     (prefilled) cache slots — the B=16/B=1 ratio is the structural
+//!     check that batching actually fuses (weights read once per launch,
+//!     matmul row blocks across the threadpool), and CI's `perf-smoke`
+//!     job fails if it drops below 2×,
+//!   * chunked-parallel prefill: tokens/s at L ∈ {512, 2048}, plus
+//!     analytic MFU/HBU against the host-CPU roofline.
+//!
+//! `--quick` trims the measurement protocol for CI smoke runs (the sweep
+//! itself is never trimmed — the schema pins it). `--check` exits
+//! non-zero when the batched-decode speedup misses the gate
+//! (`--min-speedup X` overrides the 2.0 default).
+
+use mamba2_serve::bench_support::{batch_speedup, decode_point,
+                                  open_backend, prefill_point, quick,
+                                  trajectory_json, write_trajectory,
+                                  DecodePoint, PrefillPoint};
+use mamba2_serve::runtime::{reference, Backend, CacheState};
+use mamba2_serve::util::benchkit::{Bench, Table};
+
+const TAG: &str = "pr3";
+const MODEL: &str = "sim-130m";
+const DECODE_BATCHES: [usize; 3] = [1, 4, 16];
+const PREFILL_LENS: [usize; 2] = [512, 2048];
+
+fn arg_after(flag: &str) -> Option<String> {
+    let mut args = std::env::args();
+    while let Some(a) = args.next() {
+        if a == flag {
+            return args.next();
+        }
+    }
+    None
+}
+
+fn main() {
+    let check = std::env::args().any(|a| a == "--check");
+    let min_speedup: f64 = arg_after("--min-speedup")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2.0);
+    let session = open_backend(MODEL);
+    let threads = reference::default_threads();
+    let mut bench = Bench::new().quiet();
+
+    // ---- decode sweep: one prefilled sequence broadcast to B slots ----
+    let prompt: Vec<i32> = (0..32).map(|i| ((i * 37 + 11) % 512) as i32)
+        .collect();
+    let (seed_cache, _) = session.prefill_any(&prompt).unwrap();
+    let mut decode: Vec<DecodePoint> = Vec::new();
+    for &b in &DECODE_BATCHES {
+        let mut cache = CacheState::zeros(session.cfg(), b);
+        for s in 0..b {
+            cache.copy_slot_from(s, &seed_cache, 0);
+        }
+        let tokens: Vec<i32> =
+            (0..b as i32).map(|i| (i * 7 + 3) % 512).collect();
+        let m = bench.measure(&format!("decode.b{b}"), b as f64, || {
+            session.decode_step(&cache, &tokens).unwrap();
+        });
+        decode.push(decode_point(&session.cost("decode_step", None, b),
+                                 b, m.summary.mean));
+        eprintln!("  decode B={b}: {:.2} ms/step, {:.1} tok/s",
+                  m.summary.mean * 1e3, b as f64 / m.summary.mean);
+    }
+
+    // ---- prefill sweep --------------------------------------------------
+    let mut prefill: Vec<PrefillPoint> = Vec::new();
+    for &l in &PREFILL_LENS {
+        let tokens: Vec<i32> = (0..l).map(|i| ((i * 37 + 11) % 512) as i32)
+            .collect();
+        let m = bench.measure(&format!("prefill.t{l}"), l as f64, || {
+            session.prefill(&tokens, 1).unwrap();
+        });
+        prefill.push(prefill_point(&session.cost("prefill", Some(l), 1),
+                                   l, m.summary.mean));
+        eprintln!("  prefill L={l}: {:.1} ms, {:.0} tok/s",
+                  m.summary.mean * 1e3, l as f64 / m.summary.mean);
+    }
+
+    // ---- human table + machine-readable trajectory ----------------------
+    let mut td = Table::new(
+        &format!("Perf trajectory {TAG} — batch-fused decode \
+                  ({MODEL}, {} ({}), {threads} threads)",
+                 session.name(), session.platform()),
+        &["B", "ms/step", "tok/s", "MFU %", "HBU %"]);
+    for p in &decode {
+        td.row(vec![p.batch.to_string(),
+                    format!("{:.3}", p.ms_per_step),
+                    format!("{:.1}", p.tokens_per_s),
+                    format!("{:.2}", p.mfu * 100.0),
+                    format!("{:.2}", p.hbu * 100.0)]);
+    }
+    td.print();
+    let mut tp = Table::new(
+        &format!("Perf trajectory {TAG} — chunked-parallel prefill"),
+        &["L", "ms", "tok/s", "MFU %", "HBU %"]);
+    for p in &prefill {
+        tp.row(vec![p.seq_len.to_string(),
+                    format!("{:.1}", p.ms_total),
+                    format!("{:.0}", p.tokens_per_s),
+                    format!("{:.2}", p.mfu * 100.0),
+                    format!("{:.2}", p.hbu * 100.0)]);
+    }
+    tp.print();
+
+    let doc = trajectory_json(TAG, MODEL, session.name(), threads, quick(),
+                              &decode, &prefill);
+    let path = write_trajectory(TAG, &doc).unwrap_or_else(|e| {
+        eprintln!("cannot write trajectory: {e}");
+        std::process::exit(1);
+    });
+    let speedup = batch_speedup(&decode);
+    println!("wrote {} (batched decode B=16 vs B=1: {speedup:.2}x)",
+             path.display());
+
+    if check && speedup < min_speedup {
+        eprintln!("FAIL: batched decode speedup {speedup:.2}x < \
+                   {min_speedup:.2}x gate — batching is not fusing");
+        std::process::exit(1);
+    }
+}

@@ -25,10 +25,15 @@ fn main() {
         &["Offered concurrency", "req/s", "tok/s", "ttft p50 ms",
           "e2e p99 ms", "mean occupancy"]);
 
-    for &conc in if quick() { &[1usize, 4][..] } else { &[1usize, 2, 4] } {
+    // the reference backend is width-flexible (REFERENCE_BATCH_CAP 16)
+    // and the engine packs decode to the occupied slots, so wider
+    // concurrency sweeps are now worth measuring
+    for &conc in if quick() { &[1usize, 4][..] } else { &[1usize, 2, 4, 8] }
+    {
         let session = open_backend(model);
         let eng = Arc::new(Engine::start(session, EngineConfig {
-            batch_cap: 4,
+            batch_cap: 8,
+            max_admissions_per_iter: 4,
             ..Default::default()
         }).unwrap());
         let mut rng = Rng::new(7);

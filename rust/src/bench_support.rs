@@ -4,9 +4,19 @@
 //! projected TPU-v6e / L40S values where the paper's exhibit is
 //! hardware-specific, and (c) the paper's own reported numbers alongside,
 //! then saves machine-readable results under `bench_results/`.
+//!
+//! The perf-trajectory section at the bottom is the repo's cross-PR perf
+//! trail: `benches/perf_trajectory.rs` measures the two hot paths
+//! (batch-fused decode at B ∈ {1,4,16}, chunked prefill at L ∈
+//! {512,2048}) and emits a schema-pinned `BENCH_<tag>.json` that CI's
+//! `perf-smoke` job uploads per PR and gates on (README §Benchmarks).
 
+use crate::perf::{hbu, mfu, CPU_HOST};
 use crate::runtime::{open_backend as open_backend_checked, Backend,
-                     ConfigInfo};
+                     ConfigInfo, CostInfo};
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+use crate::{anyhow, bail};
 
 /// The five sim scales, smallest→largest, with their paper counterparts.
 pub const SIM_MODELS: [(&str, &str); 5] = [
@@ -110,9 +120,269 @@ pub fn fmt_pct(x: f64) -> String {
     format!("{:.2}", x * 100.0)
 }
 
+// ------------------------------------------- perf trajectory (BENCH_*) ---
+
+/// Schema version of the `BENCH_*.json` perf-trajectory files. Bump ONLY
+/// with a migration note in README §Benchmarks — the whole point of these
+/// files is cross-PR comparability.
+pub const BENCH_SCHEMA_VERSION: f64 = 1.0;
+
+/// One decode measurement: `tokens_per_s` is generated tokens per
+/// wall-second (`batch / mean step seconds`), `ms_per_step` the mean
+/// batched-step wall time, MFU/HBU analytic (backend cost model over the
+/// `CPU_HOST` roofline).
+pub struct DecodePoint {
+    pub batch: usize,
+    pub ms_per_step: f64,
+    pub tokens_per_s: f64,
+    pub mfu: f64,
+    pub hbu: f64,
+}
+
+/// One prefill measurement: `tokens_per_s = seq_len / mean seconds`.
+pub struct PrefillPoint {
+    pub seq_len: usize,
+    pub ms_total: f64,
+    pub tokens_per_s: f64,
+    pub mfu: f64,
+    pub hbu: f64,
+}
+
+/// Build a decode point from a measured mean and the backend's cost.
+pub fn decode_point(cost: &CostInfo, batch: usize, mean_seconds: f64)
+    -> DecodePoint {
+    DecodePoint {
+        batch,
+        ms_per_step: mean_seconds * 1e3,
+        tokens_per_s: batch as f64 / mean_seconds,
+        mfu: mfu(cost, mean_seconds, CPU_HOST.peak_tflops),
+        hbu: hbu(cost, mean_seconds, CPU_HOST.peak_gbps),
+    }
+}
+
+/// Build a prefill point from a measured mean and the backend's cost.
+pub fn prefill_point(cost: &CostInfo, seq_len: usize, mean_seconds: f64)
+    -> PrefillPoint {
+    PrefillPoint {
+        seq_len,
+        ms_total: mean_seconds * 1e3,
+        tokens_per_s: seq_len as f64 / mean_seconds,
+        mfu: mfu(cost, mean_seconds, CPU_HOST.peak_tflops),
+        hbu: hbu(cost, mean_seconds, CPU_HOST.peak_gbps),
+    }
+}
+
+/// Batched-decode speedup: tokens/s at the widest measured batch over
+/// tokens/s at batch 1 — the structural "batching actually fuses" ratio
+/// CI gates on (≥ 2× at B=16 on any multi-core runner).
+pub fn batch_speedup(decode: &[DecodePoint]) -> f64 {
+    let b1 = decode.iter().find(|p| p.batch == 1);
+    let bmax = decode.iter().max_by_key(|p| p.batch);
+    match (b1, bmax) {
+        (Some(a), Some(b)) if a.tokens_per_s > 0.0 => {
+            b.tokens_per_s / a.tokens_per_s
+        }
+        _ => 0.0,
+    }
+}
+
+/// Assemble the schema-pinned trajectory document. Field names and units
+/// are part of the cross-PR contract checked by
+/// [`validate_trajectory_json`].
+pub fn trajectory_json(tag: &str, model: &str, backend: &str,
+                       threads: usize, quick: bool,
+                       decode: &[DecodePoint], prefill: &[PrefillPoint])
+    -> Json {
+    let dec = decode.iter().map(|p| Json::obj(vec![
+        ("batch", Json::num(p.batch as f64)),
+        ("ms_per_step", Json::num(p.ms_per_step)),
+        ("tokens_per_s", Json::num(p.tokens_per_s)),
+        ("mfu", Json::num(p.mfu)),
+        ("hbu", Json::num(p.hbu)),
+    ])).collect();
+    let pre = prefill.iter().map(|p| Json::obj(vec![
+        ("seq_len", Json::num(p.seq_len as f64)),
+        ("ms_total", Json::num(p.ms_total)),
+        ("tokens_per_s", Json::num(p.tokens_per_s)),
+        ("mfu", Json::num(p.mfu)),
+        ("hbu", Json::num(p.hbu)),
+    ])).collect();
+    Json::obj(vec![
+        ("schema_version", Json::num(BENCH_SCHEMA_VERSION)),
+        ("pr", Json::str(tag)),
+        ("model", Json::str(model)),
+        ("backend", Json::str(backend)),
+        ("threads", Json::num(threads as f64)),
+        ("quick", Json::Bool(quick)),
+        ("decode", Json::Arr(dec)),
+        ("prefill", Json::Arr(pre)),
+        ("batch_speedup_b16_vs_b1", Json::num(batch_speedup(decode))),
+    ])
+}
+
+fn require_points(j: &Json, key: &str, fields: &[&str])
+    -> Result<Vec<f64>> {
+    let arr = j.get(key).and_then(Json::as_arr)
+        .with_context(|| format!("BENCH json: missing array {key:?}"))?;
+    if arr.is_empty() {
+        bail!("BENCH json: {key} must have at least one point");
+    }
+    let mut firsts = Vec::new();
+    for (i, point) in arr.iter().enumerate() {
+        for &f in fields {
+            let val = point.get(f).and_then(Json::as_f64).with_context(
+                || format!("BENCH json: {key}[{i}] missing number {f:?}"))?;
+            if !val.is_finite() || val < 0.0 {
+                bail!("BENCH json: {key}[{i}].{f} = {val} not finite ≥ 0");
+            }
+        }
+        firsts.push(point.get(fields[0]).and_then(Json::as_f64).unwrap());
+    }
+    Ok(firsts)
+}
+
+/// Validate a `BENCH_*.json` document against the pinned schema: field
+/// names, units-bearing keys and the mandatory sweep points (decode must
+/// cover B = 1 and B = 16; prefill L = 512) so trajectory files stay
+/// comparable across PRs. Unit tests run this against the generator so
+/// the two can never drift apart.
+pub fn validate_trajectory_json(j: &Json) -> Result<()> {
+    let ver = j.get("schema_version").and_then(Json::as_f64)
+        .context("BENCH json: missing schema_version")?;
+    if ver != BENCH_SCHEMA_VERSION {
+        bail!("BENCH json: schema_version {ver} != {BENCH_SCHEMA_VERSION}");
+    }
+    for key in ["pr", "model", "backend"] {
+        if j.get(key).and_then(Json::as_str).is_none() {
+            bail!("BENCH json: missing string field {key:?}");
+        }
+    }
+    if j.get("threads").and_then(Json::as_f64).is_none() {
+        bail!("BENCH json: missing number field \"threads\"");
+    }
+    if j.get("quick").and_then(Json::as_bool).is_none() {
+        bail!("BENCH json: missing bool field \"quick\"");
+    }
+    let batches = require_points(
+        j, "decode",
+        &["batch", "ms_per_step", "tokens_per_s", "mfu", "hbu"])?;
+    for want in [1.0, 16.0] {
+        if !batches.contains(&want) {
+            bail!("BENCH json: decode sweep missing batch {want}");
+        }
+    }
+    let lens = require_points(
+        j, "prefill",
+        &["seq_len", "ms_total", "tokens_per_s", "mfu", "hbu"])?;
+    if !lens.contains(&512.0) {
+        bail!("BENCH json: prefill sweep missing seq_len 512");
+    }
+    if j.get("batch_speedup_b16_vs_b1").and_then(Json::as_f64).is_none() {
+        bail!("BENCH json: missing number \"batch_speedup_b16_vs_b1\"");
+    }
+    Ok(())
+}
+
+/// Validate and write `BENCH_<tag>.json` — into `BENCH_OUT_DIR` when
+/// set, else the workspace root (cargo runs bench binaries with the
+/// *package* root as cwd, so a relative default would scatter the files;
+/// the workspace root is where CI's perf-smoke job picks the artifact
+/// up).
+pub fn write_trajectory(tag: &str, j: &Json)
+    -> Result<std::path::PathBuf> {
+    validate_trajectory_json(j)?;
+    let dir = match std::env::var("BENCH_OUT_DIR") {
+        Ok(d) if !d.is_empty() => std::path::PathBuf::from(d),
+        _ => std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .expect("crate lives inside the workspace")
+            .to_path_buf(),
+    };
+    let path = dir.join(format!("BENCH_{tag}.json"));
+    std::fs::write(&path, format!("{j}\n"))
+        .map_err(|e| anyhow!("write {}: {e}", path.display()))?;
+    Ok(path)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn sample_doc() -> Json {
+        let cfg = crate::runtime::sim_config("sim-130m").unwrap();
+        let decode: Vec<DecodePoint> = [1usize, 4, 16].iter().map(|&b| {
+            let cost = crate::runtime::analytic_cost(
+                &cfg, "decode_step", None, b);
+            decode_point(&cost, b, 0.004 / b as f64) // fake 2× fusion win
+        }).collect();
+        let prefill: Vec<PrefillPoint> = [512usize, 2048].iter()
+            .map(|&l| {
+                let cost = crate::runtime::analytic_cost(
+                    &cfg, "prefill", Some(l), 1);
+                prefill_point(&cost, l, l as f64 * 1e-4)
+            }).collect();
+        trajectory_json("test", "sim-130m", "reference", 4, true,
+                        &decode, &prefill)
+    }
+
+    #[test]
+    fn trajectory_schema_validates_generator_output() {
+        // the generator and the validator are pinned to each other: what
+        // trajectory_json emits must always validate
+        let j = sample_doc();
+        validate_trajectory_json(&j).unwrap();
+        // and survives a serialize/parse round trip (what CI consumes)
+        let back = Json::parse(&j.to_string()).unwrap();
+        validate_trajectory_json(&back).unwrap();
+        assert_eq!(back.get("pr").and_then(Json::as_str), Some("test"));
+    }
+
+    #[test]
+    fn trajectory_schema_rejects_drift() {
+        // removing any pinned field must fail validation — this is what
+        // keeps BENCH_*.json comparable across PRs
+        for key in ["schema_version", "pr", "model", "backend", "threads",
+                    "quick", "decode", "prefill",
+                    "batch_speedup_b16_vs_b1"] {
+            let j = sample_doc();
+            let mut m = j.as_obj().unwrap().clone();
+            m.remove(key);
+            let e = validate_trajectory_json(&Json::Obj(m))
+                .expect_err(&format!("must reject missing {key}"));
+            assert!(e.to_string().contains("BENCH json"), "{e}");
+        }
+        // a decode sweep without B=16 is not comparable either
+        let j = sample_doc();
+        let mut m = j.as_obj().unwrap().clone();
+        let dec = m.get("decode").unwrap().as_arr().unwrap().to_vec();
+        m.insert("decode".into(), Json::Arr(dec[..2].to_vec()));
+        assert!(validate_trajectory_json(&Json::Obj(m)).is_err());
+        // renamed unit-bearing field (tokens_per_s → tok_s) must fail
+        let j = sample_doc();
+        let mut m = j.as_obj().unwrap().clone();
+        let dec = m.get("decode").unwrap().as_arr().unwrap().to_vec();
+        let mut p0 = dec[0].as_obj().unwrap().clone();
+        let v = p0.remove("tokens_per_s").unwrap();
+        p0.insert("tok_s".into(), v);
+        let mut dec2 = dec.clone();
+        dec2[0] = Json::Obj(p0);
+        m.insert("decode".into(), Json::Arr(dec2));
+        assert!(validate_trajectory_json(&Json::Obj(m)).is_err());
+    }
+
+    #[test]
+    fn batch_speedup_ratio() {
+        let cfg = crate::runtime::sim_config("tiny").unwrap();
+        let cost = crate::runtime::analytic_cost(
+            &cfg, "decode_step", None, 1);
+        // B=16 step takes 4× the B=1 step → 4× tokens/s ratio
+        let points = vec![
+            decode_point(&cost, 1, 0.001),
+            decode_point(&cost, 16, 0.004),
+        ];
+        assert!((batch_speedup(&points) - 4.0).abs() < 1e-9);
+        assert_eq!(batch_speedup(&[]), 0.0);
+    }
 
     #[test]
     fn paper_configs_scale_monotonically() {

@@ -97,6 +97,17 @@ impl Batcher {
         self.active.iter().flatten().collect()
     }
 
+    /// The dense packing order for a batch-fused decode step: active
+    /// sequences in slot order plus their slot ids. Row `j` of the packed
+    /// decode batch (tokens, logits, gathered cache) corresponds to
+    /// `seqs[j]` in `slots[j]` — holes from mid-decode cancels simply
+    /// don't appear, so backend work scales with occupancy, not capacity.
+    pub fn pack(&self) -> (Vec<&ActiveSeq>, Vec<usize>) {
+        let seqs: Vec<&ActiveSeq> = self.active.iter().flatten().collect();
+        let slots = seqs.iter().map(|s| s.slot.0).collect();
+        (seqs, slots)
+    }
+
     pub fn active_mut(&mut self, slot: SlotId) -> Option<&mut ActiveSeq> {
         self.active[slot.0].as_mut()
     }
@@ -257,6 +268,25 @@ mod tests {
         // remaining order preserved
         let adm = admit_all(&mut b);
         assert_eq!(adm[0].0, 1);
+    }
+
+    #[test]
+    fn pack_skips_holes_in_slot_order() {
+        let mut b = Batcher::new(4);
+        for i in 0..4 {
+            b.submit(req(i, 5));
+        }
+        let adm = admit_all(&mut b);
+        assert_eq!(adm.len(), 4);
+        // abort the sequence in slot 1: the packed order must skip the
+        // hole but keep slot order for the rest
+        b.abort(adm[1].1);
+        let (seqs, slots) = b.pack();
+        assert_eq!(seqs.len(), 3);
+        assert_eq!(slots, vec![adm[0].1 .0, adm[2].1 .0, adm[3].1 .0]);
+        for (seq, &slot) in seqs.iter().zip(&slots) {
+            assert_eq!(seq.slot.0, slot);
+        }
     }
 
     #[test]

@@ -131,8 +131,8 @@ pub struct Engine {
     sinks: Vec<Option<ResponseSink>>, // by slot
     /// sinks for requests still waiting in the queue (pre-admission)
     pending_sinks: Vec<ResponseSink>,
-    /// width of the batched decode executable (>= logical slot count)
-    exe_batch: usize,
+    /// model shape (for building packed decode caches)
+    model_cfg: crate::runtime::ConfigInfo,
     metrics: Arc<Metrics>,
     rngs: Vec<Option<Rng>>,           // per-slot sampling rng
 }
@@ -146,12 +146,18 @@ impl Engine {
         let m2 = Arc::clone(&metrics);
         let (tx, rx) = mpsc::channel::<Msg>();
         let model_cfg = session.cfg().clone();
-        // the batched decode executable has a fixed width (backend
-        // batch_cap); the engine's logical slot count may be smaller, but
-        // the batched cache always spans the full executable width
         let exe_batch = session.batch_cap();
         let slots = cfg.batch_cap.min(exe_batch).max(1);
-        let cache = CacheState::zeros(&model_cfg, exe_batch);
+        // Width-flexible backends (decode_width ≤ active) pack decode to
+        // the occupied slots, so the batched cache only needs the logical
+        // slot count; fixed-width backends decode their full compiled
+        // executable width, so the cache must span it.
+        let cache_width = if session.decode_width(slots) <= slots {
+            slots
+        } else {
+            exe_batch
+        };
+        let cache = CacheState::zeros(&model_cfg, cache_width);
         let mut eng = Engine {
             session,
             batcher: Batcher::new(slots),
@@ -159,7 +165,7 @@ impl Engine {
             pending_sinks: Vec::new(),
             rngs: (0..slots).map(|_| None).collect(),
             cache,
-            exe_batch,
+            model_cfg,
             cfg,
             metrics: m2,
         };
@@ -355,23 +361,52 @@ impl Engine {
     }
 
     fn decode_once(&mut self) -> Result<()> {
-        let active: Vec<ActiveSeq> =
-            self.batcher.active_seqs().iter().map(|s| (*s).clone()).collect();
+        let (active, slots) = {
+            let (seqs, slots) = self.batcher.pack();
+            (seqs.into_iter().cloned().collect::<Vec<ActiveSeq>>(), slots)
+        };
         Metrics::inc(&self.metrics.decode_steps, 1);
         Metrics::inc(&self.metrics.batch_occupancy_sum, active.len() as u64);
-        // build the token vector for the FULL executable width
-        // (inactive slots decode a dummy token into a zero slot)
-        let mut tokens = vec![0i32; self.exe_batch];
-        for seq in &active {
-            tokens[seq.slot.0] = seq.last_token;
-        }
-        let out = self.session.decode_step(&self.cache, &tokens)?;
-        self.cache = out.cache;
+        // Width-flexible backends decode a densely packed cache of the
+        // occupied slots (work scales with occupancy), padded up to the
+        // width the backend asked for; fixed-width backends decode the
+        // full cache with dummy tokens in the unoccupied zero slots.
+        let n = active.len();
+        let full = self.cache.batch();
+        let width = self.session.decode_width(n).clamp(n.max(1), full);
+        let packed = width < full;
+        let out = if packed {
+            let mut cachep = CacheState::zeros(&self.model_cfg, width);
+            for (j, &s) in slots.iter().enumerate() {
+                cachep.copy_slot_from(j, &self.cache, s);
+            }
+            let mut tokens = vec![0i32; width];
+            for (j, seq) in active.iter().enumerate() {
+                tokens[j] = seq.last_token;
+            }
+            let out = self.session.decode_step(&cachep, &tokens)?;
+            // scatter advanced state back before any retire can clear it
+            for (j, &s) in slots.iter().enumerate() {
+                self.cache.copy_slot_from(s, &out.cache, j);
+            }
+            out
+        } else {
+            let mut tokens = vec![0i32; full];
+            for seq in &active {
+                tokens[seq.slot.0] = seq.last_token;
+            }
+            let out = self.session.decode_step(&self.cache, &tokens)?;
+            self.cache = out.cache;
+            out
+        };
         let v = *out.logits.dims.last().unwrap() as usize;
         let all = out.logits.as_f32();
-        for seq in &active {
+        for (j, seq) in active.iter().enumerate() {
+            // packed logits are row-aligned with the pack order, full
+            // width logits with the slot index
+            let r = if packed { j } else { seq.slot.0 };
             let row = Tensor::f32("row", &[1, v as i64],
-                                  &all[seq.slot.0 * v..(seq.slot.0 + 1) * v]);
+                                  &all[r * v..(r + 1) * v]);
             let mut rng = self.rngs[seq.slot.0].take()
                 .unwrap_or_else(|| Rng::new(seq.req_id));
             let tok = sample(&row, seq.sampling, &mut rng);

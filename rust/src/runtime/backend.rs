@@ -21,6 +21,7 @@
 //! (`(n_layer, B, ...)` f32), with O(1)-per-sequence slot copy/clear — the
 //! property continuous batching builds on (DESIGN.md §3).
 
+use crate::bail;
 use crate::tensor::Tensor;
 use crate::util::error::Result;
 
@@ -72,6 +73,34 @@ impl CacheState {
     pub fn clear_slot(&mut self, slot: usize) {
         zero_slot(&mut self.ssm, slot);
         zero_slot(&mut self.conv, slot);
+    }
+
+    /// Gather `slots` (in the given order) into a dense cache of batch
+    /// `slots.len()` — the engine's packing step before a batch-fused
+    /// decode over only the occupied slots. O(cache bytes per seq) per
+    /// slot, independent of prefix length.
+    pub fn gather_slots(&self, slots: &[usize]) -> CacheState {
+        let mut ssm_dims = self.ssm.dims.clone();
+        ssm_dims[1] = slots.len() as i64;
+        let mut conv_dims = self.conv.dims.clone();
+        conv_dims[1] = slots.len() as i64;
+        let mut out = CacheState {
+            ssm: Tensor::zeros_f32("ssm", &ssm_dims),
+            conv: Tensor::zeros_f32("conv", &conv_dims),
+        };
+        for (j, &s) in slots.iter().enumerate() {
+            out.copy_slot_from(j, self, s);
+        }
+        out
+    }
+
+    /// Scatter a dense cache (one produced via [`Self::gather_slots`])
+    /// back into `slots`, inverse of the gather.
+    pub fn scatter_slots(&mut self, slots: &[usize], src: &CacheState) {
+        assert_eq!(src.batch(), slots.len(), "scatter_slots: batch");
+        for (j, &s) in slots.iter().enumerate() {
+            self.copy_slot_from(s, src, j);
+        }
     }
 }
 
@@ -160,10 +189,34 @@ pub trait Backend: Send {
     /// `tokens.len()` must equal `batch * t` for a supported `(batch, t)`.
     fn prefill(&self, tokens: &[i32], batch: usize) -> Result<PrefillOut>;
 
-    /// One cached decode step for every slot in `cache`
-    /// (`tokens.len() == cache.batch()`); O(1) work per sequence.
+    /// One cached decode step for every slot in `cache`, **batch-fused**:
+    /// `tokens.len() == cache.batch() == B`, one token per slot, logits
+    /// `(B, V)` row-aligned with the slots, O(1) work per sequence.
+    ///
+    /// Batched semantics: slot `i`'s logits and next cache state are a
+    /// function of `(cache slot i, tokens[i])` alone — slots never mix —
+    /// so a batched call must agree with `B` independent single-slot
+    /// calls (within f32 rounding; the reference backend is bit-exact).
+    /// Backends are expected to fuse the batch into whole-`B`
+    /// contractions rather than loop per slot; `cost("decode_step", _,
+    /// B)` reports the per-launch economics (weights read once per
+    /// launch, state per slot).
     fn decode_step(&self, cache: &CacheState, tokens: &[i32])
         -> Result<StepOut>;
+
+    /// Decode cache width the backend wants when `active` sequences are
+    /// live. The engine clamps the answer to `[active, cache width]` and
+    /// packs the occupied slots into a dense cache of exactly that width
+    /// (zero-padded rows with dummy tokens fill the tail when the
+    /// backend asks for more than `active` — e.g. a bucketed-width
+    /// executable). Fixed-shape backends keep the default (their
+    /// compiled width → the engine decodes the full cache); flexible
+    /// backends override this to return `active` so work scales with
+    /// occupancy. Must be monotone in `active`.
+    fn decode_width(&self, active: usize) -> usize {
+        let _ = active;
+        self.batch_cap()
+    }
 
     /// Fused greedy decode loop: generate `bucket` tokens from `token`
     /// without per-step host round trips (batch-1 only).
@@ -183,11 +236,58 @@ pub trait Backend: Send {
         analytic_cost(self.cfg(), entrypoint, bucket, batch)
     }
 
-    /// Exact-prefix prefill for arbitrary prompt lengths: largest bucket ≤
-    /// len via the chunked-parallel path, remainder through the O(1)
-    /// decode step (the AOT shape-bucket policy, honoured identically by
-    /// every backend so greedy outputs are backend-independent). Returns
-    /// the cache and the logits after the final prompt token.
+    /// Continue a prefill from an existing cache over a further
+    /// `batch × t` tokens (t a chunk multiple), returning all logits for
+    /// the new positions plus the advanced cache. This is what lets
+    /// [`Backend::prefill_any`] chain shape buckets instead of
+    /// tail-decoding hundreds of tokens one at a time.
+    ///
+    /// The default implementation replays the segment through the O(1)
+    /// decode step — semantically exact on any backend (this is
+    /// byte-for-byte the pre-bucket-chain remainder path, so backends
+    /// without a native continuation, e.g. the AOT executables, behave
+    /// exactly as before). The reference backend overrides it with the
+    /// chunked-parallel forward seeded from the cache.
+    fn prefill_continue(&self, cache: &CacheState, tokens: &[i32],
+                        batch: usize) -> Result<PrefillOut> {
+        if batch == 0 || tokens.len() % batch != 0 {
+            bail!("prefill_continue: {} tokens not divisible by batch \
+                   {batch}", tokens.len());
+        }
+        if cache.batch() != batch {
+            bail!("prefill_continue: cache batch {} != batch {batch}",
+                  cache.batch());
+        }
+        let t = tokens.len() / batch;
+        let v = self.cfg().vocab_size;
+        let mut cache = cache.clone();
+        let mut all = vec![0.0f32; batch * t * v];
+        for step in 0..t {
+            let col: Vec<i32> =
+                (0..batch).map(|b| tokens[b * t + step]).collect();
+            let out = self.decode_step(&cache, &col)?;
+            cache = out.cache;
+            let lv = out.logits.as_f32();
+            for (b, row) in lv.chunks_exact(v).enumerate() {
+                all[(b * t + step) * v..(b * t + step + 1) * v]
+                    .copy_from_slice(row);
+            }
+        }
+        Ok(PrefillOut {
+            logits: Tensor::f32(
+                "logits", &[batch as i64, t as i64, v as i64], &all),
+            cache,
+        })
+    }
+
+    /// Exact-prefix prefill for arbitrary prompt lengths: a greedy chain
+    /// of shape buckets (largest bucket ≤ remainder, repeatedly) through
+    /// the chunked-parallel path — the first segment via `prefill`, later
+    /// segments via `prefill_continue` — with only the sub-bucket tail
+    /// through the O(1) decode step. The split points are a pure function
+    /// of `(buckets, len)`, honoured identically by every backend so
+    /// greedy outputs stay backend-independent. Returns the cache and the
+    /// logits after the final prompt token.
     fn prefill_any(&self, prompt: &[i32]) -> Result<(CacheState, Tensor)> {
         assert!(!prompt.is_empty());
         let cfg = self.cfg().clone();
@@ -195,18 +295,28 @@ pub trait Backend: Send {
         let mut cache = CacheState::zeros(&cfg, 1);
         let mut logits: Option<Tensor> = None;
         let mut pos = 0;
-        if let Some(b) = Manifest::pick_bucket(&buckets, prompt.len()) {
-            if b <= prompt.len() {
-                let out = self.prefill(&prompt[..b], 1)?;
-                cache = out.cache;
-                // keep only the final position's row
-                let v = *out.logits.dims.last().unwrap();
-                let all = out.logits.as_f32();
-                logits = Some(Tensor::f32(
-                    "last", &[1, v],
-                    &all[all.len() - v as usize..]));
-                pos = b;
-            }
+        while pos < prompt.len() {
+            let rem = prompt.len() - pos;
+            let b = match Manifest::pick_bucket(&buckets, rem) {
+                // pick_bucket falls back to the smallest bucket when none
+                // fit; that bucket is too long to prefill, so the tail
+                // goes through the decode step below
+                Some(b) if b <= rem => b,
+                _ => break,
+            };
+            let seg = &prompt[pos..pos + b];
+            let out = if pos == 0 {
+                self.prefill(seg, 1)?
+            } else {
+                self.prefill_continue(&cache, seg, 1)?
+            };
+            cache = out.cache;
+            // keep only the final position's row
+            let v = *out.logits.dims.last().unwrap();
+            let all = out.logits.as_f32();
+            logits = Some(Tensor::f32(
+                "last", &[1, v], &all[all.len() - v as usize..]));
+            pos += b;
         }
         while pos < prompt.len() {
             let out = self.decode_step(&cache, &prompt[pos..=pos])?;
@@ -218,8 +328,38 @@ pub trait Backend: Send {
     }
 }
 
-/// Analytic (FLOPs, bytes) for one entrypoint invocation — the fallback
-/// cost model when no compiler cost analysis exists for the backend.
+/// Analytic transcendental count for one decode step of one sequence:
+/// per layer, softplus (exp + log1p) and two exps per head, one silu exp
+/// per conv channel, one gate silu exp per inner dim, and the two
+/// rsqrt-bearing norms; plus the final norm.
+fn decode_step_transcendentals(cfg: &ConfigInfo) -> f64 {
+    let per_layer = 4.0 * cfg.nheads as f64
+        + cfg.d_conv_ch as f64
+        + cfg.d_inner as f64
+        + 2.0;
+    cfg.n_layer as f64 * per_layer + 1.0
+}
+
+/// Analytic transcendental count for a `t`-token prefill of one
+/// sequence: the per-token elementwise set above plus the intra-chunk
+/// decay exps of the dual form (one per causal (l, s) pair, the
+/// cross-chunk and summary weights, and the chunk decay product).
+fn prefill_transcendentals(cfg: &ConfigInfo, t: usize) -> f64 {
+    let l = cfg.chunk_size as f64;
+    let nc = (t / cfg.chunk_size).max(1) as f64;
+    let per_token = 4.0 * cfg.nheads as f64
+        + cfg.d_conv_ch as f64
+        + cfg.d_inner as f64
+        + 2.0;
+    let chunk_exps = nc * cfg.nheads as f64
+        * (l * (l + 1.0) / 2.0 + 2.0 * l + 1.0);
+    cfg.n_layer as f64 * (t as f64 * per_token + chunk_exps) + t as f64
+}
+
+/// Analytic (FLOPs, bytes, transcendentals) for one entrypoint
+/// invocation — the fallback cost model when no compiler cost analysis
+/// exists for the backend. Batched decode reads weights once per launch
+/// and state per slot — the amortisation the batch-fused step exploits.
 pub fn analytic_cost(cfg: &ConfigInfo, entrypoint: &str,
                      bucket: Option<usize>, batch: usize) -> CostInfo {
     use crate::perf::sim::{decode_step_bytes, decode_step_flops,
@@ -235,14 +375,14 @@ pub fn analytic_cost(cfg: &ConfigInfo, entrypoint: &str,
                 // weights are read once per launch, activations per seq
                 bytes_accessed: weights
                     + (prefill_bytes(cfg, t, F32) - weights) * b,
-                transcendentals: 0.0,
+                transcendentals: prefill_transcendentals(cfg, t) * b,
             }
         }
         "decode_step" => CostInfo {
             flops: decode_step_flops(cfg) * b,
             bytes_accessed: weights
                 + (decode_step_bytes(cfg, F32) - weights) * b,
-            transcendentals: 0.0,
+            transcendentals: decode_step_transcendentals(cfg) * b,
         },
         "decode_loop" => {
             let g = bucket.unwrap_or(1) as f64;
@@ -250,7 +390,7 @@ pub fn analytic_cost(cfg: &ConfigInfo, entrypoint: &str,
                 flops: decode_step_flops(cfg) * b * g,
                 bytes_accessed: (weights
                     + (decode_step_bytes(cfg, F32) - weights) * b) * g,
-                transcendentals: 0.0,
+                transcendentals: decode_step_transcendentals(cfg) * b * g,
             }
         }
         _ => CostInfo::default(),
@@ -343,5 +483,55 @@ mod tests {
         assert!(s4.bytes_accessed < 4.0 * s1.bytes_accessed);
         let g = analytic_cost(&cfg, "decode_loop", Some(8), 1);
         assert!((g.flops / s1.flops - 8.0).abs() < 1e-9);
+        // transcendentals: linear in batch for decode; linear in t for
+        // prefill (the quadratic intra-chunk decays are per chunk, and
+        // chunks grow linearly with t)
+        assert!(s1.transcendentals > 0.0);
+        assert!((s4.transcendentals / s1.transcendentals - 4.0).abs()
+                < 1e-9);
+        assert!(p64.transcendentals >= 4.0 * p16.transcendentals * 0.99);
+        assert!(p64.transcendentals > p16.transcendentals);
+    }
+
+    #[test]
+    fn gather_scatter_round_trip() {
+        let cfg = super::super::manifest::sim_config("tiny").unwrap();
+        let mut full = CacheState::zeros(&cfg, 6);
+        // stamp each slot with a distinct value
+        let per: usize = full.ssm.dims[2..].iter()
+            .product::<i64>() as usize;
+        for slot in 0..6 {
+            let mut one = CacheState::zeros(&cfg, 1);
+            for x in one.ssm.data.chunks_exact_mut(4) {
+                x.copy_from_slice(&(slot as f32 + 1.0).to_le_bytes());
+            }
+            full.copy_slot_from(slot, &one, 0);
+        }
+        // gather a ragged subset (order matters)
+        let packed = full.gather_slots(&[4, 1, 3]);
+        assert_eq!(packed.batch(), 3);
+        let f = packed.ssm.as_f32();
+        for (j, want) in [(0usize, 5.0f32), (1, 2.0), (2, 4.0)] {
+            for layer in 0..cfg.n_layer {
+                let base = (layer * 3 + j) * per;
+                assert!(f[base..base + per].iter().all(|&x| x == want),
+                        "packed slot {j}");
+            }
+        }
+        // scatter back into a zeroed cache restores exactly those slots
+        let mut restored = CacheState::zeros(&cfg, 6);
+        restored.scatter_slots(&[4, 1, 3], &packed);
+        let r = restored.ssm.as_f32();
+        let fsrc = full.ssm.as_f32();
+        for slot in [4usize, 1, 3] {
+            for layer in 0..cfg.n_layer {
+                let base = (layer * 6 + slot) * per;
+                assert_eq!(&r[base..base + per], &fsrc[base..base + per]);
+            }
+        }
+        for slot in [0usize, 2, 5] {
+            let base = slot * per;
+            assert!(r[base..base + per].iter().all(|&x| x == 0.0));
+        }
     }
 }

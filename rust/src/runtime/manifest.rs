@@ -72,6 +72,11 @@ pub const DECODE_LOOP_BUCKETS: &[usize] = &[16, 32, 64, 128, 256];
 pub const FORWARD_BUCKETS: &[usize] = &[16, 32, 64, 128, 256, 512];
 /// Continuous-batching slot count the batched artifacts are built for.
 pub const BATCH_CAP: usize = 4;
+/// Slot capacity of the width-flexible reference backend. Its batched
+/// decode step accepts any cache width (no fixed executable shape), so
+/// the serving tier can run wider batches than the AOT artifacts allow;
+/// 16 bounds per-engine cache memory, not the math.
+pub const REFERENCE_BATCH_CAP: usize = 16;
 
 /// Per-layer parameter names in canonical order (params.py LAYER_KEYS).
 pub const LAYER_KEYS: [&str; 9] = [

@@ -147,7 +147,11 @@ mod tests {
                              Path::new("/nonexistent")).unwrap();
         assert_eq!(b.name(), "reference");
         assert_eq!(b.cfg().d_model, 64);
-        assert_eq!(b.batch_cap(), manifest::BATCH_CAP);
+        // width-flexible: the reference backend serves wider batches than
+        // the AOT artifact width, and packs decode to the active count
+        assert_eq!(b.batch_cap(), manifest::REFERENCE_BATCH_CAP);
+        assert_eq!(b.decode_width(3), 3);
+        assert_eq!(b.decode_width(0), 1);
     }
 
     #[test]

@@ -24,17 +24,19 @@
 //! `params.py::init_params` conventions: A ∈ [1,16), softplus-inverse dt
 //! bias) or loaded from a `.mbt` checkpoint via [`Backend::load_weights`].
 
-use crate::tensor::math::{axpy, dot, gated_rmsnorm_rows, matmul, matmul_bt,
-                          rmsnorm_row, silu, softplus};
+use crate::tensor::math::{axpy, dot, gated_rmsnorm_rows, matmul_acc_strided,
+                          matmul_bt_acc_strided, rmsnorm_row, silu,
+                          silu_rows, softplus};
 use crate::bail;
 use crate::tensor::Tensor;
 use crate::util::error::{Context, Result};
 use crate::util::prng::Rng;
+use crate::util::threadpool::ThreadPool;
 
 use super::backend::{argmax_last, Backend, CacheState, PrefillOut, StepOut};
-use super::manifest::{sim_config, ConfigInfo, BATCH_CAP,
-                      DECODE_LOOP_BUCKETS, FORWARD_BUCKETS,
-                      PREFILL_BUCKETS};
+use super::manifest::{sim_config, ConfigInfo, DECODE_LOOP_BUCKETS,
+                      FORWARD_BUCKETS, PREFILL_BUCKETS,
+                      REFERENCE_BATCH_CAP};
 
 const NORM_EPS: f32 = 1e-5;
 
@@ -211,12 +213,47 @@ fn params_from_tensors(cfg: &ConfigInfo, tensors: &[Tensor])
 
 // -------------------------------------------------------------- backend ---
 
+/// Worker count for a fresh backend: the `M2_THREADS` env var when set,
+/// else the machine's available parallelism capped at 16 (the row-block
+/// grain of the sim-scale contractions stops paying off beyond that, and
+/// every backend instance owns its pool). 1 means fully serial (no pool
+/// is spawned).
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("M2_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get().min(16))
+        .unwrap_or(1)
+}
+
+fn build_pool(threads: usize) -> Option<ThreadPool> {
+    if threads > 1 {
+        Some(ThreadPool::new(threads))
+    } else {
+        None
+    }
+}
+
 /// Hermetic pure-Rust SSD backend; see the module docs.
+///
+/// The two hot paths are batched and threadpool-parallel (DESIGN.md
+/// §2.2): `decode_step` packs every cache slot into `[B, ·]` matrix
+/// contractions whose row blocks fan out across the pool, and prefill
+/// fans the quadratic intra-chunk dual form out per (sequence, head,
+/// chunk) while keeping the inter-chunk state scan sequential. Both are
+/// bitwise-deterministic in the worker count — each output element is
+/// produced by exactly one job running the serial scalar schedule — so
+/// `with_threads(1)` is a parity oracle, not a different algorithm.
 pub struct ReferenceBackend {
     cfg: ConfigInfo,
     params: Params,
     /// flat host copies in manifest order (checkpoint save/round-trip)
     pub params_host: Vec<Tensor>,
+    threads: usize,
+    pool: Option<ThreadPool>,
 }
 
 impl ReferenceBackend {
@@ -233,21 +270,115 @@ impl ReferenceBackend {
     pub fn with_config(cfg: ConfigInfo, seed: u64) -> ReferenceBackend {
         let params = init_params(&cfg, seed);
         let params_host = params_to_tensors(&cfg, &params);
-        ReferenceBackend { cfg, params, params_host }
+        let threads = default_threads();
+        ReferenceBackend { cfg, params, params_host, threads,
+                           pool: build_pool(threads) }
     }
 
     /// Build from an explicit flat parameter list (canonical order).
     pub fn from_tensors(cfg: ConfigInfo, tensors: Vec<Tensor>)
         -> Result<ReferenceBackend> {
         let params = params_from_tensors(&cfg, &tensors)?;
-        Ok(ReferenceBackend { cfg, params, params_host: tensors })
+        let threads = default_threads();
+        Ok(ReferenceBackend { cfg, params, params_host: tensors, threads,
+                              pool: build_pool(threads) })
+    }
+
+    /// Pin the worker count (1 = fully serial). The result is bitwise
+    /// independent of this setting; the parity suite exercises that.
+    pub fn with_threads(mut self, threads: usize) -> ReferenceBackend {
+        self.threads = threads.max(1);
+        self.pool = build_pool(self.threads);
+        self
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    // ------------------------------------------------ parallel drivers ---
+
+    /// Threadpool-parallel `C += A @ B` over contiguous row blocks
+    /// (`A` rows `lda` apart, `C` dense `(m, n)`). Bitwise-identical to
+    /// the serial contraction: each C row is written by exactly one block
+    /// in the same scalar order (see `matmul_acc_strided`). Small
+    /// problems (or batch 1) stay on the calling thread — the single-slot
+    /// decode baseline pays no dispatch tax.
+    fn pmm_acc(&self, a: &[f32], lda: usize, b: &[f32], m: usize, k: usize,
+               n: usize, c: &mut [f32]) {
+        debug_assert_eq!(c.len(), m * n);
+        const PAR_MIN_FLOPS: usize = 32 * 1024;
+        match &self.pool {
+            Some(pool) if m > 1 && m * k * n >= PAR_MIN_FLOPS => {
+                let rows_per = m.div_ceil(pool.size());
+                pool.scoped_chunks(c, rows_per * n, |i, cblk| {
+                    let lo = i * rows_per;
+                    let rows = cblk.len() / n;
+                    matmul_acc_strided(&a[lo * lda..], lda, b, rows, k, n,
+                                       cblk, n);
+                });
+            }
+            _ => matmul_acc_strided(a, lda, b, m, k, n, c, n),
+        }
+    }
+
+    /// Threadpool-parallel `C += A @ Bᵀ` over row blocks (tied lm head);
+    /// same bitwise guarantee as [`Self::pmm_acc`].
+    fn pbt_acc(&self, a: &[f32], lda: usize, bt: &[f32], m: usize,
+               k: usize, n: usize, c: &mut [f32]) {
+        debug_assert_eq!(c.len(), m * n);
+        const PAR_MIN_FLOPS: usize = 32 * 1024;
+        match &self.pool {
+            Some(pool) if m > 1 && m * k * n >= PAR_MIN_FLOPS => {
+                let rows_per = m.div_ceil(pool.size());
+                pool.scoped_chunks(c, rows_per * n, |i, cblk| {
+                    let lo = i * rows_per;
+                    let rows = cblk.len() / n;
+                    matmul_bt_acc_strided(&a[lo * lda..], lda, bt, rows, k,
+                                          n, cblk, n);
+                });
+            }
+            _ => matmul_bt_acc_strided(a, lda, bt, m, k, n, c, n),
+        }
+    }
+
+    /// Fan `f(flat_job, out_chunk)` over `buf.len()/width` disjoint
+    /// `width`-sized output chunks, grouping several jobs per dispatch so
+    /// queue overhead stays off the hot path; serial without a pool.
+    /// Bitwise-identical to the serial loop (disjoint outputs, same
+    /// per-job scalar schedule).
+    fn par_jobs<F>(&self, buf: &mut [f32], width: usize, f: F)
+    where
+        F: Fn(usize, &mut [f32]) + Sync,
+    {
+        debug_assert_eq!(buf.len() % width, 0);
+        let njobs = buf.len() / width;
+        match &self.pool {
+            Some(pool) if njobs > 1 => {
+                let group = njobs.div_ceil(pool.size() * 8).max(1);
+                pool.scoped_chunks(buf, width * group, |idx, chunk| {
+                    for (q, out) in chunk.chunks_mut(width).enumerate() {
+                        f(idx * group + q, out);
+                    }
+                });
+            }
+            _ => {
+                for (j, out) in buf.chunks_mut(width).enumerate() {
+                    f(j, out);
+                }
+            }
+        }
     }
 
     // ------------------------------------------------- chunked forward ---
 
     /// Full chunked forward over (batch, t) tokens: logits for every
-    /// position plus the cache after the last one (paper Alg. 1).
-    fn forward_chunked(&self, tokens: &[i32], batch: usize)
+    /// position plus the cache after the last one (paper Alg. 1). With
+    /// `init`, the forward continues from an existing O(1) cache (carry
+    /// states seed the inter-chunk scan, the conv window seeds the first
+    /// k-1 taps) — the chunked realisation of `prefill_continue`.
+    fn forward_chunked(&self, tokens: &[i32], batch: usize,
+                       init: Option<&CacheState>)
         -> Result<(Tensor, CacheState)> {
         let cfg = &self.cfg;
         if batch == 0 || tokens.len() % batch != 0 {
@@ -259,6 +390,12 @@ impl ReferenceBackend {
             bail!("prefill: length {t} not a multiple of chunk \
                    {}", cfg.chunk_size);
         }
+        if let Some(ic) = init {
+            if ic.batch() != batch {
+                bail!("prefill_continue: cache batch {} != batch {batch}",
+                      ic.batch());
+            }
+        }
         let (d, di, h, p, n) = (cfg.d_model, cfg.d_inner, cfg.nheads,
                                 cfg.headdim, cfg.d_state);
         let (ch, k, dp, v) = (cfg.d_conv_ch, cfg.d_conv, cfg.d_in_proj(),
@@ -266,6 +403,11 @@ impl ReferenceBackend {
         let lch = cfg.chunk_size;
         let nc = t / lch;
         let rows = batch * t;
+        let pn = p * n;
+
+        // host-decoded copies of the incoming cache (continuation only)
+        let init_ssm = init.map(|c| c.ssm.as_f32());
+        let init_conv = init.map(|c| c.conv.as_f32());
 
         // token embedding (f32 residual stream, paper §3.3)
         let mut x = vec![0.0f32; rows * d];
@@ -288,10 +430,13 @@ impl ReferenceBackend {
             for row in hn.chunks_exact_mut(d) {
                 rmsnorm_row(row, &lp.ln_w, NORM_EPS);
             }
-            // in_proj → (rows, dp) = [z | xBC | dt]
-            let zx = matmul(&hn, &lp.in_proj, rows, d, dp);
+            // in_proj → (rows, dp) = [z | xBC | dt], row blocks fanned
+            // across the pool
+            let mut zx = vec![0.0f32; rows * dp];
+            self.pmm_acc(&hn, d, &lp.in_proj, rows, d, dp, &mut zx);
 
-            // causal depthwise conv over time (per sequence)
+            // causal depthwise conv over time (per sequence); on a
+            // continued segment the first k-1 taps read the cached window
             let mut xbc = vec![0.0f32; rows * ch]; // pre-activation inputs
             for r in 0..rows {
                 xbc[r * ch..(r + 1) * ch]
@@ -304,19 +449,28 @@ impl ReferenceBackend {
                     for i in 0..k {
                         let src = ti as isize + i as isize
                             - (k as isize - 1);
-                        if src < 0 {
-                            continue;
-                        }
-                        let srow = (bi * t + src as usize) * ch;
                         let wrow = &lp.conv_w[i * ch..(i + 1) * ch];
-                        for c in 0..ch {
-                            xact[orow + c] += xbc[srow + c] * wrow[c];
+                        if src >= 0 {
+                            let srow = (bi * t + src as usize) * ch;
+                            for c in 0..ch {
+                                xact[orow + c] += xbc[srow + c] * wrow[c];
+                            }
+                        } else if let Some(win) = &init_conv {
+                            // window slot ti+i ∈ [0, k-1): input from
+                            // before this segment
+                            let wi = ti + i;
+                            for c in 0..ch {
+                                let st = ((li * batch + bi) * ch + c)
+                                    * (k - 1);
+                                xact[orow + c] += win[st + wi] * wrow[c];
+                            }
                         }
                     }
-                    for c in 0..ch {
-                        xact[orow + c] =
-                            silu(xact[orow + c] + lp.conv_b[c]);
+                    let row = &mut xact[orow..orow + ch];
+                    for (vv, bv) in row.iter_mut().zip(&lp.conv_b) {
+                        *vv += bv;
                     }
+                    silu_rows(row);
                 }
                 // cache the last k-1 pre-activation inputs (t ≥ k-1)
                 for c in 0..ch {
@@ -353,74 +507,123 @@ impl ReferenceBackend {
                 }
             }
 
-            // chunked SSD per (sequence, head): intra-chunk dual form +
-            // inter-chunk scan over summary states (ref.py signatures)
-            let mut y = vec![0.0f32; rows * di]; // (rows, h, p)
-            let mut bc = vec![0.0f32; lch * n];
-            let mut cc = vec![0.0f32; lch * n];
-            let mut xc = vec![0.0f32; lch * p];
-            let mut dacs = vec![0.0f32; lch];
+            // chunked SSD in three stages (DESIGN.md §2.2): the quadratic
+            // intra-chunk dual form is embarrassingly parallel per
+            // (sequence, head, chunk) and fans out across the pool; only
+            // the O(nc) inter-chunk scan — whose carry update is
+            // order-dependent by definition — stays sequential.
+            let njobs = batch * h * nc;
+            let split = |j: usize| (j / (h * nc), (j / nc) % h, j % nc);
+            let boff = di;         // B block offset inside an xact row
+            let coff = di + h * n; // C block offset
+            let cumsum = |bi: usize, hh: usize, c: usize,
+                          dacs: &mut [f32]| {
+                let base_r = bi * t + c * lch;
+                let mut acc = 0.0f32;
+                for l in 0..lch {
+                    acc += da[(base_r + l) * h + hh];
+                    dacs[l] = acc;
+                }
+            };
+
+            // stage A (parallel): per-chunk cumulative decays, the chunk
+            // decay product cd = exp(cumΔ_L), and the summary state
+            // T = Σ_l exp(cumΔ_L − cumΔ_l) · B_l ⊗ x_l. The cumsums ride
+            // along in the job output so stage C reads them back instead
+            // of recomputing.
+            let aw = pn + 1 + lch; // [T (p·n) | cd | cumΔ (lch)]
+            let mut summ = vec![0.0f32; njobs * aw];
+            self.par_jobs(&mut summ, aw, |j, out| {
+                let (bi, hh, c) = split(j);
+                let base_r = bi * t + c * lch;
+                let (head, dacs) = out.split_at_mut(pn + 1);
+                cumsum(bi, hh, c, dacs);
+                let last = dacs[lch - 1];
+                for l in 0..lch {
+                    let r = base_r + l;
+                    let wl = (last - dacs[l]).exp();
+                    let bcl = &xact[r * ch + boff + hh * n
+                                    ..r * ch + boff + hh * n + n];
+                    for pp in 0..p {
+                        axpy(xdt[r * di + hh * p + pp] * wl, bcl,
+                             &mut head[pp * n..(pp + 1) * n]);
+                    }
+                }
+                head[pn] = last.exp();
+            });
+
+            // stage B (sequential): inter-chunk scan
+            // carry_{c+1} = carry_c · cd_c + T_c  (Alg. 1 line 8), seeded
+            // from the incoming cache on a continued segment
+            let mut carries = vec![0.0f32; njobs * pn]; // state INTO chunk
             for bi in 0..batch {
                 for hh in 0..h {
-                    let mut carry = vec![0.0f32; p * n]; // state into chunk
+                    let s0 = (((li * batch + bi) * h) + hh) * pn;
+                    let mut carry = vec![0.0f32; pn];
+                    if let Some(ssm0) = &init_ssm {
+                        carry.copy_from_slice(&ssm0[s0..s0 + pn]);
+                    }
                     for c in 0..nc {
-                        let base_t = c * lch;
-                        // gather chunk-local B, C, xdt and cumsum(dA)
-                        let mut acc = 0.0f32;
-                        for l in 0..lch {
-                            let r = bi * t + base_t + l;
-                            acc += da[r * h + hh];
-                            dacs[l] = acc;
-                            bc[l * n..(l + 1) * n].copy_from_slice(
-                                &xact[r * ch + di + hh * n
-                                      ..r * ch + di + hh * n + n]);
-                            cc[l * n..(l + 1) * n].copy_from_slice(
-                                &xact[r * ch + di + h * n + hh * n
-                                      ..r * ch + di + h * n + hh * n + n]);
-                            xc[l * p..(l + 1) * p].copy_from_slice(
-                                &xdt[r * di + hh * p
-                                     ..r * di + hh * p + p]);
-                        }
-                        for l in 0..lch {
-                            let r = bi * t + base_t + l;
-                            let yrow = &mut y[r * di + hh * p
-                                              ..r * di + hh * p + p];
-                            // intra-chunk: Σ_{s≤l} (C_l·B_s)
-                            //   · exp(cum_l − cum_s) · x_s
-                            for s in 0..=l {
-                                let g = dot(&cc[l * n..(l + 1) * n],
-                                            &bc[s * n..(s + 1) * n])
-                                    * (dacs[l] - dacs[s]).exp();
-                                axpy(g, &xc[s * p..(s + 1) * p], yrow);
-                            }
-                            // cross-chunk: exp(cum_l) · (carry · C_l)
-                            let w = dacs[l].exp();
-                            for pp in 0..p {
-                                yrow[pp] += w
-                                    * dot(&carry[pp * n..(pp + 1) * n],
-                                          &cc[l * n..(l + 1) * n]);
-                            }
-                        }
-                        // summary state + inter-chunk recurrence
-                        // (Alg. 1 line 8)
-                        let cd = dacs[lch - 1].exp();
-                        for cv in carry.iter_mut() {
-                            *cv *= cd;
-                        }
-                        for l in 0..lch {
-                            let wl = (dacs[lch - 1] - dacs[l]).exp();
-                            for pp in 0..p {
-                                axpy(xc[l * p + pp] * wl,
-                                     &bc[l * n..(l + 1) * n],
-                                     &mut carry[pp * n..(pp + 1) * n]);
-                            }
+                        let j = (bi * h + hh) * nc + c;
+                        carries[j * pn..(j + 1) * pn]
+                            .copy_from_slice(&carry);
+                        let cd = summ[j * aw + pn];
+                        for (cv, tv) in carry.iter_mut()
+                            .zip(&summ[j * aw..j * aw + pn]) {
+                            *cv = *cv * cd + *tv;
                         }
                     }
                     // final state → cache slot (layer, seq, head)
-                    let s0 = (((li * batch + bi) * h) + hh) * p * n;
-                    for (j, &cv) in carry.iter().enumerate() {
-                        write_f32(ssm_cache, s0 + j, cv);
+                    for (jj, &cv) in carry.iter().enumerate() {
+                        write_f32(ssm_cache, s0 + jj, cv);
                     }
+                }
+            }
+
+            // stage C (parallel): intra-chunk quadratic read-out plus the
+            // cross-chunk term against the scanned carry (cumsums reused
+            // from stage A's output)
+            let bw = lch * p;
+            let mut ybuf = vec![0.0f32; njobs * bw];
+            self.par_jobs(&mut ybuf, bw, |j, out| {
+                let (bi, hh, c) = split(j);
+                let base_r = bi * t + c * lch;
+                let dacs = &summ[j * aw + pn + 1..(j + 1) * aw];
+                let carry = &carries[j * pn..(j + 1) * pn];
+                for l in 0..lch {
+                    let r = base_r + l;
+                    let ccl = &xact[r * ch + coff + hh * n
+                                    ..r * ch + coff + hh * n + n];
+                    let yrow = &mut out[l * p..(l + 1) * p];
+                    // intra-chunk: Σ_{s≤l} (C_l·B_s)
+                    //   · exp(cum_l − cum_s) · x_s
+                    for s in 0..=l {
+                        let rs = base_r + s;
+                        let bcs = &xact[rs * ch + boff + hh * n
+                                        ..rs * ch + boff + hh * n + n];
+                        let g = dot(ccl, bcs)
+                            * (dacs[l] - dacs[s]).exp();
+                        axpy(g, &xdt[rs * di + hh * p
+                                     ..rs * di + hh * p + p], yrow);
+                    }
+                    // cross-chunk: exp(cum_l) · (carry · C_l)
+                    let w = dacs[l].exp();
+                    for pp in 0..p {
+                        yrow[pp] += w
+                            * dot(&carry[pp * n..(pp + 1) * n], ccl);
+                    }
+                }
+            });
+
+            // scatter chunk outputs back into the (rows, h, p) activation
+            let mut y = vec![0.0f32; rows * di];
+            for j in 0..njobs {
+                let (bi, hh, c) = split(j);
+                for l in 0..lch {
+                    let r = bi * t + c * lch + l;
+                    y[r * di + hh * p..r * di + hh * p + p]
+                        .copy_from_slice(
+                            &ybuf[j * bw + l * p..j * bw + (l + 1) * p]);
                 }
             }
 
@@ -438,17 +641,18 @@ impl ReferenceBackend {
                 }
             }
             gated_rmsnorm_rows(&mut y, &z, &lp.norm_w, di, NORM_EPS);
-            let out = matmul(&y, &lp.out_proj, rows, di, d);
-            for (xv, ov) in x.iter_mut().zip(&out) {
-                *xv += ov;
-            }
+            // out projection with the residual add fused into the
+            // accumulating contraction (x += y @ out_proj), row blocks
+            // across the pool
+            self.pmm_acc(&y, di, &lp.out_proj, rows, di, d, &mut x);
         }
 
         // final norm + tied lm head
         for row in x.chunks_exact_mut(d) {
             rmsnorm_row(row, &self.params.lnf_w, NORM_EPS);
         }
-        let logits = matmul_bt(&x, &self.params.embed, rows, d, v);
+        let mut logits = vec![0.0f32; rows * v];
+        self.pbt_acc(&x, d, &self.params.embed, rows, d, v, &mut logits);
         Ok((Tensor::f32("logits",
                         &[batch as i64, t as i64, v as i64], &logits),
             cache))
@@ -456,6 +660,13 @@ impl ReferenceBackend {
 
     // ----------------------------------------------------- decode step ---
 
+    /// One batch-fused decode step: all `B = tokens.len()` slots advance
+    /// through a handful of `[B, ·]` contractions (in_proj, out_proj, lm
+    /// head — row blocks across the pool), with the O(1)-per-slot conv
+    /// window and diagonal state updates in between. Each logit row and
+    /// cache slot is a function of that slot's inputs alone, so the
+    /// batched step is bitwise identical to B independent single-slot
+    /// steps — the parity suite (tests/parity_batch.rs) pins this.
     fn step(&self, cache: &CacheState, tokens: &[i32]) -> Result<StepOut> {
         let cfg = &self.cfg;
         let bsz = tokens.len();
@@ -489,7 +700,8 @@ impl ReferenceBackend {
             for row in hn.chunks_exact_mut(d) {
                 rmsnorm_row(row, &lp.ln_w, NORM_EPS);
             }
-            let zx = matmul(&hn, &lp.in_proj, bsz, d, dp);
+            let mut zx = vec![0.0f32; bsz * dp];
+            self.pmm_acc(&hn, d, &lp.in_proj, bsz, d, dp, &mut zx);
 
             // depthwise-conv window step (Alg. 2 lines 7–8)
             let mut xact = vec![0.0f32; bsz * ch];
@@ -542,16 +754,15 @@ impl ReferenceBackend {
                     .copy_from_slice(&zx[bi * dp..bi * dp + di]);
             }
             gated_rmsnorm_rows(&mut y, &z, &lp.norm_w, di, NORM_EPS);
-            let out = matmul(&y, &lp.out_proj, bsz, di, d);
-            for (xv, ov) in x.iter_mut().zip(&out) {
-                *xv += ov;
-            }
+            // residual fused into the accumulating batched contraction
+            self.pmm_acc(&y, di, &lp.out_proj, bsz, di, d, &mut x);
         }
 
         for row in x.chunks_exact_mut(d) {
             rmsnorm_row(row, &self.params.lnf_w, NORM_EPS);
         }
-        let logits = matmul_bt(&x, &self.params.embed, bsz, d, v);
+        let mut logits = vec![0.0f32; bsz * v];
+        self.pbt_acc(&x, d, &self.params.embed, bsz, d, v, &mut logits);
         let new_cache = CacheState {
             ssm: Tensor::f32("ssm", &cache.ssm.dims, &ssm_out),
             conv: Tensor::f32("conv", &cache.conv.dims, &conv_out),
@@ -582,7 +793,13 @@ impl Backend for ReferenceBackend {
     }
 
     fn batch_cap(&self) -> usize {
-        BATCH_CAP
+        REFERENCE_BATCH_CAP
+    }
+
+    fn decode_width(&self, active: usize) -> usize {
+        // width-flexible: the batched step handles any cache width, so
+        // the engine packs exactly the occupied slots
+        active.max(1)
     }
 
     fn prefill_buckets(&self) -> Vec<usize> {
@@ -604,7 +821,18 @@ impl Backend for ReferenceBackend {
     }
 
     fn prefill(&self, tokens: &[i32], batch: usize) -> Result<PrefillOut> {
-        let (logits, cache) = self.forward_chunked(tokens, batch)?;
+        let (logits, cache) = self.forward_chunked(tokens, batch, None)?;
+        Ok(PrefillOut { logits, cache })
+    }
+
+    fn prefill_continue(&self, cache: &CacheState, tokens: &[i32],
+                        batch: usize) -> Result<PrefillOut> {
+        // chunked continuation: the incoming carry seeds the inter-chunk
+        // scan and the conv window seeds the first taps, so chaining
+        // bucket segments is bitwise identical to one joint prefill over
+        // the concatenation (same chunk grid, same per-chunk schedule)
+        let (logits, cache) = self.forward_chunked(tokens, batch,
+                                                   Some(cache))?;
         Ok(PrefillOut { logits, cache })
     }
 
@@ -634,18 +862,19 @@ impl Backend for ReferenceBackend {
     }
 
     fn forward_full(&self, tokens: &[i32]) -> Result<Tensor> {
-        let (logits, _) = self.forward_chunked(tokens, 1)?;
+        let (logits, _) = self.forward_chunked(tokens, 1, None)?;
         Ok(logits)
     }
 }
 
 // A second construction path used by tests and tools: rebuild from the
-// flat tensors this backend itself exported.
+// flat tensors this backend itself exported (worker count preserved).
 impl Clone for ReferenceBackend {
     fn clone(&self) -> ReferenceBackend {
         ReferenceBackend::from_tensors(self.cfg.clone(),
                                        self.params_host.clone())
             .expect("round-trip of own params")
+            .with_threads(self.threads)
     }
 }
 
@@ -718,6 +947,60 @@ mod tests {
         let mut tensors = b.params_host.clone();
         tensors.swap(0, 1);
         assert!(b.load_weights(tensors).is_err());
+    }
+
+    #[test]
+    fn prefill_continue_chains_bitwise() {
+        // prefill(16) then prefill_continue(next 16) must equal one joint
+        // prefill(32) bitwise: same chunk grid, carry transported through
+        // the O(1) cache exactly
+        let b = tiny();
+        let toks: Vec<i32> = (0..32).map(|i| ((i * 37 + 11) % 512) as i32)
+            .collect();
+        let joint = b.prefill(&toks, 1).unwrap();
+        let first = b.prefill(&toks[..16], 1).unwrap();
+        let cont = b.prefill_continue(&first.cache, &toks[16..], 1)
+            .unwrap();
+        let v = b.cfg().vocab_size;
+        let jl = joint.logits.as_f32();
+        assert_eq!(&jl[..16 * v], &first.logits.as_f32()[..]);
+        assert_eq!(&jl[16 * v..], &cont.logits.as_f32()[..]);
+        assert_eq!(joint.cache.ssm.as_f32(), cont.cache.ssm.as_f32());
+        assert_eq!(joint.cache.conv.as_f32(), cont.cache.conv.as_f32());
+    }
+
+    #[test]
+    fn prefill_continue_checks_shapes() {
+        let b = tiny();
+        let pre = b.prefill(&[1; 16], 1).unwrap();
+        // wrong cache batch
+        assert!(b.prefill_continue(&pre.cache, &[1; 32], 2).is_err());
+        // non-chunk-multiple continuation
+        assert!(b.prefill_continue(&pre.cache, &[1; 7], 1).is_err());
+    }
+
+    #[test]
+    fn thread_count_is_invisible_in_results() {
+        // worker count must never change a single bit of output
+        let serial = tiny().with_threads(1);
+        let parallel = tiny().with_threads(4);
+        assert_eq!(serial.threads(), 1);
+        assert_eq!(parallel.threads(), 4);
+        let toks: Vec<i32> = (0..32).map(|i| ((i * 13 + 7) % 512) as i32)
+            .collect();
+        let a = serial.prefill(&toks, 1).unwrap();
+        let b = parallel.prefill(&toks, 1).unwrap();
+        assert_eq!(a.logits.as_f32(), b.logits.as_f32());
+        assert_eq!(a.cache.ssm.as_f32(), b.cache.ssm.as_f32());
+        let ts: Vec<i32> = (0..8).collect();
+        let mut cache = CacheState::zeros(serial.cfg(), 8);
+        for s in 0..8 {
+            cache.copy_slot_from(s, &a.cache, 0);
+        }
+        let sa = serial.decode_step(&cache, &ts).unwrap();
+        let sb = parallel.decode_step(&cache, &ts).unwrap();
+        assert_eq!(sa.logits.as_f32(), sb.logits.as_f32());
+        assert_eq!(sa.cache.ssm.as_f32(), sb.cache.ssm.as_f32());
     }
 
     #[test]

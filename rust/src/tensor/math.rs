@@ -12,22 +12,42 @@
 pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize)
     -> Vec<f32> {
     assert_eq!(a.len(), m * k, "matmul: A shape");
-    assert_eq!(b.len(), k * n, "matmul: B shape");
     let mut c = vec![0.0f32; m * n];
+    matmul_acc_strided(a, k, b, m, k, n, &mut c, n);
+    c
+}
+
+/// C (m,n) += A (m,k) @ B (k,n) with row strides: A rows start `lda`
+/// apart, C rows `ldc` apart (both row-major views into larger buffers,
+/// e.g. a column block of a packed projection output). Accumulating into
+/// C lets residual adds fuse into the contraction.
+///
+/// Same `ikj` loop order as [`matmul`] (the inner loop streams one A
+/// scalar against one B row), and each C row is produced independently —
+/// so any row-block decomposition of this call is bitwise identical to
+/// the monolithic call, which is what the threadpool-parallel reference
+/// backend relies on (DESIGN.md §2.2).
+pub fn matmul_acc_strided(a: &[f32], lda: usize, b: &[f32], m: usize,
+                          k: usize, n: usize, c: &mut [f32], ldc: usize) {
+    assert!(lda >= k && ldc >= n, "matmul_acc_strided: stride < row");
+    assert!(m == 0 || a.len() >= (m - 1) * lda + k,
+            "matmul_acc_strided: A view");
+    assert!(m == 0 || c.len() >= (m - 1) * ldc + n,
+            "matmul_acc_strided: C view");
+    assert_eq!(b.len(), k * n, "matmul_acc_strided: B shape");
     for i in 0..m {
-        let crow = &mut c[i * n..(i + 1) * n];
-        for p in 0..k {
+        let arow = &a[i * lda..i * lda + k];
+        let crow = &mut c[i * ldc..i * ldc + n];
+        for (p, &aip) in arow.iter().enumerate() {
             // no zero-skip: 0·NaN must propagate exactly like XLA's dense
             // matmul so corrupt weights surface identically on both
             // backends
-            let aip = a[i * k + p];
             let brow = &b[p * n..(p + 1) * n];
             for (cv, bv) in crow.iter_mut().zip(brow) {
                 *cv += aip * bv;
             }
         }
     }
-    c
 }
 
 /// C (m,n) = A (m,k) @ Bᵀ where B is (n,k) row-major — dot-product form,
@@ -35,15 +55,29 @@ pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize)
 pub fn matmul_bt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize)
     -> Vec<f32> {
     assert_eq!(a.len(), m * k, "matmul_bt: A shape");
-    assert_eq!(b.len(), n * k, "matmul_bt: B shape");
     let mut c = vec![0.0f32; m * n];
+    matmul_bt_acc_strided(a, k, b, m, k, n, &mut c, n);
+    c
+}
+
+/// C (m,n) += A (m,k) @ Bᵀ with row strides (see [`matmul_acc_strided`]);
+/// B is (n,k) row-major. Row-blocked decompositions are bitwise identical
+/// to the monolithic call.
+pub fn matmul_bt_acc_strided(a: &[f32], lda: usize, b: &[f32], m: usize,
+                             k: usize, n: usize, c: &mut [f32],
+                             ldc: usize) {
+    assert!(lda >= k && ldc >= n, "matmul_bt_acc_strided: stride < row");
+    assert!(m == 0 || a.len() >= (m - 1) * lda + k,
+            "matmul_bt_acc_strided: A view");
+    assert!(m == 0 || c.len() >= (m - 1) * ldc + n,
+            "matmul_bt_acc_strided: C view");
+    assert_eq!(b.len(), n * k, "matmul_bt_acc_strided: B shape");
     for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
+        let arow = &a[i * lda..i * lda + k];
         for j in 0..n {
-            c[i * n + j] = dot(arow, &b[j * k..(j + 1) * k]);
+            c[i * ldc + j] += dot(arow, &b[j * k..(j + 1) * k]);
         }
     }
-    c
 }
 
 /// Dot product with f32 accumulation (matches XLA's f32 "highest" path on
@@ -75,6 +109,22 @@ pub fn silu(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
 }
 
+/// SiLU over a whole buffer in place (fused row form of [`silu`]).
+pub fn silu_rows(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = silu(*v);
+    }
+}
+
+/// Fused gate: `x ⊙= silu(z)` elementwise over rows — the Mamba-2 output
+/// gate, applied before the norm (see [`gated_rmsnorm_rows`]).
+pub fn silu_gate_rows(x: &mut [f32], z: &[f32]) {
+    debug_assert_eq!(x.len(), z.len());
+    for (xv, zv) in x.iter_mut().zip(z) {
+        *xv *= silu(*zv);
+    }
+}
+
 /// RMSNorm one row in place: `x * rsqrt(mean(x²) + eps) * w`, variance
 /// reduction in f32 (paper §3.3).
 pub fn rmsnorm_row(x: &mut [f32], w: &[f32], eps: f32) {
@@ -93,11 +143,8 @@ pub fn rmsnorm_row(x: &mut [f32], w: &[f32], eps: f32) {
 /// norm, gate applied pre-normalisation.
 pub fn gated_rmsnorm_rows(x: &mut [f32], z: &[f32], w: &[f32], d: usize,
                           eps: f32) {
-    debug_assert_eq!(x.len(), z.len());
     debug_assert_eq!(x.len() % d, 0);
-    for (xv, zv) in x.iter_mut().zip(z) {
-        *xv *= silu(*zv);
-    }
+    silu_gate_rows(x, z);
     for row in x.chunks_exact_mut(d) {
         rmsnorm_row(row, w, eps);
     }
@@ -156,5 +203,122 @@ mod tests {
         let mut y = vec![1.0f32, 2.0];
         axpy(2.0, &[10.0, 20.0], &mut y);
         assert_eq!(y, vec![21.0, 42.0]);
+    }
+
+    // ------------------------- property sweeps (strided vs scalar) ------
+    //
+    // Seeded random-shape sweeps pinning every batched/strided helper to
+    // the plain scalar path bitwise — the contract the parallel reference
+    // backend's block decompositions rest on.
+
+    use crate::util::prng::Rng;
+
+    fn rand_vec(rng: &mut Rng, len: usize) -> Vec<f32> {
+        (0..len).map(|_| (rng.normal() * 1.5) as f32).collect()
+    }
+
+    /// Small-integer-valued floats: every partial sum below is exactly
+    /// representable, so accumulation grouping cannot perturb equality.
+    fn rand_int_vec(rng: &mut Rng, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.below(9) as f32 - 4.0).collect()
+    }
+
+    #[test]
+    fn prop_strided_matmul_matches_dense() {
+        let mut rng = Rng::new(0xA11CE);
+        for _ in 0..60 {
+            let m = 1 + rng.below(7) as usize;
+            let k = 1 + rng.below(9) as usize;
+            let n = 1 + rng.below(9) as usize;
+            let lda = k + rng.below(4) as usize;
+            let ldc = n + rng.below(4) as usize;
+            // strided views into larger buffers, slack filled with noise
+            // that a correct kernel must never read or write;
+            // integer-valued entries keep `cinit + want` exact under any
+            // accumulation order
+            let abuf = rand_int_vec(&mut rng, m * lda);
+            let mut cbuf = rand_int_vec(&mut rng, m * ldc);
+            let cinit = cbuf.clone();
+            let b = rand_int_vec(&mut rng, k * n);
+            let a_dense: Vec<f32> = (0..m)
+                .flat_map(|i| abuf[i * lda..i * lda + k].to_vec())
+                .collect();
+            let want = matmul(&a_dense, &b, m, k, n);
+            matmul_acc_strided(&abuf, lda, &b, m, k, n, &mut cbuf, ldc);
+            for i in 0..m {
+                for j in 0..ldc {
+                    let got = cbuf[i * ldc + j];
+                    if j < n {
+                        assert_eq!(got,
+                                   cinit[i * ldc + j] + want[i * n + j],
+                                   "acc at ({i},{j})");
+                    } else {
+                        assert_eq!(got, cinit[i * ldc + j],
+                                   "slack clobbered at ({i},{j})");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_strided_matmul_bt_matches_dense() {
+        let mut rng = Rng::new(0xB0B);
+        for _ in 0..60 {
+            let m = 1 + rng.below(7) as usize;
+            let k = 1 + rng.below(9) as usize;
+            let n = 1 + rng.below(9) as usize;
+            let lda = k + rng.below(4) as usize;
+            let abuf = rand_vec(&mut rng, m * lda);
+            let bt = rand_vec(&mut rng, n * k);
+            let a_dense: Vec<f32> = (0..m)
+                .flat_map(|i| abuf[i * lda..i * lda + k].to_vec())
+                .collect();
+            let want = matmul_bt(&a_dense, &bt, m, k, n);
+            let mut c = vec![0.0f32; m * n];
+            matmul_bt_acc_strided(&abuf, lda, &bt, m, k, n, &mut c, n);
+            assert_eq!(c, want);
+        }
+    }
+
+    #[test]
+    fn prop_row_blocked_matmul_is_bitwise_serial() {
+        // the exact decomposition pmm/pbt use: split rows at an arbitrary
+        // point, run each block independently, compare bitwise
+        let mut rng = Rng::new(0xCAFE);
+        for _ in 0..40 {
+            let m = 2 + rng.below(10) as usize;
+            let k = 1 + rng.below(12) as usize;
+            let n = 1 + rng.below(12) as usize;
+            let a = rand_vec(&mut rng, m * k);
+            let b = rand_vec(&mut rng, k * n);
+            let whole = matmul(&a, &b, m, k, n);
+            let split = 1 + rng.below(m as u64 - 1) as usize;
+            let mut blocked = vec![0.0f32; m * n];
+            matmul_acc_strided(&a[..split * k], k, &b, split, k, n,
+                               &mut blocked[..split * n], n);
+            matmul_acc_strided(&a[split * k..], k, &b, m - split, k, n,
+                               &mut blocked[split * n..], n);
+            assert_eq!(blocked, whole, "m={m} split={split}");
+        }
+    }
+
+    #[test]
+    fn prop_silu_rows_and_gate_match_scalar() {
+        let mut rng = Rng::new(0x5110);
+        for _ in 0..40 {
+            let len = rng.below(64) as usize;
+            let x0 = rand_vec(&mut rng, len);
+            let z = rand_vec(&mut rng, len);
+            let mut rows = x0.clone();
+            silu_rows(&mut rows);
+            let want: Vec<f32> = x0.iter().map(|&v| silu(v)).collect();
+            assert_eq!(rows, want);
+            let mut gated = x0.clone();
+            silu_gate_rows(&mut gated, &z);
+            let want: Vec<f32> = x0.iter().zip(&z)
+                .map(|(&xv, &zv)| xv * silu(zv)).collect();
+            assert_eq!(gated, want);
+        }
     }
 }

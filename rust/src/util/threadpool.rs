@@ -1,5 +1,12 @@
 //! Fixed-size thread pool (tokio is unavailable offline; the server and the
 //! batch workload drivers use blocking threads over a shared queue).
+//!
+//! Besides fire-and-forget [`ThreadPool::execute`] and the owned-data
+//! [`ThreadPool::map`], the pool offers [`ThreadPool::scoped_chunks`]: a
+//! data-parallel loop over disjoint `&mut` chunks whose closures may
+//! borrow the caller's stack (rayon-style scoping, joined before return).
+//! The reference backend's batched decode and parallel prefill are built
+//! on it (DESIGN.md §2.2).
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -74,6 +81,78 @@ impl ThreadPool {
     pub fn size(&self) -> usize {
         self.handles.len()
     }
+
+    /// Scoped data-parallel loop: split `data` into contiguous chunks of
+    /// `chunk_len` elements, run `f(chunk_index, chunk)` for each on the
+    /// pool, and return only after every chunk finished. Because the call
+    /// joins before returning, `f` (and the chunks) may borrow from the
+    /// caller's stack — this is the offline stand-in for
+    /// `rayon::par_chunks_mut`.
+    ///
+    /// Chunk `i` covers elements `[i*chunk_len, (i+1)*chunk_len)` (the
+    /// last chunk may be shorter), so a row-blocked kernel that writes
+    /// each output element from exactly one chunk is bitwise identical to
+    /// its serial form regardless of pool size.
+    ///
+    /// A single chunk (or an empty slice) runs inline on the caller.
+    ///
+    /// # Panics / aborts
+    /// If a worker dies mid-job (a panic inside `f`), the scope can no
+    /// longer prove the borrowed frames are unreachable from other live
+    /// jobs, so the process aborts instead of unwinding into a potential
+    /// use-after-free.
+    pub fn scoped_chunks<T, F>(&self, data: &mut [T], chunk_len: usize,
+                               f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        assert!(chunk_len > 0, "scoped_chunks: zero chunk_len");
+        if data.is_empty() {
+            return;
+        }
+        if data.len() <= chunk_len {
+            f(0, data);
+            return;
+        }
+        let njobs = data.len().div_ceil(chunk_len);
+        let (dtx, drx) = mpsc::channel::<()>();
+        {
+            let fref: &(dyn Fn(usize, &mut [T]) + Sync) = &f;
+            for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
+                let dtx = dtx.clone();
+                let job: Box<dyn FnOnce() + Send + '_> =
+                    Box::new(move || {
+                        fref(i, chunk);
+                        let _ = dtx.send(());
+                    });
+                // SAFETY: the only lifetime in `job` is the borrow of the
+                // caller's stack (`fref`, `chunk`). The completion channel
+                // below is drained for every job before this function
+                // returns, and a lost worker aborts the process, so the
+                // borrow can never outlive the frame it points into. The
+                // transmute only erases the lifetime bound; the trait
+                // object's layout is unchanged.
+                let job: Job = unsafe {
+                    std::mem::transmute::<
+                        Box<dyn FnOnce() + Send + '_>,
+                        Box<dyn FnOnce() + Send + 'static>,
+                    >(job)
+                };
+                if self.tx.send(Msg::Run(job)).is_err() {
+                    std::process::abort();
+                }
+            }
+        }
+        drop(dtx);
+        for _ in 0..njobs {
+            if drx.recv().is_err() {
+                // a worker died holding (or before signalling) a scoped
+                // job — unwinding past the borrowed frame would be unsound
+                std::process::abort();
+            }
+        }
+    }
 }
 
 impl Drop for ThreadPool {
@@ -118,5 +197,57 @@ mod tests {
         let pool = ThreadPool::new(2);
         let out: Vec<i32> = pool.map(Vec::<i32>::new(), |x| x);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn scoped_chunks_writes_disjoint_blocks() {
+        let pool = ThreadPool::new(4);
+        // borrow a stack-local read-only table from every job
+        let base: Vec<usize> = (0..103).collect();
+        let mut out = vec![0usize; 103];
+        pool.scoped_chunks(&mut out, 10, |i, chunk| {
+            for (j, v) in chunk.iter_mut().enumerate() {
+                *v = base[i * 10 + j] * 3;
+            }
+        });
+        assert_eq!(out, (0..103).map(|x| x * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scoped_chunks_single_chunk_runs_inline() {
+        let pool = ThreadPool::new(2);
+        let mut out = vec![0u32; 4];
+        let caller = thread::current().id();
+        pool.scoped_chunks(&mut out, 8, |_, chunk| {
+            assert_eq!(thread::current().id(), caller);
+            chunk.fill(7);
+        });
+        assert_eq!(out, vec![7; 4]);
+        let mut empty: Vec<u32> = Vec::new();
+        pool.scoped_chunks(&mut empty, 8, |_, _| unreachable!());
+    }
+
+    #[test]
+    fn scoped_chunks_matches_serial_blocking() {
+        // chunk boundaries are a pure function of (len, chunk_len):
+        // the parallel result equals a serial loop over the same blocks
+        let pool = ThreadPool::new(3);
+        for len in [1usize, 7, 30, 64] {
+            for chunk in [1usize, 3, 8, 64] {
+                let mut par = vec![0usize; len];
+                pool.scoped_chunks(&mut par, chunk, |i, c| {
+                    for (j, v) in c.iter_mut().enumerate() {
+                        *v = i * 1000 + j;
+                    }
+                });
+                let mut ser = vec![0usize; len];
+                for (i, c) in ser.chunks_mut(chunk).enumerate() {
+                    for (j, v) in c.iter_mut().enumerate() {
+                        *v = i * 1000 + j;
+                    }
+                }
+                assert_eq!(par, ser, "len={len} chunk={chunk}");
+            }
+        }
     }
 }

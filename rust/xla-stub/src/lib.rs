@@ -1,0 +1,193 @@
+//! Compile-only stub of the `xla` crate API surface that
+//! `mamba2-serve --features xla` consumes (see `rust/Cargo.toml`).
+//!
+//! Exactly the types and signatures used by `runtime/session.rs` and
+//! `tensor/mod.rs`, with every fallible entry point returning a clean
+//! "stub" error at runtime and no native code anywhere. This keeps the
+//! whole xla-gated path *compiling* in the hermetic environment — CI's
+//! `cargo check --features xla --all-targets` — so the feature can't
+//! silently rot, while the real backend still requires swapping in the
+//! actual binding (github.com/LaurentMazare/xla-rs) plus its
+//! `xla_extension` native library.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error for every stub entry point.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn stub<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "xla stub: {what} is compile-only — swap rust/xla-stub for the \
+         real `xla` crate (see rust/Cargo.toml) to execute the XLA \
+         backend"
+    )))
+}
+
+/// Element types the binding can move across the host/device boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S32,
+    S64,
+    U8,
+    U32,
+    U64,
+    F16,
+    Bf16,
+    F32,
+    F64,
+}
+
+/// Host element types `Literal::vec1` / `Literal::to_vec` accept.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+}
+
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Host literal (stub: carries nothing).
+#[derive(Debug, Clone)]
+pub struct Literal {}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_vals: &[T]) -> Literal {
+        Literal {}
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        stub("Literal::reshape")
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        stub("Literal::array_shape")
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        stub("Literal::to_vec")
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        stub("Literal::to_tuple")
+    }
+}
+
+#[derive(Debug)]
+pub struct HloModuleProto {}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P)
+        -> Result<HloModuleProto> {
+        stub("HloModuleProto::from_text_file")
+    }
+}
+
+#[derive(Debug)]
+pub struct XlaComputation {}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {}
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtDevice {}
+
+#[derive(Debug)]
+pub struct PjRtBuffer {}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        stub("PjRtBuffer::to_literal_sync")
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L])
+        -> Result<Vec<Vec<PjRtBuffer>>> {
+        stub("PjRtLoadedExecutable::execute")
+    }
+
+    pub fn execute_b(&self, _args: &[&PjRtBuffer])
+        -> Result<Vec<Vec<PjRtBuffer>>> {
+        stub("PjRtLoadedExecutable::execute_b")
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtClient {}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        stub("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "xla-stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation)
+        -> Result<PjRtLoadedExecutable> {
+        stub("PjRtClient::compile")
+    }
+
+    pub fn buffer_from_host_literal(&self, _device: Option<&PjRtDevice>,
+                                    _lit: &Literal) -> Result<PjRtBuffer> {
+        stub("PjRtClient::buffer_from_host_literal")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_errors_cleanly() {
+        assert!(PjRtClient::cpu().unwrap_err().to_string()
+            .contains("xla stub"));
+        assert!(HloModuleProto::from_text_file("/nope").is_err());
+        let lit = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(lit.reshape(&[2]).is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+        assert!(lit.to_tuple().is_err());
+        assert_eq!(<i32 as NativeType>::TY, ElementType::S32);
+    }
+}
