@@ -10,7 +10,10 @@
 //!     matmul row blocks across the threadpool), and CI's `perf-smoke`
 //!     job fails if it drops below 2×,
 //!   * chunked-parallel prefill: tokens/s at L ∈ {512, 2048}, plus
-//!     analytic MFU/HBU against the host-CPU roofline.
+//!     analytic MFU/HBU against the host-CPU roofline,
+//!   * the plan cache (schema 1.1): plans built, cache hits and total
+//!     planning time across the whole run — "build plan once, execute
+//!     many" made measurable (zero block on planner-less backends).
 //!
 //! `--quick` trims the measurement protocol for CI smoke runs (the sweep
 //! itself is never trimmed — the schema pins it). `--check` exits
@@ -24,7 +27,7 @@ use mamba2_serve::bench_support::{batch_speedup, decode_point,
 use mamba2_serve::runtime::{reference, Backend, CacheState};
 use mamba2_serve::util::benchkit::{Bench, Table};
 
-const TAG: &str = "pr3";
+const TAG: &str = "pr4";
 const MODEL: &str = "sim-130m";
 const DECODE_BATCHES: [usize; 3] = [1, 4, 16];
 const PREFILL_LENS: [usize; 2] = [512, 2048];
@@ -109,8 +112,13 @@ fn main() {
     }
     tp.print();
 
+    let plan_stats = session.plan_stats();
+    if let Some(ps) = plan_stats {
+        eprintln!("  plan cache: {} built, {} hits, {:.2} ms planning",
+                  ps.built, ps.hits, ps.planning_ms);
+    }
     let doc = trajectory_json(TAG, MODEL, session.name(), threads, quick(),
-                              &decode, &prefill);
+                              &decode, &prefill, plan_stats);
     let path = write_trajectory(TAG, &doc).unwrap_or_else(|e| {
         eprintln!("cannot write trajectory: {e}");
         std::process::exit(1);

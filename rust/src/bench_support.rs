@@ -13,7 +13,7 @@
 
 use crate::perf::{hbu, mfu, CPU_HOST};
 use crate::runtime::{open_backend as open_backend_checked, Backend,
-                     ConfigInfo, CostInfo};
+                     ConfigInfo, CostInfo, PlanStats};
 use crate::util::error::{Context, Result};
 use crate::util::json::Json;
 use crate::{anyhow, bail};
@@ -125,7 +125,12 @@ pub fn fmt_pct(x: f64) -> String {
 /// Schema version of the `BENCH_*.json` perf-trajectory files. Bump ONLY
 /// with a migration note in README §Benchmarks — the whole point of these
 /// files is cross-PR comparability.
-pub const BENCH_SCHEMA_VERSION: f64 = 1.0;
+///
+/// 1.0 → 1.1 (PR 4): added the mandatory `plan_cache` block
+/// (`plans_built`, `plan_hits`, `planning_ms`) — the lowering
+/// pipeline's "build plan once, execute many" economics. Zero-valued
+/// on backends without a planner.
+pub const BENCH_SCHEMA_VERSION: f64 = 1.1;
 
 /// One decode measurement: `tokens_per_s` is generated tokens per
 /// wall-second (`batch / mean step seconds`), `ms_per_step` the mean
@@ -188,11 +193,16 @@ pub fn batch_speedup(decode: &[DecodePoint]) -> f64 {
 
 /// Assemble the schema-pinned trajectory document. Field names and units
 /// are part of the cross-PR contract checked by
-/// [`validate_trajectory_json`].
+/// [`validate_trajectory_json`]. `plan` carries the backend's
+/// plan-cache counters (`Backend::plan_stats`); backends without a
+/// planner report the zero block.
+#[allow(clippy::too_many_arguments)]
 pub fn trajectory_json(tag: &str, model: &str, backend: &str,
                        threads: usize, quick: bool,
-                       decode: &[DecodePoint], prefill: &[PrefillPoint])
+                       decode: &[DecodePoint], prefill: &[PrefillPoint],
+                       plan: Option<PlanStats>)
     -> Json {
+    let ps = plan.unwrap_or_default();
     let dec = decode.iter().map(|p| Json::obj(vec![
         ("batch", Json::num(p.batch as f64)),
         ("ms_per_step", Json::num(p.ms_per_step)),
@@ -217,6 +227,11 @@ pub fn trajectory_json(tag: &str, model: &str, backend: &str,
         ("decode", Json::Arr(dec)),
         ("prefill", Json::Arr(pre)),
         ("batch_speedup_b16_vs_b1", Json::num(batch_speedup(decode))),
+        ("plan_cache", Json::obj(vec![
+            ("plans_built", Json::num(ps.built as f64)),
+            ("plan_hits", Json::num(ps.hits as f64)),
+            ("planning_ms", Json::num(ps.planning_ms)),
+        ])),
     ])
 }
 
@@ -280,6 +295,15 @@ pub fn validate_trajectory_json(j: &Json) -> Result<()> {
     if j.get("batch_speedup_b16_vs_b1").and_then(Json::as_f64).is_none() {
         bail!("BENCH json: missing number \"batch_speedup_b16_vs_b1\"");
     }
+    let pc = j.get("plan_cache")
+        .context("BENCH json: missing object \"plan_cache\"")?;
+    for key in ["plans_built", "plan_hits", "planning_ms"] {
+        let val = pc.get(key).and_then(Json::as_f64).with_context(
+            || format!("BENCH json: plan_cache missing number {key:?}"))?;
+        if !val.is_finite() || val < 0.0 {
+            bail!("BENCH json: plan_cache.{key} = {val} not finite ≥ 0");
+        }
+    }
     Ok(())
 }
 
@@ -321,8 +345,10 @@ mod tests {
                     &cfg, "prefill", Some(l), 1);
                 prefill_point(&cost, l, l as f64 * 1e-4)
             }).collect();
+        let plan = PlanStats { built: 6, hits: 40, planning_ms: 1.5,
+                               cached: 6 };
         trajectory_json("test", "sim-130m", "reference", 4, true,
-                        &decode, &prefill)
+                        &decode, &prefill, Some(plan))
     }
 
     #[test]
@@ -343,7 +369,7 @@ mod tests {
         // keeps BENCH_*.json comparable across PRs
         for key in ["schema_version", "pr", "model", "backend", "threads",
                     "quick", "decode", "prefill",
-                    "batch_speedup_b16_vs_b1"] {
+                    "batch_speedup_b16_vs_b1", "plan_cache"] {
             let j = sample_doc();
             let mut m = j.as_obj().unwrap().clone();
             m.remove(key);
@@ -368,6 +394,44 @@ mod tests {
         dec2[0] = Json::Obj(p0);
         m.insert("decode".into(), Json::Arr(dec2));
         assert!(validate_trajectory_json(&Json::Obj(m)).is_err());
+    }
+
+    #[test]
+    fn trajectory_schema_pins_plan_cache_fields() {
+        // each plan-cache counter is individually mandatory (1.1)
+        for key in ["plans_built", "plan_hits", "planning_ms"] {
+            let j = sample_doc();
+            let mut m = j.as_obj().unwrap().clone();
+            let mut pc = m.get("plan_cache").unwrap()
+                .as_obj().unwrap().clone();
+            pc.remove(key);
+            m.insert("plan_cache".into(), Json::Obj(pc));
+            let e = validate_trajectory_json(&Json::Obj(m))
+                .expect_err(&format!("must reject missing {key}"));
+            assert!(e.to_string().contains("plan_cache"), "{e}");
+        }
+        // negative counters are schema violations, not measurements
+        let j = sample_doc();
+        let mut m = j.as_obj().unwrap().clone();
+        let mut pc = m.get("plan_cache").unwrap()
+            .as_obj().unwrap().clone();
+        pc.insert("planning_ms".into(), Json::num(-1.0));
+        m.insert("plan_cache".into(), Json::Obj(pc));
+        assert!(validate_trajectory_json(&Json::Obj(m)).is_err());
+        // a planner-less backend reports the zero block and validates
+        let cfg = crate::runtime::sim_config("sim-130m").unwrap();
+        let cost = crate::runtime::analytic_cost(
+            &cfg, "decode_step", None, 1);
+        let decode = vec![decode_point(&cost, 1, 0.004),
+                          decode_point(&cost, 16, 0.001)];
+        let pcost = crate::runtime::analytic_cost(
+            &cfg, "prefill", Some(512), 1);
+        let prefill = vec![prefill_point(&pcost, 512, 0.05)];
+        let j = trajectory_json("test", "sim-130m", "xla", 1, true,
+                                &decode, &prefill, None);
+        validate_trajectory_json(&j).unwrap();
+        assert_eq!(j.at(&["plan_cache", "plans_built"])
+                   .and_then(Json::as_f64), Some(0.0));
     }
 
     #[test]

@@ -158,6 +158,11 @@ impl Engine {
             exe_batch
         };
         let cache = CacheState::zeros(&model_cfg, cache_width);
+        // plan warm-up at shape-bucket registration: planning backends
+        // build the schedule for every prefill bucket and decode width
+        // up front, so the first requests never pay planning latency
+        // (no-op on backends without a planner)
+        session.warm_up(slots);
         let mut eng = Engine {
             session,
             batcher: Batcher::new(slots),

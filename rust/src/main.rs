@@ -43,7 +43,21 @@ fn main() -> Result<()> {
         .opt("artifacts", "", "artifacts dir (default: M2_ARTIFACTS or \
               <crate>/artifacts; xla backend only)")
         .opt("weights", "", "optional trained checkpoint (.mbt)")
+        .opt("plan", "on", "plan-driven lowering: on|off (off = the \
+              legacy hand-scheduled forward; reference backend only)")
         .parse_env();
+
+    // the flag is authoritative: it overwrites any inherited M2_PLAN
+    // (backends read the env at open time), and bad values fail loudly
+    // instead of silently meaning "on"
+    match cli.get("plan").as_str() {
+        "on" => std::env::set_var("M2_PLAN", "on"),
+        "off" => std::env::set_var("M2_PLAN", "off"),
+        other => {
+            eprintln!("--plan must be on|off (got {other:?})");
+            std::process::exit(2);
+        }
+    }
 
     let dir = if cli.get("artifacts").is_empty() {
         artifacts_dir()
@@ -62,6 +76,13 @@ fn main() -> Result<()> {
             log_info!("backend={} platform={} model={} ({:.1}M params)",
                       backend.name(), backend.platform(), model,
                       backend.cfg().n_params_total as f64 / 1e6);
+            log_info!("lowering: {}",
+                      if backend.plan_stats().is_some() {
+                          "plan-driven (build once, execute many; \
+                           --plan off for the hand-scheduled oracle)"
+                      } else {
+                          "hand-scheduled / compiled executables"
+                      });
         }
         if !cli.get("weights").is_empty() {
             let w = mamba2_serve::tensor::load_mbt(

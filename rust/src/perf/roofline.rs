@@ -33,6 +33,18 @@ impl Roofline {
         (self.peak_tflops * 1e12) / (self.peak_gbps * 1e9)
     }
 
+    /// Achievable per-worker peaks `(flops/s, bytes/s)` when `n`
+    /// workers divide the chip evenly — the planner's per-core model
+    /// for host threadpools (`runtime::plan::planner`): fanning a
+    /// contraction out over `j ≤ n` workers buys `j×` of these shares,
+    /// while operands every worker re-reads (a shared weight matrix)
+    /// still stream at the full-chip rate once.
+    pub fn worker_peaks(&self, n: usize) -> (f64, f64) {
+        let n = n.max(1) as f64;
+        (self.peak_tflops * 1e12 * self.compute_efficiency / n,
+         self.peak_gbps * 1e9 * self.bandwidth_efficiency / n)
+    }
+
     /// Minimum execution time for (flops, bytes) under this roofline.
     pub fn time_for(&self, flops: f64, bytes: f64) -> f64 {
         let t_compute =
@@ -109,5 +121,15 @@ mod tests {
     fn launch_overhead_floors_small_programs() {
         let t = TPU_V6E.time_for(1.0, 1.0);
         assert!(t >= 12e-6);
+    }
+
+    #[test]
+    fn worker_peaks_divide_the_chip() {
+        let (f1, b1) = CPU_HOST.worker_peaks(8);
+        let (fc, bc) = CPU_HOST.worker_peaks(1);
+        assert!((fc / f1 - 8.0).abs() < 1e-9);
+        assert!((bc / b1 - 8.0).abs() < 1e-9);
+        // degenerate worker counts clamp instead of dividing by zero
+        assert_eq!(CPU_HOST.worker_peaks(0), CPU_HOST.worker_peaks(1));
     }
 }

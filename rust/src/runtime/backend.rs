@@ -229,11 +229,38 @@ pub trait Backend: Send {
 
     /// Cost of one invocation of `entrypoint` at `bucket`/`batch`, for the
     /// MFU/HBU exhibits (paper Eqs. 4–5). The XLA backend reports the
-    /// compiler's cost analysis from the manifest; the default is the
-    /// analytic model of `perf::sim` over the same config shapes.
+    /// compiler's cost analysis from the manifest; the reference backend
+    /// reads the `CostInfo` hoisted onto its cached plan (computed once
+    /// at plan build); the default is the analytic model of `perf::sim`
+    /// over the same config shapes.
     fn cost(&self, entrypoint: &str, bucket: Option<usize>, batch: usize)
         -> CostInfo {
         analytic_cost(self.cfg(), entrypoint, bucket, batch)
+    }
+
+    /// Pre-build whatever per-shape state first requests would otherwise
+    /// pay for — for planning backends, the schedule of every prefill
+    /// bucket plus the decode widths up to `max_decode_width`. The
+    /// engine calls this once at shape-bucket registration (start-up).
+    /// Default: nothing to warm.
+    fn warm_up(&self, max_decode_width: usize) {
+        let _ = max_decode_width;
+    }
+
+    /// Plan-cache counters (plans built, hits, planning time) for the
+    /// perf trajectory; `None` on backends without a planner.
+    fn plan_stats(&self) -> Option<super::plan::PlanStats> {
+        None
+    }
+
+    /// Textual dump of the plan for `(entrypoint, bucket, batch)` —
+    /// the lowering pipeline's introspection hook (README shows one;
+    /// `tests/goldens/` pins the default config's). `None` on backends
+    /// without a planner or for shapes the planner does not lower.
+    fn plan_dump(&self, entrypoint: &str, bucket: usize, batch: usize)
+        -> Option<String> {
+        let _ = (entrypoint, bucket, batch);
+        None
     }
 
     /// Continue a prefill from an existing cache over a further

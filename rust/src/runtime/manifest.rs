@@ -23,6 +23,24 @@ pub struct CostInfo {
     pub transcendentals: f64,
 }
 
+/// The schedule chosen for one entrypoint — recorded per executable so
+/// tooling can see *how* a lowering was scheduled, not just what it
+/// cost. The reference backend's planner fills one per plan
+/// (`runtime::plan`); AOT manifests may carry one per executable under
+/// an optional `"schedule"` key (the XLA compiler's analogue).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ScheduleInfo {
+    /// (seq, head, chunk) cells per dispatch in the chunk stages
+    /// (0 = not applicable, e.g. decode)
+    pub chunk_tile: usize,
+    /// contraction rows per row block (0 = everything serial)
+    pub row_block: usize,
+    /// worker fan-out the schedule was chosen for
+    pub fanout: usize,
+    /// fusion decisions taken, e.g. `residual.out_proj`
+    pub fused: Vec<String>,
+}
+
 #[derive(Debug, Clone, Default)]
 pub struct MemoryInfo {
     pub temp_bytes: u64,
@@ -55,6 +73,24 @@ pub struct ExecutableSpec {
     pub lower_seconds: f64,
     pub cpu_compile_seconds: f64,
     pub hlo_bytes: u64,
+    /// chosen schedule, when the producing compiler recorded one
+    pub schedule: Option<ScheduleInfo>,
+}
+
+/// Parse an executable's optional `"schedule"` record.
+fn schedule_from_json(s: &Json) -> ScheduleInfo {
+    let u = |k: &str| {
+        s.get(k).and_then(Json::as_u64).unwrap_or(0) as usize
+    };
+    ScheduleInfo {
+        chunk_tile: u("chunk_tile"),
+        row_block: u("row_block"),
+        fanout: u("fanout"),
+        fused: s.get("fused").and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(Json::as_str)
+                 .map(String::from).collect())
+            .unwrap_or_default(),
+    }
 }
 
 // --------------------------------------------------- built-in configs ----
@@ -309,6 +345,7 @@ impl Manifest {
                     .and_then(Json::as_f64).unwrap_or(0.0),
                 hlo_bytes: e.get("hlo_bytes").and_then(Json::as_u64)
                     .unwrap_or(0),
+                schedule: e.get("schedule").map(schedule_from_json),
             });
         }
 
@@ -407,6 +444,21 @@ mod tests {
         assert_eq!(Manifest::pick_bucket_ceil(&b, 100), Some(256));
         assert_eq!(Manifest::pick_bucket_ceil(&b, 300), Some(256));
         assert_eq!(Manifest::pick_bucket(&[], 5), None);
+    }
+
+    #[test]
+    fn schedule_record_parses() {
+        let j = Json::parse(
+            r#"{"chunk_tile": 24, "row_block": 64, "fanout": 8,
+                "fused": ["residual.out_proj"]}"#).unwrap();
+        let s = schedule_from_json(&j);
+        assert_eq!(s.chunk_tile, 24);
+        assert_eq!(s.row_block, 64);
+        assert_eq!(s.fanout, 8);
+        assert_eq!(s.fused, vec!["residual.out_proj".to_string()]);
+        // missing keys degrade to the empty schedule, not an error
+        let s = schedule_from_json(&Json::parse("{}").unwrap());
+        assert_eq!(s, ScheduleInfo::default());
     }
 
     #[test]

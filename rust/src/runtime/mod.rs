@@ -4,7 +4,10 @@
 //! * [`backend`] — the [`Backend`] contract (prefill / O(1) decode step /
 //!   decode loop / full forward) plus the host-side [`CacheState`]
 //!   interchange type and its slot operations.
-//! * [`reference`] — the hermetic pure-Rust SSD backend (default).
+//! * [`plan`] — the compiler-first lowering pipeline: einsum-op graph
+//!   IR, cost-driven planner, plan cache and executor (DESIGN.md §7).
+//! * [`reference`] — the hermetic pure-Rust SSD backend (default),
+//!   executing "build plan once, execute many" through [`plan`].
 //! * `session` — the PJRT/XLA backend over AOT HLO artifacts
 //!   (`--features xla`; see `Cargo.toml` for how to enable it).
 //! * [`manifest`] — model/executable metadata: the typed manifest.json
@@ -18,6 +21,7 @@
 
 pub mod backend;
 pub mod manifest;
+pub mod plan;
 pub mod reference;
 #[cfg(feature = "xla")]
 pub mod session;
@@ -25,7 +29,8 @@ pub mod session;
 pub use backend::{analytic_cost, argmax, argmax_last, Backend, CacheState,
                   PrefillOut, StepOut};
 pub use manifest::{sim_config, ConfigInfo, CostInfo, ExecutableSpec,
-                   Manifest};
+                   Manifest, ScheduleInfo};
+pub use plan::{Plan, PlanCache, PlanMode, PlanStats};
 pub use reference::ReferenceBackend;
 #[cfg(feature = "xla")]
 pub use session::{ModelSession, Runtime};

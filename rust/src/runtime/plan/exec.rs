@@ -1,0 +1,630 @@
+//! Plan executor: interprets a scheduled [`Plan`] over the
+//! `tensor::math` kernels (DESIGN.md §7).
+//!
+//! Bitwise-parity contract: every op reproduces the exact per-element
+//! scalar schedule of the hand-scheduled reference forward (the
+//! `M2_PLAN=off` oracle). The schedule annotations only move *where*
+//! each disjoint output block runs — contraction row blocks and
+//! chunk-cell groups are bitwise-invariant decompositions by
+//! construction (`tensor::math` property sweeps + DESIGN.md §2.2) — so
+//! planned execution is bit-identical to the oracle for every schedule
+//! the planner can emit. `tests/plan_parity.rs` pins this across shape
+//! buckets, batch sizes and worker counts.
+//!
+//! Buffers come from the plan's memory plan ([`super::ir::BufSpec`]):
+//! allocated once per execution, reused across layers (accumulating
+//! ops zero-fill first, which is bitwise identical to the oracle's
+//! fresh `vec![0.0; ..]` allocations). Ops move their output buffer out
+//! of the environment, read their inputs through shared borrows, and
+//! put the output back — the interpreter's loop is the whole control
+//! flow, everything else is data.
+
+use crate::bail;
+use crate::tensor::math::{add_assign, axpy, dot, gated_rmsnorm_rows,
+                          matmul_acc_strided, matmul_bt_acc_strided,
+                          rmsnorm_row, silu, silu_rows, softplus};
+use crate::tensor::Tensor;
+use crate::util::error::Result;
+use crate::util::threadpool::ThreadPool;
+
+use super::super::backend::{CacheState, StepOut};
+use super::super::reference::{write_f32, Params, NORM_EPS};
+use super::ir::{MatKind, Node, Op};
+use super::planner::Sched;
+use super::Plan;
+use crate::runtime::ConfigInfo;
+
+/// Everything one prefill execution reads besides the plan.
+pub struct PrefillCtx<'a> {
+    pub cfg: &'a ConfigInfo,
+    pub params: &'a Params,
+    pub pool: Option<&'a ThreadPool>,
+    pub tokens: &'a [i32],
+    pub batch: usize,
+    /// continuation seed: carry states + conv window from a prior cache
+    pub init: Option<&'a CacheState>,
+}
+
+/// Everything one decode execution reads besides the plan.
+pub struct DecodeCtx<'a> {
+    pub cfg: &'a ConfigInfo,
+    pub params: &'a Params,
+    pub pool: Option<&'a ThreadPool>,
+    pub tokens: &'a [i32],
+    pub cache: &'a CacheState,
+}
+
+/// Scheduled `C += A @ B` over contiguous row blocks — the planned form
+/// of the reference backend's `pmm_acc` (same scoped-chunks
+/// decomposition, row-block size from the plan instead of a hard-coded
+/// threshold + fan-out). Bitwise-identical to the serial contraction
+/// for any block size.
+#[allow(clippy::too_many_arguments)]
+fn mm_acc(pool: Option<&ThreadPool>, sched: Sched, a: &[f32], lda: usize,
+          b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    debug_assert_eq!(c.len(), m * n);
+    match (pool, sched) {
+        (Some(pool), Sched::RowBlock { rows: rb, .. }) if rb < m => {
+            pool.scoped_chunks(c, rb * n, |i, cblk| {
+                let lo = i * rb;
+                let rows = cblk.len() / n;
+                matmul_acc_strided(&a[lo * lda..], lda, b, rows, k, n,
+                                   cblk, n);
+            });
+        }
+        _ => matmul_acc_strided(a, lda, b, m, k, n, c, n),
+    }
+}
+
+/// Scheduled `C += A @ Bᵀ` (tied lm head); see [`mm_acc`].
+#[allow(clippy::too_many_arguments)]
+fn mmbt_acc(pool: Option<&ThreadPool>, sched: Sched, a: &[f32],
+            lda: usize, bt: &[f32], m: usize, k: usize, n: usize,
+            c: &mut [f32]) {
+    debug_assert_eq!(c.len(), m * n);
+    match (pool, sched) {
+        (Some(pool), Sched::RowBlock { rows: rb, .. }) if rb < m => {
+            pool.scoped_chunks(c, rb * n, |i, cblk| {
+                let lo = i * rb;
+                let rows = cblk.len() / n;
+                matmul_bt_acc_strided(&a[lo * lda..], lda, bt, rows, k, n,
+                                      cblk, n);
+            });
+        }
+        _ => matmul_bt_acc_strided(a, lda, bt, m, k, n, c, n),
+    }
+}
+
+/// Scheduled fan-out of `f(job, out_chunk)` over disjoint `width`-sized
+/// chunks — the planned form of `par_jobs`, with the cells-per-dispatch
+/// group from the plan (the chunk tile) instead of a hard-coded factor.
+/// Bitwise-identical to the serial loop for any grouping.
+fn par_jobs<F>(pool: Option<&ThreadPool>, sched: Sched, buf: &mut [f32],
+               width: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    debug_assert_eq!(buf.len() % width, 0);
+    let njobs = buf.len() / width;
+    match (pool, sched) {
+        (Some(pool), Sched::JobGroup { group, .. })
+            if njobs > 1 && group < njobs =>
+        {
+            pool.scoped_chunks(buf, width * group, |idx, chunk| {
+                for (q, out) in chunk.chunks_mut(width).enumerate() {
+                    f(idx * group + q, out);
+                }
+            });
+        }
+        _ => {
+            for (j, out) in buf.chunks_mut(width).enumerate() {
+                f(j, out);
+            }
+        }
+    }
+}
+
+/// Token-id rows → embedding rows (shared by both entrypoints).
+fn embed_rows(tokens: &[i32], embed: &[f32], d: usize, v: usize,
+              x: &mut [f32]) -> Result<()> {
+    for (r, &tok) in tokens.iter().enumerate() {
+        let ti = tok as usize;
+        if tok < 0 || ti >= v {
+            bail!("token {tok} out of vocab {v}");
+        }
+        x[r * d..(r + 1) * d]
+            .copy_from_slice(&embed[ti * d..(ti + 1) * d]);
+    }
+    Ok(())
+}
+
+/// Move a buffer out of the environment for mutation (the caller puts
+/// it back); keeps the borrow checker happy while other buffers stay
+/// readable through shared borrows.
+fn take(env: &mut [Vec<f32>], id: usize) -> Vec<f32> {
+    std::mem::take(&mut env[id])
+}
+
+/// Execute the ops whose bodies are identical in the prefill and decode
+/// interpreters — embedding, pre-norm, the three weight contractions
+/// (incl. the fused/unfused residual epilogue), gate-norm and the final
+/// norm — over `rows` output rows. Returns `Ok(false)` for ops the
+/// caller must handle itself, so the bitwise-parity surface lives in
+/// exactly one place per op.
+fn run_shared(node: &Node, env: &mut [Vec<f32>], params: &Params,
+              pool: Option<&ThreadPool>, tokens: &[i32], rows: usize,
+              cfg: &ConfigInfo) -> Result<bool> {
+    let (d, di, dp, v) = (cfg.d_model, cfg.d_inner, cfg.d_in_proj(),
+                          cfg.vocab_size);
+    match &node.op {
+        Op::Embed => {
+            let mut x = take(env, node.outs[0].0);
+            embed_rows(tokens, &params.embed, d, v, &mut x)?;
+            env[node.outs[0].0] = x;
+        }
+        Op::RmsNorm { layer } => {
+            let lp = &params.layers[*layer];
+            let mut hn = take(env, node.outs[0].0);
+            hn.copy_from_slice(&env[node.ins[0].0]);
+            for row in hn.chunks_exact_mut(d) {
+                rmsnorm_row(row, &lp.ln_w, NORM_EPS);
+            }
+            env[node.outs[0].0] = hn;
+        }
+        Op::MatMul { kind: MatKind::InProj, layer, .. } => {
+            let lp = &params.layers[*layer];
+            let mut zx = take(env, node.outs[0].0);
+            zx.fill(0.0);
+            mm_acc(pool, node.sched, &env[node.ins[0].0], d,
+                   &lp.in_proj, rows, d, dp, &mut zx);
+            env[node.outs[0].0] = zx;
+        }
+        Op::GateNorm { layer } => {
+            let lp = &params.layers[*layer];
+            let mut y = take(env, node.outs[0].0);
+            let z = &env[node.ins[1].0];
+            gated_rmsnorm_rows(&mut y, z, &lp.norm_w, di, NORM_EPS);
+            env[node.outs[0].0] = y;
+        }
+        Op::MatMul { kind: MatKind::OutProj, layer, fuse_residual } => {
+            let lp = &params.layers[*layer];
+            let mut x = take(env, node.outs[0].0);
+            let y = &env[node.ins[0].0];
+            if *fuse_residual {
+                // x += y @ out_proj — residual rides the accumulating
+                // contraction (the oracle's schedule)
+                mm_acc(pool, node.sched, y, di, &lp.out_proj, rows, di,
+                       d, &mut x);
+            } else {
+                let mut tmp = vec![0.0f32; rows * d];
+                mm_acc(pool, node.sched, y, di, &lp.out_proj, rows, di,
+                       d, &mut tmp);
+                add_assign(&mut x, &tmp);
+            }
+            env[node.outs[0].0] = x;
+        }
+        Op::FinalNorm => {
+            let mut x = take(env, node.outs[0].0);
+            for row in x.chunks_exact_mut(d) {
+                rmsnorm_row(row, &params.lnf_w, NORM_EPS);
+            }
+            env[node.outs[0].0] = x;
+        }
+        Op::MatMul { kind: MatKind::LmHead, .. } => {
+            let mut logits = take(env, node.outs[0].0);
+            logits.fill(0.0);
+            mmbt_acc(pool, node.sched, &env[node.ins[0].0], d,
+                     &params.embed, rows, d, v, &mut logits);
+            env[node.outs[0].0] = logits;
+        }
+        _ => return Ok(false),
+    }
+    Ok(true)
+}
+
+/// Execute a prefill plan: logits for every position plus the cache
+/// after the last one (continuation-seeded when `cx.init` is set).
+pub fn run_prefill(plan: &Plan, cx: &PrefillCtx)
+    -> Result<(Tensor, CacheState)> {
+    let cfg = cx.cfg;
+    // (d_model itself only appears inside the shared ops)
+    let (di, h, p, n) = (cfg.d_inner, cfg.nheads, cfg.headdim,
+                         cfg.d_state);
+    let (ch, k, dp, v) = (cfg.d_conv_ch, cfg.d_conv, cfg.d_in_proj(),
+                          cfg.vocab_size);
+    let batch = cx.batch;
+    let t = cx.tokens.len() / batch;
+    let lch = cfg.chunk_size;
+    let nc = t / lch;
+    let rows = batch * t;
+    let pn = p * n;
+    let aw = pn + 1 + lch;
+    let bw = lch * p;
+    let njobs = batch * h * nc;
+    debug_assert_eq!(plan.key.batch, batch);
+    debug_assert_eq!(plan.key.t, t);
+
+    let init_ssm = cx.init.map(|c| c.ssm.as_f32());
+    let init_conv = cx.init.map(|c| c.conv.as_f32());
+
+    let mut cache = CacheState::zeros(cfg, batch);
+
+    // the memory plan: one allocation per planned buffer, reused across
+    // layers (accumulating ops re-zero below)
+    let mut env: Vec<Vec<f32>> =
+        plan.graph.bufs.iter().map(|b| vec![0.0f32; b.len()]).collect();
+
+    let split = |j: usize| (j / (h * nc), (j / nc) % h, j % nc);
+    let boff = di; // B block offset inside an xact row
+    let coff = di + h * n; // C block offset
+
+    for node in &plan.graph.nodes {
+        if run_shared(node, &mut env, cx.params, cx.pool, cx.tokens,
+                      rows, cfg)? {
+            continue;
+        }
+        match &node.op {
+            Op::ConvScan { layer } => {
+                let li = *layer;
+                let lp = &cx.params.layers[li];
+                let mut xact = take(&mut env, node.outs[0].0);
+                let mut xbc = take(&mut env, node.outs[1].0);
+                xact.fill(0.0);
+                let zx = &env[node.ins[0].0];
+                for r in 0..rows {
+                    xbc[r * ch..(r + 1) * ch].copy_from_slice(
+                        &zx[r * dp + di..r * dp + di + ch]);
+                }
+                let conv_cache = &mut cache.conv.data;
+                for bi in 0..batch {
+                    for ti in 0..t {
+                        let orow = (bi * t + ti) * ch;
+                        for i in 0..k {
+                            let src = ti as isize + i as isize
+                                - (k as isize - 1);
+                            let wrow = &lp.conv_w[i * ch..(i + 1) * ch];
+                            if src >= 0 {
+                                let srow = (bi * t + src as usize) * ch;
+                                for c in 0..ch {
+                                    xact[orow + c] +=
+                                        xbc[srow + c] * wrow[c];
+                                }
+                            } else if let Some(win) = &init_conv {
+                                // window slot ti+i ∈ [0, k-1): input
+                                // from before this segment
+                                let wi = ti + i;
+                                for c in 0..ch {
+                                    let st = ((li * batch + bi) * ch + c)
+                                        * (k - 1);
+                                    xact[orow + c] +=
+                                        win[st + wi] * wrow[c];
+                                }
+                            }
+                        }
+                        let row = &mut xact[orow..orow + ch];
+                        for (vv, bv) in row.iter_mut().zip(&lp.conv_b) {
+                            *vv += bv;
+                        }
+                        silu_rows(row);
+                    }
+                    // cache the last k-1 pre-activation inputs (t ≥ k-1)
+                    for c in 0..ch {
+                        let st = ((li * batch + bi) * ch + c) * (k - 1);
+                        for j in 0..k - 1 {
+                            let src_t = t - (k - 1) + j;
+                            write_f32(conv_cache, st + j,
+                                      xbc[(bi * t + src_t) * ch + c]);
+                        }
+                    }
+                }
+                env[node.outs[0].0] = xact;
+                env[node.outs[1].0] = xbc;
+            }
+            Op::DtDecay { layer } => {
+                let lp = &cx.params.layers[*layer];
+                let mut dtv = take(&mut env, node.outs[0].0);
+                let mut da = take(&mut env, node.outs[1].0);
+                let zx = &env[node.ins[0].0];
+                for r in 0..rows {
+                    for hh in 0..h {
+                        let sp = softplus(
+                            zx[r * dp + di + ch + hh] + lp.dt_bias[hh]);
+                        dtv[r * h + hh] = sp;
+                        da[r * h + hh] = -lp.a_log[hh].exp() * sp;
+                    }
+                }
+                env[node.outs[0].0] = dtv;
+                env[node.outs[1].0] = da;
+            }
+            Op::XDt { .. } => {
+                let mut xdt = take(&mut env, node.outs[0].0);
+                let xact = &env[node.ins[0].0];
+                let dtv = &env[node.ins[1].0];
+                for r in 0..rows {
+                    for hh in 0..h {
+                        let dtf = dtv[r * h + hh];
+                        for pp in 0..p {
+                            xdt[r * di + hh * p + pp] =
+                                xact[r * ch + hh * p + pp] * dtf;
+                        }
+                    }
+                }
+                env[node.outs[0].0] = xdt;
+            }
+            Op::ChunkState { .. } => {
+                let mut summ = take(&mut env, node.outs[0].0);
+                summ.fill(0.0);
+                let da = &env[node.ins[0].0];
+                let xact = &env[node.ins[1].0];
+                let xdt = &env[node.ins[2].0];
+                let cumsum = |bi: usize, hh: usize, c: usize,
+                              dacs: &mut [f32]| {
+                    let base_r = bi * t + c * lch;
+                    let mut acc = 0.0f32;
+                    for l in 0..lch {
+                        acc += da[(base_r + l) * h + hh];
+                        dacs[l] = acc;
+                    }
+                };
+                par_jobs(cx.pool, node.sched, &mut summ, aw, |j, out| {
+                    let (bi, hh, c) = split(j);
+                    let base_r = bi * t + c * lch;
+                    let (head, dacs) = out.split_at_mut(pn + 1);
+                    cumsum(bi, hh, c, dacs);
+                    let last = dacs[lch - 1];
+                    for l in 0..lch {
+                        let r = base_r + l;
+                        let wl = (last - dacs[l]).exp();
+                        let bcl = &xact[r * ch + boff + hh * n
+                                        ..r * ch + boff + hh * n + n];
+                        for pp in 0..p {
+                            axpy(xdt[r * di + hh * p + pp] * wl, bcl,
+                                 &mut head[pp * n..(pp + 1) * n]);
+                        }
+                    }
+                    head[pn] = last.exp();
+                });
+                env[node.outs[0].0] = summ;
+            }
+            Op::ChunkScan { layer } => {
+                let li = *layer;
+                let mut carries = take(&mut env, node.outs[0].0);
+                let summ = &env[node.ins[0].0];
+                let ssm_cache = &mut cache.ssm.data;
+                for bi in 0..batch {
+                    for hh in 0..h {
+                        let s0 = (((li * batch + bi) * h) + hh) * pn;
+                        let mut carry = vec![0.0f32; pn];
+                        if let Some(ssm0) = &init_ssm {
+                            carry.copy_from_slice(&ssm0[s0..s0 + pn]);
+                        }
+                        for c in 0..nc {
+                            let j = (bi * h + hh) * nc + c;
+                            carries[j * pn..(j + 1) * pn]
+                                .copy_from_slice(&carry);
+                            let cd = summ[j * aw + pn];
+                            for (cv, tv) in carry.iter_mut()
+                                .zip(&summ[j * aw..j * aw + pn]) {
+                                *cv = *cv * cd + *tv;
+                            }
+                        }
+                        // final state → cache slot (layer, seq, head)
+                        for (jj, &cv) in carry.iter().enumerate() {
+                            write_f32(ssm_cache, s0 + jj, cv);
+                        }
+                    }
+                }
+                env[node.outs[0].0] = carries;
+            }
+            Op::ChunkRead { .. } => {
+                let mut ybuf = take(&mut env, node.outs[0].0);
+                ybuf.fill(0.0);
+                let summ = &env[node.ins[0].0];
+                let carries = &env[node.ins[1].0];
+                let xact = &env[node.ins[2].0];
+                let xdt = &env[node.ins[3].0];
+                par_jobs(cx.pool, node.sched, &mut ybuf, bw, |j, out| {
+                    let (bi, hh, c) = split(j);
+                    let base_r = bi * t + c * lch;
+                    let dacs = &summ[j * aw + pn + 1..(j + 1) * aw];
+                    let carry = &carries[j * pn..(j + 1) * pn];
+                    for l in 0..lch {
+                        let r = base_r + l;
+                        let ccl = &xact[r * ch + coff + hh * n
+                                        ..r * ch + coff + hh * n + n];
+                        let yrow = &mut out[l * p..(l + 1) * p];
+                        // intra-chunk: Σ_{s≤l} (C_l·B_s)
+                        //   · exp(cum_l − cum_s) · x_s
+                        for s in 0..=l {
+                            let rs = base_r + s;
+                            let bcs = &xact[rs * ch + boff + hh * n
+                                            ..rs * ch + boff + hh * n
+                                              + n];
+                            let g = dot(ccl, bcs)
+                                * (dacs[l] - dacs[s]).exp();
+                            axpy(g, &xdt[rs * di + hh * p
+                                         ..rs * di + hh * p + p], yrow);
+                        }
+                        // cross-chunk: exp(cum_l) · (carry · C_l)
+                        let w = dacs[l].exp();
+                        for pp in 0..p {
+                            yrow[pp] += w
+                                * dot(&carry[pp * n..(pp + 1) * n], ccl);
+                        }
+                    }
+                });
+                env[node.outs[0].0] = ybuf;
+            }
+            Op::Gather { layer, fuse_skip } => {
+                let lp = &cx.params.layers[*layer];
+                let mut y = take(&mut env, node.outs[0].0);
+                let mut z = take(&mut env, node.outs[1].0);
+                let ybuf = &env[node.ins[0].0];
+                let xact = &env[node.ins[1].0];
+                let zx = &env[node.ins[2].0];
+                if *fuse_skip {
+                    // scatter with the D-skip add fused in: each output
+                    // element still receives exactly one add of
+                    // `xact·d_skip` onto its chunk value, so this is
+                    // bitwise identical to the unfused two-pass form
+                    for j in 0..njobs {
+                        let (bi, hh, c) = split(j);
+                        let ds = lp.d_skip[hh];
+                        for l in 0..lch {
+                            let r = bi * t + c * lch + l;
+                            for pp in 0..p {
+                                y[r * di + hh * p + pp] =
+                                    ybuf[j * bw + l * p + pp]
+                                    + xact[r * ch + hh * p + pp] * ds;
+                            }
+                        }
+                    }
+                    for r in 0..rows {
+                        z[r * di..(r + 1) * di]
+                            .copy_from_slice(&zx[r * dp..r * dp + di]);
+                    }
+                } else {
+                    for j in 0..njobs {
+                        let (bi, hh, c) = split(j);
+                        for l in 0..lch {
+                            let r = bi * t + c * lch + l;
+                            y[r * di + hh * p..r * di + hh * p + p]
+                                .copy_from_slice(
+                                    &ybuf[j * bw + l * p
+                                          ..j * bw + (l + 1) * p]);
+                        }
+                    }
+                    for r in 0..rows {
+                        z[r * di..(r + 1) * di]
+                            .copy_from_slice(&zx[r * dp..r * dp + di]);
+                        for hh in 0..h {
+                            let ds = lp.d_skip[hh];
+                            for pp in 0..p {
+                                y[r * di + hh * p + pp] +=
+                                    xact[r * ch + hh * p + pp] * ds;
+                            }
+                        }
+                    }
+                }
+                env[node.outs[0].0] = y;
+                env[node.outs[1].0] = z;
+            }
+            op => unreachable!("op {op:?} in a prefill plan"),
+        }
+    }
+
+    let logits_id = plan.graph.nodes.last().expect("non-empty plan")
+        .outs[0].0;
+    let logits = std::mem::take(&mut env[logits_id]);
+    Ok((Tensor::f32("logits", &[batch as i64, t as i64, v as i64],
+                    &logits),
+        cache))
+}
+
+/// Execute a decode plan: one batch-fused O(1) step for every slot.
+pub fn run_decode(plan: &Plan, cx: &DecodeCtx) -> Result<StepOut> {
+    let cfg = cx.cfg;
+    // (d_model itself only appears inside the shared ops)
+    let (di, h, p, n) = (cfg.d_inner, cfg.nheads, cfg.headdim,
+                         cfg.d_state);
+    let (ch, k, dp, v) = (cfg.d_conv_ch, cfg.d_conv, cfg.d_in_proj(),
+                          cfg.vocab_size);
+    let bsz = cx.tokens.len();
+    let kc = k - 1;
+    debug_assert_eq!(plan.key.batch, bsz);
+
+    let ssm_in = cx.cache.ssm.as_f32();
+    let conv_in = cx.cache.conv.as_f32();
+    let mut ssm_out = ssm_in.clone();
+    let mut conv_out = conv_in.clone();
+
+    let mut env: Vec<Vec<f32>> =
+        plan.graph.bufs.iter().map(|b| vec![0.0f32; b.len()]).collect();
+
+    for node in &plan.graph.nodes {
+        if run_shared(node, &mut env, cx.params, cx.pool, cx.tokens,
+                      bsz, cfg)? {
+            continue;
+        }
+        match &node.op {
+            Op::ConvStep { layer } => {
+                let li = *layer;
+                let lp = &cx.params.layers[li];
+                let mut xact = take(&mut env, node.outs[0].0);
+                let zx = &env[node.ins[0].0];
+                for bi in 0..bsz {
+                    for c in 0..ch {
+                        let st = ((li * bsz + bi) * ch + c) * kc;
+                        let xnew = zx[bi * dp + di + c];
+                        let mut acc = lp.conv_b[c];
+                        for j in 0..kc {
+                            acc += conv_in[st + j]
+                                * lp.conv_w[j * ch + c];
+                        }
+                        acc += xnew * lp.conv_w[kc * ch + c];
+                        xact[bi * ch + c] = silu(acc);
+                        for j in 0..kc - 1 {
+                            conv_out[st + j] = conv_in[st + j + 1];
+                        }
+                        conv_out[st + kc - 1] = xnew;
+                    }
+                }
+                env[node.outs[0].0] = xact;
+            }
+            Op::SsmStep { layer } => {
+                let li = *layer;
+                let lp = &cx.params.layers[li];
+                let mut y = take(&mut env, node.outs[0].0);
+                let zx = &env[node.ins[0].0];
+                let xact = &env[node.ins[1].0];
+                for bi in 0..bsz {
+                    for hh in 0..h {
+                        let sp = softplus(
+                            zx[bi * dp + di + ch + hh] + lp.dt_bias[hh]);
+                        let dae = (-lp.a_log[hh].exp() * sp).exp();
+                        let boff = bi * ch + di + hh * n;
+                        let coff = bi * ch + di + h * n + hh * n;
+                        for pp in 0..p {
+                            let soff =
+                                (((li * bsz + bi) * h + hh) * p + pp) * n;
+                            let xv = xact[bi * ch + hh * p + pp] * sp;
+                            let mut acc = 0.0f32;
+                            for nn in 0..n {
+                                let snew = ssm_in[soff + nn] * dae
+                                    + xv * xact[boff + nn];
+                                ssm_out[soff + nn] = snew;
+                                acc += snew * xact[coff + nn];
+                            }
+                            y[bi * di + hh * p + pp] =
+                                acc + xact[bi * ch + hh * p + pp]
+                                    * lp.d_skip[hh];
+                        }
+                    }
+                }
+                env[node.outs[0].0] = y;
+            }
+            Op::CopyZ { .. } => {
+                let mut z = take(&mut env, node.outs[0].0);
+                let zx = &env[node.ins[0].0];
+                for bi in 0..bsz {
+                    z[bi * di..(bi + 1) * di]
+                        .copy_from_slice(&zx[bi * dp..bi * dp + di]);
+                }
+                env[node.outs[0].0] = z;
+            }
+            op => unreachable!("op {op:?} in a decode plan"),
+        }
+    }
+
+    let logits_id = plan.graph.nodes.last().expect("non-empty plan")
+        .outs[0].0;
+    let logits = std::mem::take(&mut env[logits_id]);
+    let new_cache = CacheState {
+        ssm: Tensor::f32("ssm", &cx.cache.ssm.dims, &ssm_out),
+        conv: Tensor::f32("conv", &cx.cache.conv.dims, &conv_out),
+    };
+    Ok(StepOut {
+        logits: Tensor::f32("logits", &[bsz as i64, v as i64], &logits),
+        cache: new_cache,
+    })
+}

@@ -1,0 +1,418 @@
+//! The einsum-op graph IR of the lowering pipeline (DESIGN.md §7).
+//!
+//! SSD inference is a short, static program: a handful of einsum-style
+//! contractions, two scans (the causal conv window and the inter-chunk
+//! state scan), and elementwise gating — with every shape known at plan
+//! time. [`lower_prefill`] and [`lower_decode`] build that program as an
+//! explicit graph: one [`Node`] per op, reading and writing
+//! pre-planned buffers ([`BufSpec`] — scratch is allocated once per
+//! execution and reused across layers, the memory plan half of the
+//! lowering). The planner (`super::planner`) then annotates each node
+//! with a [`super::planner::Sched`] chosen from the analytic cost
+//! model, and the executor (`super::exec`) interprets the scheduled
+//! graph over `tensor::math`.
+//!
+//! The IR deliberately stays at *einsum altitude*: ops are whole
+//! contractions and whole scans, not loops — fusion and tiling are
+//! schedule annotations, never new ops — which is the paper's
+//! compiler-first premise (SSD's structure lets the compiler own the
+//! schedule) realised natively.
+
+use crate::runtime::ConfigInfo;
+
+use super::planner::Sched;
+
+/// Index of a planned buffer inside [`Graph::bufs`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BufId(pub usize);
+
+/// One planned buffer: logical `(rows, width)` f32, allocated (or
+/// zeroed) once per execution and reused across layers.
+#[derive(Debug, Clone)]
+pub struct BufSpec {
+    pub name: &'static str,
+    pub rows: usize,
+    pub width: usize,
+}
+
+impl BufSpec {
+    pub fn len(&self) -> usize {
+        self.rows * self.width
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Which weight matrix a [`Op::MatMul`] contracts against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MatKind {
+    /// `zx = hn @ in_proj` (fresh output)
+    InProj,
+    /// `x (+)= y @ out_proj` — the residual add fuses into the
+    /// accumulating contraction when the planner says so
+    OutProj,
+    /// `logits = x @ embedᵀ` (tied lm head, transposed-B form)
+    LmHead,
+}
+
+/// The op set of the SSD graph. Every op maps 1:1 onto a region of the
+/// hand-scheduled reference forward; the executor reproduces the exact
+/// per-element scalar schedule, so any plan is bitwise identical to the
+/// legacy path (the `M2_PLAN=off` oracle).
+#[derive(Debug, Clone)]
+pub enum Op {
+    /// token ids → embedding rows
+    Embed,
+    /// pre-norm over the residual stream (per layer)
+    RmsNorm { layer: usize },
+    /// dense contraction against a weight matrix
+    MatMul { kind: MatKind, layer: usize, fuse_residual: bool },
+    /// causal depthwise conv over time (prefill; seeds from the cache
+    /// window on continuation, writes the cache tail)
+    ConvScan { layer: usize },
+    /// O(1) conv-window step (decode; shifts the cache window)
+    ConvStep { layer: usize },
+    /// dt softplus + log-decay `dA = -exp(A_log)·dt`
+    DtDecay { layer: usize },
+    /// `xdt = xs ⊙ dt` per head
+    XDt { layer: usize },
+    /// stage A: per-(seq, head, chunk) cumulative decays + summary state
+    ChunkState { layer: usize },
+    /// stage B: sequential inter-chunk scan (writes the ssm cache)
+    ChunkScan { layer: usize },
+    /// stage C: intra-chunk dual form + cross-chunk read-out
+    ChunkRead { layer: usize },
+    /// scatter chunk outputs back to `(rows, di)`, plus the D-skip add
+    /// (fused into the scatter when the planner says so) and the z gate
+    /// extraction
+    Gather { layer: usize, fuse_skip: bool },
+    /// decode z-gate extraction from the packed in_proj output
+    CopyZ { layer: usize },
+    /// diagonal state update + read-out + D-skip (decode)
+    SsmStep { layer: usize },
+    /// gated RMSNorm: `rmsnorm(y ⊙ silu(z)) * w`
+    GateNorm { layer: usize },
+    /// final pre-head norm over the residual stream
+    FinalNorm,
+}
+
+impl Op {
+    /// Short dump label, e.g. `in_proj.L2`.
+    pub fn label(&self) -> String {
+        match self {
+            Op::Embed => "embed".into(),
+            Op::RmsNorm { layer } => format!("rmsnorm.L{layer}"),
+            Op::MatMul { kind: MatKind::InProj, layer, .. } => {
+                format!("in_proj.L{layer}")
+            }
+            Op::MatMul { kind: MatKind::OutProj, layer, .. } => {
+                format!("out_proj.L{layer}")
+            }
+            Op::MatMul { kind: MatKind::LmHead, .. } => "lm_head".into(),
+            Op::ConvScan { layer } => format!("conv_scan.L{layer}"),
+            Op::ConvStep { layer } => format!("conv_step.L{layer}"),
+            Op::DtDecay { layer } => format!("dt_decay.L{layer}"),
+            Op::XDt { layer } => format!("xdt.L{layer}"),
+            Op::ChunkState { layer } => format!("chunk_state.L{layer}"),
+            Op::ChunkScan { layer } => format!("chunk_scan.L{layer}"),
+            Op::ChunkRead { layer } => format!("chunk_read.L{layer}"),
+            Op::Gather { layer, .. } => format!("gather.L{layer}"),
+            Op::CopyZ { layer } => format!("copy_z.L{layer}"),
+            Op::SsmStep { layer } => format!("ssm_step.L{layer}"),
+            Op::GateNorm { layer } => format!("gate_norm.L{layer}"),
+            Op::FinalNorm => "final_norm".into(),
+        }
+    }
+}
+
+/// Planner-facing work estimate of one node, filled at lowering.
+///
+/// `shared_bytes` is traffic every parallel job must stream in full (a
+/// weight matrix — fanning out re-reads it, which is what makes tiny
+/// contractions stay serial); `stream_bytes` splits across jobs.
+/// `jobs` is the maximal parallel grain (output rows for contractions,
+/// `(seq, head, chunk)` cells for the chunk stages; 1 = inherently
+/// sequential).
+#[derive(Debug, Clone, Default)]
+pub struct Work {
+    pub flops: f64,
+    pub shared_bytes: f64,
+    pub stream_bytes: f64,
+    pub jobs: usize,
+}
+
+/// One scheduled op instance.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub op: Op,
+    pub ins: Vec<BufId>,
+    pub outs: Vec<BufId>,
+    pub work: Work,
+    /// filled by the planner (`Sched::Serial` until then)
+    pub sched: Sched,
+    /// contraction dims `(m, k, n)` for MatMul nodes (dump/planning)
+    pub mkn: Option<(usize, usize, usize)>,
+}
+
+/// The lowered program: nodes in execution order plus the memory plan.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    pub nodes: Vec<Node>,
+    pub bufs: Vec<BufSpec>,
+}
+
+impl Graph {
+    fn buf(&mut self, name: &'static str, rows: usize, width: usize)
+        -> BufId {
+        self.bufs.push(BufSpec { name, rows, width });
+        BufId(self.bufs.len() - 1)
+    }
+
+    fn node(&mut self, op: Op, ins: Vec<BufId>, outs: Vec<BufId>,
+            work: Work, mkn: Option<(usize, usize, usize)>) {
+        self.nodes.push(Node { op, ins, outs, work, sched: Sched::Serial,
+                               mkn });
+    }
+}
+
+fn f(x: usize) -> f64 {
+    x as f64
+}
+
+/// Work of a dense `(m, k) @ (k, n)` contraction: the weight matrix is
+/// shared across row blocks, activations stream.
+fn mm_work(m: usize, k: usize, n: usize) -> Work {
+    Work {
+        flops: 2.0 * f(m) * f(k) * f(n),
+        shared_bytes: f(k) * f(n) * 4.0,
+        stream_bytes: (f(m) * f(k) + 2.0 * f(m) * f(n)) * 4.0,
+        jobs: m,
+    }
+}
+
+/// Work of a serial elementwise/scan pass (`jobs = 1`).
+fn serial_work(flops: f64, bytes: f64) -> Work {
+    Work { flops, shared_bytes: 0.0, stream_bytes: bytes, jobs: 1 }
+}
+
+/// Lower the chunked-parallel prefill (fresh or continued — the graph
+/// is the same; continuation only seeds the two scans from the incoming
+/// cache at execution time) over `batch × t` tokens.
+///
+/// Requires `t % cfg.chunk_size == 0` (the caller validates and bails
+/// with the user-facing error first).
+pub fn lower_prefill(cfg: &ConfigInfo, batch: usize, t: usize) -> Graph {
+    assert!(batch > 0 && t > 0 && t % cfg.chunk_size == 0,
+            "lower_prefill: unvalidated shape");
+    let (d, di, h, p, n) = (cfg.d_model, cfg.d_inner, cfg.nheads,
+                            cfg.headdim, cfg.d_state);
+    let (ch, k, dp, v) = (cfg.d_conv_ch, cfg.d_conv, cfg.d_in_proj(),
+                          cfg.vocab_size);
+    let lch = cfg.chunk_size;
+    let nc = t / lch;
+    let rows = batch * t;
+    let pn = p * n;
+    let aw = pn + 1 + lch;
+    let bw = lch * p;
+    let njobs = batch * h * nc;
+
+    let mut g = Graph { nodes: Vec::new(), bufs: Vec::new() };
+    let x = g.buf("x", rows, d);
+    let hn = g.buf("hn", rows, d);
+    let zx = g.buf("zx", rows, dp);
+    let xbc = g.buf("xbc", rows, ch);
+    let xact = g.buf("xact", rows, ch);
+    let dtv = g.buf("dtv", rows, h);
+    let da = g.buf("da", rows, h);
+    let xdt = g.buf("xdt", rows, di);
+    let summ = g.buf("summ", njobs, aw);
+    let carry = g.buf("carry", njobs, pn);
+    let ybuf = g.buf("ybuf", njobs, bw);
+    let y = g.buf("y", rows, di);
+    let z = g.buf("z", rows, di);
+    let logits = g.buf("logits", rows, v);
+
+    g.node(Op::Embed, vec![], vec![x],
+           serial_work(0.0, 2.0 * f(rows) * f(d) * 4.0), None);
+    for li in 0..cfg.n_layer {
+        g.node(Op::RmsNorm { layer: li }, vec![x], vec![hn],
+               serial_work(3.0 * f(rows) * f(d),
+                           2.0 * f(rows) * f(d) * 4.0), None);
+        g.node(Op::MatMul { kind: MatKind::InProj, layer: li,
+                            fuse_residual: false },
+               vec![hn], vec![zx], mm_work(rows, d, dp),
+               Some((rows, d, dp)));
+        g.node(Op::ConvScan { layer: li }, vec![zx], vec![xact, xbc],
+               serial_work(f(rows) * f(ch) * (2.0 * f(k) + 2.0),
+                           3.0 * f(rows) * f(ch) * 4.0), None);
+        g.node(Op::DtDecay { layer: li }, vec![zx], vec![dtv, da],
+               serial_work(6.0 * f(rows) * f(h),
+                           3.0 * f(rows) * f(h) * 4.0), None);
+        g.node(Op::XDt { layer: li }, vec![xact, dtv], vec![xdt],
+               serial_work(f(rows) * f(di),
+                           3.0 * f(rows) * f(di) * 4.0), None);
+        // stage A: T = Σ_l exp(cumΔ_L − cumΔ_l)·B_l⊗x_l per cell, plus
+        // the cumsum and chunk decay product riding along
+        g.node(Op::ChunkState { layer: li }, vec![da, xact, xdt],
+               vec![summ],
+               Work {
+                   flops: f(njobs) * f(lch) * (2.0 * f(pn) + f(n) + 2.0),
+                   shared_bytes: 0.0,
+                   stream_bytes: f(njobs)
+                       * (f(aw) + f(lch) * (f(n) + f(p) + 1.0)) * 4.0,
+                   jobs: njobs,
+               }, None);
+        g.node(Op::ChunkScan { layer: li }, vec![summ], vec![carry],
+               serial_work(2.0 * f(njobs) * f(pn),
+                           f(njobs) * (2.0 * f(pn) + 1.0) * 4.0), None);
+        // stage C: quadratic intra-chunk dual form + cross-chunk term
+        g.node(Op::ChunkRead { layer: li },
+               vec![summ, carry, xact, xdt], vec![ybuf],
+               Work {
+                   flops: f(njobs)
+                       * (f(lch * (lch + 1) / 2) * (2.0 * f(n) + 2.0 * f(p))
+                          + f(lch) * (2.0 * f(pn) + f(p))),
+                   shared_bytes: 0.0,
+                   stream_bytes: f(njobs)
+                       * (f(bw) + f(aw) + f(pn)
+                          + f(lch) * (f(n) + f(p)) * 2.0) * 4.0,
+                   jobs: njobs,
+               }, None);
+        g.node(Op::Gather { layer: li, fuse_skip: true },
+               vec![ybuf, xact, zx], vec![y, z],
+               serial_work(f(rows) * f(di),
+                           4.0 * f(rows) * f(di) * 4.0), None);
+        g.node(Op::GateNorm { layer: li }, vec![y, z], vec![y],
+               serial_work(6.0 * f(rows) * f(di),
+                           3.0 * f(rows) * f(di) * 4.0), None);
+        g.node(Op::MatMul { kind: MatKind::OutProj, layer: li,
+                            fuse_residual: true },
+               vec![y], vec![x], mm_work(rows, di, d),
+               Some((rows, di, d)));
+    }
+    g.node(Op::FinalNorm, vec![x], vec![x],
+           serial_work(3.0 * f(rows) * f(d),
+                       2.0 * f(rows) * f(d) * 4.0), None);
+    g.node(Op::MatMul { kind: MatKind::LmHead, layer: 0,
+                        fuse_residual: false },
+           vec![x], vec![logits], mm_work(rows, d, v),
+           Some((rows, d, v)));
+    g
+}
+
+/// Lower the batch-fused O(1) decode step over `batch` cache slots.
+pub fn lower_decode(cfg: &ConfigInfo, batch: usize) -> Graph {
+    assert!(batch > 0, "lower_decode: zero batch");
+    let (d, di, h, p, n) = (cfg.d_model, cfg.d_inner, cfg.nheads,
+                            cfg.headdim, cfg.d_state);
+    let (ch, k, dp, v) = (cfg.d_conv_ch, cfg.d_conv, cfg.d_in_proj(),
+                          cfg.vocab_size);
+    let b = batch;
+
+    let mut g = Graph { nodes: Vec::new(), bufs: Vec::new() };
+    let x = g.buf("x", b, d);
+    let hn = g.buf("hn", b, d);
+    let zx = g.buf("zx", b, dp);
+    let xact = g.buf("xact", b, ch);
+    let y = g.buf("y", b, di);
+    let z = g.buf("z", b, di);
+    let logits = g.buf("logits", b, v);
+
+    g.node(Op::Embed, vec![], vec![x],
+           serial_work(0.0, 2.0 * f(b) * f(d) * 4.0), None);
+    for li in 0..cfg.n_layer {
+        g.node(Op::RmsNorm { layer: li }, vec![x], vec![hn],
+               serial_work(3.0 * f(b) * f(d), 2.0 * f(b) * f(d) * 4.0),
+               None);
+        g.node(Op::MatMul { kind: MatKind::InProj, layer: li,
+                            fuse_residual: false },
+               vec![hn], vec![zx], mm_work(b, d, dp), Some((b, d, dp)));
+        g.node(Op::ConvStep { layer: li }, vec![zx], vec![xact],
+               serial_work(2.0 * f(b) * f(ch) * f(k),
+                           f(b) * f(ch) * f(k) * 2.0 * 4.0), None);
+        g.node(Op::SsmStep { layer: li }, vec![zx, xact], vec![y],
+               serial_work(6.0 * f(b) * f(h) * f(p) * f(n),
+                           2.0 * f(b) * f(h) * f(pn_of(p, n)) * 4.0),
+               None);
+        g.node(Op::CopyZ { layer: li }, vec![zx], vec![z],
+               serial_work(0.0, 2.0 * f(b) * f(di) * 4.0), None);
+        g.node(Op::GateNorm { layer: li }, vec![y, z], vec![y],
+               serial_work(6.0 * f(b) * f(di),
+                           3.0 * f(b) * f(di) * 4.0), None);
+        g.node(Op::MatMul { kind: MatKind::OutProj, layer: li,
+                            fuse_residual: true },
+               vec![y], vec![x], mm_work(b, di, d), Some((b, di, d)));
+    }
+    g.node(Op::FinalNorm, vec![x], vec![x],
+           serial_work(3.0 * f(b) * f(d), 2.0 * f(b) * f(d) * 4.0), None);
+    g.node(Op::MatMul { kind: MatKind::LmHead, layer: 0,
+                        fuse_residual: false },
+           vec![x], vec![logits], mm_work(b, d, v), Some((b, d, v)));
+    g
+}
+
+fn pn_of(p: usize, n: usize) -> usize {
+    p * n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::sim_config;
+
+    #[test]
+    fn prefill_graph_shape() {
+        let cfg = sim_config("tiny").unwrap();
+        let g = lower_prefill(&cfg, 1, 32);
+        // 1 embed + 11 nodes per layer + final norm + lm head
+        assert_eq!(g.nodes.len(), 1 + 11 * cfg.n_layer + 2);
+        assert_eq!(g.bufs.len(), 14);
+        // memory plan: buffers sized for (rows=32) and (njobs=b·h·nc=8)
+        let by_name = |n: &str| {
+            g.bufs.iter().find(|b| b.name == n).unwrap().clone()
+        };
+        assert_eq!(by_name("x").rows, 32);
+        assert_eq!(by_name("zx").width, cfg.d_in_proj());
+        let njobs = cfg.nheads * 2; // nc = 32/16 = 2, batch 1
+        assert_eq!(by_name("summ").rows, njobs);
+        assert_eq!(by_name("summ").width,
+                   cfg.headdim * cfg.d_state + 1 + cfg.chunk_size);
+        assert_eq!(by_name("logits").width, cfg.vocab_size);
+        // graph ends with the lm head writing the logits buffer
+        let last = g.nodes.last().unwrap();
+        assert!(matches!(last.op,
+                         Op::MatMul { kind: MatKind::LmHead, .. }));
+        assert_eq!(g.bufs[last.outs[0].0].name, "logits");
+    }
+
+    #[test]
+    fn decode_graph_shape() {
+        let cfg = sim_config("tiny").unwrap();
+        let g = lower_decode(&cfg, 4);
+        assert_eq!(g.nodes.len(), 1 + 7 * cfg.n_layer + 2);
+        assert!(g.bufs.iter().all(|b| b.rows == 4 || b.name == "logits"));
+        // the chunk stages never appear in the decode graph
+        assert!(!g.nodes.iter().any(|n| matches!(
+            n.op, Op::ChunkState { .. } | Op::ChunkScan { .. }
+                | Op::ChunkRead { .. })));
+    }
+
+    #[test]
+    fn matmul_work_accounts_shared_weights() {
+        let w = mm_work(16, 96, 512);
+        assert_eq!(w.flops, 2.0 * 16.0 * 96.0 * 512.0);
+        assert_eq!(w.shared_bytes, 96.0 * 512.0 * 4.0);
+        assert_eq!(w.jobs, 16);
+    }
+
+    #[test]
+    fn labels_are_stable() {
+        let cfg = sim_config("tiny").unwrap();
+        let g = lower_prefill(&cfg, 1, 16);
+        assert_eq!(g.nodes[0].op.label(), "embed");
+        assert_eq!(g.nodes[2].op.label(), "in_proj.L0");
+        assert_eq!(g.nodes.last().unwrap().op.label(), "lm_head");
+    }
+}

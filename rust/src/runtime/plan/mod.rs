@@ -1,0 +1,352 @@
+//! `runtime::plan` — the compiler-first lowering pipeline
+//! (DESIGN.md §7).
+//!
+//! The paper's central claim is that SSD's structure — diagonal state,
+//! chunkable recurrence, einsum-dominated compute, static control flow
+//! — lets a *compiler* own fusion and tiling rather than hand-written
+//! kernels. This subsystem reproduces that thesis natively for the
+//! reference backend:
+//!
+//!   * [`ir`] — an einsum-op graph of the whole prefill (three-stage
+//!     chunked SSD) and decode (batch-fused step), with a per-plan
+//!     memory plan,
+//!   * [`planner`] — a cost loop over `perf::roofline` that picks each
+//!     node's row-block tiling, chunk tile, thread fan-out and fusion,
+//!     replacing the hand-scheduled constants of the old forward,
+//!   * [`exec`] — an interpreter running the scheduled graph over the
+//!     `tensor::math` kernels, bitwise identical to the hand-scheduled
+//!     oracle (`M2_PLAN=off`),
+//!   * [`PlanCache`] — a shape-keyed, bounded cache ("build plan once,
+//!     execute many") with hit/build/planning-time stats surfaced
+//!     through `Backend::plan_stats` into the `BENCH_*.json` perf
+//!     trajectory.
+//!
+//! [`Plan::dump`] renders a plan as text for introspection; the golden
+//! test (`tests/golden_plan.rs` + `tests/goldens/`) pins the default
+//! config's dump so schedule changes are always deliberate.
+
+pub mod exec;
+pub mod ir;
+pub mod planner;
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use crate::runtime::manifest::{CostInfo, ScheduleInfo};
+
+use ir::Graph;
+use planner::Sched;
+
+/// Whether the reference backend executes through built plans (the
+/// default) or the legacy hand-scheduled forward. The legacy path is
+/// the bitwise oracle the parity suite compares against; it survives
+/// behind `M2_PLAN=off` (or `--plan off` on the binaries) until the
+/// parity sweep has pinned the planned path long enough to retire it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanMode {
+    On,
+    Off,
+}
+
+impl PlanMode {
+    /// Default from the `M2_PLAN` env var: `off` / `0` / `legacy`
+    /// select the hand-scheduled oracle, anything else the planner.
+    pub fn from_env() -> PlanMode {
+        match std::env::var("M2_PLAN") {
+            Ok(v) if matches!(v.trim(), "off" | "0" | "legacy") => {
+                PlanMode::Off
+            }
+            _ => PlanMode::On,
+        }
+    }
+}
+
+/// Which entrypoint a plan lowers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Entry {
+    /// chunked-parallel prefill (fresh or continuation — same graph)
+    Prefill,
+    /// batch-fused O(1) decode step
+    Decode,
+}
+
+impl Entry {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Entry::Prefill => "prefill",
+            Entry::Decode => "decode_step",
+        }
+    }
+}
+
+/// Shape-bucket key of one plan: `(entrypoint, batch, seq len)`.
+/// Decode plans use `t = 1`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlanKey {
+    pub entry: Entry,
+    pub batch: usize,
+    pub t: usize,
+}
+
+/// One scheduled, executable lowering of an entrypoint at a shape
+/// bucket: the op graph with schedule annotations, the memory plan,
+/// and the invocation-level [`CostInfo`] computed once at build (so
+/// benches and metrics read it without per-call recomputation).
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub key: PlanKey,
+    pub cfg_name: String,
+    pub chunk_size: usize,
+    /// worker count the schedule was chosen for
+    pub threads: usize,
+    pub graph: Graph,
+    /// analytic (FLOPs, bytes, transcendentals) of one invocation —
+    /// hoisted out of the per-call hot path
+    pub cost: CostInfo,
+    /// the chosen schedule, in the manifest's per-entrypoint record form
+    pub schedule: ScheduleInfo,
+    /// the cost model's predicted wall-clock (schedule-selection score)
+    pub est_seconds: f64,
+    /// wall-clock spent planning this plan
+    pub planning_ms: f64,
+}
+
+impl Plan {
+    /// Render the plan as text: key + cost header, then one line per
+    /// node with its output shape and chosen schedule. Integer-only
+    /// payload (counts, shapes, block sizes) so the golden file is
+    /// stable across platforms.
+    pub fn dump(&self) -> String {
+        let mut s = String::new();
+        let nc = if self.key.entry == Entry::Prefill {
+            self.key.t / self.chunk_size
+        } else {
+            0
+        };
+        s.push_str(&format!(
+            "plan {} {} b={} t={} threads={} chunk={} chunks={}\n",
+            self.cfg_name, self.key.entry.as_str(), self.key.batch,
+            self.key.t, self.threads, self.chunk_size, nc));
+        s.push_str(&format!(
+            "cost: flops={} bytes={} transcendentals={}\n",
+            self.cost.flops as u64, self.cost.bytes_accessed as u64,
+            self.cost.transcendentals as u64));
+        s.push_str(&format!(
+            "schedule: row_block={} chunk_tile={} fanout={} fused={}\n",
+            self.schedule.row_block, self.schedule.chunk_tile,
+            self.schedule.fanout,
+            if self.schedule.fused.is_empty() {
+                "-".to_string()
+            } else {
+                self.schedule.fused.join("+")
+            }));
+        for (i, node) in self.graph.nodes.iter().enumerate() {
+            let out = &self.graph.bufs[node.outs[0].0];
+            let shape = format!("{}[{},{}]", out.name, out.rows,
+                                out.width);
+            let sched = match node.sched {
+                Sched::Serial => "serial".to_string(),
+                Sched::RowBlock { rows, blocks } => {
+                    format!("row_block={rows} blocks={blocks}")
+                }
+                Sched::JobGroup { group, dispatches } => {
+                    format!("jobs={} group={group} dispatches={dispatches}",
+                            node.work.jobs)
+                }
+            };
+            let mm = match node.mkn {
+                Some((m, k, n)) => format!(" mm[{m}x{k}x{n}]"),
+                None => String::new(),
+            };
+            let fuse = match &node.op {
+                ir::Op::MatMul { kind: ir::MatKind::OutProj,
+                                 fuse_residual: true, .. } => " fused-acc",
+                ir::Op::Gather { fuse_skip: true, .. } => " fused-skip",
+                _ => "",
+            };
+            s.push_str(&format!("%{i:02} {:<16} {:<18}{mm} {sched}{fuse}\n",
+                                node.op.label(), shape));
+        }
+        s
+    }
+}
+
+/// Plan-cache counters for the perf trajectory (`BENCH_*.json
+/// plan_cache` block) and warm-up tests.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PlanStats {
+    /// plans built (cache misses)
+    pub built: u64,
+    /// cache hits
+    pub hits: u64,
+    /// total wall-clock spent planning, milliseconds
+    pub planning_ms: f64,
+    /// plans currently resident
+    pub cached: usize,
+}
+
+/// Upper bound on resident plans per backend: least-recently-used
+/// eviction beyond this. Sized for the full bucket ladder (prefill
+/// buckets × a few batch widths + decode widths) with headroom; bounds
+/// memory, not correctness — an evicted plan is just rebuilt.
+pub const MAX_PLANS: usize = 32;
+
+struct CacheInner {
+    /// most-recently-used first
+    plans: VecDeque<(PlanKey, std::sync::Arc<Plan>)>,
+    built: u64,
+    hits: u64,
+    planning_ms: f64,
+}
+
+/// Shape-keyed plan cache: "build once, execute many". Interior
+/// mutability because lookups happen on `&self` hot paths; the lock is
+/// uncontended (one engine thread per backend) and held only for the
+/// lookup or the (rare, millisecond-scale) build.
+pub struct PlanCache {
+    inner: Mutex<CacheInner>,
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache {
+            inner: Mutex::new(CacheInner {
+                plans: VecDeque::new(),
+                built: 0,
+                hits: 0,
+                planning_ms: 0.0,
+            }),
+        }
+    }
+
+    /// Look up `key`, building (and caching) the plan on a miss.
+    pub fn get_or_build<F>(&self, key: PlanKey, build: F)
+        -> std::sync::Arc<Plan>
+    where
+        F: FnOnce() -> Plan,
+    {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(pos) =
+            inner.plans.iter().position(|(k, _)| *k == key) {
+            inner.hits += 1;
+            // move-to-front LRU
+            let hit = inner.plans.remove(pos).expect("position valid");
+            inner.plans.push_front(hit);
+            return std::sync::Arc::clone(&inner.plans[0].1);
+        }
+        let plan = std::sync::Arc::new(build());
+        inner.built += 1;
+        inner.planning_ms += plan.planning_ms;
+        inner.plans.push_front((key, std::sync::Arc::clone(&plan)));
+        inner.plans.truncate(MAX_PLANS);
+        plan
+    }
+
+    /// Read-only lookup: no build, no counter bump, no LRU reorder.
+    /// This is what metrics/cost queries use, so asking about a shape
+    /// can never evict a serving plan or distort the build/hit stats.
+    pub fn peek(&self, key: PlanKey) -> Option<std::sync::Arc<Plan>> {
+        let inner = self.inner.lock().unwrap();
+        inner.plans.iter().find(|(k, _)| *k == key)
+            .map(|(_, p)| std::sync::Arc::clone(p))
+    }
+
+    pub fn stats(&self) -> PlanStats {
+        let inner = self.inner.lock().unwrap();
+        PlanStats {
+            built: inner.built,
+            hits: inner.hits,
+            planning_ms: inner.planning_ms,
+            cached: inner.plans.len(),
+        }
+    }
+
+    /// Drop every cached plan (schedules depend on the worker count, so
+    /// `with_threads` resets the cache). Counters are kept — they
+    /// describe the backend's lifetime, not the current contents.
+    pub fn clear(&self) {
+        self.inner.lock().unwrap().plans.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::sim_config;
+
+    fn key(batch: usize, t: usize) -> PlanKey {
+        PlanKey { entry: Entry::Prefill, batch, t }
+    }
+
+    fn build(k: PlanKey) -> Plan {
+        let cfg = sim_config("tiny").unwrap();
+        planner::build_plan(&cfg, k, 4)
+    }
+
+    #[test]
+    fn cache_hits_and_misses() {
+        let c = PlanCache::new();
+        let a = c.get_or_build(key(1, 16), || build(key(1, 16)));
+        assert_eq!(c.stats().built, 1);
+        assert_eq!(c.stats().hits, 0);
+        let b = c.get_or_build(key(1, 16), || build(key(1, 16)));
+        assert_eq!(c.stats().built, 1);
+        assert_eq!(c.stats().hits, 1);
+        assert!(std::sync::Arc::ptr_eq(&a, &b), "same bucket, same plan");
+        // a distinct bucket never collides
+        let d = c.get_or_build(key(1, 32), || build(key(1, 32)));
+        assert_eq!(c.stats().built, 2);
+        assert!(!std::sync::Arc::ptr_eq(&a, &d));
+        assert_eq!(d.key.t, 32);
+    }
+
+    #[test]
+    fn cache_is_bounded_lru() {
+        let c = PlanCache::new();
+        for i in 0..MAX_PLANS + 8 {
+            let k = key(1, 16 * (i + 1));
+            c.get_or_build(k, || build(k));
+        }
+        let s = c.stats();
+        assert_eq!(s.built as usize, MAX_PLANS + 8);
+        assert_eq!(s.cached, MAX_PLANS);
+        // the most recent key is still resident (hit), the oldest is
+        // not (rebuild)
+        let newest = key(1, 16 * (MAX_PLANS + 8));
+        c.get_or_build(newest, || build(newest));
+        assert_eq!(c.stats().hits, 1);
+        let oldest = key(1, 16);
+        c.get_or_build(oldest, || build(oldest));
+        assert_eq!(c.stats().built as usize, MAX_PLANS + 9);
+    }
+
+    #[test]
+    fn clear_keeps_counters() {
+        let c = PlanCache::new();
+        c.get_or_build(key(1, 16), || build(key(1, 16)));
+        c.clear();
+        let s = c.stats();
+        assert_eq!(s.cached, 0);
+        assert_eq!(s.built, 1);
+    }
+
+    #[test]
+    fn dump_is_inspectable() {
+        let p = build(key(1, 32));
+        let d = p.dump();
+        assert!(d.starts_with("plan tiny prefill b=1 t=32"), "{d}");
+        assert!(d.contains("cost: flops="));
+        assert!(d.contains("in_proj.L0"));
+        assert!(d.contains("chunk_scan.L0"));
+        assert!(d.contains("lm_head"));
+        assert!(d.contains("fused-acc"));
+        // one line per node + 3 header lines
+        assert_eq!(d.lines().count(), p.graph.nodes.len() + 3);
+    }
+}

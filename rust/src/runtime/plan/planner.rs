@@ -1,0 +1,330 @@
+//! Cost-driven scheduler: picks each node's tiling, fan-out and fusion
+//! from the analytic roofline model instead of hard-coded constants
+//! (DESIGN.md §7).
+//!
+//! The model is the host-CPU roofline (`perf::CPU_HOST`) divided evenly
+//! across the pool's workers, plus the measured dispatch envelope of
+//! `util::threadpool`. For a node with `J` parallel jobs out of `W`
+//! workers:
+//!
+//! ```text
+//! t(J) = ⌈J/W⌉ · max( (F/J)/f₁ , (S/J)/b₁ ) + shared/B + J·d + j₀
+//! ```
+//!
+//! where `f₁ = F_chip/W`, `b₁ = B_chip/W` are per-worker peaks, `S`
+//! streams across jobs, `shared` (a weight matrix) is streamed once at
+//! chip bandwidth and then cache-resident, `d` is the per-job dispatch
+//! cost and `j₀` the scoped-join cost. `J = 1` is the serial candidate
+//! (no dispatch) — which is how the old `PAR_MIN_FLOPS` threshold falls
+//! out of the model instead of being pinned by hand: tiny contractions
+//! price out to serial, large ones to `W`-way row blocks.
+//!
+//! Fusion decisions go through the same loop: the planner prices the
+//! fused and unfused forms of the residual/D-skip adds and keeps the
+//! cheaper one (fused strictly dominates on every config of the ladder —
+//! a unit test pins that, because the bitwise-parity contract with the
+//! hand-scheduled oracle relies on the fused choice).
+
+use std::time::Instant;
+
+use crate::perf::roofline::CPU_HOST;
+use crate::runtime::backend::analytic_cost;
+use crate::runtime::manifest::ScheduleInfo;
+use crate::runtime::ConfigInfo;
+
+use super::ir::{self, MatKind, Op, Work};
+use super::{Entry, Plan, PlanKey};
+
+/// Per-job dispatch cost of `util::threadpool` (mpsc enqueue + worker
+/// wake-up), measured envelope on the container class CI runs on — the
+/// pool-level analogue of the rooflines' launch overheads.
+pub const DISPATCH_S: f64 = 2.0e-6;
+/// One-time cost of a scoped parallel region (join + channel teardown).
+pub const JOIN_S: f64 = 4.0e-6;
+/// Fan-out candidates, in waves of the worker count: `J ∈ {W, 2W, 4W,
+/// 8W}` plus the serial form. More waves buy load balance on ragged
+/// job counts at the price of dispatch.
+const WAVE_CANDIDATES: [usize; 4] = [1, 2, 4, 8];
+
+/// Execution schedule of one node, chosen by the cost loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sched {
+    /// run on the calling thread in the canonical scalar order
+    Serial,
+    /// contraction row blocks: `rows` output rows per block, `blocks`
+    /// pool dispatches (bitwise-invariant — each C row is produced by
+    /// exactly one block in the serial scalar order)
+    RowBlock { rows: usize, blocks: usize },
+    /// chunk-stage tiling: `group` (seq, head, chunk) cells per
+    /// dispatch, `dispatches` dispatches (bitwise-invariant — each cell
+    /// runs the serial scalar schedule)
+    JobGroup { group: usize, dispatches: usize },
+}
+
+fn chip_bw() -> f64 {
+    let (_, bc) = CPU_HOST.worker_peaks(1);
+    bc
+}
+
+/// Serial wall-time of `work` when one worker (of `threads` sharing the
+/// chip) runs it.
+fn serial_time(w: &Work, threads: usize) -> f64 {
+    let (f1, b1) = CPU_HOST.worker_peaks(threads);
+    (w.flops / f1).max(w.stream_bytes / b1) + w.shared_bytes / chip_bw()
+}
+
+/// Parallel wall-time with `jobs` dispatches over `threads` workers
+/// (see the module docs for the model).
+fn par_time(w: &Work, jobs: usize, threads: usize) -> f64 {
+    let (f1, b1) = CPU_HOST.worker_peaks(threads);
+    let waves = jobs.div_ceil(threads) as f64;
+    let per_wave = ((w.flops / jobs as f64) / f1)
+        .max((w.stream_bytes / jobs as f64) / b1);
+    waves * per_wave + w.shared_bytes / chip_bw()
+        + jobs as f64 * DISPATCH_S + JOIN_S
+}
+
+/// Choose a schedule for one node: serial vs every wave candidate,
+/// lowest predicted time wins (strict `<`, so ties stay at the coarser
+/// grain). Returns the schedule and its predicted seconds.
+fn choose(w: &Work, threads: usize, row_block: bool) -> (Sched, f64) {
+    let mut best = (Sched::Serial, serial_time(w, threads));
+    if w.jobs <= 1 || threads <= 1 {
+        return best;
+    }
+    for &waves in &WAVE_CANDIDATES {
+        let target = threads * waves;
+        let grain = w.jobs.div_ceil(target).max(1);
+        let jobs = w.jobs.div_ceil(grain);
+        if jobs <= 1 {
+            continue;
+        }
+        let t = par_time(w, jobs, threads);
+        if t < best.1 {
+            let sched = if row_block {
+                Sched::RowBlock { rows: grain, blocks: jobs }
+            } else {
+                Sched::JobGroup { group: grain, dispatches: jobs }
+            };
+            best = (sched, t);
+        }
+    }
+    best
+}
+
+/// Price the unfused form of an elementwise epilogue (`extra_rows ×
+/// width` adds as a separate pass): the cost the fused form saves.
+fn epilogue_time(rows: usize, width: usize, threads: usize) -> f64 {
+    let w = Work {
+        flops: (rows * width) as f64,
+        shared_bytes: 0.0,
+        stream_bytes: 3.0 * (rows * width) as f64 * 4.0,
+        jobs: 1,
+    };
+    serial_time(&w, threads)
+}
+
+/// Build and schedule the plan for one `(entrypoint, batch, t)` shape
+/// bucket. Pure function of `(cfg, key, threads)` — the same inputs
+/// always produce the same schedule (the golden `plan_dump` test pins
+/// that).
+pub fn build_plan(cfg: &ConfigInfo, key: PlanKey, threads: usize) -> Plan {
+    let t0 = Instant::now();
+    let mut graph = match key.entry {
+        Entry::Prefill => ir::lower_prefill(cfg, key.batch, key.t),
+        Entry::Decode => ir::lower_decode(cfg, key.batch),
+    };
+    let mut est = 0.0;
+    let mut fused: Vec<String> = Vec::new();
+    let mut row_block = 0usize;
+    let mut chunk_tile = 0usize;
+    for node in &mut graph.nodes {
+        let is_mm = matches!(node.op, Op::MatMul { .. });
+        let (sched, secs) = choose(&node.work, threads, is_mm);
+        est += secs;
+        node.sched = sched;
+        let mkn = node.mkn;
+        match &mut node.op {
+            Op::MatMul { kind: MatKind::OutProj, fuse_residual, .. } => {
+                // fused: the residual add rides the accumulating
+                // contraction for free; unfused: the same contraction
+                // into scratch plus a separate elementwise pass over
+                // the residual stream. The model prices both forms.
+                let (m, _, n) = mkn.expect("matmul dims");
+                let fused_t = secs;
+                let unfused_t = secs + epilogue_time(m, n, threads);
+                *fuse_residual = fused_t <= unfused_t;
+                if *fuse_residual && !fused.iter()
+                    .any(|s| s == "residual.out_proj") {
+                    fused.push("residual.out_proj".into());
+                }
+            }
+            Op::Gather { fuse_skip, .. } => {
+                // fused: the D-skip add rides the chunk-output scatter;
+                // unfused: a separate pass re-reading y and xact.
+                let rows = key.batch * key.t;
+                let fused_t = secs;
+                let unfused_t =
+                    secs + epilogue_time(rows, cfg.d_inner, threads);
+                *fuse_skip = fused_t <= unfused_t;
+                if *fuse_skip && !fused.iter().any(|s| s == "skip.gather") {
+                    fused.push("skip.gather".into());
+                }
+            }
+            _ => {}
+        }
+        if row_block == 0 {
+            if let Sched::RowBlock { rows, .. } = node.sched {
+                row_block = rows;
+            }
+        }
+        if chunk_tile == 0 {
+            if let Sched::JobGroup { group, .. } = node.sched {
+                chunk_tile = group;
+            }
+        }
+    }
+    // the whole-invocation analytic cost, computed ONCE here and stored
+    // on the plan so benches/metrics never recompute it per call
+    let cost = match key.entry {
+        Entry::Prefill => analytic_cost(cfg, "prefill", Some(key.t),
+                                        key.batch),
+        Entry::Decode => analytic_cost(cfg, "decode_step", None,
+                                       key.batch),
+    };
+    let schedule = ScheduleInfo {
+        chunk_tile,
+        row_block,
+        fanout: threads,
+        fused,
+    };
+    Plan {
+        key,
+        cfg_name: cfg.name.clone(),
+        chunk_size: cfg.chunk_size,
+        threads,
+        graph,
+        cost,
+        schedule,
+        est_seconds: est,
+        planning_ms: t0.elapsed().as_secs_f64() * 1e3,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::sim_config;
+
+    fn plan(cfg_name: &str, entry: Entry, batch: usize, t: usize,
+            threads: usize) -> Plan {
+        let cfg = sim_config(cfg_name).unwrap();
+        build_plan(&cfg, PlanKey { entry, batch, t }, threads)
+    }
+
+    #[test]
+    fn tiny_contractions_price_out_to_serial() {
+        // batch-1 decode: every contraction has one output row — the
+        // dispatch term dominates any fan-out, so the plan stays serial
+        let p = plan("sim-130m", Entry::Decode, 1, 1, 8);
+        for node in &p.graph.nodes {
+            assert_eq!(node.sched, Sched::Serial, "{}", node.op.label());
+        }
+        assert_eq!(p.schedule.row_block, 0);
+    }
+
+    #[test]
+    fn large_contractions_fan_out() {
+        // a 512-token prefill is compute-bound: projections and both
+        // chunk stages must fan out across the 8 workers
+        let p = plan("sim-130m", Entry::Prefill, 1, 512, 8);
+        let mut mm_par = 0;
+        let mut jobs_par = 0;
+        for node in &p.graph.nodes {
+            match node.sched {
+                Sched::RowBlock { rows, blocks } => {
+                    assert!(rows * blocks >= 512, "{}", node.op.label());
+                    mm_par += 1;
+                }
+                Sched::JobGroup { group, dispatches } => {
+                    assert!(group * dispatches >= node.work.jobs);
+                    jobs_par += 1;
+                }
+                Sched::Serial => {}
+            }
+        }
+        assert!(mm_par >= 3, "projections stayed serial");
+        assert!(jobs_par >= 2, "chunk stages stayed serial");
+        assert!(p.schedule.row_block > 0);
+        assert!(p.schedule.chunk_tile > 0);
+    }
+
+    #[test]
+    fn serial_backend_gets_serial_plans() {
+        let p = plan("sim-130m", Entry::Prefill, 1, 512, 1);
+        assert!(p.graph.nodes.iter()
+            .all(|n| n.sched == Sched::Serial));
+    }
+
+    #[test]
+    fn fusion_is_chosen_by_cost_on_every_config() {
+        // the bitwise-parity contract with the hand-scheduled oracle
+        // requires the fused residual; the cost model must keep choosing
+        // it across the whole ladder (an unfused pass is never free)
+        for name in ["tiny", "sim-130m", "sim-370m", "sim-780m",
+                     "sim-1.3b", "sim-2.7b"] {
+            for (entry, t) in [(Entry::Prefill, 64), (Entry::Decode, 1)] {
+                let p = plan(name, entry, 2, t, 8);
+                for node in &p.graph.nodes {
+                    match &node.op {
+                        Op::MatMul { kind: MatKind::OutProj,
+                                     fuse_residual, .. } => {
+                            assert!(*fuse_residual, "{name}");
+                        }
+                        Op::Gather { fuse_skip, .. } => {
+                            assert!(*fuse_skip, "{name}");
+                        }
+                        _ => {}
+                    }
+                }
+                assert!(p.schedule.fused.iter()
+                    .any(|s| s == "residual.out_proj"));
+            }
+        }
+    }
+
+    #[test]
+    fn plans_are_deterministic() {
+        let a = plan("sim-130m", Entry::Prefill, 1, 256, 8);
+        let b = plan("sim-130m", Entry::Prefill, 1, 256, 8);
+        assert_eq!(a.dump(), b.dump());
+        assert_eq!(a.est_seconds, b.est_seconds);
+    }
+
+    #[test]
+    fn cost_is_hoisted_onto_the_plan() {
+        // the plan's stored CostInfo is exactly the analytic model's —
+        // computed once at build, not per call
+        let cfg = sim_config("sim-130m").unwrap();
+        let p = plan("sim-130m", Entry::Prefill, 1, 512, 8);
+        let want = analytic_cost(&cfg, "prefill", Some(512), 1);
+        assert_eq!(p.cost.flops, want.flops);
+        assert_eq!(p.cost.bytes_accessed, want.bytes_accessed);
+        assert_eq!(p.cost.transcendentals, want.transcendentals);
+        let d = plan("sim-130m", Entry::Decode, 16, 1, 8);
+        let want = analytic_cost(&cfg, "decode_step", None, 16);
+        assert_eq!(d.cost.flops, want.flops);
+    }
+
+    #[test]
+    fn est_time_orders_with_work() {
+        let small = plan("sim-130m", Entry::Prefill, 1, 64, 8);
+        let big = plan("sim-130m", Entry::Prefill, 1, 512, 8);
+        assert!(big.est_seconds > small.est_seconds);
+        let b1 = plan("sim-130m", Entry::Decode, 1, 1, 8);
+        let b16 = plan("sim-130m", Entry::Decode, 16, 1, 8);
+        assert!(b16.est_seconds > b1.est_seconds);
+        // but far less than 16x — the fused batch amortises weights
+        assert!(b16.est_seconds < 16.0 * b1.est_seconds);
+    }
+}

@@ -33,31 +33,36 @@ use crate::util::error::{Context, Result};
 use crate::util::prng::Rng;
 use crate::util::threadpool::ThreadPool;
 
-use super::backend::{argmax_last, Backend, CacheState, PrefillOut, StepOut};
-use super::manifest::{sim_config, ConfigInfo, DECODE_LOOP_BUCKETS,
-                      FORWARD_BUCKETS, PREFILL_BUCKETS,
-                      REFERENCE_BATCH_CAP};
+use super::backend::{analytic_cost, argmax_last, Backend, CacheState,
+                     PrefillOut, StepOut};
+use super::manifest::{sim_config, ConfigInfo, CostInfo,
+                      DECODE_LOOP_BUCKETS, FORWARD_BUCKETS,
+                      PREFILL_BUCKETS, REFERENCE_BATCH_CAP};
+use super::plan::{exec, planner, Entry, Plan, PlanCache, PlanKey,
+                  PlanMode, PlanStats};
 
-const NORM_EPS: f32 = 1e-5;
+pub(crate) const NORM_EPS: f32 = 1e-5;
 
 // --------------------------------------------------------------- params ---
 
-struct LayerParams {
-    in_proj: Vec<f32>,  // (d, d_in_proj)
-    conv_w: Vec<f32>,   // (k, ch)
-    conv_b: Vec<f32>,   // (ch,)
-    a_log: Vec<f32>,    // (h,)
-    dt_bias: Vec<f32>,  // (h,)
-    d_skip: Vec<f32>,   // (h,)  — the "D" residual scale
-    norm_w: Vec<f32>,   // (di,)
-    out_proj: Vec<f32>, // (di, d)
-    ln_w: Vec<f32>,     // (d,)
+// Fields are crate-visible so the plan executor (`runtime::plan::exec`)
+// reads the same weight arrays the hand-scheduled path does.
+pub(crate) struct LayerParams {
+    pub(crate) in_proj: Vec<f32>,  // (d, d_in_proj)
+    pub(crate) conv_w: Vec<f32>,   // (k, ch)
+    pub(crate) conv_b: Vec<f32>,   // (ch,)
+    pub(crate) a_log: Vec<f32>,    // (h,)
+    pub(crate) dt_bias: Vec<f32>,  // (h,)
+    pub(crate) d_skip: Vec<f32>,   // (h,)  — the "D" residual scale
+    pub(crate) norm_w: Vec<f32>,   // (di,)
+    pub(crate) out_proj: Vec<f32>, // (di, d)
+    pub(crate) ln_w: Vec<f32>,     // (d,)
 }
 
-struct Params {
-    embed: Vec<f32>, // (V, d)
-    layers: Vec<LayerParams>,
-    lnf_w: Vec<f32>, // (d,)
+pub(crate) struct Params {
+    pub(crate) embed: Vec<f32>, // (V, d)
+    pub(crate) layers: Vec<LayerParams>,
+    pub(crate) lnf_w: Vec<f32>, // (d,)
 }
 
 /// Deterministic random init following params.py conventions.
@@ -254,6 +259,11 @@ pub struct ReferenceBackend {
     pub params_host: Vec<Tensor>,
     threads: usize,
     pool: Option<ThreadPool>,
+    /// planned execution (default) vs the legacy hand-scheduled oracle
+    plan_mode: PlanMode,
+    /// shape-keyed plans: build once per `(entrypoint, batch, t)`,
+    /// execute many (DESIGN.md §7)
+    plans: PlanCache,
 }
 
 impl ReferenceBackend {
@@ -272,7 +282,9 @@ impl ReferenceBackend {
         let params_host = params_to_tensors(&cfg, &params);
         let threads = default_threads();
         ReferenceBackend { cfg, params, params_host, threads,
-                           pool: build_pool(threads) }
+                           pool: build_pool(threads),
+                           plan_mode: PlanMode::from_env(),
+                           plans: PlanCache::new() }
     }
 
     /// Build from an explicit flat parameter list (canonical order).
@@ -281,19 +293,45 @@ impl ReferenceBackend {
         let params = params_from_tensors(&cfg, &tensors)?;
         let threads = default_threads();
         Ok(ReferenceBackend { cfg, params, params_host: tensors, threads,
-                              pool: build_pool(threads) })
+                              pool: build_pool(threads),
+                              plan_mode: PlanMode::from_env(),
+                              plans: PlanCache::new() })
     }
 
     /// Pin the worker count (1 = fully serial). The result is bitwise
     /// independent of this setting; the parity suite exercises that.
+    /// Cached plans are dropped — schedules are chosen for a worker
+    /// count.
     pub fn with_threads(mut self, threads: usize) -> ReferenceBackend {
         self.threads = threads.max(1);
         self.pool = build_pool(self.threads);
+        self.plans.clear();
         self
+    }
+
+    /// Pin the execution mode: planned (default) or the legacy
+    /// hand-scheduled oracle (also reachable via `M2_PLAN=off`). The
+    /// two are bitwise identical; `tests/plan_parity.rs` pins it.
+    pub fn with_plan_mode(mut self, mode: PlanMode) -> ReferenceBackend {
+        self.plan_mode = mode;
+        self
+    }
+
+    pub fn plan_mode(&self) -> PlanMode {
+        self.plan_mode
     }
 
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Fetch (or build and cache) the plan for one shape bucket.
+    fn plan_for(&self, entry: Entry, batch: usize, t: usize)
+        -> std::sync::Arc<Plan> {
+        let key = PlanKey { entry, batch, t };
+        self.plans.get_or_build(key, || {
+            planner::build_plan(&self.cfg, key, self.threads)
+        })
     }
 
     // ------------------------------------------------ parallel drivers ---
@@ -377,8 +415,47 @@ impl ReferenceBackend {
     /// `init`, the forward continues from an existing O(1) cache (carry
     /// states seed the inter-chunk scan, the conv window seeds the first
     /// k-1 taps) — the chunked realisation of `prefill_continue`.
+    ///
+    /// Dispatch: "build plan once, execute many" through the
+    /// `runtime::plan` lowering pipeline by default; the hand-scheduled
+    /// legacy body behind `M2_PLAN=off` is the bitwise oracle.
     fn forward_chunked(&self, tokens: &[i32], batch: usize,
                        init: Option<&CacheState>)
+        -> Result<(Tensor, CacheState)> {
+        // shared shape validation — identical errors on both paths
+        if batch == 0 || tokens.len() % batch != 0 {
+            bail!("prefill: {} tokens not divisible by batch {batch}",
+                  tokens.len());
+        }
+        let t = tokens.len() / batch;
+        if t == 0 || t % self.cfg.chunk_size != 0 {
+            bail!("prefill: length {t} not a multiple of chunk \
+                   {}", self.cfg.chunk_size);
+        }
+        if let Some(ic) = init {
+            if ic.batch() != batch {
+                bail!("prefill_continue: cache batch {} != batch {batch}",
+                      ic.batch());
+            }
+        }
+        if self.plan_mode == PlanMode::Off {
+            return self.forward_chunked_legacy(tokens, batch, init);
+        }
+        let plan = self.plan_for(Entry::Prefill, batch, t);
+        exec::run_prefill(&plan, &exec::PrefillCtx {
+            cfg: &self.cfg,
+            params: &self.params,
+            pool: self.pool.as_ref(),
+            tokens,
+            batch,
+            init,
+        })
+    }
+
+    /// The pre-plan hand-scheduled forward (the `M2_PLAN=off` oracle —
+    /// see [`Self::forward_chunked`]).
+    fn forward_chunked_legacy(&self, tokens: &[i32], batch: usize,
+                              init: Option<&CacheState>)
         -> Result<(Tensor, CacheState)> {
         let cfg = &self.cfg;
         if batch == 0 || tokens.len() % batch != 0 {
@@ -667,7 +744,32 @@ impl ReferenceBackend {
     /// cache slot is a function of that slot's inputs alone, so the
     /// batched step is bitwise identical to B independent single-slot
     /// steps — the parity suite (tests/parity_batch.rs) pins this.
+    ///
+    /// Dispatch mirrors [`Self::forward_chunked`]: planned execution by
+    /// default, the hand-scheduled oracle behind `M2_PLAN=off`.
     fn step(&self, cache: &CacheState, tokens: &[i32]) -> Result<StepOut> {
+        let bsz = tokens.len();
+        if cache.batch() != bsz {
+            bail!("decode_step: {} tokens for cache batch {}", bsz,
+                  cache.batch());
+        }
+        if self.plan_mode == PlanMode::Off || bsz == 0 {
+            return self.step_legacy(cache, tokens);
+        }
+        let plan = self.plan_for(Entry::Decode, bsz, 1);
+        exec::run_decode(&plan, &exec::DecodeCtx {
+            cfg: &self.cfg,
+            params: &self.params,
+            pool: self.pool.as_ref(),
+            tokens,
+            cache,
+        })
+    }
+
+    /// The pre-plan hand-scheduled decode step (the `M2_PLAN=off`
+    /// oracle — see [`Self::step`]).
+    fn step_legacy(&self, cache: &CacheState, tokens: &[i32])
+        -> Result<StepOut> {
         let cfg = &self.cfg;
         let bsz = tokens.len();
         if cache.batch() != bsz {
@@ -774,8 +876,9 @@ impl ReferenceBackend {
     }
 }
 
-/// Write an f32 into a little-endian byte buffer at f32 index `i`.
-fn write_f32(bytes: &mut [u8], i: usize, v: f32) {
+/// Write an f32 into a little-endian byte buffer at f32 index `i`
+/// (shared with the plan executor, which fills the same cache tensors).
+pub(crate) fn write_f32(bytes: &mut [u8], i: usize, v: f32) {
     bytes[i * 4..i * 4 + 4].copy_from_slice(&v.to_le_bytes());
 }
 
@@ -800,6 +903,73 @@ impl Backend for ReferenceBackend {
         // width-flexible: the batched step handles any cache width, so
         // the engine packs exactly the occupied slots
         active.max(1)
+    }
+
+    fn warm_up(&self, max_decode_width: usize) {
+        // plan warm-up at shape-bucket registration (engine start):
+        // build the schedule for every prefill bucket and every decode
+        // width the engine can pack, so no first request pays planning
+        if self.plan_mode == PlanMode::Off {
+            return;
+        }
+        for &b in PREFILL_BUCKETS {
+            self.plan_for(Entry::Prefill, 1, b);
+        }
+        for w in 1..=max_decode_width.clamp(1, REFERENCE_BATCH_CAP) {
+            self.plan_for(Entry::Decode, w, 1);
+        }
+    }
+
+    fn plan_stats(&self) -> Option<PlanStats> {
+        match self.plan_mode {
+            PlanMode::On => Some(self.plans.stats()),
+            PlanMode::Off => None,
+        }
+    }
+
+    fn plan_dump(&self, entrypoint: &str, bucket: usize, batch: usize)
+        -> Option<String> {
+        if self.plan_mode == PlanMode::Off || batch == 0 {
+            return None;
+        }
+        match entrypoint {
+            "prefill" | "forward_full"
+                if bucket > 0 && bucket % self.cfg.chunk_size == 0 => {
+                Some(self.plan_for(Entry::Prefill, batch, bucket).dump())
+            }
+            "decode_step" => {
+                Some(self.plan_for(Entry::Decode, batch, 1).dump())
+            }
+            _ => None,
+        }
+    }
+
+    fn cost(&self, entrypoint: &str, bucket: Option<usize>, batch: usize)
+        -> CostInfo {
+        // read the CostInfo hoisted onto the plan at build time instead
+        // of recomputing the analytic model per call. Strictly read-only
+        // (PlanCache::peek): asking about a shape that was never
+        // executed must not fabricate a plan, distort the built/hit
+        // stats, or LRU-evict a warm serving plan — cold shapes (and
+        // entrypoints the planner does not lower, e.g. decode_loop)
+        // fall back to the analytic model, which the stored cost equals
+        // by construction.
+        if self.plan_mode == PlanMode::On && batch > 0 {
+            let key = match entrypoint {
+                "prefill" | "forward_full" => {
+                    let t = bucket.unwrap_or(self.cfg.chunk_size);
+                    Some(PlanKey { entry: Entry::Prefill, batch, t })
+                }
+                "decode_step" => {
+                    Some(PlanKey { entry: Entry::Decode, batch, t: 1 })
+                }
+                _ => None,
+            };
+            if let Some(plan) = key.and_then(|k| self.plans.peek(k)) {
+                return plan.cost.clone();
+            }
+        }
+        analytic_cost(&self.cfg, entrypoint, bucket, batch)
     }
 
     fn prefill_buckets(&self) -> Vec<usize> {
@@ -868,13 +1038,15 @@ impl Backend for ReferenceBackend {
 }
 
 // A second construction path used by tests and tools: rebuild from the
-// flat tensors this backend itself exported (worker count preserved).
+// flat tensors this backend itself exported (worker count and plan mode
+// preserved; the clone re-plans lazily from its own empty cache).
 impl Clone for ReferenceBackend {
     fn clone(&self) -> ReferenceBackend {
         ReferenceBackend::from_tensors(self.cfg.clone(),
                                        self.params_host.clone())
             .expect("round-trip of own params")
             .with_threads(self.threads)
+            .with_plan_mode(self.plan_mode)
     }
 }
 
@@ -1001,6 +1173,109 @@ mod tests {
         let sb = parallel.decode_step(&cache, &ts).unwrap();
         assert_eq!(sa.logits.as_f32(), sb.logits.as_f32());
         assert_eq!(sa.cache.ssm.as_f32(), sb.cache.ssm.as_f32());
+    }
+
+    #[test]
+    fn planned_and_legacy_paths_are_bitwise_equal() {
+        // the in-module smoke form of tests/plan_parity.rs: one prefill
+        // + one batched decode step, planned vs hand-scheduled oracle
+        let planned = tiny().with_plan_mode(PlanMode::On);
+        let oracle = tiny().with_plan_mode(PlanMode::Off);
+        let toks: Vec<i32> = (0..32).map(|i| ((i * 29 + 3) % 512) as i32)
+            .collect();
+        let a = planned.prefill(&toks, 1).unwrap();
+        let b = oracle.prefill(&toks, 1).unwrap();
+        assert_eq!(a.logits.as_f32(), b.logits.as_f32());
+        assert_eq!(a.cache.ssm.as_f32(), b.cache.ssm.as_f32());
+        assert_eq!(a.cache.conv.as_f32(), b.cache.conv.as_f32());
+        let mut cache = CacheState::zeros(planned.cfg(), 3);
+        for s in 0..3 {
+            cache.copy_slot_from(s, &a.cache, 0);
+        }
+        let ts = [1, 2, 3];
+        let sa = planned.decode_step(&cache, &ts).unwrap();
+        let sb = oracle.decode_step(&cache, &ts).unwrap();
+        assert_eq!(sa.logits.as_f32(), sb.logits.as_f32());
+        assert_eq!(sa.cache.ssm.as_f32(), sb.cache.ssm.as_f32());
+        assert_eq!(sa.cache.conv.as_f32(), sb.cache.conv.as_f32());
+    }
+
+    #[test]
+    fn plans_are_cached_per_shape_bucket() {
+        let b = tiny();
+        let toks: Vec<i32> = (0..16).collect();
+        b.prefill(&toks, 1).unwrap();
+        b.prefill(&toks, 1).unwrap();
+        let s = b.plan_stats().unwrap();
+        assert_eq!(s.built, 1, "same bucket must reuse one plan");
+        assert_eq!(s.hits, 1);
+        let toks32: Vec<i32> = (0..32).collect();
+        b.prefill(&toks32, 1).unwrap();
+        assert_eq!(b.plan_stats().unwrap().built, 2, "distinct bucket");
+    }
+
+    #[test]
+    fn plan_dump_and_stats_surface() {
+        let b = tiny();
+        let d = b.plan_dump("prefill", 32, 1).unwrap();
+        assert!(d.contains("plan tiny prefill b=1 t=32"), "{d}");
+        let d = b.plan_dump("decode_step", 0, 4).unwrap();
+        assert!(d.contains("decode_step b=4"), "{d}");
+        // non-chunk-multiple buckets and unknown entrypoints: no plan
+        assert!(b.plan_dump("prefill", 7, 1).is_none());
+        assert!(b.plan_dump("nope", 16, 1).is_none());
+        // the oracle has no planner
+        let oracle = tiny().with_plan_mode(PlanMode::Off);
+        assert!(oracle.plan_stats().is_none());
+        assert!(oracle.plan_dump("prefill", 16, 1).is_none());
+    }
+
+    #[test]
+    fn cost_is_a_read_only_plan_lookup() {
+        let b = tiny();
+        let want = analytic_cost(b.cfg(), "decode_step", None, 4);
+        // cold shape: cost() answers from the analytic model WITHOUT
+        // fabricating a plan (no build, no stats, no LRU churn)
+        let c0 = b.cost("decode_step", None, 4);
+        assert_eq!(c0.flops, want.flops);
+        assert_eq!(b.plan_stats().unwrap().built, 0,
+                   "cost() must never build plans");
+        // once the shape has executed, cost() reads the hoisted copy
+        // off the plan — still without building or recomputing state
+        let pre = b.prefill(&(0..16).collect::<Vec<i32>>(), 1).unwrap();
+        let mut cache = CacheState::zeros(b.cfg(), 4);
+        for s in 0..4 {
+            cache.copy_slot_from(s, &pre.cache, 0);
+        }
+        b.decode_step(&cache, &[1, 2, 3, 4]).unwrap();
+        let built = b.plan_stats().unwrap().built;
+        let c1 = b.cost("decode_step", None, 4);
+        assert_eq!(b.plan_stats().unwrap().built, built,
+                   "cost() on a warm shape must not rebuild");
+        assert_eq!(c1.flops, want.flops);
+        assert_eq!(c1.bytes_accessed, want.bytes_accessed);
+        assert_eq!(c1.transcendentals, want.transcendentals);
+    }
+
+    #[test]
+    fn warm_up_prepopulates_every_bucket() {
+        let b = tiny();
+        b.warm_up(4);
+        let s = b.plan_stats().unwrap();
+        let want = PREFILL_BUCKETS.len() as u64 + 4;
+        assert_eq!(s.built, want);
+        assert_eq!(s.cached, want as usize);
+        // serving the buckets afterwards is all cache hits
+        let toks: Vec<i32> = (0..64).collect();
+        b.prefill(&toks, 1).unwrap();
+        let mut cache = CacheState::zeros(b.cfg(), 2);
+        let pre = b.prefill(&(0..16).collect::<Vec<i32>>(), 1).unwrap();
+        cache.copy_slot_from(0, &pre.cache, 0);
+        cache.copy_slot_from(1, &pre.cache, 0);
+        b.decode_step(&cache, &[1, 2]).unwrap();
+        let s2 = b.plan_stats().unwrap();
+        assert_eq!(s2.built, want, "warmed buckets must not rebuild");
+        assert!(s2.hits >= 3);
     }
 
     #[test]

@@ -91,6 +91,17 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     s
 }
 
+/// x += y elementwise — the unfused form of a residual add (the plan
+/// executor's fallback when a planner ever prices a contraction's
+/// accumulate-fusion out; the fused form folds the add into
+/// [`matmul_acc_strided`]'s accumulating C).
+pub fn add_assign(x: &mut [f32], y: &[f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (xv, yv) in x.iter_mut().zip(y) {
+        *xv += yv;
+    }
+}
+
 /// y += alpha * x (the einsum inner loop of the intra-chunk dual form).
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
@@ -203,6 +214,25 @@ mod tests {
         let mut y = vec![1.0f32, 2.0];
         axpy(2.0, &[10.0, 20.0], &mut y);
         assert_eq!(y, vec![21.0, 42.0]);
+    }
+
+    #[test]
+    fn add_assign_matches_fused_accumulate() {
+        // unfused residual (matmul into scratch, then add) must equal
+        // the fused accumulating contraction bitwise: per C element the
+        // partial-product order is identical, the residual is one
+        // trailing add either way — exact for integer-valued floats
+        let a = [1.0f32, 2., 3., 4., 5., 6.]; // (2,3)
+        let b = [1.0f32, -2., 3., 0., 2., 1.]; // (3,2)
+        let resid = [10.0f32, 20., 30., 40.];
+        let mut fused = resid.to_vec();
+        matmul_acc_strided(&a, 3, &b, 2, 3, 2, &mut fused, 2);
+        let mut unfused = resid.to_vec();
+        add_assign(&mut unfused, &matmul(&a, &b, 2, 3, 2));
+        // NOTE: equal here because the values are exactly representable;
+        // on arbitrary floats the two differ in rounding, which is why
+        // the planner's fused choice is pinned by a unit test
+        assert_eq!(fused, unfused);
     }
 
     // ------------------------- property sweeps (strided vs scalar) ------

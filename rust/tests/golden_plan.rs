@@ -1,0 +1,61 @@
+//! Golden `plan_dump` check (ISSUE 4): the default config's textual
+//! plan is pinned under `tests/goldens/`, so any change to the
+//! planner's schedule — tiling, fan-out, fusion, cost accounting, IR
+//! shape — shows up as a reviewable diff instead of a silent drift.
+//!
+//! The dump is a pure function of `(config, shape key, threads)`:
+//! integer-only payload, worker count pinned to 8 here, so the text is
+//! identical on every machine. Regenerate deliberately with
+//!
+//! ```bash
+//! UPDATE_GOLDENS=1 cargo test --test golden_plan
+//! ```
+//!
+//! and commit the diff.
+
+use mamba2_serve::runtime::{Backend, PlanMode, ReferenceBackend};
+
+const GOLDEN: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/tests/goldens/plan_sim-130m.txt");
+
+fn current_dump() -> String {
+    let b = ReferenceBackend::seeded("sim-130m", 0).unwrap()
+        .with_threads(8)
+        .with_plan_mode(PlanMode::On);
+    let prefill = b.plan_dump("prefill", 512, 1).expect("prefill plan");
+    let decode = b.plan_dump("decode_step", 1, 16).expect("decode plan");
+    format!("{prefill}\n{decode}")
+}
+
+#[test]
+fn plan_dump_matches_golden() {
+    let got = current_dump();
+    if std::env::var("UPDATE_GOLDENS").is_ok() {
+        std::fs::write(GOLDEN, &got).expect("write golden");
+        return;
+    }
+    let want = std::fs::read_to_string(GOLDEN)
+        .expect("read tests/goldens/plan_sim-130m.txt");
+    if got != want {
+        // line-level report so a schedule change reads as a diff
+        for (i, (g, w)) in got.lines().zip(want.lines()).enumerate() {
+            assert_eq!(g, w, "plan dump diverges at line {}", i + 1);
+        }
+        assert_eq!(got.lines().count(), want.lines().count(),
+                   "plan dump length changed");
+        panic!("plan dump differs from golden (whitespace?)");
+    }
+}
+
+#[test]
+fn golden_covers_both_entrypoints() {
+    let want = std::fs::read_to_string(GOLDEN).expect("golden exists");
+    assert!(want.contains("plan sim-130m prefill b=1 t=512"));
+    assert!(want.contains("plan sim-130m decode_step b=16"));
+    // the pinned schedule is cost-derived, not hard-coded: the planner
+    // chose parallel row blocks for the big contractions and chunk
+    // tiles for the SSD stages
+    assert!(want.contains("row_block="));
+    assert!(want.contains("dispatches="));
+    assert!(want.contains("fused-acc"));
+}

@@ -1,0 +1,189 @@
+//! Plan-cache behaviour end-to-end (ISSUE 4): shape buckets reuse one
+//! plan, distinct buckets never collide, residency is bounded, and the
+//! engine's start-up warm-up pre-populates every registered bucket so
+//! no first request pays planning latency.
+
+use std::sync::{Arc, Mutex};
+
+use mamba2_serve::coordinator::{Engine, EngineConfig, GenerateParams};
+use mamba2_serve::runtime::plan::MAX_PLANS;
+use mamba2_serve::runtime::{Backend, CacheState, ConfigInfo, PlanStats,
+                            PrefillOut, ReferenceBackend, StepOut};
+use mamba2_serve::tensor::Tensor;
+use mamba2_serve::util::error::Result;
+
+fn backend() -> ReferenceBackend {
+    ReferenceBackend::seeded("tiny", 0).unwrap().with_threads(2)
+}
+
+#[test]
+fn same_bucket_reuses_one_plan() {
+    let b = backend();
+    let toks: Vec<i32> = (0..64).collect();
+    for _ in 0..5 {
+        b.prefill(&toks, 1).unwrap();
+    }
+    let s = b.plan_stats().unwrap();
+    assert_eq!(s.built, 1, "one shape bucket, one plan");
+    assert_eq!(s.hits, 4);
+    assert_eq!(s.cached, 1);
+}
+
+#[test]
+fn distinct_buckets_do_not_collide() {
+    let b = backend();
+    // three prefill shapes + two decode widths = five distinct keys
+    b.prefill(&(0..16).collect::<Vec<i32>>(), 1).unwrap();
+    b.prefill(&(0..32).collect::<Vec<i32>>(), 1).unwrap();
+    b.prefill(&(0..32).collect::<Vec<i32>>(), 2).unwrap();
+    let pre = b.prefill(&(0..16).collect::<Vec<i32>>(), 1).unwrap();
+    for w in [1usize, 3] {
+        let mut cache = CacheState::zeros(b.cfg(), w);
+        for s in 0..w {
+            cache.copy_slot_from(s, &pre.cache, 0);
+        }
+        let toks: Vec<i32> = (0..w as i32).collect();
+        b.decode_step(&cache, &toks).unwrap();
+    }
+    let s = b.plan_stats().unwrap();
+    assert_eq!(s.built, 5, "five shape keys, five plans");
+    // dumps confirm the keys really differ
+    let d16 = b.plan_dump("prefill", 16, 1).unwrap();
+    let d32 = b.plan_dump("prefill", 32, 1).unwrap();
+    assert_ne!(d16, d32);
+    assert!(d16.contains("t=16") && d32.contains("t=32"));
+}
+
+#[test]
+fn cache_residency_is_bounded() {
+    let b = backend();
+    let pre = b.prefill(&(0..16).collect::<Vec<i32>>(), 1).unwrap();
+    // drive more decode widths than the cache may hold resident
+    for w in 1..=MAX_PLANS + 4 {
+        let mut cache = CacheState::zeros(b.cfg(), w);
+        for s in 0..w {
+            cache.copy_slot_from(s, &pre.cache, 0);
+        }
+        let toks: Vec<i32> = vec![1; w];
+        b.decode_step(&cache, &toks).unwrap();
+    }
+    let s = b.plan_stats().unwrap();
+    assert!(s.built as usize >= MAX_PLANS + 4);
+    assert!(s.cached <= MAX_PLANS, "cache must stay bounded, \
+             got {} resident", s.cached);
+}
+
+// ---------------------------------------------------- engine warm-up ----
+
+/// Records `warm_up` calls, then delegates everything to the reference
+/// backend — proves the engine performs plan warm-up at shape-bucket
+/// registration with the width it will actually pack.
+struct WarmupProbe {
+    inner: ReferenceBackend,
+    calls: Arc<Mutex<Vec<usize>>>,
+}
+
+impl Backend for WarmupProbe {
+    fn name(&self) -> &'static str {
+        "warmup-probe"
+    }
+    fn platform(&self) -> String {
+        self.inner.platform()
+    }
+    fn cfg(&self) -> &ConfigInfo {
+        self.inner.cfg()
+    }
+    fn batch_cap(&self) -> usize {
+        self.inner.batch_cap()
+    }
+    fn prefill_buckets(&self) -> Vec<usize> {
+        self.inner.prefill_buckets()
+    }
+    fn decode_loop_buckets(&self) -> Vec<usize> {
+        self.inner.decode_loop_buckets()
+    }
+    fn forward_buckets(&self) -> Vec<usize> {
+        self.inner.forward_buckets()
+    }
+    fn load_weights(&mut self, tensors: Vec<Tensor>) -> Result<()> {
+        self.inner.load_weights(tensors)
+    }
+    fn prefill(&self, tokens: &[i32], batch: usize)
+        -> Result<PrefillOut> {
+        self.inner.prefill(tokens, batch)
+    }
+    fn prefill_continue(&self, cache: &CacheState, tokens: &[i32],
+                        batch: usize) -> Result<PrefillOut> {
+        self.inner.prefill_continue(cache, tokens, batch)
+    }
+    fn decode_step(&self, cache: &CacheState, tokens: &[i32])
+        -> Result<StepOut> {
+        self.inner.decode_step(cache, tokens)
+    }
+    fn decode_width(&self, active: usize) -> usize {
+        self.inner.decode_width(active)
+    }
+    fn decode_loop(&self, cache: &CacheState, token: i32, bucket: usize)
+        -> Result<(Vec<i32>, CacheState)> {
+        self.inner.decode_loop(cache, token, bucket)
+    }
+    fn forward_full(&self, tokens: &[i32]) -> Result<Tensor> {
+        self.inner.forward_full(tokens)
+    }
+    fn warm_up(&self, max_decode_width: usize) {
+        self.calls.lock().unwrap().push(max_decode_width);
+        self.inner.warm_up(max_decode_width);
+    }
+    fn plan_stats(&self) -> Option<PlanStats> {
+        self.inner.plan_stats()
+    }
+}
+
+#[test]
+fn engine_start_warms_every_registered_bucket() {
+    let calls = Arc::new(Mutex::new(Vec::new()));
+    let probe = WarmupProbe { inner: backend(),
+                              calls: Arc::clone(&calls) };
+    let stats_probe = WarmupProbe { inner: probe.inner.clone(),
+                                    calls: Arc::clone(&calls) };
+    let eng = Engine::start(
+        Box::new(probe),
+        EngineConfig { batch_cap: 3, ..Default::default() }).unwrap();
+    // warm-up ran synchronously during start, with the slot count the
+    // engine will pack decode widths up to
+    assert_eq!(calls.lock().unwrap().clone(), vec![3usize]);
+    // a reference backend warmed the same way holds a plan for every
+    // prefill bucket and every decode width 1..=3
+    stats_probe.warm_up(3);
+    let s = stats_probe.plan_stats().unwrap();
+    let want = stats_probe.prefill_buckets().len() as u64 + 3;
+    assert_eq!(s.built, want);
+    assert_eq!(s.cached as u64, want);
+    // and the engine still serves correctly after warm-up
+    let stream = eng.generate((1..20).collect(),
+                              GenerateParams::new().max_new_tokens(4));
+    let toks = stream.collect().unwrap();
+    assert_eq!(toks.len(), 4);
+    eng.shutdown();
+}
+
+#[test]
+fn warmed_buckets_never_replan_under_load() {
+    // the serving-path property the warm-up exists for: after warm_up,
+    // bucket-chained prefills and packed decodes are all cache hits
+    let b = backend();
+    b.warm_up(4);
+    let built = b.plan_stats().unwrap().built;
+    // 300 tokens chain buckets 256+16+16 with a 12-step width-1 tail
+    // decode; all four shapes were warmed
+    let prompt = vec![7i32; 300];
+    let (cache, _) = b.prefill_any(&prompt).unwrap();
+    let mut batched = CacheState::zeros(b.cfg(), 4);
+    for s in 0..4 {
+        batched.copy_slot_from(s, &cache, 0);
+    }
+    b.decode_step(&batched, &[1, 2, 3, 4]).unwrap();
+    let s = b.plan_stats().unwrap();
+    assert_eq!(s.built, built, "serving warmed buckets must not plan");
+    assert!(s.hits > 0);
+}

@@ -1,0 +1,28 @@
+//! M2_PLAN environment selection, isolated in its own test binary.
+//!
+//! This file must contain exactly ONE test: `std::env::set_var` is not
+//! thread-safe against the `env::var` reads other tests perform
+//! (concurrent setenv/getenv is UB on glibc), and cargo runs all tests
+//! of one binary in parallel threads. A single test in a dedicated
+//! binary serialises by construction.
+
+use mamba2_serve::runtime::{Backend, PlanMode, ReferenceBackend};
+
+#[test]
+fn plan_mode_env_is_honoured() {
+    // M2_PLAN=off must select the hand-scheduled oracle at construction
+    // time (this is what `--plan off` on the binaries sets)
+    std::env::set_var("M2_PLAN", "off");
+    let b = ReferenceBackend::seeded("tiny", 0).unwrap();
+    assert_eq!(b.plan_mode(), PlanMode::Off);
+    assert!(b.plan_stats().is_none());
+    assert!(b.plan_dump("prefill", 16, 1).is_none());
+
+    std::env::set_var("M2_PLAN", "on");
+    let c = ReferenceBackend::seeded("tiny", 0).unwrap();
+    assert_eq!(c.plan_mode(), PlanMode::On);
+
+    std::env::remove_var("M2_PLAN");
+    let d = ReferenceBackend::seeded("tiny", 0).unwrap();
+    assert_eq!(d.plan_mode(), PlanMode::On, "planned is the default");
+}
