@@ -95,6 +95,6 @@ fn main() -> Result<()> {
     println!("checkpoint saved to {out} — try:\n  cargo run --release \
               --example perplexity_eval -- --model {model} --weights {out}\n  \
               cargo run --release --bin mamba2-serve -- --model {model} \
-              --weights {out}");
+              --checkpoint {out}");
     Ok(())
 }

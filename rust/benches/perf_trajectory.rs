@@ -5,29 +5,41 @@
 //! `bench_support::validate_trajectory_json` and README §Benchmarks):
 //!
 //!   * batch-fused decode: tokens/s at B ∈ {1, 4, 16} from realistic
-//!     (prefilled) cache slots — the B=16/B=1 ratio is the structural
-//!     check that batching actually fuses (weights read once per launch,
-//!     matmul row blocks across the threadpool), and CI's `perf-smoke`
-//!     job fails if it drops below 2×,
+//!     (prefilled) cache slots, **at both weight precisions** (schema
+//!     1.2): the f32 rows are the cross-PR comparable baseline, the
+//!     bf16 rows are the precision pass's headline — halved
+//!     `bytes_streamed_per_token`, and tokens/s that must beat f32 at
+//!     B = 1 (the pass exists because decode is bandwidth-bound),
 //!   * chunked-parallel prefill: tokens/s at L ∈ {512, 2048}, plus
 //!     analytic MFU/HBU against the host-CPU roofline,
-//!   * the plan cache (schema 1.1): plans built, cache hits and total
-//!     planning time across the whole run — "build plan once, execute
-//!     many" made measurable (zero block on planner-less backends).
+//!   * the plan cache: plans built, cache hits and total planning time
+//!     across the whole run (zero block on planner-less backends).
 //!
 //! `--quick` trims the measurement protocol for CI smoke runs (the sweep
 //! itself is never trimmed — the schema pins it). `--check` exits
-//! non-zero when the batched-decode speedup misses the gate
-//! (`--min-speedup X` overrides the 2.0 default).
+//! non-zero when a structural gate misses:
+//!
+//!   * f32 decode B=16 tok/s ≥ 2× B=1 (`--min-speedup X` overrides),
+//!   * prefill L=2048 tok/s ≥ the same multiple of f32 B=1 decode
+//!     tok/s (the prefill fan-out analogue of the fusion gate),
+//!   * bf16 decode B=1 tok/s > f32 B=1 tok/s (skipped when the backend
+//!     has no precision pass, e.g. XLA).
+//!
+//! `--baseline <BENCH_*.json>` additionally gates the f32 decode rows
+//! against a previous PR's artifact (fail on a >10% tok/s drop;
+//! incomparable baselines are reported and skipped).
 
-use mamba2_serve::bench_support::{batch_speedup, decode_point,
+use mamba2_serve::bench_support::{batch_speedup, compare_to_baseline,
+                                  decode_point, dtype_speedup,
                                   open_backend, prefill_point, quick,
                                   trajectory_json, write_trajectory,
-                                  DecodePoint, PrefillPoint};
-use mamba2_serve::runtime::{reference, Backend, CacheState};
+                                  BaselineCheck, DecodePoint,
+                                  PrefillPoint};
+use mamba2_serve::runtime::{reference, Backend, CacheState, PlanStats};
 use mamba2_serve::util::benchkit::{Bench, Table};
+use mamba2_serve::util::json::Json;
 
-const TAG: &str = "pr4";
+const TAG: &str = "pr5";
 const MODEL: &str = "sim-130m";
 const DECODE_BATCHES: [usize; 3] = [1, 4, 16];
 const PREFILL_LENS: [usize; 2] = [512, 2048];
@@ -42,20 +54,13 @@ fn arg_after(flag: &str) -> Option<String> {
     None
 }
 
-fn main() {
-    let check = std::env::args().any(|a| a == "--check");
-    let min_speedup: f64 = arg_after("--min-speedup")
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(2.0);
-    let session = open_backend(MODEL);
-    let threads = reference::default_threads();
-    let mut bench = Bench::new().quiet();
-
-    // ---- decode sweep: one prefilled sequence broadcast to B slots ----
+/// Decode sweep over one backend: B ∈ {1, 4, 16} from prefilled slots.
+fn decode_sweep(session: &dyn Backend, bench: &mut Bench,
+                out: &mut Vec<DecodePoint>) {
+    let dt = session.weights_dtype();
     let prompt: Vec<i32> = (0..32).map(|i| ((i * 37 + 11) % 512) as i32)
         .collect();
     let (seed_cache, _) = session.prefill_any(&prompt).unwrap();
-    let mut decode: Vec<DecodePoint> = Vec::new();
     for &b in &DECODE_BATCHES {
         let mut cache = CacheState::zeros(session.cfg(), b);
         for s in 0..b {
@@ -63,16 +68,50 @@ fn main() {
         }
         let tokens: Vec<i32> =
             (0..b as i32).map(|i| (i * 7 + 3) % 512).collect();
-        let m = bench.measure(&format!("decode.b{b}"), b as f64, || {
+        let m = bench.measure(&format!("decode.{dt}.b{b}"), b as f64,
+                              || {
             session.decode_step(&cache, &tokens).unwrap();
         });
-        decode.push(decode_point(&session.cost("decode_step", None, b),
-                                 b, m.summary.mean));
-        eprintln!("  decode B={b}: {:.2} ms/step, {:.1} tok/s",
-                  m.summary.mean * 1e3, b as f64 / m.summary.mean);
+        // the decode plan is warm after the measurement, so the byte
+        // model answers from the plan (halved weights under bf16)
+        out.push(decode_point(&session.cost("decode_step", None, b), b,
+                              m.summary.mean, dt,
+                              session.bytes_streamed_per_token(b)));
+        eprintln!("  decode[{dt}] B={b}: {:.2} ms/step, {:.1} tok/s, \
+                   {:.0} B/tok",
+                  m.summary.mean * 1e3, b as f64 / m.summary.mean,
+                  session.bytes_streamed_per_token(b));
+    }
+}
+
+fn main() {
+    let check = std::env::args().any(|a| a == "--check");
+    let min_speedup: f64 = arg_after("--min-speedup")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2.0);
+    let baseline_path = arg_after("--baseline");
+    // the sweep owns the dtype knob: the f32 rows are mandatory (the
+    // schema's cross-PR baseline), whatever the inherited env says
+    std::env::set_var("M2_WEIGHTS", "f32");
+    let session = open_backend(MODEL);
+    let threads = reference::default_threads();
+    let mut bench = Bench::new().quiet();
+
+    // ---- decode sweeps: f32 baseline, then the bf16 weight stream ----
+    let mut decode: Vec<DecodePoint> = Vec::new();
+    decode_sweep(session.as_ref(), &mut bench, &mut decode);
+    std::env::set_var("M2_WEIGHTS", "bf16");
+    let session_bf16 = open_backend(MODEL);
+    std::env::set_var("M2_WEIGHTS", "f32");
+    let has_bf16 = session_bf16.weights_dtype() == "bf16";
+    if has_bf16 {
+        decode_sweep(session_bf16.as_ref(), &mut bench, &mut decode);
+    } else {
+        eprintln!("  backend {} has no bf16 weight stream — f32 rows \
+                   only", session_bf16.name());
     }
 
-    // ---- prefill sweep --------------------------------------------------
+    // ---- prefill sweep (always f32: the pass is decode-only) --------
     let mut prefill: Vec<PrefillPoint> = Vec::new();
     for &l in &PREFILL_LENS {
         let tokens: Vec<i32> = (0..l).map(|i| ((i * 37 + 11) % 512) as i32)
@@ -91,11 +130,13 @@ fn main() {
         &format!("Perf trajectory {TAG} — batch-fused decode \
                   ({MODEL}, {} ({}), {threads} threads)",
                  session.name(), session.platform()),
-        &["B", "ms/step", "tok/s", "MFU %", "HBU %"]);
+        &["B", "weights", "ms/step", "tok/s", "B/tok", "MFU %", "HBU %"]);
     for p in &decode {
         td.row(vec![p.batch.to_string(),
+                    p.weights_dtype.clone(),
                     format!("{:.3}", p.ms_per_step),
                     format!("{:.1}", p.tokens_per_s),
+                    format!("{:.0}", p.bytes_streamed_per_token),
                     format!("{:.2}", p.mfu * 100.0),
                     format!("{:.2}", p.hbu * 100.0)]);
     }
@@ -112,7 +153,22 @@ fn main() {
     }
     tp.print();
 
-    let plan_stats = session.plan_stats();
+    // the plan_cache block covers the WHOLE run: both sessions' plans
+    // (the bf16 sweep builds its own decode plans) summed together
+    let bf16_stats = if has_bf16 {
+        session_bf16.plan_stats()
+    } else {
+        None
+    };
+    let plan_stats = match (session.plan_stats(), bf16_stats) {
+        (Some(a), Some(b)) => Some(PlanStats {
+            built: a.built + b.built,
+            hits: a.hits + b.hits,
+            planning_ms: a.planning_ms + b.planning_ms,
+            cached: a.cached + b.cached,
+        }),
+        (a, b) => a.or(b),
+    };
     if let Some(ps) = plan_stats {
         eprintln!("  plan cache: {} built, {} hits, {:.2} ms planning",
                   ps.built, ps.hits, ps.planning_ms);
@@ -124,12 +180,72 @@ fn main() {
         std::process::exit(1);
     });
     let speedup = batch_speedup(&decode);
-    println!("wrote {} (batched decode B=16 vs B=1: {speedup:.2}x)",
+    let bf16_ratio = dtype_speedup(&decode, 1);
+    println!("wrote {} (f32 decode B=16 vs B=1: {speedup:.2}x; bf16 vs \
+              f32 at B=1: {bf16_ratio:.2}x)",
              path.display());
 
-    if check && speedup < min_speedup {
-        eprintln!("FAIL: batched decode speedup {speedup:.2}x < \
-                   {min_speedup:.2}x gate — batching is not fusing");
+    // ---- structural gates (--check) -------------------------------------
+    let mut failed = false;
+    if check {
+        if speedup < min_speedup {
+            eprintln!("FAIL: batched decode speedup {speedup:.2}x < \
+                       {min_speedup:.2}x gate — batching is not fusing");
+            failed = true;
+        }
+        // prefill analogue of the fusion gate: the fanned-out chunked
+        // prefill at L=2048 must clear the same multiple of the
+        // single-slot decode rate (both are per-token rates on the
+        // same weights, so the ratio is runner-noise-robust)
+        let b1_f32 = decode.iter()
+            .find(|p| p.batch == 1 && p.weights_dtype == "f32")
+            .map(|p| p.tokens_per_s)
+            .unwrap_or(0.0);
+        let pre2048 = prefill.iter().find(|p| p.seq_len == 2048)
+            .map(|p| p.tokens_per_s)
+            .unwrap_or(0.0);
+        if pre2048 < min_speedup * b1_f32 {
+            eprintln!("FAIL: prefill L=2048 at {pre2048:.0} tok/s < \
+                       {min_speedup:.1}x the B=1 decode rate \
+                       ({b1_f32:.1}) — the chunked path lost its \
+                       parallel win");
+            failed = true;
+        }
+        if has_bf16 && bf16_ratio <= 1.0 {
+            eprintln!("FAIL: bf16 decode at B=1 is {bf16_ratio:.2}x f32 \
+                       — the halved weight stream must pay on the \
+                       bandwidth-bound path");
+            failed = true;
+        }
+    }
+
+    // ---- perf gate vs the previous PR's artifact ------------------------
+    if let Some(bp) = baseline_path {
+        let text = std::fs::read_to_string(&bp).unwrap_or_else(|e| {
+            eprintln!("cannot read baseline {bp}: {e}");
+            std::process::exit(1);
+        });
+        let old = Json::parse(&text).unwrap_or_else(|e| {
+            eprintln!("cannot parse baseline {bp}: {e}");
+            std::process::exit(1);
+        });
+        match compare_to_baseline(&doc, &old, 0.10) {
+            BaselineCheck::Skipped(why) => {
+                println!("perf gate: baseline {bp} skipped — {why}");
+            }
+            BaselineCheck::Compared { regressions }
+                if regressions.is_empty() => {
+                println!("perf gate: no f32 decode regression vs {bp}");
+            }
+            BaselineCheck::Compared { regressions } => {
+                for r in &regressions {
+                    eprintln!("FAIL: {r}");
+                }
+                failed = true;
+            }
+        }
+    }
+    if failed {
         std::process::exit(1);
     }
 }

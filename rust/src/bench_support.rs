@@ -130,18 +130,32 @@ pub fn fmt_pct(x: f64) -> String {
 /// (`plans_built`, `plan_hits`, `planning_ms`) — the lowering
 /// pipeline's "build plan once, execute many" economics. Zero-valued
 /// on backends without a planner.
-pub const BENCH_SCHEMA_VERSION: f64 = 1.1;
+///
+/// 1.1 → 1.2 (PR 5): every decode row carries `weights_dtype` (the
+/// precision the weight matrices streamed as) and
+/// `bytes_streamed_per_token` (the byte model the schedule was chosen
+/// against, per generated token) — the precision pass made measurable.
+/// The decode sweep may now contain one row set per dtype; the B ∈
+/// {1, 16} coverage requirement applies to the f32 rows, and
+/// `batch_speedup_b16_vs_b1` is computed over f32 rows only so the
+/// fusion gate stays comparable with pre-1.2 trajectories.
+pub const BENCH_SCHEMA_VERSION: f64 = 1.2;
 
 /// One decode measurement: `tokens_per_s` is generated tokens per
 /// wall-second (`batch / mean step seconds`), `ms_per_step` the mean
 /// batched-step wall time, MFU/HBU analytic (backend cost model over the
-/// `CPU_HOST` roofline).
+/// `CPU_HOST` roofline). Schema 1.2 adds the weight stream's dtype and
+/// its modelled bytes per generated token.
 pub struct DecodePoint {
     pub batch: usize,
     pub ms_per_step: f64,
     pub tokens_per_s: f64,
     pub mfu: f64,
     pub hbu: f64,
+    /// weight stream precision of this row (`"f32"` / `"bf16"`)
+    pub weights_dtype: String,
+    /// modelled bytes streamed per generated token at this width
+    pub bytes_streamed_per_token: f64,
 }
 
 /// One prefill measurement: `tokens_per_s = seq_len / mean seconds`.
@@ -153,8 +167,12 @@ pub struct PrefillPoint {
     pub hbu: f64,
 }
 
-/// Build a decode point from a measured mean and the backend's cost.
-pub fn decode_point(cost: &CostInfo, batch: usize, mean_seconds: f64)
+/// Build a decode point from a measured mean, the backend's cost, and
+/// the weight stream's dtype + byte model
+/// ([`crate::runtime::Backend::weights_dtype`] /
+/// [`crate::runtime::Backend::bytes_streamed_per_token`]).
+pub fn decode_point(cost: &CostInfo, batch: usize, mean_seconds: f64,
+                    weights_dtype: &str, bytes_streamed_per_token: f64)
     -> DecodePoint {
     DecodePoint {
         batch,
@@ -162,6 +180,8 @@ pub fn decode_point(cost: &CostInfo, batch: usize, mean_seconds: f64)
         tokens_per_s: batch as f64 / mean_seconds,
         mfu: mfu(cost, mean_seconds, CPU_HOST.peak_tflops),
         hbu: hbu(cost, mean_seconds, CPU_HOST.peak_gbps),
+        weights_dtype: weights_dtype.to_string(),
+        bytes_streamed_per_token,
     }
 }
 
@@ -179,16 +199,95 @@ pub fn prefill_point(cost: &CostInfo, seq_len: usize, mean_seconds: f64)
 
 /// Batched-decode speedup: tokens/s at the widest measured batch over
 /// tokens/s at batch 1 — the structural "batching actually fuses" ratio
-/// CI gates on (≥ 2× at B=16 on any multi-core runner).
+/// CI gates on (≥ 2× at B=16 on any multi-core runner). Computed over
+/// the f32 rows (falling back to all rows for dtype-less inputs) so
+/// the gate never mixes precisions.
 pub fn batch_speedup(decode: &[DecodePoint]) -> f64 {
-    let b1 = decode.iter().find(|p| p.batch == 1);
-    let bmax = decode.iter().max_by_key(|p| p.batch);
+    let f32_rows: Vec<&DecodePoint> = decode.iter()
+        .filter(|p| p.weights_dtype == "f32").collect();
+    let rows: Vec<&DecodePoint> = if f32_rows.is_empty() {
+        decode.iter().collect()
+    } else {
+        f32_rows
+    };
+    let b1 = rows.iter().find(|p| p.batch == 1);
+    let bmax = rows.iter().max_by_key(|p| p.batch);
     match (b1, bmax) {
         (Some(a), Some(b)) if a.tokens_per_s > 0.0 => {
             b.tokens_per_s / a.tokens_per_s
         }
         _ => 0.0,
     }
+}
+
+/// bf16-over-f32 decode throughput ratio at one batch width (0.0 when
+/// either row is missing) — the perf-smoke gate that the precision
+/// pass actually pays (`bf16 tok/s > f32 tok/s` ⇔ ratio > 1).
+pub fn dtype_speedup(decode: &[DecodePoint], batch: usize) -> f64 {
+    let find = |dt: &str| decode.iter()
+        .find(|p| p.batch == batch && p.weights_dtype == dt);
+    match (find("f32"), find("bf16")) {
+        (Some(f), Some(b)) if f.tokens_per_s > 0.0 => {
+            b.tokens_per_s / f.tokens_per_s
+        }
+        _ => 0.0,
+    }
+}
+
+/// Result of gating a fresh trajectory against a previous PR's
+/// artifact (the CI perf-gate step).
+pub enum BaselineCheck {
+    /// not comparable (schema drift, missing rows) — CI prints the
+    /// reason as a visible notice and moves on
+    Skipped(String),
+    /// compared; empty means no f32 decode regression beyond tolerance
+    Compared { regressions: Vec<String> },
+}
+
+/// Compare a fresh trajectory against a previous PR's `BENCH_*.json`:
+/// f32 decode tokens/s at every batch present in both must not drop by
+/// more than `tol` (fractional, e.g. 0.10). Prefill and bf16 rows are
+/// informational — the gate is the f32 serving floor.
+pub fn compare_to_baseline(new: &Json, old: &Json, tol: f64)
+    -> BaselineCheck {
+    let ver = |j: &Json| j.get("schema_version").and_then(Json::as_f64);
+    if ver(old) != Some(BENCH_SCHEMA_VERSION) {
+        return BaselineCheck::Skipped(format!(
+            "baseline schema {:?} != {BENCH_SCHEMA_VERSION} — not \
+             comparable", ver(old)));
+    }
+    // f32 rows (dtype-less pre-1.2 rows never reach here: the schema
+    // check above already skipped them)
+    let rows = |j: &Json| -> Vec<(f64, f64)> {
+        j.get("decode").and_then(Json::as_arr).map(|a| {
+            a.iter().filter(|p| {
+                p.get("weights_dtype").and_then(Json::as_str)
+                    == Some("f32")
+            }).filter_map(|p| {
+                Some((p.get("batch").and_then(Json::as_f64)?,
+                      p.get("tokens_per_s").and_then(Json::as_f64)?))
+            }).collect()
+        }).unwrap_or_default()
+    };
+    let old_rows = rows(old);
+    let new_rows = rows(new);
+    if old_rows.is_empty() || new_rows.is_empty() {
+        return BaselineCheck::Skipped(
+            "no comparable f32 decode rows".to_string());
+    }
+    let mut regressions = Vec::new();
+    for (b, old_tps) in &old_rows {
+        if let Some((_, new_tps)) =
+            new_rows.iter().find(|(nb, _)| nb == b) {
+            if *new_tps < old_tps * (1.0 - tol) {
+                regressions.push(format!(
+                    "decode B={b} f32: {new_tps:.1} tok/s < \
+                     {:.1} ({:.0}% floor of baseline {old_tps:.1})",
+                    old_tps * (1.0 - tol), (1.0 - tol) * 100.0));
+            }
+        }
+    }
+    BaselineCheck::Compared { regressions }
 }
 
 /// Assemble the schema-pinned trajectory document. Field names and units
@@ -209,6 +308,9 @@ pub fn trajectory_json(tag: &str, model: &str, backend: &str,
         ("tokens_per_s", Json::num(p.tokens_per_s)),
         ("mfu", Json::num(p.mfu)),
         ("hbu", Json::num(p.hbu)),
+        ("weights_dtype", Json::str(&p.weights_dtype)),
+        ("bytes_streamed_per_token",
+         Json::num(p.bytes_streamed_per_token)),
     ])).collect();
     let pre = prefill.iter().map(|p| Json::obj(vec![
         ("seq_len", Json::num(p.seq_len as f64)),
@@ -278,12 +380,31 @@ pub fn validate_trajectory_json(j: &Json) -> Result<()> {
     if j.get("quick").and_then(Json::as_bool).is_none() {
         bail!("BENCH json: missing bool field \"quick\"");
     }
-    let batches = require_points(
+    require_points(
         j, "decode",
-        &["batch", "ms_per_step", "tokens_per_s", "mfu", "hbu"])?;
+        &["batch", "ms_per_step", "tokens_per_s", "mfu", "hbu",
+          "bytes_streamed_per_token"])?;
+    // 1.2: every decode row is dtype-tagged, and the f32 rows (the
+    // cross-PR comparable set) must still cover B = 1 and B = 16
+    let dec = j.get("decode").and_then(Json::as_arr).unwrap();
+    let mut f32_batches = Vec::new();
+    for (i, point) in dec.iter().enumerate() {
+        let dt = point.get("weights_dtype").and_then(Json::as_str)
+            .with_context(|| format!(
+                "BENCH json: decode[{i}] missing string \
+                 \"weights_dtype\""))?;
+        if !matches!(dt, "f32" | "bf16") {
+            bail!("BENCH json: decode[{i}].weights_dtype {dt:?} not \
+                   f32|bf16");
+        }
+        if dt == "f32" {
+            f32_batches.push(
+                point.get("batch").and_then(Json::as_f64).unwrap());
+        }
+    }
     for want in [1.0, 16.0] {
-        if !batches.contains(&want) {
-            bail!("BENCH json: decode sweep missing batch {want}");
+        if !f32_batches.contains(&want) {
+            bail!("BENCH json: f32 decode sweep missing batch {want}");
         }
     }
     let lens = require_points(
@@ -334,11 +455,22 @@ mod tests {
 
     fn sample_doc() -> Json {
         let cfg = crate::runtime::sim_config("sim-130m").unwrap();
-        let decode: Vec<DecodePoint> = [1usize, 4, 16].iter().map(|&b| {
+        let mut decode: Vec<DecodePoint> = [1usize, 4, 16].iter()
+            .map(|&b| {
+                let cost = crate::runtime::analytic_cost(
+                    &cfg, "decode_step", None, b);
+                // fake 2× fusion win
+                decode_point(&cost, b, 0.004 / b as f64, "f32",
+                             cost.bytes_accessed / b as f64)
+            }).collect();
+        // a bf16 row set rides along (schema 1.2)
+        for &b in &[1usize, 16] {
             let cost = crate::runtime::analytic_cost(
                 &cfg, "decode_step", None, b);
-            decode_point(&cost, b, 0.004 / b as f64) // fake 2× fusion win
-        }).collect();
+            decode.push(decode_point(&cost, b, 0.003 / b as f64, "bf16",
+                                     cost.bytes_accessed * 0.55
+                                         / b as f64));
+        }
         let prefill: Vec<PrefillPoint> = [512usize, 2048].iter()
             .map(|&l| {
                 let cost = crate::runtime::analytic_cost(
@@ -397,6 +529,111 @@ mod tests {
     }
 
     #[test]
+    fn trajectory_schema_pins_dtype_fields() {
+        // 1.2: dropping either per-row precision field must fail
+        for key in ["weights_dtype", "bytes_streamed_per_token"] {
+            let j = sample_doc();
+            let mut m = j.as_obj().unwrap().clone();
+            let dec = m.get("decode").unwrap().as_arr().unwrap().to_vec();
+            let mut p0 = dec[0].as_obj().unwrap().clone();
+            p0.remove(key);
+            let mut dec2 = dec.clone();
+            dec2[0] = Json::Obj(p0);
+            m.insert("decode".into(), Json::Arr(dec2));
+            let e = validate_trajectory_json(&Json::Obj(m))
+                .expect_err(&format!("must reject missing {key}"));
+            assert!(e.to_string().contains("BENCH json"), "{e}");
+        }
+        // unknown dtypes are schema violations
+        let j = sample_doc();
+        let mut m = j.as_obj().unwrap().clone();
+        let dec = m.get("decode").unwrap().as_arr().unwrap().to_vec();
+        let mut p0 = dec[0].as_obj().unwrap().clone();
+        p0.insert("weights_dtype".into(), Json::str("fp8"));
+        let mut dec2 = dec.clone();
+        dec2[0] = Json::Obj(p0);
+        m.insert("decode".into(), Json::Arr(dec2));
+        assert!(validate_trajectory_json(&Json::Obj(m)).is_err());
+        // bf16 rows are optional (planner-less backends), but the f32
+        // rows must still cover B = 1 and 16: relabelling every f32 row
+        // as bf16 breaks comparability
+        let j = sample_doc();
+        let mut m = j.as_obj().unwrap().clone();
+        let dec: Vec<Json> = m.get("decode").unwrap().as_arr().unwrap()
+            .iter().map(|p| {
+                let mut o = p.as_obj().unwrap().clone();
+                o.insert("weights_dtype".into(), Json::str("bf16"));
+                Json::Obj(o)
+            }).collect();
+        m.insert("decode".into(), Json::Arr(dec));
+        assert!(validate_trajectory_json(&Json::Obj(m)).is_err());
+    }
+
+    #[test]
+    fn dtype_speedup_compares_same_batch_rows() {
+        let cfg = crate::runtime::sim_config("sim-130m").unwrap();
+        let cost = crate::runtime::analytic_cost(
+            &cfg, "decode_step", None, 1);
+        let points = vec![
+            decode_point(&cost, 1, 0.004, "f32", 1.0e6),
+            decode_point(&cost, 1, 0.003, "bf16", 0.55e6),
+            decode_point(&cost, 16, 0.010, "f32", 0.2e6),
+        ];
+        let r = dtype_speedup(&points, 1);
+        assert!((r - 0.004 / 0.003).abs() < 1e-9);
+        // missing bf16 row at that width → 0 (gate fails loudly)
+        assert_eq!(dtype_speedup(&points, 16), 0.0);
+    }
+
+    #[test]
+    fn baseline_gate_flags_f32_regressions_only() {
+        let old = sample_doc();
+        // identical run: no regressions
+        match compare_to_baseline(&sample_doc(), &old, 0.10) {
+            BaselineCheck::Compared { regressions } => {
+                assert!(regressions.is_empty(), "{regressions:?}");
+            }
+            BaselineCheck::Skipped(why) => panic!("skipped: {why}"),
+        }
+        // slow the new f32 B=16 row by 2×: flagged
+        let mut m = sample_doc().as_obj().unwrap().clone();
+        let dec: Vec<Json> = m.get("decode").unwrap().as_arr().unwrap()
+            .iter().map(|p| {
+                let mut o = p.as_obj().unwrap().clone();
+                let is_f32_16 = o.get("weights_dtype")
+                    .and_then(Json::as_str) == Some("f32")
+                    && o.get("batch").and_then(Json::as_f64)
+                        == Some(16.0);
+                if is_f32_16 {
+                    let tps = o.get("tokens_per_s")
+                        .and_then(Json::as_f64).unwrap();
+                    o.insert("tokens_per_s".into(),
+                             Json::num(tps / 2.0));
+                }
+                Json::Obj(o)
+            }).collect();
+        m.insert("decode".into(), Json::Arr(dec));
+        match compare_to_baseline(&Json::Obj(m), &old, 0.10) {
+            BaselineCheck::Compared { regressions } => {
+                assert_eq!(regressions.len(), 1, "{regressions:?}");
+                assert!(regressions[0].contains("B=16"), "{regressions:?}");
+            }
+            BaselineCheck::Skipped(why) => panic!("skipped: {why}"),
+        }
+        // a baseline from another schema era is skipped, not compared
+        let mut m = old.as_obj().unwrap().clone();
+        m.insert("schema_version".into(), Json::num(1.1));
+        match compare_to_baseline(&sample_doc(), &Json::Obj(m), 0.10) {
+            BaselineCheck::Skipped(why) => {
+                assert!(why.contains("schema"), "{why}");
+            }
+            BaselineCheck::Compared { .. } => {
+                panic!("must skip old schemas");
+            }
+        }
+    }
+
+    #[test]
     fn trajectory_schema_pins_plan_cache_fields() {
         // each plan-cache counter is individually mandatory (1.1)
         for key in ["plans_built", "plan_hits", "planning_ms"] {
@@ -419,11 +656,15 @@ mod tests {
         m.insert("plan_cache".into(), Json::Obj(pc));
         assert!(validate_trajectory_json(&Json::Obj(m)).is_err());
         // a planner-less backend reports the zero block and validates
+        // (f32-only decode rows — bf16 rows are optional)
         let cfg = crate::runtime::sim_config("sim-130m").unwrap();
         let cost = crate::runtime::analytic_cost(
             &cfg, "decode_step", None, 1);
-        let decode = vec![decode_point(&cost, 1, 0.004),
-                          decode_point(&cost, 16, 0.001)];
+        let decode = vec![
+            decode_point(&cost, 1, 0.004, "f32", cost.bytes_accessed),
+            decode_point(&cost, 16, 0.001, "f32",
+                         cost.bytes_accessed / 16.0),
+        ];
         let pcost = crate::runtime::analytic_cost(
             &cfg, "prefill", Some(512), 1);
         let prefill = vec![prefill_point(&pcost, 512, 0.05)];
@@ -441,11 +682,16 @@ mod tests {
             &cfg, "decode_step", None, 1);
         // B=16 step takes 4× the B=1 step → 4× tokens/s ratio
         let points = vec![
-            decode_point(&cost, 1, 0.001),
-            decode_point(&cost, 16, 0.004),
+            decode_point(&cost, 1, 0.001, "f32", 1.0),
+            decode_point(&cost, 16, 0.004, "f32", 1.0),
         ];
         assert!((batch_speedup(&points) - 4.0).abs() < 1e-9);
         assert_eq!(batch_speedup(&[]), 0.0);
+        // bf16 rows never leak into the fusion ratio: a (misleadingly
+        // fast) bf16 B=16 row leaves the f32 ratio untouched
+        let mut mixed = points;
+        mixed.push(decode_point(&cost, 16, 0.0001, "bf16", 1.0));
+        assert!((batch_speedup(&mixed) - 4.0).abs() < 1e-9);
     }
 
     #[test]

@@ -135,6 +135,18 @@ pub struct Engine {
     model_cfg: crate::runtime::ConfigInfo,
     metrics: Arc<Metrics>,
     rngs: Vec<Option<Rng>>,           // per-slot sampling rng
+    /// per-step decode buffers, reused across tokens so the hot loop
+    /// never reallocates (the logits copy is the big one: B × V floats
+    /// every step)
+    logits_buf: Vec<f32>,
+    tok_buf: Vec<i32>,
+    /// reusable packed-decode gather cache — the engine-side analogue
+    /// of the executor's arena. One scratch, rebuilt only when the
+    /// decode width changes (steady occupancy → zero per-token
+    /// allocation; memory stays bounded at one cache). Pure scratch:
+    /// every occupied slot is overwritten and the tail cleared each
+    /// step, so reuse is invisible vs the old fresh-zeros allocation.
+    packed_cache: Option<CacheState>,
 }
 
 impl Engine {
@@ -173,6 +185,9 @@ impl Engine {
             model_cfg,
             cfg,
             metrics: m2,
+            logits_buf: Vec::new(),
+            tok_buf: Vec::new(),
+            packed_cache: None,
         };
         eng.batcher.max_admissions_per_iter =
             eng.cfg.max_admissions_per_iter;
@@ -380,41 +395,56 @@ impl Engine {
         let full = self.cache.batch();
         let width = self.session.decode_width(n).clamp(n.max(1), full);
         let packed = width < full;
-        let out = if packed {
-            let mut cachep = CacheState::zeros(&self.model_cfg, width);
+        // per-step token column in the reused buffer (no per-step alloc)
+        self.tok_buf.clear();
+        self.tok_buf.resize(if packed { width } else { full }, 0);
+        let logits = if packed {
+            // reused gather scratch: occupied slots copied in, the
+            // dummy tail cleared — exactly the old fresh-zeros cache,
+            // without the per-token allocation (rebuilt only when the
+            // packed width changes)
+            if self.packed_cache.as_ref()
+                .map_or(true, |c| c.batch() != width) {
+                self.packed_cache =
+                    Some(CacheState::zeros(&self.model_cfg, width));
+            }
+            let cachep = self.packed_cache.as_mut().expect("just set");
             for (j, &s) in slots.iter().enumerate() {
                 cachep.copy_slot_from(j, &self.cache, s);
             }
-            let mut tokens = vec![0i32; width];
-            for (j, seq) in active.iter().enumerate() {
-                tokens[j] = seq.last_token;
+            for s in slots.len()..width {
+                cachep.clear_slot(s);
             }
-            let out = self.session.decode_step(&cachep, &tokens)?;
+            for (j, seq) in active.iter().enumerate() {
+                self.tok_buf[j] = seq.last_token;
+            }
+            let out = self.session.decode_step(cachep, &self.tok_buf)?;
             // scatter advanced state back before any retire can clear it
             for (j, &s) in slots.iter().enumerate() {
                 self.cache.copy_slot_from(s, &out.cache, j);
             }
-            out
+            out.logits
         } else {
-            let mut tokens = vec![0i32; full];
             for seq in &active {
-                tokens[seq.slot.0] = seq.last_token;
+                self.tok_buf[seq.slot.0] = seq.last_token;
             }
-            let out = self.session.decode_step(&self.cache, &tokens)?;
+            let out = self.session.decode_step(&self.cache,
+                                               &self.tok_buf)?;
             self.cache = out.cache;
-            out
+            out.logits
         };
-        let v = *out.logits.dims.last().unwrap() as usize;
-        let all = out.logits.as_f32();
+        let v = *logits.dims.last().unwrap() as usize;
+        // reuse the per-step logits buffer instead of reallocating
+        // B × V floats every token
+        logits.read_f32_into(&mut self.logits_buf);
         for (j, seq) in active.iter().enumerate() {
             // packed logits are row-aligned with the pack order, full
             // width logits with the slot index
             let r = if packed { j } else { seq.slot.0 };
-            let row = Tensor::f32("row", &[1, v as i64],
-                                  &all[r * v..(r + 1) * v]);
+            let row = &self.logits_buf[r * v..(r + 1) * v];
             let mut rng = self.rngs[seq.slot.0].take()
                 .unwrap_or_else(|| Rng::new(seq.req_id));
-            let tok = sample(&row, seq.sampling, &mut rng);
+            let tok = sample_row(row, seq.sampling, &mut rng);
             self.rngs[seq.slot.0] = Some(rng);
             Metrics::inc(&self.metrics.tokens_generated, 1);
             let alive = match self.sinks[seq.slot.0].as_mut() {
@@ -454,10 +484,19 @@ impl Engine {
     }
 }
 
+/// Sample from the last row of a logits tensor (admission path — once
+/// per request, so the decode allocation). The per-token hot loop goes
+/// through [`sample_row`] on the engine's reused buffer instead.
 fn sample(logits: &Tensor, sampling: Sampling, rng: &mut Rng) -> i32 {
     let vals = logits.as_f32();
     let v = *logits.dims.last().unwrap() as usize;
-    let row = &vals[vals.len() - v..];
+    sample_row(&vals[vals.len() - v..], sampling, rng)
+}
+
+/// Sample one token from a borrowed logits row — allocation-free except
+/// inside the non-greedy samplers' candidate sort.
+fn sample_row(row: &[f32], sampling: Sampling, rng: &mut Rng) -> i32 {
+    let v = row.len();
     match sampling {
         Sampling::Greedy => crate::runtime::argmax(row),
         Sampling::TopK { k, temperature, .. } => {
@@ -635,6 +674,24 @@ mod tests {
             let s = sample(&t, Sampling::TopK { k: 2, temperature: 1.0,
                                                 seed: 0 }, &mut rng);
             assert!(s == 1 || s == 2);
+        }
+    }
+
+    #[test]
+    fn sample_row_matches_tensor_sampler() {
+        // the hot-loop slice sampler and the admission-path tensor
+        // wrapper must agree exactly (same rng stream, same picks)
+        let row = [0.3f32, 2.0, -1.0, 0.9, 0.0];
+        let t = Tensor::f32("l", &[1, 5], &row);
+        for s in [Sampling::Greedy,
+                  Sampling::TopK { k: 3, temperature: 0.8, seed: 11 },
+                  Sampling::TopP { p: 0.9, temperature: 1.2, seed: 7 }] {
+            let mut r1 = Rng::new(42);
+            let mut r2 = Rng::new(42);
+            for _ in 0..20 {
+                assert_eq!(sample(&t, s, &mut r1),
+                           sample_row(&row, s, &mut r2));
+            }
         }
     }
 

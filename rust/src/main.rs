@@ -42,19 +42,31 @@ fn main() -> Result<()> {
         .opt("threads", "8", "server worker threads")
         .opt("artifacts", "", "artifacts dir (default: M2_ARTIFACTS or \
               <crate>/artifacts; xla backend only)")
-        .opt("weights", "", "optional trained checkpoint (.mbt)")
+        .opt("checkpoint", "", "optional trained checkpoint (.mbt) \
+              (was --weights before schema 1.2)")
         .opt("plan", "on", "plan-driven lowering: on|off (off = the \
               legacy hand-scheduled forward; reference backend only)")
+        .opt("weights", "f32", "weight stream precision: f32|bf16 \
+              (bf16 halves decode weight bandwidth, f32 accumulate; \
+              f32 is the bitwise baseline; reference backend only)")
         .parse_env();
 
-    // the flag is authoritative: it overwrites any inherited M2_PLAN
-    // (backends read the env at open time), and bad values fail loudly
-    // instead of silently meaning "on"
+    // the flags are authoritative: they overwrite any inherited
+    // M2_PLAN / M2_WEIGHTS (backends read the env at open time), and
+    // bad values fail loudly instead of silently meaning the default
     match cli.get("plan").as_str() {
         "on" => std::env::set_var("M2_PLAN", "on"),
         "off" => std::env::set_var("M2_PLAN", "off"),
         other => {
             eprintln!("--plan must be on|off (got {other:?})");
+            std::process::exit(2);
+        }
+    }
+    match mamba2_serve::runtime::WeightsDtype::parse(&cli.get("weights")) {
+        Some(w) => std::env::set_var("M2_WEIGHTS", w.as_str()),
+        None => {
+            eprintln!("--weights must be f32|bf16 (got {:?})",
+                      cli.get("weights"));
             std::process::exit(2);
         }
     }
@@ -76,19 +88,21 @@ fn main() -> Result<()> {
             log_info!("backend={} platform={} model={} ({:.1}M params)",
                       backend.name(), backend.platform(), model,
                       backend.cfg().n_params_total as f64 / 1e6);
-            log_info!("lowering: {}",
+            log_info!("lowering: {} (weights={})",
                       if backend.plan_stats().is_some() {
                           "plan-driven (build once, execute many; \
                            --plan off for the hand-scheduled oracle)"
                       } else {
                           "hand-scheduled / compiled executables"
-                      });
+                      },
+                      backend.weights_dtype());
         }
-        if !cli.get("weights").is_empty() {
+        if !cli.get("checkpoint").is_empty() {
             let w = mamba2_serve::tensor::load_mbt(
-                std::path::Path::new(&cli.get("weights")))?;
+                std::path::Path::new(&cli.get("checkpoint")))?;
             backend.load_weights(w)?;
-            log_info!("replica {i}: loaded weights {}", cli.get("weights"));
+            log_info!("replica {i}: loaded checkpoint {}",
+                      cli.get("checkpoint"));
         }
         let cfg = EngineConfig {
             batch_cap: cli.get_usize("batch-cap"),

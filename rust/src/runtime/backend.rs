@@ -240,11 +240,29 @@ pub trait Backend: Send {
 
     /// Pre-build whatever per-shape state first requests would otherwise
     /// pay for — for planning backends, the schedule of every prefill
-    /// bucket plus the decode widths up to `max_decode_width`. The
+    /// bucket plus the decode widths up to `max_decode_width`, and the
+    /// prepacked weight representations those schedules stream. The
     /// engine calls this once at shape-bucket registration (start-up).
     /// Default: nothing to warm.
     fn warm_up(&self, max_decode_width: usize) {
         let _ = max_decode_width;
+    }
+
+    /// Storage dtype of the streamed weight matrices (`"f32"` default;
+    /// `"bf16"` when the precision pass is active — DESIGN.md §8).
+    /// Recorded per decode row in `BENCH_*.json` (schema 1.2).
+    fn weights_dtype(&self) -> &'static str {
+        "f32"
+    }
+
+    /// Modelled bytes streamed per generated token at decode width
+    /// `batch` — weights once per launch, state per slot, halved weight
+    /// traffic under bf16. Planning backends answer from the warm
+    /// plan's byte model; the default derives from [`Backend::cost`].
+    /// Feeds `BENCH_*.json`'s `bytes_streamed_per_token` (schema 1.2).
+    fn bytes_streamed_per_token(&self, batch: usize) -> f64 {
+        let b = batch.max(1);
+        self.cost("decode_step", None, b).bytes_accessed / b as f64
     }
 
     /// Plan-cache counters (plans built, hits, planning time) for the

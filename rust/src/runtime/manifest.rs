@@ -23,6 +23,56 @@ pub struct CostInfo {
     pub transcendentals: f64,
 }
 
+/// Weight storage precision of an executable's streamed weight
+/// matrices (DESIGN.md §8). `F32` is the default and the bitwise-parity
+/// baseline; `Bf16` halves streamed weight bytes on the
+/// bandwidth-bound decode path (f32 accumulation throughout, paper
+/// §3.3 conventions).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum WeightsDtype {
+    #[default]
+    F32,
+    Bf16,
+}
+
+impl WeightsDtype {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            WeightsDtype::F32 => "f32",
+            WeightsDtype::Bf16 => "bf16",
+        }
+    }
+
+    /// Parse a user-facing spelling; `None` for anything else (callers
+    /// decide whether to error loudly or default).
+    pub fn parse(s: &str) -> Option<WeightsDtype> {
+        match s.trim() {
+            "f32" | "float32" => Some(WeightsDtype::F32),
+            "bf16" | "bfloat16" => Some(WeightsDtype::Bf16),
+            _ => None,
+        }
+    }
+
+    /// Default from the `M2_WEIGHTS` env var (`bf16` selects the
+    /// half-width weight stream; anything else is f32, mirroring
+    /// `PlanMode::from_env`'s lenient reading — the `--weights` flag is
+    /// the loud-failure path).
+    pub fn from_env() -> WeightsDtype {
+        match std::env::var("M2_WEIGHTS") {
+            Ok(v) => WeightsDtype::parse(&v).unwrap_or(WeightsDtype::F32),
+            Err(_) => WeightsDtype::F32,
+        }
+    }
+
+    /// Bytes per stored weight scalar.
+    pub fn bytes(&self) -> f64 {
+        match self {
+            WeightsDtype::F32 => 4.0,
+            WeightsDtype::Bf16 => 2.0,
+        }
+    }
+}
+
 /// The schedule chosen for one entrypoint — recorded per executable so
 /// tooling can see *how* a lowering was scheduled, not just what it
 /// cost. The reference backend's planner fills one per plan
@@ -39,6 +89,12 @@ pub struct ScheduleInfo {
     pub fanout: usize,
     /// fusion decisions taken, e.g. `residual.out_proj`
     pub fused: Vec<String>,
+    /// storage dtype of the streamed weight matrices, e.g. `f32` /
+    /// `bf16` ("" = not recorded, pre-1.2 manifests)
+    pub weights_dtype: String,
+    /// weight layout the contractions stream, e.g. `dense`, `tile32`
+    /// (f32 column panels of 32), `bf16-rows` ("" = not recorded)
+    pub weight_layout: String,
 }
 
 #[derive(Debug, Clone, Default)]
@@ -82,6 +138,9 @@ fn schedule_from_json(s: &Json) -> ScheduleInfo {
     let u = |k: &str| {
         s.get(k).and_then(Json::as_u64).unwrap_or(0) as usize
     };
+    let st = |k: &str| {
+        s.get(k).and_then(Json::as_str).unwrap_or("").to_string()
+    };
     ScheduleInfo {
         chunk_tile: u("chunk_tile"),
         row_block: u("row_block"),
@@ -90,6 +149,8 @@ fn schedule_from_json(s: &Json) -> ScheduleInfo {
             .map(|a| a.iter().filter_map(Json::as_str)
                  .map(String::from).collect())
             .unwrap_or_default(),
+        weights_dtype: st("weights_dtype"),
+        weight_layout: st("weight_layout"),
     }
 }
 
@@ -450,15 +511,32 @@ mod tests {
     fn schedule_record_parses() {
         let j = Json::parse(
             r#"{"chunk_tile": 24, "row_block": 64, "fanout": 8,
-                "fused": ["residual.out_proj"]}"#).unwrap();
+                "fused": ["residual.out_proj"],
+                "weights_dtype": "bf16", "weight_layout": "bf16-rows"}"#)
+            .unwrap();
         let s = schedule_from_json(&j);
         assert_eq!(s.chunk_tile, 24);
         assert_eq!(s.row_block, 64);
         assert_eq!(s.fanout, 8);
         assert_eq!(s.fused, vec!["residual.out_proj".to_string()]);
-        // missing keys degrade to the empty schedule, not an error
+        assert_eq!(s.weights_dtype, "bf16");
+        assert_eq!(s.weight_layout, "bf16-rows");
+        // missing keys degrade to the empty schedule, not an error —
+        // pre-1.2 manifests carry no dtype/layout fields
         let s = schedule_from_json(&Json::parse("{}").unwrap());
         assert_eq!(s, ScheduleInfo::default());
+    }
+
+    #[test]
+    fn weights_dtype_parses_and_prices() {
+        assert_eq!(WeightsDtype::parse("f32"), Some(WeightsDtype::F32));
+        assert_eq!(WeightsDtype::parse("bfloat16"),
+                   Some(WeightsDtype::Bf16));
+        assert_eq!(WeightsDtype::parse("fp8"), None);
+        assert_eq!(WeightsDtype::F32.bytes(), 4.0);
+        assert_eq!(WeightsDtype::Bf16.bytes(), 2.0);
+        assert_eq!(WeightsDtype::Bf16.as_str(), "bf16");
+        assert_eq!(WeightsDtype::default(), WeightsDtype::F32);
     }
 
     #[test]

@@ -29,7 +29,7 @@ pub mod session;
 pub use backend::{analytic_cost, argmax, argmax_last, Backend, CacheState,
                   PrefillOut, StepOut};
 pub use manifest::{sim_config, ConfigInfo, CostInfo, ExecutableSpec,
-                   Manifest, ScheduleInfo};
+                   Manifest, ScheduleInfo, WeightsDtype};
 pub use plan::{Plan, PlanCache, PlanMode, PlanStats};
 pub use reference::ReferenceBackend;
 #[cfg(feature = "xla")]

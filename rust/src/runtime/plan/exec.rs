@@ -1,5 +1,5 @@
 //! Plan executor: interprets a scheduled [`Plan`] over the
-//! `tensor::math` kernels (DESIGN.md §7).
+//! `tensor::math` kernels (DESIGN.md §7–§8).
 //!
 //! Bitwise-parity contract: every op reproduces the exact per-element
 //! scalar schedule of the hand-scheduled reference forward (the
@@ -8,28 +8,40 @@
 //! chunk-cell groups are bitwise-invariant decompositions by
 //! construction (`tensor::math` property sweeps + DESIGN.md §2.2) — so
 //! planned execution is bit-identical to the oracle for every schedule
-//! the planner can emit. `tests/plan_parity.rs` pins this across shape
+//! the planner can emit **at f32 weights**. The bf16 weight stream
+//! ([`ir::WeightRepr::Bf16`]) deliberately differs from the oracle by
+//! exactly the weights' storage rounding; `tests/precision_parity.rs`
+//! bounds it. `tests/plan_parity.rs` pins the f32 contract across shape
 //! buckets, batch sizes and worker counts.
 //!
-//! Buffers come from the plan's memory plan ([`super::ir::BufSpec`]):
-//! allocated once per execution, reused across layers (accumulating
-//! ops zero-fill first, which is bitwise identical to the oracle's
-//! fresh `vec![0.0; ..]` allocations). Ops move their output buffer out
-//! of the environment, read their inputs through shared borrows, and
-//! put the output back — the interpreter's loop is the whole control
-//! flow, everything else is data.
+//! Memory comes from the plan's memory plan: every [`super::ir::BufSpec`]
+//! is an `(offset, len)` range inside one per-plan slab ([`Arena`]),
+//! checked out of the plan's pool at the start of an execution and
+//! returned at the end — steady-state decode performs **zero scratch
+//! allocations** in the planned path (the only per-step allocations
+//! are the step's outputs: the logits tensor and the advanced cache,
+//! produced by cloning the incoming cache bytes once and updating them
+//! in place). Slabs come back dirty; that is sound because every op
+//! either zero-fills its accumulator or fully overwrites its output
+//! (the arena-reuse parity tests pin it). Ops borrow their output
+//! ranges mutably and every other buffer read-only through
+//! [`Arena::out1`]/[`Arena::out2`] — fixed, allocation-free splits of
+//! the one slab, since all planned ranges are disjoint.
 
 use crate::bail;
-use crate::tensor::math::{add_assign, axpy, dot, gated_rmsnorm_rows,
-                          matmul_acc_strided, matmul_bt_acc_strided,
+use crate::tensor::math::{axpy, dot, gated_rmsnorm_rows,
+                          matmul_acc_packed, matmul_acc_strided,
+                          matmul_acc_strided_bf16, matmul_bt_acc_strided,
+                          matmul_bt_acc_strided_bf16, matmul_bt_acc_tiled,
                           rmsnorm_row, silu, silu_rows, softplus};
 use crate::tensor::Tensor;
 use crate::util::error::Result;
 use crate::util::threadpool::ThreadPool;
 
 use super::super::backend::{CacheState, StepOut};
-use super::super::reference::{write_f32, Params, NORM_EPS};
-use super::ir::{MatKind, Node, Op};
+use super::super::reference::{read_f32, write_f32, Params, WeightStream,
+                              NORM_EPS};
+use super::ir::{BufId, MatKind, Node, Op};
 use super::planner::Sched;
 use super::Plan;
 use crate::runtime::ConfigInfo;
@@ -54,32 +66,170 @@ pub struct DecodeCtx<'a> {
     pub cache: &'a CacheState,
 }
 
+// ---------------------------------------------------------------- arena ---
+
+/// One checked-out execution slab over the plan's memory plan. Returns
+/// itself to the plan's pool on drop (including error paths), so a
+/// steady decode loop cycles one allocation forever.
+struct Arena<'p> {
+    slab: Option<Vec<f32>>,
+    plan: &'p Plan,
+}
+
+impl<'p> Arena<'p> {
+    fn new(plan: &'p Plan) -> Arena<'p> {
+        Arena { slab: Some(plan.arenas.checkout(plan.slab_len)), plan }
+    }
+
+    /// Read-only view of one planned buffer (no op running).
+    fn buf(&self, id: BufId) -> &[f32] {
+        let (off, len) = self.plan.buf_offsets[id.0];
+        &self.slab.as_ref().expect("slab live")[off..off + len]
+    }
+
+    /// Mutable view of a one-output op's buffer plus read-only access
+    /// to every other planned buffer. Safe: planned buffers occupy
+    /// disjoint slab ranges, so splitting the slab at the out
+    /// boundaries yields non-overlapping borrows. Allocation-free —
+    /// the view machinery itself must not reintroduce per-op heap
+    /// traffic on the path the arena exists to de-allocate.
+    fn out1<'s>(&'s mut self, node: &Node) -> (&'s mut [f32], Ro<'s>) {
+        debug_assert_eq!(node.outs.len(), 1);
+        let offsets = &self.plan.buf_offsets;
+        let (off, len) = offsets[node.outs[0].0];
+        let slab: &'s mut [f32] = self.slab.as_mut().expect("slab live");
+        let (pre, rest) = slab.split_at_mut(off);
+        let (m, post) = rest.split_at_mut(len);
+        let pre: &'s [f32] = pre;
+        let post: &'s [f32] = post;
+        let segs = [(0, pre), (off + len, post), (0, &[] as &[f32])];
+        (m, Ro { segs, nsegs: 2, offsets })
+    }
+
+    /// [`Self::out1`] for a two-output op (returned in `node.outs`
+    /// order, whatever their slab order).
+    fn out2<'s>(&'s mut self, node: &Node)
+        -> (&'s mut [f32], &'s mut [f32], Ro<'s>) {
+        debug_assert_eq!(node.outs.len(), 2);
+        let offsets = &self.plan.buf_offsets;
+        let r0 = offsets[node.outs[0].0];
+        let r1 = offsets[node.outs[1].0];
+        let (lo, hi, swapped) = if r0.0 <= r1.0 {
+            (r0, r1, false)
+        } else {
+            (r1, r0, true)
+        };
+        debug_assert!(lo.0 + lo.1 <= hi.0, "out buffers overlap");
+        let slab: &'s mut [f32] = self.slab.as_mut().expect("slab live");
+        let (pre, rest) = slab.split_at_mut(lo.0);
+        let (m_lo, rest) = rest.split_at_mut(lo.1);
+        let (gap, rest) = rest.split_at_mut(hi.0 - (lo.0 + lo.1));
+        let (m_hi, post) = rest.split_at_mut(hi.1);
+        let pre: &'s [f32] = pre;
+        let gap: &'s [f32] = gap;
+        let post: &'s [f32] = post;
+        let segs = [(0, pre), (lo.0 + lo.1, gap), (hi.0 + hi.1, post)];
+        let ro = Ro { segs, nsegs: 3, offsets };
+        if swapped {
+            (m_hi, m_lo, ro)
+        } else {
+            (m_lo, m_hi, ro)
+        }
+    }
+}
+
+impl Drop for Arena<'_> {
+    fn drop(&mut self) {
+        if let Some(s) = self.slab.take() {
+            self.plan.arenas.put_back(s);
+        }
+    }
+}
+
+/// The read-only remainder of the slab while an op holds its outputs
+/// (at most three segments: before / between / after the out ranges).
+struct Ro<'a> {
+    segs: [(usize, &'a [f32]); 3],
+    nsegs: usize,
+    offsets: &'a [(usize, usize)],
+}
+
+impl Ro<'_> {
+    fn buf(&self, id: BufId) -> &[f32] {
+        let (off, len) = self.offsets[id.0];
+        for (start, seg) in &self.segs[..self.nsegs] {
+            if off >= *start && off + len <= start + seg.len() {
+                return &seg[off - start..off - start + len];
+            }
+        }
+        panic!("buffer %{} is an output of the running op", id.0);
+    }
+}
+
+// -------------------------------------------------- scheduled kernels ---
+
+/// One row block of `C += A @ B` through the node's chosen weight
+/// representation (DESIGN.md §8): dense f32, f32 column panels, or the
+/// bf16 stream — all with identical per-element accumulation order.
+fn mm_block(w: &WeightStream, a: &[f32], lda: usize, rows: usize,
+            k: usize, n: usize, cblk: &mut [f32]) {
+    match w {
+        WeightStream::F32(b) => {
+            matmul_acc_strided(a, lda, b, rows, k, n, cblk, n);
+        }
+        WeightStream::Tiled { tile, panels } => {
+            matmul_acc_packed(a, lda, panels, *tile, rows, k, n, cblk, n);
+        }
+        WeightStream::Bf16(b) => {
+            matmul_acc_strided_bf16(a, lda, b, rows, k, n, cblk, n);
+        }
+    }
+}
+
+/// One row block of `C += A @ Bᵀ` (tied lm head); Bᵀ rows are already
+/// contiguous, so the tiled form is pure loop tiling over the dense
+/// layout.
+fn mmbt_block(w: &WeightStream, a: &[f32], lda: usize, rows: usize,
+              k: usize, n: usize, cblk: &mut [f32]) {
+    match w {
+        WeightStream::F32(b) => {
+            matmul_bt_acc_strided(a, lda, b, rows, k, n, cblk, n);
+        }
+        WeightStream::Tiled { tile, panels } => {
+            matmul_bt_acc_tiled(a, lda, panels, *tile, rows, k, n, cblk,
+                                n);
+        }
+        WeightStream::Bf16(b) => {
+            matmul_bt_acc_strided_bf16(a, lda, b, rows, k, n, cblk, n);
+        }
+    }
+}
+
 /// Scheduled `C += A @ B` over contiguous row blocks — the planned form
 /// of the reference backend's `pmm_acc` (same scoped-chunks
 /// decomposition, row-block size from the plan instead of a hard-coded
 /// threshold + fan-out). Bitwise-identical to the serial contraction
-/// for any block size.
+/// for any block size and any f32 representation.
 #[allow(clippy::too_many_arguments)]
 fn mm_acc(pool: Option<&ThreadPool>, sched: Sched, a: &[f32], lda: usize,
-          b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+          w: &WeightStream, m: usize, k: usize, n: usize, c: &mut [f32]) {
     debug_assert_eq!(c.len(), m * n);
     match (pool, sched) {
         (Some(pool), Sched::RowBlock { rows: rb, .. }) if rb < m => {
             pool.scoped_chunks(c, rb * n, |i, cblk| {
                 let lo = i * rb;
                 let rows = cblk.len() / n;
-                matmul_acc_strided(&a[lo * lda..], lda, b, rows, k, n,
-                                   cblk, n);
+                mm_block(w, &a[lo * lda..], lda, rows, k, n, cblk);
             });
         }
-        _ => matmul_acc_strided(a, lda, b, m, k, n, c, n),
+        _ => mm_block(w, a, lda, m, k, n, c),
     }
 }
 
 /// Scheduled `C += A @ Bᵀ` (tied lm head); see [`mm_acc`].
 #[allow(clippy::too_many_arguments)]
 fn mmbt_acc(pool: Option<&ThreadPool>, sched: Sched, a: &[f32],
-            lda: usize, bt: &[f32], m: usize, k: usize, n: usize,
+            lda: usize, w: &WeightStream, m: usize, k: usize, n: usize,
             c: &mut [f32]) {
     debug_assert_eq!(c.len(), m * n);
     match (pool, sched) {
@@ -87,11 +237,10 @@ fn mmbt_acc(pool: Option<&ThreadPool>, sched: Sched, a: &[f32],
             pool.scoped_chunks(c, rb * n, |i, cblk| {
                 let lo = i * rb;
                 let rows = cblk.len() / n;
-                matmul_bt_acc_strided(&a[lo * lda..], lda, bt, rows, k, n,
-                                      cblk, n);
+                mmbt_block(w, &a[lo * lda..], lda, rows, k, n, cblk);
             });
         }
-        _ => matmul_bt_acc_strided(a, lda, bt, m, k, n, c, n),
+        _ => mmbt_block(w, a, lda, m, k, n, c),
     }
 }
 
@@ -138,84 +287,75 @@ fn embed_rows(tokens: &[i32], embed: &[f32], d: usize, v: usize,
     Ok(())
 }
 
-/// Move a buffer out of the environment for mutation (the caller puts
-/// it back); keeps the borrow checker happy while other buffers stay
-/// readable through shared borrows.
-fn take(env: &mut [Vec<f32>], id: usize) -> Vec<f32> {
-    std::mem::take(&mut env[id])
-}
-
 /// Execute the ops whose bodies are identical in the prefill and decode
 /// interpreters — embedding, pre-norm, the three weight contractions
-/// (incl. the fused/unfused residual epilogue), gate-norm and the final
-/// norm — over `rows` output rows. Returns `Ok(false)` for ops the
-/// caller must handle itself, so the bitwise-parity surface lives in
-/// exactly one place per op.
-fn run_shared(node: &Node, env: &mut [Vec<f32>], params: &Params,
+/// (incl. the fused/unfused residual epilogue and the planner-chosen
+/// weight representation), gate-norm and the final norm — over `rows`
+/// output rows. Returns `Ok(false)` for ops the caller must handle
+/// itself, so the bitwise-parity surface lives in exactly one place
+/// per op.
+fn run_shared(node: &Node, arena: &mut Arena, params: &Params,
               pool: Option<&ThreadPool>, tokens: &[i32], rows: usize,
               cfg: &ConfigInfo) -> Result<bool> {
     let (d, di, dp, v) = (cfg.d_model, cfg.d_inner, cfg.d_in_proj(),
                           cfg.vocab_size);
     match &node.op {
         Op::Embed => {
-            let mut x = take(env, node.outs[0].0);
-            embed_rows(tokens, &params.embed, d, v, &mut x)?;
-            env[node.outs[0].0] = x;
+            let (x, _) = arena.out1(node);
+            embed_rows(tokens, &params.embed, d, v, x)?;
         }
         Op::RmsNorm { layer } => {
             let lp = &params.layers[*layer];
-            let mut hn = take(env, node.outs[0].0);
-            hn.copy_from_slice(&env[node.ins[0].0]);
+            let (hn, ro) = arena.out1(node);
+            hn.copy_from_slice(ro.buf(node.ins[0]));
             for row in hn.chunks_exact_mut(d) {
                 rmsnorm_row(row, &lp.ln_w, NORM_EPS);
             }
-            env[node.outs[0].0] = hn;
         }
-        Op::MatMul { kind: MatKind::InProj, layer, .. } => {
-            let lp = &params.layers[*layer];
-            let mut zx = take(env, node.outs[0].0);
+        Op::MatMul { kind: MatKind::InProj, layer, repr, .. } => {
+            let w = params.in_proj_stream(*layer, *repr, d, dp);
+            let (zx, ro) = arena.out1(node);
             zx.fill(0.0);
-            mm_acc(pool, node.sched, &env[node.ins[0].0], d,
-                   &lp.in_proj, rows, d, dp, &mut zx);
-            env[node.outs[0].0] = zx;
+            mm_acc(pool, node.sched, ro.buf(node.ins[0]), d, &w, rows, d,
+                   dp, zx);
         }
         Op::GateNorm { layer } => {
             let lp = &params.layers[*layer];
-            let mut y = take(env, node.outs[0].0);
-            let z = &env[node.ins[1].0];
-            gated_rmsnorm_rows(&mut y, z, &lp.norm_w, di, NORM_EPS);
-            env[node.outs[0].0] = y;
+            let (y, ro) = arena.out1(node);
+            let z = ro.buf(node.ins[1]);
+            gated_rmsnorm_rows(y, z, &lp.norm_w, di, NORM_EPS);
         }
-        Op::MatMul { kind: MatKind::OutProj, layer, fuse_residual } => {
-            let lp = &params.layers[*layer];
-            let mut x = take(env, node.outs[0].0);
-            let y = &env[node.ins[0].0];
+        Op::MatMul { kind: MatKind::OutProj, layer, fuse_residual,
+                     repr } => {
+            let w = params.out_proj_stream(*layer, *repr, di, d);
+            let (x, ro) = arena.out1(node);
+            let y = ro.buf(node.ins[0]);
             if *fuse_residual {
                 // x += y @ out_proj — residual rides the accumulating
                 // contraction (the oracle's schedule)
-                mm_acc(pool, node.sched, y, di, &lp.out_proj, rows, di,
-                       d, &mut x);
+                mm_acc(pool, node.sched, y, di, &w, rows, di, d, x);
             } else {
+                // cold fallback, never emitted by the current planner
+                // (fusion strictly dominates, a ladder-wide test pins
+                // it) — kept allocation-correct rather than arena-fed
                 let mut tmp = vec![0.0f32; rows * d];
-                mm_acc(pool, node.sched, y, di, &lp.out_proj, rows, di,
-                       d, &mut tmp);
-                add_assign(&mut x, &tmp);
+                mm_acc(pool, node.sched, y, di, &w, rows, di, d,
+                       &mut tmp);
+                crate::tensor::math::add_assign(x, &tmp);
             }
-            env[node.outs[0].0] = x;
         }
         Op::FinalNorm => {
-            let mut x = take(env, node.outs[0].0);
+            let (x, _) = arena.out1(node);
             for row in x.chunks_exact_mut(d) {
                 rmsnorm_row(row, &params.lnf_w, NORM_EPS);
             }
-            env[node.outs[0].0] = x;
         }
-        Op::MatMul { kind: MatKind::LmHead, .. } => {
-            let mut logits = take(env, node.outs[0].0);
+        Op::MatMul { kind: MatKind::LmHead, repr, .. } => {
+            let w = params.embed_stream(*repr);
+            let (logits, ro) = arena.out1(node);
             logits.fill(0.0);
-            mmbt_acc(pool, node.sched, &env[node.ins[0].0], d,
-                     &params.embed, rows, d, v, &mut logits);
-            env[node.outs[0].0] = logits;
+            mmbt_acc(pool, node.sched, ro.buf(node.ins[0]), d, &w, rows,
+                     d, v, logits);
         }
         _ => return Ok(false),
     }
@@ -249,17 +389,16 @@ pub fn run_prefill(plan: &Plan, cx: &PrefillCtx)
 
     let mut cache = CacheState::zeros(cfg, batch);
 
-    // the memory plan: one allocation per planned buffer, reused across
-    // layers (accumulating ops re-zero below)
-    let mut env: Vec<Vec<f32>> =
-        plan.graph.bufs.iter().map(|b| vec![0.0f32; b.len()]).collect();
+    // the memory plan: one slab from the plan's pool, every buffer a
+    // disjoint range inside it (zero steady-state allocation)
+    let mut arena = Arena::new(plan);
 
     let split = |j: usize| (j / (h * nc), (j / nc) % h, j % nc);
     let boff = di; // B block offset inside an xact row
     let coff = di + h * n; // C block offset
 
     for node in &plan.graph.nodes {
-        if run_shared(node, &mut env, cx.params, cx.pool, cx.tokens,
+        if run_shared(node, &mut arena, cx.params, cx.pool, cx.tokens,
                       rows, cfg)? {
             continue;
         }
@@ -267,10 +406,9 @@ pub fn run_prefill(plan: &Plan, cx: &PrefillCtx)
             Op::ConvScan { layer } => {
                 let li = *layer;
                 let lp = &cx.params.layers[li];
-                let mut xact = take(&mut env, node.outs[0].0);
-                let mut xbc = take(&mut env, node.outs[1].0);
+                let (xact, xbc, ro) = arena.out2(node);
                 xact.fill(0.0);
-                let zx = &env[node.ins[0].0];
+                let zx = ro.buf(node.ins[0]);
                 for r in 0..rows {
                     xbc[r * ch..(r + 1) * ch].copy_from_slice(
                         &zx[r * dp + di..r * dp + di + ch]);
@@ -317,14 +455,11 @@ pub fn run_prefill(plan: &Plan, cx: &PrefillCtx)
                         }
                     }
                 }
-                env[node.outs[0].0] = xact;
-                env[node.outs[1].0] = xbc;
             }
             Op::DtDecay { layer } => {
                 let lp = &cx.params.layers[*layer];
-                let mut dtv = take(&mut env, node.outs[0].0);
-                let mut da = take(&mut env, node.outs[1].0);
-                let zx = &env[node.ins[0].0];
+                let (dtv, da, ro) = arena.out2(node);
+                let zx = ro.buf(node.ins[0]);
                 for r in 0..rows {
                     for hh in 0..h {
                         let sp = softplus(
@@ -333,13 +468,11 @@ pub fn run_prefill(plan: &Plan, cx: &PrefillCtx)
                         da[r * h + hh] = -lp.a_log[hh].exp() * sp;
                     }
                 }
-                env[node.outs[0].0] = dtv;
-                env[node.outs[1].0] = da;
             }
             Op::XDt { .. } => {
-                let mut xdt = take(&mut env, node.outs[0].0);
-                let xact = &env[node.ins[0].0];
-                let dtv = &env[node.ins[1].0];
+                let (xdt, ro) = arena.out1(node);
+                let xact = ro.buf(node.ins[0]);
+                let dtv = ro.buf(node.ins[1]);
                 for r in 0..rows {
                     for hh in 0..h {
                         let dtf = dtv[r * h + hh];
@@ -349,14 +482,13 @@ pub fn run_prefill(plan: &Plan, cx: &PrefillCtx)
                         }
                     }
                 }
-                env[node.outs[0].0] = xdt;
             }
             Op::ChunkState { .. } => {
-                let mut summ = take(&mut env, node.outs[0].0);
+                let (summ, ro) = arena.out1(node);
                 summ.fill(0.0);
-                let da = &env[node.ins[0].0];
-                let xact = &env[node.ins[1].0];
-                let xdt = &env[node.ins[2].0];
+                let da = ro.buf(node.ins[0]);
+                let xact = ro.buf(node.ins[1]);
+                let xdt = ro.buf(node.ins[2]);
                 let cumsum = |bi: usize, hh: usize, c: usize,
                               dacs: &mut [f32]| {
                     let base_r = bi * t + c * lch;
@@ -366,7 +498,7 @@ pub fn run_prefill(plan: &Plan, cx: &PrefillCtx)
                         dacs[l] = acc;
                     }
                 };
-                par_jobs(cx.pool, node.sched, &mut summ, aw, |j, out| {
+                par_jobs(cx.pool, node.sched, summ, aw, |j, out| {
                     let (bi, hh, c) = split(j);
                     let base_r = bi * t + c * lch;
                     let (head, dacs) = out.split_at_mut(pn + 1);
@@ -384,46 +516,48 @@ pub fn run_prefill(plan: &Plan, cx: &PrefillCtx)
                     }
                     head[pn] = last.exp();
                 });
-                env[node.outs[0].0] = summ;
             }
             Op::ChunkScan { layer } => {
                 let li = *layer;
-                let mut carries = take(&mut env, node.outs[0].0);
-                let summ = &env[node.ins[0].0];
+                // crow is the planned scratch for the running carry, so
+                // the sequential scan allocates nothing per call
+                let (carries, crow, ro) = arena.out2(node);
+                let summ = ro.buf(node.ins[0]);
                 let ssm_cache = &mut cache.ssm.data;
                 for bi in 0..batch {
                     for hh in 0..h {
                         let s0 = (((li * batch + bi) * h) + hh) * pn;
-                        let mut carry = vec![0.0f32; pn];
-                        if let Some(ssm0) = &init_ssm {
-                            carry.copy_from_slice(&ssm0[s0..s0 + pn]);
+                        match &init_ssm {
+                            Some(ssm0) => {
+                                crow.copy_from_slice(&ssm0[s0..s0 + pn]);
+                            }
+                            None => crow.fill(0.0),
                         }
                         for c in 0..nc {
                             let j = (bi * h + hh) * nc + c;
                             carries[j * pn..(j + 1) * pn]
-                                .copy_from_slice(&carry);
+                                .copy_from_slice(crow);
                             let cd = summ[j * aw + pn];
-                            for (cv, tv) in carry.iter_mut()
+                            for (cv, tv) in crow.iter_mut()
                                 .zip(&summ[j * aw..j * aw + pn]) {
                                 *cv = *cv * cd + *tv;
                             }
                         }
                         // final state → cache slot (layer, seq, head)
-                        for (jj, &cv) in carry.iter().enumerate() {
+                        for (jj, &cv) in crow.iter().enumerate() {
                             write_f32(ssm_cache, s0 + jj, cv);
                         }
                     }
                 }
-                env[node.outs[0].0] = carries;
             }
             Op::ChunkRead { .. } => {
-                let mut ybuf = take(&mut env, node.outs[0].0);
+                let (ybuf, ro) = arena.out1(node);
                 ybuf.fill(0.0);
-                let summ = &env[node.ins[0].0];
-                let carries = &env[node.ins[1].0];
-                let xact = &env[node.ins[2].0];
-                let xdt = &env[node.ins[3].0];
-                par_jobs(cx.pool, node.sched, &mut ybuf, bw, |j, out| {
+                let summ = ro.buf(node.ins[0]);
+                let carries = ro.buf(node.ins[1]);
+                let xact = ro.buf(node.ins[2]);
+                let xdt = ro.buf(node.ins[3]);
+                par_jobs(cx.pool, node.sched, ybuf, bw, |j, out| {
                     let (bi, hh, c) = split(j);
                     let base_r = bi * t + c * lch;
                     let dacs = &summ[j * aw + pn + 1..(j + 1) * aw];
@@ -453,15 +587,13 @@ pub fn run_prefill(plan: &Plan, cx: &PrefillCtx)
                         }
                     }
                 });
-                env[node.outs[0].0] = ybuf;
             }
             Op::Gather { layer, fuse_skip } => {
                 let lp = &cx.params.layers[*layer];
-                let mut y = take(&mut env, node.outs[0].0);
-                let mut z = take(&mut env, node.outs[1].0);
-                let ybuf = &env[node.ins[0].0];
-                let xact = &env[node.ins[1].0];
-                let zx = &env[node.ins[2].0];
+                let (y, z, ro) = arena.out2(node);
+                let ybuf = ro.buf(node.ins[0]);
+                let xact = ro.buf(node.ins[1]);
+                let zx = ro.buf(node.ins[2]);
                 if *fuse_skip {
                     // scatter with the D-skip add fused in: each output
                     // element still receives exactly one add of
@@ -506,19 +638,17 @@ pub fn run_prefill(plan: &Plan, cx: &PrefillCtx)
                         }
                     }
                 }
-                env[node.outs[0].0] = y;
-                env[node.outs[1].0] = z;
             }
             op => unreachable!("op {op:?} in a prefill plan"),
         }
     }
 
     let logits_id = plan.graph.nodes.last().expect("non-empty plan")
-        .outs[0].0;
-    let logits = std::mem::take(&mut env[logits_id]);
-    Ok((Tensor::f32("logits", &[batch as i64, t as i64, v as i64],
-                    &logits),
-        cache))
+        .outs[0];
+    let logits = Tensor::f32("logits",
+                             &[batch as i64, t as i64, v as i64],
+                             arena.buf(logits_id));
+    Ok((logits, cache))
 }
 
 /// Execute a decode plan: one batch-fused O(1) step for every slot.
@@ -533,16 +663,21 @@ pub fn run_decode(plan: &Plan, cx: &DecodeCtx) -> Result<StepOut> {
     let kc = k - 1;
     debug_assert_eq!(plan.key.batch, bsz);
 
-    let ssm_in = cx.cache.ssm.as_f32();
-    let conv_in = cx.cache.conv.as_f32();
-    let mut ssm_out = ssm_in.clone();
-    let mut conv_out = conv_in.clone();
+    // the advanced cache, updated IN PLACE over byte buffers that
+    // become the output tensors — the only per-step allocations left
+    // in the planned decode path are these two output clones plus the
+    // logits tensor (the value-semantics Backend API hands fresh
+    // ownership to the caller); bitwise identical to the two-buffer
+    // form because every element is read exactly once before it is
+    // written (ssm: same index; conv: the window left-shift reads
+    // ahead of its writes)
+    let mut ssm_bytes = cx.cache.ssm.data.clone();
+    let mut conv_bytes = cx.cache.conv.data.clone();
 
-    let mut env: Vec<Vec<f32>> =
-        plan.graph.bufs.iter().map(|b| vec![0.0f32; b.len()]).collect();
+    let mut arena = Arena::new(plan);
 
     for node in &plan.graph.nodes {
-        if run_shared(node, &mut env, cx.params, cx.pool, cx.tokens,
+        if run_shared(node, &mut arena, cx.params, cx.pool, cx.tokens,
                       bsz, cfg)? {
             continue;
         }
@@ -550,33 +685,36 @@ pub fn run_decode(plan: &Plan, cx: &DecodeCtx) -> Result<StepOut> {
             Op::ConvStep { layer } => {
                 let li = *layer;
                 let lp = &cx.params.layers[li];
-                let mut xact = take(&mut env, node.outs[0].0);
-                let zx = &env[node.ins[0].0];
+                let (xact, ro) = arena.out1(node);
+                let zx = ro.buf(node.ins[0]);
                 for bi in 0..bsz {
                     for c in 0..ch {
                         let st = ((li * bsz + bi) * ch + c) * kc;
                         let xnew = zx[bi * dp + di + c];
                         let mut acc = lp.conv_b[c];
+                        // whole window consumed before the shift below
                         for j in 0..kc {
-                            acc += conv_in[st + j]
+                            acc += read_f32(&conv_bytes, st + j)
                                 * lp.conv_w[j * ch + c];
                         }
                         acc += xnew * lp.conv_w[kc * ch + c];
                         xact[bi * ch + c] = silu(acc);
+                        // in-place left shift: slot j reads j+1 before
+                        // iteration j+1 overwrites it
                         for j in 0..kc - 1 {
-                            conv_out[st + j] = conv_in[st + j + 1];
+                            let v = read_f32(&conv_bytes, st + j + 1);
+                            write_f32(&mut conv_bytes, st + j, v);
                         }
-                        conv_out[st + kc - 1] = xnew;
+                        write_f32(&mut conv_bytes, st + kc - 1, xnew);
                     }
                 }
-                env[node.outs[0].0] = xact;
             }
             Op::SsmStep { layer } => {
                 let li = *layer;
                 let lp = &cx.params.layers[li];
-                let mut y = take(&mut env, node.outs[0].0);
-                let zx = &env[node.ins[0].0];
-                let xact = &env[node.ins[1].0];
+                let (y, ro) = arena.out1(node);
+                let zx = ro.buf(node.ins[0]);
+                let xact = ro.buf(node.ins[1]);
                 for bi in 0..bsz {
                     for hh in 0..h {
                         let sp = softplus(
@@ -590,9 +728,13 @@ pub fn run_decode(plan: &Plan, cx: &DecodeCtx) -> Result<StepOut> {
                             let xv = xact[bi * ch + hh * p + pp] * sp;
                             let mut acc = 0.0f32;
                             for nn in 0..n {
-                                let snew = ssm_in[soff + nn] * dae
-                                    + xv * xact[boff + nn];
-                                ssm_out[soff + nn] = snew;
+                                // diagonal update: each state element
+                                // is read once, then overwritten
+                                let snew =
+                                    read_f32(&ssm_bytes, soff + nn)
+                                    * dae + xv * xact[boff + nn];
+                                write_f32(&mut ssm_bytes, soff + nn,
+                                          snew);
                                 acc += snew * xact[coff + nn];
                             }
                             y[bi * di + hh * p + pp] =
@@ -601,30 +743,27 @@ pub fn run_decode(plan: &Plan, cx: &DecodeCtx) -> Result<StepOut> {
                         }
                     }
                 }
-                env[node.outs[0].0] = y;
             }
             Op::CopyZ { .. } => {
-                let mut z = take(&mut env, node.outs[0].0);
-                let zx = &env[node.ins[0].0];
+                let (z, ro) = arena.out1(node);
+                let zx = ro.buf(node.ins[0]);
                 for bi in 0..bsz {
                     z[bi * di..(bi + 1) * di]
                         .copy_from_slice(&zx[bi * dp..bi * dp + di]);
                 }
-                env[node.outs[0].0] = z;
             }
             op => unreachable!("op {op:?} in a decode plan"),
         }
     }
 
     let logits_id = plan.graph.nodes.last().expect("non-empty plan")
-        .outs[0].0;
-    let logits = std::mem::take(&mut env[logits_id]);
+        .outs[0];
+    let logits = Tensor::f32("logits", &[bsz as i64, v as i64],
+                             arena.buf(logits_id));
     let new_cache = CacheState {
-        ssm: Tensor::f32("ssm", &cx.cache.ssm.dims, &ssm_out),
-        conv: Tensor::f32("conv", &cx.cache.conv.dims, &conv_out),
+        ssm: Tensor::from_f32_bytes("ssm", &cx.cache.ssm.dims, ssm_bytes),
+        conv: Tensor::from_f32_bytes("conv", &cx.cache.conv.dims,
+                                     conv_bytes),
     };
-    Ok(StepOut {
-        logits: Tensor::f32("logits", &[bsz as i64, v as i64], &logits),
-        cache: new_cache,
-    })
+    Ok(StepOut { logits, cache: new_cache })
 }

@@ -57,6 +57,37 @@ pub enum MatKind {
     LmHead,
 }
 
+/// Storage representation the weight operand of a [`Op::MatMul`]
+/// streams as — the precision-and-layout half of the schedule
+/// (DESIGN.md §8). Lowering emits `F32Dense` everywhere; the planner
+/// rewrites per node from the cost model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WeightRepr {
+    /// dense f32 row-major — the oracle's exact access pattern
+    F32Dense,
+    /// f32 repacked into `tile`-column panels (loop-tiled rows for the
+    /// transposed-B lm head) so one panel stays cache-resident across a
+    /// block of output rows. **Bitwise identical** to dense: per output
+    /// element the partial-product order is unchanged
+    /// (`tensor::math::matmul_acc_packed` / `matmul_bt_acc_tiled`).
+    F32Tiled { tile: usize },
+    /// bf16 row-major stream, f32 accumulate — halves the streamed
+    /// weight bytes the decode roofline is bound on. Not bitwise vs
+    /// f32 (storage rounding); gated by the backend's precision mode.
+    Bf16,
+}
+
+impl WeightRepr {
+    /// Short dump token, e.g. `f32`, `f32.tile32`, `bf16`.
+    pub fn label(&self) -> String {
+        match self {
+            WeightRepr::F32Dense => "f32".into(),
+            WeightRepr::F32Tiled { tile } => format!("f32.tile{tile}"),
+            WeightRepr::Bf16 => "bf16".into(),
+        }
+    }
+}
+
 /// The op set of the SSD graph. Every op maps 1:1 onto a region of the
 /// hand-scheduled reference forward; the executor reproduces the exact
 /// per-element scalar schedule, so any plan is bitwise identical to the
@@ -67,8 +98,10 @@ pub enum Op {
     Embed,
     /// pre-norm over the residual stream (per layer)
     RmsNorm { layer: usize },
-    /// dense contraction against a weight matrix
-    MatMul { kind: MatKind, layer: usize, fuse_residual: bool },
+    /// dense contraction against a weight matrix; `repr` is the
+    /// planner-chosen storage the weight streams as (precision pass)
+    MatMul { kind: MatKind, layer: usize, fuse_residual: bool,
+             repr: WeightRepr },
     /// causal depthwise conv over time (prefill; seeds from the cache
     /// window on continuation, writes the cache tail)
     ConvScan { layer: usize },
@@ -229,6 +262,9 @@ pub fn lower_prefill(cfg: &ConfigInfo, batch: usize, t: usize) -> Graph {
     let xdt = g.buf("xdt", rows, di);
     let summ = g.buf("summ", njobs, aw);
     let carry = g.buf("carry", njobs, pn);
+    // stage B's running carry for the (seq, head) being scanned — a
+    // planned buffer so the sequential scan allocates nothing per call
+    let crow = g.buf("crow", 1, pn);
     let ybuf = g.buf("ybuf", njobs, bw);
     let y = g.buf("y", rows, di);
     let z = g.buf("z", rows, di);
@@ -264,7 +300,8 @@ pub fn lower_prefill(cfg: &ConfigInfo, batch: usize, t: usize) -> Graph {
                        * (f(aw) + f(lch) * (f(n) + f(p) + 1.0)) * 4.0,
                    jobs: njobs,
                }, None);
-        g.node(Op::ChunkScan { layer: li }, vec![summ], vec![carry],
+        g.node(Op::ChunkScan { layer: li }, vec![summ],
+               vec![carry, crow],
                serial_work(2.0 * f(njobs) * f(pn),
                            f(njobs) * (2.0 * f(pn) + 1.0) * 4.0), None);
         // stage C: quadratic intra-chunk dual form + cross-chunk term
@@ -288,7 +325,8 @@ pub fn lower_prefill(cfg: &ConfigInfo, batch: usize, t: usize) -> Graph {
                serial_work(6.0 * f(rows) * f(di),
                            3.0 * f(rows) * f(di) * 4.0), None);
         g.node(Op::MatMul { kind: MatKind::OutProj, layer: li,
-                            fuse_residual: true },
+                            fuse_residual: true,
+                            repr: WeightRepr::F32Dense },
                vec![y], vec![x], mm_work(rows, di, d),
                Some((rows, di, d)));
     }
@@ -296,7 +334,8 @@ pub fn lower_prefill(cfg: &ConfigInfo, batch: usize, t: usize) -> Graph {
            serial_work(3.0 * f(rows) * f(d),
                        2.0 * f(rows) * f(d) * 4.0), None);
     g.node(Op::MatMul { kind: MatKind::LmHead, layer: 0,
-                        fuse_residual: false },
+                        fuse_residual: false,
+                        repr: WeightRepr::F32Dense },
            vec![x], vec![logits], mm_work(rows, d, v),
            Some((rows, d, v)));
     g
@@ -327,7 +366,8 @@ pub fn lower_decode(cfg: &ConfigInfo, batch: usize) -> Graph {
                serial_work(3.0 * f(b) * f(d), 2.0 * f(b) * f(d) * 4.0),
                None);
         g.node(Op::MatMul { kind: MatKind::InProj, layer: li,
-                            fuse_residual: false },
+                            fuse_residual: false,
+                            repr: WeightRepr::F32Dense },
                vec![hn], vec![zx], mm_work(b, d, dp), Some((b, d, dp)));
         g.node(Op::ConvStep { layer: li }, vec![zx], vec![xact],
                serial_work(2.0 * f(b) * f(ch) * f(k),
@@ -342,13 +382,15 @@ pub fn lower_decode(cfg: &ConfigInfo, batch: usize) -> Graph {
                serial_work(6.0 * f(b) * f(di),
                            3.0 * f(b) * f(di) * 4.0), None);
         g.node(Op::MatMul { kind: MatKind::OutProj, layer: li,
-                            fuse_residual: true },
+                            fuse_residual: true,
+                            repr: WeightRepr::F32Dense },
                vec![y], vec![x], mm_work(b, di, d), Some((b, di, d)));
     }
     g.node(Op::FinalNorm, vec![x], vec![x],
            serial_work(3.0 * f(b) * f(d), 2.0 * f(b) * f(d) * 4.0), None);
     g.node(Op::MatMul { kind: MatKind::LmHead, layer: 0,
-                        fuse_residual: false },
+                        fuse_residual: false,
+                        repr: WeightRepr::F32Dense },
            vec![x], vec![logits], mm_work(b, d, v), Some((b, d, v)));
     g
 }
@@ -368,7 +410,7 @@ mod tests {
         let g = lower_prefill(&cfg, 1, 32);
         // 1 embed + 11 nodes per layer + final norm + lm head
         assert_eq!(g.nodes.len(), 1 + 11 * cfg.n_layer + 2);
-        assert_eq!(g.bufs.len(), 14);
+        assert_eq!(g.bufs.len(), 15);
         // memory plan: buffers sized for (rows=32) and (njobs=b·h·nc=8)
         let by_name = |n: &str| {
             g.bufs.iter().find(|b| b.name == n).unwrap().clone()
@@ -380,6 +422,16 @@ mod tests {
         assert_eq!(by_name("summ").width,
                    cfg.headdim * cfg.d_state + 1 + cfg.chunk_size);
         assert_eq!(by_name("logits").width, cfg.vocab_size);
+        // stage B's running carry is part of the memory plan
+        assert_eq!(by_name("crow").rows, 1);
+        assert_eq!(by_name("crow").width, cfg.headdim * cfg.d_state);
+        // lowering emits the dense-f32 repr everywhere; the precision
+        // pass is the planner's to rewrite
+        for node in &g.nodes {
+            if let Op::MatMul { repr, .. } = node.op {
+                assert_eq!(repr, WeightRepr::F32Dense);
+            }
+        }
         // graph ends with the lm head writing the logits buffer
         let last = g.nodes.last().unwrap();
         assert!(matches!(last.op,

@@ -30,9 +30,10 @@ pub mod ir;
 pub mod planner;
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
-use crate::runtime::manifest::{CostInfo, ScheduleInfo};
+use crate::runtime::manifest::{CostInfo, ScheduleInfo, WeightsDtype};
 
 use ir::Graph;
 use planner::Sched;
@@ -89,16 +90,21 @@ pub struct PlanKey {
 }
 
 /// One scheduled, executable lowering of an entrypoint at a shape
-/// bucket: the op graph with schedule annotations, the memory plan,
-/// and the invocation-level [`CostInfo`] computed once at build (so
-/// benches and metrics read it without per-call recomputation).
-#[derive(Debug, Clone)]
+/// bucket: the op graph with schedule annotations, the memory plan
+/// (every [`ir::BufSpec`] compiled to an offset in one per-plan slab,
+/// with a pool of reusable slabs so steady-state execution allocates
+/// nothing), and the invocation-level [`CostInfo`] computed once at
+/// build (so benches and metrics read it without per-call
+/// recomputation).
+#[derive(Debug)]
 pub struct Plan {
     pub key: PlanKey,
     pub cfg_name: String,
     pub chunk_size: usize,
     /// worker count the schedule was chosen for
     pub threads: usize,
+    /// weight storage precision the schedule streams (DESIGN.md §8)
+    pub weights: WeightsDtype,
     pub graph: Graph,
     /// analytic (FLOPs, bytes, transcendentals) of one invocation —
     /// hoisted out of the per-call hot path
@@ -107,8 +113,82 @@ pub struct Plan {
     pub schedule: ScheduleInfo,
     /// the cost model's predicted wall-clock (schedule-selection score)
     pub est_seconds: f64,
+    /// total bytes the byte model says one invocation streams (shared
+    /// weights + activations) — `BENCH_*.json bytes_streamed_per_token`
+    /// is this over the batch
+    pub stream_bytes: f64,
     /// wall-clock spent planning this plan
     pub planning_ms: f64,
+    /// memory plan: `(offset, len)` of each [`ir::BufSpec`] inside the
+    /// execution slab (dense, disjoint, same order as `graph.bufs`)
+    pub buf_offsets: Vec<(usize, usize)>,
+    /// total slab length, f32 elements
+    pub slab_len: usize,
+    /// reusable execution slabs (seeded with one at build)
+    pub(crate) arenas: ArenaPool,
+}
+
+/// Pool of reusable execution slabs for one plan: checked out at the
+/// start of an execution, returned at the end, so steady-state decode
+/// performs zero heap allocations in the planned path. Counters are
+/// test/metrics hooks ([`Plan::arena_stats`]).
+pub struct ArenaPool {
+    slabs: Mutex<Vec<Vec<f32>>>,
+    built: AtomicU64,
+    reused: AtomicU64,
+}
+
+impl std::fmt::Debug for ArenaPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let (built, reused) = (self.built.load(Ordering::Relaxed),
+                               self.reused.load(Ordering::Relaxed));
+        write!(f, "ArenaPool(built={built}, reused={reused})")
+    }
+}
+
+impl ArenaPool {
+    /// Pool seeded with one zeroed slab — the issue-level contract that
+    /// the arena is "allocated at plan build", so even the first
+    /// execution allocates nothing.
+    pub(crate) fn with_first(slab_len: usize) -> ArenaPool {
+        ArenaPool {
+            slabs: Mutex::new(vec![vec![0.0; slab_len]]),
+            built: AtomicU64::new(1),
+            reused: AtomicU64::new(0),
+        }
+    }
+
+    /// Check a slab out (pop a pooled one, or allocate when several
+    /// executions run the same plan concurrently).
+    pub(crate) fn checkout(&self, slab_len: usize) -> Vec<f32> {
+        if let Some(s) = self.slabs.lock().unwrap().pop() {
+            debug_assert_eq!(s.len(), slab_len);
+            self.reused.fetch_add(1, Ordering::Relaxed);
+            return s;
+        }
+        self.built.fetch_add(1, Ordering::Relaxed);
+        vec![0.0; slab_len]
+    }
+
+    /// Return a slab for reuse (contents stay dirty; every op either
+    /// zero-fills or fully overwrites its output, which the
+    /// arena-reuse parity tests pin).
+    pub(crate) fn put_back(&self, slab: Vec<f32>) {
+        self.slabs.lock().unwrap().push(slab);
+    }
+
+    fn stats(&self) -> (u64, u64) {
+        (self.built.load(Ordering::Relaxed),
+         self.reused.load(Ordering::Relaxed))
+    }
+}
+
+impl Plan {
+    /// `(slabs allocated, executions served from the pool)` — after
+    /// warm-up, a steady decode loop only ever moves the second number.
+    pub fn arena_stats(&self) -> (u64, u64) {
+        self.arenas.stats()
+    }
 }
 
 impl Plan {
@@ -132,14 +212,16 @@ impl Plan {
             self.cost.flops as u64, self.cost.bytes_accessed as u64,
             self.cost.transcendentals as u64));
         s.push_str(&format!(
-            "schedule: row_block={} chunk_tile={} fanout={} fused={}\n",
+            "schedule: row_block={} chunk_tile={} fanout={} fused={} \
+             weights={} layout={}\n",
             self.schedule.row_block, self.schedule.chunk_tile,
             self.schedule.fanout,
             if self.schedule.fused.is_empty() {
                 "-".to_string()
             } else {
                 self.schedule.fused.join("+")
-            }));
+            },
+            self.schedule.weights_dtype, self.schedule.weight_layout));
         for (i, node) in self.graph.nodes.iter().enumerate() {
             let out = &self.graph.bufs[node.outs[0].0];
             let shape = format!("{}[{},{}]", out.name, out.rows,
@@ -164,8 +246,15 @@ impl Plan {
                 ir::Op::Gather { fuse_skip: true, .. } => " fused-skip",
                 _ => "",
             };
-            s.push_str(&format!("%{i:02} {:<16} {:<18}{mm} {sched}{fuse}\n",
-                                node.op.label(), shape));
+            let wtok = match &node.op {
+                ir::Op::MatMul { repr, .. } => {
+                    format!(" w={}", repr.label())
+                }
+                _ => String::new(),
+            };
+            s.push_str(&format!(
+                "%{i:02} {:<16} {:<18}{mm} {sched}{fuse}{wtok}\n",
+                node.op.label(), shape));
         }
         s
     }
@@ -286,7 +375,7 @@ mod tests {
 
     fn build(k: PlanKey) -> Plan {
         let cfg = sim_config("tiny").unwrap();
-        planner::build_plan(&cfg, k, 4)
+        planner::build_plan(&cfg, k, 4, WeightsDtype::F32)
     }
 
     #[test]
@@ -346,7 +435,30 @@ mod tests {
         assert!(d.contains("chunk_scan.L0"));
         assert!(d.contains("lm_head"));
         assert!(d.contains("fused-acc"));
+        // the precision/layout pass is part of the dumped schedule
+        assert!(d.contains("weights=f32"), "{d}");
+        assert!(d.contains(" w=f32"), "{d}");
         // one line per node + 3 header lines
         assert_eq!(d.lines().count(), p.graph.nodes.len() + 3);
+    }
+
+    #[test]
+    fn arena_pool_is_seeded_and_reuses() {
+        let p = build(key(1, 16));
+        assert_eq!(p.arena_stats(), (1, 0), "one slab built at plan build");
+        let s = p.arenas.checkout(p.slab_len);
+        assert_eq!(s.len(), p.slab_len);
+        assert_eq!(p.arena_stats(), (1, 1), "first checkout reuses");
+        // a concurrent second execution allocates a second slab...
+        let s2 = p.arenas.checkout(p.slab_len);
+        assert_eq!(p.arena_stats(), (2, 1));
+        p.arenas.put_back(s);
+        p.arenas.put_back(s2);
+        // ...and afterwards the pool serves everything
+        for i in 0..8 {
+            let s = p.arenas.checkout(p.slab_len);
+            assert_eq!(p.arena_stats(), (2, 2 + i));
+            p.arenas.put_back(s);
+        }
     }
 }

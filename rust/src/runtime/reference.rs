@@ -24,9 +24,11 @@
 //! `params.py::init_params` conventions: A ∈ [1,16), softplus-inverse dt
 //! bias) or loaded from a `.mbt` checkpoint via [`Backend::load_weights`].
 
+use std::sync::OnceLock;
+
 use crate::tensor::math::{axpy, dot, gated_rmsnorm_rows, matmul_acc_strided,
-                          matmul_bt_acc_strided, rmsnorm_row, silu,
-                          silu_rows, softplus};
+                          matmul_bt_acc_strided, pack_cols, rmsnorm_row,
+                          silu, silu_rows, softplus, to_bf16};
 use crate::bail;
 use crate::tensor::Tensor;
 use crate::util::error::{Context, Result};
@@ -35,9 +37,10 @@ use crate::util::threadpool::ThreadPool;
 
 use super::backend::{analytic_cost, argmax_last, Backend, CacheState,
                      PrefillOut, StepOut};
-use super::manifest::{sim_config, ConfigInfo, CostInfo,
+use super::manifest::{sim_config, ConfigInfo, CostInfo, WeightsDtype,
                       DECODE_LOOP_BUCKETS, FORWARD_BUCKETS,
                       PREFILL_BUCKETS, REFERENCE_BATCH_CAP};
+use super::plan::ir::{MatKind, Op, WeightRepr};
 use super::plan::{exec, planner, Entry, Plan, PlanCache, PlanKey,
                   PlanMode, PlanStats};
 
@@ -57,12 +60,105 @@ pub(crate) struct LayerParams {
     pub(crate) norm_w: Vec<f32>,   // (di,)
     pub(crate) out_proj: Vec<f32>, // (di, d)
     pub(crate) ln_w: Vec<f32>,     // (d,)
+    /// planner-chosen alternate representations of the two projections
+    pub(crate) in_proj_packs: MatPacks,
+    pub(crate) out_proj_packs: MatPacks,
 }
 
 pub(crate) struct Params {
     pub(crate) embed: Vec<f32>, // (V, d)
     pub(crate) layers: Vec<LayerParams>,
     pub(crate) lnf_w: Vec<f32>, // (d,)
+    /// alternate representations of the tied embedding (lm-head stream;
+    /// the embedding *lookup* always reads the exact f32 rows — it
+    /// gathers one row per token, so there is no bandwidth to win)
+    pub(crate) embed_packs: MatPacks,
+}
+
+/// Lazily-built alternate storage of one weight matrix, prepacked once
+/// (normally at `warm_up`; `OnceLock` keeps a cold first call correct)
+/// and shared by every plan that streams it. `load_weights` rebuilds
+/// `Params`, so packs can never outlive the weights they mirror.
+#[derive(Default)]
+pub(crate) struct MatPacks {
+    bf16: OnceLock<Vec<u16>>,
+    tiled: OnceLock<(usize, Vec<f32>)>,
+}
+
+impl MatPacks {
+    fn bf16(&self, dense: &[f32]) -> &[u16] {
+        self.bf16.get_or_init(|| to_bf16(dense))
+    }
+
+    fn tiled(&self, dense: &[f32], k: usize, n: usize, tile: usize)
+        -> &[f32] {
+        let (t, p) = self.tiled.get_or_init(
+            || (tile, pack_cols(dense, k, n, tile)));
+        // tile_for is a pure function of (k, n), so every plan asks for
+        // the same panel width — one pack per matrix suffices
+        assert_eq!(*t, tile, "conflicting tile widths for one weight");
+        p
+    }
+}
+
+/// A weight matrix in the representation a plan's precision/layout pass
+/// chose for one contraction (DESIGN.md §8). Borrowed from [`Params`];
+/// the executor dispatches on it inside its row-block driver.
+pub(crate) enum WeightStream<'a> {
+    /// dense f32 row-major (the oracle's access pattern)
+    F32(&'a [f32]),
+    /// f32 column panels (`tensor::math::pack_cols`); for the
+    /// transposed-B lm head this is the dense layout loop-tiled, so
+    /// `panels` is simply the matrix itself
+    Tiled { tile: usize, panels: &'a [f32] },
+    /// bf16 rows, f32 accumulate
+    Bf16(&'a [u16]),
+}
+
+fn stream<'a>(dense: &'a [f32], packs: &'a MatPacks, repr: WeightRepr,
+              k: usize, n: usize) -> WeightStream<'a> {
+    match repr {
+        WeightRepr::F32Dense => WeightStream::F32(dense),
+        WeightRepr::F32Tiled { tile } => WeightStream::Tiled {
+            tile,
+            panels: packs.tiled(dense, k, n, tile),
+        },
+        WeightRepr::Bf16 => WeightStream::Bf16(packs.bf16(dense)),
+    }
+}
+
+impl Params {
+    /// `in_proj` ((k=d, n=d_in_proj) row-major) in `repr` form.
+    pub(crate) fn in_proj_stream(&self, li: usize, repr: WeightRepr,
+                                 k: usize, n: usize) -> WeightStream<'_> {
+        let lp = &self.layers[li];
+        stream(&lp.in_proj, &lp.in_proj_packs, repr, k, n)
+    }
+
+    /// `out_proj` ((k=d_inner, n=d) row-major) in `repr` form.
+    pub(crate) fn out_proj_stream(&self, li: usize, repr: WeightRepr,
+                                  k: usize, n: usize)
+        -> WeightStream<'_> {
+        let lp = &self.layers[li];
+        stream(&lp.out_proj, &lp.out_proj_packs, repr, k, n)
+    }
+
+    /// The tied embedding as the lm head's Bᵀ stream ((V, d) row-major —
+    /// already the dot-product layout, so the tiled form needs no
+    /// repack).
+    pub(crate) fn embed_stream(&self, repr: WeightRepr)
+        -> WeightStream<'_> {
+        match repr {
+            WeightRepr::F32Dense => WeightStream::F32(&self.embed),
+            WeightRepr::F32Tiled { tile } => WeightStream::Tiled {
+                tile,
+                panels: &self.embed,
+            },
+            WeightRepr::Bf16 => {
+                WeightStream::Bf16(self.embed_packs.bf16(&self.embed))
+            }
+        }
+    }
 }
 
 /// Deterministic random init following params.py conventions.
@@ -116,9 +212,12 @@ fn init_params(cfg: &ConfigInfo, seed: u64) -> Params {
             norm_w: vec![1.0; di],
             out_proj,
             ln_w: vec![1.0; d],
+            in_proj_packs: MatPacks::default(),
+            out_proj_packs: MatPacks::default(),
         });
     }
-    Params { embed, layers, lnf_w: vec![1.0; d] }
+    Params { embed, layers, lnf_w: vec![1.0; d],
+             embed_packs: MatPacks::default() }
 }
 
 /// Expected shape (dims) of each parameter, in canonical order.
@@ -210,10 +309,13 @@ fn params_from_tensors(cfg: &ConfigInfo, tensors: &[Tensor])
             norm_w: take(&nm("norm_w"))?,
             out_proj: take(&nm("out_proj"))?,
             ln_w: take(&nm("ln_w"))?,
+            in_proj_packs: MatPacks::default(),
+            out_proj_packs: MatPacks::default(),
         });
     }
     let lnf_w = take("lnf_w")?;
-    Ok(Params { embed, layers, lnf_w })
+    Ok(Params { embed, layers, lnf_w,
+                embed_packs: MatPacks::default() })
 }
 
 // -------------------------------------------------------------- backend ---
@@ -261,6 +363,10 @@ pub struct ReferenceBackend {
     pool: Option<ThreadPool>,
     /// planned execution (default) vs the legacy hand-scheduled oracle
     plan_mode: PlanMode,
+    /// weight stream precision of the planned path (DESIGN.md §8):
+    /// f32 default (bitwise baseline); bf16 halves streamed weight
+    /// bytes on decode. The `M2_PLAN=off` oracle always streams f32.
+    weights: WeightsDtype,
     /// shape-keyed plans: build once per `(entrypoint, batch, t)`,
     /// execute many (DESIGN.md §7)
     plans: PlanCache,
@@ -284,6 +390,7 @@ impl ReferenceBackend {
         ReferenceBackend { cfg, params, params_host, threads,
                            pool: build_pool(threads),
                            plan_mode: PlanMode::from_env(),
+                           weights: WeightsDtype::from_env(),
                            plans: PlanCache::new() }
     }
 
@@ -295,6 +402,7 @@ impl ReferenceBackend {
         Ok(ReferenceBackend { cfg, params, params_host: tensors, threads,
                               pool: build_pool(threads),
                               plan_mode: PlanMode::from_env(),
+                              weights: WeightsDtype::from_env(),
                               plans: PlanCache::new() })
     }
 
@@ -317,6 +425,20 @@ impl ReferenceBackend {
         self
     }
 
+    /// Pin the planned path's weight stream precision (also reachable
+    /// via `M2_WEIGHTS=bf16` / `--weights bf16`). Default f32 — the
+    /// bitwise-parity baseline. bf16 halves the streamed weight bytes
+    /// of the decode contractions (accumulation stays f32);
+    /// `tests/precision_parity.rs` bounds the numeric shift. The
+    /// `M2_PLAN=off` oracle is unaffected — it always streams f32.
+    /// Cached plans are dropped — schedules price the dtype.
+    pub fn with_weights_dtype(mut self, weights: WeightsDtype)
+        -> ReferenceBackend {
+        self.weights = weights;
+        self.plans.clear();
+        self
+    }
+
     pub fn plan_mode(&self) -> PlanMode {
         self.plan_mode
     }
@@ -330,8 +452,34 @@ impl ReferenceBackend {
         -> std::sync::Arc<Plan> {
         let key = PlanKey { entry, batch, t };
         self.plans.get_or_build(key, || {
-            planner::build_plan(&self.cfg, key, self.threads)
+            planner::build_plan(&self.cfg, key, self.threads,
+                                self.weights)
         })
+    }
+
+    /// Materialise the weight packs a plan's precision/layout pass
+    /// streams (bf16 rows, f32 column panels) so no request pays the
+    /// one-time conversion — the prepack half of `warm_up`.
+    fn prepack(&self, plan: &Plan) {
+        for node in &plan.graph.nodes {
+            if let Op::MatMul { kind, layer, repr, .. } = node.op {
+                match kind {
+                    MatKind::InProj => {
+                        self.params.in_proj_stream(
+                            layer, repr, self.cfg.d_model,
+                            self.cfg.d_in_proj());
+                    }
+                    MatKind::OutProj => {
+                        self.params.out_proj_stream(
+                            layer, repr, self.cfg.d_inner,
+                            self.cfg.d_model);
+                    }
+                    MatKind::LmHead => {
+                        self.params.embed_stream(repr);
+                    }
+                }
+            }
+        }
     }
 
     // ------------------------------------------------ parallel drivers ---
@@ -882,6 +1030,13 @@ pub(crate) fn write_f32(bytes: &mut [u8], i: usize, v: f32) {
     bytes[i * 4..i * 4 + 4].copy_from_slice(&v.to_le_bytes());
 }
 
+/// Read an f32 from a little-endian byte buffer at f32 index `i` —
+/// the pair of [`write_f32`]; the planned decode updates the cache in
+/// place over bytes instead of materialising f32 copies per step.
+pub(crate) fn read_f32(bytes: &[u8], i: usize) -> f32 {
+    f32::from_le_bytes(bytes[i * 4..i * 4 + 4].try_into().unwrap())
+}
+
 impl Backend for ReferenceBackend {
     fn name(&self) -> &'static str {
         "reference"
@@ -908,16 +1063,42 @@ impl Backend for ReferenceBackend {
     fn warm_up(&self, max_decode_width: usize) {
         // plan warm-up at shape-bucket registration (engine start):
         // build the schedule for every prefill bucket and every decode
-        // width the engine can pack, so no first request pays planning
+        // width the engine can pack, AND prepack the weight
+        // representations those schedules stream (bf16 rows, f32 column
+        // panels) — so no first request pays planning or packing
         if self.plan_mode == PlanMode::Off {
             return;
         }
         for &b in PREFILL_BUCKETS {
-            self.plan_for(Entry::Prefill, 1, b);
+            let p = self.plan_for(Entry::Prefill, 1, b);
+            self.prepack(&p);
         }
         for w in 1..=max_decode_width.clamp(1, REFERENCE_BATCH_CAP) {
-            self.plan_for(Entry::Decode, w, 1);
+            let p = self.plan_for(Entry::Decode, w, 1);
+            self.prepack(&p);
         }
+    }
+
+    fn weights_dtype(&self) -> &'static str {
+        // the oracle path streams f32 regardless of the knob
+        match self.plan_mode {
+            PlanMode::On => self.weights.as_str(),
+            PlanMode::Off => "f32",
+        }
+    }
+
+    fn bytes_streamed_per_token(&self, batch: usize) -> f64 {
+        let b = batch.max(1);
+        // the byte-model total the decode schedule was chosen against,
+        // read off the warm plan (strictly read-only, like `cost`)
+        if self.plan_mode == PlanMode::On {
+            let key = PlanKey { entry: Entry::Decode, batch: b, t: 1 };
+            if let Some(plan) = self.plans.peek(key) {
+                return plan.stream_bytes / b as f64;
+            }
+        }
+        analytic_cost(&self.cfg, "decode_step", None, b).bytes_accessed
+            / b as f64
     }
 
     fn plan_stats(&self) -> Option<PlanStats> {
@@ -1038,8 +1219,9 @@ impl Backend for ReferenceBackend {
 }
 
 // A second construction path used by tests and tools: rebuild from the
-// flat tensors this backend itself exported (worker count and plan mode
-// preserved; the clone re-plans lazily from its own empty cache).
+// flat tensors this backend itself exported (worker count, plan mode
+// and weight precision preserved; the clone re-plans and re-packs
+// lazily from its own empty caches).
 impl Clone for ReferenceBackend {
     fn clone(&self) -> ReferenceBackend {
         ReferenceBackend::from_tensors(self.cfg.clone(),
@@ -1047,6 +1229,7 @@ impl Clone for ReferenceBackend {
             .expect("round-trip of own params")
             .with_threads(self.threads)
             .with_plan_mode(self.plan_mode)
+            .with_weights_dtype(self.weights)
     }
 }
 
@@ -1198,6 +1381,72 @@ mod tests {
         assert_eq!(sa.logits.as_f32(), sb.logits.as_f32());
         assert_eq!(sa.cache.ssm.as_f32(), sb.cache.ssm.as_f32());
         assert_eq!(sa.cache.conv.as_f32(), sb.cache.conv.as_f32());
+    }
+
+    #[test]
+    fn bf16_weights_shift_decode_but_not_prefill() {
+        // the precision pass is decode-only by default: prefill stays
+        // bitwise f32 even in bf16 mode, decode logits move by the
+        // weights' storage rounding (deterministically)
+        let f32b = tiny();
+        let bf = tiny().with_weights_dtype(WeightsDtype::Bf16);
+        let toks: Vec<i32> = (0..32).map(|i| ((i * 19 + 5) % 512) as i32)
+            .collect();
+        let a = f32b.prefill(&toks, 1).unwrap();
+        let b = bf.prefill(&toks, 1).unwrap();
+        assert_eq!(a.logits.as_f32(), b.logits.as_f32(),
+                   "prefill must stay bitwise f32");
+        assert_eq!(a.cache.ssm.as_f32(), b.cache.ssm.as_f32());
+        let sa = f32b.decode_step(&a.cache, &[7]).unwrap();
+        let sb = bf.decode_step(&b.cache, &[7]).unwrap();
+        let diff = sa.logits.max_abs_diff(&sb.logits);
+        assert!(diff > 0.0, "bf16 weight stream is inert");
+        // and the bf16 step is itself deterministic
+        let sb2 = bf.decode_step(&b.cache, &[7]).unwrap();
+        assert_eq!(sb.logits.as_f32(), sb2.logits.as_f32());
+    }
+
+    #[test]
+    fn weights_dtype_and_stream_bytes_surface() {
+        let f32b = tiny();
+        let bf = tiny().with_weights_dtype(WeightsDtype::Bf16);
+        assert_eq!(f32b.weights_dtype(), "f32");
+        assert_eq!(bf.weights_dtype(), "bf16");
+        // the oracle never streams bf16
+        let oracle = tiny().with_weights_dtype(WeightsDtype::Bf16)
+            .with_plan_mode(PlanMode::Off);
+        assert_eq!(oracle.weights_dtype(), "f32");
+        // warm decode plans expose the byte model; bf16 roughly halves
+        // the weight-dominated B=1 stream
+        f32b.warm_up(1);
+        bf.warm_up(1);
+        let bytes_f32 = f32b.bytes_streamed_per_token(1);
+        let bytes_bf16 = bf.bytes_streamed_per_token(1);
+        assert!(bytes_f32 > 0.0);
+        assert!(bytes_bf16 < 0.75 * bytes_f32,
+                "bf16 {bytes_bf16} vs f32 {bytes_f32}");
+    }
+
+    #[test]
+    fn decode_arena_reaches_steady_state() {
+        // after warm-up, a decode loop cycles one slab from the plan's
+        // pool: zero steady-state allocation in the planned path
+        let b = tiny();
+        b.warm_up(1);
+        let pre = b.prefill(&(0..16).collect::<Vec<i32>>(), 1).unwrap();
+        let mut cache = pre.cache;
+        let mut tok = 3i32;
+        for _ in 0..10 {
+            let s = b.decode_step(&cache, &[tok]).unwrap();
+            cache = s.cache;
+            tok = argmax_last(&s.logits)[0];
+        }
+        let plan = b.plans
+            .peek(PlanKey { entry: Entry::Decode, batch: 1, t: 1 })
+            .expect("warm decode plan");
+        let (built, reused) = plan.arena_stats();
+        assert_eq!(built, 1, "steady-state decode must not allocate");
+        assert_eq!(reused, 10);
     }
 
     #[test]

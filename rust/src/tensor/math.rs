@@ -1,4 +1,6 @@
-//! Dense f32 kernels for the pure-Rust reference backend (DESIGN.md §2).
+//! Dense f32 kernels for the pure-Rust reference backend (DESIGN.md §2),
+//! plus the precision- and layout-variant weight streams of the lowering
+//! pipeline's precision pass (DESIGN.md §8).
 //!
 //! The SSD algorithm is einsum-dominated by construction ("Transformers
 //! are SSMs", Dao & Gu 2024), so the whole reference backend reduces to
@@ -7,6 +9,20 @@
 //! the tied lm head, and the pointwise nonlinearities with the paper's
 //! §3.3 precision rules (variance reductions in f32; decays kept in
 //! log-space and exponentiated at compute time).
+//!
+//! Three weight representations exist for the B operand of the two
+//! matmul forms; all accumulate in f32:
+//!
+//!   * dense f32 — the oracle's exact access pattern,
+//!   * bf16 rows ([`matmul_acc_strided_bf16`] /
+//!     [`matmul_bt_acc_strided_bf16`]) — u16 storage decoded on the fly,
+//!     halving streamed weight bytes on the bandwidth-bound decode path
+//!     (paper §3.3: weights bf16, accumulation f32),
+//!   * f32 column panels ([`pack_cols`] + [`matmul_acc_packed`]) and the
+//!     loop-tiled Bᵀ form ([`matmul_bt_acc_tiled`]) — the planner's
+//!     cache-locality layout for prefill contractions, **bitwise
+//!     identical** to dense because each output element still
+//!     accumulates its partial products in the same ascending-k order.
 
 /// C (m,n) = A (m,k) @ B (k,n), row-major, f32 accumulation.
 pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize)
@@ -89,6 +105,175 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
         s += x * y;
     }
     s
+}
+
+// ------------------------------------------------------- bf16 storage ---
+
+/// Round an f32 to bf16 (round-to-nearest-even, the convention of every
+/// hardware bf16 cast). NaNs are quietened with the payload truncated so
+/// a stored NaN can never round into infinity.
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    // add 0x7fff + lsb-of-result: ties round to even
+    let round = 0x7fffu32 + ((bits >> 16) & 1);
+    (bits.wrapping_add(round) >> 16) as u16
+}
+
+/// Widen a bf16 back to f32 (exact: bf16 is the top 16 bits of f32).
+#[inline(always)]
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Convert a weight matrix to its bf16 stream form (one-time prepack).
+pub fn to_bf16(xs: &[f32]) -> Vec<u16> {
+    xs.iter().map(|&x| f32_to_bf16(x)).collect()
+}
+
+/// [`matmul_acc_strided`] with a bf16 B operand: B is (k, n) row-major
+/// u16, widened to f32 on the fly, accumulation in f32. Same `ikj` loop
+/// order and the same row-block bitwise invariance as the f32 form —
+/// the *values* differ from f32 only by B's storage rounding.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_acc_strided_bf16(a: &[f32], lda: usize, b: &[u16],
+                               m: usize, k: usize, n: usize,
+                               c: &mut [f32], ldc: usize) {
+    assert!(lda >= k && ldc >= n, "matmul_acc_strided_bf16: stride < row");
+    assert!(m == 0 || a.len() >= (m - 1) * lda + k,
+            "matmul_acc_strided_bf16: A view");
+    assert!(m == 0 || c.len() >= (m - 1) * ldc + n,
+            "matmul_acc_strided_bf16: C view");
+    assert_eq!(b.len(), k * n, "matmul_acc_strided_bf16: B shape");
+    for i in 0..m {
+        let arow = &a[i * lda..i * lda + k];
+        let crow = &mut c[i * ldc..i * ldc + n];
+        for (p, &aip) in arow.iter().enumerate() {
+            let brow = &b[p * n..(p + 1) * n];
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += aip * bf16_to_f32(*bv);
+            }
+        }
+    }
+}
+
+/// [`matmul_bt_acc_strided`] with a bf16 Bᵀ operand ((n, k) row-major
+/// u16): the tied lm head's bf16 stream form.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_bt_acc_strided_bf16(a: &[f32], lda: usize, bt: &[u16],
+                                  m: usize, k: usize, n: usize,
+                                  c: &mut [f32], ldc: usize) {
+    assert!(lda >= k && ldc >= n,
+            "matmul_bt_acc_strided_bf16: stride < row");
+    assert!(m == 0 || a.len() >= (m - 1) * lda + k,
+            "matmul_bt_acc_strided_bf16: A view");
+    assert!(m == 0 || c.len() >= (m - 1) * ldc + n,
+            "matmul_bt_acc_strided_bf16: C view");
+    assert_eq!(bt.len(), n * k, "matmul_bt_acc_strided_bf16: B shape");
+    for i in 0..m {
+        let arow = &a[i * lda..i * lda + k];
+        for j in 0..n {
+            let brow = &bt[j * k..(j + 1) * k];
+            let mut s = 0.0f32;
+            for (x, y) in arow.iter().zip(brow) {
+                s += x * bf16_to_f32(*y);
+            }
+            c[i * ldc + j] += s;
+        }
+    }
+}
+
+// ----------------------------------------------- planner tile packing ---
+
+/// Repack a (k, n) row-major B into column panels of `tile` columns:
+/// panel `t` holds rows 0..k of columns [t·tile, min(n, (t+1)·tile)),
+/// row-major within the panel, panels concatenated. Total length stays
+/// k·n; the last panel may be narrower.
+///
+/// This is the prepacked form [`matmul_acc_packed`] streams: one panel
+/// is small enough to stay cache-resident across a whole block of
+/// output rows, so the weight matrix is no longer re-streamed from L2+
+/// per row (the classic pack-B panel layout).
+pub fn pack_cols(b: &[f32], k: usize, n: usize, tile: usize) -> Vec<f32> {
+    assert_eq!(b.len(), k * n, "pack_cols: B shape");
+    assert!(tile > 0, "pack_cols: zero tile");
+    let mut out = Vec::with_capacity(k * n);
+    let mut col = 0;
+    while col < n {
+        let w = tile.min(n - col);
+        for p in 0..k {
+            out.extend_from_slice(&b[p * n + col..p * n + col + w]);
+        }
+        col += w;
+    }
+    out
+}
+
+/// `C += A @ B` where B is the panel pack of [`pack_cols`]. Loop order
+/// is panel-outer, row-middle, k, column — per C element the partial
+/// products still accumulate in ascending-k order and each element is
+/// touched by exactly one panel, so the result is **bitwise identical**
+/// to [`matmul_acc_strided`] on the dense B.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_acc_packed(a: &[f32], lda: usize, panels: &[f32],
+                         tile: usize, m: usize, k: usize, n: usize,
+                         c: &mut [f32], ldc: usize) {
+    assert!(lda >= k && ldc >= n, "matmul_acc_packed: stride < row");
+    assert!(m == 0 || a.len() >= (m - 1) * lda + k,
+            "matmul_acc_packed: A view");
+    assert!(m == 0 || c.len() >= (m - 1) * ldc + n,
+            "matmul_acc_packed: C view");
+    assert_eq!(panels.len(), k * n, "matmul_acc_packed: pack shape");
+    assert!(tile > 0, "matmul_acc_packed: zero tile");
+    let mut col = 0;
+    let mut poff = 0;
+    while col < n {
+        let w = tile.min(n - col);
+        let panel = &panels[poff..poff + k * w];
+        for i in 0..m {
+            let arow = &a[i * lda..i * lda + k];
+            let crow = &mut c[i * ldc + col..i * ldc + col + w];
+            for (p, &aip) in arow.iter().enumerate() {
+                let brow = &panel[p * w..(p + 1) * w];
+                for (cv, bv) in crow.iter_mut().zip(brow) {
+                    *cv += aip * bv;
+                }
+            }
+        }
+        col += w;
+        poff += k * w;
+    }
+}
+
+/// Loop-tiled `C += A @ Bᵀ`: Bᵀ rows are already contiguous k-vectors,
+/// so no repack is needed — tiling the j loop keeps a `tile`-row panel
+/// of Bᵀ cache-resident across all m output rows. Each C element is one
+/// dot product exactly as in [`matmul_bt_acc_strided`], so the result
+/// is bitwise identical for any tile.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_bt_acc_tiled(a: &[f32], lda: usize, bt: &[f32],
+                           tile: usize, m: usize, k: usize, n: usize,
+                           c: &mut [f32], ldc: usize) {
+    assert!(lda >= k && ldc >= n, "matmul_bt_acc_tiled: stride < row");
+    assert!(m == 0 || a.len() >= (m - 1) * lda + k,
+            "matmul_bt_acc_tiled: A view");
+    assert!(m == 0 || c.len() >= (m - 1) * ldc + n,
+            "matmul_bt_acc_tiled: C view");
+    assert_eq!(bt.len(), n * k, "matmul_bt_acc_tiled: B shape");
+    assert!(tile > 0, "matmul_bt_acc_tiled: zero tile");
+    let mut col = 0;
+    while col < n {
+        let w = tile.min(n - col);
+        for i in 0..m {
+            let arow = &a[i * lda..i * lda + k];
+            for j in col..col + w {
+                c[i * ldc + j] += dot(arow, &bt[j * k..(j + 1) * k]);
+            }
+        }
+        col += w;
+    }
 }
 
 /// x += y elementwise — the unfused form of a residual add (the plan
@@ -331,6 +516,130 @@ mod tests {
                                &mut blocked[split * n..], n);
             assert_eq!(blocked, whole, "m={m} split={split}");
         }
+    }
+
+    // ----------------------- precision & layout variants (DESIGN §8) ----
+
+    #[test]
+    fn bf16_round_trip_and_rne() {
+        // bf16-representable values survive exactly
+        for v in [0.0f32, 1.0, -2.5, 0.15625, 65536.0, -0.0078125] {
+            let b = f32_to_bf16(v);
+            assert_eq!(bf16_to_f32(b), v, "{v}");
+        }
+        // round-to-nearest: 1.0 + 2^-9 (halfway between 1.0 and the next
+        // bf16) ties to even (1.0); anything above goes up
+        let up = f32::from_bits(0x3F80_8001); // just above the tie
+        assert_eq!(bf16_to_f32(f32_to_bf16(up)),
+                   f32::from_bits(0x3F81_0000));
+        let tie = f32::from_bits(0x3F80_8000); // exactly halfway
+        assert_eq!(bf16_to_f32(f32_to_bf16(tie)), 1.0, "tie to even");
+        let tie_odd = f32::from_bits(0x3F81_8000); // halfway above odd lsb
+        assert_eq!(bf16_to_f32(f32_to_bf16(tie_odd)),
+                   f32::from_bits(0x3F82_0000), "tie rounds up to even");
+        // signs, infinities, NaN
+        assert_eq!(bf16_to_f32(f32_to_bf16(-0.0)).to_bits(),
+                   (-0.0f32).to_bits());
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::INFINITY)), f32::INFINITY);
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+        // rounding never turns a finite value into an unrelated one:
+        // |x - bf16(x)| <= 2^-8 |x|
+        let mut rng = Rng::new(0xBF16);
+        for _ in 0..200 {
+            let x = (rng.normal() * 3.0) as f32;
+            let r = bf16_to_f32(f32_to_bf16(x));
+            assert!((x - r).abs() <= x.abs() / 256.0 + 1e-30, "{x} -> {r}");
+        }
+    }
+
+    #[test]
+    fn prop_bf16_matmul_matches_dense_on_representable_values() {
+        // small integers are exactly representable in bf16, so the bf16
+        // kernels must agree with the f32 kernels bitwise on them — the
+        // storage rounding is the ONLY difference between the paths
+        let mut rng = Rng::new(0xB16B);
+        for _ in 0..40 {
+            let m = 1 + rng.below(6) as usize;
+            let k = 1 + rng.below(9) as usize;
+            let n = 1 + rng.below(9) as usize;
+            let a = rand_vec(&mut rng, m * k);
+            let b = rand_int_vec(&mut rng, k * n);
+            let b16 = to_bf16(&b);
+            let mut want = vec![0.0f32; m * n];
+            matmul_acc_strided(&a, k, &b, m, k, n, &mut want, n);
+            let mut got = vec![0.0f32; m * n];
+            matmul_acc_strided_bf16(&a, k, &b16, m, k, n, &mut got, n);
+            assert_eq!(got, want);
+            let bt = rand_int_vec(&mut rng, n * k);
+            let bt16 = to_bf16(&bt);
+            let mut want = vec![0.0f32; m * n];
+            matmul_bt_acc_strided(&a, k, &bt, m, k, n, &mut want, n);
+            let mut got = vec![0.0f32; m * n];
+            matmul_bt_acc_strided_bf16(&a, k, &bt16, m, k, n, &mut got, n);
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn prop_bf16_matmul_equals_widened_weights() {
+        // on arbitrary floats the bf16 path must equal the f32 path run
+        // on the pre-widened (rounded) weights bitwise: rounding happens
+        // at pack time, never inside the accumulation
+        let mut rng = Rng::new(0x16BF);
+        for _ in 0..40 {
+            let m = 1 + rng.below(5) as usize;
+            let k = 1 + rng.below(10) as usize;
+            let n = 1 + rng.below(10) as usize;
+            let a = rand_vec(&mut rng, m * k);
+            let b = rand_vec(&mut rng, k * n);
+            let b16 = to_bf16(&b);
+            let widened: Vec<f32> =
+                b16.iter().map(|&v| bf16_to_f32(v)).collect();
+            let mut want = vec![0.0f32; m * n];
+            matmul_acc_strided(&a, k, &widened, m, k, n, &mut want, n);
+            let mut got = vec![0.0f32; m * n];
+            matmul_acc_strided_bf16(&a, k, &b16, m, k, n, &mut got, n);
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn prop_packed_and_tiled_matmul_are_bitwise_dense() {
+        // the layout pass's whole contract: panel packing and bt loop
+        // tiling never move a bit, for any tile width (including ragged
+        // last panels) and any row stride
+        let mut rng = Rng::new(0x7113);
+        for _ in 0..60 {
+            let m = 1 + rng.below(8) as usize;
+            let k = 1 + rng.below(12) as usize;
+            let n = 1 + rng.below(24) as usize;
+            let tile = 1 + rng.below(n as u64 + 3) as usize; // may exceed n
+            let lda = k + rng.below(3) as usize;
+            let a = rand_vec(&mut rng, m * lda);
+            let b = rand_vec(&mut rng, k * n);
+            let cinit = rand_vec(&mut rng, m * n);
+            let mut want = cinit.clone();
+            matmul_acc_strided(&a, lda, &b, m, k, n, &mut want, n);
+            let panels = pack_cols(&b, k, n, tile);
+            assert_eq!(panels.len(), k * n);
+            let mut got = cinit.clone();
+            matmul_acc_packed(&a, lda, &panels, tile, m, k, n, &mut got, n);
+            assert_eq!(got, want, "packed m={m} k={k} n={n} tile={tile}");
+            let bt = rand_vec(&mut rng, n * k);
+            let mut want = cinit.clone();
+            matmul_bt_acc_strided(&a, lda, &bt, m, k, n, &mut want, n);
+            let mut got = cinit.clone();
+            matmul_bt_acc_tiled(&a, lda, &bt, tile, m, k, n, &mut got, n);
+            assert_eq!(got, want, "bt tiled m={m} k={k} n={n} tile={tile}");
+        }
+    }
+
+    #[test]
+    fn pack_cols_layout_is_panel_major() {
+        // (2, 5) matrix, tile 2 → panels [cols 0-1][cols 2-3][col 4]
+        let b = [0.0f32, 1., 2., 3., 4., 10., 11., 12., 13., 14.];
+        let p = pack_cols(&b, 2, 5, 2);
+        assert_eq!(p, vec![0., 1., 10., 11., 2., 3., 12., 13., 4., 14.]);
     }
 
     #[test]

@@ -85,6 +85,16 @@ impl Tensor {
                  data: vec![0; numel(dims) * 4] }
     }
 
+    /// Build an f32 tensor by adopting an existing little-endian byte
+    /// buffer (no copy) — the planned decode path updates the cache in
+    /// place over bytes and hands the buffer straight to the output.
+    pub fn from_f32_bytes(name: &str, dims: &[i64], data: Vec<u8>)
+        -> Tensor {
+        assert_eq!(numel(dims) * 4, data.len(), "from_f32_bytes: shape");
+        Tensor { name: name.into(), dtype: DType::F32,
+                 dims: dims.to_vec(), data }
+    }
+
     pub fn numel(&self) -> usize {
         numel(&self.dims)
     }
@@ -99,6 +109,16 @@ impl Tensor {
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
             .collect()
+    }
+
+    /// Decode the f32 payload into `out`, reusing its capacity — the
+    /// no-allocation form of [`Tensor::as_f32`] for per-step hot loops
+    /// (the engine's decode logits buffer).
+    pub fn read_f32_into(&self, out: &mut Vec<f32>) {
+        assert_eq!(self.dtype, DType::F32);
+        out.clear();
+        out.extend(self.data.chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap())));
     }
 
     pub fn as_i32(&self) -> Vec<i32> {
@@ -255,6 +275,28 @@ mod tests {
         let p = dir.join("bad.mbt");
         std::fs::write(&p, b"NOPE....").unwrap();
         assert!(load_mbt(&p).is_err());
+    }
+
+    #[test]
+    fn from_f32_bytes_adopts_buffer() {
+        let t = Tensor::f32("x", &[2, 2], &[1.0, 2.0, 3.0, 4.0]);
+        let t2 = Tensor::from_f32_bytes("y", &[2, 2], t.data.clone());
+        assert_eq!(t2.as_f32(), t.as_f32());
+        assert_eq!(t2.dtype, DType::F32);
+    }
+
+    #[test]
+    fn read_f32_into_reuses_capacity() {
+        let t = Tensor::f32("x", &[3], &[1.0, -2.0, 3.5]);
+        let mut buf = Vec::with_capacity(16);
+        t.read_f32_into(&mut buf);
+        assert_eq!(buf, vec![1.0, -2.0, 3.5]);
+        assert_eq!(buf.capacity(), 16, "capacity preserved");
+        // refilling from a shorter tensor truncates, never reallocates
+        let t2 = Tensor::f32("y", &[2], &[9.0, 8.0]);
+        t2.read_f32_into(&mut buf);
+        assert_eq!(buf, vec![9.0, 8.0]);
+        assert_eq!(buf, t2.as_f32());
     }
 
     #[test]

@@ -58,4 +58,11 @@ fn golden_covers_both_entrypoints() {
     assert!(want.contains("row_block="));
     assert!(want.contains("dispatches="));
     assert!(want.contains("fused-acc"));
+    // PR 5: the precision/layout half of the schedule is pinned too —
+    // prefill weights repacked into L1 panels, decode (16 rows, under
+    // the repack threshold) dense, everything f32 by default
+    assert!(want.contains("weights=f32 layout=tile32"));
+    assert!(want.contains("weights=f32 layout=dense"));
+    assert!(want.contains("w=f32.tile32"));
+    assert!(want.contains("w=f32.tile16"));
 }

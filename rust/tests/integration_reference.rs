@@ -160,7 +160,7 @@ fn cache_is_constant_size() {
 #[test]
 fn weights_survive_checkpoint_round_trip() {
     // export → rebuild must reproduce logits bitwise (the .mbt path the
-    // server's --weights flag uses)
+    // server's --checkpoint flag uses)
     let a = backend();
     let mut b2 = ReferenceBackend::seeded("tiny", 999).unwrap();
     let tokens = prompt32();

@@ -131,6 +131,53 @@ fn forward_full_parity() {
                o.forward_full(&toks).unwrap().as_f32());
 }
 
+#[test]
+fn arena_reuse_stays_bitwise_across_repeats() {
+    // PR 5: the executor runs every call on a recycled slab from the
+    // plan's arena pool, returned DIRTY — correctness rests on every
+    // op zero-filling or fully overwriting its output. Re-running the
+    // same shapes (same slab, different stale contents each round, and
+    // a ChunkScan crow carrying continuation seeds on round 2) must
+    // reproduce the oracle bitwise every time.
+    let p = planned(4);
+    let o = oracle(4);
+    let toks = prompt(48, 2);
+    let want_pre = o.prefill(&toks[..32], 1).unwrap();
+    let want_cont =
+        o.prefill_continue(&want_pre.cache, &toks[32..], 1).unwrap();
+    for round in 0..3 {
+        let pre = p.prefill(&toks[..32], 1).unwrap();
+        assert_eq!(pre.logits.as_f32(), want_pre.logits.as_f32(),
+                   "round {round}: prefill");
+        // continuation reuses the SAME plan+slab as a fresh 16-token
+        // prefill (same shape key), with init seeds flowing through
+        // the planned crow scratch — the dirtiest reuse pattern
+        let cont = p.prefill_continue(&pre.cache, &toks[32..], 1)
+            .unwrap();
+        assert_eq!(cont.logits.as_f32(), want_cont.logits.as_f32(),
+                   "round {round}: continuation");
+        let fresh = p.prefill(&toks[32..48], 1).unwrap();
+        let ofresh = o.prefill(&toks[32..48], 1).unwrap();
+        assert_eq!(fresh.logits.as_f32(), ofresh.logits.as_f32(),
+                   "round {round}: fresh prefill after continuation");
+    }
+    // decode: 16 repeated steps on one slab vs the oracle
+    let (cache, last) = p.prefill_any(&toks[..32]).unwrap();
+    let mut tok = mamba2_serve::runtime::argmax_last(&last)[0];
+    let mut pc = cache.clone();
+    let mut oc = cache;
+    for step in 0..16 {
+        let ps = p.decode_step(&pc, &[tok]).unwrap();
+        let os = o.decode_step(&oc, &[tok]).unwrap();
+        assert_eq!(ps.logits.as_f32(), os.logits.as_f32(),
+                   "step {step}: logits");
+        assert_eq!(ps.cache.ssm.as_f32(), os.cache.ssm.as_f32());
+        tok = mamba2_serve::runtime::argmax_last(&ps.logits)[0];
+        pc = ps.cache;
+        oc = os.cache;
+    }
+}
+
 // NOTE: the M2_PLAN env-var behaviour is tested in tests/plan_env.rs —
 // its own test binary with a single test, because `std::env::set_var`
 // racing the `env::var` reads of concurrently-running tests in the same

@@ -1,0 +1,213 @@
+//! Tolerance suite for the bf16 weight stream (ISSUE 5, DESIGN.md §8),
+//! the paper's §4 parity protocol adapted to untrained sim configs.
+//!
+//! The bf16 path differs from f32 by exactly the weights' storage
+//! rounding, so the contract has three parts:
+//!
+//!   * prefill is **bitwise** f32 in both modes (the pass is
+//!     decode-only by default),
+//!   * decode drift is bounded: per-step logit perturbation, hidden
+//!     (ssm) state relative error and teacher-forced |ΔPPL| all stay
+//!     within bounds calibrated ~5-10× above a float64 mirror of the
+//!     model (see CHANGES.md PR 5 verification notes),
+//!   * greedy decisions agree token-for-token over 64 steps at every
+//!     step whose f32 top-2 margin exceeds the decision threshold
+//!     (0.05, ≈8× the measured bf16 perturbation). Untrained sim
+//!     configs emit near-uniform logits, so *unconditional* sequence
+//!     equality would be a coin flip on sub-rounding margins — the
+//!     paper's protocol compares trained checkpoints, where decisive
+//!     margins dwarf storage rounding; the margin gate is that
+//!     protocol made precise for random weights. The test also pins
+//!     that the gate is far from vacuous (≳1/8 of steps decisive).
+
+use mamba2_serve::runtime::{argmax_last, Backend, PlanMode,
+                            ReferenceBackend, WeightsDtype};
+
+/// Decision threshold of the margin-gated greedy protocol; ≈8× the
+/// mirrored max per-step |Δlogit| (0.006 tiny / 0.008 sim-130m).
+const DECISIVE_GAP: f32 = 0.05;
+/// Bound on the per-step logit perturbation along a teacher-forced
+/// 64-step trajectory (mirror: ≤ 0.008).
+const MAX_LOGIT_PERT: f32 = 0.05;
+/// Bound on the relative L2 drift of logits and ssm state (mirror:
+/// ≤ 0.012).
+const MAX_REL_ERR: f64 = 0.05;
+/// Bound on the teacher-forced perplexity shift (mirror: ≤ 0.16 at
+/// PPL ≈ 515).
+const MAX_DPPL: f64 = 1.0;
+
+fn pair(config: &str, seed: u64) -> (ReferenceBackend, ReferenceBackend) {
+    let f = ReferenceBackend::seeded(config, seed).unwrap()
+        .with_plan_mode(PlanMode::On)
+        .with_weights_dtype(WeightsDtype::F32);
+    let b = ReferenceBackend::seeded(config, seed).unwrap()
+        .with_plan_mode(PlanMode::On)
+        .with_weights_dtype(WeightsDtype::Bf16);
+    (f, b)
+}
+
+fn prompt(len: usize, salt: usize) -> Vec<i32> {
+    (0..len).map(|i| ((i * 37 + 11 * salt + 11) % 512) as i32).collect()
+}
+
+fn rel_l2(a: &[f32], b: &[f32]) -> f64 {
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        num += ((x - y) as f64).powi(2);
+        den += (*x as f64).powi(2);
+    }
+    (num / den.max(1e-30)).sqrt()
+}
+
+fn log_softmax(row: &[f32], idx: usize) -> f64 {
+    let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b)) as f64;
+    let z: f64 = row.iter().map(|&x| ((x as f64) - m).exp()).sum();
+    (row[idx] as f64) - m - z.ln()
+}
+
+#[test]
+fn bf16_prefill_is_bitwise_f32() {
+    // decode-only precision: both modes run the identical f32 prefill
+    for config in ["tiny", "sim-130m"] {
+        let (f, b) = pair(config, 0);
+        let toks = prompt(64, 1);
+        let pf = f.prefill(&toks, 1).unwrap();
+        let pb = b.prefill(&toks, 1).unwrap();
+        assert_eq!(pf.logits.as_f32(), pb.logits.as_f32(), "{config}");
+        assert_eq!(pf.cache.ssm.as_f32(), pb.cache.ssm.as_f32());
+        assert_eq!(pf.cache.conv.as_f32(), pb.cache.conv.as_f32());
+    }
+}
+
+#[test]
+fn bf16_decode_drift_is_bounded_and_nonzero() {
+    // teacher-forced 64-step trajectory from the shared (f32) prefill
+    // state: logits move — but never past the calibrated bounds
+    for (config, seed) in [("tiny", 0u64), ("tiny", 1), ("tiny", 2),
+                           ("sim-130m", 0)] {
+        let (f, b) = pair(config, seed);
+        let p = prompt(32, seed as usize);
+        let (cf, last) = f.prefill_any(&p).unwrap();
+        let cb = cf.clone(); // identical start (prefill is f32-exact)
+        let mut tok = argmax_last(&last)[0];
+        let mut cf = cf;
+        let mut cb = cb;
+        let mut max_pert = 0.0f32;
+        let mut max_rel = 0.0f64;
+        for _ in 0..64 {
+            let sf = f.decode_step(&cf, &[tok]).unwrap();
+            let sb = b.decode_step(&cb, &[tok]).unwrap();
+            max_pert = max_pert.max(sf.logits.max_abs_diff(&sb.logits));
+            max_rel = max_rel.max(
+                rel_l2(&sf.logits.as_f32(), &sb.logits.as_f32()));
+            tok = argmax_last(&sf.logits)[0]; // f32 greedy trajectory
+            cf = sf.cache;
+            cb = sb.cache;
+        }
+        assert!(max_pert > 0.0, "{config}/{seed}: bf16 stream inert");
+        assert!(max_pert < MAX_LOGIT_PERT,
+                "{config}/{seed}: |Δlogit| {max_pert}");
+        assert!(max_rel < MAX_REL_ERR,
+                "{config}/{seed}: rel {max_rel}");
+        let srel = rel_l2(&cf.ssm.as_f32(), &cb.ssm.as_f32());
+        assert!(srel > 0.0 && srel < MAX_REL_ERR,
+                "{config}/{seed}: ssm rel {srel}");
+        // the conv window caches raw pre-activation inputs of the bf16
+        // in_proj — drift there is bounded by the same envelope
+        let crel = rel_l2(&cf.conv.as_f32(), &cb.conv.as_f32());
+        assert!(crel < MAX_REL_ERR, "{config}/{seed}: conv rel {crel}");
+    }
+}
+
+#[test]
+fn bf16_greedy_margin_gated_agreement_over_64_steps() {
+    for (config, seed) in [("tiny", 0u64), ("tiny", 3), ("sim-130m", 0)] {
+        let (f, b) = pair(config, seed);
+        let p = prompt(32, seed as usize);
+        let (cache, last) = f.prefill_any(&p).unwrap();
+        let mut cf = cache.clone();
+        let mut cb = cache;
+        let mut tok = argmax_last(&last)[0];
+        let mut decisive = 0usize;
+        for step in 0..64 {
+            let sf = f.decode_step(&cf, &[tok]).unwrap();
+            let sb = b.decode_step(&cb, &[tok]).unwrap();
+            let row = sf.logits.as_f32();
+            let t32 = argmax_last(&sf.logits)[0];
+            let tbf = argmax_last(&sb.logits)[0];
+            // top-2 margin of the f32 decision
+            let top = row[t32 as usize];
+            let second = row.iter().enumerate()
+                .filter(|(i, _)| *i != t32 as usize)
+                .map(|(_, &v)| v)
+                .fold(f32::NEG_INFINITY, f32::max);
+            if top - second > DECISIVE_GAP {
+                decisive += 1;
+                assert_eq!(t32, tbf,
+                           "{config}/{seed} step {step}: decisive \
+                            greedy pick diverged (gap {})",
+                           top - second);
+            }
+            tok = t32;
+            cf = sf.cache;
+            cb = sb.cache;
+        }
+        // mirror: 19–29 of 64 steps decisive at this threshold — the
+        // gate must stay far from vacuous
+        assert!(decisive >= 8,
+                "{config}/{seed}: only {decisive}/64 decisive steps");
+    }
+}
+
+#[test]
+fn bf16_teacher_forced_ppl_shift_is_bounded() {
+    let (f, b) = pair("tiny", 0);
+    let toks = prompt(48, 9);
+    let nll = |backend: &ReferenceBackend| -> f64 {
+        let (mut cache, mut logits) =
+            backend.prefill_any(&toks[..16]).unwrap();
+        let mut sum = 0.0f64;
+        let mut n = 0usize;
+        for &t in &toks[16..] {
+            // prefill_any and decode_step both return last-position
+            // logits of shape (1, V), so the row IS the distribution
+            let row = logits.as_f32();
+            sum -= log_softmax(&row, t as usize);
+            n += 1;
+            let s = backend.decode_step(&cache, &[t]).unwrap();
+            cache = s.cache;
+            logits = s.logits;
+        }
+        sum / n as f64
+    };
+    let ppl_f = nll(&f).exp();
+    let ppl_b = nll(&b).exp();
+    // untrained 512-vocab model sits near uniform (ppl ≈ vocab)
+    assert!(ppl_f > 100.0 && ppl_f < 2000.0, "ppl {ppl_f}");
+    let dppl = (ppl_f - ppl_b).abs();
+    assert!(dppl < MAX_DPPL, "|ΔPPL| {dppl} (f32 {ppl_f}, bf16 {ppl_b})");
+    assert!(dppl > 0.0, "bf16 stream left the NLL bitwise unchanged");
+}
+
+#[test]
+fn bf16_decode_is_deterministic_and_batch_consistent() {
+    // the bf16 stream keeps the batched-step contract: B-fused decode
+    // equals B independent single-slot decodes bitwise (rounding
+    // happens at pack time, not per launch), and repeated runs agree
+    let (_, b) = pair("tiny", 0);
+    let (c1, _) = b.prefill_any(&prompt(16, 1)).unwrap();
+    let (c2, _) = b.prefill_any(&prompt(32, 2)).unwrap();
+    let mut cache = mamba2_serve::runtime::CacheState::zeros(b.cfg(), 2);
+    cache.copy_slot_from(0, &c1, 0);
+    cache.copy_slot_from(1, &c2, 0);
+    let fused = b.decode_step(&cache, &[5, 9]).unwrap();
+    let s1 = b.decode_step(&c1, &[5]).unwrap();
+    let s2 = b.decode_step(&c2, &[9]).unwrap();
+    let v = b.cfg().vocab_size;
+    let all = fused.logits.as_f32();
+    assert_eq!(&all[..v], &s1.logits.as_f32()[..]);
+    assert_eq!(&all[v..], &s2.logits.as_f32()[..]);
+    let again = b.decode_step(&cache, &[5, 9]).unwrap();
+    assert_eq!(fused.logits.as_f32(), again.logits.as_f32());
+}
