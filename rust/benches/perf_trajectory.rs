@@ -13,7 +13,12 @@
 //!   * chunked-parallel prefill: tokens/s at L ∈ {512, 2048}, plus
 //!     analytic MFU/HBU against the host-CPU roofline,
 //!   * the plan cache: plans built, cache hits and total planning time
-//!     across the whole run (zero block on planner-less backends).
+//!     across the two measured sessions (zero block on planner-less
+//!     backends),
+//!   * the prompt-prefix cache (schema 1.3): hits, misses and resident
+//!     bytes from replaying a shared-prefix workload through an engine
+//!     replica — the serving-side economics of O(1) state (DESIGN.md
+//!     §9).
 //!
 //! `--quick` trims the measurement protocol for CI smoke runs (the sweep
 //! itself is never trimmed — the schema pins it). `--check` exits
@@ -35,11 +40,13 @@ use mamba2_serve::bench_support::{batch_speedup, compare_to_baseline,
                                   trajectory_json, write_trajectory,
                                   BaselineCheck, DecodePoint,
                                   PrefillPoint};
+use mamba2_serve::coordinator::{Engine, EngineConfig, GenerateParams,
+                                PrefixCacheStats};
 use mamba2_serve::runtime::{reference, Backend, CacheState, PlanStats};
 use mamba2_serve::util::benchkit::{Bench, Table};
 use mamba2_serve::util::json::Json;
 
-const TAG: &str = "pr5";
+const TAG: &str = "pr6";
 const MODEL: &str = "sim-130m";
 const DECODE_BATCHES: [usize; 3] = [1, 4, 16];
 const PREFILL_LENS: [usize; 2] = [512, 2048];
@@ -125,6 +132,47 @@ fn main() {
                   m.summary.mean * 1e3, l as f64 / m.summary.mean);
     }
 
+    // ---- prefix cache: shared-prefix replay through an engine -----------
+    // Eight requests share a 256-token "system prompt"; the engine's
+    // prompt-prefix cache (schema 1.3 block) should prefill the shared
+    // segment once and seed every later request from the stored state.
+    // A fresh backend replica feeds the engine so the sweeps above stay
+    // untouched; its plans are deliberately outside the plan_cache block.
+    let eng = Engine::start(open_backend(MODEL), EngineConfig {
+        prefix_cache_bytes: 16 << 20,
+        ..Default::default()
+    }).unwrap_or_else(|e| {
+        eprintln!("cannot start engine for prefix-cache replay: {e}");
+        std::process::exit(1);
+    });
+    let shared: Vec<i32> = (0..256).map(|i| ((i * 37 + 11) % 512) as i32)
+        .collect();
+    let mut submitted = 0u64;
+    for r in 0..8usize {
+        let mut p = shared.clone();
+        p.extend((0..8usize).map(|i| ((i * 13 + 7 * r + 5) % 512) as i32));
+        submitted += p.len() as u64;
+        eng.generate(p, GenerateParams::new().max_new_tokens(4))
+            .collect()
+            .unwrap_or_else(|e| {
+                eprintln!("prefix-cache replay failed: {e}");
+                std::process::exit(1);
+            });
+    }
+    let es = eng.metrics.snapshot();
+    let prefix_stats = PrefixCacheStats {
+        hits: es.prefix_hits,
+        misses: es.prefix_misses,
+        evictions: es.prefix_evictions,
+        insertions: es.prefix_insertions,
+        bytes: es.prefix_bytes,
+        entries: es.prefix_entries,
+    };
+    eprintln!("  prefix cache: {} hits / {} misses, {} B resident; \
+               prefilled {} of {} submitted prompt tokens",
+              prefix_stats.hits, prefix_stats.misses, prefix_stats.bytes,
+              es.prefill_tokens, submitted);
+
     // ---- human table + machine-readable trajectory ----------------------
     let mut td = Table::new(
         &format!("Perf trajectory {TAG} — batch-fused decode \
@@ -174,7 +222,8 @@ fn main() {
                   ps.built, ps.hits, ps.planning_ms);
     }
     let doc = trajectory_json(TAG, MODEL, session.name(), threads, quick(),
-                              &decode, &prefill, plan_stats);
+                              &decode, &prefill, plan_stats,
+                              Some(prefix_stats));
     let path = write_trajectory(TAG, &doc).unwrap_or_else(|e| {
         eprintln!("cannot write trajectory: {e}");
         std::process::exit(1);

@@ -139,7 +139,13 @@ pub fn fmt_pct(x: f64) -> String {
 /// {1, 16} coverage requirement applies to the f32 rows, and
 /// `batch_speedup_b16_vs_b1` is computed over f32 rows only so the
 /// fusion gate stays comparable with pre-1.2 trajectories.
-pub const BENCH_SCHEMA_VERSION: f64 = 1.2;
+///
+/// 1.2 → 1.3 (PR 6): added the mandatory top-level `prefix_cache`
+/// block (`hits`, `misses`, `bytes`) — the prompt-prefix cache's
+/// serving-side economics (DESIGN.md §9), measured by replaying a
+/// shared-prefix workload through an engine. Zero-valued when the
+/// cache is disabled or the workload has no shared prefixes.
+pub const BENCH_SCHEMA_VERSION: f64 = 1.3;
 
 /// One decode measurement: `tokens_per_s` is generated tokens per
 /// wall-second (`batch / mean step seconds`), `ms_per_step` the mean
@@ -294,14 +300,19 @@ pub fn compare_to_baseline(new: &Json, old: &Json, tol: f64)
 /// are part of the cross-PR contract checked by
 /// [`validate_trajectory_json`]. `plan` carries the backend's
 /// plan-cache counters (`Backend::plan_stats`); backends without a
-/// planner report the zero block.
+/// planner report the zero block. `prefix` (1.3) carries the
+/// prompt-prefix cache counters measured on a shared-prefix workload
+/// ([`crate::coordinator::PrefixCacheStats`]); `None` reports the zero
+/// block (cache disabled).
 #[allow(clippy::too_many_arguments)]
 pub fn trajectory_json(tag: &str, model: &str, backend: &str,
                        threads: usize, quick: bool,
                        decode: &[DecodePoint], prefill: &[PrefillPoint],
-                       plan: Option<PlanStats>)
+                       plan: Option<PlanStats>,
+                       prefix: Option<crate::coordinator::PrefixCacheStats>)
     -> Json {
     let ps = plan.unwrap_or_default();
+    let px = prefix.unwrap_or_default();
     let dec = decode.iter().map(|p| Json::obj(vec![
         ("batch", Json::num(p.batch as f64)),
         ("ms_per_step", Json::num(p.ms_per_step)),
@@ -333,6 +344,11 @@ pub fn trajectory_json(tag: &str, model: &str, backend: &str,
             ("plans_built", Json::num(ps.built as f64)),
             ("plan_hits", Json::num(ps.hits as f64)),
             ("planning_ms", Json::num(ps.planning_ms)),
+        ])),
+        ("prefix_cache", Json::obj(vec![
+            ("hits", Json::num(px.hits as f64)),
+            ("misses", Json::num(px.misses as f64)),
+            ("bytes", Json::num(px.bytes as f64)),
         ])),
     ])
 }
@@ -425,6 +441,17 @@ pub fn validate_trajectory_json(j: &Json) -> Result<()> {
             bail!("BENCH json: plan_cache.{key} = {val} not finite ≥ 0");
         }
     }
+    // 1.3: the prompt-prefix cache block is mandatory
+    let px = j.get("prefix_cache")
+        .context("BENCH json: missing object \"prefix_cache\"")?;
+    for key in ["hits", "misses", "bytes"] {
+        let val = px.get(key).and_then(Json::as_f64).with_context(
+            || format!(
+                "BENCH json: prefix_cache missing number {key:?}"))?;
+        if !val.is_finite() || val < 0.0 {
+            bail!("BENCH json: prefix_cache.{key} = {val} not finite ≥ 0");
+        }
+    }
     Ok(())
 }
 
@@ -479,8 +506,12 @@ mod tests {
             }).collect();
         let plan = PlanStats { built: 6, hits: 40, planning_ms: 1.5,
                                cached: 6 };
+        let prefix = crate::coordinator::PrefixCacheStats {
+            hits: 3, misses: 2, evictions: 0, insertions: 2,
+            bytes: 1 << 18, entries: 2,
+        };
         trajectory_json("test", "sim-130m", "reference", 4, true,
-                        &decode, &prefill, Some(plan))
+                        &decode, &prefill, Some(plan), Some(prefix))
     }
 
     #[test]
@@ -501,7 +532,8 @@ mod tests {
         // keeps BENCH_*.json comparable across PRs
         for key in ["schema_version", "pr", "model", "backend", "threads",
                     "quick", "decode", "prefill",
-                    "batch_speedup_b16_vs_b1", "plan_cache"] {
+                    "batch_speedup_b16_vs_b1", "plan_cache",
+                    "prefix_cache"] {
             let j = sample_doc();
             let mut m = j.as_obj().unwrap().clone();
             m.remove(key);
@@ -669,10 +701,38 @@ mod tests {
             &cfg, "prefill", Some(512), 1);
         let prefill = vec![prefill_point(&pcost, 512, 0.05)];
         let j = trajectory_json("test", "sim-130m", "xla", 1, true,
-                                &decode, &prefill, None);
+                                &decode, &prefill, None, None);
         validate_trajectory_json(&j).unwrap();
         assert_eq!(j.at(&["plan_cache", "plans_built"])
                    .and_then(Json::as_f64), Some(0.0));
+    }
+
+    #[test]
+    fn trajectory_schema_pins_prefix_cache_fields() {
+        // each prefix-cache counter is individually mandatory (1.3)
+        for key in ["hits", "misses", "bytes"] {
+            let j = sample_doc();
+            let mut m = j.as_obj().unwrap().clone();
+            let mut px = m.get("prefix_cache").unwrap()
+                .as_obj().unwrap().clone();
+            px.remove(key);
+            m.insert("prefix_cache".into(), Json::Obj(px));
+            let e = validate_trajectory_json(&Json::Obj(m))
+                .expect_err(&format!("must reject missing {key}"));
+            assert!(e.to_string().contains("prefix_cache"), "{e}");
+        }
+        // negative counters are schema violations, not measurements
+        let j = sample_doc();
+        let mut m = j.as_obj().unwrap().clone();
+        let mut px = m.get("prefix_cache").unwrap()
+            .as_obj().unwrap().clone();
+        px.insert("bytes".into(), Json::num(-4096.0));
+        m.insert("prefix_cache".into(), Json::Obj(px));
+        assert!(validate_trajectory_json(&Json::Obj(m)).is_err());
+        // a disabled cache reports the zero block and validates
+        let j = sample_doc();
+        assert!(j.at(&["prefix_cache", "hits"])
+                .and_then(Json::as_f64).unwrap() >= 0.0);
     }
 
     #[test]

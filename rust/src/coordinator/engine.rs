@@ -20,6 +20,7 @@
 //! `generate_noncached`) expose the paper's three decode strategies
 //! (Table 1) directly for benches and examples.
 
+use std::collections::HashMap;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -27,10 +28,12 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use super::batcher::{ActiveSeq, Admission, Batcher};
+use super::prefix_cache::PrefixCache;
 use super::request::{channel, FinishReason, GenRequest, GenerateParams,
                      ResponseSink, ResponseStream, Sampling};
 use super::metrics::Metrics;
-use crate::runtime::{argmax_last, Backend, CacheState, Manifest};
+use crate::runtime::{argmax_last, Backend, CacheState, Manifest,
+                     SessionState};
 use crate::tensor::Tensor;
 use crate::util::error::Result;
 use crate::util::prng::Rng;
@@ -40,17 +43,29 @@ pub struct EngineConfig {
     pub max_admissions_per_iter: usize,
     /// park the loop when idle for this long
     pub idle_poll: Duration,
+    /// byte budget of the prompt-prefix cache (DESIGN.md §9); 0 disables
+    /// it (every admission prefills cold, as before PR 6)
+    pub prefix_cache_bytes: usize,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
         EngineConfig { batch_cap: 4, max_admissions_per_iter: 2,
-                       idle_poll: Duration::from_millis(2) }
+                       idle_poll: Duration::from_millis(2),
+                       // a few hundred sim-config entries; bounded and
+                       // cheap next to the weights
+                       prefix_cache_bytes: 16 << 20 }
     }
 }
 
 enum Msg {
     Submit(GenRequest, ResponseSink),
+    /// `Submit` plus a restored [`SessionState`] to seed the prompt
+    /// (which holds only the continuation tokens, possibly none)
+    SubmitResume(GenRequest, Box<SessionState>, ResponseSink),
+    /// prefill `prompt` (through the prefix cache) and reply with the
+    /// frozen state after its last token
+    Save(Vec<i32>, mpsc::Sender<Result<SessionState>>),
     /// stop request `id` and free its slot, finishing with the given
     /// reason (`Cancelled` = abandonment; `StopString` = the
     /// detokenising layer completed it — counted as completed)
@@ -93,6 +108,51 @@ impl EngineHandle {
         }));
         if self.tx.send(Msg::Submit(req, sink)).is_err() {
             // engine gone: surface as error stream
+            let (mut s2, stream2) = channel(0);
+            s2.fail("engine shut down");
+            return stream2;
+        }
+        stream
+    }
+
+    /// Prefill `prompt` (reusing any cached shared prefix) and freeze
+    /// the resulting generation state into a portable [`SessionState`]
+    /// — no slot is held and nothing is sampled. Blocks until the
+    /// engine thread has run the prefill. The blob round-trips through
+    /// `SessionState::to_bytes` and resumes on any engine whose backend
+    /// has the same config fingerprint (wire op `session_save`).
+    pub fn session_save(&self, prompt: Vec<i32>) -> Result<SessionState> {
+        let (tx, rx) = mpsc::channel();
+        if self.tx.send(Msg::Save(prompt, tx)).is_err() {
+            crate::bail!("engine shut down");
+        }
+        match rx.recv() {
+            Ok(r) => r,
+            Err(_) => crate::bail!("engine shut down"),
+        }
+    }
+
+    /// Resume generation from a saved [`SessionState`], optionally
+    /// consuming `continuation` tokens first (the new user turn). With
+    /// an empty continuation the first token is sampled from the saved
+    /// `last_logits` row — bitwise the token the original stream would
+    /// have produced next under the same sampling params. Config
+    /// mismatches surface as an error event on the returned stream.
+    pub fn session_resume(&self, state: SessionState,
+                          continuation: Vec<i32>, params: GenerateParams)
+        -> ResponseStream {
+        Metrics::inc(&self.metrics.requests_submitted, 1);
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (sink, mut stream) = channel(id);
+        let cancel_tx = Mutex::new(self.tx.clone());
+        stream.attach_cancel(Arc::new(move |reason| {
+            if let Ok(tx) = cancel_tx.lock() {
+                let _ = tx.send(Msg::Cancel(id, reason));
+            }
+        }));
+        let req = GenRequest { id, prompt: continuation, params };
+        if self.tx.send(Msg::SubmitResume(req, Box::new(state),
+                                          sink)).is_err() {
             let (mut s2, stream2) = channel(0);
             s2.fail("engine shut down");
             return stream2;
@@ -147,6 +207,12 @@ pub struct Engine {
     /// every occupied slot is overwritten and the tail cleared each
     /// step, so reuse is invisible vs the old fresh-zeros allocation.
     packed_cache: Option<CacheState>,
+    /// prompt-prefix → CacheState store consulted at admission
+    /// (DESIGN.md §9); budget 0 = disabled
+    prefix_cache: PrefixCache,
+    /// restored session states parked between `SubmitResume` and the
+    /// request's admission, keyed by request id
+    pending_resumes: HashMap<u64, SessionState>,
 }
 
 impl Engine {
@@ -175,6 +241,8 @@ impl Engine {
         // up front, so the first requests never pay planning latency
         // (no-op on backends without a planner)
         session.warm_up(slots);
+        let prefix_cache = PrefixCache::new(cfg.prefix_cache_bytes,
+                                            model_cfg.chunk_size);
         let mut eng = Engine {
             session,
             batcher: Batcher::new(slots),
@@ -188,6 +256,8 @@ impl Engine {
             logits_buf: Vec::new(),
             tok_buf: Vec::new(),
             packed_cache: None,
+            prefix_cache,
+            pending_resumes: HashMap::new(),
         };
         eng.batcher.max_admissions_per_iter =
             eng.cfg.max_admissions_per_iter;
@@ -223,6 +293,18 @@ impl Engine {
                     self.sinks_insert(req.id, sink);
                     self.batcher.submit(req);
                     continue; // drain more before stepping
+                }
+                Some(Msg::SubmitResume(req, state, sink)) => {
+                    self.pending_resumes.insert(req.id, *state);
+                    self.sinks_insert(req.id, sink);
+                    self.batcher.submit(req);
+                    continue;
+                }
+                Some(Msg::Save(prompt, reply)) => {
+                    // runs on the engine thread between iterations — a
+                    // prefill's worth of latency, same as one admission
+                    let _ = reply.send(self.save_session(&prompt));
+                    continue;
                 }
                 Some(Msg::Cancel(id, reason)) => {
                     self.cancel_request(id, reason);
@@ -284,6 +366,8 @@ impl Engine {
     /// sees completed requests, so latency percentiles stay comparable
     /// across workloads with different cancel rates.
     fn cancel_request(&mut self, id: u64, reason: FinishReason) {
+        // a queued resume that never admits must not leak its state
+        self.pending_resumes.remove(&id);
         let completed = reason == FinishReason::StopString;
         if let Some(slot) = self.batcher.slot_of(id) {
             self.batcher.abort(slot);
@@ -324,14 +408,92 @@ impl Engine {
         self.rngs[slot] = None;
     }
 
+    /// Prefix-cache-aware prefill of one full prompt. Looks up the
+    /// longest cached chunk-aligned proper prefix, seeds
+    /// `prefill_any_seeded` from it (never re-running the shared
+    /// segment), and publishes the prompt's own longest chunk-aligned
+    /// prefix for the requests that follow. `prefill_tokens` counts only
+    /// the tokens actually computed — the counter the cache's savings
+    /// show up in. Chunk-boundary keys keep the hit path bitwise equal
+    /// to a cold prefill (DESIGN.md §9).
+    fn prefilled(&mut self, prompt: &[i32])
+        -> Result<(CacheState, Tensor)> {
+        if prompt.is_empty() {
+            crate::bail!("empty prompt");
+        }
+        let chunk = self.model_cfg.chunk_size;
+        let total = prompt.len();
+        // the longest chunk multiple STRICTLY below total: the key this
+        // prompt publishes, and the longest seed it can consume (at
+        // least one tail token must remain to produce the next-token
+        // logits)
+        let key_len = (total - 1) / chunk * chunk;
+        let mut seed = self.prefix_cache.lookup(prompt);
+        let hit_len = seed.as_ref().map_or(0, |(_, n)| *n);
+        if key_len > hit_len {
+            // advance the shared segment once and publish it for the
+            // next request with this prefix
+            let (mid, _) = self.session.prefill_any_seeded(
+                &prompt[hit_len..key_len],
+                seed.as_ref().map(|(c, n)| (c, *n)))?;
+            self.prefix_cache.insert(&prompt[..key_len], &mid);
+            seed = Some((mid, key_len));
+        }
+        let from = seed.as_ref().map_or(0, |(_, n)| *n);
+        let out = self.session.prefill_any_seeded(
+            &prompt[from..], seed.as_ref().map(|(c, n)| (c, *n)))?;
+        Metrics::inc(&self.metrics.prefill_tokens,
+                     (total - hit_len) as u64);
+        self.publish_prefix_stats();
+        Ok(out)
+    }
+
+    /// Mirror the engine-owned cache's counters into the shared metrics
+    /// (absolute values — see `Metrics::set`).
+    fn publish_prefix_stats(&self) {
+        let s = self.prefix_cache.stats();
+        Metrics::set(&self.metrics.prefix_hits, s.hits);
+        Metrics::set(&self.metrics.prefix_misses, s.misses);
+        Metrics::set(&self.metrics.prefix_evictions, s.evictions);
+        Metrics::set(&self.metrics.prefix_insertions, s.insertions);
+        Metrics::set(&self.metrics.prefix_bytes, s.bytes);
+        Metrics::set(&self.metrics.prefix_entries, s.entries);
+    }
+
+    /// `Msg::Save`: prefill (through the prefix cache) and freeze the
+    /// state after the prompt's last token.
+    fn save_session(&mut self, prompt: &[i32]) -> Result<SessionState> {
+        if prompt.is_empty() {
+            crate::bail!("session_save requires a non-empty prompt");
+        }
+        let (cache, last) = self.prefilled(prompt)?;
+        self.session.snapshot(&cache, 0, prompt.len() as u64, &last)
+    }
+
     /// Prefill `req` and install its cache into `slot`.
     fn admit(&mut self, req: &GenRequest, slot: super::slots::SlotId)
         -> Result<()> {
         Metrics::inc(&self.metrics.requests_admitted, 1);
         // the sink stays in pending_sinks until prefill succeeded, so a
         // prefill error still reaches the client through fail_slot
-        let (cache1, first_logits) = self.session.prefill_any(&req.prompt)?;
-        Metrics::inc(&self.metrics.prefill_tokens, req.prompt.len() as u64);
+        let (cache1, first_logits) =
+            match self.pending_resumes.remove(&req.id) {
+                Some(state) => {
+                    let restored = self.session.restore(&state)?;
+                    Metrics::inc(&self.metrics.prefill_tokens,
+                                 req.prompt.len() as u64);
+                    if req.prompt.is_empty() {
+                        // nothing new to consume: the saved logits row is
+                        // exactly what the next sample needs
+                        (restored, state.last_logits)
+                    } else {
+                        self.session.prefill_any_seeded(
+                            &req.prompt,
+                            Some((&restored, state.position as usize)))?
+                    }
+                }
+                None => self.prefilled(&req.prompt)?,
+            };
         // install into batch slot
         self.cache.copy_slot_from(slot.0, &cache1, 0);
         let sampling = req.params.sampling();

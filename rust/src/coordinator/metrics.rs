@@ -20,9 +20,21 @@ pub struct Metrics {
     pub requests_cancelled: AtomicU64,
     pub requests_queued_peak: AtomicU64,
     pub tokens_generated: AtomicU64,
+    /// prompt tokens actually prefilled — prefix-cache hits subtract the
+    /// reused segment, so this counter (not prompt lengths) is what the
+    /// cache's token savings show up in
     pub prefill_tokens: AtomicU64,
     pub decode_steps: AtomicU64,
     pub batch_occupancy_sum: AtomicU64,
+    /// prompt-prefix cache (DESIGN.md §9): counters mirrored from the
+    /// engine-owned `PrefixCache` after every admission; `bytes` and
+    /// `entries` are gauges (current residency), the rest monotonic
+    pub prefix_hits: AtomicU64,
+    pub prefix_misses: AtomicU64,
+    pub prefix_evictions: AtomicU64,
+    pub prefix_insertions: AtomicU64,
+    pub prefix_bytes: AtomicU64,
+    pub prefix_entries: AtomicU64,
     /// histograms guarded by one mutex (recorded off the hot loop)
     hist: Mutex<Hists>,
     started: Mutex<Option<Instant>>,
@@ -44,6 +56,13 @@ impl Metrics {
 
     pub fn inc(counter: &AtomicU64, v: u64) {
         counter.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Overwrite a gauge/mirrored counter with an absolute value (the
+    /// engine republishes the whole prefix-cache stat block after each
+    /// admission rather than tracking deltas).
+    pub fn set(counter: &AtomicU64, v: u64) {
+        counter.store(v, Ordering::Relaxed);
     }
 
     /// Requests submitted but not yet admitted to a slot — the number
@@ -96,6 +115,14 @@ impl Metrics {
                 self.batch_occupancy_sum.load(Ordering::Relaxed) as f64
                     / steps as f64
             },
+            prefix_hits: self.prefix_hits.load(Ordering::Relaxed),
+            prefix_misses: self.prefix_misses.load(Ordering::Relaxed),
+            prefix_evictions:
+                self.prefix_evictions.load(Ordering::Relaxed),
+            prefix_insertions:
+                self.prefix_insertions.load(Ordering::Relaxed),
+            prefix_bytes: self.prefix_bytes.load(Ordering::Relaxed),
+            prefix_entries: self.prefix_entries.load(Ordering::Relaxed),
             ttft_p50: h.ttft.quantile(0.5),
             ttft_p99: h.ttft.quantile(0.99),
             e2e_p50: h.e2e.quantile(0.5),
@@ -119,6 +146,12 @@ pub struct Snapshot {
     pub prefill_tokens: u64,
     pub decode_steps: u64,
     pub mean_batch_occupancy: f64,
+    pub prefix_hits: u64,
+    pub prefix_misses: u64,
+    pub prefix_evictions: u64,
+    pub prefix_insertions: u64,
+    pub prefix_bytes: u64,
+    pub prefix_entries: u64,
     pub ttft_p50: f64,
     pub ttft_p99: f64,
     pub e2e_p50: f64,
@@ -139,12 +172,15 @@ impl Snapshot {
         format!(
             "requests: {}/{} done ({} failed, {} cancelled, queue {}) | \
              tokens: {} ({:.1} tok/s) | \
-             decode steps: {} (occupancy {:.2}) | ttft p50/p99: \
+             decode steps: {} (occupancy {:.2}) | prefix cache: \
+             {} hit / {} miss, {} entries ({} B) | ttft p50/p99: \
              {:.1}/{:.1} ms | e2e p50/p99: {:.1}/{:.1} ms",
             self.completed, self.submitted, self.failed, self.cancelled,
             self.queue_depth,
             self.tokens_generated, self.throughput_tps(),
             self.decode_steps, self.mean_batch_occupancy,
+            self.prefix_hits, self.prefix_misses,
+            self.prefix_entries, self.prefix_bytes,
             self.ttft_p50 * 1e3, self.ttft_p99 * 1e3,
             self.e2e_p50 * 1e3, self.e2e_p99 * 1e3)
     }
@@ -167,6 +203,22 @@ mod tests {
         assert!((s.mean_batch_occupancy - 3.0).abs() < 1e-9);
         assert!(s.ttft_p50 > 0.005 && s.ttft_p50 < 0.02);
         assert!(!s.render().is_empty());
+    }
+
+    #[test]
+    fn prefix_cache_block_mirrors_absolute_values() {
+        let m = Metrics::new();
+        Metrics::set(&m.prefix_hits, 3);
+        Metrics::set(&m.prefix_misses, 5);
+        Metrics::set(&m.prefix_bytes, 4096);
+        Metrics::set(&m.prefix_entries, 2);
+        // re-publishing overwrites, never accumulates
+        Metrics::set(&m.prefix_bytes, 2048);
+        let s = m.snapshot();
+        assert_eq!((s.prefix_hits, s.prefix_misses), (3, 5));
+        assert_eq!((s.prefix_bytes, s.prefix_entries), (2048, 2));
+        assert_eq!(s.prefix_evictions, 0);
+        assert!(s.render().contains("prefix cache"));
     }
 
     #[test]

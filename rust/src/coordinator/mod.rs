@@ -9,10 +9,14 @@
 //! * `router`  — least-loaded placement across engine replicas
 //! * `request` — `GenerateParams` builder + cancellable response streams
 //! * `metrics` — counters + latency histograms
+//! * `prefix_cache` — prompt-prefix → `CacheState` store (LRU under a
+//!   byte budget) that lets shared system prompts and multi-turn chats
+//!   skip re-prefill (DESIGN.md §9)
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
+pub mod prefix_cache;
 pub mod request;
 pub mod router;
 pub mod slots;
@@ -20,6 +24,7 @@ pub mod slots;
 pub use batcher::{ActiveSeq, Admission, Batcher};
 pub use engine::{Engine, EngineConfig, EngineHandle, SingleStream};
 pub use metrics::{Metrics, Snapshot};
+pub use prefix_cache::{PrefixCache, PrefixCacheStats};
 pub use request::{CancelFn, Event, FinishReason, GenRequest,
                   GenerateParams, ResponseStream, Sampling};
 pub use router::Router;

@@ -1,0 +1,311 @@
+//! Prompt-prefix cache: O(1) state makes shared prefixes nearly free
+//! (DESIGN.md §9).
+//!
+//! Because the SSD cache after `n` tokens is a few-KB constant-size
+//! blob, the engine can remember "the state after this exact token
+//! prefix" for every prompt it prefills and seed later prompts that
+//! share the prefix — a system prompt shared by thousands of requests,
+//! or the conversation so far in a multi-turn chat — skipping the shared
+//! segment's prefill entirely. Transformer serving needs paged KV
+//! machinery for the same trick; here an entry is just a
+//! [`CacheState`] clone.
+//!
+//! Keys are **chunk-boundary-aligned** token prefixes: the reference
+//! backend's chunked prefill is bitwise identical under any chunk-grid-
+//! aligned segmentation (the PR 3 continuation invariant), so seeding
+//! `prefill_continue` from a chunk-boundary entry reproduces the cold
+//! prefill bit for bit. A mid-chunk key would force the tail through a
+//! different (decode-replay) numeric path, so mid-chunk states are never
+//! inserted.
+//!
+//! Eviction is LRU under a byte budget; the owner (one engine thread)
+//! reads hit/miss/evict counters out of [`PrefixCache::stats`] and
+//! mirrors them into `Metrics`.
+
+use std::collections::HashMap;
+
+use crate::runtime::{fnv1a64, CacheState};
+
+/// Monotonic counters + gauges, readable at any time via
+/// [`PrefixCache::stats`]. Plain integers — the cache lives on one
+/// engine thread.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PrefixCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub insertions: u64,
+    /// current resident bytes (gauge)
+    pub bytes: u64,
+    /// current entry count (gauge)
+    pub entries: u64,
+}
+
+struct Entry {
+    /// full key tokens — hash collisions are resolved by comparing these
+    tokens: Vec<i32>,
+    cache: CacheState,
+    /// LRU clock value at last touch
+    used: u64,
+    bytes: usize,
+}
+
+/// Token-prefix → `CacheState` store with LRU eviction under a byte
+/// budget. A `budget_bytes` of 0 disables the cache (every lookup
+/// misses, inserts are dropped).
+pub struct PrefixCache {
+    budget_bytes: usize,
+    chunk: usize,
+    /// hash of key tokens → entries (collision chain; in practice one)
+    map: HashMap<u64, Vec<Entry>>,
+    clock: u64,
+    bytes: usize,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    insertions: u64,
+}
+
+fn token_hash(tokens: &[i32]) -> u64 {
+    let mut b = Vec::with_capacity(tokens.len() * 4);
+    for t in tokens {
+        b.extend_from_slice(&t.to_le_bytes());
+    }
+    fnv1a64(&b)
+}
+
+/// Bytes an entry for `tokens` costs: the cache payload plus the key.
+fn entry_bytes(tokens: &[i32], cache: &CacheState) -> usize {
+    cache.nbytes() + tokens.len() * 4
+}
+
+impl PrefixCache {
+    pub fn new(budget_bytes: usize, chunk_size: usize) -> PrefixCache {
+        assert!(chunk_size > 0, "chunk_size must be positive");
+        PrefixCache {
+            budget_bytes,
+            chunk: chunk_size,
+            map: HashMap::new(),
+            clock: 0,
+            bytes: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+            insertions: 0,
+        }
+    }
+
+    pub fn stats(&self) -> PrefixCacheStats {
+        PrefixCacheStats {
+            hits: self.hits,
+            misses: self.misses,
+            evictions: self.evictions,
+            insertions: self.insertions,
+            bytes: self.bytes as u64,
+            entries: self.map.values().map(|v| v.len() as u64).sum(),
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.values().map(|v| v.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Longest cached chunk-aligned **proper** prefix of `prompt`:
+    /// returns `(cache clone, prefix_len)` and bumps the entry's LRU
+    /// position. Proper (`prefix_len < prompt.len()`) because the caller
+    /// still needs at least one tail token to produce next-token logits.
+    /// Counts one hit or one miss per call.
+    pub fn lookup(&mut self, prompt: &[i32])
+        -> Option<(CacheState, usize)> {
+        if self.budget_bytes == 0 || prompt.is_empty() {
+            self.misses += 1;
+            return None;
+        }
+        // longest candidate first: the largest chunk multiple strictly
+        // below prompt.len()
+        let mut len = (prompt.len() - 1) / self.chunk * self.chunk;
+        self.clock += 1;
+        while len >= self.chunk {
+            let h = token_hash(&prompt[..len]);
+            if let Some(chain) = self.map.get_mut(&h) {
+                if let Some(e) = chain.iter_mut()
+                    .find(|e| e.tokens == prompt[..len]) {
+                    e.used = self.clock;
+                    self.hits += 1;
+                    return Some((e.cache.clone(), len));
+                }
+            }
+            len -= self.chunk;
+        }
+        self.misses += 1;
+        None
+    }
+
+    /// Insert the state after exactly `tokens` (must be a non-empty
+    /// chunk multiple — mid-chunk states would break the bitwise
+    /// continuation contract, so they are rejected by debug assertion
+    /// and skipped in release). Replaces an existing entry for the same
+    /// tokens, then evicts least-recently-used entries until the budget
+    /// holds. An entry larger than the whole budget is not admitted.
+    pub fn insert(&mut self, tokens: &[i32], cache: &CacheState) {
+        debug_assert!(!tokens.is_empty() && tokens.len() % self.chunk == 0,
+                      "prefix keys must be non-empty chunk multiples");
+        if self.budget_bytes == 0 || tokens.is_empty()
+            || tokens.len() % self.chunk != 0 {
+            return;
+        }
+        let nb = entry_bytes(tokens, cache);
+        if nb > self.budget_bytes {
+            return;
+        }
+        self.clock += 1;
+        let h = token_hash(tokens);
+        let chain = self.map.entry(h).or_default();
+        if let Some(e) = chain.iter_mut().find(|e| e.tokens == tokens) {
+            // refresh in place (same tokens ⇒ same state bytes on a
+            // deterministic backend, but honour the caller's copy)
+            self.bytes = self.bytes - e.bytes + nb;
+            e.cache = cache.clone();
+            e.bytes = nb;
+            e.used = self.clock;
+        } else {
+            chain.push(Entry {
+                tokens: tokens.to_vec(),
+                cache: cache.clone(),
+                used: self.clock,
+                bytes: nb,
+            });
+            self.bytes += nb;
+            self.insertions += 1;
+        }
+        while self.bytes > self.budget_bytes {
+            self.evict_lru();
+        }
+    }
+
+    fn evict_lru(&mut self) {
+        let mut victim: Option<(u64, usize, u64)> = None; // (hash, idx, used)
+        for (h, chain) in &self.map {
+            for (i, e) in chain.iter().enumerate() {
+                if victim.map_or(true, |(_, _, u)| e.used < u) {
+                    victim = Some((*h, i, e.used));
+                }
+            }
+        }
+        if let Some((h, i, _)) = victim {
+            let chain = self.map.get_mut(&h).expect("victim chain");
+            let e = chain.swap_remove(i);
+            self.bytes -= e.bytes;
+            if chain.is_empty() {
+                self.map.remove(&h);
+            }
+            self.evictions += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::sim_config;
+
+    fn cache_stamped(v: f32) -> CacheState {
+        let cfg = sim_config("tiny").unwrap();
+        let mut c = CacheState::zeros(&cfg, 1);
+        for x in c.ssm.data.chunks_exact_mut(4) {
+            x.copy_from_slice(&v.to_le_bytes());
+        }
+        c
+    }
+
+    #[test]
+    fn longest_aligned_prefix_wins() {
+        let mut pc = PrefixCache::new(1 << 20, 16);
+        let p: Vec<i32> = (0..64).collect();
+        pc.insert(&p[..16], &cache_stamped(1.0));
+        pc.insert(&p[..48], &cache_stamped(3.0));
+        // prompt of 50: longest aligned proper prefix cached is 48
+        let (c, n) = pc.lookup(&p[..50]).unwrap();
+        assert_eq!(n, 48);
+        assert_eq!(c.ssm.as_f32()[0], 3.0);
+        // prompt of 48: proper ⇒ only 32 / 16 eligible; 16 is cached
+        let (c, n) = pc.lookup(&p[..48]).unwrap();
+        assert_eq!(n, 16);
+        assert_eq!(c.ssm.as_f32()[0], 1.0);
+        // diverging tokens never match
+        let mut q = p.clone();
+        q[5] = 999;
+        assert!(pc.lookup(&q[..50]).is_none());
+        let s = pc.stats();
+        assert_eq!((s.hits, s.misses, s.insertions), (2, 1, 2));
+    }
+
+    #[test]
+    fn lru_eviction_under_byte_budget() {
+        let one = entry_bytes(&vec![0i32; 16], &cache_stamped(0.0));
+        let mut pc = PrefixCache::new(2 * one + 64, 16);
+        let a: Vec<i32> = (0..16).collect();
+        let b: Vec<i32> = (100..116).collect();
+        let c: Vec<i32> = (200..216).collect();
+        pc.insert(&a, &cache_stamped(1.0));
+        pc.insert(&b, &cache_stamped(2.0));
+        assert_eq!(pc.len(), 2);
+        // touch `a` so `b` is LRU, then overflow
+        let mut probe = a.clone();
+        probe.push(7);
+        assert!(pc.lookup(&probe).is_some());
+        pc.insert(&c, &cache_stamped(3.0));
+        assert_eq!(pc.len(), 2);
+        assert!(pc.bytes() <= 2 * one + 64);
+        let mut pb = b.clone();
+        pb.push(7);
+        assert!(pc.lookup(&pb).is_none(), "LRU entry evicted");
+        let mut pa = a.clone();
+        pa.push(7);
+        assert!(pc.lookup(&pa).is_some(), "recently used survives");
+        assert_eq!(pc.stats().evictions, 1);
+    }
+
+    #[test]
+    fn zero_budget_disables() {
+        let mut pc = PrefixCache::new(0, 16);
+        let p: Vec<i32> = (0..17).collect();
+        pc.insert(&p[..16], &cache_stamped(1.0));
+        assert!(pc.is_empty());
+        assert!(pc.lookup(&p).is_none());
+        assert_eq!(pc.stats().insertions, 0);
+    }
+
+    #[test]
+    fn oversized_entry_not_admitted() {
+        let mut pc = PrefixCache::new(64, 16); // smaller than any entry
+        let p: Vec<i32> = (0..17).collect();
+        pc.insert(&p[..16], &cache_stamped(1.0));
+        assert!(pc.is_empty());
+        assert_eq!(pc.stats().evictions, 0);
+    }
+
+    #[test]
+    fn reinsert_same_key_keeps_bytes_exact() {
+        let mut pc = PrefixCache::new(1 << 20, 16);
+        let p: Vec<i32> = (0..16).collect();
+        pc.insert(&p, &cache_stamped(1.0));
+        let b1 = pc.bytes();
+        pc.insert(&p, &cache_stamped(2.0));
+        assert_eq!(pc.bytes(), b1, "replacement does not double-count");
+        assert_eq!(pc.len(), 1);
+        assert_eq!(pc.stats().insertions, 1);
+        let mut probe = p.clone();
+        probe.push(9);
+        let (c, _) = pc.lookup(&probe).unwrap();
+        assert_eq!(c.ssm.as_f32()[0], 2.0, "latest copy served");
+    }
+}

@@ -19,6 +19,8 @@ use std::sync::Arc;
 
 use super::engine::EngineHandle;
 use super::request::{GenerateParams, ResponseStream};
+use crate::runtime::SessionState;
+use crate::util::error::Result;
 
 pub struct Router {
     replicas: Vec<Arc<EngineHandle>>,
@@ -66,6 +68,24 @@ impl Router {
         -> ResponseStream {
         let i = self.pick();
         self.replicas[i].generate(prompt, params)
+    }
+
+    /// Prefill `prompt` on the least-loaded replica and freeze the
+    /// resulting state (wire op `session_save`). The blob is
+    /// replica-agnostic: all replicas load the same model, so any of
+    /// them can save (and later resume) any session — the one wrinkle
+    /// being that the prefix-cache warm-up lands on the chosen replica.
+    pub fn session_save(&self, prompt: Vec<i32>) -> Result<SessionState> {
+        self.replicas[self.pick()].session_save(prompt)
+    }
+
+    /// Resume a saved session on the least-loaded replica (wire op
+    /// `session_resume`); see [`EngineHandle::session_resume`].
+    pub fn session_resume(&self, state: SessionState,
+                          continuation: Vec<i32>, params: GenerateParams)
+        -> ResponseStream {
+        self.replicas[self.pick()].session_resume(state, continuation,
+                                                  params)
     }
 
     pub fn replica(&self, i: usize) -> &Arc<EngineHandle> {

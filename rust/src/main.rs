@@ -49,6 +49,9 @@ fn main() -> Result<()> {
         .opt("weights", "f32", "weight stream precision: f32|bf16 \
               (bf16 halves decode weight bandwidth, f32 accumulate; \
               f32 is the bitwise baseline; reference backend only)")
+        .opt("prefix-cache-mb", "16", "prompt-prefix cache budget per \
+              replica, MiB (0 disables; shared prefixes then always \
+              re-prefill)")
         .parse_env();
 
     // the flags are authoritative: they overwrite any inherited
@@ -106,11 +109,14 @@ fn main() -> Result<()> {
         }
         let cfg = EngineConfig {
             batch_cap: cli.get_usize("batch-cap"),
+            prefix_cache_bytes: cli.get_usize("prefix-cache-mb") << 20,
             ..Default::default()
         };
         replicas.push(Arc::new(Engine::start(backend, cfg)?));
-        log_info!("replica {i}: engine started (batch_cap={})",
-                  cli.get_usize("batch-cap"));
+        log_info!("replica {i}: engine started (batch_cap={}, \
+                   prefix_cache={} MiB)",
+                  cli.get_usize("batch-cap"),
+                  cli.get_usize("prefix-cache-mb"));
     }
     let router = Arc::new(Router::new(replicas));
     let tokenizer = Arc::new(Tokenizer::train(corpus::BUNDLED, 256));
@@ -119,6 +125,7 @@ fn main() -> Result<()> {
     let server = Server::new(router, tokenizer);
     server.serve(&cli.get("addr"), cli.get_usize("threads"), |a| {
         log_info!("serving {model} on {a} (protocol v1+v2: streaming, \
-                   cancellation, stop tokens/strings)");
+                   cancellation, stop tokens/strings, session \
+                   save/resume)");
     })
 }

@@ -136,6 +136,195 @@ fn slot_geometry(dims: &[i64]) -> (usize, usize, usize) {
     (l, b, rest)
 }
 
+// -------------------------------------------------------------- session ---
+
+/// Magic prefix of a serialised [`SessionState`] blob ("M2SS").
+pub const SESSION_MAGIC: u32 = 0x4D32_5353;
+/// Current session-blob format version. Bump on any layout change;
+/// `from_bytes` rejects every other version (no silent migration —
+/// the state is cheap to rebuild from the prompt).
+pub const SESSION_VERSION: u32 = 1;
+
+/// FNV-1a 64-bit hash — used for the session-blob checksum, the config
+/// fingerprint, and the prefix-cache key. Not cryptographic; it guards
+/// against truncation and bit rot, not adversaries.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// A complete, host-serialisable snapshot of one sequence's generation
+/// state — the paper's O(1)-cache claim made operational: the SSD carry
+/// plus conv window (`cache`, batch 1), the absolute position, and the
+/// logits row after the last consumed token (so a resume with no new
+/// tokens can sample its next token bitwise-identically).
+///
+/// The byte format (all little-endian) is
+///
+/// ```text
+/// magic u32 | version u32 | config fingerprint u64 | position u64 |
+/// config-name len u32 | name bytes |
+/// 3 × tensor (rank u32, dims u64 × rank, f32 payload)   // last, ssm, conv
+/// | FNV-1a-64 checksum over everything above
+/// ```
+///
+/// mirroring the `.mbt` store layout (`tensor::save_mbt`) minus the
+/// per-tensor names/dtypes, which are fixed here. `from_bytes` never
+/// panics on malformed input: truncated, bit-flipped, wrong-magic and
+/// wrong-version blobs all return clean errors (pinned by
+/// `tests/session_resume.rs`).
+#[derive(Clone, Debug)]
+pub struct SessionState {
+    /// Config name the session was saved under (diagnostics only; the
+    /// fingerprint is what gates restore).
+    pub config: String,
+    /// [`ConfigInfo::fingerprint`] of the saving backend's config.
+    pub fingerprint: u64,
+    /// Tokens consumed so far (prompt + generated). Restore uses this to
+    /// decide whether the continuation can take the chunked-parallel
+    /// path (position divisible by `chunk_size`) or must replay through
+    /// the O(1) decode step.
+    pub position: u64,
+    /// Logits after the final consumed token, `(1, V)` f32.
+    pub last_logits: Tensor,
+    /// The O(1) cache for this single sequence (batch 1).
+    pub cache: CacheState,
+}
+
+impl SessionState {
+    /// Serialised size in bytes (exact).
+    pub fn nbytes(&self) -> usize {
+        let tensor = |t: &Tensor| 4 + 8 * t.dims.len() + t.data.len();
+        4 + 4 + 8 + 8 + 4 + self.config.len()
+            + tensor(&self.last_logits) + tensor(&self.cache.ssm)
+            + tensor(&self.cache.conv) + 8
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut b = Vec::with_capacity(self.nbytes());
+        b.extend_from_slice(&SESSION_MAGIC.to_le_bytes());
+        b.extend_from_slice(&SESSION_VERSION.to_le_bytes());
+        b.extend_from_slice(&self.fingerprint.to_le_bytes());
+        b.extend_from_slice(&self.position.to_le_bytes());
+        let nb = self.config.as_bytes();
+        b.extend_from_slice(&(nb.len() as u32).to_le_bytes());
+        b.extend_from_slice(nb);
+        for t in [&self.last_logits, &self.cache.ssm, &self.cache.conv] {
+            b.extend_from_slice(&(t.dims.len() as u32).to_le_bytes());
+            for d in &t.dims {
+                b.extend_from_slice(&(*d as u64).to_le_bytes());
+            }
+            b.extend_from_slice(&t.data);
+        }
+        let ck = fnv1a64(&b);
+        b.extend_from_slice(&ck.to_le_bytes());
+        b
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<SessionState> {
+        // smallest conceivable blob: header + empty name + three rank-0
+        // tensors + checksum
+        if bytes.len() < 4 + 4 + 8 + 8 + 4 + 3 * (4 + 4) + 8 {
+            bail!("session blob truncated: {} bytes", bytes.len());
+        }
+        let magic = u32::from_le_bytes(bytes[0..4].try_into().unwrap());
+        if magic != SESSION_MAGIC {
+            bail!("bad session magic {magic:#010x} \
+                   (want {SESSION_MAGIC:#010x})");
+        }
+        let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+        if version != SESSION_VERSION {
+            bail!("unsupported session version {version} \
+                   (this build reads version {SESSION_VERSION})");
+        }
+        let (head, tail) = bytes.split_at(bytes.len() - 8);
+        let want = u64::from_le_bytes(tail.try_into().unwrap());
+        let got = fnv1a64(head);
+        if got != want {
+            bail!("session checksum mismatch \
+                   (blob corrupt: computed {got:#018x}, stored {want:#018x})");
+        }
+        let mut c = ByteCursor { b: head, i: 8 };
+        let fingerprint = c.u64()?;
+        let position = c.u64()?;
+        let nlen = c.u32()? as usize;
+        if nlen > 256 {
+            bail!("session config-name length {nlen} out of range");
+        }
+        let config = String::from_utf8(c.take(nlen)?.to_vec())
+            .map_err(|_| crate::anyhow!("session config name not UTF-8"))?;
+        let last_logits = c.tensor("last")?;
+        let ssm = c.tensor("ssm")?;
+        let conv = c.tensor("conv")?;
+        if c.i != head.len() {
+            bail!("session blob has {} trailing bytes", head.len() - c.i);
+        }
+        if last_logits.dims.len() != 2 || ssm.dims.len() != 5
+            || conv.dims.len() != 4 {
+            bail!("session tensor ranks {}/{}/{} malformed (want 2/5/4)",
+                  last_logits.dims.len(), ssm.dims.len(), conv.dims.len());
+        }
+        if last_logits.dims[0] != 1 || ssm.dims[1] != 1 || conv.dims[1] != 1 {
+            bail!("session state must be batch 1");
+        }
+        Ok(SessionState {
+            config, fingerprint, position, last_logits,
+            cache: CacheState { ssm, conv },
+        })
+    }
+}
+
+/// Bounds-checked little-endian reader over a session blob. Every read
+/// bails instead of panicking, so `from_bytes` stays total even on
+/// adversarially short input (the checksum only guards honest
+/// corruption).
+struct ByteCursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> ByteCursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.b.len() - self.i < n {
+            bail!("session blob truncated: wanted {n} bytes at offset {}, \
+                   {} remain", self.i, self.b.len() - self.i);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn tensor(&mut self, name: &str) -> Result<Tensor> {
+        let rank = self.u32()? as usize;
+        if rank > 8 {
+            bail!("session tensor {name:?} rank {rank} out of range");
+        }
+        let mut dims = Vec::with_capacity(rank);
+        let mut numel: u128 = 1;
+        for _ in 0..rank {
+            let d = self.u64()?;
+            numel = numel.saturating_mul(d as u128);
+            dims.push(d as i64);
+        }
+        let nbytes = numel.saturating_mul(4);
+        if nbytes > (self.b.len() - self.i) as u128 {
+            bail!("session tensor {name:?} payload {nbytes} bytes exceeds \
+                   blob");
+        }
+        let data = self.take(nbytes as usize)?.to_vec();
+        Ok(Tensor::from_f32_bytes(name, &dims, data))
+    }
+}
+
 // -------------------------------------------------------------- outputs ---
 
 /// Result of a prefill call.
@@ -334,34 +523,67 @@ pub trait Backend: Send {
     /// greedy outputs stay backend-independent. Returns the cache and the
     /// logits after the final prompt token.
     fn prefill_any(&self, prompt: &[i32]) -> Result<(CacheState, Tensor)> {
+        self.prefill_any_seeded(prompt, None)
+    }
+
+    /// [`Backend::prefill_any`] continued from an existing cache instead
+    /// of rebuilding `CacheState::zeros` per call — the entry point the
+    /// prefix cache and session resume run through. `seed` is the cache
+    /// after `consumed` tokens; `prompt` holds only the NOT-yet-consumed
+    /// tail.
+    ///
+    /// When `consumed` sits on a chunk boundary the tail takes the same
+    /// chunked-parallel bucket chain as a cold prefill (first segment via
+    /// `prefill_continue` rather than `prefill`), which is bitwise
+    /// identical to the uninterrupted prefill on backends whose
+    /// continuation re-enters the chunked forward: the chunk grid and
+    /// per-chunk schedule are unchanged, only the host-visible cut points
+    /// move (DESIGN.md §9). A mid-chunk `consumed` (e.g. a mid-decode
+    /// snapshot) cannot re-enter the chunked path, so the whole tail
+    /// replays through the O(1) decode step — exactly the ops an
+    /// uninterrupted decode would have run, hence still bitwise.
+    fn prefill_any_seeded(&self, prompt: &[i32],
+                          seed: Option<(&CacheState, usize)>)
+        -> Result<(CacheState, Tensor)> {
         assert!(!prompt.is_empty());
         let cfg = self.cfg().clone();
         let buckets = self.prefill_buckets();
-        let mut cache = CacheState::zeros(&cfg, 1);
+        let (mut cache, seeded, chunk_aligned) = match seed {
+            Some((c, consumed)) => {
+                if c.batch() != 1 {
+                    bail!("prefill_any_seeded: seed cache batch {} != 1",
+                          c.batch());
+                }
+                (c.clone(), true, consumed % cfg.chunk_size == 0)
+            }
+            None => (CacheState::zeros(&cfg, 1), false, true),
+        };
         let mut logits: Option<Tensor> = None;
         let mut pos = 0;
-        while pos < prompt.len() {
-            let rem = prompt.len() - pos;
-            let b = match Manifest::pick_bucket(&buckets, rem) {
-                // pick_bucket falls back to the smallest bucket when none
-                // fit; that bucket is too long to prefill, so the tail
-                // goes through the decode step below
-                Some(b) if b <= rem => b,
-                _ => break,
-            };
-            let seg = &prompt[pos..pos + b];
-            let out = if pos == 0 {
-                self.prefill(seg, 1)?
-            } else {
-                self.prefill_continue(&cache, seg, 1)?
-            };
-            cache = out.cache;
-            // keep only the final position's row
-            let v = *out.logits.dims.last().unwrap();
-            let all = out.logits.as_f32();
-            logits = Some(Tensor::f32(
-                "last", &[1, v], &all[all.len() - v as usize..]));
-            pos += b;
+        if chunk_aligned {
+            while pos < prompt.len() {
+                let rem = prompt.len() - pos;
+                let b = match Manifest::pick_bucket(&buckets, rem) {
+                    // pick_bucket falls back to the smallest bucket when
+                    // none fit; that bucket is too long to prefill, so the
+                    // tail goes through the decode step below
+                    Some(b) if b <= rem => b,
+                    _ => break,
+                };
+                let seg = &prompt[pos..pos + b];
+                let out = if pos == 0 && !seeded {
+                    self.prefill(seg, 1)?
+                } else {
+                    self.prefill_continue(&cache, seg, 1)?
+                };
+                cache = out.cache;
+                // keep only the final position's row
+                let v = *out.logits.dims.last().unwrap();
+                let all = out.logits.as_f32();
+                logits = Some(Tensor::f32(
+                    "last", &[1, v], &all[all.len() - v as usize..]));
+                pos += b;
+            }
         }
         while pos < prompt.len() {
             let out = self.decode_step(&cache, &prompt[pos..=pos])?;
@@ -370,6 +592,61 @@ pub trait Backend: Send {
             pos += 1;
         }
         Ok((cache, logits.expect("non-empty prompt")))
+    }
+
+    /// Freeze slot `slot` of `cache` into a portable [`SessionState`].
+    /// `position` is the number of tokens the slot has consumed,
+    /// `last_logits` the logits row its final token produced (any shape
+    /// ending in V; only the last row is kept). O(cache bytes per seq) —
+    /// the snapshot cost the paper's O(1)-state claim buys.
+    fn snapshot(&self, cache: &CacheState, slot: usize, position: u64,
+                last_logits: &Tensor) -> Result<SessionState> {
+        if slot >= cache.batch() {
+            bail!("snapshot: slot {slot} out of range (cache batch {})",
+                  cache.batch());
+        }
+        let cfg = self.cfg();
+        let v = *last_logits.dims.last().unwrap_or(&0);
+        if v != cfg.vocab_size as i64 {
+            bail!("snapshot: logits width {v} != vocab {}", cfg.vocab_size);
+        }
+        let all = last_logits.as_f32();
+        let row = &all[all.len() - v as usize..];
+        Ok(SessionState {
+            config: cfg.name.clone(),
+            fingerprint: cfg.fingerprint(),
+            position,
+            last_logits: Tensor::f32("last", &[1, v], row),
+            cache: cache.gather_slots(&[slot]),
+        })
+    }
+
+    /// Validate a [`SessionState`] against this backend's config and hand
+    /// back its batch-1 cache, ready to seed [`Self::prefill_any_seeded`]
+    /// or be copied into a batch slot. Wrong-config states (different
+    /// fingerprint or tensor shapes) are rejected — restoring a cache
+    /// into mismatched shapes would read garbage.
+    fn restore(&self, state: &SessionState) -> Result<CacheState> {
+        let cfg = self.cfg();
+        if state.fingerprint != cfg.fingerprint() {
+            bail!("session was saved for config {:?} \
+                   (fingerprint {:#018x}); this backend runs {:?} \
+                   ({:#018x})",
+                  state.config, state.fingerprint, cfg.name,
+                  cfg.fingerprint());
+        }
+        let zero = CacheState::zeros(cfg, 1);
+        if state.cache.ssm.dims != zero.ssm.dims
+            || state.cache.conv.dims != zero.conv.dims {
+            bail!("session cache shape {:?}/{:?} != config shape {:?}/{:?}",
+                  state.cache.ssm.dims, state.cache.conv.dims,
+                  zero.ssm.dims, zero.conv.dims);
+        }
+        if state.last_logits.dims != [1, cfg.vocab_size as i64] {
+            bail!("session logits shape {:?} != (1, {})",
+                  state.last_logits.dims, cfg.vocab_size);
+        }
+        Ok(state.cache.clone())
     }
 }
 
@@ -536,6 +813,80 @@ mod tests {
                 < 1e-9);
         assert!(p64.transcendentals >= 4.0 * p16.transcendentals * 0.99);
         assert!(p64.transcendentals > p16.transcendentals);
+    }
+
+    #[test]
+    fn session_state_byte_round_trip() {
+        let cfg = super::super::manifest::sim_config("tiny").unwrap();
+        let mut cache = CacheState::zeros(&cfg, 1);
+        for (i, x) in cache.ssm.data.iter_mut().enumerate() {
+            *x = (i % 251) as u8;
+        }
+        let st = SessionState {
+            config: cfg.name.clone(),
+            fingerprint: cfg.fingerprint(),
+            position: 37,
+            last_logits: Tensor::f32("last", &[1, cfg.vocab_size as i64],
+                                     &vec![0.5; cfg.vocab_size]),
+            cache,
+        };
+        let bytes = st.to_bytes();
+        assert_eq!(bytes.len(), st.nbytes());
+        let back = SessionState::from_bytes(&bytes).unwrap();
+        assert_eq!(back.config, "tiny");
+        assert_eq!(back.position, 37);
+        assert_eq!(back.fingerprint, cfg.fingerprint());
+        assert_eq!(back.cache.ssm.data, st.cache.ssm.data);
+        assert_eq!(back.cache.conv.dims, st.cache.conv.dims);
+        assert_eq!(back.last_logits.as_f32(), st.last_logits.as_f32());
+    }
+
+    #[test]
+    fn session_state_rejects_malformed() {
+        let cfg = super::super::manifest::sim_config("tiny").unwrap();
+        let st = SessionState {
+            config: cfg.name.clone(),
+            fingerprint: cfg.fingerprint(),
+            position: 4,
+            last_logits: Tensor::zeros_f32("last",
+                                           &[1, cfg.vocab_size as i64]),
+            cache: CacheState::zeros(&cfg, 1),
+        };
+        let good = st.to_bytes();
+        // truncation at every coarse boundary errors, never panics
+        for cut in [0, 3, 7, 11, 30, good.len() / 2, good.len() - 1] {
+            assert!(SessionState::from_bytes(&good[..cut]).is_err(),
+                    "cut {cut}");
+        }
+        // one flipped bit anywhere past the version field trips the
+        // checksum (flips inside magic/version trip those checks first)
+        let mut bad = good.clone();
+        bad[20] ^= 0x10;
+        let e = SessionState::from_bytes(&bad).err().unwrap().to_string();
+        assert!(e.contains("checksum"), "{e}");
+        // wrong version, checksum re-stamped so the version check fires
+        let mut wv = good.clone();
+        wv[4..8].copy_from_slice(&99u32.to_le_bytes());
+        let n = wv.len();
+        let ck = fnv1a64(&wv[..n - 8]);
+        wv[n - 8..].copy_from_slice(&ck.to_le_bytes());
+        let e = SessionState::from_bytes(&wv).err().unwrap().to_string();
+        assert!(e.contains("version 99"), "{e}");
+        // wrong magic
+        let mut wm = good;
+        wm[0..4].copy_from_slice(&0xdead_beefu32.to_le_bytes());
+        assert!(SessionState::from_bytes(&wm).err().unwrap()
+                .to_string().contains("magic"));
+    }
+
+    #[test]
+    fn config_fingerprint_separates_shapes() {
+        let a = super::super::manifest::sim_config("tiny").unwrap();
+        let b = super::super::manifest::sim_config("sim-130m").unwrap();
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        assert_eq!(a.fingerprint(),
+                   super::super::manifest::sim_config("tiny").unwrap()
+                       .fingerprint());
     }
 
     #[test]

@@ -280,6 +280,28 @@ impl ConfigInfo {
     pub fn param_bytes(&self) -> u64 {
         self.n_params_total * 4
     }
+
+    /// Shape fingerprint for session-state compatibility checks: a
+    /// deterministic hash over every field that determines cache layout
+    /// and logits width. Two configs with equal fingerprints produce
+    /// interchangeable `CacheState`s; anything else must be rejected at
+    /// restore time (DESIGN.md §9). Weights are deliberately NOT part of
+    /// the fingerprint — a session saved against one checkpoint restores
+    /// against another (garbage-in, garbage-out, but shape-safe).
+    pub fn fingerprint(&self) -> u64 {
+        let fields = [
+            self.d_model as u64, self.n_layer as u64,
+            self.vocab_size as u64, self.d_state as u64,
+            self.headdim as u64, self.nheads as u64,
+            self.d_inner as u64, self.d_conv as u64,
+            self.d_conv_ch as u64, self.chunk_size as u64,
+        ];
+        let mut bytes = Vec::with_capacity(fields.len() * 8);
+        for f in fields {
+            bytes.extend_from_slice(&f.to_le_bytes());
+        }
+        crate::runtime::backend::fnv1a64(&bytes)
+    }
 }
 
 #[derive(Debug)]

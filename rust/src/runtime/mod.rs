@@ -26,8 +26,9 @@ pub mod reference;
 #[cfg(feature = "xla")]
 pub mod session;
 
-pub use backend::{analytic_cost, argmax, argmax_last, Backend, CacheState,
-                  PrefillOut, StepOut};
+pub use backend::{analytic_cost, argmax, argmax_last, fnv1a64, Backend,
+                  CacheState, PrefillOut, SessionState, StepOut,
+                  SESSION_MAGIC, SESSION_VERSION};
 pub use manifest::{sim_config, ConfigInfo, CostInfo, ExecutableSpec,
                    Manifest, ScheduleInfo, WeightsDtype};
 pub use plan::{Plan, PlanCache, PlanMode, PlanStats};

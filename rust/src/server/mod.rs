@@ -37,6 +37,7 @@ use crate::util::error::{Context, Result};
 use crate::coordinator::{CancelFn, Event, FinishReason, GenerateParams,
                          ResponseStream, Router};
 use crate::eval::tokenizer::Tokenizer;
+use crate::runtime::SessionState;
 use crate::util::json::Json;
 use crate::util::threadpool::ThreadPool;
 
@@ -155,6 +156,17 @@ fn conn_loop(mut reader: BufReader<TcpStream>,
                         ("ttft_p50_ms", Json::num(s.ttft_p50 * 1e3)),
                         ("e2e_p99_ms", Json::num(s.e2e_p99 * 1e3)),
                         ("occupancy", Json::num(s.mean_batch_occupancy)),
+                        ("prefix_cache", Json::obj(vec![
+                            ("hits", Json::num(s.prefix_hits as f64)),
+                            ("misses", Json::num(s.prefix_misses as f64)),
+                            ("evictions",
+                             Json::num(s.prefix_evictions as f64)),
+                            ("insertions",
+                             Json::num(s.prefix_insertions as f64)),
+                            ("bytes", Json::num(s.prefix_bytes as f64)),
+                            ("entries",
+                             Json::num(s.prefix_entries as f64)),
+                        ])),
                     ]));
                 }
                 write_frame(writer, &Json::obj(vec![
@@ -194,8 +206,19 @@ fn conn_loop(mut reader: BufReader<TcpStream>,
                 }
             },
             Some("generate") => {
+                let r2 = Arc::clone(router);
                 op_generate(&req, writer, router, tok, inflight,
-                            &mut next_auto_id)?;
+                            &mut next_auto_id,
+                            Box::new(move |p, params| {
+                                r2.generate(p, params)
+                            }))?;
+            }
+            Some("session_save") => {
+                op_session_save(&req, writer, router, tok)?;
+            }
+            Some("session_resume") => {
+                op_session_resume(&req, writer, router, tok, inflight,
+                                  &mut next_auto_id)?;
             }
             _ => {
                 write_frame(writer, &Json::obj(vec![
@@ -257,9 +280,15 @@ fn parse_params(req: &Json) -> GenerateParams {
     p
 }
 
+/// Lower-half of `generate` and `session_resume`: parse params, spawn
+/// the response stream via `spawn` (the only line the two ops differ
+/// in), then drive the blocking or streaming reply path. `spawn` runs
+/// exactly once.
 fn op_generate(req: &Json, writer: &Arc<Mutex<TcpStream>>,
-               router: &Arc<Router>, tok: &Arc<Tokenizer>,
-               inflight: &InflightMap, next_auto_id: &mut u64)
+               _router: &Arc<Router>, tok: &Arc<Tokenizer>,
+               inflight: &InflightMap, next_auto_id: &mut u64,
+               spawn: Box<dyn FnOnce(Vec<i32>, GenerateParams)
+                          -> ResponseStream>)
     -> Result<()> {
     let t0 = Instant::now();
     let prompt_text = req.get("prompt").and_then(Json::as_str)
@@ -280,7 +309,7 @@ fn op_generate(req: &Json, writer: &Arc<Mutex<TcpStream>>,
         // client-gone path cancel the engine side.
         let probe_writer = Arc::clone(writer);
         let mut since_probe = 0usize;
-        let stream = router.generate(prompt.clone(), params.clone());
+        let stream = spawn(prompt.clone(), params.clone());
         let out = pump_generate(stream, tok, &params.stop_strings, t0,
                                 |ts, _| {
             since_probe += ts.len().max(1);
@@ -367,7 +396,7 @@ fn op_generate(req: &Json, writer: &Arc<Mutex<TcpStream>>,
             ]));
         }
     }
-    let stream = router.generate(prompt, params.clone());
+    let stream = spawn(prompt, params.clone());
     if let Some(c) = stream.cancel_fn() {
         inflight.lock().unwrap().insert(wire_id, c);
     }
@@ -415,6 +444,96 @@ fn op_generate(req: &Json, writer: &Arc<Mutex<TcpStream>>,
             inflight2.lock().unwrap().remove(&wire_id);
         })?;
     Ok(())
+}
+
+/// `{"op":"session_save","prompt":"..."}` → prefill the prompt on the
+/// least-loaded replica and reply with the frozen state as a hex blob:
+/// `{"session":"<hex>","position":N,"n_bytes":M,"config":"..."}`. The
+/// blob is self-describing (versioned, checksummed) and resumes on any
+/// server running the same model config — see `session_resume`.
+fn op_session_save(req: &Json, writer: &Arc<Mutex<TcpStream>>,
+                   router: &Arc<Router>, tok: &Arc<Tokenizer>)
+    -> Result<()> {
+    let prompt_text = req.get("prompt").and_then(Json::as_str)
+        .unwrap_or("");
+    let prompt = tok.encode(prompt_text);
+    match router.session_save(prompt) {
+        Ok(state) => {
+            let bytes = state.to_bytes();
+            write_frame(writer, &Json::obj(vec![
+                ("session", Json::str(hex_encode(&bytes))),
+                ("position", Json::num(state.position as f64)),
+                ("n_bytes", Json::num(bytes.len() as f64)),
+                ("config", Json::str(state.config)),
+            ]))
+        }
+        Err(e) => write_frame(writer, &Json::obj(vec![
+            ("error", Json::str(format!("session_save: {e}"))),
+        ])),
+    }
+}
+
+/// `{"op":"session_resume","session":"<hex>", ...}` — everything else
+/// (`prompt` = the optional continuation text, `stream`, sampling
+/// fields, stop conditions) means exactly what it means on `generate`.
+/// A malformed blob (bad hex, truncated, bit-flipped, wrong version or
+/// config) answers with a structured `{"error":...}` frame; the
+/// connection — and any concurrent streams on it — live on.
+fn op_session_resume(req: &Json, writer: &Arc<Mutex<TcpStream>>,
+                     router: &Arc<Router>, tok: &Arc<Tokenizer>,
+                     inflight: &InflightMap, next_auto_id: &mut u64)
+    -> Result<()> {
+    let blob = match req.get("session").and_then(Json::as_str) {
+        Some(s) => s,
+        None => {
+            return write_frame(writer, &Json::obj(vec![
+                ("error", Json::str("session_resume requires a \
+                                     \"session\" hex blob")),
+            ]));
+        }
+    };
+    let state = match hex_decode(blob)
+        .and_then(|b| SessionState::from_bytes(&b)) {
+        Ok(s) => s,
+        Err(e) => {
+            return write_frame(writer, &Json::obj(vec![
+                ("error", Json::str(format!("bad session blob: {e}"))),
+            ]));
+        }
+    };
+    let r2 = Arc::clone(router);
+    op_generate(req, writer, router, tok, inflight, next_auto_id,
+                Box::new(move |p, params| {
+                    r2.session_resume(state, p, params)
+                }))
+}
+
+fn hex_encode(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        s.push_str(&format!("{b:02x}"));
+    }
+    s
+}
+
+fn hex_decode(s: &str) -> Result<Vec<u8>> {
+    let s = s.as_bytes();
+    if s.len() % 2 != 0 {
+        crate::bail!("hex blob has odd length {}", s.len());
+    }
+    let nib = |c: u8| -> Result<u8> {
+        match c {
+            b'0'..=b'9' => Ok(c - b'0'),
+            b'a'..=b'f' => Ok(c - b'a' + 10),
+            b'A'..=b'F' => Ok(c - b'A' + 10),
+            _ => crate::bail!("invalid hex byte {c:#04x}"),
+        }
+    };
+    let mut out = Vec::with_capacity(s.len() / 2);
+    for p in s.chunks_exact(2) {
+        out.push((nib(p[0])? << 4) | nib(p[1])?);
+    }
+    Ok(out)
 }
 
 /// Result of pumping one generation stream to completion.
@@ -872,6 +991,31 @@ impl Client {
         let r = self.call(&Json::obj(vec![("op", Json::str("ping"))]))?;
         Ok(r.get("ok").and_then(Json::as_bool).unwrap_or(false))
     }
+
+    /// Save the generation state after `prompt`; returns the server's
+    /// `{"session":"<hex>","position":..,"n_bytes":..,"config":..}`
+    /// frame (or its `{"error":..}` frame).
+    pub fn session_save(&mut self, prompt: &str) -> Result<Json> {
+        self.call(&Json::obj(vec![
+            ("op", Json::str("session_save")),
+            ("prompt", Json::str(prompt)),
+        ]))
+    }
+
+    /// Blocking resume from a saved session blob. `prompt` is the
+    /// optional continuation text; sampling fields ride on `params` as
+    /// with [`Client::generate_with`].
+    pub fn session_resume(&mut self, session_hex: &str, prompt: &str,
+                          params: &GenerateParams) -> Result<Json> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let mut j = generate_request_json(prompt, params, Some(id), false);
+        if let Json::Obj(ref mut m) = j {
+            m.insert("op".into(), Json::str("session_resume"));
+            m.insert("session".into(), Json::str(session_hex));
+        }
+        self.call(&j)
+    }
 }
 
 /// Iterator over the frames of one streaming generate (single-stream
@@ -1007,6 +1151,17 @@ mod tests {
         assert_eq!(utf8_floor(b, 2), 1); // inside 'é'
         assert_eq!(utf8_floor(b, 1), 1);
         assert_eq!(utf8_floor(b, 0), 0);
+    }
+
+    #[test]
+    fn hex_round_trip_and_rejects() {
+        let b: Vec<u8> = (0u16..=255).map(|x| x as u8).collect();
+        assert_eq!(hex_decode(&hex_encode(&b)).unwrap(), b);
+        assert_eq!(hex_encode(&[0x4d, 0x02]), "4d02");
+        assert!(hex_decode("abc").is_err(), "odd length");
+        assert!(hex_decode("zz").is_err(), "non-hex digit");
+        assert_eq!(hex_decode("").unwrap(), Vec::<u8>::new());
+        assert_eq!(hex_decode("FFfe").unwrap(), vec![0xff, 0xfe]);
     }
 
     #[test]

@@ -411,6 +411,102 @@ fn stop_string_truncates_even_across_token_boundary() {
     assert_eq!(streamed, want, "streamed deltas must truncate identically");
 }
 
+// -------------------------------------------- session save / resume ---
+
+#[test]
+fn session_save_resume_over_the_wire_matches_generate() {
+    let mut c = Client::connect(&addr()).unwrap();
+    let want = c.generate("state space", 6).unwrap();
+    let want_toks = want.get("tokens").and_then(Json::as_arr).unwrap();
+
+    let s = c.session_save("state space").unwrap();
+    assert!(s.get("error").is_none(), "{s}");
+    assert_eq!(s.get("config").and_then(Json::as_str), Some("tiny"));
+    let pos = s.get("position").and_then(Json::as_u64).unwrap();
+    assert!(pos >= 1, "position counts the prompt tokens");
+    let n_bytes = s.get("n_bytes").and_then(Json::as_u64).unwrap();
+    let hex = s.get("session").and_then(Json::as_str).unwrap().to_string();
+    assert_eq!(hex.len() as u64, 2 * n_bytes);
+
+    // resume with no continuation: the first token comes from the saved
+    // logits row, so the whole greedy stream must equal plain generate
+    let r = c.session_resume(&hex, "",
+                             &GenerateParams::new().max_new_tokens(6))
+        .unwrap();
+    assert!(r.get("error").is_none(), "{r}");
+    let got = r.get("tokens").and_then(Json::as_arr).unwrap();
+    assert_eq!(got, want_toks,
+               "resumed generation diverged from uninterrupted one");
+}
+
+#[test]
+fn malformed_session_resume_gets_error_not_disconnect() {
+    // a valid blob to corrupt, fetched on its own connection
+    let hex = {
+        let mut c = Client::connect(&addr()).unwrap();
+        let s = c.session_save("state space").unwrap();
+        s.get("session").and_then(Json::as_str).unwrap().to_string()
+    };
+    let mut corrupt = hex.clone();
+    let mid = corrupt.len() / 2;
+    let flip = if corrupt.as_bytes()[mid] == b'0' { "1" } else { "0" };
+    corrupt.replace_range(mid..mid + 1, flip);
+
+    let stream = std::net::TcpStream::connect(addr()).unwrap();
+    let mut r = BufReader::new(stream.try_clone().unwrap());
+    let mut w = stream;
+    let cases: Vec<String> = vec![
+        // no blob at all
+        r#"{"op":"session_resume","max_new_tokens":4}"#.into(),
+        // not hex
+        r#"{"op":"session_resume","session":"zz","max_new_tokens":4}"#
+            .into(),
+        // odd-length hex
+        r#"{"op":"session_resume","session":"4d2","max_new_tokens":4}"#
+            .into(),
+        // valid hex, truncated blob
+        r#"{"op":"session_resume","session":"4d02","max_new_tokens":4}"#
+            .into(),
+        // full-length blob with one flipped nibble (checksum catches it)
+        format!("{{\"op\":\"session_resume\",\"session\":\"{corrupt}\",\
+                 \"max_new_tokens\":4}}"),
+    ];
+    let mut line = String::new();
+    for case in &cases {
+        writeln!(w, "{case}").unwrap();
+        line.clear();
+        r.read_line(&mut line).unwrap();
+        let j = Json::parse(line.trim()).unwrap();
+        assert!(j.get("error").and_then(Json::as_str).is_some(),
+                "case {case} must answer a structured error: {line}");
+    }
+    // the connection survived all of it — and still generates
+    writeln!(w, "{}", Json::obj(vec![("op", Json::str("ping"))])).unwrap();
+    line.clear();
+    r.read_line(&mut line).unwrap();
+    assert!(line.contains("true"), "{line}");
+    // and the GOOD blob still resumes on a fresh client
+    let mut c = Client::connect(&addr()).unwrap();
+    let r = c.session_resume(&hex, "",
+                             &GenerateParams::new().max_new_tokens(3))
+        .unwrap();
+    assert!(r.get("error").is_none(), "{r}");
+}
+
+#[test]
+fn metrics_exposes_prefix_cache_block() {
+    let mut c = Client::connect(&addr()).unwrap();
+    let _ = c.generate("state space model", 2).unwrap();
+    let m = c.call(&Json::obj(vec![("op", Json::str("metrics"))])).unwrap();
+    let pc = m.get("replicas").and_then(Json::as_arr).unwrap()[0]
+        .get("prefix_cache").expect("prefix_cache block");
+    for field in ["hits", "misses", "evictions", "insertions", "bytes",
+                  "entries"] {
+        assert!(pc.get(field).and_then(Json::as_f64).is_some(),
+                "prefix_cache.{field} missing: {pc}");
+    }
+}
+
 // ------------------------------------------------------------- echo ---
 
 #[test]

@@ -1,0 +1,254 @@
+//! Prompt-prefix cache suite (ISSUE 6, DESIGN.md §9).
+//!
+//! Three layers of pinning:
+//!
+//!   * a seeded property sweep drives `PrefixCache` with hundreds of
+//!     overlapping prompts and checks every lookup against a
+//!     brute-force "longest cached chunk-aligned proper prefix"
+//!     reference, including LRU/byte-budget accounting invariants,
+//!   * eviction order under a byte budget at integration granularity
+//!     (real tiny-config `CacheState` payloads),
+//!   * the engine-level contract: a repeated shared-prefix prompt takes
+//!     the cache-hit path — metrics show the hit and a smaller
+//!     `prefill_tokens` delta (only the unshared tail is computed) —
+//!     while greedy output stays bitwise identical to a cold-prefill
+//!     engine. Session save/resume through `EngineHandle` rides the
+//!     same harness.
+
+use mamba2_serve::coordinator::{Engine, EngineConfig, GenerateParams,
+                                PrefixCache};
+use mamba2_serve::runtime::{sim_config, Backend, CacheState,
+                            ReferenceBackend};
+use mamba2_serve::util::prng::Rng;
+
+const CHUNK: usize = 16;
+
+fn stamped(v: f32) -> CacheState {
+    let cfg = sim_config("tiny").unwrap();
+    let mut c = CacheState::zeros(&cfg, 1);
+    c.ssm.data[0..4].copy_from_slice(&v.to_le_bytes());
+    c
+}
+
+fn marker(c: &CacheState) -> f32 {
+    f32::from_le_bytes(c.ssm.data[0..4].try_into().unwrap())
+}
+
+#[test]
+fn lookup_matches_brute_force_reference() {
+    let mut pc = PrefixCache::new(1 << 30, CHUNK); // no eviction pressure
+    let mut rng = Rng::new(0xC0FFEE);
+    // inserted keys with their marker values, in insertion order
+    let mut model: Vec<(Vec<i32>, f32)> = Vec::new();
+    let mut lookups = 0u64;
+    let mut want_hits = 0u64;
+    for step in 0..400 {
+        // prompts share structure: half the time extend a known key so
+        // prefix overlaps are dense; tokens from a tiny alphabet so
+        // accidental overlaps happen too
+        let mut p: Vec<i32> = if !model.is_empty() && rng.below(2) == 0 {
+            let i = rng.below(model.len() as u64) as usize;
+            model[i].0.clone()
+        } else {
+            Vec::new()
+        };
+        for _ in 0..rng.range(1, 40) {
+            p.push(rng.range(0, 3) as i32);
+        }
+        // brute-force reference: longest cached chunk-aligned proper
+        // prefix (latest marker wins for a re-inserted key)
+        let max_aligned = (p.len() - 1) / CHUNK * CHUNK;
+        let mut want: Option<(usize, f32)> = None;
+        for (k, m) in &model {
+            if k.len() <= max_aligned && p.starts_with(k) {
+                match want {
+                    Some((n, _)) if n > k.len() => {}
+                    _ => want = Some((k.len(), *m)),
+                }
+            }
+        }
+        lookups += 1;
+        want_hits += want.is_some() as u64;
+        match (pc.lookup(&p), want) {
+            (None, None) => {}
+            (Some((c, n)), Some((wn, wm))) => {
+                assert_eq!(n, wn, "step {step}: prefix length");
+                assert_eq!(marker(&c), wm, "step {step}: wrong entry");
+            }
+            (got, want) => panic!(
+                "step {step}: lookup {:?} but reference {:?}",
+                got.map(|(_, n)| n), want.map(|(n, _)| n)),
+        }
+        // sometimes insert an aligned prefix of this prompt
+        if max_aligned >= CHUNK && rng.below(2) == 0 {
+            let lens = max_aligned / CHUNK;
+            let klen = (rng.below(lens as u64) as usize + 1) * CHUNK;
+            let m = step as f32;
+            pc.insert(&p[..klen], &stamped(m));
+            // mirror into the reference model (replace same key)
+            model.retain(|(k, _)| k[..] != p[..klen]);
+            model.push((p[..klen].to_vec(), m));
+        }
+    }
+    let s = pc.stats();
+    assert_eq!(s.hits + s.misses, lookups, "every lookup counted once");
+    assert_eq!(s.hits, want_hits, "hit count matches the reference");
+    assert_eq!(s.entries as usize, model.len());
+    assert_eq!(s.evictions, 0, "budget was never exceeded");
+    assert!(s.entries > 20, "sweep too shallow to mean anything");
+}
+
+#[test]
+fn byte_budget_eviction_orders_by_recency() {
+    let key = |base: i32| -> Vec<i32> {
+        (0..CHUNK as i32).map(|i| base + i).collect()
+    };
+    let one = stamped(0.0).nbytes() + CHUNK * 4;
+    let mut pc = PrefixCache::new(3 * one + 32, CHUNK);
+    for (i, base) in [0, 100, 200].iter().enumerate() {
+        pc.insert(&key(*base), &stamped(i as f32));
+    }
+    assert_eq!(pc.stats().entries, 3);
+    // touch 0 and 200; 100 becomes LRU
+    let probe = |mut k: Vec<i32>| { k.push(7); k };
+    assert!(pc.lookup(&probe(key(0))).is_some());
+    assert!(pc.lookup(&probe(key(200))).is_some());
+    pc.insert(&key(300), &stamped(3.0));
+    let s = pc.stats();
+    assert_eq!(s.evictions, 1);
+    assert_eq!(s.entries, 3);
+    assert!(s.bytes as usize <= 3 * one + 32, "budget holds");
+    assert!(pc.lookup(&probe(key(100))).is_none(), "LRU evicted");
+    for base in [0, 200, 300] {
+        assert!(pc.lookup(&probe(key(base))).is_some(),
+                "recent entry {base} survives");
+    }
+}
+
+// ------------------------------------------------- engine-level ---
+
+fn engine(prefix_cache_bytes: usize) -> mamba2_serve::coordinator::EngineHandle {
+    let backend: Box<dyn Backend> =
+        Box::new(ReferenceBackend::seeded("tiny", 0).unwrap());
+    Engine::start(backend, EngineConfig {
+        prefix_cache_bytes,
+        ..Default::default()
+    }).unwrap()
+}
+
+fn prompt(len: usize, salt: usize) -> Vec<i32> {
+    (0..len).map(|i| ((i * 37 + 11 * salt + 3) % 512) as i32).collect()
+}
+
+#[test]
+fn shared_prefix_hit_skips_reprefill_and_stays_bitwise() {
+    // two prompts sharing a 64-token (chunk-aligned) system prompt
+    let shared = prompt(64, 1);
+    let mut p1 = shared.clone();
+    p1.extend(prompt(9, 2));
+    let mut p2 = shared.clone();
+    p2.extend(prompt(9, 3));
+    let params = || GenerateParams::new().max_new_tokens(10);
+
+    // cold reference: cache disabled, every prompt fully prefilled
+    let cold = engine(0);
+    let want1 = cold.generate(p1.clone(), params()).collect().unwrap();
+    let want2 = cold.generate(p2.clone(), params()).collect().unwrap();
+    let cs = cold.metrics.snapshot();
+    assert_eq!(cs.prefill_tokens, (p1.len() + p2.len()) as u64);
+    assert_eq!((cs.prefix_hits, cs.prefix_insertions), (0, 0),
+               "budget 0 disables the cache");
+    assert_eq!(cs.prefix_misses, 2, "misses still counted when disabled");
+
+    // warm engine: p1 populates the cache, p2 hits it
+    let warm = engine(16 << 20);
+    let got1 = warm.generate(p1.clone(), params()).collect().unwrap();
+    let s1 = warm.metrics.snapshot();
+    assert_eq!(got1, want1, "cold/warm greedy outputs diverged (p1)");
+    assert_eq!(s1.prefix_hits, 0, "nothing to hit yet");
+    assert_eq!(s1.prefix_insertions, 1, "p1's 64-token prefix cached");
+    assert_eq!(s1.prefill_tokens, p1.len() as u64);
+
+    let got2 = warm.generate(p2.clone(), params()).collect().unwrap();
+    let s2 = warm.metrics.snapshot();
+    assert_eq!(got2, want2, "cache-hit generation must be bitwise \
+                             identical to cold prefill");
+    assert_eq!(s2.prefix_hits, 1, "p2 hit the shared prefix");
+    // the satellite-4 pin: the shared 64 tokens were NOT re-prefilled —
+    // only p2's 9-token tail was computed
+    assert_eq!(s2.prefill_tokens - s1.prefill_tokens,
+               (p2.len() - shared.len()) as u64,
+               "hit prompts must not re-run the shared segment");
+    assert_eq!(s2.prefix_entries, 1, "no duplicate entry for p2");
+    assert!(s2.prefix_bytes > 0);
+
+    // an identical re-submission hits the same entry again
+    let got3 = warm.generate(p1.clone(), params()).collect().unwrap();
+    let s3 = warm.metrics.snapshot();
+    assert_eq!(got3, want1, "repeat prompt diverged");
+    assert_eq!(s3.prefix_hits, 2);
+    assert_eq!(s3.prefill_tokens - s2.prefill_tokens,
+               (p1.len() - shared.len()) as u64);
+}
+
+#[test]
+fn multi_turn_chat_reuses_growing_prefix() {
+    // turn k's prompt extends turn k-1's — the multi-turn pattern the
+    // cache exists for; each turn only prefills its new suffix (plus
+    // the sub-chunk remainder of the previous turn)
+    let cold = engine(0);
+    let warm = engine(16 << 20);
+    let mut convo = prompt(48, 5);
+    let mut last_prefill = 0u64;
+    for turn in 0..3 {
+        let params = GenerateParams::new().max_new_tokens(6);
+        let want = cold.generate(convo.clone(), params.clone())
+            .collect().unwrap();
+        let got = warm.generate(convo.clone(), params).collect().unwrap();
+        assert_eq!(got, want, "turn {turn} diverged");
+        let s = warm.metrics.snapshot();
+        let turn_prefill = s.prefill_tokens - last_prefill;
+        last_prefill = s.prefill_tokens;
+        if turn > 0 {
+            assert!(s.prefix_hits >= turn as u64, "turn {turn}: no hit");
+            // never recompute more than the new suffix + one chunk
+            assert!(turn_prefill <= (30 + CHUNK) as u64,
+                    "turn {turn} prefilled {turn_prefill} tokens");
+        }
+        // extend the conversation with the reply + the next user turn
+        convo.extend(&want);
+        convo.extend(prompt(24, 7 + turn));
+    }
+}
+
+#[test]
+fn engine_session_save_resume_matches_uninterrupted() {
+    let eng = engine(16 << 20);
+    let p = prompt(73, 9);
+    let params = || GenerateParams::new().max_new_tokens(12);
+    let want = eng.generate(p.clone(), params()).collect().unwrap();
+
+    // save at the full prompt, resume with an empty continuation: the
+    // stored last-logits row must reproduce the stream bitwise
+    let state = eng.session_save(p.clone()).unwrap();
+    assert_eq!(state.position, p.len() as u64);
+    let got = eng.session_resume(state, Vec::new(), params())
+        .collect().unwrap();
+    assert_eq!(got, want, "resumed stream diverged");
+
+    // save at a chunk-aligned cut, resume with the rest of the prompt
+    let state = eng.session_save(p[..64].to_vec()).unwrap();
+    let got = eng.session_resume(state, p[64..].to_vec(), params())
+        .collect().unwrap();
+    assert_eq!(got, want, "mid-prompt resume diverged");
+
+    // wrong-config blob is rejected up front: the stream fails, the
+    // engine keeps serving
+    let other = ReferenceBackend::seeded("sim-130m", 0).unwrap();
+    let (cache, last) = other.prefill_any(&p[..16]).unwrap();
+    let alien = other.snapshot(&cache, 0, 16, &last).unwrap();
+    let err = eng.session_resume(alien, Vec::new(), params()).collect();
+    assert!(err.is_err(), "alien-config resume must fail");
+    let again = eng.generate(p.clone(), params()).collect().unwrap();
+    assert_eq!(again, want, "engine must survive a bad resume");
+}

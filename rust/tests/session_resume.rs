@@ -1,0 +1,322 @@
+//! Bitwise resumability suite (ISSUE 6, DESIGN.md §9).
+//!
+//! The O(1)-state claim made operational: freezing a sequence into a
+//! [`SessionState`], serialising it, and restoring it — on the same
+//! backend or a freshly constructed one — must not move a single bit of
+//! the subsequent generation. Each comparison pairs identical op
+//! sequences, which is what the snapshot design guarantees:
+//!
+//!   * a chunk-aligned snapshot resumes through `prefill_continue`, on
+//!     the same chunk grid as the uninterrupted prefill (the PR 3
+//!     segmentation invariant),
+//!   * a mid-chunk snapshot (e.g. taken mid-decode) replays its tail
+//!     through the O(1) decode step — exactly the ops the uninterrupted
+//!     stream would have run,
+//!   * an empty continuation samples from the stored `last_logits` row.
+//!
+//! The sweep covers plan on/off × threads 1/4 × f32/bf16 weights ×
+//! ragged and chunk-aligned prompts, plus batch-4 slot extraction and
+//! mid-decode snapshot points. The byte format's negative space rides
+//! here too: truncated, bit-flipped, wrong-version, wrong-magic and
+//! wrong-config blobs must error cleanly, never panic.
+
+use mamba2_serve::runtime::{argmax_last, fnv1a64, Backend, CacheState,
+                            PlanMode, ReferenceBackend, SessionState,
+                            WeightsDtype, SESSION_VERSION};
+use mamba2_serve::tensor::Tensor;
+
+fn backend(plan: PlanMode, threads: usize, w: WeightsDtype)
+    -> ReferenceBackend {
+    ReferenceBackend::seeded("tiny", 0).unwrap()
+        .with_threads(threads)
+        .with_plan_mode(plan)
+        .with_weights_dtype(w)
+}
+
+fn prompt(len: usize, salt: usize) -> Vec<i32> {
+    (0..len).map(|i| ((i * 37 + 11 * salt + 3) % 512) as i32).collect()
+}
+
+/// Greedy decode `n` steps starting by feeding `first`; returns the
+/// sampled tokens, every step's logits row, and the final cache.
+fn greedy(b: &ReferenceBackend, cache: &CacheState, first: i32, n: usize)
+    -> (Vec<i32>, Vec<Vec<f32>>, CacheState) {
+    let mut cache = cache.clone();
+    let mut tok = first;
+    let mut toks = Vec::new();
+    let mut rows = Vec::new();
+    for _ in 0..n {
+        let out = b.decode_step(&cache, &[tok]).unwrap();
+        tok = argmax_last(&out.logits)[0];
+        toks.push(tok);
+        rows.push(out.logits.as_f32());
+        cache = out.cache;
+    }
+    (toks, rows, cache)
+}
+
+#[test]
+fn snapshot_restore_decode_bitwise_sweep() {
+    for &plan in &[PlanMode::On, PlanMode::Off] {
+        for &threads in &[1usize, 4] {
+            for &w in &[WeightsDtype::F32, WeightsDtype::Bf16] {
+                // 96 = chunk-aligned (6×16); 100 exercises the
+                // sub-bucket decode tail of prefill_any
+                for &plen in &[96usize, 100] {
+                    let tag = format!("plan={plan:?} threads={threads} \
+                                       w={w:?} plen={plen}");
+                    let saver = backend(plan, threads, w);
+                    let p = prompt(plen, 1);
+                    let (cache, last) = saver.prefill_any(&p).unwrap();
+                    let first = argmax_last(&last)[0];
+                    let (want_toks, want_rows, _) =
+                        greedy(&saver, &cache, first, 12);
+
+                    let snap = saver
+                        .snapshot(&cache, 0, plen as u64, &last)
+                        .unwrap();
+                    // round-trip through the wire format
+                    let blob = snap.to_bytes();
+                    assert_eq!(blob.len(), snap.nbytes(), "{tag}: nbytes");
+                    let rt = SessionState::from_bytes(&blob).unwrap();
+                    assert_eq!(rt.position, plen as u64, "{tag}");
+                    assert_eq!(rt.config, "tiny", "{tag}");
+                    assert_eq!(rt.last_logits.as_f32(), last.as_f32(),
+                               "{tag}: stored logits row");
+                    // the empty-continuation contract: the stored row
+                    // samples the next token the stream would produce
+                    assert_eq!(argmax_last(&rt.last_logits)[0], first,
+                               "{tag}: resume-with-no-tokens token");
+
+                    // restore on the saving instance AND a fresh one
+                    let fresh = backend(plan, threads, w);
+                    for (who, b) in [("same", &saver), ("fresh", &fresh)] {
+                        let rc = b.restore(&rt).unwrap();
+                        assert_eq!(rc.ssm.as_f32(), cache.ssm.as_f32(),
+                                   "{tag} {who}: ssm");
+                        assert_eq!(rc.conv.as_f32(), cache.conv.as_f32(),
+                                   "{tag} {who}: conv");
+                        let (toks, rows, _) = greedy(b, &rc, first, 12);
+                        assert_eq!(toks, want_toks, "{tag} {who}: tokens");
+                        assert_eq!(rows, want_rows, "{tag} {who}: logits");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn mid_decode_snapshot_resumes_bitwise() {
+    let b = backend(PlanMode::On, 4, WeightsDtype::F32);
+    let fresh = backend(PlanMode::On, 4, WeightsDtype::F32);
+    let p = prompt(40, 3);
+    let (cache, last) = b.prefill_any(&p).unwrap();
+    let first = argmax_last(&last)[0];
+    let (toks, rows, _) = greedy(&b, &cache, first, 20);
+    // snapshot after k decode steps — positions 41/45/51, none of them
+    // chunk-aligned, so the resume MUST take the decode-replay path
+    for &k in &[1usize, 5, 11] {
+        let (_, krows, kcache) = greedy(&b, &cache, first, k);
+        let last_row = Tensor::f32(
+            "last", &[1, b.cfg().vocab_size as i64], &krows[k - 1]);
+        let snap = b
+            .snapshot(&kcache, 0, (p.len() + k) as u64, &last_row)
+            .unwrap();
+        let rt = SessionState::from_bytes(&snap.to_bytes()).unwrap();
+        let rc = fresh.restore(&rt).unwrap();
+        // the token the interrupted stream was about to feed
+        assert_eq!(argmax_last(&rt.last_logits)[0], toks[k - 1], "k={k}");
+        let (ctoks, crows, _) = greedy(&fresh, &rc, toks[k - 1], 20 - k);
+        assert_eq!(ctoks, toks[k..], "k={k}: tokens");
+        assert_eq!(crows, rows[k..], "k={k}: logits");
+    }
+}
+
+#[test]
+fn mid_chunk_seeded_continuation_replays_decode_path() {
+    // position 40 is mid-chunk (40 % 16 != 0): prefill_any_seeded may
+    // not re-enter the chunked path, and must instead replay the
+    // continuation through decode_step — the same ops a teacher-forced
+    // uninterrupted stream runs
+    let b = backend(PlanMode::On, 4, WeightsDtype::F32);
+    let p = prompt(64, 5);
+    let (cache, last) = b.prefill_any(&p[..40]).unwrap();
+    // uninterrupted: teacher-force the remaining prompt through decode
+    let mut want_cache = cache.clone();
+    let mut want_last = last.clone();
+    for i in 40..64 {
+        let out = b.decode_step(&want_cache, &p[i..=i]).unwrap();
+        want_cache = out.cache;
+        want_last = out.logits;
+    }
+    // interrupted: snapshot at 40, restore, seed the tail prefill
+    let snap = b.snapshot(&cache, 0, 40, &last).unwrap();
+    let rt = SessionState::from_bytes(&snap.to_bytes()).unwrap();
+    let rc = b.restore(&rt).unwrap();
+    let (got_cache, got_last) = b
+        .prefill_any_seeded(&p[40..], Some((&rc, rt.position as usize)))
+        .unwrap();
+    assert_eq!(got_last.as_f32(), want_last.as_f32(), "logits");
+    assert_eq!(got_cache.ssm.as_f32(), want_cache.ssm.as_f32(), "ssm");
+    assert_eq!(got_cache.conv.as_f32(), want_cache.conv.as_f32(), "conv");
+}
+
+#[test]
+fn chunk_aligned_seeded_continuation_matches_joint_prefill() {
+    // snapshot at 64 (chunk- and bucket-aligned): the seeded
+    // continuation re-enters the chunked bucket chain on the SAME
+    // chunk grid as the joint prefill — 64 | 16 | 16 | 16 either way —
+    // so the PR 3 segmentation invariant makes it bitwise
+    let b = backend(PlanMode::On, 4, WeightsDtype::F32);
+    let p = prompt(112, 7);
+    let (want_cache, want_last) = b.prefill_any(&p).unwrap();
+    let (head_cache, head_last) = b.prefill_any(&p[..64]).unwrap();
+    let snap = b.snapshot(&head_cache, 0, 64, &head_last).unwrap();
+    let rt = SessionState::from_bytes(&snap.to_bytes()).unwrap();
+    let rc = b.restore(&rt).unwrap();
+    let (got_cache, got_last) = b
+        .prefill_any_seeded(&p[64..], Some((&rc, 64)))
+        .unwrap();
+    assert_eq!(got_last.as_f32(), want_last.as_f32(), "logits");
+    assert_eq!(got_cache.ssm.as_f32(), want_cache.ssm.as_f32(), "ssm");
+    assert_eq!(got_cache.conv.as_f32(), want_cache.conv.as_f32(), "conv");
+}
+
+#[test]
+fn batched_slots_snapshot_and_resume_independently() {
+    // slots never mix (the decode contract), so freezing slot s out of
+    // a batch-4 decode and resuming it at batch 1 must continue slot
+    // s's stream bitwise
+    let b = backend(PlanMode::On, 4, WeightsDtype::F32);
+    let fresh = backend(PlanMode::On, 4, WeightsDtype::F32);
+    let bsz = 4usize;
+    let v = b.cfg().vocab_size;
+    let mut cache = CacheState::zeros(b.cfg(), bsz);
+    let mut toks = vec![0i32; bsz];
+    let mut consumed = vec![0u64; bsz];
+    for s in 0..bsz {
+        let p = prompt(16 + 8 * s, s + 1);
+        consumed[s] = p.len() as u64;
+        let (c1, l1) = b.prefill_any(&p).unwrap();
+        cache.copy_slot_from(s, &c1, 0);
+        toks[s] = argmax_last(&l1)[0];
+    }
+    // a few batched greedy steps, keeping each slot's last logits row
+    let mut last_rows = vec![Vec::new(); bsz];
+    for _ in 0..4 {
+        let out = b.decode_step(&cache, &toks).unwrap();
+        let lv = out.logits.as_f32();
+        for s in 0..bsz {
+            last_rows[s] = lv[s * v..(s + 1) * v].to_vec();
+            consumed[s] += 1;
+        }
+        toks = argmax_last(&out.logits);
+        cache = out.cache;
+    }
+    // uninterrupted continuation: 6 more batched steps
+    let mut want = vec![Vec::new(); bsz];
+    {
+        let mut c = cache.clone();
+        let mut t = toks.clone();
+        for _ in 0..6 {
+            let out = b.decode_step(&c, &t).unwrap();
+            t = argmax_last(&out.logits);
+            for s in 0..bsz {
+                want[s].push(t[s]);
+            }
+            c = out.cache;
+        }
+    }
+    // freeze each slot, round-trip, resume at batch 1 on a fresh
+    // instance
+    for s in 0..bsz {
+        let row = Tensor::f32("last", &[1, v as i64], &last_rows[s]);
+        let snap = b.snapshot(&cache, s, consumed[s], &row).unwrap();
+        let rt = SessionState::from_bytes(&snap.to_bytes()).unwrap();
+        let rc = fresh.restore(&rt).unwrap();
+        assert_eq!(argmax_last(&rt.last_logits)[0], toks[s], "slot {s}");
+        let (got, _, _) = greedy(&fresh, &rc, toks[s], 6);
+        assert_eq!(got, want[s], "slot {s}: resumed tokens");
+    }
+}
+
+// ------------------------------------------------- malformed blobs ---
+
+fn saved_blob() -> (ReferenceBackend, Vec<u8>) {
+    let b = backend(PlanMode::On, 1, WeightsDtype::F32);
+    let p = prompt(32, 2);
+    let (cache, last) = b.prefill_any(&p).unwrap();
+    let blob = b.snapshot(&cache, 0, 32, &last).unwrap().to_bytes();
+    (b, blob)
+}
+
+#[test]
+fn truncated_blobs_error_cleanly() {
+    let (_, blob) = saved_blob();
+    let n = blob.len();
+    // every structurally interesting cut: inside magic, version,
+    // fingerprint, name, each tensor header/payload, and the checksum
+    let cuts = [0, 1, 3, 7, 8, 11, 15, 23, 24, 27, 28, 40, n / 3, n / 2,
+                n - 9, n - 8, n - 1];
+    for &cut in &cuts {
+        let e = SessionState::from_bytes(&blob[..cut]);
+        assert!(e.is_err(), "cut at {cut} of {n} must error");
+    }
+}
+
+#[test]
+fn bit_flips_error_cleanly_everywhere() {
+    let (_, blob) = saved_blob();
+    // a flip anywhere — header, dims, payload, checksum — must be
+    // caught (magic/version checks or the FNV checksum); sample the
+    // whole blob at a stride that still covers every region
+    let stride = blob.len() / 97 + 1;
+    for i in (0..blob.len()).step_by(stride) {
+        let mut bad = blob.clone();
+        bad[i] ^= 1 << (i % 8);
+        assert!(SessionState::from_bytes(&bad).is_err(), "flip at {i}");
+    }
+}
+
+#[test]
+fn wrong_version_and_magic_are_named_errors() {
+    let (_, blob) = saved_blob();
+    // future version, checksum re-stamped so the version check (not
+    // the checksum) is what fires
+    let mut v99 = blob.clone();
+    v99[4..8].copy_from_slice(&(SESSION_VERSION + 98).to_le_bytes());
+    let n = v99.len();
+    let ck = fnv1a64(&v99[..n - 8]);
+    v99[n - 8..].copy_from_slice(&ck.to_le_bytes());
+    let e = SessionState::from_bytes(&v99).unwrap_err().to_string();
+    assert!(e.contains("version 99"), "got: {e}");
+
+    let mut bad_magic = blob.clone();
+    bad_magic[0] ^= 0xff;
+    let e = SessionState::from_bytes(&bad_magic).unwrap_err().to_string();
+    assert!(e.contains("magic"), "got: {e}");
+
+    let mut flipped = blob;
+    flipped[20] ^= 0x10;
+    let e = SessionState::from_bytes(&flipped).unwrap_err().to_string();
+    assert!(e.contains("checksum"), "got: {e}");
+}
+
+#[test]
+fn wrong_config_restore_is_rejected() {
+    let (_, blob) = saved_blob();
+    let rt = SessionState::from_bytes(&blob).unwrap();
+    let other = ReferenceBackend::seeded("sim-130m", 0).unwrap();
+    let e = other.restore(&rt).unwrap_err().to_string();
+    assert!(e.contains("tiny") && e.contains("sim-130m"), "got: {e}");
+}
+
+#[test]
+fn snapshot_rejects_bad_slot_and_logits() {
+    let b = backend(PlanMode::Off, 1, WeightsDtype::F32);
+    let (cache, last) = b.prefill_any(&prompt(16, 1)).unwrap();
+    assert!(b.snapshot(&cache, 1, 16, &last).is_err(), "slot 1 of 1");
+    let narrow = Tensor::f32("last", &[1, 7], &[0.0; 7]);
+    assert!(b.snapshot(&cache, 0, 16, &narrow).is_err(), "narrow logits");
+}
