@@ -18,7 +18,10 @@
 //!   * the prompt-prefix cache (schema 1.3): hits, misses and resident
 //!     bytes from replaying a shared-prefix workload through an engine
 //!     replica — the serving-side economics of O(1) state (DESIGN.md
-//!     §9).
+//!     §9),
+//!   * the HTTP gateway (schema 1.4): completions admitted and shed by
+//!     driving `/v1/completions` against a live one-replica pool — the
+//!     serving surface measured end-to-end (DESIGN.md §10).
 //!
 //! `--quick` trims the measurement protocol for CI smoke runs (the sweep
 //! itself is never trimmed — the schema pins it). `--check` exits
@@ -34,19 +37,26 @@
 //! against a previous PR's artifact (fail on a >10% tok/s drop;
 //! incomparable baselines are reported and skipped).
 
+use std::sync::Arc;
+use std::time::Duration;
+
 use mamba2_serve::bench_support::{batch_speedup, compare_to_baseline,
                                   decode_point, dtype_speedup,
                                   open_backend, prefill_point, quick,
                                   trajectory_json, write_trajectory,
                                   BaselineCheck, DecodePoint,
-                                  PrefillPoint};
+                                  GatewayTraffic, PrefillPoint};
 use mamba2_serve::coordinator::{Engine, EngineConfig, GenerateParams,
                                 PrefixCacheStats};
+use mamba2_serve::eval::{corpus, Tokenizer};
+use mamba2_serve::gateway::http::http_roundtrip;
+use mamba2_serve::gateway::pool::{self, PoolConfig};
+use mamba2_serve::gateway::{Gateway, GatewayConfig};
 use mamba2_serve::runtime::{reference, Backend, CacheState, PlanStats};
 use mamba2_serve::util::benchkit::{Bench, Table};
 use mamba2_serve::util::json::Json;
 
-const TAG: &str = "pr6";
+const TAG: &str = "pr7";
 const MODEL: &str = "sim-130m";
 const DECODE_BATCHES: [usize; 3] = [1, 4, 16];
 const PREFILL_LENS: [usize; 2] = [512, 2048];
@@ -173,6 +183,59 @@ fn main() {
               prefix_stats.hits, prefix_stats.misses, prefix_stats.bytes,
               es.prefill_tokens, submitted);
 
+    // ---- gateway: HTTP traffic leg (schema 1.4 block) -------------------
+    // A one-replica pool behind the OpenAI-compatible gateway, driven
+    // with a handful of real HTTP completions — the trajectory records
+    // that the serving surface works end-to-end, not its latency (that
+    // is serving_throughput's job).
+    let (router, _gauge) = pool::build(PoolConfig {
+        model: MODEL.into(),
+        replicas: 1,
+        ..Default::default()
+    }).unwrap_or_else(|e| {
+        eprintln!("cannot build gateway pool: {e}");
+        std::process::exit(1);
+    });
+    let gw = Gateway::new(
+        Arc::clone(&router),
+        Arc::new(Tokenizer::train(corpus::BUNDLED, 256)),
+        GatewayConfig {
+            model: MODEL.into(),
+            threads: 2,
+            keep_alive: Duration::from_millis(500),
+            ..Default::default()
+        });
+    let handle = gw.start("127.0.0.1:0").unwrap_or_else(|e| {
+        eprintln!("cannot start gateway: {e}");
+        std::process::exit(1);
+    });
+    for i in 0..4 {
+        let body = format!(
+            "{{\"model\":\"{MODEL}\",\"prompt\":\"trajectory leg {i}\",\
+             \"max_tokens\":4}}");
+        let (status, _, _) = http_roundtrip(
+            &handle.addr(), "POST", "/v1/completions", body.as_bytes())
+            .unwrap_or_else(|e| {
+                eprintln!("gateway completion failed: {e}");
+                std::process::exit(1);
+            });
+        if status != 200 {
+            eprintln!("gateway completion returned {status}");
+            std::process::exit(1);
+        }
+    }
+    let gw_traffic = GatewayTraffic {
+        requests: handle.requests_total(),
+        shed: handle.shed_total(),
+        replicas: router.n_replicas() as u64,
+    };
+    eprintln!("  gateway: {} completions admitted, {} shed, {} replica(s)",
+              gw_traffic.requests, gw_traffic.shed, gw_traffic.replicas);
+    handle.drain().unwrap_or_else(|e| {
+        eprintln!("gateway drain failed: {e}");
+        std::process::exit(1);
+    });
+
     // ---- human table + machine-readable trajectory ----------------------
     let mut td = Table::new(
         &format!("Perf trajectory {TAG} — batch-fused decode \
@@ -223,7 +286,7 @@ fn main() {
     }
     let doc = trajectory_json(TAG, MODEL, session.name(), threads, quick(),
                               &decode, &prefill, plan_stats,
-                              Some(prefix_stats));
+                              Some(prefix_stats), Some(gw_traffic));
     let path = write_trajectory(TAG, &doc).unwrap_or_else(|e| {
         eprintln!("cannot write trajectory: {e}");
         std::process::exit(1);

@@ -9,10 +9,16 @@
 //! throughput scales with slot occupancy until compute saturates.
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use mamba2_serve::bench_support::{open_backend, quick};
 use mamba2_serve::coordinator::{Engine, EngineConfig, GenerateParams};
+use mamba2_serve::eval::{corpus, Tokenizer};
+use mamba2_serve::gateway::http::http_roundtrip;
+use mamba2_serve::gateway::pool::{self, PoolConfig};
+use mamba2_serve::gateway::{Gateway, GatewayConfig};
 use mamba2_serve::util::benchkit::{save_results, Table};
+use mamba2_serve::util::json::Json;
 use mamba2_serve::util::prng::Rng;
 
 fn main() {
@@ -72,5 +78,76 @@ fn main() {
     t.print();
     println!("(batched decode shares one executable launch across active \
               slots: higher occupancy amortises the per-step cost)");
-    save_results("serving_throughput", &[&t]);
+
+    // ---- HTTP sweep: the same closed-loop load through the gateway ------
+    // Replica widths through `gateway::pool` + least-in-flight routing;
+    // every request is a real `/v1/completions` over a fresh connection,
+    // so the row also pays HTTP parsing, tokenization, and JSON assembly.
+    let mut th = Table::new(
+        "HTTP gateway over the replica pool (closed-loop \
+         /v1/completions, sim-130m, CPU)",
+        &["Replicas", "Clients", "req/s", "tok/s", "shed", "wall s"]);
+    for &nrep in if quick() { &[1usize, 2][..] } else { &[1usize, 2, 4] } {
+        let (router, _gauge) = pool::build(PoolConfig {
+            model: model.into(),
+            replicas: nrep,
+            batch_cap: 8,
+            ..Default::default()
+        }).unwrap();
+        let gw = Gateway::new(
+            Arc::clone(&router),
+            Arc::new(Tokenizer::train(corpus::BUNDLED, 256)),
+            GatewayConfig {
+                model: model.into(),
+                threads: 2 * nrep + 2,
+                keep_alive: Duration::from_millis(500),
+                ..Default::default()
+            });
+        let h = gw.start("127.0.0.1:0").unwrap();
+        let addr = h.addr();
+        let conc = 2 * nrep;
+        let per_client = (n_requests / conc).max(1);
+        let t0 = std::time::Instant::now();
+        let mut handles = Vec::new();
+        for c in 0..conc {
+            handles.push(std::thread::spawn(move || {
+                let mut toks = 0u64;
+                for r in 0..per_client {
+                    let body = format!(
+                        "{{\"model\":\"{model}\",\"prompt\":\"client \
+                         {c} request {r}\",\"max_tokens\":{gen_len}}}");
+                    let (status, _, resp) = http_roundtrip(
+                        &addr, "POST", "/v1/completions",
+                        body.as_bytes()).expect("gateway roundtrip");
+                    assert_eq!(status, 200, "completion failed");
+                    toks += std::str::from_utf8(&resp).ok()
+                        .and_then(|s| Json::parse(s).ok())
+                        .and_then(|j| j.at(&["usage",
+                                             "completion_tokens"])
+                                  .and_then(Json::as_u64))
+                        .unwrap_or(0);
+                }
+                toks
+            }));
+        }
+        let mut toks = 0u64;
+        for hj in handles {
+            toks += hj.join().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let reqs = (conc * per_client) as f64;
+        th.row(vec![nrep.to_string(),
+                    conc.to_string(),
+                    format!("{:.2}", reqs / wall),
+                    format!("{:.1}", toks as f64 / wall),
+                    h.shed_total().to_string(),
+                    format!("{wall:.2}")]);
+        eprintln!("  http replicas={nrep}: {reqs:.0} completions in \
+                   {wall:.2} s ({toks} tokens)");
+        h.drain().unwrap();
+    }
+    th.print();
+    println!("(replica widths share nothing but the in-flight gauge: \
+              routing is least-in-flight, admission is O(1) per request)");
+    save_results("serving_throughput", &[&t, &th]);
 }

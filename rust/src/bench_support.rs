@@ -145,7 +145,23 @@ pub fn fmt_pct(x: f64) -> String {
 /// serving-side economics (DESIGN.md §9), measured by replaying a
 /// shared-prefix workload through an engine. Zero-valued when the
 /// cache is disabled or the workload has no shared prefixes.
-pub const BENCH_SCHEMA_VERSION: f64 = 1.3;
+///
+/// 1.3 → 1.4 (PR 7): added the mandatory top-level `gateway` block
+/// (`requests`, `shed`, `replicas`) — HTTP traffic through the
+/// OpenAI-compatible gateway (DESIGN.md §10), measured by driving
+/// `/v1/completions` against a live replica pool. Zero-valued when the
+/// trajectory run has no HTTP leg.
+pub const BENCH_SCHEMA_VERSION: f64 = 1.4;
+
+/// Gateway traffic counters for the trajectory's HTTP leg (1.4):
+/// completions admitted, completions shed with 429, and the replica
+/// count they ran against.
+#[derive(Default)]
+pub struct GatewayTraffic {
+    pub requests: u64,
+    pub shed: u64,
+    pub replicas: u64,
+}
 
 /// One decode measurement: `tokens_per_s` is generated tokens per
 /// wall-second (`batch / mean step seconds`), `ms_per_step` the mean
@@ -303,16 +319,19 @@ pub fn compare_to_baseline(new: &Json, old: &Json, tol: f64)
 /// planner report the zero block. `prefix` (1.3) carries the
 /// prompt-prefix cache counters measured on a shared-prefix workload
 /// ([`crate::coordinator::PrefixCacheStats`]); `None` reports the zero
-/// block (cache disabled).
+/// block (cache disabled). `gateway` (1.4) carries the HTTP leg's
+/// traffic counters; `None` reports the zero block (no HTTP leg).
 #[allow(clippy::too_many_arguments)]
 pub fn trajectory_json(tag: &str, model: &str, backend: &str,
                        threads: usize, quick: bool,
                        decode: &[DecodePoint], prefill: &[PrefillPoint],
                        plan: Option<PlanStats>,
-                       prefix: Option<crate::coordinator::PrefixCacheStats>)
+                       prefix: Option<crate::coordinator::PrefixCacheStats>,
+                       gateway: Option<GatewayTraffic>)
     -> Json {
     let ps = plan.unwrap_or_default();
     let px = prefix.unwrap_or_default();
+    let gw = gateway.unwrap_or_default();
     let dec = decode.iter().map(|p| Json::obj(vec![
         ("batch", Json::num(p.batch as f64)),
         ("ms_per_step", Json::num(p.ms_per_step)),
@@ -349,6 +368,11 @@ pub fn trajectory_json(tag: &str, model: &str, backend: &str,
             ("hits", Json::num(px.hits as f64)),
             ("misses", Json::num(px.misses as f64)),
             ("bytes", Json::num(px.bytes as f64)),
+        ])),
+        ("gateway", Json::obj(vec![
+            ("requests", Json::num(gw.requests as f64)),
+            ("shed", Json::num(gw.shed as f64)),
+            ("replicas", Json::num(gw.replicas as f64)),
         ])),
     ])
 }
@@ -452,6 +476,16 @@ pub fn validate_trajectory_json(j: &Json) -> Result<()> {
             bail!("BENCH json: prefix_cache.{key} = {val} not finite ≥ 0");
         }
     }
+    // 1.4: the gateway traffic block is mandatory
+    let gw = j.get("gateway")
+        .context("BENCH json: missing object \"gateway\"")?;
+    for key in ["requests", "shed", "replicas"] {
+        let val = gw.get(key).and_then(Json::as_f64).with_context(
+            || format!("BENCH json: gateway missing number {key:?}"))?;
+        if !val.is_finite() || val < 0.0 {
+            bail!("BENCH json: gateway.{key} = {val} not finite ≥ 0");
+        }
+    }
     Ok(())
 }
 
@@ -510,8 +544,10 @@ mod tests {
             hits: 3, misses: 2, evictions: 0, insertions: 2,
             bytes: 1 << 18, entries: 2,
         };
+        let gateway = GatewayTraffic { requests: 6, shed: 1, replicas: 1 };
         trajectory_json("test", "sim-130m", "reference", 4, true,
-                        &decode, &prefill, Some(plan), Some(prefix))
+                        &decode, &prefill, Some(plan), Some(prefix),
+                        Some(gateway))
     }
 
     #[test]
@@ -533,7 +569,7 @@ mod tests {
         for key in ["schema_version", "pr", "model", "backend", "threads",
                     "quick", "decode", "prefill",
                     "batch_speedup_b16_vs_b1", "plan_cache",
-                    "prefix_cache"] {
+                    "prefix_cache", "gateway"] {
             let j = sample_doc();
             let mut m = j.as_obj().unwrap().clone();
             m.remove(key);
@@ -701,10 +737,40 @@ mod tests {
             &cfg, "prefill", Some(512), 1);
         let prefill = vec![prefill_point(&pcost, 512, 0.05)];
         let j = trajectory_json("test", "sim-130m", "xla", 1, true,
-                                &decode, &prefill, None, None);
+                                &decode, &prefill, None, None, None);
         validate_trajectory_json(&j).unwrap();
         assert_eq!(j.at(&["plan_cache", "plans_built"])
                    .and_then(Json::as_f64), Some(0.0));
+    }
+
+    #[test]
+    fn trajectory_schema_pins_gateway_fields() {
+        // each gateway counter is individually mandatory (1.4)
+        for key in ["requests", "shed", "replicas"] {
+            let j = sample_doc();
+            let mut m = j.as_obj().unwrap().clone();
+            let mut gw = m.get("gateway").unwrap()
+                .as_obj().unwrap().clone();
+            gw.remove(key);
+            m.insert("gateway".into(), Json::Obj(gw));
+            let e = validate_trajectory_json(&Json::Obj(m))
+                .expect_err(&format!("must reject missing {key}"));
+            assert!(e.to_string().contains("gateway"), "{e}");
+        }
+        // negative counters are schema violations, not measurements
+        let j = sample_doc();
+        let mut m = j.as_obj().unwrap().clone();
+        let mut gw = m.get("gateway").unwrap().as_obj().unwrap().clone();
+        gw.insert("shed".into(), Json::num(-1.0));
+        m.insert("gateway".into(), Json::Obj(gw));
+        assert!(validate_trajectory_json(&Json::Obj(m)).is_err());
+        // a run with no HTTP leg reports the zero block and validates
+        // (exercised by trajectory_schema_pins_plan_cache_fields's
+        // all-None call); the sample doc carries real traffic
+        assert_eq!(sample_doc().at(&["gateway", "requests"])
+                   .and_then(Json::as_f64), Some(6.0));
+        assert_eq!(sample_doc().at(&["gateway", "shed"])
+                   .and_then(Json::as_f64), Some(1.0));
     }
 
     #[test]

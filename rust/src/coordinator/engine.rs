@@ -31,7 +31,7 @@ use super::batcher::{ActiveSeq, Admission, Batcher};
 use super::prefix_cache::PrefixCache;
 use super::request::{channel, FinishReason, GenRequest, GenerateParams,
                      ResponseSink, ResponseStream, Sampling};
-use super::metrics::Metrics;
+use super::metrics::{InFlightGauge, Metrics};
 use crate::runtime::{argmax_last, Backend, CacheState, Manifest,
                      SessionState};
 use crate::tensor::Tensor;
@@ -46,6 +46,9 @@ pub struct EngineConfig {
     /// byte budget of the prompt-prefix cache (DESIGN.md §9); 0 disables
     /// it (every admission prefills cold, as before PR 6)
     pub prefix_cache_bytes: usize,
+    /// process-wide in-flight gauge shared across replicas (and read by
+    /// the gateway's admission control); `None` keeps a private one
+    pub in_flight_gauge: Option<Arc<InFlightGauge>>,
 }
 
 impl Default for EngineConfig {
@@ -54,7 +57,8 @@ impl Default for EngineConfig {
                        idle_poll: Duration::from_millis(2),
                        // a few hundred sim-config entries; bounded and
                        // cheap next to the weights
-                       prefix_cache_bytes: 16 << 20 }
+                       prefix_cache_bytes: 16 << 20,
+                       in_flight_gauge: None }
     }
 }
 
@@ -77,6 +81,10 @@ enum Msg {
 pub struct EngineHandle {
     tx: mpsc::Sender<Msg>,
     pub metrics: Arc<Metrics>,
+    /// decode slots this replica actually runs (batch_cap clamped to the
+    /// backend's executable width) — the capacity term in the gateway's
+    /// Retry-After estimate
+    pub slots: usize,
     join: Option<thread::JoinHandle<()>>,
     next_id: std::sync::atomic::AtomicU64,
 }
@@ -95,7 +103,7 @@ impl EngineHandle {
     /// Lower-level entry taking a pre-built request (caller-chosen id;
     /// ids share the cancel namespace with `generate`-assigned ones).
     pub fn submit_req(&self, req: GenRequest) -> ResponseStream {
-        Metrics::inc(&self.metrics.requests_submitted, 1);
+        self.metrics.submitted();
         let (sink, mut stream) = channel(req.id);
         // Mutex because CancelFn must be Sync and mpsc::Sender is not on
         // older toolchains; cancels are rare, contention is irrelevant
@@ -141,7 +149,7 @@ impl EngineHandle {
     pub fn session_resume(&self, state: SessionState,
                           continuation: Vec<i32>, params: GenerateParams)
         -> ResponseStream {
-        Metrics::inc(&self.metrics.requests_submitted, 1);
+        self.metrics.submitted();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (sink, mut stream) = channel(id);
         let cancel_tx = Mutex::new(self.tx.clone());
@@ -220,7 +228,11 @@ impl Engine {
     /// (any [`Backend`]: reference or XLA).
     pub fn start(session: Box<dyn Backend>, cfg: EngineConfig)
         -> Result<EngineHandle> {
-        let metrics = Arc::new(Metrics::new());
+        let mut m = Metrics::new();
+        if let Some(g) = &cfg.in_flight_gauge {
+            m.in_flight_shared = Arc::clone(g);
+        }
+        let metrics = Arc::new(m);
         let m2 = Arc::clone(&metrics);
         let (tx, rx) = mpsc::channel::<Msg>();
         let model_cfg = session.cfg().clone();
@@ -264,7 +276,7 @@ impl Engine {
         let join = thread::Builder::new()
             .name("engine".into())
             .spawn(move || eng.run(rx))?;
-        Ok(EngineHandle { tx, metrics, join: Some(join),
+        Ok(EngineHandle { tx, metrics, slots, join: Some(join),
                           next_id: std::sync::atomic::AtomicU64::new(1) })
     }
 
@@ -373,9 +385,9 @@ impl Engine {
             self.batcher.abort(slot);
             self.clear_slot_state(slot.0);
             if completed {
-                Metrics::inc(&self.metrics.requests_completed, 1);
+                self.metrics.settle_completed();
             } else {
-                Metrics::inc(&self.metrics.requests_cancelled, 1);
+                self.metrics.settle_cancelled();
             }
             if let Some(mut sink) = self.sinks[slot.0].take() {
                 if completed {
@@ -389,9 +401,9 @@ impl Engine {
             // queue_depth (submitted − admitted) stays exact
             Metrics::inc(&self.metrics.requests_admitted, 1);
             if completed {
-                Metrics::inc(&self.metrics.requests_completed, 1);
+                self.metrics.settle_completed();
             } else {
-                Metrics::inc(&self.metrics.requests_cancelled, 1);
+                self.metrics.settle_cancelled();
             }
             if let Some(mut sink) = self.take_sink(req.id) {
                 sink.finish(reason);
@@ -510,7 +522,7 @@ impl Engine {
         Metrics::inc(&self.metrics.tokens_generated, 1);
         if !alive {
             // stream dropped before its first token: implicit cancel
-            Metrics::inc(&self.metrics.requests_cancelled, 1);
+            self.metrics.settle_cancelled();
             self.batcher.slots.free(slot);
             self.clear_slot_state(slot.0);
             return Ok(());
@@ -531,7 +543,7 @@ impl Engine {
         if let Some(r) = self.batcher.advance(slot, first) {
             // count BEFORE releasing the stream so observers that sync on
             // Done always see the updated counters
-            Metrics::inc(&self.metrics.requests_completed, 1);
+            self.metrics.settle_completed();
             if let Some(mut sink) = self.sinks[slot.0].take() {
                 self.metrics.record_e2e(
                     sink.submitted_at.elapsed().as_secs_f64());
@@ -616,14 +628,14 @@ impl Engine {
             if !alive {
                 // the client dropped the stream mid-decode: implicit
                 // cancel — free the slot now, not at max_new_tokens
-                Metrics::inc(&self.metrics.requests_cancelled, 1);
+                self.metrics.settle_cancelled();
                 self.batcher.abort(seq.slot);
                 self.clear_slot_state(seq.slot.0);
                 self.sinks[seq.slot.0] = None;
                 continue;
             }
             if let Some(reason) = self.batcher.advance(seq.slot, tok) {
-                Metrics::inc(&self.metrics.requests_completed, 1);
+                self.metrics.settle_completed();
                 if let Some(mut sink) = self.sinks[seq.slot.0].take() {
                     self.metrics.record_e2e(
                         sink.submitted_at.elapsed().as_secs_f64());
@@ -636,7 +648,7 @@ impl Engine {
     }
 
     fn fail_slot(&mut self, slot: usize, id: u64, msg: &str) {
-        Metrics::inc(&self.metrics.requests_failed, 1);
+        self.metrics.settle_failed();
         if let Some(mut sink) = self.sinks[slot].take() {
             sink.fail(msg);
         } else if let Some(mut sink) = self.take_sink(id) {

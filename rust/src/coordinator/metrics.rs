@@ -1,10 +1,115 @@
 //! Serving metrics: counters + latency histograms, lock-light.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::util::stats::LogHistogram;
+
+/// Process-wide in-flight gauge. Every engine replica participating in
+/// one serving process publishes into the same gauge (wired up by
+/// `gateway::pool::build` / `EngineConfig::in_flight_gauge`), so the
+/// HTTP gateway's admission control, the wire server's `metrics` op and
+/// `/metrics` all read ONE consistent number — summing per-replica
+/// counters would double-count nothing today, but reading them at
+/// different instants can tear; the gauge can't. An engine without an
+/// injected gauge gets a private one, so the per-replica
+/// `Metrics::in_flight()` arithmetic and the gauge always agree for a
+/// single replica.
+#[derive(Default)]
+pub struct InFlightGauge {
+    cur: AtomicU64,
+}
+
+impl InFlightGauge {
+    pub fn new() -> InFlightGauge {
+        InFlightGauge::default()
+    }
+
+    pub fn inc(&self) {
+        self.cur.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Saturating decrement: a settle can never drive the gauge below
+    /// zero even if counters were manipulated out of order in tests.
+    pub fn dec(&self) {
+        let _ = self.cur.fetch_update(Ordering::Relaxed, Ordering::Relaxed,
+                                      |v| Some(v.saturating_sub(1)));
+    }
+
+    pub fn get(&self) -> u64 {
+        self.cur.load(Ordering::Relaxed)
+    }
+}
+
+/// Connection-error kinds surfaced by both frontends (wire server and
+/// HTTP gateway) in the `conn_errors_by_kind` breakdown.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConnErrorKind {
+    /// transport-level failure (reset, broken pipe, unexpected EOF)
+    Io,
+    /// malformed request (bad request line, headers, truncated body,
+    /// invalid JSON at the framing layer)
+    Protocol,
+    /// request exceeded a size limit (header block or body cap)
+    TooLarge,
+}
+
+impl ConnErrorKind {
+    pub const ALL: [ConnErrorKind; 3] = [
+        ConnErrorKind::Io, ConnErrorKind::Protocol, ConnErrorKind::TooLarge,
+    ];
+
+    /// Label value in `/metrics` and the wire `conn_errors_by_kind` map.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ConnErrorKind::Io => "io",
+            ConnErrorKind::Protocol => "protocol",
+            ConnErrorKind::TooLarge => "too_large",
+        }
+    }
+}
+
+/// Per-kind connection-error counters. One instance is shared by every
+/// frontend of the process (see `Server::with_conn_errors` and
+/// `gateway::Gateway::with_conn_errors`) so operators read a single
+/// breakdown regardless of which listener the error arrived on.
+#[derive(Default)]
+pub struct ConnErrors {
+    io: AtomicU64,
+    protocol: AtomicU64,
+    too_large: AtomicU64,
+}
+
+impl ConnErrors {
+    pub fn new() -> ConnErrors {
+        ConnErrors::default()
+    }
+
+    fn counter(&self, kind: ConnErrorKind) -> &AtomicU64 {
+        match kind {
+            ConnErrorKind::Io => &self.io,
+            ConnErrorKind::Protocol => &self.protocol,
+            ConnErrorKind::TooLarge => &self.too_large,
+        }
+    }
+
+    pub fn record(&self, kind: ConnErrorKind) {
+        self.counter(kind).fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn get(&self, kind: ConnErrorKind) -> u64 {
+        self.counter(kind).load(Ordering::Relaxed)
+    }
+
+    /// Sum over kinds — the number the wire `metrics` op has always
+    /// reported as `conn_errors`.
+    pub fn total(&self) -> u64 {
+        ConnErrorKind::ALL.iter().map(|&k| self.get(k)).sum()
+    }
+}
+
+pub type SharedInFlight = Arc<InFlightGauge>;
 
 #[derive(Default)]
 pub struct Metrics {
@@ -38,6 +143,9 @@ pub struct Metrics {
     /// histograms guarded by one mutex (recorded off the hot loop)
     hist: Mutex<Hists>,
     started: Mutex<Option<Instant>>,
+    /// shared across replicas when injected via
+    /// `EngineConfig::in_flight_gauge`; private to this replica otherwise
+    pub in_flight_shared: Arc<InFlightGauge>,
 }
 
 #[derive(Default)]
@@ -72,6 +180,33 @@ impl Metrics {
         let s = self.requests_submitted.load(Ordering::Relaxed);
         let a = self.requests_admitted.load(Ordering::Relaxed);
         s.saturating_sub(a)
+    }
+
+    /// A request entered this replica: bumps the submitted counter AND
+    /// the (possibly shared) in-flight gauge. Engines must pair every
+    /// call with exactly one `settle_*` call.
+    pub fn submitted(&self) {
+        Metrics::inc(&self.requests_submitted, 1);
+        self.in_flight_shared.inc();
+    }
+
+    /// Request settled successfully: counter up, gauge down.
+    pub fn settle_completed(&self) {
+        Metrics::inc(&self.requests_completed, 1);
+        self.in_flight_shared.dec();
+    }
+
+    /// Request settled with an error: counter up, gauge down.
+    pub fn settle_failed(&self) {
+        Metrics::inc(&self.requests_failed, 1);
+        self.in_flight_shared.dec();
+    }
+
+    /// Request settled by cancellation (explicit op, client disconnect,
+    /// or dropped response stream): counter up, gauge down.
+    pub fn settle_cancelled(&self) {
+        Metrics::inc(&self.requests_cancelled, 1);
+        self.in_flight_shared.dec();
     }
 
     /// Requests submitted but not yet settled (completed, failed, or
@@ -235,5 +370,47 @@ mod tests {
         assert_eq!(s.queue_depth, 3);
         assert_eq!(s.in_flight, 3);
         assert_eq!(s.cancelled, 2);
+    }
+
+    #[test]
+    fn shared_gauge_tracks_settles_across_replicas() {
+        let gauge = Arc::new(InFlightGauge::new());
+        let mut a = Metrics::new();
+        let mut b = Metrics::new();
+        a.in_flight_shared = Arc::clone(&gauge);
+        b.in_flight_shared = Arc::clone(&gauge);
+        a.submitted();
+        a.submitted();
+        b.submitted();
+        assert_eq!(gauge.get(), 3);
+        // per-replica counter arithmetic still agrees with its own load
+        assert_eq!(a.in_flight(), 2);
+        assert_eq!(b.in_flight(), 1);
+        a.settle_completed();
+        b.settle_cancelled();
+        assert_eq!(gauge.get(), 1);
+        a.settle_failed();
+        assert_eq!(gauge.get(), 0);
+        // saturating: an extra dec cannot wrap
+        gauge.dec();
+        assert_eq!(gauge.get(), 0);
+        assert_eq!(a.requests_completed.load(Ordering::Relaxed), 1);
+        assert_eq!(a.requests_failed.load(Ordering::Relaxed), 1);
+        assert_eq!(b.requests_cancelled.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn conn_errors_by_kind() {
+        let c = ConnErrors::new();
+        c.record(ConnErrorKind::Io);
+        c.record(ConnErrorKind::Protocol);
+        c.record(ConnErrorKind::Protocol);
+        c.record(ConnErrorKind::TooLarge);
+        assert_eq!(c.get(ConnErrorKind::Io), 1);
+        assert_eq!(c.get(ConnErrorKind::Protocol), 2);
+        assert_eq!(c.get(ConnErrorKind::TooLarge), 1);
+        assert_eq!(c.total(), 4);
+        assert_eq!(ConnErrorKind::Io.as_str(), "io");
+        assert_eq!(ConnErrorKind::TooLarge.as_str(), "too_large");
     }
 }

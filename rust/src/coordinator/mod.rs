@@ -23,7 +23,8 @@ pub mod slots;
 
 pub use batcher::{ActiveSeq, Admission, Batcher};
 pub use engine::{Engine, EngineConfig, EngineHandle, SingleStream};
-pub use metrics::{Metrics, Snapshot};
+pub use metrics::{ConnErrorKind, ConnErrors, InFlightGauge, Metrics,
+                  Snapshot};
 pub use prefix_cache::{PrefixCache, PrefixCacheStats};
 pub use request::{CancelFn, Event, FinishReason, GenRequest,
                   GenerateParams, ResponseStream, Sampling};

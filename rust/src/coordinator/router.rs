@@ -18,6 +18,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use super::engine::EngineHandle;
+use super::metrics::InFlightGauge;
 use super::request::{GenerateParams, ResponseStream};
 use crate::runtime::SessionState;
 use crate::util::error::Result;
@@ -25,16 +26,57 @@ use crate::util::error::Result;
 pub struct Router {
     replicas: Vec<Arc<EngineHandle>>,
     rr: AtomicU64,
+    /// shared in-flight gauge, when the replicas were built with one
+    /// (`gateway::pool::build`); lets `in_flight()` read one consistent
+    /// number instead of summing per-replica counters mid-settle
+    gauge: Option<Arc<InFlightGauge>>,
 }
 
 impl Router {
     pub fn new(replicas: Vec<Arc<EngineHandle>>) -> Router {
         assert!(!replicas.is_empty());
-        Router { replicas, rr: AtomicU64::new(0) }
+        Router { replicas, rr: AtomicU64::new(0), gauge: None }
+    }
+
+    /// Attach the shared gauge the replicas publish into.
+    pub fn with_gauge(mut self, gauge: Arc<InFlightGauge>) -> Router {
+        self.gauge = Some(gauge);
+        self
     }
 
     pub fn n_replicas(&self) -> usize {
         self.replicas.len()
+    }
+
+    /// Pool-wide in-flight requests: the shared gauge when one was
+    /// attached (tear-free), else the sum of per-replica counters.
+    pub fn in_flight(&self) -> u64 {
+        match &self.gauge {
+            Some(g) => g.get(),
+            None => (0..self.replicas.len())
+                .map(|i| self.load(i)).sum(),
+        }
+    }
+
+    /// Total decode slots across replicas — the pool's concurrency
+    /// capacity (the denominator in queue-delay estimates).
+    pub fn total_slots(&self) -> usize {
+        self.replicas.iter().map(|r| r.slots).sum()
+    }
+
+    /// Requests submitted but not yet admitted anywhere in the pool.
+    pub fn queue_depth(&self) -> u64 {
+        self.replicas.iter().map(|r| r.metrics.queue_depth()).sum()
+    }
+
+    /// Worst per-replica median end-to-end latency — the per-request
+    /// service estimate behind `Retry-After`. Takes each replica's
+    /// histogram lock, so callers keep it off the per-request hot path
+    /// (the gateway only consults it when it is already shedding).
+    pub fn e2e_p50(&self) -> f64 {
+        self.replicas.iter()
+            .map(|r| r.metrics.snapshot().e2e_p50)
+            .fold(0.0, f64::max)
     }
 
     /// In-flight load of replica i — the same `in_flight` number the

@@ -1,0 +1,300 @@
+//! Minimal HTTP/1.1 framing for the gateway (DESIGN.md §10).
+//!
+//! Hand-rolled on `std::io` per the crate's hermetic no-crate-deps rule:
+//! request-line + headers + `Content-Length` body, keep-alive by
+//! default, no chunked transfer coding (requests must carry a length;
+//! streaming responses are SSE over `Connection: close`). Size caps
+//! bound untrusted input before any allocation proportional to it.
+
+use std::io::{BufRead, Read, Write};
+
+/// Cap on one header line AND on the whole header block (431 on breach).
+pub const MAX_HEADER_BYTES: usize = 16 * 1024;
+/// Cap on a request body (413 on breach) — completion prompts are far
+/// below this; anything larger is hostile or misaddressed traffic.
+pub const MAX_BODY_BYTES: usize = 1 << 20;
+
+/// One parsed request. Header names are lowercased at parse time.
+pub struct Request {
+    pub method: String,
+    /// request target with any query string stripped
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter()
+            .find(|(n, _)| *n == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// `Connection: close` requested (HTTP/1.1 defaults to keep-alive).
+    pub fn wants_close(&self) -> bool {
+        self.header("connection")
+            .is_some_and(|v| v.eq_ignore_ascii_case("close"))
+    }
+}
+
+/// Why a request could not be read. The gateway maps these onto status
+/// codes and the shared `conn_errors_by_kind` breakdown.
+pub enum RecvError {
+    /// clean EOF, or the idle keep-alive read timed out: close quietly
+    Closed,
+    /// transport error mid-request
+    Io(std::io::Error),
+    /// a size cap was breached (→ 431 or 413, then close)
+    TooLarge(&'static str),
+    /// malformed request (→ 400, then close)
+    Bad(&'static str),
+}
+
+fn map_io(e: std::io::Error) -> RecvError {
+    use std::io::ErrorKind;
+    match e.kind() {
+        // the per-connection read timeout fires between requests on an
+        // idle keep-alive connection — that is a quiet close, which is
+        // also what bounds graceful drain on idle connections
+        ErrorKind::WouldBlock | ErrorKind::TimedOut => RecvError::Closed,
+        ErrorKind::InvalidData => RecvError::Bad("non-utf8 request head"),
+        ErrorKind::UnexpectedEof => RecvError::Bad("truncated request"),
+        _ => RecvError::Io(e),
+    }
+}
+
+/// Read one newline-terminated line of at most `cap` bytes (CR stripped).
+/// `Ok(None)` = clean EOF before any byte arrived.
+fn read_line_capped<R: BufRead>(r: &mut R, cap: usize)
+    -> Result<Option<String>, RecvError> {
+    let mut line = String::new();
+    let n = r.by_ref().take(cap as u64 + 1).read_line(&mut line)
+        .map_err(map_io)?;
+    if n == 0 {
+        return Ok(None);
+    }
+    if !line.ends_with('\n') {
+        // either the take() limit cut the line (too long) or the peer
+        // closed mid-line (truncated)
+        return Err(if n > cap {
+            RecvError::TooLarge("header line over cap")
+        } else {
+            RecvError::Bad("truncated request")
+        });
+    }
+    while line.ends_with('\n') || line.ends_with('\r') {
+        line.pop();
+    }
+    Ok(Some(line))
+}
+
+/// Parse one request off the connection. Blocking; respects any read
+/// timeout set on the underlying socket (mapped to [`RecvError::Closed`]
+/// between requests).
+pub fn read_request<R: BufRead>(r: &mut R) -> Result<Request, RecvError> {
+    let start = match read_line_capped(r, MAX_HEADER_BYTES)? {
+        None => return Err(RecvError::Closed),
+        Some(l) => l,
+    };
+    let mut parts = start.split_whitespace();
+    let method = parts.next().filter(|m| !m.is_empty())
+        .ok_or(RecvError::Bad("empty request line"))?
+        .to_string();
+    let target = parts.next()
+        .ok_or(RecvError::Bad("missing request target"))?;
+    let version = parts.next()
+        .ok_or(RecvError::Bad("missing http version"))?;
+    if !version.starts_with("HTTP/1.") {
+        return Err(RecvError::Bad("unsupported http version"));
+    }
+    // the gateway routes on the path alone
+    let path = target.split('?').next().unwrap_or(target).to_string();
+    let mut headers = Vec::new();
+    let mut total = start.len();
+    loop {
+        let line = read_line_capped(r, MAX_HEADER_BYTES)?
+            .ok_or(RecvError::Bad("truncated request"))?;
+        if line.is_empty() {
+            break; // end of headers
+        }
+        total += line.len();
+        if total > MAX_HEADER_BYTES {
+            return Err(RecvError::TooLarge("header block over cap"));
+        }
+        let (name, value) = line.split_once(':')
+            .ok_or(RecvError::Bad("malformed header line"))?;
+        headers.push((name.trim().to_ascii_lowercase(),
+                      value.trim().to_string()));
+    }
+    let len = match headers.iter()
+        .find(|(n, _)| n.as_str() == "content-length") {
+        Some((_, v)) => v.parse::<usize>()
+            .map_err(|_| RecvError::Bad("bad content-length"))?,
+        None => 0,
+    };
+    if len > MAX_BODY_BYTES {
+        return Err(RecvError::TooLarge("body over cap"));
+    }
+    let mut body = vec![0u8; len];
+    if len > 0 {
+        r.read_exact(&mut body).map_err(|e| match e.kind() {
+            std::io::ErrorKind::UnexpectedEof =>
+                RecvError::Bad("truncated body"),
+            _ => map_io(e),
+        })?;
+    }
+    Ok(Request { method, path, headers, body })
+}
+
+/// Canonical reason phrase for the statuses the gateway emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write one complete response (status + headers + `Content-Length`
+/// body). `extra` rides between the standard headers; `close` selects
+/// the `Connection` header.
+pub fn write_response(w: &mut impl Write, status: u16, content_type: &str,
+                      extra: &[(&str, String)], body: &[u8], close: bool)
+    -> std::io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n",
+        status, reason(status), content_type, body.len());
+    for (k, v) in extra {
+        head.push_str(k);
+        head.push_str(": ");
+        head.push_str(v);
+        head.push_str("\r\n");
+    }
+    head.push_str(if close {
+        "Connection: close\r\n\r\n"
+    } else {
+        "Connection: keep-alive\r\n\r\n"
+    });
+    w.write_all(head.as_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// One-shot HTTP client for tests and benches: send `method path` with
+/// `body`, `Connection: close`, read to EOF. Returns
+/// `(status, lowercased headers, body)`.
+pub fn http_roundtrip(addr: &std::net::SocketAddr, method: &str,
+                      path: &str, body: &[u8])
+    -> crate::util::error::Result<(u16, Vec<(String, String)>, Vec<u8>)> {
+    let mut s = std::net::TcpStream::connect(addr)?;
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: gateway\r\n\
+         Content-Type: application/json\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n",
+        body.len());
+    s.write_all(head.as_bytes())?;
+    s.write_all(body)?;
+    s.flush()?;
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf)?;
+    parse_response(&buf)
+}
+
+/// Split a complete response buffer into (status, headers, body).
+pub fn parse_response(buf: &[u8])
+    -> crate::util::error::Result<(u16, Vec<(String, String)>, Vec<u8>)> {
+    let pos = buf.windows(4).position(|w| w == b"\r\n\r\n")
+        .ok_or_else(|| crate::anyhow!("no header terminator in \
+                                       response"))?;
+    let head = std::str::from_utf8(&buf[..pos])?;
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().unwrap_or("");
+    let status: u16 = status_line.split_whitespace().nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| crate::anyhow!("bad status line: {status_line}"))?;
+    let mut headers = Vec::new();
+    for l in lines {
+        if let Some((n, v)) = l.split_once(':') {
+            headers.push((n.trim().to_ascii_lowercase(),
+                          v.trim().to_string()));
+        }
+    }
+    Ok((status, headers, buf[pos + 4..].to_vec()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_request_with_body_and_query() {
+        let raw = b"POST /v1/completions?debug=1 HTTP/1.1\r\n\
+                    Host: x\r\nContent-Length: 4\r\n\
+                    Connection: close\r\n\r\nabcd";
+        let mut r = Cursor::new(raw.to_vec());
+        let req = match read_request(&mut r) {
+            Ok(q) => q,
+            Err(_) => panic!("parse failed"),
+        };
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/completions");
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.body, b"abcd");
+        assert!(req.wants_close());
+    }
+
+    #[test]
+    fn eof_is_closed_and_truncations_are_bad() {
+        let mut r = Cursor::new(Vec::<u8>::new());
+        assert!(matches!(read_request(&mut r), Err(RecvError::Closed)));
+        // request line without its newline = peer died mid-line
+        let mut r = Cursor::new(b"GET /x HTTP/1.1".to_vec());
+        assert!(matches!(read_request(&mut r), Err(RecvError::Bad(_))));
+        // headers promise more body than arrives
+        let mut r = Cursor::new(
+            b"POST /x HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc".to_vec());
+        assert!(matches!(read_request(&mut r), Err(RecvError::Bad(_))));
+        let mut r = Cursor::new(b"GET /x FTP/9\r\n\r\n".to_vec());
+        assert!(matches!(read_request(&mut r), Err(RecvError::Bad(_))));
+    }
+
+    #[test]
+    fn size_caps_are_enforced() {
+        let long = format!("GET /{} HTTP/1.1\r\n\r\n",
+                           "a".repeat(MAX_HEADER_BYTES + 10));
+        let mut r = Cursor::new(long.into_bytes());
+        assert!(matches!(read_request(&mut r),
+                         Err(RecvError::TooLarge(_))));
+        let big_body = format!(
+            "POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            MAX_BODY_BYTES + 1);
+        let mut r = Cursor::new(big_body.into_bytes());
+        assert!(matches!(read_request(&mut r),
+                         Err(RecvError::TooLarge(_))));
+    }
+
+    #[test]
+    fn response_roundtrips_through_parser() {
+        let mut out = Vec::new();
+        write_response(&mut out, 429, "application/json",
+                       &[("Retry-After", "3".to_string())], b"{}", true)
+            .unwrap();
+        let (status, headers, body) = parse_response(&out).unwrap();
+        assert_eq!(status, 429);
+        assert_eq!(body, b"{}");
+        let ra = headers.iter().find(|(n, _)| n == "retry-after");
+        assert_eq!(ra.map(|(_, v)| v.as_str()), Some("3"));
+        let conn = headers.iter().find(|(n, _)| n == "connection");
+        assert_eq!(conn.map(|(_, v)| v.as_str()), Some("close"));
+    }
+}

@@ -1,0 +1,550 @@
+//! HTTP serving gateway (DESIGN.md §10): OpenAI-compatible
+//! `/v1/completions` over hand-rolled HTTP/1.1, in front of the same
+//! [`Router`] the wire server drives.
+//!
+//! * `http`   — request/response framing (size-capped, keep-alive)
+//! * `openai` — completions request/response shapes
+//! * `sse`    — `stream:true` → `text/event-stream` over v2 deltas
+//! * `pool`   — N engine replicas sharing one in-flight gauge
+//! * `shed`   — queue-depth admission control (`429` + `Retry-After`)
+//! * `prom`   — `/metrics` Prometheus text exposition
+//!
+//! Request lifecycle: accept (shared [`serve_listener`] plumbing with
+//! the wire server) → parse → route → admission check → tokenize with
+//! the SAME tokenizer as the wire path (so the prefix cache, keyed on
+//! token ids, hits identically for identical prompts) → drive the
+//! engine through [`server::pump_generate`] — the same delta pump the
+//! wire protocol uses, which is what makes HTTP and wire token ids
+//! bitwise-identical. Client disconnects propagate to engine
+//! cancellation: blocking requests are probed every few tokens,
+//! streaming requests notice on the failed SSE write; either way the
+//! decode slot frees mid-generation.
+//!
+//! Graceful drain: `GatewayHandle::drain` (or `POST /admin/drain`) stops
+//! admission (`503` on new completions, `503` on `/healthz`), the accept
+//! loop exits, and the connection pool's drop joins every in-flight
+//! handler — admitted streams run to completion before drain returns.
+
+pub mod http;
+pub mod openai;
+pub mod pool;
+pub mod prom;
+pub mod shed;
+pub mod sse;
+
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+use crate::coordinator::{ConnErrorKind, ConnErrors, Router};
+use crate::eval::Tokenizer;
+use crate::server::{pump_generate, serve_listener};
+use crate::util::error::Result;
+use crate::util::json::Json;
+
+use shed::ShedPolicy;
+
+pub struct GatewayConfig {
+    /// model id served (and pinned: requests naming another model 404)
+    pub model: String,
+    /// connection-handler threads (each keep-alive connection holds one
+    /// while it is being served)
+    pub threads: usize,
+    /// shed when the pool-wide admission queue exceeds this depth
+    pub max_queue_depth: usize,
+    /// idle keep-alive read timeout; also the bound on how long drain
+    /// waits for idle connections
+    pub keep_alive: Duration,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        GatewayConfig {
+            model: "sim-130m".into(),
+            threads: 8,
+            max_queue_depth: 64,
+            keep_alive: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Gateway-level counters (engine-level ones live in `Metrics`).
+#[derive(Default)]
+pub struct GatewayMetrics {
+    /// completion requests admitted past the shed check
+    pub requests: AtomicU64,
+    /// completion requests answered `429`
+    pub shed: AtomicU64,
+    /// every HTTP request dispatched, all routes
+    pub http_requests: AtomicU64,
+    /// requests currently inside a handler
+    pub active: AtomicU64,
+}
+
+struct GwInner {
+    router: Arc<Router>,
+    tok: Arc<Tokenizer>,
+    cfg: GatewayConfig,
+    metrics: GatewayMetrics,
+    conn_errors: Arc<ConnErrors>,
+    shed: ShedPolicy,
+    /// set = draining: refuse new work, let the accept loop exit
+    stop: Arc<AtomicBool>,
+    next_id: AtomicU64,
+}
+
+#[derive(Clone)]
+pub struct Gateway {
+    inner: Arc<GwInner>,
+}
+
+impl Gateway {
+    pub fn new(router: Arc<Router>, tok: Arc<Tokenizer>,
+               cfg: GatewayConfig) -> Gateway {
+        Gateway::with_conn_errors(router, tok, cfg,
+                                  Arc::new(ConnErrors::new()))
+    }
+
+    /// Share the connection-error breakdown with the wire server (see
+    /// `Server::with_conn_errors`): one process-wide count per kind.
+    pub fn with_conn_errors(router: Arc<Router>, tok: Arc<Tokenizer>,
+                            cfg: GatewayConfig,
+                            conn_errors: Arc<ConnErrors>) -> Gateway {
+        let shed = ShedPolicy { max_queue_depth: cfg.max_queue_depth };
+        Gateway {
+            inner: Arc::new(GwInner {
+                router, tok, cfg,
+                metrics: GatewayMetrics::default(),
+                conn_errors, shed,
+                stop: Arc::new(AtomicBool::new(false)),
+                next_id: AtomicU64::new(1),
+            }),
+        }
+    }
+
+    pub fn requests_total(&self) -> u64 {
+        self.inner.metrics.requests.load(Ordering::Relaxed)
+    }
+
+    pub fn shed_total(&self) -> u64 {
+        self.inner.metrics.shed.load(Ordering::Relaxed)
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.inner.router.n_replicas()
+    }
+
+    /// Serve on the calling thread until drained (see
+    /// [`GatewayHandle::drain`]). Returning implies every accepted
+    /// connection has been handled to completion.
+    pub fn serve(&self, addr: &str,
+                 on_bound: impl FnOnce(SocketAddr)) -> Result<()> {
+        let inner = Arc::clone(&self.inner);
+        let stop = Arc::clone(&self.inner.stop);
+        serve_listener(addr, self.inner.cfg.threads, Some(stop),
+                       on_bound,
+                       move |stream, peer| {
+                           handle_conn(&inner, stream, peer);
+                       })
+    }
+
+    /// Spawn the accept loop on its own thread and return a handle once
+    /// the listener is bound (port 0 supported).
+    pub fn start(&self, addr: &str) -> Result<GatewayHandle> {
+        let (txa, rxa) = mpsc::channel();
+        let gw = self.clone();
+        let addr = addr.to_string();
+        let join = thread::Builder::new()
+            .name("gateway-accept".into())
+            .spawn(move || gw.serve(&addr, |a| {
+                let _ = txa.send(a);
+            }))?;
+        match rxa.recv() {
+            Ok(a) => Ok(GatewayHandle {
+                addr: a,
+                inner: Arc::clone(&self.inner),
+                join,
+            }),
+            Err(_) => {
+                // serve() failed before binding: surface its error
+                match join.join() {
+                    Ok(Err(e)) => Err(e),
+                    _ => crate::bail!("gateway failed to start"),
+                }
+            }
+        }
+    }
+}
+
+pub struct GatewayHandle {
+    addr: SocketAddr,
+    inner: Arc<GwInner>,
+    join: thread::JoinHandle<Result<()>>,
+}
+
+impl GatewayHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn requests_total(&self) -> u64 {
+        self.inner.metrics.requests.load(Ordering::Relaxed)
+    }
+
+    pub fn shed_total(&self) -> u64 {
+        self.inner.metrics.shed.load(Ordering::Relaxed)
+    }
+
+    /// Graceful drain: stop accepting, refuse new completions with
+    /// `503`, finish every in-flight request (streams run to their
+    /// `[DONE]`), then return. Idle keep-alive connections are released
+    /// by their read timeout, so drain is bounded by
+    /// `keep_alive + the longest admitted request`.
+    pub fn drain(self) -> Result<()> {
+        self.inner.stop.store(true, Ordering::Relaxed);
+        match self.join.join() {
+            Ok(r) => r,
+            Err(_) => crate::bail!("gateway accept thread panicked"),
+        }
+    }
+}
+
+/// Non-destructive peer-liveness probe (single-owner variant of the wire
+/// server's `peer_alive`: one request owns this socket, so no lock).
+fn peer_alive_tcp(s: &TcpStream) -> bool {
+    if s.set_nonblocking(true).is_err() {
+        return false;
+    }
+    let mut byte = [0u8; 1];
+    let r = s.peek(&mut byte);
+    let restored = s.set_nonblocking(false).is_ok();
+    restored
+        && match r {
+            Ok(_) => true,
+            Err(e) => e.kind() == std::io::ErrorKind::WouldBlock,
+        }
+}
+
+fn handle_conn(inner: &Arc<GwInner>, stream: TcpStream,
+               peer: SocketAddr) {
+    // the read timeout doubles as the idle keep-alive limit AND the
+    // drain bound for idle connections (timeout → RecvError::Closed)
+    let _ = stream.set_read_timeout(Some(inner.cfg.keep_alive));
+    let mut reader = match stream.try_clone() {
+        Ok(s) => BufReader::new(s),
+        Err(_) => return,
+    };
+    let mut writer = stream;
+    loop {
+        let req = match http::read_request(&mut reader) {
+            Ok(r) => r,
+            Err(http::RecvError::Closed) => return,
+            Err(http::RecvError::Io(e)) => {
+                inner.conn_errors.record(ConnErrorKind::Io);
+                crate::log_warn!(
+                    "gateway: connection error from {peer}: {e}");
+                return;
+            }
+            Err(http::RecvError::TooLarge(what)) => {
+                inner.conn_errors.record(ConnErrorKind::TooLarge);
+                let status =
+                    if what.contains("body") { 413 } else { 431 };
+                let body = openai::error_json("invalid_request_error",
+                                              what).to_string();
+                let _ = http::write_response(&mut writer, status,
+                                             "application/json", &[],
+                                             body.as_bytes(), true);
+                return;
+            }
+            Err(http::RecvError::Bad(what)) => {
+                inner.conn_errors.record(ConnErrorKind::Protocol);
+                let body = openai::error_json("invalid_request_error",
+                                              what).to_string();
+                let _ = http::write_response(&mut writer, 400,
+                                             "application/json", &[],
+                                             body.as_bytes(), true);
+                return;
+            }
+        };
+        let close_after = req.wants_close()
+            || inner.stop.load(Ordering::Relaxed);
+        inner.metrics.http_requests.fetch_add(1, Ordering::Relaxed);
+        inner.metrics.active.fetch_add(1, Ordering::Relaxed);
+        let r = dispatch(inner, &req, &mut writer, close_after);
+        inner.metrics.active.fetch_sub(1, Ordering::Relaxed);
+        match r {
+            Ok(true) if !close_after
+                && !inner.stop.load(Ordering::Relaxed) => continue,
+            Ok(_) => return,
+            Err(e) => {
+                // response write failed: the peer is gone
+                inner.conn_errors.record(ConnErrorKind::Io);
+                crate::log_debug!(
+                    "gateway: write to {peer} failed: {e}");
+                return;
+            }
+        }
+    }
+}
+
+/// Route one request. `Ok(true)` = the connection may keep serving;
+/// `Ok(false)` = close (SSE responses and errors that poison framing).
+fn dispatch(inner: &Arc<GwInner>, req: &http::Request,
+            writer: &mut TcpStream, close_after: bool)
+    -> std::io::Result<bool> {
+    let draining = inner.stop.load(Ordering::Relaxed);
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            let (status, body) = if draining {
+                (503, "draining")
+            } else {
+                (200, "ok")
+            };
+            http::write_response(writer, status, "text/plain", &[],
+                                 body.as_bytes(), close_after)?;
+            Ok(true)
+        }
+        ("GET", "/metrics") => {
+            let text = metrics_text(inner);
+            http::write_response(writer, 200,
+                                 "text/plain; version=0.0.4", &[],
+                                 text.as_bytes(), close_after)?;
+            Ok(true)
+        }
+        ("GET", "/v1/models") => {
+            let body = openai::models_json(&inner.cfg.model).to_string();
+            http::write_response(writer, 200, "application/json", &[],
+                                 body.as_bytes(), close_after)?;
+            Ok(true)
+        }
+        ("POST", "/v1/completions") => {
+            completions(inner, req, writer, close_after, draining)
+        }
+        ("POST", "/admin/drain") => {
+            inner.stop.store(true, Ordering::Relaxed);
+            let body = Json::obj(vec![
+                ("draining", Json::Bool(true)),
+            ]).to_string();
+            http::write_response(writer, 202, "application/json", &[],
+                                 body.as_bytes(), true)?;
+            Ok(false)
+        }
+        (_, "/healthz") | (_, "/metrics") | (_, "/v1/models") => {
+            method_not_allowed(writer, "GET", close_after)
+        }
+        (_, "/v1/completions") | (_, "/admin/drain") => {
+            method_not_allowed(writer, "POST", close_after)
+        }
+        _ => {
+            let body = openai::error_json(
+                "invalid_request_error", "unknown route").to_string();
+            http::write_response(writer, 404, "application/json", &[],
+                                 body.as_bytes(), close_after)?;
+            Ok(true)
+        }
+    }
+}
+
+fn method_not_allowed(writer: &mut TcpStream, allow: &str,
+                      close_after: bool) -> std::io::Result<bool> {
+    let body = openai::error_json("invalid_request_error",
+                                  "method not allowed").to_string();
+    http::write_response(writer, 405, "application/json",
+                         &[("Allow", allow.to_string())],
+                         body.as_bytes(), close_after)?;
+    Ok(true)
+}
+
+fn error_response(writer: &mut TcpStream, status: u16, kind: &str,
+                  msg: &str, close_after: bool) -> std::io::Result<bool> {
+    let body = openai::error_json(kind, msg).to_string();
+    http::write_response(writer, status, "application/json", &[],
+                         body.as_bytes(), close_after)?;
+    Ok(true)
+}
+
+fn completions(inner: &Arc<GwInner>, req: &http::Request,
+               writer: &mut TcpStream, close_after: bool, draining: bool)
+    -> std::io::Result<bool> {
+    let body = match std::str::from_utf8(&req.body) {
+        Ok(b) => b,
+        Err(_) => return error_response(writer, 400,
+                                        "invalid_request_error",
+                                        "body is not valid utf-8",
+                                        close_after),
+    };
+    let j = match Json::parse(body) {
+        Ok(j) => j,
+        Err(e) => return error_response(writer, 400,
+                                        "invalid_request_error",
+                                        &format!("bad json: {e}"),
+                                        close_after),
+    };
+    let c = match openai::parse_completion(&j) {
+        Ok(c) => c,
+        Err(m) => return error_response(writer, 400,
+                                        "invalid_request_error", &m,
+                                        close_after),
+    };
+    if let Some(m) = &c.model {
+        if m != &inner.cfg.model {
+            return error_response(writer, 404, "invalid_request_error",
+                                  &format!("model not found: {m}"),
+                                  close_after);
+        }
+    }
+    if draining {
+        return error_response(writer, 503, "overloaded",
+                              "server is draining", close_after);
+    }
+    // ---- admission control -------------------------------------------
+    let queued = inner.router.queue_depth();
+    if inner.shed.should_shed(queued) {
+        inner.metrics.shed.fetch_add(1, Ordering::Relaxed);
+        let ra = ShedPolicy::retry_after_s(queued,
+                                           inner.router.total_slots(),
+                                           inner.router.e2e_p50());
+        let body = openai::error_json(
+            "overloaded",
+            "admission queue is full, retry later").to_string();
+        http::write_response(writer, 429, "application/json",
+                             &[("Retry-After", ra.to_string())],
+                             body.as_bytes(), close_after)?;
+        return Ok(true);
+    }
+    inner.metrics.requests.fetch_add(1, Ordering::Relaxed);
+    let id = format!("cmpl-{}",
+                     inner.next_id.fetch_add(1, Ordering::Relaxed));
+    let created = SystemTime::now().duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs()).unwrap_or(0);
+    let model = inner.cfg.model.clone();
+    // the SAME tokenizer as the wire path: the prefix cache is keyed on
+    // token ids, so identical prompts hit it from either frontend
+    let prompt_ids = inner.tok.encode(&c.prompt);
+    let prompt_len = prompt_ids.len();
+    let params = c.params;
+    let t0 = Instant::now();
+    let stream = inner.router.generate(prompt_ids.clone(),
+                                       params.clone());
+
+    if !c.stream {
+        // ---- blocking ------------------------------------------------
+        // probe the socket every few tokens so a vanished client frees
+        // its decode slot instead of pinning it to max_tokens
+        let probe = writer.try_clone();
+        let mut since_probe = 0usize;
+        let out = pump_generate(stream, &inner.tok,
+                                &params.stop_strings, t0, |ts, _| {
+            since_probe += ts.len().max(1);
+            if since_probe >= 16 {
+                since_probe = 0;
+                if let Ok(p) = &probe {
+                    if !peer_alive_tcp(p) {
+                        crate::bail!("client disconnected");
+                    }
+                }
+            }
+            Ok(())
+        });
+        if out.client_gone {
+            return Ok(false); // pump already cancelled the engine side
+        }
+        if let Some(e) = out.error {
+            let body = openai::error_json("server_error", &e)
+                .to_string();
+            http::write_response(writer, 500, "application/json", &[],
+                                 body.as_bytes(), close_after)?;
+            return Ok(true);
+        }
+        // usage counts generated tokens; echo mutates text/ids after
+        let completion_tokens = out.tokens.len();
+        let mut text = out.text;
+        let mut tokens = out.tokens;
+        if params.echo {
+            text = format!("{}{}", c.prompt, text);
+            let mut all = prompt_ids;
+            all.extend(&tokens);
+            tokens = all;
+        }
+        let body = openai::completion_json(
+            &id, &model, created, &text, &tokens,
+            openai::finish_reason(&out.reason), prompt_len,
+            completion_tokens).to_string();
+        http::write_response(writer, 200, "application/json", &[],
+                             body.as_bytes(), close_after)?;
+        return Ok(true);
+    }
+
+    // ---- streaming (SSE) ---------------------------------------------
+    writer.write_all(sse::PREAMBLE.as_bytes())?;
+    writer.flush()?;
+    if params.echo {
+        let chunk = openai::chunk_json(&id, &model, created, &c.prompt,
+                                       &prompt_ids, None, None);
+        writer.write_all(sse::event(&chunk.to_string()).as_bytes())?;
+        writer.flush()?;
+    }
+    let out = {
+        let w = &mut *writer;
+        pump_generate(stream, &inner.tok, &params.stop_strings, t0,
+                      |ts, text| {
+            // one SSE chunk per engine delta — the same cadence as the
+            // wire protocol's v2 delta frames; a failed write here is a
+            // client disconnect and cancels the engine side, freeing
+            // the slot mid-decode
+            let chunk = openai::chunk_json(&id, &model, created, text,
+                                           ts, None, None);
+            w.write_all(sse::event(&chunk.to_string()).as_bytes())?;
+            w.flush()?;
+            Ok(())
+        })
+    };
+    if out.client_gone {
+        return Ok(false);
+    }
+    if let Some(e) = out.error {
+        let chunk = openai::error_json("server_error", &e);
+        let _ = writer.write_all(
+            sse::event(&chunk.to_string()).as_bytes());
+        let _ = writer.write_all(sse::DONE_FRAME.as_bytes());
+        let _ = writer.flush();
+        return Ok(false);
+    }
+    let usage = openai::usage_json(prompt_len, out.tokens.len());
+    let last = openai::chunk_json(&id, &model, created, "", &[],
+                                  Some(openai::finish_reason(&out.reason)),
+                                  Some(usage));
+    writer.write_all(sse::event(&last.to_string()).as_bytes())?;
+    writer.write_all(sse::DONE_FRAME.as_bytes())?;
+    writer.flush()?;
+    Ok(false) // SSE bodies are EOF-delimited
+}
+
+fn metrics_text(inner: &GwInner) -> String {
+    let mut p = prom::Prom::new();
+    prom::pool_samples(&mut p, &inner.router);
+    let m = &inner.metrics;
+    p.sample("m2_gateway_requests_total",
+             "completion requests admitted by the gateway", "counter",
+             &[], m.requests.load(Ordering::Relaxed) as f64);
+    p.sample("m2_gateway_shed_total",
+             "completion requests shed with 429 by admission control",
+             "counter", &[], m.shed.load(Ordering::Relaxed) as f64);
+    p.sample("m2_gateway_http_requests_total",
+             "HTTP requests dispatched, all routes", "counter", &[],
+             m.http_requests.load(Ordering::Relaxed) as f64);
+    p.sample("m2_gateway_active",
+             "HTTP requests currently inside a handler", "gauge", &[],
+             m.active.load(Ordering::Relaxed) as f64);
+    p.sample("m2_gateway_draining",
+             "1 while graceful drain is in progress", "gauge", &[],
+             if inner.stop.load(Ordering::Relaxed) { 1.0 } else { 0.0 });
+    p.sample("m2_gateway_replicas",
+             "engine replicas behind the gateway", "gauge", &[],
+             inner.router.n_replicas() as f64);
+    prom::conn_error_samples(&mut p, &inner.conn_errors);
+    p.render()
+}

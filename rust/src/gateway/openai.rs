@@ -1,0 +1,249 @@
+//! OpenAI-compatible request/response shapes for `/v1/completions`.
+//!
+//! The subset that maps cleanly onto [`GenerateParams`]: `prompt`
+//! (string, or a one-element array), `max_tokens`, `temperature`,
+//! `top_p`, `top_k`, `seed`, `stop` (string or array), `echo`, `stream`.
+//! Absent sampling fields are NOT defaulted onto the params — an absent
+//! `temperature` keeps greedy decoding, so the same prompt through HTTP
+//! and through the wire protocol samples bitwise-identically (the parity
+//! the integration suite pins). Each `choices[0]` carries a non-standard
+//! `token_ids` array precisely to make that parity testable end-to-end.
+
+use crate::coordinator::{FinishReason, GenerateParams};
+use crate::util::json::Json;
+
+/// One parsed completion request.
+pub struct CompletionRequest {
+    pub prompt: String,
+    pub params: GenerateParams,
+    pub stream: bool,
+    pub model: Option<String>,
+}
+
+/// Parse a `/v1/completions` body. Errors are client-facing messages
+/// (the gateway wraps them in the OpenAI error envelope with a 400).
+pub fn parse_completion(j: &Json) -> Result<CompletionRequest, String> {
+    let pj = j.get("prompt")
+        .ok_or_else(|| "missing required field: prompt".to_string())?;
+    let prompt = if let Some(s) = pj.as_str() {
+        s.to_string()
+    } else if let Some(a) = pj.as_arr() {
+        if a.len() != 1 {
+            return Err("prompt arrays must contain exactly one string \
+                        (batched completions are not supported)".into());
+        }
+        a[0].as_str()
+            .ok_or_else(|| "prompt array elements must be strings"
+                        .to_string())?
+            .to_string()
+    } else {
+        return Err("prompt must be a string".into());
+    };
+    if j.get("n").and_then(Json::as_u64).unwrap_or(1) != 1 {
+        return Err("n must be 1 (parallel choices are not supported)"
+                   .into());
+    }
+    let mut p = GenerateParams::new()
+        .max_new_tokens(j.get("max_tokens").and_then(Json::as_u64)
+                        .unwrap_or(16) as usize)
+        .seed(j.get("seed").and_then(Json::as_u64).unwrap_or(0));
+    if let Some(k) = j.get("top_k").and_then(Json::as_u64) {
+        p = p.top_k(k as usize);
+    }
+    if let Some(tp) = j.get("top_p").and_then(Json::as_f64) {
+        p = p.top_p(tp as f32);
+    }
+    if let Some(t) = j.get("temperature").and_then(Json::as_f64) {
+        // only when present: setting any temperature switches the
+        // sampler resolution away from greedy (see GenerateParams)
+        p = p.temperature(t as f32);
+    }
+    match j.get("stop") {
+        Some(s) => {
+            if let Some(one) = s.as_str() {
+                p = p.stop_string(one);
+            } else if let Some(arr) = s.as_arr() {
+                for v in arr {
+                    match v.as_str() {
+                        Some(ss) => p = p.stop_string(ss),
+                        None => return Err("stop array elements must be \
+                                            strings".into()),
+                    }
+                }
+            } else {
+                return Err("stop must be a string or an array of \
+                            strings".into());
+            }
+        }
+        None => {}
+    }
+    if j.get("echo").and_then(Json::as_bool).unwrap_or(false) {
+        p = p.echo(true);
+    }
+    Ok(CompletionRequest {
+        prompt,
+        params: p,
+        stream: j.get("stream").and_then(Json::as_bool).unwrap_or(false),
+        model: j.get("model").and_then(Json::as_str)
+            .map(|s| s.to_string()),
+    })
+}
+
+/// OpenAI finish_reason vocabulary: both stop-token and stop-string
+/// terminations surface as `"stop"`.
+pub fn finish_reason(r: &FinishReason) -> &'static str {
+    match r {
+        FinishReason::Length => "length",
+        FinishReason::StopToken | FinishReason::StopString => "stop",
+        FinishReason::Cancelled => "cancelled",
+    }
+}
+
+fn token_arr(token_ids: &[i32]) -> Json {
+    Json::Arr(token_ids.iter().map(|&t| Json::num(t as f64)).collect())
+}
+
+pub fn usage_json(prompt_tokens: usize, completion_tokens: usize) -> Json {
+    Json::obj(vec![
+        ("prompt_tokens", Json::num(prompt_tokens as f64)),
+        ("completion_tokens", Json::num(completion_tokens as f64)),
+        ("total_tokens",
+         Json::num((prompt_tokens + completion_tokens) as f64)),
+    ])
+}
+
+/// Non-streaming completion response.
+#[allow(clippy::too_many_arguments)]
+pub fn completion_json(id: &str, model: &str, created: u64, text: &str,
+                       token_ids: &[i32], finish: &str,
+                       prompt_tokens: usize, completion_tokens: usize)
+    -> Json {
+    Json::obj(vec![
+        ("id", Json::str(id)),
+        ("object", Json::str("text_completion")),
+        ("created", Json::num(created as f64)),
+        ("model", Json::str(model)),
+        ("choices", Json::Arr(vec![Json::obj(vec![
+            ("text", Json::str(text)),
+            ("index", Json::num(0.0)),
+            ("logprobs", Json::Null),
+            ("token_ids", token_arr(token_ids)),
+            ("finish_reason", Json::str(finish)),
+        ])])),
+        ("usage", usage_json(prompt_tokens, completion_tokens)),
+    ])
+}
+
+/// One streaming chunk: a delta while `finish` is `None`, the terminal
+/// chunk (empty text, finish reason + usage) otherwise.
+pub fn chunk_json(id: &str, model: &str, created: u64, text: &str,
+                  token_ids: &[i32], finish: Option<&str>,
+                  usage: Option<Json>) -> Json {
+    let mut fields = vec![
+        ("id", Json::str(id)),
+        ("object", Json::str("text_completion")),
+        ("created", Json::num(created as f64)),
+        ("model", Json::str(model)),
+        ("choices", Json::Arr(vec![Json::obj(vec![
+            ("text", Json::str(text)),
+            ("index", Json::num(0.0)),
+            ("logprobs", Json::Null),
+            ("token_ids", token_arr(token_ids)),
+            ("finish_reason", match finish {
+                Some(f) => Json::str(f),
+                None => Json::Null,
+            }),
+        ])])),
+    ];
+    if let Some(u) = usage {
+        fields.push(("usage", u));
+    }
+    Json::obj(fields)
+}
+
+/// `GET /v1/models` body.
+pub fn models_json(model: &str) -> Json {
+    Json::obj(vec![
+        ("object", Json::str("list")),
+        ("data", Json::Arr(vec![Json::obj(vec![
+            ("id", Json::str(model)),
+            ("object", Json::str("model")),
+            ("owned_by", Json::str("mamba2-serve")),
+        ])])),
+    ])
+}
+
+/// OpenAI error envelope.
+pub fn error_json(kind: &str, msg: &str) -> Json {
+    Json::obj(vec![("error", Json::obj(vec![
+        ("message", Json::str(msg)),
+        ("type", Json::str(kind)),
+        ("code", Json::Null),
+    ]))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Sampling;
+
+    #[test]
+    fn absent_sampling_fields_stay_greedy() {
+        let j = Json::parse(
+            r#"{"model":"m","prompt":"hi","max_tokens":8}"#).unwrap();
+        let r = parse_completion(&j).unwrap();
+        assert_eq!(r.prompt, "hi");
+        assert_eq!(r.params.max_new_tokens, 8);
+        assert!(matches!(r.params.sampling(), Sampling::Greedy));
+        assert!(!r.stream);
+        assert_eq!(r.model.as_deref(), Some("m"));
+    }
+
+    #[test]
+    fn sampling_fields_map_through() {
+        let j = Json::parse(
+            r#"{"prompt":["p"],"temperature":0.7,"top_p":0.9,
+                "seed":3,"stop":["\n\n","END"],"stream":true,
+                "echo":true}"#).unwrap();
+        let r = parse_completion(&j).unwrap();
+        assert!(r.stream);
+        assert!(r.params.echo);
+        assert_eq!(r.params.stop_strings,
+                   vec!["\n\n".to_string(), "END".to_string()]);
+        assert!(matches!(r.params.sampling(), Sampling::TopP { .. }));
+    }
+
+    #[test]
+    fn rejects_what_the_engine_cannot_serve() {
+        for body in [
+            r#"{"max_tokens":4}"#,                  // no prompt
+            r#"{"prompt":["a","b"]}"#,              // batched array
+            r#"{"prompt":"x","n":2}"#,              // parallel choices
+            r#"{"prompt":7}"#,                      // non-string prompt
+            r#"{"prompt":"x","stop":7}"#,           // bad stop type
+        ] {
+            let j = Json::parse(body).unwrap();
+            assert!(parse_completion(&j).is_err(), "accepted: {body}");
+        }
+    }
+
+    #[test]
+    fn response_shapes() {
+        let c = completion_json("cmpl-1", "m", 123, "out", &[5, 6],
+                                "length", 3, 2);
+        let s = c.to_string();
+        assert!(s.contains("\"object\":\"text_completion\""));
+        assert!(s.contains("\"token_ids\":[5,6]"));
+        assert!(s.contains("\"total_tokens\":5"));
+        let ch = chunk_json("cmpl-1", "m", 123, "d", &[5], None, None);
+        assert!(ch.to_string().contains("\"finish_reason\":null"));
+        let last = chunk_json("cmpl-1", "m", 123, "", &[],
+                              Some("stop"), Some(usage_json(1, 1)));
+        let ls = last.to_string();
+        assert!(ls.contains("\"finish_reason\":\"stop\""));
+        assert!(ls.contains("\"usage\""));
+        assert!(models_json("m").to_string().contains("\"id\":\"m\""));
+        assert!(error_json("invalid_request_error", "boom").to_string()
+                .contains("\"type\":\"invalid_request_error\""));
+    }
+}

@@ -1,0 +1,114 @@
+//! Replica pool construction: N engines behind one [`Router`], all
+//! publishing into one shared [`InFlightGauge`].
+//!
+//! Each replica owns its backend, plan cache, batcher, and prefix cache
+//! (SSM state never migrates — DESIGN.md §3). The shared gauge is what
+//! lets the gateway's admission control, the wire `metrics` op, and
+//! `/metrics` read one consistent in-flight number no matter which
+//! frontend the traffic arrived on.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::coordinator::{Engine, EngineConfig, InFlightGauge, Router};
+use crate::runtime::open_backend_replicas;
+use crate::util::error::Result;
+
+pub struct PoolConfig {
+    pub model: String,
+    /// backend selector: `auto` | `reference` | `xla`
+    pub backend: String,
+    pub artifacts: PathBuf,
+    pub replicas: usize,
+    pub batch_cap: usize,
+    pub prefix_cache_bytes: usize,
+    /// optional trained checkpoint (.mbt), loaded into every replica
+    pub checkpoint: Option<PathBuf>,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            model: "sim-130m".into(),
+            backend: "auto".into(),
+            artifacts: crate::artifacts_dir(),
+            replicas: 1,
+            batch_cap: 4,
+            prefix_cache_bytes: 16 << 20,
+            checkpoint: None,
+        }
+    }
+}
+
+/// Open the backends, start the engines, and wire them under a router
+/// that reads the shared gauge. Returns the router plus the gauge (the
+/// gateway also hands the gauge to anything else that needs the
+/// process-wide in-flight number).
+pub fn build(cfg: PoolConfig) -> Result<(Arc<Router>, Arc<InFlightGauge>)> {
+    let gauge = Arc::new(InFlightGauge::new());
+    let backends = open_backend_replicas(&cfg.model, &cfg.backend,
+                                         &cfg.artifacts, cfg.replicas)?;
+    let mut replicas = Vec::with_capacity(cfg.replicas);
+    for (i, mut backend) in backends.into_iter().enumerate() {
+        if i == 0 {
+            crate::log_info!(
+                "pool: backend={} platform={} model={} ({:.1}M params, \
+                 plan={}, weights={})",
+                backend.name(), backend.platform(), cfg.model,
+                backend.cfg().n_params_total as f64 / 1e6,
+                if backend.plan_stats().is_some() { "on" } else { "off" },
+                backend.weights_dtype());
+        }
+        if let Some(ckpt) = &cfg.checkpoint {
+            let w = crate::tensor::load_mbt(ckpt)?;
+            backend.load_weights(w)?;
+            crate::log_info!("pool: replica {i} loaded checkpoint {}",
+                             ckpt.display());
+        }
+        let ecfg = EngineConfig {
+            batch_cap: cfg.batch_cap,
+            prefix_cache_bytes: cfg.prefix_cache_bytes,
+            in_flight_gauge: Some(Arc::clone(&gauge)),
+            ..Default::default()
+        };
+        replicas.push(Arc::new(Engine::start(backend, ecfg)?));
+    }
+    crate::log_info!("pool: {} replica(s), batch_cap {}, prefix_cache \
+                      {} B/replica",
+                     cfg.replicas, cfg.batch_cap, cfg.prefix_cache_bytes);
+    let router = Arc::new(Router::new(replicas)
+                          .with_gauge(Arc::clone(&gauge)));
+    Ok((router, gauge))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::GenerateParams;
+
+    #[test]
+    fn pool_shares_one_gauge_across_replicas() {
+        let (router, gauge) = build(PoolConfig {
+            model: "tiny".into(),
+            backend: "reference".into(),
+            replicas: 2,
+            batch_cap: 2,
+            ..Default::default()
+        }).unwrap();
+        assert_eq!(router.n_replicas(), 2);
+        assert_eq!(router.total_slots(), 4);
+        assert_eq!(router.in_flight(), 0);
+        // a completed request passes through the gauge and settles it
+        let mut s = router.generate(
+            vec![1, 2, 3], GenerateParams::new().max_new_tokens(2));
+        let mut got = 0;
+        while let Some(ev) = s.next_event() {
+            if let crate::coordinator::Event::Tokens(t) = ev {
+                got += t.len();
+            }
+        }
+        assert!(got >= 1);
+        assert_eq!(gauge.get(), 0, "settled request must free the gauge");
+        assert_eq!(router.in_flight(), 0);
+    }
+}

@@ -1,0 +1,253 @@
+//! Prometheus text exposition (format 0.0.4), rendered by hand.
+//!
+//! `GET /metrics` serves one scrape assembled from `Metrics::snapshot`
+//! per replica (labelled `{replica="i"}`), pool-level gauges from the
+//! shared [`InFlightGauge`](crate::coordinator::InFlightGauge), the
+//! gateway's own request/shed counters, and the cross-frontend
+//! connection-error breakdown (`m2_conn_errors_total{kind=...}`). The
+//! builder emits each family's `# HELP`/`# TYPE` exactly once, in first-
+//! sample order, which is what makes the output valid exposition format.
+
+use crate::coordinator::{ConnErrorKind, ConnErrors, Router};
+
+/// Incremental exposition builder.
+#[derive(Default)]
+pub struct Prom {
+    out: String,
+    seen: Vec<String>,
+}
+
+impl Prom {
+    pub fn new() -> Prom {
+        Prom::default()
+    }
+
+    fn family(&mut self, name: &str, help: &str, kind: &str) {
+        if !self.seen.iter().any(|s| s == name) {
+            self.seen.push(name.to_string());
+            self.out.push_str("# HELP ");
+            self.out.push_str(name);
+            self.out.push(' ');
+            self.out.push_str(help);
+            self.out.push_str("\n# TYPE ");
+            self.out.push_str(name);
+            self.out.push(' ');
+            self.out.push_str(kind);
+            self.out.push('\n');
+        }
+    }
+
+    /// Append one sample. Non-finite values are clamped to 0 (the
+    /// exposition format has no NaN).
+    pub fn sample(&mut self, name: &str, help: &str, kind: &str,
+                  labels: &[(&str, String)], value: f64) {
+        self.family(name, help, kind);
+        let v = if value.is_finite() { value } else { 0.0 };
+        self.out.push_str(name);
+        if !labels.is_empty() {
+            self.out.push('{');
+            for (i, (k, val)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.out.push(',');
+                }
+                self.out.push_str(k);
+                self.out.push_str("=\"");
+                self.out.push_str(val);
+                self.out.push('"');
+            }
+            self.out.push('}');
+        }
+        self.out.push(' ');
+        self.out.push_str(&v.to_string());
+        self.out.push('\n');
+    }
+
+    pub fn render(self) -> String {
+        self.out
+    }
+}
+
+/// Per-replica + pool-level families for one engine pool. The gateway
+/// appends its own `m2_gateway_*` samples after this.
+pub fn pool_samples(p: &mut Prom, router: &Router) {
+    for i in 0..router.n_replicas() {
+        let s = router.replica(i).metrics.snapshot();
+        let l: &[(&str, String)] = &[("replica", i.to_string())];
+        p.sample("m2_requests_submitted_total",
+                 "requests submitted to this replica", "counter", l,
+                 s.submitted as f64);
+        p.sample("m2_requests_admitted_total",
+                 "requests that left the admission queue", "counter", l,
+                 s.admitted as f64);
+        p.sample("m2_requests_completed_total",
+                 "requests finished successfully", "counter", l,
+                 s.completed as f64);
+        p.sample("m2_requests_failed_total",
+                 "requests finished with an error", "counter", l,
+                 s.failed as f64);
+        p.sample("m2_requests_cancelled_total",
+                 "requests cancelled mid-flight", "counter", l,
+                 s.cancelled as f64);
+        p.sample("m2_queue_depth",
+                 "requests waiting for a decode slot", "gauge", l,
+                 s.queue_depth as f64);
+        p.sample("m2_in_flight",
+                 "requests submitted but not yet settled", "gauge", l,
+                 s.in_flight as f64);
+        p.sample("m2_tokens_generated_total",
+                 "tokens sampled", "counter", l,
+                 s.tokens_generated as f64);
+        p.sample("m2_prefill_tokens_total",
+                 "prompt tokens actually prefilled (prefix-cache hits \
+                  subtract the reused segment)", "counter", l,
+                 s.prefill_tokens as f64);
+        p.sample("m2_decode_steps_total",
+                 "batched decode steps", "counter", l,
+                 s.decode_steps as f64);
+        p.sample("m2_ttft_seconds_p50",
+                 "median time to first token", "gauge", l, s.ttft_p50);
+        p.sample("m2_ttft_seconds_p99",
+                 "p99 time to first token", "gauge", l, s.ttft_p99);
+        p.sample("m2_e2e_seconds_p50",
+                 "median request latency", "gauge", l, s.e2e_p50);
+        p.sample("m2_e2e_seconds_p99",
+                 "p99 request latency", "gauge", l, s.e2e_p99);
+        p.sample("m2_prefix_cache_hits_total",
+                 "prompt-prefix cache hits", "counter", l,
+                 s.prefix_hits as f64);
+        p.sample("m2_prefix_cache_misses_total",
+                 "prompt-prefix cache misses", "counter", l,
+                 s.prefix_misses as f64);
+        p.sample("m2_prefix_cache_evictions_total",
+                 "prompt-prefix cache evictions", "counter", l,
+                 s.prefix_evictions as f64);
+        p.sample("m2_prefix_cache_insertions_total",
+                 "prompt-prefix cache insertions", "counter", l,
+                 s.prefix_insertions as f64);
+        p.sample("m2_prefix_cache_bytes",
+                 "prompt-prefix cache residency", "gauge", l,
+                 s.prefix_bytes as f64);
+        p.sample("m2_prefix_cache_entries",
+                 "prompt-prefix cache entry count", "gauge", l,
+                 s.prefix_entries as f64);
+    }
+    p.sample("m2_in_flight_total",
+             "in-flight requests across all replicas (shared gauge)",
+             "gauge", &[], router.in_flight() as f64);
+    p.sample("m2_pool_slots",
+             "decode slots across all replicas", "gauge", &[],
+             router.total_slots() as f64);
+}
+
+/// The cross-frontend connection-error breakdown (shared between the
+/// wire server and the gateway, so there is deliberately no frontend
+/// label — one process-wide count per kind).
+pub fn conn_error_samples(p: &mut Prom, errors: &ConnErrors) {
+    for k in ConnErrorKind::ALL {
+        p.sample("m2_conn_errors_total",
+                 "connections ended by an error, by kind", "counter",
+                 &[("kind", k.as_str().to_string())],
+                 errors.get(k) as f64);
+    }
+}
+
+/// Validate exposition-format invariants on rendered output (test
+/// helper, also used by the integration suite): every non-comment line
+/// is `name[{labels}] value` with a finite value, and every metric name
+/// was introduced by HELP + TYPE.
+pub fn validate_exposition(text: &str) -> Result<(), String> {
+    let mut declared: Vec<&str> = Vec::new();
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# ") {
+            let mut it = rest.split_whitespace();
+            let tag = it.next().unwrap_or("");
+            let name = it.next().unwrap_or("");
+            if tag == "TYPE" {
+                if declared.contains(&name) {
+                    return Err(format!("duplicate TYPE for {name}"));
+                }
+                declared.push(name);
+            }
+            continue;
+        }
+        let (name_part, value) = line.rsplit_once(' ')
+            .ok_or_else(|| format!("no value in line: {line}"))?;
+        let name = name_part.split('{').next().unwrap_or(name_part);
+        if !declared.contains(&name) {
+            return Err(format!("sample before TYPE: {name}"));
+        }
+        let v: f64 = value.parse()
+            .map_err(|_| format!("bad value in line: {line}"))?;
+        if !v.is_finite() {
+            return Err(format!("non-finite value in line: {line}"));
+        }
+        if name_part.contains('{') && !name_part.ends_with('}') {
+            return Err(format!("unterminated labels in line: {line}"));
+        }
+    }
+    if declared.is_empty() {
+        return Err("empty exposition".into());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn help_type_emitted_once_per_family() {
+        let mut p = Prom::new();
+        p.sample("m2_x_total", "x", "counter",
+                 &[("replica", "0".to_string())], 1.0);
+        p.sample("m2_x_total", "x", "counter",
+                 &[("replica", "1".to_string())], 2.0);
+        p.sample("m2_y", "y", "gauge", &[], 0.5);
+        let out = p.render();
+        assert_eq!(out.matches("# TYPE m2_x_total counter").count(), 1);
+        assert!(out.contains("m2_x_total{replica=\"0\"} 1\n"));
+        assert!(out.contains("m2_x_total{replica=\"1\"} 2\n"));
+        assert!(out.contains("m2_y 0.5\n"));
+        validate_exposition(&out).unwrap();
+    }
+
+    #[test]
+    fn non_finite_values_are_clamped() {
+        let mut p = Prom::new();
+        p.sample("m2_nan", "n", "gauge", &[], f64::NAN);
+        p.sample("m2_inf", "i", "gauge", &[], f64::INFINITY);
+        let out = p.render();
+        assert!(out.contains("m2_nan 0\n"));
+        assert!(out.contains("m2_inf 0\n"));
+        validate_exposition(&out).unwrap();
+    }
+
+    #[test]
+    fn conn_error_kinds_all_present() {
+        let errors = ConnErrors::new();
+        errors.record(crate::coordinator::ConnErrorKind::Protocol);
+        let mut p = Prom::new();
+        conn_error_samples(&mut p, &errors);
+        let out = p.render();
+        assert!(out.contains("m2_conn_errors_total{kind=\"io\"} 0\n"));
+        assert!(out.contains(
+            "m2_conn_errors_total{kind=\"protocol\"} 1\n"));
+        assert!(out.contains(
+            "m2_conn_errors_total{kind=\"too_large\"} 0\n"));
+        validate_exposition(&out).unwrap();
+    }
+
+    #[test]
+    fn validator_rejects_malformed_expositions() {
+        assert!(validate_exposition("m2_x 1\n").is_err()); // no TYPE
+        assert!(validate_exposition("").is_err());
+        let dup = "# HELP m2_x x\n# TYPE m2_x gauge\n\
+                   # HELP m2_x x\n# TYPE m2_x gauge\nm2_x 1\n";
+        assert!(validate_exposition(dup).is_err());
+        let ok = "# HELP m2_x x\n# TYPE m2_x gauge\nm2_x 1\n";
+        assert!(validate_exposition(ok).is_ok());
+    }
+}

@@ -1,0 +1,70 @@
+//! Admission control: queue-depth shedding with an estimated-delay
+//! `Retry-After`.
+//!
+//! The gateway answers `429` instead of stalling the socket when the
+//! pool's admission queue is already past the configured depth. The
+//! retry hint is the estimated time for the queue to drain ahead of the
+//! caller: ceil(queued / pool slots) service rounds, each costing the
+//! observed median end-to-end latency (1 s fallback before any request
+//! has completed). Deliberately coarse — its job is to spread retries,
+//! not to promise a slot.
+
+/// Queue-depth admission policy.
+pub struct ShedPolicy {
+    /// shed when the pool-wide queue depth EXCEEDS this (0 = shed as
+    /// soon as anything is queued; admitted/decoding requests never
+    /// count against it)
+    pub max_queue_depth: usize,
+}
+
+impl ShedPolicy {
+    /// Should a new request be shed given the current queue depth?
+    pub fn should_shed(&self, queued: u64) -> bool {
+        queued > self.max_queue_depth as u64
+    }
+
+    /// Estimated seconds until the present queue has drained (the
+    /// `Retry-After` value). Always at least 1.
+    pub fn retry_after_s(queued: u64, capacity: usize, e2e_p50_s: f64)
+        -> u64 {
+        let per = if e2e_p50_s.is_finite() && e2e_p50_s > 0.0 {
+            e2e_p50_s
+        } else {
+            1.0
+        };
+        let rounds = (queued as f64 / capacity.max(1) as f64).ceil();
+        ((rounds * per).ceil() as u64).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sheds_strictly_above_the_limit() {
+        let p = ShedPolicy { max_queue_depth: 2 };
+        assert!(!p.should_shed(0));
+        assert!(!p.should_shed(2));
+        assert!(p.should_shed(3));
+        // depth 0: one queued request is already too many
+        let p0 = ShedPolicy { max_queue_depth: 0 };
+        assert!(!p0.should_shed(0));
+        assert!(p0.should_shed(1));
+    }
+
+    #[test]
+    fn retry_after_scales_with_queue_and_capacity() {
+        // 8 queued, 4 slots, 2 s median → 2 rounds × 2 s = 4 s
+        assert_eq!(ShedPolicy::retry_after_s(8, 4, 2.0), 4);
+        // more capacity drains faster
+        assert_eq!(ShedPolicy::retry_after_s(8, 8, 2.0), 2);
+        // no latency signal yet → 1 s per round fallback
+        assert_eq!(ShedPolicy::retry_after_s(3, 1, 0.0), 3);
+        // never less than one second, capacity never divides by zero
+        assert_eq!(ShedPolicy::retry_after_s(1, 0, 0.001), 1);
+        assert!(ShedPolicy::retry_after_s(0, 4, 5.0) >= 1);
+        // a NaN latency estimate falls back instead of poisoning the hint
+        assert_eq!(ShedPolicy::retry_after_s(2, 2, f64::NAN), 1);
+    }
+}

@@ -1,0 +1,75 @@
+//! Server-Sent Events framing for streaming completions.
+//!
+//! `stream:true` maps the engine's v2 per-step delta semantics onto SSE:
+//! one `data:` event per delta frame, a final chunk carrying the finish
+//! reason + usage, then the OpenAI-style `data: [DONE]` terminator. SSE
+//! responses are EOF-delimited (`Connection: close`) — no chunked
+//! transfer coding, so the framing stays trivially verifiable.
+
+/// Terminal frame every stream ends with.
+pub const DONE_FRAME: &str = "data: [DONE]\n\n";
+
+/// Response head for an SSE stream. No `Content-Length`: the body ends
+/// when the connection closes.
+pub const PREAMBLE: &str =
+    "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\n\
+     Cache-Control: no-cache\r\nConnection: close\r\n\r\n";
+
+/// Encode one SSE event: each payload line prefixed `data: `, the frame
+/// terminated by a blank line. (JSON payloads are single-line under
+/// `util::json`, but multi-line payloads still frame correctly.)
+pub fn event(payload: &str) -> String {
+    let mut out = String::with_capacity(payload.len() + 16);
+    for line in payload.split('\n') {
+        out.push_str("data: ");
+        out.push_str(line);
+        out.push('\n');
+    }
+    out.push('\n');
+    out
+}
+
+/// Extract the `data:` payloads from a raw SSE body (test-side decoder;
+/// the `[DONE]` sentinel is returned like any other payload).
+pub fn decode(body: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur: Option<String> = None;
+    for line in body.split('\n') {
+        if let Some(rest) = line.strip_prefix("data: ") {
+            match &mut cur {
+                Some(c) => {
+                    c.push('\n');
+                    c.push_str(rest);
+                }
+                None => cur = Some(rest.to_string()),
+            }
+        } else if line.is_empty() {
+            if let Some(c) = cur.take() {
+                out.push(c);
+            }
+        }
+    }
+    if let Some(c) = cur.take() {
+        out.push(c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_frames_and_decodes() {
+        let e = event("{\"x\":1}");
+        assert_eq!(e, "data: {\"x\":1}\n\n");
+        let multi = event("a\nb");
+        assert_eq!(multi, "data: a\ndata: b\n\n");
+        let body = format!("{}{}{}", event("one"), event("two"),
+                           DONE_FRAME);
+        assert_eq!(decode(&body),
+                   vec!["one".to_string(), "two".to_string(),
+                        "[DONE]".to_string()]);
+        assert_eq!(decode(&multi), vec!["a\nb".to_string()]);
+    }
+}

@@ -21,6 +21,7 @@
 pub mod bench_support;
 pub mod coordinator;
 pub mod eval;
+pub mod gateway;
 pub mod perf;
 pub mod runtime;
 pub mod server;

@@ -1,11 +1,16 @@
 //! mamba2-serve: the serving binary.
 //!
-//!   mamba2-serve --model sim-130m --addr 127.0.0.1:7433 --replicas 1
+//!   mamba2-serve --model sim-130m --addr 127.0.0.1:7433 --replicas 2 \
+//!                --http-addr 127.0.0.1:8080
 //!
 //! Starts engine replicas under the router and serves the line-JSON
-//! protocol, v1 (blocking generate) + v2 (streaming deltas, request
-//! ids, cancellation, stop tokens/strings, echo) — see server/mod.rs
-//! and the README protocol table.
+//! wire protocol, v1 (blocking generate) + v2 (streaming deltas,
+//! request ids, cancellation, stop tokens/strings, echo) — see
+//! server/mod.rs and the README protocol table. With `--http-addr` it
+//! additionally serves the OpenAI-compatible HTTP gateway
+//! (`/v1/completions` with SSE streaming, `/v1/models`, `/healthz`,
+//! `/metrics`) over the SAME replica pool — see gateway/mod.rs and
+//! DESIGN.md §10.
 //!
 //! Backend selection (`--backend`):
 //!   * `auto` (default) — PJRT/XLA over AOT artifacts when the binary was
@@ -18,11 +23,12 @@
 //! env var (see `mamba2_serve::artifacts_dir`).
 
 use std::sync::Arc;
+use std::time::Duration;
 
-use mamba2_serve::coordinator::{Engine, EngineConfig, Router};
+use mamba2_serve::coordinator::ConnErrors;
 use mamba2_serve::eval::corpus;
 use mamba2_serve::eval::Tokenizer;
-use mamba2_serve::runtime::{open_backend_replicas, Backend};
+use mamba2_serve::gateway::{pool, Gateway, GatewayConfig};
 use mamba2_serve::server::Server;
 use mamba2_serve::util::cli::Cli;
 use mamba2_serve::util::error::Result;
@@ -36,10 +42,15 @@ fn main() -> Result<()> {
               sim-2.7b)")
         .opt("backend", "auto", "inference backend: auto|reference|xla \
               (auto honours the M2_BACKEND env var)")
-        .opt("addr", "127.0.0.1:7433", "listen address")
+        .opt("addr", "127.0.0.1:7433", "listen address (wire protocol)")
+        .opt("http-addr", "", "OpenAI-compatible HTTP gateway listen \
+              address, e.g. 127.0.0.1:8080 (empty = wire protocol only)")
         .opt("replicas", "1", "engine replicas")
         .opt("batch-cap", "4", "continuous-batching slots per replica")
-        .opt("threads", "8", "server worker threads")
+        .opt("threads", "8", "worker threads per listener")
+        .opt("max-queue-depth", "64", "gateway admission control: shed \
+              completions with 429 once the pool-wide queue exceeds \
+              this depth")
         .opt("artifacts", "", "artifacts dir (default: M2_ARTIFACTS or \
               <crate>/artifacts; xla backend only)")
         .opt("checkpoint", "", "optional trained checkpoint (.mbt) \
@@ -80,49 +91,48 @@ fn main() -> Result<()> {
         cli.get("artifacts").into()
     };
     let model = cli.get("model");
-    let n_replicas = cli.get_usize("replicas");
-    let backends =
-        open_backend_replicas(&model, &cli.get("backend"), &dir,
-                              n_replicas)?;
-
-    let mut replicas = Vec::new();
-    for (i, mut backend) in backends.into_iter().enumerate() {
-        if i == 0 {
-            log_info!("backend={} platform={} model={} ({:.1}M params)",
-                      backend.name(), backend.platform(), model,
-                      backend.cfg().n_params_total as f64 / 1e6);
-            log_info!("lowering: {} (weights={})",
-                      if backend.plan_stats().is_some() {
-                          "plan-driven (build once, execute many; \
-                           --plan off for the hand-scheduled oracle)"
-                      } else {
-                          "hand-scheduled / compiled executables"
-                      },
-                      backend.weights_dtype());
-        }
-        if !cli.get("checkpoint").is_empty() {
-            let w = mamba2_serve::tensor::load_mbt(
-                std::path::Path::new(&cli.get("checkpoint")))?;
-            backend.load_weights(w)?;
-            log_info!("replica {i}: loaded checkpoint {}",
-                      cli.get("checkpoint"));
-        }
-        let cfg = EngineConfig {
-            batch_cap: cli.get_usize("batch-cap"),
-            prefix_cache_bytes: cli.get_usize("prefix-cache-mb") << 20,
-            ..Default::default()
-        };
-        replicas.push(Arc::new(Engine::start(backend, cfg)?));
-        log_info!("replica {i}: engine started (batch_cap={}, \
-                   prefix_cache={} MiB)",
-                  cli.get_usize("batch-cap"),
-                  cli.get_usize("prefix-cache-mb"));
-    }
-    let router = Arc::new(Router::new(replicas));
+    let (router, _gauge) = pool::build(pool::PoolConfig {
+        model: model.clone(),
+        backend: cli.get("backend"),
+        artifacts: dir,
+        replicas: cli.get_usize("replicas"),
+        batch_cap: cli.get_usize("batch-cap"),
+        prefix_cache_bytes: cli.get_usize("prefix-cache-mb") << 20,
+        checkpoint: if cli.get("checkpoint").is_empty() {
+            None
+        } else {
+            Some(cli.get("checkpoint").into())
+        },
+    })?;
     let tokenizer = Arc::new(Tokenizer::train(corpus::BUNDLED, 256));
     log_info!("tokenizer: vocab {}", tokenizer.vocab_size());
 
-    let server = Server::new(router, tokenizer);
+    // one connection-error breakdown shared by both frontends: the wire
+    // `metrics` op and `/metrics` report the same process-wide counts
+    let conn_errors = Arc::new(ConnErrors::new());
+
+    let http_addr = cli.get("http-addr");
+    let _gateway = if http_addr.is_empty() {
+        None
+    } else {
+        let gw = Gateway::with_conn_errors(
+            Arc::clone(&router), Arc::clone(&tokenizer),
+            GatewayConfig {
+                model: model.clone(),
+                threads: cli.get_usize("threads"),
+                max_queue_depth: cli.get_usize("max-queue-depth"),
+                keep_alive: Duration::from_secs(5),
+            },
+            Arc::clone(&conn_errors));
+        let h = gw.start(&http_addr)?;
+        log_info!("http gateway on {} (/v1/completions, /v1/models, \
+                   /healthz, /metrics; shed above queue depth {})",
+                  h.addr(), cli.get_usize("max-queue-depth"));
+        Some(h) // held for the life of the process
+    };
+
+    let server = Server::new(router, tokenizer)
+        .with_conn_errors(conn_errors);
     server.serve(&cli.get("addr"), cli.get_usize("threads"), |a| {
         log_info!("serving {model} on {a} (protocol v1+v2: streaming, \
                    cancellation, stop tokens/strings, session \

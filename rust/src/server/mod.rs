@@ -28,14 +28,15 @@
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::util::error::{Context, Result};
 
-use crate::coordinator::{CancelFn, Event, FinishReason, GenerateParams,
-                         ResponseStream, Router};
+use crate::coordinator::{CancelFn, ConnErrorKind, ConnErrors, Event,
+                         FinishReason, GenerateParams, ResponseStream,
+                         Router};
 use crate::eval::tokenizer::Tokenizer;
 use crate::runtime::SessionState;
 use crate::util::json::Json;
@@ -45,8 +46,10 @@ use crate::util::threadpool::ThreadPool;
 #[derive(Default)]
 pub struct ServerMetrics {
     /// connections that ended with an I/O or protocol-layer error
-    /// (surfaced as `conn_errors` by the `metrics` op)
-    pub conn_errors: AtomicU64,
+    /// (surfaced as `conn_errors` by the `metrics` op, with the per-kind
+    /// breakdown under `conn_errors_by_kind`); shareable with other
+    /// frontends via [`Server::with_conn_errors`]
+    pub conn_errors: Arc<ConnErrors>,
 }
 
 pub struct Server {
@@ -68,32 +71,94 @@ impl Server {
         Arc::clone(&self.metrics)
     }
 
+    /// Share a process-wide connection-error breakdown with other
+    /// frontends (the HTTP gateway), so the wire `metrics` op and the
+    /// gateway's `/metrics` report one combined count.
+    pub fn with_conn_errors(mut self, conn_errors: Arc<ConnErrors>)
+        -> Server {
+        self.metrics = Arc::new(ServerMetrics { conn_errors });
+        self
+    }
+
     /// Bind and serve until the process exits. Returns the bound address
     /// through the callback (port 0 supported for tests).
     pub fn serve(&self, addr: &str, threads: usize,
                  on_bound: impl FnOnce(std::net::SocketAddr)) -> Result<()> {
-        let listener = TcpListener::bind(addr)
-            .with_context(|| format!("bind {addr}"))?;
-        on_bound(listener.local_addr()?);
-        let pool = ThreadPool::new(threads);
-        for stream in listener.incoming() {
-            let stream = match stream {
-                Ok(s) => s,
-                Err(_) => continue,
-            };
-            let router = Arc::clone(&self.router);
-            let tok = Arc::clone(&self.tokenizer);
-            let sm = Arc::clone(&self.metrics);
-            pool.execute(move || {
-                if let Err(e) = handle_conn(stream, router, tok,
-                                            Arc::clone(&sm)) {
-                    crate::log_warn!("connection error: {e}");
-                    sm.conn_errors.fetch_add(1, Ordering::Relaxed);
-                }
-            });
-        }
-        Ok(())
+        let router = Arc::clone(&self.router);
+        let tok = Arc::clone(&self.tokenizer);
+        let sm = Arc::clone(&self.metrics);
+        serve_listener(addr, threads, None, on_bound,
+                       move |stream, peer| {
+            if let Err(e) = handle_conn(stream, Arc::clone(&router),
+                                        Arc::clone(&tok),
+                                        Arc::clone(&sm)) {
+                crate::log_warn!("connection error from {peer}: {e}");
+                sm.conn_errors.record(ConnErrorKind::Io);
+            }
+        })
     }
+}
+
+/// Shared accept-loop plumbing for both frontends (wire server and HTTP
+/// gateway): bind, report the bound address, and run `handler` on a
+/// `ThreadPool` of `threads` workers, passing each connection its peer
+/// address. With `stop = None` the loop accepts forever (the wire
+/// server's process-lifetime mode). With `Some(flag)` the listener runs
+/// non-blocking and the call RETURNS once the flag is set — and because
+/// the pool's `Drop` joins every in-flight handler first, returning from
+/// here is drain quiescence: no connection is still being served.
+pub fn serve_listener(
+    addr: &str, threads: usize, stop: Option<Arc<AtomicBool>>,
+    on_bound: impl FnOnce(std::net::SocketAddr),
+    handler: impl Fn(TcpStream, std::net::SocketAddr)
+        + Send + Sync + 'static,
+) -> Result<()> {
+    let listener = TcpListener::bind(addr)
+        .with_context(|| format!("bind {addr}"))?;
+    on_bound(listener.local_addr()?);
+    let pool = ThreadPool::new(threads);
+    let handler = Arc::new(handler);
+    match stop {
+        None => {
+            for stream in listener.incoming() {
+                let stream = match stream {
+                    Ok(s) => s,
+                    Err(_) => continue,
+                };
+                let peer = match stream.peer_addr() {
+                    Ok(p) => p,
+                    Err(_) => continue,
+                };
+                let h = Arc::clone(&handler);
+                pool.execute(move || h(stream, peer));
+            }
+        }
+        Some(stop) => {
+            listener.set_nonblocking(true)?;
+            while !stop.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, peer)) => {
+                        // accepted sockets can inherit the listener's
+                        // non-blocking mode on some platforms; handlers
+                        // expect blocking reads (+ their own timeouts)
+                        if stream.set_nonblocking(false).is_err() {
+                            continue;
+                        }
+                        let h = Arc::clone(&handler);
+                        pool.execute(move || h(stream, peer));
+                    }
+                    Err(e) if e.kind()
+                        == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(_) => {}
+                }
+            }
+        }
+    }
+    // dropping the pool joins all in-flight handlers (drain)
+    drop(pool);
+    Ok(())
 }
 
 fn handle_conn(stream: TcpStream, router: Arc<Router>,
@@ -169,11 +234,18 @@ fn conn_loop(mut reader: BufReader<TcpStream>,
                         ])),
                     ]));
                 }
+                let by_kind: Vec<(&str, Json)> = ConnErrorKind::ALL
+                    .iter()
+                    .map(|&k| (k.as_str(), Json::num(
+                        smetrics.conn_errors.get(k) as f64)))
+                    .collect();
                 write_frame(writer, &Json::obj(vec![
                     ("replicas", Json::Arr(reps)),
                     ("conn_errors", Json::num(
-                        smetrics.conn_errors.load(Ordering::Relaxed)
-                            as f64)),
+                        smetrics.conn_errors.total() as f64)),
+                    ("conn_errors_by_kind", Json::obj(by_kind)),
+                    ("in_flight_total",
+                     Json::num(router.in_flight() as f64)),
                 ]))?;
             }
             Some("cancel") => match req.get("id").and_then(Json::as_u64) {
@@ -537,16 +609,16 @@ fn hex_decode(s: &str) -> Result<Vec<u8>> {
 }
 
 /// Result of pumping one generation stream to completion.
-struct GenOutcome {
+pub(crate) struct GenOutcome {
     /// generated tokens, truncated at a stop-string match
-    tokens: Vec<i32>,
+    pub(crate) tokens: Vec<i32>,
     /// decoded text, truncated at a stop-string match
-    text: String,
-    reason: FinishReason,
-    ttft_ms: f64,
-    error: Option<String>,
+    pub(crate) text: String,
+    pub(crate) reason: FinishReason,
+    pub(crate) ttft_ms: f64,
+    pub(crate) error: Option<String>,
     /// the delta callback failed (client disconnected mid-stream)
-    client_gone: bool,
+    pub(crate) client_gone: bool,
 }
 
 /// Drive a [`ResponseStream`] to its terminal event, decoding tokens,
@@ -558,9 +630,9 @@ struct GenOutcome {
 /// result and `usage.completion_tokens`. On a match the engine side is
 /// stopped (freeing the batch slot) and the result truncated. A failing
 /// `on_delta` is treated as a client disconnect → cancel.
-fn pump_generate(mut stream: ResponseStream, tok: &Tokenizer,
-                 stop_strings: &[String], t0: Instant,
-                 mut on_delta: impl FnMut(&[i32], &str) -> Result<()>)
+pub(crate) fn pump_generate(
+    mut stream: ResponseStream, tok: &Tokenizer, stop_strings: &[String],
+    t0: Instant, mut on_delta: impl FnMut(&[i32], &str) -> Result<()>)
     -> GenOutcome {
     let mut scan = StopScan::new(stop_strings);
     let mut tokens: Vec<i32> = Vec::new();
@@ -846,7 +918,7 @@ fn write_frame(w: &Mutex<TcpStream>, j: &Json) -> Result<()> {
 /// every disconnect at the next delta write. Holding the write lock
 /// keeps the non-blocking toggle from racing a concurrent streaming
 /// pump's write.
-fn peer_alive(w: &Mutex<TcpStream>) -> bool {
+pub(crate) fn peer_alive(w: &Mutex<TcpStream>) -> bool {
     let g = w.lock().unwrap();
     if g.set_nonblocking(true).is_err() {
         return false;

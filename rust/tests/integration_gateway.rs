@@ -1,0 +1,548 @@
+//! Integration: the HTTP gateway end-to-end (bind :0, real sockets),
+//! hermetically on the pure-Rust reference backend. Pins the PR's
+//! acceptance surface:
+//!
+//!   * HTTP completions (blocking and SSE) produce bitwise-identical
+//!     token ids to the framed wire protocol over the SAME replica
+//!     pool and tokenizer,
+//!   * malformed HTTP gets a 4xx without killing the listener,
+//!   * a mid-stream client disconnect cancels the engine side and
+//!     frees the decode slot,
+//!   * admission control sheds with `429` + `Retry-After` while
+//!     admitted work completes, and `/metrics` exposes the shed
+//!     counter in valid Prometheus exposition format,
+//!   * graceful drain finishes in-flight streams before the listener
+//!     goes away,
+//!   * both frontends read ONE in-flight number (the shared gauge) and
+//!     ONE connection-error breakdown.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{mpsc, Arc, OnceLock};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use mamba2_serve::coordinator::{ConnErrors, GenerateParams, Router};
+use mamba2_serve::eval::{corpus, Tokenizer};
+use mamba2_serve::gateway::http::http_roundtrip;
+use mamba2_serve::gateway::pool::{self, PoolConfig};
+use mamba2_serve::gateway::prom::validate_exposition;
+use mamba2_serve::gateway::{sse, Gateway, GatewayConfig, GatewayHandle};
+use mamba2_serve::server::{Client, Frame, Server};
+use mamba2_serve::util::json::Json;
+
+/// One full serving stack: a replica pool with BOTH frontends on it —
+/// the HTTP gateway and the wire server share the router, tokenizer,
+/// in-flight gauge, and connection-error counters, exactly as `main`
+/// wires them.
+struct Stack {
+    http: SocketAddr,
+    wire: String,
+    router: Arc<Router>,
+    handle: Option<GatewayHandle>,
+}
+
+fn build_stack(replicas: usize, batch_cap: usize,
+               max_queue_depth: usize, keep_alive_ms: u64) -> Stack {
+    let (router, _gauge) = pool::build(PoolConfig {
+        model: "tiny".into(),
+        backend: "reference".into(),
+        replicas,
+        batch_cap,
+        ..Default::default()
+    }).unwrap();
+    let tok = Arc::new(Tokenizer::train(corpus::BUNDLED, 64));
+    let errs = Arc::new(ConnErrors::new());
+    let gw = Gateway::with_conn_errors(
+        Arc::clone(&router), Arc::clone(&tok),
+        GatewayConfig {
+            model: "tiny".into(),
+            threads: 4,
+            max_queue_depth,
+            keep_alive: Duration::from_millis(keep_alive_ms),
+        },
+        Arc::clone(&errs));
+    let h = gw.start("127.0.0.1:0").unwrap();
+    let http = h.addr();
+    let (tx, rx) = mpsc::channel();
+    let (r2, t2) = (Arc::clone(&router), Arc::clone(&tok));
+    thread::spawn(move || {
+        Server::new(r2, t2).with_conn_errors(errs)
+            .serve("127.0.0.1:0", 4, move |a| {
+                tx.send(a.to_string()).unwrap();
+            }).unwrap();
+    });
+    let wire = rx.recv_timeout(Duration::from_secs(30))
+        .expect("wire server bound");
+    Stack { http, wire, router, handle: Some(h) }
+}
+
+/// Shared stack (2 replicas — the seeded reference replicas are
+/// identical, so parity holds whichever one the router picks).
+fn fx() -> &'static Stack {
+    static S: OnceLock<Stack> = OnceLock::new();
+    S.get_or_init(|| build_stack(2, 4, 64, 2000))
+}
+
+fn post(addr: &SocketAddr, body: &str)
+    -> (u16, Vec<(String, String)>, Json) {
+    let (status, headers, raw) =
+        http_roundtrip(addr, "POST", "/v1/completions", body.as_bytes())
+            .unwrap();
+    let j = Json::parse(std::str::from_utf8(&raw).unwrap()).unwrap();
+    (status, headers, j)
+}
+
+fn token_ids(choice: &Json) -> Vec<i64> {
+    choice.get("token_ids").and_then(Json::as_arr).unwrap()
+        .iter().map(|t| t.as_i64().unwrap()).collect()
+}
+
+fn metric_value(exposition: &str, prefix: &str) -> f64 {
+    exposition.lines()
+        .find(|l| l.starts_with(prefix))
+        .unwrap_or_else(|| panic!("no sample starting {prefix:?}"))
+        .rsplit(' ').next().unwrap().parse().unwrap()
+}
+
+fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !cond() {
+        assert!(t0.elapsed() < Duration::from_secs(30),
+                "timed out waiting for {what}");
+        thread::sleep(Duration::from_millis(5));
+    }
+}
+
+// ----------------------------------------------------- basic routes ---
+
+#[test]
+fn healthz_models_and_unknown_routes() {
+    let s = fx();
+    let (st, _, body) =
+        http_roundtrip(&s.http, "GET", "/healthz", b"").unwrap();
+    assert_eq!(st, 200);
+    assert_eq!(body, b"ok");
+    let (st, _, body) =
+        http_roundtrip(&s.http, "GET", "/v1/models", b"").unwrap();
+    assert_eq!(st, 200);
+    let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    let m = &j.get("data").and_then(Json::as_arr).unwrap()[0];
+    assert_eq!(m.get("id").and_then(Json::as_str), Some("tiny"));
+    let (st, _, _) =
+        http_roundtrip(&s.http, "GET", "/nope", b"").unwrap();
+    assert_eq!(st, 404);
+}
+
+// ------------------------------------------------ wire/HTTP parity ---
+
+#[test]
+fn http_completion_matches_wire_token_ids() {
+    let s = fx();
+    // v1 wire path: greedy, explicit token budget
+    let mut c = Client::connect(&s.wire).unwrap();
+    let wire = c.generate("state space duality", 8).unwrap();
+    assert!(wire.get("error").is_none(), "{wire}");
+    let wire_ids: Vec<i64> = wire.get("tokens").and_then(Json::as_arr)
+        .unwrap().iter().map(|t| t.as_i64().unwrap()).collect();
+    assert_eq!(wire_ids.len(), 8);
+    // HTTP path: same prompt, same budget, no sampling fields (greedy)
+    let (st, _, j) = post(&s.http,
+        r#"{"model":"tiny","prompt":"state space duality","max_tokens":8}"#);
+    assert_eq!(st, 200, "{j}");
+    let choice = &j.get("choices").and_then(Json::as_arr).unwrap()[0];
+    assert_eq!(token_ids(choice), wire_ids,
+               "HTTP and wire token ids diverged");
+    assert_eq!(choice.get("text").and_then(Json::as_str),
+               wire.get("text").and_then(Json::as_str));
+    assert_eq!(choice.get("finish_reason").and_then(Json::as_str),
+               Some("length"));
+    assert_eq!(j.at(&["usage", "completion_tokens"])
+               .and_then(Json::as_u64), Some(8));
+}
+
+#[test]
+fn sse_stream_matches_wire_stream() {
+    let s = fx();
+    // wire v2 streaming: collect the per-event deltas + terminal usage
+    let mut c = Client::connect(&s.wire).unwrap();
+    let params = GenerateParams::new().max_new_tokens(10);
+    let mut wire_ids: Vec<i64> = Vec::new();
+    let mut wire_text = String::new();
+    let mut wire_usage = Json::Null;
+    let mut stream = c.generate_stream("compiler first caching", &params)
+        .unwrap();
+    while let Some(f) = stream.next_frame().unwrap() {
+        match f {
+            Frame::Delta { tokens, text } => {
+                wire_ids.extend(tokens.iter().map(|&t| t as i64));
+                wire_text.push_str(&text);
+            }
+            Frame::Done { finish_reason, usage } => {
+                assert_eq!(finish_reason, "length");
+                wire_usage = usage;
+            }
+            Frame::Error(e) => panic!("wire stream error: {e}"),
+        }
+    }
+    // HTTP SSE: same prompt/budget; Connection: close makes read-to-EOF
+    // return the full event stream
+    let (st, _, raw) = http_roundtrip(
+        &s.http, "POST", "/v1/completions",
+        br#"{"model":"tiny","prompt":"compiler first caching","max_tokens":10,"stream":true}"#)
+        .unwrap();
+    assert_eq!(st, 200);
+    let events = sse::decode(std::str::from_utf8(&raw).unwrap());
+    assert_eq!(events.last().map(String::as_str), Some("[DONE]"),
+               "stream must end with the DONE frame");
+    let chunks: Vec<Json> = events[..events.len() - 1].iter()
+        .map(|p| Json::parse(p).unwrap()).collect();
+    assert!(chunks.len() >= 2, "expected deltas + terminal chunk");
+    let mut http_ids: Vec<i64> = Vec::new();
+    let mut http_text = String::new();
+    for ch in &chunks[..chunks.len() - 1] {
+        let choice = &ch.get("choices").and_then(Json::as_arr).unwrap()[0];
+        assert!(choice.get("finish_reason").and_then(Json::as_str)
+                .is_none(), "delta chunks must not carry a finish");
+        http_ids.extend(token_ids(choice));
+        http_text.push_str(
+            choice.get("text").and_then(Json::as_str).unwrap());
+    }
+    let last = chunks.last().unwrap();
+    let lchoice = &last.get("choices").and_then(Json::as_arr).unwrap()[0];
+    assert_eq!(lchoice.get("finish_reason").and_then(Json::as_str),
+               Some("length"));
+    assert_eq!(http_ids, wire_ids, "SSE and wire deltas diverged");
+    assert_eq!(http_text, wire_text);
+    assert_eq!(last.at(&["usage", "completion_tokens"])
+               .and_then(Json::as_u64),
+               wire_usage.get("completion_tokens")
+               .and_then(Json::as_u64));
+}
+
+// ------------------------------------------------- malformed input ---
+
+#[test]
+fn malformed_http_gets_4xx_without_killing_the_listener() {
+    let s = fx();
+    // wrong method on a known route
+    let (st, headers, _) =
+        http_roundtrip(&s.http, "DELETE", "/v1/models", b"").unwrap();
+    assert_eq!(st, 405);
+    assert_eq!(headers.iter().find(|(k, _)| k == "allow")
+               .map(|(_, v)| v.as_str()), Some("GET"));
+    // bad JSON body
+    let (st, _, j) = post(&s.http, "{this is not json");
+    assert_eq!(st, 400);
+    assert!(j.at(&["error", "message"]).and_then(Json::as_str)
+            .unwrap().contains("json"));
+    // structurally valid JSON the engine cannot serve
+    let (st, _, _) = post(&s.http, r#"{"max_tokens":4}"#);
+    assert_eq!(st, 400);
+    // unknown model is a 404, not a generation
+    let (st, _, _) =
+        post(&s.http, r#"{"model":"gpt-99","prompt":"x"}"#);
+    assert_eq!(st, 404);
+    // truncated body: Content-Length promises more than is sent
+    let mut t = TcpStream::connect(s.http).unwrap();
+    t.write_all(b"POST /v1/completions HTTP/1.1\r\nHost: t\r\n\
+                  Content-Length: 50\r\n\r\nabc").unwrap();
+    t.shutdown(std::net::Shutdown::Write).unwrap();
+    let mut resp = Vec::new();
+    t.read_to_end(&mut resp).unwrap();
+    assert!(resp.starts_with(b"HTTP/1.1 400"),
+            "{}", String::from_utf8_lossy(&resp));
+    // oversized header block
+    let mut t = TcpStream::connect(s.http).unwrap();
+    let huge = "x".repeat(20 * 1024);
+    t.write_all(format!("GET /healthz HTTP/1.1\r\nX-Big: {huge}\r\n\r\n")
+                .as_bytes()).unwrap();
+    let mut resp = Vec::new();
+    t.read_to_end(&mut resp).unwrap();
+    assert!(resp.starts_with(b"HTTP/1.1 431"),
+            "{}", String::from_utf8_lossy(&resp));
+    // the listener survived all of it
+    let (st, _, body) =
+        http_roundtrip(&s.http, "GET", "/healthz", b"").unwrap();
+    assert_eq!((st, body.as_slice()), (200, b"ok".as_slice()));
+}
+
+// ------------------------------------------- disconnect mid-stream ---
+
+#[test]
+fn mid_stream_disconnect_frees_the_slot() {
+    // cap-1 pool: if the vanished client leaked its slot, the follow-up
+    // completion could never be admitted
+    let mut s = build_stack(1, 1, 64, 2000);
+    let h = s.handle.take().unwrap();
+    {
+        let mut t = TcpStream::connect(s.http).unwrap();
+        let body = br#"{"model":"tiny","prompt":"runaway","max_tokens":100000,"stream":true}"#;
+        t.write_all(format!(
+            "POST /v1/completions HTTP/1.1\r\nHost: t\r\n\
+             Content-Length: {}\r\n\r\n", body.len()).as_bytes())
+            .unwrap();
+        t.write_all(body).unwrap();
+        // wait for the stream to actually start, then vanish: dropping
+        // the socket with unread data pending makes the next SSE write
+        // fail, which must cancel the engine side
+        let mut first = [0u8; 16];
+        t.read_exact(&mut first).unwrap();
+        assert_eq!(&first[..12], b"HTTP/1.1 200");
+    }
+    wait_until("disconnect cancellation",
+               || s.router.total_cancelled() >= 1);
+    // the single slot is reusable — this would starve forever if the
+    // disconnect had not freed it
+    let (st, _, j) = post(&s.http,
+        r#"{"model":"tiny","prompt":"after","max_tokens":4}"#);
+    assert_eq!(st, 200, "{j}");
+    h.drain().unwrap();
+}
+
+// -------------------------------------------------- admission control ---
+
+#[test]
+fn overload_sheds_429_with_retry_after_while_admitted_work_completes() {
+    // one slot, zero queue tolerance: A occupies the slot, B queues,
+    // C must be shed
+    let mut s = build_stack(1, 1, 0, 2000);
+    let h = s.handle.take().unwrap();
+    let addr = s.http;
+    let long = |tag: usize| {
+        thread::spawn(move || {
+            let body = format!(
+                "{{\"model\":\"tiny\",\"prompt\":\"busy {tag}\",\
+                 \"max_tokens\":2048}}");
+            http_roundtrip(&addr, "POST", "/v1/completions",
+                           body.as_bytes()).unwrap().0
+        })
+    };
+    let a = long(0);
+    wait_until("A admitted", || s.router.in_flight() >= 1);
+    let b = long(1);
+    wait_until("B queued", || s.router.queue_depth() >= 1);
+    let (st, headers, j) = post(&addr,
+        r#"{"model":"tiny","prompt":"shed me","max_tokens":4}"#);
+    assert_eq!(st, 429, "{j}");
+    let ra: u64 = headers.iter().find(|(k, _)| k == "retry-after")
+        .expect("429 must carry Retry-After").1.parse().unwrap();
+    assert!(ra >= 1);
+    assert_eq!(j.at(&["error", "type"]).and_then(Json::as_str),
+               Some("overloaded"));
+    assert_eq!(h.shed_total(), 1);
+    // the shed counter is visible in valid Prometheus exposition
+    let (st, _, raw) =
+        http_roundtrip(&addr, "GET", "/metrics", b"").unwrap();
+    assert_eq!(st, 200);
+    let text = String::from_utf8(raw).unwrap();
+    validate_exposition(&text).unwrap();
+    assert_eq!(metric_value(&text, "m2_gateway_shed_total"), 1.0);
+    assert!(text.contains("# TYPE m2_gateway_shed_total counter"));
+    // shedding never touched the admitted requests
+    assert_eq!(a.join().unwrap(), 200);
+    assert_eq!(b.join().unwrap(), 200);
+    h.drain().unwrap();
+}
+
+// ----------------------------------------------------- graceful drain ---
+
+#[test]
+fn graceful_drain_completes_in_flight_streams() {
+    let mut s = build_stack(1, 2, 64, 500);
+    let h = s.handle.take().unwrap();
+    let addr = s.http;
+    let mut t = TcpStream::connect(addr).unwrap();
+    let body = br#"{"model":"tiny","prompt":"drain me","max_tokens":64,"stream":true}"#;
+    t.write_all(format!(
+        "POST /v1/completions HTTP/1.1\r\nHost: t\r\n\
+         Content-Length: {}\r\n\r\n", body.len()).as_bytes()).unwrap();
+    t.write_all(body).unwrap();
+    let mut r = BufReader::new(t);
+    let mut status = String::new();
+    r.read_line(&mut status).unwrap();
+    assert!(status.contains("200"), "{status}");
+    // drain with the stream mid-flight
+    let drainer = thread::spawn(move || h.drain().unwrap());
+    // the admitted stream runs to its DONE frame while draining
+    let mut rest = String::new();
+    r.read_to_string(&mut rest).unwrap();
+    assert!(rest.contains("data: [DONE]"),
+            "stream was cut off by drain: ...{}",
+            &rest[rest.len().saturating_sub(120)..]);
+    drainer.join().unwrap();
+    // and afterwards the listener is gone
+    assert!(TcpStream::connect(addr).is_err(),
+            "listener still accepting after drain");
+}
+
+#[test]
+fn admin_drain_flips_health_and_refuses_new_work() {
+    let mut s = build_stack(1, 2, 64, 2000);
+    let h = s.handle.take().unwrap();
+    // pre-open keep-alive connections: once drain starts, the accept
+    // loop stops, so only existing connections can observe the 503s
+    let mut pre1 = RawConn::connect(&s.http);
+    let mut pre2 = RawConn::connect(&s.http);
+    let (st, body) = pre1.request("GET", "/healthz", b"");
+    assert_eq!((st, body.as_slice()), (200, b"ok".as_slice()));
+    let (st, _) = RawConn::connect(&s.http)
+        .request("POST", "/admin/drain", b"");
+    assert_eq!(st, 202);
+    let (st, body) = pre1.request("GET", "/healthz", b"");
+    assert_eq!(st, 503);
+    assert_eq!(body, b"draining");
+    let (st, body) = pre2.request(
+        "POST", "/v1/completions",
+        br#"{"model":"tiny","prompt":"late","max_tokens":2}"#);
+    assert_eq!(st, 503, "{}", String::from_utf8_lossy(&body));
+    h.drain().unwrap();
+}
+
+/// Minimal keep-alive HTTP client: one persistent connection, framed
+/// responses via Content-Length (what `http_roundtrip` can't do — it
+/// closes per request).
+struct RawConn {
+    r: BufReader<TcpStream>,
+    w: TcpStream,
+}
+
+impl RawConn {
+    fn connect(addr: &SocketAddr) -> RawConn {
+        let w = TcpStream::connect(addr).unwrap();
+        RawConn { r: BufReader::new(w.try_clone().unwrap()), w }
+    }
+
+    fn request(&mut self, method: &str, path: &str, body: &[u8])
+        -> (u16, Vec<u8>) {
+        self.w.write_all(format!(
+            "{method} {path} HTTP/1.1\r\nHost: t\r\n\
+             Content-Length: {}\r\n\r\n", body.len()).as_bytes())
+            .unwrap();
+        self.w.write_all(body).unwrap();
+        self.w.flush().unwrap();
+        let mut status_line = String::new();
+        self.r.read_line(&mut status_line).unwrap();
+        let status: u16 = status_line.split_whitespace().nth(1)
+            .unwrap().parse().unwrap();
+        let mut len = 0usize;
+        loop {
+            let mut l = String::new();
+            self.r.read_line(&mut l).unwrap();
+            let l = l.trim_end();
+            if l.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = l.split_once(':') {
+                if k.eq_ignore_ascii_case("content-length") {
+                    len = v.trim().parse().unwrap();
+                }
+            }
+        }
+        let mut body = vec![0u8; len];
+        self.r.read_exact(&mut body).unwrap();
+        (status, body)
+    }
+}
+
+// ------------------------------------------- cross-frontend metrics ---
+
+#[test]
+fn http_traffic_is_visible_through_the_wire_metrics_op() {
+    // dedicated stack: nothing else races the in-flight gauge
+    let mut s = build_stack(1, 2, 64, 2000);
+    let h = s.handle.take().unwrap();
+    let wire_in_flight = |c: &mut Client| {
+        c.call(&Json::obj(vec![("op", Json::str("metrics"))])).unwrap()
+            .get("in_flight_total").and_then(Json::as_f64).unwrap()
+    };
+    let mut c = Client::connect(&s.wire).unwrap();
+    assert_eq!(wire_in_flight(&mut c), 0.0);
+    // park a long-running HTTP stream on the pool...
+    let mut t = TcpStream::connect(s.http).unwrap();
+    let body = br#"{"model":"tiny","prompt":"park","max_tokens":100000,"stream":true}"#;
+    t.write_all(format!(
+        "POST /v1/completions HTTP/1.1\r\nHost: t\r\n\
+         Content-Length: {}\r\n\r\n", body.len()).as_bytes()).unwrap();
+    t.write_all(body).unwrap();
+    // ...and the WIRE frontend sees it in flight (the shared gauge)
+    wait_until("wire sees HTTP in-flight",
+               || wire_in_flight(&mut c) >= 1.0);
+    drop(t);
+    wait_until("gauge settles after disconnect",
+               || wire_in_flight(&mut c) == 0.0);
+    // /metrics agrees, and carries the per-kind conn-error breakdown
+    // that the wire op also reports
+    let (_, _, raw) =
+        http_roundtrip(&s.http, "GET", "/metrics", b"").unwrap();
+    let text = String::from_utf8(raw).unwrap();
+    validate_exposition(&text).unwrap();
+    assert_eq!(metric_value(&text, "m2_in_flight_total"), 0.0);
+    for kind in ["io", "protocol", "too_large"] {
+        assert!(text.contains(
+            &format!("m2_conn_errors_total{{kind=\"{kind}\"}}")),
+            "missing conn-error kind {kind}");
+    }
+    let m = c.call(&Json::obj(vec![("op", Json::str("metrics"))]))
+        .unwrap();
+    let by_kind = m.get("conn_errors_by_kind").expect("wire breakdown");
+    for kind in ["io", "protocol", "too_large"] {
+        assert!(by_kind.get(kind).and_then(Json::as_f64).is_some());
+    }
+    h.drain().unwrap();
+}
+
+#[test]
+fn prefix_cache_hits_identically_over_http() {
+    // one replica so the second request lands on the same cache; the
+    // prompt must exceed one SSM chunk (tiny: 16 tokens) to be cached
+    let mut s = build_stack(1, 4, 64, 2000);
+    let h = s.handle.take().unwrap();
+    let prompt = "the compiler lowers the state space dual form into a \
+                  chunked scan whose carried state is one fixed size \
+                  slab per layer and the serving tier snapshots it \
+                  between turns of the conversation";
+    let body = format!(
+        "{{\"model\":\"tiny\",\"prompt\":\"{prompt}\",\"max_tokens\":2}}");
+    let (st1, _, j1) = post(&s.http, &body);
+    assert_eq!(st1, 200, "{j1}");
+    let (st2, _, j2) = post(&s.http, &body);
+    assert_eq!(st2, 200, "{j2}");
+    // identical prompts through HTTP hash to the same token-id key the
+    // wire path uses, so the second request hits the prefix cache
+    let (_, _, raw) =
+        http_roundtrip(&s.http, "GET", "/metrics", b"").unwrap();
+    let text = String::from_utf8(raw).unwrap();
+    validate_exposition(&text).unwrap();
+    assert!(metric_value(
+        &text, "m2_prefix_cache_hits_total{replica=\"0\"}") >= 1.0,
+        "no prefix-cache hit over HTTP");
+    assert!(metric_value(
+        &text, "m2_prefix_cache_misses_total{replica=\"0\"}") >= 1.0);
+    assert!(metric_value(
+        &text, "m2_prefix_cache_bytes{replica=\"0\"}") > 0.0);
+    // and the cached second request decodes the same tokens
+    let c1 = &j1.get("choices").and_then(Json::as_arr).unwrap()[0];
+    let c2 = &j2.get("choices").and_then(Json::as_arr).unwrap()[0];
+    assert_eq!(token_ids(c1), token_ids(c2),
+               "prefix-cache hit changed the decode");
+    h.drain().unwrap();
+}
+
+#[test]
+fn echo_prepends_the_prompt_on_both_paths() {
+    let s = fx();
+    let (st, _, j) = post(&s.http,
+        r#"{"model":"tiny","prompt":"echo this","max_tokens":3,"echo":true}"#);
+    assert_eq!(st, 200, "{j}");
+    let choice = &j.get("choices").and_then(Json::as_arr).unwrap()[0];
+    let text = choice.get("text").and_then(Json::as_str).unwrap();
+    assert!(text.starts_with("echo this"), "{text}");
+    // usage counts generated tokens only; token_ids carries prompt +
+    // completion when echoing
+    let ids = token_ids(choice);
+    let gen = j.at(&["usage", "completion_tokens"])
+        .and_then(Json::as_u64).unwrap();
+    assert_eq!(gen, 3);
+    assert!(ids.len() > 3, "echo must prepend prompt ids: {ids:?}");
+}
