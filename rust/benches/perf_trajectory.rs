@@ -11,7 +11,10 @@
 //!     `bytes_streamed_per_token`, and tokens/s that must beat f32 at
 //!     B = 1 (the pass exists because decode is bandwidth-bound),
 //!   * chunked-parallel prefill: tokens/s at L ∈ {512, 2048}, plus
-//!     analytic MFU/HBU against the host-CPU roofline,
+//!     analytic MFU/HBU against the host-CPU roofline — **per kernel
+//!     tier** (schema 1.5): the scalar rows are the cross-PR baseline,
+//!     and when the host has a vector unit a second row set measures
+//!     the planner's re-tiered prefill (DESIGN.md §11),
 //!   * the plan cache: plans built, cache hits and total planning time
 //!     across the two measured sessions (zero block on planner-less
 //!     backends),
@@ -31,7 +34,10 @@
 //!   * prefill L=2048 tok/s ≥ the same multiple of f32 B=1 decode
 //!     tok/s (the prefill fan-out analogue of the fusion gate),
 //!   * bf16 decode B=1 tok/s > f32 B=1 tok/s (skipped when the backend
-//!     has no precision pass, e.g. XLA).
+//!     has no precision pass, e.g. XLA),
+//!   * vector-tier prefill L=2048 tok/s ≥ the scalar tier's (the
+//!     planner only re-tiers nodes its pricing says win, so losing is
+//!     a pricing bug — skipped with a notice on scalar-only hosts).
 //!
 //! `--baseline <BENCH_*.json>` additionally gates the f32 decode rows
 //! against a previous PR's artifact (fail on a >10% tok/s drop;
@@ -42,10 +48,11 @@ use std::time::Duration;
 
 use mamba2_serve::bench_support::{batch_speedup, compare_to_baseline,
                                   decode_point, dtype_speedup,
-                                  open_backend, prefill_point, quick,
-                                  trajectory_json, write_trajectory,
-                                  BaselineCheck, DecodePoint,
-                                  GatewayTraffic, PrefillPoint};
+                                  isa_prefill_speedup, open_backend,
+                                  prefill_point, quick, trajectory_json,
+                                  write_trajectory, BaselineCheck,
+                                  DecodePoint, GatewayTraffic,
+                                  PrefillPoint};
 use mamba2_serve::coordinator::{Engine, EngineConfig, GenerateParams,
                                 PrefixCacheStats};
 use mamba2_serve::eval::{corpus, Tokenizer};
@@ -56,7 +63,7 @@ use mamba2_serve::runtime::{reference, Backend, CacheState, PlanStats};
 use mamba2_serve::util::benchkit::{Bench, Table};
 use mamba2_serve::util::json::Json;
 
-const TAG: &str = "pr7";
+const TAG: &str = "pr8";
 const MODEL: &str = "sim-130m";
 const DECODE_BATCHES: [usize; 3] = [1, 4, 16];
 const PREFILL_LENS: [usize; 2] = [512, 2048];
@@ -93,7 +100,8 @@ fn decode_sweep(session: &dyn Backend, bench: &mut Bench,
         // model answers from the plan (halved weights under bf16)
         out.push(decode_point(&session.cost("decode_step", None, b), b,
                               m.summary.mean, dt,
-                              session.bytes_streamed_per_token(b)));
+                              session.bytes_streamed_per_token(b),
+                              session.isa()));
         eprintln!("  decode[{dt}] B={b}: {:.2} ms/step, {:.1} tok/s, \
                    {:.0} B/tok",
                   m.summary.mean * 1e3, b as f64 / m.summary.mean,
@@ -107,9 +115,11 @@ fn main() {
         .and_then(|v| v.parse().ok())
         .unwrap_or(2.0);
     let baseline_path = arg_after("--baseline");
-    // the sweep owns the dtype knob: the f32 rows are mandatory (the
-    // schema's cross-PR baseline), whatever the inherited env says
+    // the sweep owns the dtype and ISA knobs: the scalar f32 rows are
+    // mandatory (the schema's cross-PR baseline), whatever the
+    // inherited env says
     std::env::set_var("M2_WEIGHTS", "f32");
+    std::env::set_var("M2_ISA", "scalar");
     let session = open_backend(MODEL);
     let threads = reference::default_threads();
     let mut bench = Bench::new().quiet();
@@ -129,17 +139,39 @@ fn main() {
     }
 
     // ---- prefill sweep (always f32: the pass is decode-only) --------
+    // Scalar-tier rows first (the cross-PR baseline); when the host has
+    // a vector unit, a second backend opened under M2_ISA=auto measures
+    // the planner's re-tiered prefill rides along (schema 1.5 tags
+    // every row with its effective tier).
     let mut prefill: Vec<PrefillPoint> = Vec::new();
-    for &l in &PREFILL_LENS {
-        let tokens: Vec<i32> = (0..l).map(|i| ((i * 37 + 11) % 512) as i32)
-            .collect();
-        let m = bench.measure(&format!("prefill.t{l}"), l as f64, || {
-            session.prefill(&tokens, 1).unwrap();
-        });
-        prefill.push(prefill_point(&session.cost("prefill", Some(l), 1),
-                                   l, m.summary.mean));
-        eprintln!("  prefill L={l}: {:.1} ms, {:.0} tok/s",
-                  m.summary.mean * 1e3, l as f64 / m.summary.mean);
+    let mut prefill_sweep = |session: &dyn Backend,
+                             prefill: &mut Vec<PrefillPoint>| {
+        let isa = session.isa();
+        for &l in &PREFILL_LENS {
+            let tokens: Vec<i32> =
+                (0..l).map(|i| ((i * 37 + 11) % 512) as i32).collect();
+            let m = bench.measure(&format!("prefill.{isa}.t{l}"),
+                                  l as f64, || {
+                session.prefill(&tokens, 1).unwrap();
+            });
+            prefill.push(prefill_point(
+                &session.cost("prefill", Some(l), 1), l, m.summary.mean,
+                isa));
+            eprintln!("  prefill[{isa}] L={l}: {:.1} ms, {:.0} tok/s",
+                      m.summary.mean * 1e3, l as f64 / m.summary.mean);
+        }
+    };
+    prefill_sweep(session.as_ref(), &mut prefill);
+    std::env::set_var("M2_ISA", "auto");
+    let session_vec = open_backend(MODEL);
+    std::env::set_var("M2_ISA", "scalar");
+    let vec_isa = session_vec.isa();
+    let has_vector = vec_isa != "scalar";
+    if has_vector {
+        prefill_sweep(session_vec.as_ref(), &mut prefill);
+    } else {
+        eprintln!("  backend {} has no vector kernel tier on this host \
+                   — scalar prefill rows only", session_vec.name());
     }
 
     // ---- prefix cache: shared-prefix replay through an engine -----------
@@ -254,9 +286,10 @@ fn main() {
     td.print();
     let mut tp = Table::new(
         &format!("Perf trajectory {TAG} — chunked-parallel prefill"),
-        &["L", "ms", "tok/s", "MFU %", "HBU %"]);
+        &["L", "isa", "ms", "tok/s", "MFU %", "HBU %"]);
     for p in &prefill {
         tp.row(vec![p.seq_len.to_string(),
+                    p.isa.clone(),
                     format!("{:.1}", p.ms_total),
                     format!("{:.0}", p.tokens_per_s),
                     format!("{:.2}", p.mfu * 100.0),
@@ -264,22 +297,26 @@ fn main() {
     }
     tp.print();
 
-    // the plan_cache block covers the WHOLE run: both sessions' plans
-    // (the bf16 sweep builds its own decode plans) summed together
-    let bf16_stats = if has_bf16 {
-        session_bf16.plan_stats()
-    } else {
-        None
-    };
-    let plan_stats = match (session.plan_stats(), bf16_stats) {
-        (Some(a), Some(b)) => Some(PlanStats {
-            built: a.built + b.built,
-            hits: a.hits + b.hits,
-            planning_ms: a.planning_ms + b.planning_ms,
-            cached: a.cached + b.cached,
-        }),
-        (a, b) => a.or(b),
-    };
+    // the plan_cache block covers the WHOLE run: every measured
+    // session's plans (the bf16 and vector-tier sweeps build their own)
+    // summed together
+    let mut extra_stats = Vec::new();
+    if has_bf16 {
+        extra_stats.push(session_bf16.plan_stats());
+    }
+    if has_vector {
+        extra_stats.push(session_vec.plan_stats());
+    }
+    let plan_stats = extra_stats.into_iter().flatten()
+        .fold(session.plan_stats(), |acc, b| match acc {
+            Some(a) => Some(PlanStats {
+                built: a.built + b.built,
+                hits: a.hits + b.hits,
+                planning_ms: a.planning_ms + b.planning_ms,
+                cached: a.cached + b.cached,
+            }),
+            None => Some(b),
+        });
     if let Some(ps) = plan_stats {
         eprintln!("  plan cache: {} built, {} hits, {:.2} ms planning",
                   ps.built, ps.hits, ps.planning_ms);
@@ -293,8 +330,10 @@ fn main() {
     });
     let speedup = batch_speedup(&decode);
     let bf16_ratio = dtype_speedup(&decode, 1);
+    let isa_ratio = isa_prefill_speedup(&prefill, 2048, vec_isa);
     println!("wrote {} (f32 decode B=16 vs B=1: {speedup:.2}x; bf16 vs \
-              f32 at B=1: {bf16_ratio:.2}x)",
+              f32 at B=1: {bf16_ratio:.2}x; {vec_isa} vs scalar \
+              prefill at L=2048: {isa_ratio:.2}x)",
              path.display());
 
     // ---- structural gates (--check) -------------------------------------
@@ -328,6 +367,21 @@ fn main() {
                        — the halved weight stream must pay on the \
                        bandwidth-bound path");
             failed = true;
+        }
+        // kernel-tier gate (1.5): the planner only re-tiers prefill
+        // nodes its pricing says win, so the vector tier losing to
+        // scalar at L=2048 is a pricing bug, not noise
+        if has_vector {
+            if isa_ratio < 1.0 {
+                eprintln!("FAIL: {vec_isa} prefill at L=2048 is \
+                           {isa_ratio:.2}x scalar — the planner's ISA \
+                           re-tiering must not lose to its own \
+                           fallback");
+                failed = true;
+            }
+        } else {
+            println!("isa gate: skipped — no vector kernel tier on \
+                      this host");
         }
     }
 

@@ -151,7 +151,17 @@ pub fn fmt_pct(x: f64) -> String {
 /// OpenAI-compatible gateway (DESIGN.md §10), measured by driving
 /// `/v1/completions` against a live replica pool. Zero-valued when the
 /// trajectory run has no HTTP leg.
-pub const BENCH_SCHEMA_VERSION: f64 = 1.4;
+///
+/// 1.4 → 1.5 (PR 8): every decode AND prefill row carries `isa` — the
+/// **effective** kernel tier the hot loops ran on (`"scalar"` /
+/// `"avx2"` / `"neon"`, from [`crate::runtime::Backend::isa`]; a
+/// requested-but-unavailable tier reports its scalar fallback,
+/// DESIGN.md §11). Pre-1.5 rows are implicitly scalar. Sweeps may now
+/// carry one row set per available ISA; every cross-PR gate (fusion
+/// ratio, bf16 ratio, baseline compare, prefill coverage) is computed
+/// over the **scalar rows** only, so trajectories from hosts with
+/// different vector units stay comparable.
+pub const BENCH_SCHEMA_VERSION: f64 = 1.5;
 
 /// Gateway traffic counters for the trajectory's HTTP leg (1.4):
 /// completions admitted, completions shed with 429, and the replica
@@ -178,6 +188,8 @@ pub struct DecodePoint {
     pub weights_dtype: String,
     /// modelled bytes streamed per generated token at this width
     pub bytes_streamed_per_token: f64,
+    /// effective kernel tier (1.5: `"scalar"` / `"avx2"` / `"neon"`)
+    pub isa: String,
 }
 
 /// One prefill measurement: `tokens_per_s = seq_len / mean seconds`.
@@ -187,14 +199,18 @@ pub struct PrefillPoint {
     pub tokens_per_s: f64,
     pub mfu: f64,
     pub hbu: f64,
+    /// effective kernel tier (1.5: `"scalar"` / `"avx2"` / `"neon"`)
+    pub isa: String,
 }
 
-/// Build a decode point from a measured mean, the backend's cost, and
-/// the weight stream's dtype + byte model
+/// Build a decode point from a measured mean, the backend's cost, the
+/// weight stream's dtype + byte model
 /// ([`crate::runtime::Backend::weights_dtype`] /
-/// [`crate::runtime::Backend::bytes_streamed_per_token`]).
+/// [`crate::runtime::Backend::bytes_streamed_per_token`]) and the
+/// effective kernel tier ([`crate::runtime::Backend::isa`]).
 pub fn decode_point(cost: &CostInfo, batch: usize, mean_seconds: f64,
-                    weights_dtype: &str, bytes_streamed_per_token: f64)
+                    weights_dtype: &str, bytes_streamed_per_token: f64,
+                    isa: &str)
     -> DecodePoint {
     DecodePoint {
         batch,
@@ -204,11 +220,14 @@ pub fn decode_point(cost: &CostInfo, batch: usize, mean_seconds: f64,
         hbu: hbu(cost, mean_seconds, CPU_HOST.peak_gbps),
         weights_dtype: weights_dtype.to_string(),
         bytes_streamed_per_token,
+        isa: isa.to_string(),
     }
 }
 
-/// Build a prefill point from a measured mean and the backend's cost.
-pub fn prefill_point(cost: &CostInfo, seq_len: usize, mean_seconds: f64)
+/// Build a prefill point from a measured mean, the backend's cost and
+/// the effective kernel tier.
+pub fn prefill_point(cost: &CostInfo, seq_len: usize, mean_seconds: f64,
+                     isa: &str)
     -> PrefillPoint {
     PrefillPoint {
         seq_len,
@@ -216,17 +235,19 @@ pub fn prefill_point(cost: &CostInfo, seq_len: usize, mean_seconds: f64)
         tokens_per_s: seq_len as f64 / mean_seconds,
         mfu: mfu(cost, mean_seconds, CPU_HOST.peak_tflops),
         hbu: hbu(cost, mean_seconds, CPU_HOST.peak_gbps),
+        isa: isa.to_string(),
     }
 }
 
 /// Batched-decode speedup: tokens/s at the widest measured batch over
 /// tokens/s at batch 1 — the structural "batching actually fuses" ratio
 /// CI gates on (≥ 2× at B=16 on any multi-core runner). Computed over
-/// the f32 rows (falling back to all rows for dtype-less inputs) so
-/// the gate never mixes precisions.
+/// the scalar f32 rows (falling back to all rows for untagged inputs)
+/// so the gate never mixes precisions or kernel tiers.
 pub fn batch_speedup(decode: &[DecodePoint]) -> f64 {
     let f32_rows: Vec<&DecodePoint> = decode.iter()
-        .filter(|p| p.weights_dtype == "f32").collect();
+        .filter(|p| p.weights_dtype == "f32" && p.isa == "scalar")
+        .collect();
     let rows: Vec<&DecodePoint> = if f32_rows.is_empty() {
         decode.iter().collect()
     } else {
@@ -244,13 +265,33 @@ pub fn batch_speedup(decode: &[DecodePoint]) -> f64 {
 
 /// bf16-over-f32 decode throughput ratio at one batch width (0.0 when
 /// either row is missing) — the perf-smoke gate that the precision
-/// pass actually pays (`bf16 tok/s > f32 tok/s` ⇔ ratio > 1).
+/// pass actually pays (`bf16 tok/s > f32 tok/s` ⇔ ratio > 1). Scalar
+/// rows only (1.5), so a vector-tier row set never skews the ratio.
 pub fn dtype_speedup(decode: &[DecodePoint], batch: usize) -> f64 {
     let find = |dt: &str| decode.iter()
-        .find(|p| p.batch == batch && p.weights_dtype == dt);
+        .find(|p| p.batch == batch && p.weights_dtype == dt
+              && p.isa == "scalar");
     match (find("f32"), find("bf16")) {
         (Some(f), Some(b)) if f.tokens_per_s > 0.0 => {
             b.tokens_per_s / f.tokens_per_s
+        }
+        _ => 0.0,
+    }
+}
+
+/// Vector-over-scalar prefill throughput ratio at one prompt length
+/// (0.0 when either row is missing) — the perf-smoke gate that the
+/// planner's ISA pricing actually pays: with a vector tier detected,
+/// the re-tiered prefill must not lose to scalar (`ratio ≥ 1`), since
+/// the planner only re-tiers nodes its model says win (DESIGN.md
+/// §11.3).
+pub fn isa_prefill_speedup(prefill: &[PrefillPoint], seq_len: usize,
+                           isa: &str) -> f64 {
+    let find = |tier: &str| prefill.iter()
+        .find(|p| p.seq_len == seq_len && p.isa == tier);
+    match (find("scalar"), find(isa)) {
+        (Some(s), Some(v)) if s.tokens_per_s > 0.0 => {
+            v.tokens_per_s / s.tokens_per_s
         }
         _ => 0.0,
     }
@@ -278,13 +319,15 @@ pub fn compare_to_baseline(new: &Json, old: &Json, tol: f64)
             "baseline schema {:?} != {BENCH_SCHEMA_VERSION} — not \
              comparable", ver(old)));
     }
-    // f32 rows (dtype-less pre-1.2 rows never reach here: the schema
-    // check above already skipped them)
+    // scalar f32 rows (untagged pre-1.5 rows never reach here: the
+    // schema check above already skipped them)
     let rows = |j: &Json| -> Vec<(f64, f64)> {
         j.get("decode").and_then(Json::as_arr).map(|a| {
             a.iter().filter(|p| {
                 p.get("weights_dtype").and_then(Json::as_str)
                     == Some("f32")
+                    && p.get("isa").and_then(Json::as_str)
+                        == Some("scalar")
             }).filter_map(|p| {
                 Some((p.get("batch").and_then(Json::as_f64)?,
                       p.get("tokens_per_s").and_then(Json::as_f64)?))
@@ -295,7 +338,7 @@ pub fn compare_to_baseline(new: &Json, old: &Json, tol: f64)
     let new_rows = rows(new);
     if old_rows.is_empty() || new_rows.is_empty() {
         return BaselineCheck::Skipped(
-            "no comparable f32 decode rows".to_string());
+            "no comparable scalar f32 decode rows".to_string());
     }
     let mut regressions = Vec::new();
     for (b, old_tps) in &old_rows {
@@ -341,6 +384,7 @@ pub fn trajectory_json(tag: &str, model: &str, backend: &str,
         ("weights_dtype", Json::str(&p.weights_dtype)),
         ("bytes_streamed_per_token",
          Json::num(p.bytes_streamed_per_token)),
+        ("isa", Json::str(&p.isa)),
     ])).collect();
     let pre = prefill.iter().map(|p| Json::obj(vec![
         ("seq_len", Json::num(p.seq_len as f64)),
@@ -348,6 +392,7 @@ pub fn trajectory_json(tag: &str, model: &str, backend: &str,
         ("tokens_per_s", Json::num(p.tokens_per_s)),
         ("mfu", Json::num(p.mfu)),
         ("hbu", Json::num(p.hbu)),
+        ("isa", Json::str(&p.isa)),
     ])).collect();
     Json::obj(vec![
         ("schema_version", Json::num(BENCH_SCHEMA_VERSION)),
@@ -424,8 +469,18 @@ pub fn validate_trajectory_json(j: &Json) -> Result<()> {
         j, "decode",
         &["batch", "ms_per_step", "tokens_per_s", "mfu", "hbu",
           "bytes_streamed_per_token"])?;
-    // 1.2: every decode row is dtype-tagged, and the f32 rows (the
-    // cross-PR comparable set) must still cover B = 1 and B = 16
+    // 1.2/1.5: every decode row is dtype- and isa-tagged, and the
+    // scalar f32 rows (the cross-PR comparable set) must still cover
+    // B = 1 and B = 16
+    let isa_of = |point: &Json, ctx: &str| -> Result<String> {
+        let isa = point.get("isa").and_then(Json::as_str)
+            .with_context(|| format!(
+                "BENCH json: {ctx} missing string \"isa\""))?;
+        if !matches!(isa, "scalar" | "avx2" | "neon") {
+            bail!("BENCH json: {ctx}.isa {isa:?} not scalar|avx2|neon");
+        }
+        Ok(isa.to_string())
+    };
     let dec = j.get("decode").and_then(Json::as_arr).unwrap();
     let mut f32_batches = Vec::new();
     for (i, point) in dec.iter().enumerate() {
@@ -437,21 +492,34 @@ pub fn validate_trajectory_json(j: &Json) -> Result<()> {
             bail!("BENCH json: decode[{i}].weights_dtype {dt:?} not \
                    f32|bf16");
         }
-        if dt == "f32" {
+        let isa = isa_of(point, &format!("decode[{i}]"))?;
+        if dt == "f32" && isa == "scalar" {
             f32_batches.push(
                 point.get("batch").and_then(Json::as_f64).unwrap());
         }
     }
     for want in [1.0, 16.0] {
         if !f32_batches.contains(&want) {
-            bail!("BENCH json: f32 decode sweep missing batch {want}");
+            bail!("BENCH json: scalar f32 decode sweep missing batch \
+                   {want}");
         }
     }
-    let lens = require_points(
+    require_points(
         j, "prefill",
         &["seq_len", "ms_total", "tokens_per_s", "mfu", "hbu"])?;
-    if !lens.contains(&512.0) {
-        bail!("BENCH json: prefill sweep missing seq_len 512");
+    // 1.5: prefill rows are isa-tagged too; the scalar rows must keep
+    // the L = 512 coverage
+    let pre = j.get("prefill").and_then(Json::as_arr).unwrap();
+    let mut scalar_lens = Vec::new();
+    for (i, point) in pre.iter().enumerate() {
+        let isa = isa_of(point, &format!("prefill[{i}]"))?;
+        if isa == "scalar" {
+            scalar_lens.push(
+                point.get("seq_len").and_then(Json::as_f64).unwrap());
+        }
+    }
+    if !scalar_lens.contains(&512.0) {
+        bail!("BENCH json: scalar prefill sweep missing seq_len 512");
     }
     if j.get("batch_speedup_b16_vs_b1").and_then(Json::as_f64).is_none() {
         bail!("BENCH json: missing number \"batch_speedup_b16_vs_b1\"");
@@ -522,7 +590,7 @@ mod tests {
                     &cfg, "decode_step", None, b);
                 // fake 2× fusion win
                 decode_point(&cost, b, 0.004 / b as f64, "f32",
-                             cost.bytes_accessed / b as f64)
+                             cost.bytes_accessed / b as f64, "scalar")
             }).collect();
         // a bf16 row set rides along (schema 1.2)
         for &b in &[1usize, 16] {
@@ -530,14 +598,18 @@ mod tests {
                 &cfg, "decode_step", None, b);
             decode.push(decode_point(&cost, b, 0.003 / b as f64, "bf16",
                                      cost.bytes_accessed * 0.55
-                                         / b as f64));
+                                         / b as f64, "scalar"));
         }
-        let prefill: Vec<PrefillPoint> = [512usize, 2048].iter()
+        let mut prefill: Vec<PrefillPoint> = [512usize, 2048].iter()
             .map(|&l| {
                 let cost = crate::runtime::analytic_cost(
                     &cfg, "prefill", Some(l), 1);
-                prefill_point(&cost, l, l as f64 * 1e-4)
+                prefill_point(&cost, l, l as f64 * 1e-4, "scalar")
             }).collect();
+        // a vector-tier prefill row set rides along (schema 1.5)
+        let cost = crate::runtime::analytic_cost(
+            &cfg, "prefill", Some(2048), 1);
+        prefill.push(prefill_point(&cost, 2048, 2048.0 * 0.8e-4, "avx2"));
         let plan = PlanStats { built: 6, hits: 40, planning_ms: 1.5,
                                cached: 6 };
         let prefix = crate::coordinator::PrefixCacheStats {
@@ -638,19 +710,84 @@ mod tests {
     }
 
     #[test]
+    fn trajectory_schema_pins_isa_fields() {
+        // 1.5: dropping the per-row kernel tier must fail, in decode
+        // and prefill rows alike
+        for key in ["decode", "prefill"] {
+            let j = sample_doc();
+            let mut m = j.as_obj().unwrap().clone();
+            let rows = m.get(key).unwrap().as_arr().unwrap().to_vec();
+            let mut p0 = rows[0].as_obj().unwrap().clone();
+            p0.remove("isa");
+            let mut rows2 = rows.clone();
+            rows2[0] = Json::Obj(p0);
+            m.insert(key.into(), Json::Arr(rows2));
+            let e = validate_trajectory_json(&Json::Obj(m))
+                .expect_err(&format!("must reject {key} row sans isa"));
+            assert!(e.to_string().contains("isa"), "{e}");
+        }
+        // unknown tiers are schema violations
+        let j = sample_doc();
+        let mut m = j.as_obj().unwrap().clone();
+        let dec = m.get("decode").unwrap().as_arr().unwrap().to_vec();
+        let mut p0 = dec[0].as_obj().unwrap().clone();
+        p0.insert("isa".into(), Json::str("avx512"));
+        let mut dec2 = dec.clone();
+        dec2[0] = Json::Obj(p0);
+        m.insert("decode".into(), Json::Arr(dec2));
+        assert!(validate_trajectory_json(&Json::Obj(m)).is_err());
+        // vector rows are optional, but the scalar rows must keep their
+        // coverage: relabelling every prefill row as avx2 breaks the
+        // L = 512 requirement
+        let j = sample_doc();
+        let mut m = j.as_obj().unwrap().clone();
+        let pre: Vec<Json> = m.get("prefill").unwrap().as_arr().unwrap()
+            .iter().map(|p| {
+                let mut o = p.as_obj().unwrap().clone();
+                o.insert("isa".into(), Json::str("avx2"));
+                Json::Obj(o)
+            }).collect();
+        m.insert("prefill".into(), Json::Arr(pre));
+        let e = validate_trajectory_json(&Json::Obj(m)).unwrap_err();
+        assert!(e.to_string().contains("scalar prefill"), "{e}");
+    }
+
+    #[test]
     fn dtype_speedup_compares_same_batch_rows() {
         let cfg = crate::runtime::sim_config("sim-130m").unwrap();
         let cost = crate::runtime::analytic_cost(
             &cfg, "decode_step", None, 1);
         let points = vec![
-            decode_point(&cost, 1, 0.004, "f32", 1.0e6),
-            decode_point(&cost, 1, 0.003, "bf16", 0.55e6),
-            decode_point(&cost, 16, 0.010, "f32", 0.2e6),
+            decode_point(&cost, 1, 0.004, "f32", 1.0e6, "scalar"),
+            decode_point(&cost, 1, 0.003, "bf16", 0.55e6, "scalar"),
+            decode_point(&cost, 16, 0.010, "f32", 0.2e6, "scalar"),
         ];
         let r = dtype_speedup(&points, 1);
         assert!((r - 0.004 / 0.003).abs() < 1e-9);
         // missing bf16 row at that width → 0 (gate fails loudly)
         assert_eq!(dtype_speedup(&points, 16), 0.0);
+        // vector-tier rows never stand in for the scalar baseline: an
+        // avx2 f32 row at B=16 does not un-zero the gate (1.5)
+        let mut mixed = points;
+        mixed.push(decode_point(&cost, 16, 0.002, "bf16", 0.1e6, "avx2"));
+        assert_eq!(dtype_speedup(&mixed, 16), 0.0);
+    }
+
+    #[test]
+    fn isa_prefill_speedup_compares_tiers_at_one_length() {
+        let cfg = crate::runtime::sim_config("sim-130m").unwrap();
+        let cost = crate::runtime::analytic_cost(
+            &cfg, "prefill", Some(2048), 1);
+        let points = vec![
+            prefill_point(&cost, 2048, 0.100, "scalar"),
+            prefill_point(&cost, 2048, 0.080, "avx2"),
+            prefill_point(&cost, 512, 0.030, "scalar"),
+        ];
+        let r = isa_prefill_speedup(&points, 2048, "avx2");
+        assert!((r - 0.100 / 0.080).abs() < 1e-9, "{r}");
+        // either row missing → 0.0, the caller skips the gate loudly
+        assert_eq!(isa_prefill_speedup(&points, 512, "avx2"), 0.0);
+        assert_eq!(isa_prefill_speedup(&points, 2048, "neon"), 0.0);
     }
 
     #[test]
@@ -729,13 +866,14 @@ mod tests {
         let cost = crate::runtime::analytic_cost(
             &cfg, "decode_step", None, 1);
         let decode = vec![
-            decode_point(&cost, 1, 0.004, "f32", cost.bytes_accessed),
+            decode_point(&cost, 1, 0.004, "f32", cost.bytes_accessed,
+                         "scalar"),
             decode_point(&cost, 16, 0.001, "f32",
-                         cost.bytes_accessed / 16.0),
+                         cost.bytes_accessed / 16.0, "scalar"),
         ];
         let pcost = crate::runtime::analytic_cost(
             &cfg, "prefill", Some(512), 1);
-        let prefill = vec![prefill_point(&pcost, 512, 0.05)];
+        let prefill = vec![prefill_point(&pcost, 512, 0.05, "scalar")];
         let j = trajectory_json("test", "sim-130m", "xla", 1, true,
                                 &decode, &prefill, None, None, None);
         validate_trajectory_json(&j).unwrap();
@@ -808,15 +946,18 @@ mod tests {
             &cfg, "decode_step", None, 1);
         // B=16 step takes 4× the B=1 step → 4× tokens/s ratio
         let points = vec![
-            decode_point(&cost, 1, 0.001, "f32", 1.0),
-            decode_point(&cost, 16, 0.004, "f32", 1.0),
+            decode_point(&cost, 1, 0.001, "f32", 1.0, "scalar"),
+            decode_point(&cost, 16, 0.004, "f32", 1.0, "scalar"),
         ];
         assert!((batch_speedup(&points) - 4.0).abs() < 1e-9);
         assert_eq!(batch_speedup(&[]), 0.0);
-        // bf16 rows never leak into the fusion ratio: a (misleadingly
-        // fast) bf16 B=16 row leaves the f32 ratio untouched
+        // bf16 and vector-tier rows never leak into the fusion ratio: a
+        // (misleadingly fast) bf16 B=16 row and an avx2 f32 B=16 row
+        // both leave the scalar f32 ratio untouched
         let mut mixed = points;
-        mixed.push(decode_point(&cost, 16, 0.0001, "bf16", 1.0));
+        mixed.push(decode_point(&cost, 16, 0.0001, "bf16", 1.0,
+                                "scalar"));
+        mixed.push(decode_point(&cost, 16, 0.0001, "f32", 1.0, "avx2"));
         assert!((batch_speedup(&mixed) - 4.0).abs() < 1e-9);
     }
 

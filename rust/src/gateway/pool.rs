@@ -53,11 +53,11 @@ pub fn build(cfg: PoolConfig) -> Result<(Arc<Router>, Arc<InFlightGauge>)> {
         if i == 0 {
             crate::log_info!(
                 "pool: backend={} platform={} model={} ({:.1}M params, \
-                 plan={}, weights={})",
+                 plan={}, weights={}, isa={})",
                 backend.name(), backend.platform(), cfg.model,
                 backend.cfg().n_params_total as f64 / 1e6,
                 if backend.plan_stats().is_some() { "on" } else { "off" },
-                backend.weights_dtype());
+                backend.weights_dtype(), backend.isa());
         }
         if let Some(ckpt) = &cfg.checkpoint {
             let w = crate::tensor::load_mbt(ckpt)?;

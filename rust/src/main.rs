@@ -29,6 +29,7 @@ use mamba2_serve::coordinator::ConnErrors;
 use mamba2_serve::eval::corpus;
 use mamba2_serve::eval::Tokenizer;
 use mamba2_serve::gateway::{pool, Gateway, GatewayConfig};
+use mamba2_serve::runtime::{CliOverrides, RuntimeOptions};
 use mamba2_serve::server::Server;
 use mamba2_serve::util::cli::Cli;
 use mamba2_serve::util::error::Result;
@@ -60,30 +61,35 @@ fn main() -> Result<()> {
         .opt("weights", "f32", "weight stream precision: f32|bf16 \
               (bf16 halves decode weight bandwidth, f32 accumulate; \
               f32 is the bitwise baseline; reference backend only)")
+        .opt("isa", "scalar", "kernel-tier ISA: scalar|avx2|neon|auto \
+              (scalar is the bitwise baseline; auto picks the best \
+              vector tier the host supports; reference backend only)")
+        .opt("backend-threads", "", "backend worker threads per replica \
+              (default: M2_THREADS, else host parallelism; note \
+              --threads is the listener thread count, not this)")
         .opt("prefix-cache-mb", "16", "prompt-prefix cache budget per \
               replica, MiB (0 disables; shared prefixes then always \
               re-prefill)")
         .parse_env();
 
-    // the flags are authoritative: they overwrite any inherited
-    // M2_PLAN / M2_WEIGHTS (backends read the env at open time), and
-    // bad values fail loudly instead of silently meaning the default
-    match cli.get("plan").as_str() {
-        "on" => std::env::set_var("M2_PLAN", "on"),
-        "off" => std::env::set_var("M2_PLAN", "off"),
-        other => {
-            eprintln!("--plan must be on|off (got {other:?})");
-            std::process::exit(2);
-        }
-    }
-    match mamba2_serve::runtime::WeightsDtype::parse(&cli.get("weights")) {
-        Some(w) => std::env::set_var("M2_WEIGHTS", w.as_str()),
-        None => {
-            eprintln!("--weights must be f32|bf16 (got {:?})",
-                      cli.get("weights"));
-            std::process::exit(2);
-        }
-    }
+    // one validated resolution point for the runtime knobs — CLI > env
+    // (M2_PLAN / M2_WEIGHTS / M2_THREADS / M2_ISA) > default, bad
+    // tokens from either layer fail loudly (runtime::options). The
+    // resolved options are re-exported as env because backends read the
+    // env at open time — every replica opened below inherits them.
+    let (plan, weights, bthreads, isa) =
+        (cli.get_opt("plan"), cli.get_opt("weights"),
+         cli.get_opt("backend-threads"), cli.get_opt("isa"));
+    let opts = RuntimeOptions::resolve(&CliOverrides {
+        plan: plan.as_deref(),
+        weights: weights.as_deref(),
+        threads: bthreads.as_deref(),
+        isa: isa.as_deref(),
+    }).unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    });
+    opts.export_env();
 
     let dir = if cli.get("artifacts").is_empty() {
         artifacts_dir()

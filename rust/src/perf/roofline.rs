@@ -1,4 +1,33 @@
-//! Roofline models for the paper's two targets + the host CPU.
+//! Roofline models for the paper's two targets + the host CPU, plus the
+//! per-ISA peak scales the planner prices the kernel tier with
+//! (DESIGN.md §11).
+
+use crate::tensor::kernels::Isa;
+
+/// AVX2 compute-peak scale over scalar: 8 f32 lanes, derated for the
+/// load/store-bound inner loops of the `ikj` kernels (no FMA — the
+/// bitwise contract costs a factor two in throughput).
+pub const AVX2_COMPUTE_SCALE: f64 = 6.0;
+/// NEON compute-peak scale over scalar: 4 f32 lanes, same derate.
+pub const NEON_COMPUTE_SCALE: f64 = 3.0;
+/// AVX2 transcendental scale: the 8-lane polynomial `exp` replaces a
+/// libm call per element, which pays more than the flop scale.
+pub const AVX2_TRANSC_SCALE: f64 = 8.0;
+/// NEON transcendental scale (4-lane polynomial `exp`).
+pub const NEON_TRANSC_SCALE: f64 = 4.0;
+
+/// Per-ISA `(compute, bandwidth, transcendental)` peak scales over the
+/// scalar tier. Bandwidth is 1.0 for every ISA — wider registers do not
+/// raise DRAM bandwidth, which is exactly why the planner leaves
+/// bandwidth-bound decode nodes on the scalar tier (unit-pinned in the
+/// planner tests).
+pub fn isa_scales(isa: Isa) -> (f64, f64, f64) {
+    match isa {
+        Isa::Scalar => (1.0, 1.0, 1.0),
+        Isa::Avx2 => (AVX2_COMPUTE_SCALE, 1.0, AVX2_TRANSC_SCALE),
+        Isa::Neon => (NEON_COMPUTE_SCALE, 1.0, NEON_TRANSC_SCALE),
+    }
+}
 
 #[derive(Debug, Clone, Copy)]
 pub struct Roofline {
@@ -43,6 +72,16 @@ impl Roofline {
         let n = n.max(1) as f64;
         (self.peak_tflops * 1e12 * self.compute_efficiency / n,
          self.peak_gbps * 1e9 * self.bandwidth_efficiency / n)
+    }
+
+    /// [`Roofline::worker_peaks`] under a kernel-tier ISA: the compute
+    /// share scales by the ISA's compute factor, the bandwidth share by
+    /// its (unit) bandwidth factor — `worker_peaks_isa(n, Isa::Scalar)`
+    /// is exactly `worker_peaks(n)`.
+    pub fn worker_peaks_isa(&self, n: usize, isa: Isa) -> (f64, f64) {
+        let (cs, bs, _) = isa_scales(isa);
+        let (f, b) = self.worker_peaks(n);
+        (f * cs, b * bs)
     }
 
     /// Minimum execution time for (flops, bytes) under this roofline.
@@ -131,5 +170,32 @@ mod tests {
         assert!((bc / b1 - 8.0).abs() < 1e-9);
         // degenerate worker counts clamp instead of dividing by zero
         assert_eq!(CPU_HOST.worker_peaks(0), CPU_HOST.worker_peaks(1));
+    }
+
+    #[test]
+    fn isa_scales_are_unit_pinned() {
+        // the planner's ISA pricing rests on these exact values: compute
+        // scales by the lane factor (derated, no FMA), bandwidth never
+        // scales (SIMD does not widen the DRAM bus), transcendentals
+        // scale hardest (polynomial exp replaces a libm call)
+        assert_eq!(isa_scales(Isa::Scalar), (1.0, 1.0, 1.0));
+        assert_eq!(isa_scales(Isa::Avx2), (6.0, 1.0, 8.0));
+        assert_eq!(isa_scales(Isa::Neon), (3.0, 1.0, 4.0));
+        for isa in [Isa::Scalar, Isa::Avx2, Isa::Neon] {
+            let (_, bw, _) = isa_scales(isa);
+            assert_eq!(bw, 1.0, "{isa:?}: bandwidth peak is ISA-invariant");
+        }
+    }
+
+    #[test]
+    fn worker_peaks_isa_scales_compute_only() {
+        let (f_s, b_s) = CPU_HOST.worker_peaks_isa(4, Isa::Scalar);
+        assert_eq!((f_s, b_s), CPU_HOST.worker_peaks(4));
+        let (f_v, b_v) = CPU_HOST.worker_peaks_isa(4, Isa::Avx2);
+        assert!((f_v / f_s - AVX2_COMPUTE_SCALE).abs() < 1e-12);
+        assert_eq!(b_v, b_s, "bandwidth share unchanged under AVX2");
+        let (f_n, b_n) = CPU_HOST.worker_peaks_isa(4, Isa::Neon);
+        assert!((f_n / f_s - NEON_COMPUTE_SCALE).abs() < 1e-12);
+        assert_eq!(b_n, b_s);
     }
 }

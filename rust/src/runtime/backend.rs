@@ -8,8 +8,9 @@
 //! the paper-table benches are all written against `dyn Backend`, so the
 //! same continuous-batching stack runs on
 //!
-//!   * [`crate::runtime::ReferenceBackend`] — pure Rust over
-//!     `tensor::math`, hermetic, no artifacts required (the default), and
+//!   * [`crate::runtime::ReferenceBackend`] — pure Rust over the
+//!     `tensor::kernels` dispatch tier, hermetic, no artifacts required
+//!     (the default), and
 //!   * `ModelSession` (runtime::session) — the PJRT/XLA path over AOT
 //!     HLO artifacts (`--features xla`),
 //!
@@ -442,6 +443,15 @@ pub trait Backend: Send {
     /// Recorded per decode row in `BENCH_*.json` (schema 1.2).
     fn weights_dtype(&self) -> &'static str {
         "f32"
+    }
+
+    /// Effective kernel-tier ISA the hot loops run on (`"scalar"`
+    /// default; `"avx2"` / `"neon"` when the dispatch tier is active —
+    /// DESIGN.md §11). Reports what actually executes on this host, not
+    /// what was requested: an unavailable tier falls back to scalar.
+    /// Recorded per bench row in `BENCH_*.json` (schema 1.5).
+    fn isa(&self) -> &'static str {
+        "scalar"
     }
 
     /// Modelled bytes streamed per generated token at decode width

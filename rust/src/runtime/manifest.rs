@@ -95,6 +95,10 @@ pub struct ScheduleInfo {
     /// weight layout the contractions stream, e.g. `dense`, `tile32`
     /// (f32 column panels of 32), `bf16-rows` ("" = not recorded)
     pub weight_layout: String,
+    /// requested kernel-tier ISA the schedule was priced under, e.g.
+    /// `scalar` / `avx2` / `neon` ("" = not recorded, pre-1.5
+    /// manifests; the scalar tier was the only tier then)
+    pub isa: String,
 }
 
 #[derive(Debug, Clone, Default)]
@@ -151,6 +155,7 @@ fn schedule_from_json(s: &Json) -> ScheduleInfo {
             .unwrap_or_default(),
         weights_dtype: st("weights_dtype"),
         weight_layout: st("weight_layout"),
+        isa: st("isa"),
     }
 }
 
@@ -534,7 +539,8 @@ mod tests {
         let j = Json::parse(
             r#"{"chunk_tile": 24, "row_block": 64, "fanout": 8,
                 "fused": ["residual.out_proj"],
-                "weights_dtype": "bf16", "weight_layout": "bf16-rows"}"#)
+                "weights_dtype": "bf16", "weight_layout": "bf16-rows",
+                "isa": "avx2"}"#)
             .unwrap();
         let s = schedule_from_json(&j);
         assert_eq!(s.chunk_tile, 24);
@@ -543,10 +549,13 @@ mod tests {
         assert_eq!(s.fused, vec!["residual.out_proj".to_string()]);
         assert_eq!(s.weights_dtype, "bf16");
         assert_eq!(s.weight_layout, "bf16-rows");
+        assert_eq!(s.isa, "avx2");
         // missing keys degrade to the empty schedule, not an error —
-        // pre-1.2 manifests carry no dtype/layout fields
+        // pre-1.2 manifests carry no dtype/layout fields and pre-1.5
+        // ones no kernel-tier isa
         let s = schedule_from_json(&Json::parse("{}").unwrap());
         assert_eq!(s, ScheduleInfo::default());
+        assert_eq!(s.isa, "");
     }
 
     #[test]

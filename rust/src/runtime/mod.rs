@@ -12,6 +12,10 @@
 //!   (`--features xla`; see `Cargo.toml` for how to enable it).
 //! * [`manifest`] — model/executable metadata: the typed manifest.json
 //!   view plus the built-in sim-config table and bucket policy.
+//! * [`options`] — one validated resolution point for the runtime knobs
+//!   (`--plan`/`M2_PLAN`, `--weights`/`M2_WEIGHTS`,
+//!   `--backend-threads`/`M2_THREADS`, `--isa`/`M2_ISA`): CLI > env >
+//!   default, bad tokens are loud errors.
 //!
 //! [`open_backend`] / [`open_backend_replicas`] pick a backend at runtime:
 //! `"reference"`, `"xla"`, or `"auto"` (XLA when compiled in *and*
@@ -21,6 +25,7 @@
 
 pub mod backend;
 pub mod manifest;
+pub mod options;
 pub mod plan;
 pub mod reference;
 #[cfg(feature = "xla")]
@@ -31,6 +36,7 @@ pub use backend::{analytic_cost, argmax, argmax_last, fnv1a64, Backend,
                   SESSION_MAGIC, SESSION_VERSION};
 pub use manifest::{sim_config, ConfigInfo, CostInfo, ExecutableSpec,
                    Manifest, ScheduleInfo, WeightsDtype};
+pub use options::{CliOverrides, RuntimeOptions};
 pub use plan::{Plan, PlanCache, PlanMode, PlanStats};
 pub use reference::ReferenceBackend;
 #[cfg(feature = "xla")]

@@ -1,0 +1,234 @@
+//! One resolution point for the runtime knobs (DESIGN.md §11.4).
+//!
+//! Four knobs steer the reference backend — execution mode, weight
+//! stream precision, worker threads, kernel-tier ISA — and each is
+//! reachable two ways: a CLI flag and an `M2_*` env var. Before this
+//! module every binary re-implemented the precedence and validation by
+//! hand (and the env layer was lenient: a typo'd `M2_WEIGHTS=bf-16`
+//! silently meant f32). [`RuntimeOptions`] resolves all four in one
+//! place with one rule — **CLI > env > built-in default** — and a bad
+//! token from *either* layer is a loud [`Err`]; the binaries print it
+//! and exit 2 instead of guessing.
+//!
+//! | knob    | CLI flag            | env          | default        |
+//! |---------|---------------------|--------------|----------------|
+//! | plan    | `--plan`            | `M2_PLAN`    | `on`           |
+//! | weights | `--weights`         | `M2_WEIGHTS` | `f32`          |
+//! | threads | `--backend-threads` | `M2_THREADS` | auto (host)    |
+//! | isa     | `--isa`             | `M2_ISA`     | `scalar`       |
+//!
+//! [`RuntimeOptions::export_env`] writes the resolved options back to
+//! the `M2_*` variables, because backends read the env at open time
+//! (`open_backend_replicas` can open many replicas long after flag
+//! parsing) — the env is the transport, this module is the single
+//! validator in front of it. `--isa auto` resolves to the detected host
+//! tier *here*, so every replica inherits one concrete tier.
+
+use crate::runtime::manifest::WeightsDtype;
+use crate::runtime::plan::PlanMode;
+use crate::tensor::kernels::Isa;
+
+/// The explicitly-passed CLI values for the four runtime knobs
+/// (`None` = the flag was not on the command line, fall through to the
+/// env / default layers). Built by the binaries from `Cli::get_opt`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CliOverrides<'a> {
+    pub plan: Option<&'a str>,
+    pub weights: Option<&'a str>,
+    pub threads: Option<&'a str>,
+    pub isa: Option<&'a str>,
+}
+
+/// The resolved runtime knobs — see the module docs for the layering.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RuntimeOptions {
+    /// plan-driven lowering (default) vs the hand-scheduled oracle.
+    pub plan: PlanMode,
+    /// weight stream precision of the planned path.
+    pub weights: WeightsDtype,
+    /// backend worker threads; `None` = auto (host parallelism, capped
+    /// by the backend — see `reference::default_threads`).
+    pub threads: Option<usize>,
+    /// kernel-tier ISA the planner prices nodes against (`auto` has
+    /// already been resolved to a concrete host tier).
+    pub isa: Isa,
+}
+
+impl Default for RuntimeOptions {
+    fn default() -> RuntimeOptions {
+        RuntimeOptions {
+            plan: PlanMode::On,
+            weights: WeightsDtype::F32,
+            threads: None,
+            isa: Isa::Scalar,
+        }
+    }
+}
+
+impl RuntimeOptions {
+    /// Pure resolution core over pre-picked tokens (each already the
+    /// winner of CLI-over-env for its knob); `None` means default. All
+    /// validation lives here so both layers get identical errors.
+    pub fn from_parts(plan: Option<&str>, weights: Option<&str>,
+                      threads: Option<&str>, isa: Option<&str>)
+        -> Result<RuntimeOptions, String> {
+        let mut o = RuntimeOptions::default();
+        if let Some(v) = plan {
+            o.plan = match v.trim() {
+                "on" => PlanMode::On,
+                // "legacy"/"0" are the documented M2_PLAN spellings
+                "off" | "legacy" | "0" => PlanMode::Off,
+                other => {
+                    return Err(format!(
+                        "--plan / M2_PLAN: expected on|off (got {other:?})"
+                    ))
+                }
+            };
+        }
+        if let Some(v) = weights {
+            o.weights = WeightsDtype::parse(v.trim())
+                .ok_or_else(|| format!(
+                    "--weights / M2_WEIGHTS: expected f32|bf16 \
+                     (got {v:?})"
+                ))?;
+        }
+        if let Some(v) = threads {
+            let n: usize = v.trim().parse().map_err(|_| format!(
+                "--backend-threads / M2_THREADS: expected a positive \
+                 integer (got {v:?})"
+            ))?;
+            if n == 0 {
+                return Err("--backend-threads / M2_THREADS: must be \
+                            at least 1 (1 = fully serial)".to_string());
+            }
+            o.threads = Some(n);
+        }
+        if let Some(v) = isa {
+            o.isa = Isa::from_flag(&v.trim().to_ascii_lowercase())
+                .map_err(|e| format!("--isa / M2_ISA: {e}"))?;
+        }
+        Ok(o)
+    }
+
+    /// Layer `cli` over `env` (both as raw tokens) and resolve. The
+    /// pure form of [`RuntimeOptions::resolve`], used by its tests.
+    pub fn from_layers(cli: &CliOverrides<'_>, env: &CliOverrides<'_>)
+        -> Result<RuntimeOptions, String> {
+        RuntimeOptions::from_parts(cli.plan.or(env.plan),
+                                   cli.weights.or(env.weights),
+                                   cli.threads.or(env.threads),
+                                   cli.isa.or(env.isa))
+    }
+
+    /// Resolve `cli` over this process's `M2_*` environment. An
+    /// *inherited* bad token is as loud as a mistyped flag — resolving
+    /// options is exactly the moment a typo must not silently become
+    /// the default.
+    pub fn resolve(cli: &CliOverrides<'_>)
+        -> Result<RuntimeOptions, String> {
+        let var = |k: &str| std::env::var(k).ok().filter(|v| {
+            !v.trim().is_empty()
+        });
+        let (p, w, t, i) = (var("M2_PLAN"), var("M2_WEIGHTS"),
+                            var("M2_THREADS"), var("M2_ISA"));
+        RuntimeOptions::from_layers(cli, &CliOverrides {
+            plan: p.as_deref(),
+            weights: w.as_deref(),
+            threads: t.as_deref(),
+            isa: i.as_deref(),
+        })
+    }
+
+    /// Write the resolved options back to the `M2_*` variables so every
+    /// backend opened later in this process (they read the env at open
+    /// time) inherits exactly what was resolved — including the
+    /// concrete tier `--isa auto` detected.
+    pub fn export_env(&self) {
+        std::env::set_var("M2_PLAN", match self.plan {
+            PlanMode::On => "on",
+            PlanMode::Off => "off",
+        });
+        std::env::set_var("M2_WEIGHTS", self.weights.as_str());
+        std::env::set_var("M2_ISA", self.isa.label());
+        match self.threads {
+            Some(n) => std::env::set_var("M2_THREADS", n.to_string()),
+            None => std::env::remove_var("M2_THREADS"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Everything here goes through the pure layering core — the
+    // env-reading `resolve`/`export_env` round-trip lives in its own
+    // single-test binary (`tests/runtime_options_env.rs`), because
+    // `std::env::set_var` is not safe under a threaded test harness.
+
+    #[test]
+    fn defaults_when_nothing_is_set() {
+        let o = RuntimeOptions::from_parts(None, None, None, None)
+            .unwrap();
+        assert_eq!(o, RuntimeOptions::default());
+        assert_eq!(o.plan, PlanMode::On);
+        assert_eq!(o.weights, WeightsDtype::F32);
+        assert_eq!(o.threads, None);
+        assert_eq!(o.isa, Isa::Scalar);
+    }
+
+    #[test]
+    fn cli_beats_env_beats_default() {
+        let cli = CliOverrides { weights: Some("bf16"),
+                                 ..Default::default() };
+        let env = CliOverrides { weights: Some("f32"),
+                                 threads: Some("3"),
+                                 isa: Some("scalar"),
+                                 ..Default::default() };
+        let o = RuntimeOptions::from_layers(&cli, &env).unwrap();
+        assert_eq!(o.weights, WeightsDtype::Bf16, "cli wins");
+        assert_eq!(o.threads, Some(3), "env fills cli gaps");
+        assert_eq!(o.plan, PlanMode::On, "default fills the rest");
+    }
+
+    #[test]
+    fn every_knob_parses_its_documented_tokens() {
+        let o = RuntimeOptions::from_parts(
+            Some("off"), Some("bf16"), Some("12"), Some("auto")).unwrap();
+        assert_eq!(o.plan, PlanMode::Off);
+        assert_eq!(o.weights, WeightsDtype::Bf16);
+        assert_eq!(o.threads, Some(12));
+        // `auto` resolves to a concrete host tier at parse time
+        assert_eq!(o.isa, Isa::detect());
+        // legacy M2_PLAN spellings stay accepted
+        for tok in ["legacy", "0"] {
+            let o = RuntimeOptions::from_parts(
+                Some(tok), None, None, None).unwrap();
+            assert_eq!(o.plan, PlanMode::Off);
+        }
+        // isa tokens are case-insensitive (labels stay lowercase)
+        let o = RuntimeOptions::from_parts(
+            None, None, None, Some("SCALAR")).unwrap();
+        assert_eq!(o.isa, Isa::Scalar);
+    }
+
+    #[test]
+    fn bad_tokens_are_loud_and_name_both_spellings() {
+        let cases = [
+            (RuntimeOptions::from_parts(Some("maybe"), None, None, None),
+             "--plan / M2_PLAN"),
+            (RuntimeOptions::from_parts(None, Some("fp8"), None, None),
+             "--weights / M2_WEIGHTS"),
+            (RuntimeOptions::from_parts(None, None, Some("many"), None),
+             "--backend-threads / M2_THREADS"),
+            (RuntimeOptions::from_parts(None, None, Some("0"), None),
+             "--backend-threads / M2_THREADS"),
+            (RuntimeOptions::from_parts(None, None, None, Some("sse9")),
+             "--isa / M2_ISA"),
+        ];
+        for (res, want) in cases {
+            let err = res.unwrap_err();
+            assert!(err.contains(want), "{err:?} should name {want:?}");
+        }
+    }
+}

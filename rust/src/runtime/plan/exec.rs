@@ -1,18 +1,28 @@
 //! Plan executor: interprets a scheduled [`Plan`] over the
-//! `tensor::math` kernels (DESIGN.md §7–§8).
+//! `tensor::kernels` dispatch tier (DESIGN.md §7–§8, §11).
 //!
 //! Bitwise-parity contract: every op reproduces the exact per-element
 //! scalar schedule of the hand-scheduled reference forward (the
 //! `M2_PLAN=off` oracle). The schedule annotations only move *where*
 //! each disjoint output block runs — contraction row blocks and
 //! chunk-cell groups are bitwise-invariant decompositions by
-//! construction (`tensor::math` property sweeps + DESIGN.md §2.2) — so
-//! planned execution is bit-identical to the oracle for every schedule
-//! the planner can emit **at f32 weights**. The bf16 weight stream
-//! ([`ir::WeightRepr::Bf16`]) deliberately differs from the oracle by
-//! exactly the weights' storage rounding; `tests/precision_parity.rs`
-//! bounds it. `tests/plan_parity.rs` pins the f32 contract across shape
-//! buckets, batch sizes and worker counts.
+//! construction (`tensor::kernels` property sweeps + DESIGN.md §2.2) —
+//! so planned execution is bit-identical to the oracle for every
+//! schedule the planner can emit **at f32 weights on the scalar
+//! tier**. The bf16 weight stream ([`ir::WeightRepr::Bf16`])
+//! deliberately differs from the oracle by exactly the weights'
+//! storage rounding; `tests/precision_parity.rs` bounds it.
+//! `tests/plan_parity.rs` pins the f32 contract across shape buckets,
+//! batch sizes and worker counts.
+//!
+//! Kernel tier: each classed node carries a planner-priced
+//! [`crate::tensor::kernels::Isa`] (`node.isa`, DESIGN.md §11) and its
+//! hot loops run through a
+//! [`Dispatch`] built from it. The broadcast kernels (dense/packed/
+//! bf16 matmul, axpy, the scan carry) are bitwise identical across
+//! tiers; lane-accumulated reductions (the Bᵀ head, `dot`, rmsnorm)
+//! and the polynomial `exp` differ within the tolerance protocol —
+//! which is why the default tier is scalar and SIMD is opt-in.
 //!
 //! Memory comes from the plan's memory plan: every [`super::ir::BufSpec`]
 //! is an `(offset, len)` range inside one per-plan slab ([`Arena`]),
@@ -29,11 +39,7 @@
 //! the one slab, since all planned ranges are disjoint.
 
 use crate::bail;
-use crate::tensor::math::{axpy, dot, gated_rmsnorm_rows,
-                          matmul_acc_packed, matmul_acc_strided,
-                          matmul_acc_strided_bf16, matmul_bt_acc_strided,
-                          matmul_bt_acc_strided_bf16, matmul_bt_acc_tiled,
-                          rmsnorm_row, silu, silu_rows, softplus};
+use crate::tensor::kernels::{silu, softplus, Dispatch};
 use crate::tensor::Tensor;
 use crate::util::error::Result;
 use crate::util::threadpool::ThreadPool;
@@ -169,19 +175,21 @@ impl Ro<'_> {
 // -------------------------------------------------- scheduled kernels ---
 
 /// One row block of `C += A @ B` through the node's chosen weight
-/// representation (DESIGN.md §8): dense f32, f32 column panels, or the
-/// bf16 stream — all with identical per-element accumulation order.
-fn mm_block(w: &WeightStream, a: &[f32], lda: usize, rows: usize,
-            k: usize, n: usize, cblk: &mut [f32]) {
+/// representation (DESIGN.md §8) on the node's kernel tier: dense f32,
+/// f32 column panels, or the bf16 stream — all with identical
+/// per-element accumulation order on every tier (broadcast kernels).
+fn mm_block(dx: Dispatch, w: &WeightStream, a: &[f32], lda: usize,
+            rows: usize, k: usize, n: usize, cblk: &mut [f32]) {
     match w {
         WeightStream::F32(b) => {
-            matmul_acc_strided(a, lda, b, rows, k, n, cblk, n);
+            dx.matmul_acc_strided(a, lda, b, rows, k, n, cblk, n);
         }
         WeightStream::Tiled { tile, panels } => {
-            matmul_acc_packed(a, lda, panels, *tile, rows, k, n, cblk, n);
+            dx.matmul_acc_packed(a, lda, panels, *tile, rows, k, n, cblk,
+                                 n);
         }
         WeightStream::Bf16(b) => {
-            matmul_acc_strided_bf16(a, lda, b, rows, k, n, cblk, n);
+            dx.matmul_acc_strided_bf16(a, lda, b, rows, k, n, cblk, n);
         }
     }
 }
@@ -189,18 +197,18 @@ fn mm_block(w: &WeightStream, a: &[f32], lda: usize, rows: usize,
 /// One row block of `C += A @ Bᵀ` (tied lm head); Bᵀ rows are already
 /// contiguous, so the tiled form is pure loop tiling over the dense
 /// layout.
-fn mmbt_block(w: &WeightStream, a: &[f32], lda: usize, rows: usize,
-              k: usize, n: usize, cblk: &mut [f32]) {
+fn mmbt_block(dx: Dispatch, w: &WeightStream, a: &[f32], lda: usize,
+              rows: usize, k: usize, n: usize, cblk: &mut [f32]) {
     match w {
         WeightStream::F32(b) => {
-            matmul_bt_acc_strided(a, lda, b, rows, k, n, cblk, n);
+            dx.matmul_bt_acc_strided(a, lda, b, rows, k, n, cblk, n);
         }
         WeightStream::Tiled { tile, panels } => {
-            matmul_bt_acc_tiled(a, lda, panels, *tile, rows, k, n, cblk,
-                                n);
+            dx.matmul_bt_acc_tiled(a, lda, panels, *tile, rows, k, n,
+                                   cblk, n);
         }
         WeightStream::Bf16(b) => {
-            matmul_bt_acc_strided_bf16(a, lda, b, rows, k, n, cblk, n);
+            dx.matmul_bt_acc_strided_bf16(a, lda, b, rows, k, n, cblk, n);
         }
     }
 }
@@ -211,36 +219,37 @@ fn mmbt_block(w: &WeightStream, a: &[f32], lda: usize, rows: usize,
 /// threshold + fan-out). Bitwise-identical to the serial contraction
 /// for any block size and any f32 representation.
 #[allow(clippy::too_many_arguments)]
-fn mm_acc(pool: Option<&ThreadPool>, sched: Sched, a: &[f32], lda: usize,
-          w: &WeightStream, m: usize, k: usize, n: usize, c: &mut [f32]) {
+fn mm_acc(dx: Dispatch, pool: Option<&ThreadPool>, sched: Sched,
+          a: &[f32], lda: usize, w: &WeightStream, m: usize, k: usize,
+          n: usize, c: &mut [f32]) {
     debug_assert_eq!(c.len(), m * n);
     match (pool, sched) {
         (Some(pool), Sched::RowBlock { rows: rb, .. }) if rb < m => {
             pool.scoped_chunks(c, rb * n, |i, cblk| {
                 let lo = i * rb;
                 let rows = cblk.len() / n;
-                mm_block(w, &a[lo * lda..], lda, rows, k, n, cblk);
+                mm_block(dx, w, &a[lo * lda..], lda, rows, k, n, cblk);
             });
         }
-        _ => mm_block(w, a, lda, m, k, n, c),
+        _ => mm_block(dx, w, a, lda, m, k, n, c),
     }
 }
 
 /// Scheduled `C += A @ Bᵀ` (tied lm head); see [`mm_acc`].
 #[allow(clippy::too_many_arguments)]
-fn mmbt_acc(pool: Option<&ThreadPool>, sched: Sched, a: &[f32],
-            lda: usize, w: &WeightStream, m: usize, k: usize, n: usize,
-            c: &mut [f32]) {
+fn mmbt_acc(dx: Dispatch, pool: Option<&ThreadPool>, sched: Sched,
+            a: &[f32], lda: usize, w: &WeightStream, m: usize, k: usize,
+            n: usize, c: &mut [f32]) {
     debug_assert_eq!(c.len(), m * n);
     match (pool, sched) {
         (Some(pool), Sched::RowBlock { rows: rb, .. }) if rb < m => {
             pool.scoped_chunks(c, rb * n, |i, cblk| {
                 let lo = i * rb;
                 let rows = cblk.len() / n;
-                mmbt_block(w, &a[lo * lda..], lda, rows, k, n, cblk);
+                mmbt_block(dx, w, &a[lo * lda..], lda, rows, k, n, cblk);
             });
         }
-        _ => mmbt_block(w, a, lda, m, k, n, c),
+        _ => mmbt_block(dx, w, a, lda, m, k, n, c),
     }
 }
 
@@ -299,6 +308,9 @@ fn run_shared(node: &Node, arena: &mut Arena, params: &Params,
               cfg: &ConfigInfo) -> Result<bool> {
     let (d, di, dp, v) = (cfg.d_model, cfg.d_inner, cfg.d_in_proj(),
                           cfg.vocab_size);
+    // the node's planner-priced kernel tier; `new` re-checks host
+    // capability, so a stale plan can never dispatch an unsupported ISA
+    let dx = Dispatch::new(node.isa);
     match &node.op {
         Op::Embed => {
             let (x, _) = arena.out1(node);
@@ -309,21 +321,21 @@ fn run_shared(node: &Node, arena: &mut Arena, params: &Params,
             let (hn, ro) = arena.out1(node);
             hn.copy_from_slice(ro.buf(node.ins[0]));
             for row in hn.chunks_exact_mut(d) {
-                rmsnorm_row(row, &lp.ln_w, NORM_EPS);
+                dx.rmsnorm_row(row, &lp.ln_w, NORM_EPS);
             }
         }
         Op::MatMul { kind: MatKind::InProj, layer, repr, .. } => {
             let w = params.in_proj_stream(*layer, *repr, d, dp);
             let (zx, ro) = arena.out1(node);
             zx.fill(0.0);
-            mm_acc(pool, node.sched, ro.buf(node.ins[0]), d, &w, rows, d,
-                   dp, zx);
+            mm_acc(dx, pool, node.sched, ro.buf(node.ins[0]), d, &w,
+                   rows, d, dp, zx);
         }
         Op::GateNorm { layer } => {
             let lp = &params.layers[*layer];
             let (y, ro) = arena.out1(node);
             let z = ro.buf(node.ins[1]);
-            gated_rmsnorm_rows(y, z, &lp.norm_w, di, NORM_EPS);
+            dx.gated_rmsnorm_rows(y, z, &lp.norm_w, di, NORM_EPS);
         }
         Op::MatMul { kind: MatKind::OutProj, layer, fuse_residual,
                      repr } => {
@@ -333,29 +345,29 @@ fn run_shared(node: &Node, arena: &mut Arena, params: &Params,
             if *fuse_residual {
                 // x += y @ out_proj — residual rides the accumulating
                 // contraction (the oracle's schedule)
-                mm_acc(pool, node.sched, y, di, &w, rows, di, d, x);
+                mm_acc(dx, pool, node.sched, y, di, &w, rows, di, d, x);
             } else {
                 // cold fallback, never emitted by the current planner
                 // (fusion strictly dominates, a ladder-wide test pins
                 // it) — kept allocation-correct rather than arena-fed
                 let mut tmp = vec![0.0f32; rows * d];
-                mm_acc(pool, node.sched, y, di, &w, rows, di, d,
+                mm_acc(dx, pool, node.sched, y, di, &w, rows, di, d,
                        &mut tmp);
-                crate::tensor::math::add_assign(x, &tmp);
+                dx.add_assign(x, &tmp);
             }
         }
         Op::FinalNorm => {
             let (x, _) = arena.out1(node);
             for row in x.chunks_exact_mut(d) {
-                rmsnorm_row(row, &params.lnf_w, NORM_EPS);
+                dx.rmsnorm_row(row, &params.lnf_w, NORM_EPS);
             }
         }
         Op::MatMul { kind: MatKind::LmHead, repr, .. } => {
             let w = params.embed_stream(*repr);
             let (logits, ro) = arena.out1(node);
             logits.fill(0.0);
-            mmbt_acc(pool, node.sched, ro.buf(node.ins[0]), d, &w, rows,
-                     d, v, logits);
+            mmbt_acc(dx, pool, node.sched, ro.buf(node.ins[0]), d, &w,
+                     rows, d, v, logits);
         }
         _ => return Ok(false),
     }
@@ -402,6 +414,9 @@ pub fn run_prefill(plan: &Plan, cx: &PrefillCtx)
                       rows, cfg)? {
             continue;
         }
+        // chunk-stage nodes run their inner axpy/dot/carry loops on the
+        // planner-priced tier; unclassed ops always carry Isa::Scalar
+        let dx = Dispatch::new(node.isa);
         match &node.op {
             Op::ConvScan { layer } => {
                 let li = *layer;
@@ -443,7 +458,7 @@ pub fn run_prefill(plan: &Plan, cx: &PrefillCtx)
                         for (vv, bv) in row.iter_mut().zip(&lp.conv_b) {
                             *vv += bv;
                         }
-                        silu_rows(row);
+                        dx.silu_rows(row);
                     }
                     // cache the last k-1 pre-activation inputs (t ≥ k-1)
                     for c in 0..ch {
@@ -510,8 +525,8 @@ pub fn run_prefill(plan: &Plan, cx: &PrefillCtx)
                         let bcl = &xact[r * ch + boff + hh * n
                                         ..r * ch + boff + hh * n + n];
                         for pp in 0..p {
-                            axpy(xdt[r * di + hh * p + pp] * wl, bcl,
-                                 &mut head[pp * n..(pp + 1) * n]);
+                            dx.axpy(xdt[r * di + hh * p + pp] * wl, bcl,
+                                    &mut head[pp * n..(pp + 1) * n]);
                         }
                     }
                     head[pn] = last.exp();
@@ -538,10 +553,8 @@ pub fn run_prefill(plan: &Plan, cx: &PrefillCtx)
                             carries[j * pn..(j + 1) * pn]
                                 .copy_from_slice(crow);
                             let cd = summ[j * aw + pn];
-                            for (cv, tv) in crow.iter_mut()
-                                .zip(&summ[j * aw..j * aw + pn]) {
-                                *cv = *cv * cd + *tv;
-                            }
+                            dx.scan_carry(crow, cd,
+                                          &summ[j * aw..j * aw + pn]);
                         }
                         // final state → cache slot (layer, seq, head)
                         for (jj, &cv) in crow.iter().enumerate() {
@@ -574,16 +587,18 @@ pub fn run_prefill(plan: &Plan, cx: &PrefillCtx)
                             let bcs = &xact[rs * ch + boff + hh * n
                                             ..rs * ch + boff + hh * n
                                               + n];
-                            let g = dot(ccl, bcs)
+                            let g = dx.dot(ccl, bcs)
                                 * (dacs[l] - dacs[s]).exp();
-                            axpy(g, &xdt[rs * di + hh * p
-                                         ..rs * di + hh * p + p], yrow);
+                            dx.axpy(g, &xdt[rs * di + hh * p
+                                            ..rs * di + hh * p + p],
+                                    yrow);
                         }
                         // cross-chunk: exp(cum_l) · (carry · C_l)
                         let w = dacs[l].exp();
                         for pp in 0..p {
                             yrow[pp] += w
-                                * dot(&carry[pp * n..(pp + 1) * n], ccl);
+                                * dx.dot(&carry[pp * n..(pp + 1) * n],
+                                         ccl);
                         }
                     }
                 });

@@ -8,9 +8,9 @@
 //! pre-planned buffers ([`BufSpec`] — scratch is allocated once per
 //! execution and reused across layers, the memory plan half of the
 //! lowering). The planner (`super::planner`) then annotates each node
-//! with a [`super::planner::Sched`] chosen from the analytic cost
-//! model, and the executor (`super::exec`) interprets the scheduled
-//! graph over `tensor::math`.
+//! with a [`super::planner::Sched`] and a kernel-tier [`Isa`] chosen
+//! from the analytic cost model, and the executor (`super::exec`)
+//! interprets the scheduled graph over `tensor::kernels`.
 //!
 //! The IR deliberately stays at *einsum altitude*: ops are whole
 //! contractions and whole scans, not loops — fusion and tiling are
@@ -19,6 +19,7 @@
 //! schedule) realised natively.
 
 use crate::runtime::ConfigInfo;
+use crate::tensor::kernels::{Isa, KernelClass};
 
 use super::planner::Sched;
 
@@ -69,7 +70,7 @@ pub enum WeightRepr {
     /// transposed-B lm head) so one panel stays cache-resident across a
     /// block of output rows. **Bitwise identical** to dense: per output
     /// element the partial-product order is unchanged
-    /// (`tensor::math::matmul_acc_packed` / `matmul_bt_acc_tiled`).
+    /// (`tensor::kernels` `matmul_acc_packed` / `matmul_bt_acc_tiled`).
     F32Tiled { tile: usize },
     /// bf16 row-major stream, f32 accumulate — halves the streamed
     /// weight bytes the decode roofline is bound on. Not bitwise vs
@@ -158,6 +159,30 @@ impl Op {
             Op::FinalNorm => "final_norm".into(),
         }
     }
+
+    /// The kernel class the planner may retier onto a vector ISA, or
+    /// `None` for ops that always run the scalar tier (DESIGN.md §11).
+    ///
+    /// Only ops whose hot loops route through [`crate::tensor::kernels`]
+    /// dispatch methods are classed: the matmul forms, the chunked-scan
+    /// stages (axpy/dot/carry inner loops), and the silu/rmsnorm row
+    /// family. Element-at-a-time ops (conv windows, the diagonal decode
+    /// step with its in-place byte-cache update, gathers and copies)
+    /// stay scalar so the plan dump never claims a vector tier that the
+    /// executor does not actually run.
+    pub fn kernel_class(&self) -> Option<KernelClass> {
+        match self {
+            Op::MatMul { .. } => Some(KernelClass::MatMul),
+            Op::ChunkState { .. } | Op::ChunkScan { .. }
+            | Op::ChunkRead { .. } => Some(KernelClass::Scan),
+            Op::RmsNorm { .. } | Op::GateNorm { .. } | Op::FinalNorm => {
+                Some(KernelClass::Row)
+            }
+            Op::Embed | Op::ConvScan { .. } | Op::ConvStep { .. }
+            | Op::DtDecay { .. } | Op::XDt { .. } | Op::Gather { .. }
+            | Op::CopyZ { .. } | Op::SsmStep { .. } => None,
+        }
+    }
 }
 
 /// Planner-facing work estimate of one node, filled at lowering.
@@ -173,7 +198,20 @@ pub struct Work {
     pub flops: f64,
     pub shared_bytes: f64,
     pub stream_bytes: f64,
+    /// transcendental evaluations (`exp`/`log`/`rsqrt` calls) — priced
+    /// separately from `flops` because the kernel tier's vector
+    /// polynomial `exp` accelerates them far harder than it does plain
+    /// mul/add streams (the ISA pricing input, DESIGN.md §11)
+    pub transc: f64,
     pub jobs: usize,
+}
+
+impl Work {
+    /// Builder: the same work with a transcendental count attached.
+    pub fn with_transc(mut self, transc: f64) -> Work {
+        self.transc = transc;
+        self
+    }
 }
 
 /// One scheduled op instance.
@@ -185,6 +223,9 @@ pub struct Node {
     pub work: Work,
     /// filled by the planner (`Sched::Serial` until then)
     pub sched: Sched,
+    /// kernel-tier ISA the planner priced for this node
+    /// (`Isa::Scalar` until then, and always for unclassed ops)
+    pub isa: Isa,
     /// contraction dims `(m, k, n)` for MatMul nodes (dump/planning)
     pub mkn: Option<(usize, usize, usize)>,
 }
@@ -206,7 +247,7 @@ impl Graph {
     fn node(&mut self, op: Op, ins: Vec<BufId>, outs: Vec<BufId>,
             work: Work, mkn: Option<(usize, usize, usize)>) {
         self.nodes.push(Node { op, ins, outs, work, sched: Sched::Serial,
-                               mkn });
+                               isa: Isa::Scalar, mkn });
     }
 }
 
@@ -221,13 +262,17 @@ fn mm_work(m: usize, k: usize, n: usize) -> Work {
         flops: 2.0 * f(m) * f(k) * f(n),
         shared_bytes: f(k) * f(n) * 4.0,
         stream_bytes: (f(m) * f(k) + 2.0 * f(m) * f(n)) * 4.0,
+        transc: 0.0,
         jobs: m,
     }
 }
 
-/// Work of a serial elementwise/scan pass (`jobs = 1`).
+/// Work of a serial elementwise/scan pass (`jobs = 1`). Ops with
+/// transcendental inner loops attach their count via
+/// [`Work::with_transc`].
 fn serial_work(flops: f64, bytes: f64) -> Work {
-    Work { flops, shared_bytes: 0.0, stream_bytes: bytes, jobs: 1 }
+    Work { flops, shared_bytes: 0.0, stream_bytes: bytes, transc: 0.0,
+           jobs: 1 }
 }
 
 /// Lower the chunked-parallel prefill (fresh or continued — the graph
@@ -275,17 +320,21 @@ pub fn lower_prefill(cfg: &ConfigInfo, batch: usize, t: usize) -> Graph {
     for li in 0..cfg.n_layer {
         g.node(Op::RmsNorm { layer: li }, vec![x], vec![hn],
                serial_work(3.0 * f(rows) * f(d),
-                           2.0 * f(rows) * f(d) * 4.0), None);
+                           2.0 * f(rows) * f(d) * 4.0)
+                   .with_transc(f(rows)), None);
         g.node(Op::MatMul { kind: MatKind::InProj, layer: li,
-                            fuse_residual: false },
+                            fuse_residual: false,
+                            repr: WeightRepr::F32Dense },
                vec![hn], vec![zx], mm_work(rows, d, dp),
                Some((rows, d, dp)));
         g.node(Op::ConvScan { layer: li }, vec![zx], vec![xact, xbc],
                serial_work(f(rows) * f(ch) * (2.0 * f(k) + 2.0),
-                           3.0 * f(rows) * f(ch) * 4.0), None);
+                           3.0 * f(rows) * f(ch) * 4.0)
+                   .with_transc(f(rows) * f(ch)), None);
         g.node(Op::DtDecay { layer: li }, vec![zx], vec![dtv, da],
                serial_work(6.0 * f(rows) * f(h),
-                           3.0 * f(rows) * f(h) * 4.0), None);
+                           3.0 * f(rows) * f(h) * 4.0)
+                   .with_transc(3.0 * f(rows) * f(h)), None);
         g.node(Op::XDt { layer: li }, vec![xact, dtv], vec![xdt],
                serial_work(f(rows) * f(di),
                            3.0 * f(rows) * f(di) * 4.0), None);
@@ -298,6 +347,9 @@ pub fn lower_prefill(cfg: &ConfigInfo, batch: usize, t: usize) -> Graph {
                    shared_bytes: 0.0,
                    stream_bytes: f(njobs)
                        * (f(aw) + f(lch) * (f(n) + f(p) + 1.0)) * 4.0,
+                   // exp(cumΔ_L − cumΔ_l) per timestep + the chunk
+                   // decay exp per cell
+                   transc: f(njobs) * (f(lch) + 1.0),
                    jobs: njobs,
                }, None);
         g.node(Op::ChunkScan { layer: li }, vec![summ],
@@ -315,6 +367,9 @@ pub fn lower_prefill(cfg: &ConfigInfo, batch: usize, t: usize) -> Graph {
                    stream_bytes: f(njobs)
                        * (f(bw) + f(aw) + f(pn)
                           + f(lch) * (f(n) + f(p)) * 2.0) * 4.0,
+                   // exp decays: one per causal (l, s) pair plus one
+                   // cross-chunk decay per timestep
+                   transc: f(njobs) * f(lch * (lch + 3) / 2),
                    jobs: njobs,
                }, None);
         g.node(Op::Gather { layer: li, fuse_skip: true },
@@ -323,7 +378,8 @@ pub fn lower_prefill(cfg: &ConfigInfo, batch: usize, t: usize) -> Graph {
                            4.0 * f(rows) * f(di) * 4.0), None);
         g.node(Op::GateNorm { layer: li }, vec![y, z], vec![y],
                serial_work(6.0 * f(rows) * f(di),
-                           3.0 * f(rows) * f(di) * 4.0), None);
+                           3.0 * f(rows) * f(di) * 4.0)
+                   .with_transc(f(rows) * f(di) + f(rows)), None);
         g.node(Op::MatMul { kind: MatKind::OutProj, layer: li,
                             fuse_residual: true,
                             repr: WeightRepr::F32Dense },
@@ -332,7 +388,8 @@ pub fn lower_prefill(cfg: &ConfigInfo, batch: usize, t: usize) -> Graph {
     }
     g.node(Op::FinalNorm, vec![x], vec![x],
            serial_work(3.0 * f(rows) * f(d),
-                       2.0 * f(rows) * f(d) * 4.0), None);
+                       2.0 * f(rows) * f(d) * 4.0)
+               .with_transc(f(rows)), None);
     g.node(Op::MatMul { kind: MatKind::LmHead, layer: 0,
                         fuse_residual: false,
                         repr: WeightRepr::F32Dense },
@@ -363,7 +420,8 @@ pub fn lower_decode(cfg: &ConfigInfo, batch: usize) -> Graph {
            serial_work(0.0, 2.0 * f(b) * f(d) * 4.0), None);
     for li in 0..cfg.n_layer {
         g.node(Op::RmsNorm { layer: li }, vec![x], vec![hn],
-               serial_work(3.0 * f(b) * f(d), 2.0 * f(b) * f(d) * 4.0),
+               serial_work(3.0 * f(b) * f(d), 2.0 * f(b) * f(d) * 4.0)
+                   .with_transc(f(b)),
                None);
         g.node(Op::MatMul { kind: MatKind::InProj, layer: li,
                             fuse_residual: false,
@@ -371,23 +429,27 @@ pub fn lower_decode(cfg: &ConfigInfo, batch: usize) -> Graph {
                vec![hn], vec![zx], mm_work(b, d, dp), Some((b, d, dp)));
         g.node(Op::ConvStep { layer: li }, vec![zx], vec![xact],
                serial_work(2.0 * f(b) * f(ch) * f(k),
-                           f(b) * f(ch) * f(k) * 2.0 * 4.0), None);
+                           f(b) * f(ch) * f(k) * 2.0 * 4.0)
+                   .with_transc(f(b) * f(ch)), None);
         g.node(Op::SsmStep { layer: li }, vec![zx, xact], vec![y],
                serial_work(6.0 * f(b) * f(h) * f(p) * f(n),
-                           2.0 * f(b) * f(h) * f(pn_of(p, n)) * 4.0),
+                           2.0 * f(b) * f(h) * f(pn_of(p, n)) * 4.0)
+                   .with_transc(3.0 * f(b) * f(h)),
                None);
         g.node(Op::CopyZ { layer: li }, vec![zx], vec![z],
                serial_work(0.0, 2.0 * f(b) * f(di) * 4.0), None);
         g.node(Op::GateNorm { layer: li }, vec![y, z], vec![y],
                serial_work(6.0 * f(b) * f(di),
-                           3.0 * f(b) * f(di) * 4.0), None);
+                           3.0 * f(b) * f(di) * 4.0)
+                   .with_transc(f(b) * f(di) + f(b)), None);
         g.node(Op::MatMul { kind: MatKind::OutProj, layer: li,
                             fuse_residual: true,
                             repr: WeightRepr::F32Dense },
                vec![y], vec![x], mm_work(b, di, d), Some((b, di, d)));
     }
     g.node(Op::FinalNorm, vec![x], vec![x],
-           serial_work(3.0 * f(b) * f(d), 2.0 * f(b) * f(d) * 4.0), None);
+           serial_work(3.0 * f(b) * f(d), 2.0 * f(b) * f(d) * 4.0)
+               .with_transc(f(b)), None);
     g.node(Op::MatMul { kind: MatKind::LmHead, layer: 0,
                         fuse_residual: false,
                         repr: WeightRepr::F32Dense },
@@ -466,5 +528,60 @@ mod tests {
         assert_eq!(g.nodes[0].op.label(), "embed");
         assert_eq!(g.nodes[2].op.label(), "in_proj.L0");
         assert_eq!(g.nodes.last().unwrap().op.label(), "lm_head");
+    }
+
+    #[test]
+    fn kernel_classes_cover_only_dispatched_ops() {
+        let cfg = sim_config("tiny").unwrap();
+        for g in [lower_prefill(&cfg, 1, 32), lower_decode(&cfg, 2)] {
+            for node in &g.nodes {
+                let class = node.op.kernel_class();
+                match &node.op {
+                    Op::MatMul { .. } => {
+                        assert_eq!(class, Some(KernelClass::MatMul));
+                    }
+                    Op::ChunkState { .. } | Op::ChunkScan { .. }
+                    | Op::ChunkRead { .. } => {
+                        assert_eq!(class, Some(KernelClass::Scan));
+                    }
+                    Op::RmsNorm { .. } | Op::GateNorm { .. }
+                    | Op::FinalNorm => {
+                        assert_eq!(class, Some(KernelClass::Row));
+                    }
+                    _ => assert!(class.is_none(), "{}", node.op.label()),
+                }
+                // lowering leaves every node on the scalar tier; the
+                // planner owns retiering
+                assert_eq!(node.isa, Isa::Scalar);
+            }
+        }
+    }
+
+    #[test]
+    fn transcendental_counts_follow_the_kernels() {
+        let cfg = sim_config("tiny").unwrap();
+        let g = lower_prefill(&cfg, 1, 32);
+        let rows = 32.0;
+        let by = |l: &str| {
+            &g.nodes.iter().find(|n| n.op.label() == l).unwrap().work
+        };
+        // pure data-movement and matmul nodes evaluate no exp/log/rsqrt
+        assert_eq!(by("embed").transc, 0.0);
+        assert_eq!(by("in_proj.L0").transc, 0.0);
+        assert_eq!(by("lm_head").transc, 0.0);
+        // one rsqrt per row for the norms
+        assert_eq!(by("rmsnorm.L0").transc, rows);
+        assert_eq!(by("final_norm").transc, rows);
+        // one silu exp per gated element plus the row rsqrt
+        assert_eq!(by("gate_norm.L0").transc,
+                   rows * cfg.d_inner as f64 + rows);
+        // chunk stages: exp decays per cell (stage B is carry-only)
+        let njobs = (cfg.nheads * 2) as f64;
+        let lch = cfg.chunk_size as f64;
+        assert_eq!(by("chunk_state.L0").transc, njobs * (lch + 1.0));
+        assert_eq!(by("chunk_scan.L0").transc, 0.0);
+        assert_eq!(
+            by("chunk_read.L0").transc,
+            njobs * ((cfg.chunk_size * (cfg.chunk_size + 3) / 2) as f64));
     }
 }

@@ -14,8 +14,8 @@
 //!     node's row-block tiling, chunk tile, thread fan-out and fusion,
 //!     replacing the hand-scheduled constants of the old forward,
 //!   * [`exec`] — an interpreter running the scheduled graph over the
-//!     `tensor::math` kernels, bitwise identical to the hand-scheduled
-//!     oracle (`M2_PLAN=off`),
+//!     `tensor::kernels` dispatch tier, bitwise identical to the
+//!     hand-scheduled oracle (`M2_PLAN=off`) on the scalar tier,
 //!   * [`PlanCache`] — a shape-keyed, bounded cache ("build plan once,
 //!     execute many") with hit/build/planning-time stats surfaced
 //!     through `Backend::plan_stats` into the `BENCH_*.json` perf
@@ -213,7 +213,7 @@ impl Plan {
             self.cost.transcendentals as u64));
         s.push_str(&format!(
             "schedule: row_block={} chunk_tile={} fanout={} fused={} \
-             weights={} layout={}\n",
+             weights={} layout={} isa={}\n",
             self.schedule.row_block, self.schedule.chunk_tile,
             self.schedule.fanout,
             if self.schedule.fused.is_empty() {
@@ -221,7 +221,8 @@ impl Plan {
             } else {
                 self.schedule.fused.join("+")
             },
-            self.schedule.weights_dtype, self.schedule.weight_layout));
+            self.schedule.weights_dtype, self.schedule.weight_layout,
+            self.schedule.isa));
         for (i, node) in self.graph.nodes.iter().enumerate() {
             let out = &self.graph.bufs[node.outs[0].0];
             let shape = format!("{}[{},{}]", out.name, out.rows,
@@ -252,8 +253,14 @@ impl Plan {
                 }
                 _ => String::new(),
             };
+            // retiered nodes carry their ISA; the (default) scalar tier
+            // stays untagged so the pre-kernel-tier goldens hold
+            let itok = match node.isa {
+                crate::tensor::kernels::Isa::Scalar => String::new(),
+                isa => format!(" isa={}", isa.label()),
+            };
             s.push_str(&format!(
-                "%{i:02} {:<16} {:<18}{mm} {sched}{fuse}{wtok}\n",
+                "%{i:02} {:<16} {:<18}{mm} {sched}{fuse}{wtok}{itok}\n",
                 node.op.label(), shape));
         }
         s
@@ -375,7 +382,8 @@ mod tests {
 
     fn build(k: PlanKey) -> Plan {
         let cfg = sim_config("tiny").unwrap();
-        planner::build_plan(&cfg, k, 4, WeightsDtype::F32)
+        planner::build_plan(&cfg, k, 4, WeightsDtype::F32,
+                            crate::tensor::kernels::Isa::Scalar)
     }
 
     #[test]
@@ -438,7 +446,28 @@ mod tests {
         // the precision/layout pass is part of the dumped schedule
         assert!(d.contains("weights=f32"), "{d}");
         assert!(d.contains(" w=f32"), "{d}");
+        // ...and so is the kernel tier: the schedule line always names
+        // it, per-node tags appear only off the scalar tier
+        assert!(d.contains(" isa=scalar\n"), "{d}");
+        assert!(!d.contains(" isa=avx2"), "{d}");
         // one line per node + 3 header lines
+        assert_eq!(d.lines().count(), p.graph.nodes.len() + 3);
+    }
+
+    #[test]
+    fn dump_tags_retiered_nodes() {
+        let cfg = sim_config("sim-130m").unwrap();
+        let k = PlanKey { entry: Entry::Prefill, batch: 1, t: 512 };
+        let p = planner::build_plan(&cfg, k, 8, WeightsDtype::F32,
+                                    crate::tensor::kernels::Isa::Avx2);
+        let d = p.dump();
+        assert!(d.contains(" isa=avx2\n"), "schedule line: {d}");
+        // at least the compute-bound contractions carry the tag, on
+        // their own (unsplit) node lines
+        let tagged = d.lines()
+            .filter(|l| l.starts_with('%') && l.ends_with("isa=avx2"))
+            .count();
+        assert!(tagged >= 3, "{d}");
         assert_eq!(d.lines().count(), p.graph.nodes.len() + 3);
     }
 

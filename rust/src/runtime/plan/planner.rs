@@ -27,10 +27,11 @@
 
 use std::time::Instant;
 
-use crate::perf::roofline::CPU_HOST;
+use crate::perf::roofline::{isa_scales, CPU_HOST};
 use crate::runtime::backend::analytic_cost;
 use crate::runtime::manifest::{ScheduleInfo, WeightsDtype};
 use crate::runtime::ConfigInfo;
+use crate::tensor::kernels::Isa;
 
 use super::ir::{self, MatKind, Op, WeightRepr, Work};
 use super::{ArenaPool, Entry, Plan, PlanKey};
@@ -54,6 +55,15 @@ pub const TILE_MIN_ROWS: usize = 32;
 /// 8W}` plus the serial form. More waves buy load balance on ragged
 /// job counts at the price of dispatch.
 const WAVE_CANDIDATES: [usize; 4] = [1, 2, 4, 8];
+/// Scalar-tier cost of one transcendental evaluation (libm `expf` call
+/// through the softplus/silu/decay paths), measured envelope on the CI
+/// container class — the third axis of the ISA pricing model
+/// (DESIGN.md §11) next to the roofline's flops and bytes.
+pub const TRANSC_S: f64 = 2.0e-8;
+/// A vector tier must beat the scalar price by this relative margin
+/// before the planner retiers a node: SIMD trades bitwise parity for
+/// speed, so a wash prices out to the exact scalar kernels.
+pub const ISA_MARGIN: f64 = 0.02;
 
 /// Execution schedule of one node, chosen by the cost loop.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -93,6 +103,35 @@ fn par_time(w: &Work, jobs: usize, threads: usize) -> f64 {
         + jobs as f64 * DISPATCH_S + JOIN_S
 }
 
+/// Price `work` under an already-chosen schedule on a kernel-tier ISA
+/// (DESIGN.md §11). Unlike [`serial_time`]/[`par_time`] — which pick
+/// the fan-out and are deliberately left ISA-blind so schedules never
+/// shift under retiering — this overlaps compute against the full
+/// memory stream: the compute term (flops at the ISA's scaled peak,
+/// plus transcendentals at [`TRANSC_S`] over the ISA's polynomial-exp
+/// scale) races the bandwidth term (streamed + shared bytes, never
+/// ISA-scaled). Wider lanes therefore only pay off where compute or
+/// transcendentals bind; bandwidth-bound nodes price identically on
+/// every tier and stay scalar under [`ISA_MARGIN`].
+fn isa_time(w: &Work, sched: Sched, threads: usize, isa: Isa) -> f64 {
+    let (cs, _, ts) = isa_scales(isa);
+    let (f1, b1) = CPU_HOST.worker_peaks(threads);
+    let jobs = match sched {
+        Sched::Serial => 1,
+        Sched::RowBlock { blocks, .. } => blocks,
+        Sched::JobGroup { dispatches, .. } => dispatches,
+    };
+    let waves = jobs.div_ceil(threads) as f64;
+    let j = jobs as f64;
+    let compute = waves
+        * (w.flops / j / (f1 * cs) + w.transc / j * TRANSC_S / ts);
+    let memory = waves * (w.stream_bytes / j / b1)
+        + w.shared_bytes / chip_bw();
+    let overhead =
+        if jobs > 1 { j * DISPATCH_S + JOIN_S } else { 0.0 };
+    compute.max(memory) + overhead
+}
+
 /// Choose a schedule for one node: serial vs every wave candidate,
 /// lowest predicted time wins (strict `<`, so ties stay at the coarser
 /// grain). Returns the schedule and its predicted seconds.
@@ -128,6 +167,7 @@ fn epilogue_time(rows: usize, width: usize, threads: usize) -> f64 {
         flops: (rows * width) as f64,
         shared_bytes: 0.0,
         stream_bytes: 3.0 * (rows * width) as f64 * 4.0,
+        transc: 0.0,
         jobs: 1,
     };
     serial_time(&w, threads)
@@ -185,11 +225,17 @@ fn choose_repr(entry: Entry, weights: WeightsDtype, threads: usize,
 }
 
 /// Build and schedule the plan for one `(entrypoint, batch, t)` shape
-/// bucket. Pure function of `(cfg, key, threads, weights)` — the same
-/// inputs always produce the same schedule (the golden `plan_dump` test
-/// pins that).
+/// bucket. Pure function of `(cfg, key, threads, weights, isa)` — the
+/// same inputs always produce the same schedule (the golden `plan_dump`
+/// test pins that).
+///
+/// `isa` is the backend's *requested* kernel tier (already resolved
+/// against host capability): fan-out and fusion are chosen ISA-blind,
+/// then every classed node is priced scalar-vs-requested through
+/// [`isa_time`] and retiers only on a ≥ [`ISA_MARGIN`] win. With
+/// `Isa::Scalar` the plan is identical to the pre-kernel-tier output.
 pub fn build_plan(cfg: &ConfigInfo, key: PlanKey, threads: usize,
-                  weights: WeightsDtype) -> Plan {
+                  weights: WeightsDtype, isa: Isa) -> Plan {
     let t0 = Instant::now();
     let mut graph = match key.entry {
         Entry::Prefill => ir::lower_prefill(cfg, key.batch, key.t),
@@ -225,8 +271,25 @@ pub fn build_plan(cfg: &ConfigInfo, key: PlanKey, threads: usize,
             node.work = w;
         }
         let (sched, secs) = choose(&node.work, threads, is_mm);
-        est += secs;
         node.sched = sched;
+        // kernel-tier assignment: only classed nodes may leave the
+        // scalar tier, and only when the requested ISA prices a clear
+        // win under the chosen schedule (the margin keeps bitwise
+        // parity wherever SIMD would merely tie)
+        let t_scalar = isa_time(&node.work, sched, threads, Isa::Scalar);
+        let (node_isa, isa_secs) = match (node.op.kernel_class(), isa) {
+            (Some(_), req) if req != Isa::Scalar => {
+                let t_req = isa_time(&node.work, sched, threads, req);
+                if t_req < t_scalar * (1.0 - ISA_MARGIN) {
+                    (req, t_req)
+                } else {
+                    (Isa::Scalar, t_scalar)
+                }
+            }
+            _ => (Isa::Scalar, t_scalar),
+        };
+        node.isa = node_isa;
+        est += isa_secs;
         let mkn = node.mkn;
         match &mut node.op {
             Op::MatMul { kind: MatKind::OutProj, fuse_residual, .. } => {
@@ -294,6 +357,7 @@ pub fn build_plan(cfg: &ConfigInfo, key: PlanKey, threads: usize,
         } else {
             layout
         },
+        isa: isa.label().to_string(),
     };
     // the memory plan: every BufSpec compiles to an offset in one
     // per-plan slab, sized and seeded here so steady-state execution
@@ -335,7 +399,15 @@ mod tests {
     fn plan_w(cfg_name: &str, entry: Entry, batch: usize, t: usize,
               threads: usize, weights: WeightsDtype) -> Plan {
         let cfg = sim_config(cfg_name).unwrap();
-        build_plan(&cfg, PlanKey { entry, batch, t }, threads, weights)
+        build_plan(&cfg, PlanKey { entry, batch, t }, threads, weights,
+                   Isa::Scalar)
+    }
+
+    fn plan_isa(cfg_name: &str, entry: Entry, batch: usize, t: usize,
+                threads: usize, isa: Isa) -> Plan {
+        let cfg = sim_config(cfg_name).unwrap();
+        build_plan(&cfg, PlanKey { entry, batch, t }, threads,
+                   WeightsDtype::F32, isa)
     }
 
     #[test]
@@ -542,6 +614,109 @@ mod tests {
         let d = plan("sim-130m", Entry::Decode, 16, 1, 8);
         let want = analytic_cost(&cfg, "decode_step", None, 16);
         assert_eq!(d.cost.flops, want.flops);
+    }
+
+    // ------------------------ kernel tier & ISA pricing (DESIGN §11) ----
+
+    #[test]
+    fn scalar_tier_plans_are_all_scalar() {
+        // the default tier: every node stays scalar, so the plan (and
+        // the bitwise-parity contract riding on it) is exactly the
+        // pre-kernel-tier output
+        for (entry, t) in [(Entry::Prefill, 512), (Entry::Decode, 1)] {
+            let p = plan_isa("sim-130m", entry, 1, t, 8, Isa::Scalar);
+            assert!(p.graph.nodes.iter()
+                .all(|n| n.isa == Isa::Scalar));
+            assert_eq!(p.schedule.isa, "scalar");
+        }
+    }
+
+    #[test]
+    fn isa_pricing_retieres_compute_not_bandwidth() {
+        // host-independent: build_plan takes the requested tier
+        // directly, so this prices AVX2 on any CI machine.
+        // prefill at 512 tokens: the projections and lm head are
+        // compute-bound (the whole point of the chunked dual form) and
+        // the silu-heavy gate norm is transcendental-bound — both
+        // retier. The inter-chunk carry scan streams 2·pn bytes per
+        // cell for 2·pn flops, far under the per-worker ridge, so
+        // wider lanes buy it nothing and it stays scalar.
+        let p = plan_isa("sim-130m", Entry::Prefill, 1, 512, 8,
+                         Isa::Avx2);
+        assert_eq!(p.schedule.isa, "avx2");
+        for node in &p.graph.nodes {
+            match &node.op {
+                Op::MatMul { .. } => {
+                    assert_eq!(node.isa, Isa::Avx2, "{}",
+                               node.op.label());
+                }
+                Op::GateNorm { .. } => {
+                    assert_eq!(node.isa, Isa::Avx2, "{}",
+                               node.op.label());
+                }
+                Op::ChunkScan { .. } => {
+                    assert_eq!(node.isa, Isa::Scalar, "{}",
+                               node.op.label());
+                }
+                op if op.kernel_class().is_none() => {
+                    assert_eq!(node.isa, Isa::Scalar, "{}",
+                               node.op.label());
+                }
+                _ => {}
+            }
+        }
+        // and the ISA-priced estimate must actually improve
+        let s = plan_isa("sim-130m", Entry::Prefill, 1, 512, 8,
+                         Isa::Scalar);
+        assert!(p.est_seconds < s.est_seconds);
+
+        // batch-1 decode: every contraction is a weight *stream* — one
+        // output row per matrix — so the bandwidth term binds on every
+        // tier and the margin keeps the exact scalar kernels
+        let d = plan_isa("sim-130m", Entry::Decode, 1, 1, 8, Isa::Avx2);
+        assert_eq!(d.schedule.isa, "avx2");
+        for node in &d.graph.nodes {
+            if matches!(node.op, Op::MatMul { .. }) {
+                assert_eq!(node.isa, Isa::Scalar, "{}", node.op.label());
+            }
+        }
+    }
+
+    #[test]
+    fn neon_prices_through_the_same_model() {
+        // the NEON scales are half AVX2's but the compute-bound prefill
+        // contractions still clear the margin
+        let p = plan_isa("sim-130m", Entry::Prefill, 1, 512, 8,
+                         Isa::Neon);
+        assert_eq!(p.schedule.isa, "neon");
+        for node in &p.graph.nodes {
+            if matches!(node.op, Op::MatMul { .. }) {
+                assert_eq!(node.isa, Isa::Neon, "{}", node.op.label());
+            }
+        }
+    }
+
+    #[test]
+    fn isa_never_perturbs_the_schedule() {
+        // fan-out, fusion, tiling and the dump's schedule constants are
+        // chosen ISA-blind: a vector tier may retier nodes but must
+        // never shift row_block/chunk_tile/fusion (the golden dump and
+        // the tolerance-protocol's like-for-like comparisons rely on
+        // matching schedules across tiers)
+        for (entry, batch, t) in
+            [(Entry::Prefill, 1, 512), (Entry::Decode, 16, 1)] {
+            let s = plan_isa("sim-130m", entry, batch, t, 8,
+                             Isa::Scalar);
+            let v = plan_isa("sim-130m", entry, batch, t, 8,
+                             Isa::Avx2);
+            assert_eq!(s.schedule.row_block, v.schedule.row_block);
+            assert_eq!(s.schedule.chunk_tile, v.schedule.chunk_tile);
+            assert_eq!(s.schedule.fused, v.schedule.fused);
+            assert_eq!(s.schedule.weight_layout, v.schedule.weight_layout);
+            for (a, b) in s.graph.nodes.iter().zip(&v.graph.nodes) {
+                assert_eq!(a.sched, b.sched, "{}", a.op.label());
+            }
+        }
     }
 
     #[test]

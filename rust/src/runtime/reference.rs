@@ -2,7 +2,7 @@
 //!
 //! A complete, hermetic implementation of [`crate::runtime::Backend`] with
 //! no XLA, no Python and no AOT artifacts: the model forward is written
-//! directly over `tensor::math`, numerically mirroring
+//! directly over the `tensor::kernels` tier, numerically mirroring
 //! `python/compile/kernels/ref.py` + `python/compile/model.py` —
 //!
 //!   * chunked-parallel prefill: the quadratic-within-chunk dual form
@@ -26,9 +26,14 @@
 
 use std::sync::OnceLock;
 
-use crate::tensor::math::{axpy, dot, gated_rmsnorm_rows, matmul_acc_strided,
-                          matmul_bt_acc_strided, pack_cols, rmsnorm_row,
-                          silu, silu_rows, softplus, to_bf16};
+// The hand-scheduled oracle bodies below call the scalar tier directly —
+// `M2_PLAN=off` stays bitwise-pinned whatever ISA the planner was asked
+// for. The planned path picks its tier per node (`plan::exec`).
+use crate::tensor::kernels::scalar::{axpy, dot, gated_rmsnorm_rows,
+                                     matmul_acc_strided,
+                                     matmul_bt_acc_strided, rmsnorm_row,
+                                     silu_rows};
+use crate::tensor::kernels::{pack_cols, silu, softplus, to_bf16, Isa};
 use crate::bail;
 use crate::tensor::Tensor;
 use crate::util::error::{Context, Result};
@@ -107,7 +112,7 @@ impl MatPacks {
 pub(crate) enum WeightStream<'a> {
     /// dense f32 row-major (the oracle's access pattern)
     F32(&'a [f32]),
-    /// f32 column panels (`tensor::math::pack_cols`); for the
+    /// f32 column panels (`tensor::kernels::pack_cols`); for the
     /// transposed-B lm head this is the dense layout loop-tiled, so
     /// `panels` is simply the matrix itself
     Tiled { tile: usize, panels: &'a [f32] },
@@ -367,6 +372,11 @@ pub struct ReferenceBackend {
     /// f32 default (bitwise baseline); bf16 halves streamed weight
     /// bytes on decode. The `M2_PLAN=off` oracle always streams f32.
     weights: WeightsDtype,
+    /// requested kernel-tier ISA of the planned path (DESIGN.md §11):
+    /// scalar default (the bitwise oracle); `Avx2`/`Neon` let the
+    /// planner retier compute-bound nodes onto the vector kernels. The
+    /// `M2_PLAN=off` oracle always runs scalar.
+    isa: Isa,
     /// shape-keyed plans: build once per `(entrypoint, batch, t)`,
     /// execute many (DESIGN.md §7)
     plans: PlanCache,
@@ -391,6 +401,7 @@ impl ReferenceBackend {
                            pool: build_pool(threads),
                            plan_mode: PlanMode::from_env(),
                            weights: WeightsDtype::from_env(),
+                           isa: Isa::from_env(),
                            plans: PlanCache::new() }
     }
 
@@ -403,13 +414,16 @@ impl ReferenceBackend {
                               pool: build_pool(threads),
                               plan_mode: PlanMode::from_env(),
                               weights: WeightsDtype::from_env(),
+                              isa: Isa::from_env(),
                               plans: PlanCache::new() })
     }
 
-    /// Pin the worker count (1 = fully serial). The result is bitwise
-    /// independent of this setting; the parity suite exercises that.
-    /// Cached plans are dropped — schedules are chosen for a worker
-    /// count.
+    /// Pin the worker count (1 = fully serial). On the scalar tier
+    /// (the default) the result is bitwise independent of this setting;
+    /// the parity suite exercises that. (Vector tiers are re-priced per
+    /// worker count, so their node tiering — and hence low-order bits —
+    /// may legitimately change with it.) Cached plans are dropped —
+    /// schedules are chosen for a worker count.
     pub fn with_threads(mut self, threads: usize) -> ReferenceBackend {
         self.threads = threads.max(1);
         self.pool = build_pool(self.threads);
@@ -439,6 +453,21 @@ impl ReferenceBackend {
         self
     }
 
+    /// Pin the planned path's kernel tier (also reachable via
+    /// `M2_ISA=avx2` / `--isa avx2`). Default scalar — the bitwise
+    /// oracle. A vector tier lets the planner move compute-bound nodes
+    /// onto the SIMD kernels where its roofline model prices a ≥2% win;
+    /// `tests/precision_parity.rs` bounds the numeric shift and
+    /// `tests/kernel_parity.rs` pins the kernels against the
+    /// lane-ordered oracle. The `M2_PLAN=off` oracle is unaffected — it
+    /// always runs scalar. Cached plans are dropped — schedules record
+    /// the tier they were priced under.
+    pub fn with_isa(mut self, isa: Isa) -> ReferenceBackend {
+        self.isa = isa;
+        self.plans.clear();
+        self
+    }
+
     pub fn plan_mode(&self) -> PlanMode {
         self.plan_mode
     }
@@ -453,7 +482,7 @@ impl ReferenceBackend {
         let key = PlanKey { entry, batch, t };
         self.plans.get_or_build(key, || {
             planner::build_plan(&self.cfg, key, self.threads,
-                                self.weights)
+                                self.weights, self.isa)
         })
     }
 
@@ -1087,6 +1116,16 @@ impl Backend for ReferenceBackend {
         }
     }
 
+    fn isa(&self) -> &'static str {
+        // effective, not requested: an unavailable tier runs scalar
+        // (Dispatch::new falls back), and the oracle path is always
+        // scalar regardless of the knob
+        match self.plan_mode {
+            PlanMode::On if self.isa.available() => self.isa.label(),
+            _ => "scalar",
+        }
+    }
+
     fn bytes_streamed_per_token(&self, batch: usize) -> f64 {
         let b = batch.max(1);
         // the byte-model total the decode schedule was chosen against,
@@ -1230,6 +1269,7 @@ impl Clone for ReferenceBackend {
             .with_threads(self.threads)
             .with_plan_mode(self.plan_mode)
             .with_weights_dtype(self.weights)
+            .with_isa(self.isa)
     }
 }
 
@@ -1425,6 +1465,49 @@ mod tests {
         assert!(bytes_f32 > 0.0);
         assert!(bytes_bf16 < 0.75 * bytes_f32,
                 "bf16 {bytes_bf16} vs f32 {bytes_f32}");
+    }
+
+    #[test]
+    fn isa_surface_reports_the_effective_tier() {
+        // default is the bitwise scalar oracle
+        let b = tiny();
+        assert_eq!(b.isa(), "scalar");
+        // requesting a tier reports it only when the host can run it
+        let v = tiny().with_isa(Isa::detect());
+        assert_eq!(v.isa(), Isa::detect().label());
+        // the hand-scheduled oracle always runs (and reports) scalar
+        let o = tiny().with_isa(Isa::detect())
+            .with_plan_mode(PlanMode::Off);
+        assert_eq!(o.isa(), "scalar");
+        // the builder drops cached plans — schedules record their tier
+        let b = tiny();
+        b.prefill(&(0..16).collect::<Vec<i32>>(), 1).unwrap();
+        assert_eq!(b.plan_stats().unwrap().cached, 1);
+        let b = b.with_isa(Isa::Scalar);
+        assert_eq!(b.plan_stats().unwrap().cached, 0);
+        // clones carry the knob
+        let c = tiny().with_isa(Isa::detect()).clone();
+        assert_eq!(c.isa(), Isa::detect().label());
+    }
+
+    #[test]
+    fn vector_tier_is_deterministic_per_plan() {
+        // whatever tier the host resolves, a fixed (shape, threads)
+        // bucket runs one plan with one tier per node: repeated runs
+        // are bitwise equal. (Cross-thread-count bitwise invariance is
+        // a *scalar-tier* guarantee — retiering is priced per worker
+        // count, so vector plans may legitimately differ across it.)
+        let a = tiny().with_isa(Isa::detect()).with_threads(4);
+        let toks: Vec<i32> = (0..32).map(|i| ((i * 23 + 9) % 512) as i32)
+            .collect();
+        let oa = a.prefill(&toks, 1).unwrap();
+        let ob = a.prefill(&toks, 1).unwrap();
+        assert_eq!(oa.logits.as_f32(), ob.logits.as_f32());
+        assert_eq!(oa.cache.ssm.as_f32(), ob.cache.ssm.as_f32());
+        let s1 = a.decode_step(&oa.cache, &[7]).unwrap();
+        let s2 = a.decode_step(&ob.cache, &[7]).unwrap();
+        assert_eq!(s1.logits.as_f32(), s2.logits.as_f32());
+        assert_eq!(s1.cache.ssm.as_f32(), s2.cache.ssm.as_f32());
     }
 
     #[test]

@@ -1,663 +1,278 @@
-//! Dense f32 kernels for the pure-Rust reference backend (DESIGN.md §2),
-//! plus the precision- and layout-variant weight streams of the lowering
-//! pipeline's precision pass (DESIGN.md §8).
+//! Deprecated free-function facade over [`crate::tensor::kernels`].
 //!
-//! The SSD algorithm is einsum-dominated by construction ("Transformers
-//! are SSMs", Dao & Gu 2024), so the whole reference backend reduces to
-//! the handful of contractions here: a row-major matmul (`ikj` loop order
-//! so the inner loop streams both operands), a transposed-B variant for
-//! the tied lm head, and the pointwise nonlinearities with the paper's
-//! §3.3 precision rules (variance reductions in f32; decays kept in
-//! log-space and exponentiated at compute time).
+//! PR 8 moved the kernel bodies into the ISA-dispatched kernel tier
+//! (`tensor::kernels`, DESIGN.md §11): the scalar loops live in
+//! [`kernels::scalar`], vector tiers behind [`kernels::Dispatch`]. These
+//! wrappers keep the old `tensor::math::*` names compiling for
+//! out-of-tree callers with a compile-time deprecation nudge; each one
+//! forwards straight to the scalar tier, so behaviour is byte-identical
+//! to the pre-PR free functions (pinned by `scalar_facade_is_byte_identical`
+//! below).
 //!
-//! Three weight representations exist for the B operand of the two
-//! matmul forms; all accumulate in f32:
-//!
-//!   * dense f32 — the oracle's exact access pattern,
-//!   * bf16 rows ([`matmul_acc_strided_bf16`] /
-//!     [`matmul_bt_acc_strided_bf16`]) — u16 storage decoded on the fly,
-//!     halving streamed weight bytes on the bandwidth-bound decode path
-//!     (paper §3.3: weights bf16, accumulation f32),
-//!   * f32 column panels ([`pack_cols`] + [`matmul_acc_packed`]) and the
-//!     loop-tiled Bᵀ form ([`matmul_bt_acc_tiled`]) — the planner's
-//!     cache-locality layout for prefill contractions, **bitwise
-//!     identical** to dense because each output element still
-//!     accumulates its partial products in the same ascending-k order.
+//! New code should hold a [`kernels::Dispatch`] (planner-chosen per plan
+//! node) or call [`kernels::scalar`] explicitly when the bitwise oracle
+//! is the point.
 
-/// C (m,n) = A (m,k) @ B (k,n), row-major, f32 accumulation.
+use crate::tensor::kernels;
+
+#[deprecated(since = "0.3.0",
+             note = "moved to tensor::kernels (Dispatch / kernels::scalar)")]
+/// See [`kernels::matmul`].
 pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize)
     -> Vec<f32> {
-    assert_eq!(a.len(), m * k, "matmul: A shape");
-    let mut c = vec![0.0f32; m * n];
-    matmul_acc_strided(a, k, b, m, k, n, &mut c, n);
-    c
+    kernels::matmul(a, b, m, k, n)
 }
 
-/// C (m,n) += A (m,k) @ B (k,n) with row strides: A rows start `lda`
-/// apart, C rows `ldc` apart (both row-major views into larger buffers,
-/// e.g. a column block of a packed projection output). Accumulating into
-/// C lets residual adds fuse into the contraction.
-///
-/// Same `ikj` loop order as [`matmul`] (the inner loop streams one A
-/// scalar against one B row), and each C row is produced independently —
-/// so any row-block decomposition of this call is bitwise identical to
-/// the monolithic call, which is what the threadpool-parallel reference
-/// backend relies on (DESIGN.md §2.2).
+#[deprecated(since = "0.3.0",
+             note = "moved to tensor::kernels (Dispatch / kernels::scalar)")]
+/// See [`kernels::scalar::matmul_acc_strided`].
 pub fn matmul_acc_strided(a: &[f32], lda: usize, b: &[f32], m: usize,
                           k: usize, n: usize, c: &mut [f32], ldc: usize) {
-    assert!(lda >= k && ldc >= n, "matmul_acc_strided: stride < row");
-    assert!(m == 0 || a.len() >= (m - 1) * lda + k,
-            "matmul_acc_strided: A view");
-    assert!(m == 0 || c.len() >= (m - 1) * ldc + n,
-            "matmul_acc_strided: C view");
-    assert_eq!(b.len(), k * n, "matmul_acc_strided: B shape");
-    for i in 0..m {
-        let arow = &a[i * lda..i * lda + k];
-        let crow = &mut c[i * ldc..i * ldc + n];
-        for (p, &aip) in arow.iter().enumerate() {
-            // no zero-skip: 0·NaN must propagate exactly like XLA's dense
-            // matmul so corrupt weights surface identically on both
-            // backends
-            let brow = &b[p * n..(p + 1) * n];
-            for (cv, bv) in crow.iter_mut().zip(brow) {
-                *cv += aip * bv;
-            }
-        }
-    }
+    kernels::scalar::matmul_acc_strided(a, lda, b, m, k, n, c, ldc)
 }
 
-/// C (m,n) = A (m,k) @ Bᵀ where B is (n,k) row-major — dot-product form,
-/// used for the tied embedding head (`logits = x @ embed.T`).
+#[deprecated(since = "0.3.0",
+             note = "moved to tensor::kernels (Dispatch / kernels::scalar)")]
+/// See [`kernels::matmul_bt`].
 pub fn matmul_bt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize)
     -> Vec<f32> {
-    assert_eq!(a.len(), m * k, "matmul_bt: A shape");
-    let mut c = vec![0.0f32; m * n];
-    matmul_bt_acc_strided(a, k, b, m, k, n, &mut c, n);
-    c
+    kernels::matmul_bt(a, b, m, k, n)
 }
 
-/// C (m,n) += A (m,k) @ Bᵀ with row strides (see [`matmul_acc_strided`]);
-/// B is (n,k) row-major. Row-blocked decompositions are bitwise identical
-/// to the monolithic call.
+#[deprecated(since = "0.3.0",
+             note = "moved to tensor::kernels (Dispatch / kernels::scalar)")]
+/// See [`kernels::scalar::matmul_bt_acc_strided`].
 pub fn matmul_bt_acc_strided(a: &[f32], lda: usize, b: &[f32], m: usize,
                              k: usize, n: usize, c: &mut [f32],
                              ldc: usize) {
-    assert!(lda >= k && ldc >= n, "matmul_bt_acc_strided: stride < row");
-    assert!(m == 0 || a.len() >= (m - 1) * lda + k,
-            "matmul_bt_acc_strided: A view");
-    assert!(m == 0 || c.len() >= (m - 1) * ldc + n,
-            "matmul_bt_acc_strided: C view");
-    assert_eq!(b.len(), n * k, "matmul_bt_acc_strided: B shape");
-    for i in 0..m {
-        let arow = &a[i * lda..i * lda + k];
-        for j in 0..n {
-            c[i * ldc + j] += dot(arow, &b[j * k..(j + 1) * k]);
-        }
-    }
+    kernels::scalar::matmul_bt_acc_strided(a, lda, b, m, k, n, c, ldc)
 }
 
-/// Dot product with f32 accumulation (matches XLA's f32 "highest" path on
-/// the sim configs — all artifacts are f32).
+#[deprecated(since = "0.3.0",
+             note = "moved to tensor::kernels (Dispatch / kernels::scalar)")]
+/// See [`kernels::scalar::dot`].
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut s = 0.0f32;
-    for (x, y) in a.iter().zip(b) {
-        s += x * y;
-    }
-    s
+    kernels::scalar::dot(a, b)
 }
 
-// ------------------------------------------------------- bf16 storage ---
-
-/// Round an f32 to bf16 (round-to-nearest-even, the convention of every
-/// hardware bf16 cast). NaNs are quietened with the payload truncated so
-/// a stored NaN can never round into infinity.
+#[deprecated(since = "0.3.0",
+             note = "moved to tensor::kernels (Dispatch / kernels::scalar)")]
+/// See [`kernels::f32_to_bf16`].
 pub fn f32_to_bf16(x: f32) -> u16 {
-    let bits = x.to_bits();
-    if x.is_nan() {
-        return ((bits >> 16) as u16) | 0x0040;
-    }
-    // add 0x7fff + lsb-of-result: ties round to even
-    let round = 0x7fffu32 + ((bits >> 16) & 1);
-    (bits.wrapping_add(round) >> 16) as u16
+    kernels::f32_to_bf16(x)
 }
 
-/// Widen a bf16 back to f32 (exact: bf16 is the top 16 bits of f32).
+#[deprecated(since = "0.3.0",
+             note = "moved to tensor::kernels (Dispatch / kernels::scalar)")]
+/// See [`kernels::bf16_to_f32`].
 #[inline(always)]
 pub fn bf16_to_f32(b: u16) -> f32 {
-    f32::from_bits((b as u32) << 16)
+    kernels::bf16_to_f32(b)
 }
 
-/// Convert a weight matrix to its bf16 stream form (one-time prepack).
+#[deprecated(since = "0.3.0",
+             note = "moved to tensor::kernels (Dispatch / kernels::scalar)")]
+/// See [`kernels::to_bf16`].
 pub fn to_bf16(xs: &[f32]) -> Vec<u16> {
-    xs.iter().map(|&x| f32_to_bf16(x)).collect()
+    kernels::to_bf16(xs)
 }
 
-/// [`matmul_acc_strided`] with a bf16 B operand: B is (k, n) row-major
-/// u16, widened to f32 on the fly, accumulation in f32. Same `ikj` loop
-/// order and the same row-block bitwise invariance as the f32 form —
-/// the *values* differ from f32 only by B's storage rounding.
+#[deprecated(since = "0.3.0",
+             note = "moved to tensor::kernels (Dispatch / kernels::scalar)")]
+/// See [`kernels::scalar::matmul_acc_strided_bf16`].
 #[allow(clippy::too_many_arguments)]
-pub fn matmul_acc_strided_bf16(a: &[f32], lda: usize, b: &[u16],
-                               m: usize, k: usize, n: usize,
-                               c: &mut [f32], ldc: usize) {
-    assert!(lda >= k && ldc >= n, "matmul_acc_strided_bf16: stride < row");
-    assert!(m == 0 || a.len() >= (m - 1) * lda + k,
-            "matmul_acc_strided_bf16: A view");
-    assert!(m == 0 || c.len() >= (m - 1) * ldc + n,
-            "matmul_acc_strided_bf16: C view");
-    assert_eq!(b.len(), k * n, "matmul_acc_strided_bf16: B shape");
-    for i in 0..m {
-        let arow = &a[i * lda..i * lda + k];
-        let crow = &mut c[i * ldc..i * ldc + n];
-        for (p, &aip) in arow.iter().enumerate() {
-            let brow = &b[p * n..(p + 1) * n];
-            for (cv, bv) in crow.iter_mut().zip(brow) {
-                *cv += aip * bf16_to_f32(*bv);
-            }
-        }
-    }
+pub fn matmul_acc_strided_bf16(a: &[f32], lda: usize, b: &[u16], m: usize,
+                               k: usize, n: usize, c: &mut [f32],
+                               ldc: usize) {
+    kernels::scalar::matmul_acc_strided_bf16(a, lda, b, m, k, n, c, ldc)
 }
 
-/// [`matmul_bt_acc_strided`] with a bf16 Bᵀ operand ((n, k) row-major
-/// u16): the tied lm head's bf16 stream form.
+#[deprecated(since = "0.3.0",
+             note = "moved to tensor::kernels (Dispatch / kernels::scalar)")]
+/// See [`kernels::scalar::matmul_bt_acc_strided_bf16`].
 #[allow(clippy::too_many_arguments)]
 pub fn matmul_bt_acc_strided_bf16(a: &[f32], lda: usize, bt: &[u16],
                                   m: usize, k: usize, n: usize,
                                   c: &mut [f32], ldc: usize) {
-    assert!(lda >= k && ldc >= n,
-            "matmul_bt_acc_strided_bf16: stride < row");
-    assert!(m == 0 || a.len() >= (m - 1) * lda + k,
-            "matmul_bt_acc_strided_bf16: A view");
-    assert!(m == 0 || c.len() >= (m - 1) * ldc + n,
-            "matmul_bt_acc_strided_bf16: C view");
-    assert_eq!(bt.len(), n * k, "matmul_bt_acc_strided_bf16: B shape");
-    for i in 0..m {
-        let arow = &a[i * lda..i * lda + k];
-        for j in 0..n {
-            let brow = &bt[j * k..(j + 1) * k];
-            let mut s = 0.0f32;
-            for (x, y) in arow.iter().zip(brow) {
-                s += x * bf16_to_f32(*y);
-            }
-            c[i * ldc + j] += s;
-        }
-    }
+    kernels::scalar::matmul_bt_acc_strided_bf16(a, lda, bt, m, k, n, c,
+                                                ldc)
 }
 
-// ----------------------------------------------- planner tile packing ---
-
-/// Repack a (k, n) row-major B into column panels of `tile` columns:
-/// panel `t` holds rows 0..k of columns [t·tile, min(n, (t+1)·tile)),
-/// row-major within the panel, panels concatenated. Total length stays
-/// k·n; the last panel may be narrower.
-///
-/// This is the prepacked form [`matmul_acc_packed`] streams: one panel
-/// is small enough to stay cache-resident across a whole block of
-/// output rows, so the weight matrix is no longer re-streamed from L2+
-/// per row (the classic pack-B panel layout).
+#[deprecated(since = "0.3.0",
+             note = "moved to tensor::kernels (Dispatch / kernels::scalar)")]
+/// See [`kernels::pack_cols`].
 pub fn pack_cols(b: &[f32], k: usize, n: usize, tile: usize) -> Vec<f32> {
-    assert_eq!(b.len(), k * n, "pack_cols: B shape");
-    assert!(tile > 0, "pack_cols: zero tile");
-    let mut out = Vec::with_capacity(k * n);
-    let mut col = 0;
-    while col < n {
-        let w = tile.min(n - col);
-        for p in 0..k {
-            out.extend_from_slice(&b[p * n + col..p * n + col + w]);
-        }
-        col += w;
-    }
-    out
+    kernels::pack_cols(b, k, n, tile)
 }
 
-/// `C += A @ B` where B is the panel pack of [`pack_cols`]. Loop order
-/// is panel-outer, row-middle, k, column — per C element the partial
-/// products still accumulate in ascending-k order and each element is
-/// touched by exactly one panel, so the result is **bitwise identical**
-/// to [`matmul_acc_strided`] on the dense B.
+#[deprecated(since = "0.3.0",
+             note = "moved to tensor::kernels (Dispatch / kernels::scalar)")]
+/// See [`kernels::scalar::matmul_acc_packed`].
 #[allow(clippy::too_many_arguments)]
 pub fn matmul_acc_packed(a: &[f32], lda: usize, panels: &[f32],
                          tile: usize, m: usize, k: usize, n: usize,
                          c: &mut [f32], ldc: usize) {
-    assert!(lda >= k && ldc >= n, "matmul_acc_packed: stride < row");
-    assert!(m == 0 || a.len() >= (m - 1) * lda + k,
-            "matmul_acc_packed: A view");
-    assert!(m == 0 || c.len() >= (m - 1) * ldc + n,
-            "matmul_acc_packed: C view");
-    assert_eq!(panels.len(), k * n, "matmul_acc_packed: pack shape");
-    assert!(tile > 0, "matmul_acc_packed: zero tile");
-    let mut col = 0;
-    let mut poff = 0;
-    while col < n {
-        let w = tile.min(n - col);
-        let panel = &panels[poff..poff + k * w];
-        for i in 0..m {
-            let arow = &a[i * lda..i * lda + k];
-            let crow = &mut c[i * ldc + col..i * ldc + col + w];
-            for (p, &aip) in arow.iter().enumerate() {
-                let brow = &panel[p * w..(p + 1) * w];
-                for (cv, bv) in crow.iter_mut().zip(brow) {
-                    *cv += aip * bv;
-                }
-            }
-        }
-        col += w;
-        poff += k * w;
-    }
+    kernels::scalar::matmul_acc_packed(a, lda, panels, tile, m, k, n, c,
+                                       ldc)
 }
 
-/// Loop-tiled `C += A @ Bᵀ`: Bᵀ rows are already contiguous k-vectors,
-/// so no repack is needed — tiling the j loop keeps a `tile`-row panel
-/// of Bᵀ cache-resident across all m output rows. Each C element is one
-/// dot product exactly as in [`matmul_bt_acc_strided`], so the result
-/// is bitwise identical for any tile.
+#[deprecated(since = "0.3.0",
+             note = "moved to tensor::kernels (Dispatch / kernels::scalar)")]
+/// See [`kernels::scalar::matmul_bt_acc_tiled`].
 #[allow(clippy::too_many_arguments)]
-pub fn matmul_bt_acc_tiled(a: &[f32], lda: usize, bt: &[f32],
-                           tile: usize, m: usize, k: usize, n: usize,
-                           c: &mut [f32], ldc: usize) {
-    assert!(lda >= k && ldc >= n, "matmul_bt_acc_tiled: stride < row");
-    assert!(m == 0 || a.len() >= (m - 1) * lda + k,
-            "matmul_bt_acc_tiled: A view");
-    assert!(m == 0 || c.len() >= (m - 1) * ldc + n,
-            "matmul_bt_acc_tiled: C view");
-    assert_eq!(bt.len(), n * k, "matmul_bt_acc_tiled: B shape");
-    assert!(tile > 0, "matmul_bt_acc_tiled: zero tile");
-    let mut col = 0;
-    while col < n {
-        let w = tile.min(n - col);
-        for i in 0..m {
-            let arow = &a[i * lda..i * lda + k];
-            for j in col..col + w {
-                c[i * ldc + j] += dot(arow, &bt[j * k..(j + 1) * k]);
-            }
-        }
-        col += w;
-    }
+pub fn matmul_bt_acc_tiled(a: &[f32], lda: usize, bt: &[f32], tile: usize,
+                           m: usize, k: usize, n: usize, c: &mut [f32],
+                           ldc: usize) {
+    kernels::scalar::matmul_bt_acc_tiled(a, lda, bt, tile, m, k, n, c, ldc)
 }
 
-/// x += y elementwise — the unfused form of a residual add (the plan
-/// executor's fallback when a planner ever prices a contraction's
-/// accumulate-fusion out; the fused form folds the add into
-/// [`matmul_acc_strided`]'s accumulating C).
+#[deprecated(since = "0.3.0",
+             note = "moved to tensor::kernels (Dispatch / kernels::scalar)")]
+/// See [`kernels::scalar::add_assign`].
 pub fn add_assign(x: &mut [f32], y: &[f32]) {
-    debug_assert_eq!(x.len(), y.len());
-    for (xv, yv) in x.iter_mut().zip(y) {
-        *xv += yv;
-    }
+    kernels::scalar::add_assign(x, y)
 }
 
-/// y += alpha * x (the einsum inner loop of the intra-chunk dual form).
+#[deprecated(since = "0.3.0",
+             note = "moved to tensor::kernels (Dispatch / kernels::scalar)")]
+/// See [`kernels::scalar::axpy`].
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
-    debug_assert_eq!(x.len(), y.len());
-    for (yv, xv) in y.iter_mut().zip(x) {
-        *yv += alpha * xv;
-    }
+    kernels::scalar::axpy(alpha, x, y)
 }
 
-/// Numerically stable softplus: `log1p(exp(-|x|)) + max(x, 0)`.
+#[deprecated(since = "0.3.0",
+             note = "moved to tensor::kernels (Dispatch / kernels::scalar)")]
+/// See [`kernels::softplus`].
 pub fn softplus(x: f32) -> f32 {
-    (-x.abs()).exp().ln_1p() + x.max(0.0)
+    kernels::softplus(x)
 }
 
-/// SiLU / swish: `x * sigmoid(x)`.
+#[deprecated(since = "0.3.0",
+             note = "moved to tensor::kernels (Dispatch / kernels::scalar)")]
+/// See [`kernels::silu`].
 pub fn silu(x: f32) -> f32 {
-    x / (1.0 + (-x).exp())
+    kernels::silu(x)
 }
 
-/// SiLU over a whole buffer in place (fused row form of [`silu`]).
+#[deprecated(since = "0.3.0",
+             note = "moved to tensor::kernels (Dispatch / kernels::scalar)")]
+/// See [`kernels::scalar::silu_rows`].
 pub fn silu_rows(x: &mut [f32]) {
-    for v in x.iter_mut() {
-        *v = silu(*v);
-    }
+    kernels::scalar::silu_rows(x)
 }
 
-/// Fused gate: `x ⊙= silu(z)` elementwise over rows — the Mamba-2 output
-/// gate, applied before the norm (see [`gated_rmsnorm_rows`]).
+#[deprecated(since = "0.3.0",
+             note = "moved to tensor::kernels (Dispatch / kernels::scalar)")]
+/// See [`kernels::scalar::silu_gate_rows`].
 pub fn silu_gate_rows(x: &mut [f32], z: &[f32]) {
-    debug_assert_eq!(x.len(), z.len());
-    for (xv, zv) in x.iter_mut().zip(z) {
-        *xv *= silu(*zv);
-    }
+    kernels::scalar::silu_gate_rows(x, z)
 }
 
-/// RMSNorm one row in place: `x * rsqrt(mean(x²) + eps) * w`, variance
-/// reduction in f32 (paper §3.3).
+#[deprecated(since = "0.3.0",
+             note = "moved to tensor::kernels (Dispatch / kernels::scalar)")]
+/// See [`kernels::scalar::rmsnorm_row`].
 pub fn rmsnorm_row(x: &mut [f32], w: &[f32], eps: f32) {
-    debug_assert_eq!(x.len(), w.len());
-    let mut ss = 0.0f32;
-    for &v in x.iter() {
-        ss += v * v;
-    }
-    let scale = 1.0 / (ss / x.len() as f32 + eps).sqrt();
-    for (v, wv) in x.iter_mut().zip(w) {
-        *v = *v * scale * wv;
-    }
+    kernels::scalar::rmsnorm_row(x, w, eps)
 }
 
-/// Gated RMSNorm rows: `rmsnorm(x ⊙ silu(z)) * w` — the Mamba-2 output
-/// norm, gate applied pre-normalisation.
+#[deprecated(since = "0.3.0",
+             note = "moved to tensor::kernels (Dispatch / kernels::scalar)")]
+/// See [`kernels::scalar::gated_rmsnorm_rows`].
 pub fn gated_rmsnorm_rows(x: &mut [f32], z: &[f32], w: &[f32], d: usize,
                           eps: f32) {
-    debug_assert_eq!(x.len() % d, 0);
-    silu_gate_rows(x, z);
-    for row in x.chunks_exact_mut(d) {
-        rmsnorm_row(row, w, eps);
-    }
+    kernels::scalar::gated_rmsnorm_rows(x, z, w, d, eps)
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn matmul_small() {
-        // [1 2; 3 4] @ [5 6; 7 8] = [19 22; 43 50]
-        let c = matmul(&[1., 2., 3., 4.], &[5., 6., 7., 8.], 2, 2, 2);
-        assert_eq!(c, vec![19., 22., 43., 50.]);
-    }
-
-    #[test]
-    fn matmul_bt_matches_matmul() {
-        let a = [1.0f32, 2., 3., 4., 5., 6.]; // (2,3)
-        let b = [7.0f32, 8., 9., 10., 11., 12.]; // (3,2)
-        let want = matmul(&a, &b, 2, 3, 2);
-        // Bᵀ row-major is (2,3): [7 9 11; 8 10 12]
-        let bt = [7.0f32, 9., 11., 8., 10., 12.];
-        assert_eq!(matmul_bt(&a, &bt, 2, 3, 2), want);
-    }
-
-    #[test]
-    fn softplus_stable_and_correct() {
-        assert!((softplus(0.0) - 2.0f32.ln()).abs() < 1e-6);
-        assert!((softplus(100.0) - 100.0).abs() < 1e-4);
-        assert!(softplus(-100.0) >= 0.0);
-        assert!(softplus(-100.0) < 1e-6);
-        // softplus(1) = ln(1 + e)
-        assert!((softplus(1.0) - (1.0 + 1.0f32.exp()).ln()).abs() < 1e-6);
-    }
-
-    #[test]
-    fn silu_fixed_points() {
-        assert_eq!(silu(0.0), 0.0);
-        assert!((silu(1.0) - 1.0 / (1.0 + (-1.0f32).exp())).abs() < 1e-7);
-        assert!(silu(-20.0).abs() < 1e-6);
-    }
-
-    #[test]
-    fn rmsnorm_unit_variance() {
-        let mut x = vec![3.0f32, -3.0, 3.0, -3.0];
-        let w = vec![1.0f32; 4];
-        rmsnorm_row(&mut x, &w, 0.0);
-        // mean square of output must be 1
-        let ms: f32 = x.iter().map(|v| v * v).sum::<f32>() / 4.0;
-        assert!((ms - 1.0).abs() < 1e-5);
-    }
-
-    #[test]
-    fn axpy_accumulates() {
-        let mut y = vec![1.0f32, 2.0];
-        axpy(2.0, &[10.0, 20.0], &mut y);
-        assert_eq!(y, vec![21.0, 42.0]);
-    }
-
-    #[test]
-    fn add_assign_matches_fused_accumulate() {
-        // unfused residual (matmul into scratch, then add) must equal
-        // the fused accumulating contraction bitwise: per C element the
-        // partial-product order is identical, the residual is one
-        // trailing add either way — exact for integer-valued floats
-        let a = [1.0f32, 2., 3., 4., 5., 6.]; // (2,3)
-        let b = [1.0f32, -2., 3., 0., 2., 1.]; // (3,2)
-        let resid = [10.0f32, 20., 30., 40.];
-        let mut fused = resid.to_vec();
-        matmul_acc_strided(&a, 3, &b, 2, 3, 2, &mut fused, 2);
-        let mut unfused = resid.to_vec();
-        add_assign(&mut unfused, &matmul(&a, &b, 2, 3, 2));
-        // NOTE: equal here because the values are exactly representable;
-        // on arbitrary floats the two differ in rounding, which is why
-        // the planner's fused choice is pinned by a unit test
-        assert_eq!(fused, unfused);
-    }
-
-    // ------------------------- property sweeps (strided vs scalar) ------
-    //
-    // Seeded random-shape sweeps pinning every batched/strided helper to
-    // the plain scalar path bitwise — the contract the parallel reference
-    // backend's block decompositions rest on.
-
+    use crate::tensor::kernels::{self, Dispatch};
     use crate::util::prng::Rng;
 
-    fn rand_vec(rng: &mut Rng, len: usize) -> Vec<f32> {
-        (0..len).map(|_| (rng.normal() * 1.5) as f32).collect()
-    }
-
-    /// Small-integer-valued floats: every partial sum below is exactly
-    /// representable, so accumulation grouping cannot perturb equality.
-    fn rand_int_vec(rng: &mut Rng, len: usize) -> Vec<f32> {
-        (0..len).map(|_| rng.below(9) as f32 - 4.0).collect()
-    }
-
+    /// The API-redesign pin: the deprecated facade, the scalar tier, and
+    /// `Dispatch::scalar()` are the same code path byte for byte — the
+    /// old free-function names lost nothing in the move.
     #[test]
-    fn prop_strided_matmul_matches_dense() {
-        let mut rng = Rng::new(0xA11CE);
-        for _ in 0..60 {
-            let m = 1 + rng.below(7) as usize;
-            let k = 1 + rng.below(9) as usize;
-            let n = 1 + rng.below(9) as usize;
-            let lda = k + rng.below(4) as usize;
-            let ldc = n + rng.below(4) as usize;
-            // strided views into larger buffers, slack filled with noise
-            // that a correct kernel must never read or write;
-            // integer-valued entries keep `cinit + want` exact under any
-            // accumulation order
-            let abuf = rand_int_vec(&mut rng, m * lda);
-            let mut cbuf = rand_int_vec(&mut rng, m * ldc);
-            let cinit = cbuf.clone();
-            let b = rand_int_vec(&mut rng, k * n);
-            let a_dense: Vec<f32> = (0..m)
-                .flat_map(|i| abuf[i * lda..i * lda + k].to_vec())
-                .collect();
-            let want = matmul(&a_dense, &b, m, k, n);
-            matmul_acc_strided(&abuf, lda, &b, m, k, n, &mut cbuf, ldc);
-            for i in 0..m {
-                for j in 0..ldc {
-                    let got = cbuf[i * ldc + j];
-                    if j < n {
-                        assert_eq!(got,
-                                   cinit[i * ldc + j] + want[i * n + j],
-                                   "acc at ({i},{j})");
-                    } else {
-                        assert_eq!(got, cinit[i * ldc + j],
-                                   "slack clobbered at ({i},{j})");
-                    }
-                }
-            }
-        }
-    }
-
-    #[test]
-    fn prop_strided_matmul_bt_matches_dense() {
-        let mut rng = Rng::new(0xB0B);
-        for _ in 0..60 {
-            let m = 1 + rng.below(7) as usize;
-            let k = 1 + rng.below(9) as usize;
-            let n = 1 + rng.below(9) as usize;
-            let lda = k + rng.below(4) as usize;
-            let abuf = rand_vec(&mut rng, m * lda);
-            let bt = rand_vec(&mut rng, n * k);
-            let a_dense: Vec<f32> = (0..m)
-                .flat_map(|i| abuf[i * lda..i * lda + k].to_vec())
-                .collect();
-            let want = matmul_bt(&a_dense, &bt, m, k, n);
-            let mut c = vec![0.0f32; m * n];
-            matmul_bt_acc_strided(&abuf, lda, &bt, m, k, n, &mut c, n);
-            assert_eq!(c, want);
-        }
-    }
-
-    #[test]
-    fn prop_row_blocked_matmul_is_bitwise_serial() {
-        // the exact decomposition pmm/pbt use: split rows at an arbitrary
-        // point, run each block independently, compare bitwise
-        let mut rng = Rng::new(0xCAFE);
-        for _ in 0..40 {
-            let m = 2 + rng.below(10) as usize;
-            let k = 1 + rng.below(12) as usize;
-            let n = 1 + rng.below(12) as usize;
-            let a = rand_vec(&mut rng, m * k);
-            let b = rand_vec(&mut rng, k * n);
-            let whole = matmul(&a, &b, m, k, n);
-            let split = 1 + rng.below(m as u64 - 1) as usize;
-            let mut blocked = vec![0.0f32; m * n];
-            matmul_acc_strided(&a[..split * k], k, &b, split, k, n,
-                               &mut blocked[..split * n], n);
-            matmul_acc_strided(&a[split * k..], k, &b, m - split, k, n,
-                               &mut blocked[split * n..], n);
-            assert_eq!(blocked, whole, "m={m} split={split}");
-        }
-    }
-
-    // ----------------------- precision & layout variants (DESIGN §8) ----
-
-    #[test]
-    fn bf16_round_trip_and_rne() {
-        // bf16-representable values survive exactly
-        for v in [0.0f32, 1.0, -2.5, 0.15625, 65536.0, -0.0078125] {
-            let b = f32_to_bf16(v);
-            assert_eq!(bf16_to_f32(b), v, "{v}");
-        }
-        // round-to-nearest: 1.0 + 2^-9 (halfway between 1.0 and the next
-        // bf16) ties to even (1.0); anything above goes up
-        let up = f32::from_bits(0x3F80_8001); // just above the tie
-        assert_eq!(bf16_to_f32(f32_to_bf16(up)),
-                   f32::from_bits(0x3F81_0000));
-        let tie = f32::from_bits(0x3F80_8000); // exactly halfway
-        assert_eq!(bf16_to_f32(f32_to_bf16(tie)), 1.0, "tie to even");
-        let tie_odd = f32::from_bits(0x3F81_8000); // halfway above odd lsb
-        assert_eq!(bf16_to_f32(f32_to_bf16(tie_odd)),
-                   f32::from_bits(0x3F82_0000), "tie rounds up to even");
-        // signs, infinities, NaN
-        assert_eq!(bf16_to_f32(f32_to_bf16(-0.0)).to_bits(),
-                   (-0.0f32).to_bits());
-        assert_eq!(bf16_to_f32(f32_to_bf16(f32::INFINITY)), f32::INFINITY);
-        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
-        // rounding never turns a finite value into an unrelated one:
-        // |x - bf16(x)| <= 2^-8 |x|
-        let mut rng = Rng::new(0xBF16);
-        for _ in 0..200 {
-            let x = (rng.normal() * 3.0) as f32;
-            let r = bf16_to_f32(f32_to_bf16(x));
-            assert!((x - r).abs() <= x.abs() / 256.0 + 1e-30, "{x} -> {r}");
-        }
-    }
-
-    #[test]
-    fn prop_bf16_matmul_matches_dense_on_representable_values() {
-        // small integers are exactly representable in bf16, so the bf16
-        // kernels must agree with the f32 kernels bitwise on them — the
-        // storage rounding is the ONLY difference between the paths
-        let mut rng = Rng::new(0xB16B);
-        for _ in 0..40 {
-            let m = 1 + rng.below(6) as usize;
-            let k = 1 + rng.below(9) as usize;
-            let n = 1 + rng.below(9) as usize;
-            let a = rand_vec(&mut rng, m * k);
-            let b = rand_int_vec(&mut rng, k * n);
-            let b16 = to_bf16(&b);
-            let mut want = vec![0.0f32; m * n];
-            matmul_acc_strided(&a, k, &b, m, k, n, &mut want, n);
-            let mut got = vec![0.0f32; m * n];
-            matmul_acc_strided_bf16(&a, k, &b16, m, k, n, &mut got, n);
-            assert_eq!(got, want);
-            let bt = rand_int_vec(&mut rng, n * k);
-            let bt16 = to_bf16(&bt);
-            let mut want = vec![0.0f32; m * n];
-            matmul_bt_acc_strided(&a, k, &bt, m, k, n, &mut want, n);
-            let mut got = vec![0.0f32; m * n];
-            matmul_bt_acc_strided_bf16(&a, k, &bt16, m, k, n, &mut got, n);
-            assert_eq!(got, want);
-        }
-    }
-
-    #[test]
-    fn prop_bf16_matmul_equals_widened_weights() {
-        // on arbitrary floats the bf16 path must equal the f32 path run
-        // on the pre-widened (rounded) weights bitwise: rounding happens
-        // at pack time, never inside the accumulation
-        let mut rng = Rng::new(0x16BF);
-        for _ in 0..40 {
+    fn scalar_facade_is_byte_identical() {
+        let d = Dispatch::scalar();
+        let mut rng = Rng::new(0xFACADE);
+        for _ in 0..30 {
             let m = 1 + rng.below(5) as usize;
             let k = 1 + rng.below(10) as usize;
             let n = 1 + rng.below(10) as usize;
-            let a = rand_vec(&mut rng, m * k);
-            let b = rand_vec(&mut rng, k * n);
+            let a: Vec<f32> =
+                (0..m * k).map(|_| (rng.normal() * 1.5) as f32).collect();
+            let b: Vec<f32> =
+                (0..k * n).map(|_| (rng.normal() * 1.5) as f32).collect();
+            let cinit: Vec<f32> =
+                (0..m * n).map(|_| (rng.normal() * 1.5) as f32).collect();
+
+            let mut old = cinit.clone();
+            matmul_acc_strided(&a, k, &b, m, k, n, &mut old, n);
+            let mut new = cinit.clone();
+            d.matmul_acc_strided(&a, k, &b, m, k, n, &mut new, n);
+            assert_eq!(old.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                       new.iter().map(|v| v.to_bits()).collect::<Vec<_>>());
+
+            let bt: Vec<f32> =
+                (0..n * k).map(|_| (rng.normal() * 1.5) as f32).collect();
+            let mut old = cinit.clone();
+            matmul_bt_acc_strided(&a, k, &bt, m, k, n, &mut old, n);
+            let mut new = cinit.clone();
+            d.matmul_bt_acc_strided(&a, k, &bt, m, k, n, &mut new, n);
+            assert_eq!(old, new);
+
             let b16 = to_bf16(&b);
-            let widened: Vec<f32> =
-                b16.iter().map(|&v| bf16_to_f32(v)).collect();
-            let mut want = vec![0.0f32; m * n];
-            matmul_acc_strided(&a, k, &widened, m, k, n, &mut want, n);
-            let mut got = vec![0.0f32; m * n];
-            matmul_acc_strided_bf16(&a, k, &b16, m, k, n, &mut got, n);
-            assert_eq!(got, want);
-        }
-    }
+            let mut old = cinit.clone();
+            matmul_acc_strided_bf16(&a, k, &b16, m, k, n, &mut old, n);
+            let mut new = cinit.clone();
+            d.matmul_acc_strided_bf16(&a, k, &b16, m, k, n, &mut new, n);
+            assert_eq!(old, new);
 
-    #[test]
-    fn prop_packed_and_tiled_matmul_are_bitwise_dense() {
-        // the layout pass's whole contract: panel packing and bt loop
-        // tiling never move a bit, for any tile width (including ragged
-        // last panels) and any row stride
-        let mut rng = Rng::new(0x7113);
-        for _ in 0..60 {
-            let m = 1 + rng.below(8) as usize;
-            let k = 1 + rng.below(12) as usize;
-            let n = 1 + rng.below(24) as usize;
-            let tile = 1 + rng.below(n as u64 + 3) as usize; // may exceed n
-            let lda = k + rng.below(3) as usize;
-            let a = rand_vec(&mut rng, m * lda);
-            let b = rand_vec(&mut rng, k * n);
-            let cinit = rand_vec(&mut rng, m * n);
-            let mut want = cinit.clone();
-            matmul_acc_strided(&a, lda, &b, m, k, n, &mut want, n);
+            let tile = 1 + rng.below(n as u64 + 1) as usize;
             let panels = pack_cols(&b, k, n, tile);
-            assert_eq!(panels.len(), k * n);
-            let mut got = cinit.clone();
-            matmul_acc_packed(&a, lda, &panels, tile, m, k, n, &mut got, n);
-            assert_eq!(got, want, "packed m={m} k={k} n={n} tile={tile}");
-            let bt = rand_vec(&mut rng, n * k);
-            let mut want = cinit.clone();
-            matmul_bt_acc_strided(&a, lda, &bt, m, k, n, &mut want, n);
-            let mut got = cinit.clone();
-            matmul_bt_acc_tiled(&a, lda, &bt, tile, m, k, n, &mut got, n);
-            assert_eq!(got, want, "bt tiled m={m} k={k} n={n} tile={tile}");
-        }
-    }
+            let mut old = cinit.clone();
+            matmul_acc_packed(&a, k, &panels, tile, m, k, n, &mut old, n);
+            let mut new = cinit.clone();
+            d.matmul_acc_packed(&a, k, &panels, tile, m, k, n, &mut new, n);
+            assert_eq!(old, new);
 
-    #[test]
-    fn pack_cols_layout_is_panel_major() {
-        // (2, 5) matrix, tile 2 → panels [cols 0-1][cols 2-3][col 4]
-        let b = [0.0f32, 1., 2., 3., 4., 10., 11., 12., 13., 14.];
-        let p = pack_cols(&b, 2, 5, 2);
-        assert_eq!(p, vec![0., 1., 10., 11., 2., 3., 12., 13., 4., 14.]);
-    }
+            let z: Vec<f32> =
+                (0..m * n).map(|_| (rng.normal() * 1.5) as f32).collect();
+            let w: Vec<f32> =
+                (0..n).map(|_| (rng.normal() * 1.5) as f32).collect();
+            let mut old = cinit.clone();
+            gated_rmsnorm_rows(&mut old, &z, &w, n, 1e-5);
+            let mut new = cinit.clone();
+            d.gated_rmsnorm_rows(&mut new, &z, &w, n, 1e-5);
+            assert_eq!(old.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                       new.iter().map(|v| v.to_bits()).collect::<Vec<_>>());
 
-    #[test]
-    fn prop_silu_rows_and_gate_match_scalar() {
-        let mut rng = Rng::new(0x5110);
-        for _ in 0..40 {
-            let len = rng.below(64) as usize;
-            let x0 = rand_vec(&mut rng, len);
-            let z = rand_vec(&mut rng, len);
-            let mut rows = x0.clone();
-            silu_rows(&mut rows);
-            let want: Vec<f32> = x0.iter().map(|&v| silu(v)).collect();
-            assert_eq!(rows, want);
-            let mut gated = x0.clone();
-            silu_gate_rows(&mut gated, &z);
-            let want: Vec<f32> = x0.iter().zip(&z)
-                .map(|(&xv, &zv)| xv * silu(zv)).collect();
-            assert_eq!(gated, want);
+            let mut old = cinit.clone();
+            silu_rows(&mut old);
+            let mut new = cinit.clone();
+            d.silu_rows(&mut new);
+            assert_eq!(old, new);
+
+            assert_eq!(dot(&a[..k], &b[..k]).to_bits(),
+                       d.dot(&a[..k], &b[..k]).to_bits());
+            let mut old = cinit.clone();
+            axpy(1.25, &z, &mut old);
+            let mut new = cinit.clone();
+            d.axpy(1.25, &z, &mut new);
+            assert_eq!(old, new);
+            let mut old = cinit.clone();
+            add_assign(&mut old, &z);
+            let mut new = cinit.clone();
+            d.add_assign(&mut new, &z);
+            assert_eq!(old, new);
         }
+        // scalar helpers forward unchanged
+        assert_eq!(silu(0.7).to_bits(), kernels::silu(0.7).to_bits());
+        assert_eq!(softplus(-3.1).to_bits(),
+                   kernels::softplus(-3.1).to_bits());
+        assert_eq!(f32_to_bf16(1.7), kernels::f32_to_bf16(1.7));
+        assert_eq!(bf16_to_f32(0x3FC0), kernels::bf16_to_f32(0x3FC0));
     }
 }

@@ -3,8 +3,9 @@
 //!
 //! The store format is defined by `python/compile/params.py` (magic
 //! "MBT1"): parameters, goldens and trained checkpoints all travel
-//! through it. The `math` submodule holds the matmul/einsum helpers the
-//! pure-Rust reference backend is built from.
+//! through it. The `kernels` submodule is the ISA-dispatched kernel tier
+//! the pure-Rust reference backend is built from (DESIGN.md §11); the
+//! `math` submodule is its deprecated free-function facade.
 
 use std::fmt;
 use std::io::{Read, Write};
@@ -13,6 +14,7 @@ use std::path::Path;
 use crate::util::error::{Context, Result};
 use crate::bail;
 
+pub mod kernels;
 pub mod math;
 
 pub const MBT_MAGIC: u32 = 0x4D42_5431;

@@ -124,6 +124,15 @@ impl Cli {
             .unwrap_or_else(|| panic!("undeclared option --{name}"))
     }
 
+    /// The value only if it was explicitly passed on the command line;
+    /// `None` means "flag absent" (fall through to the env / default
+    /// layers — see `runtime::options`), which `get` cannot express.
+    pub fn get_opt(&self, name: &str) -> Option<String> {
+        assert!(self.specs.iter().any(|s| s.name == name),
+                "undeclared option --{name}");
+        self.values.get(name).cloned()
+    }
+
     pub fn get_usize(&self, name: &str) -> usize {
         self.get(name).parse().unwrap_or_else(|_| {
             eprintln!("error: --{name} must be an integer");
@@ -175,6 +184,17 @@ mod tests {
             .unwrap();
         assert_eq!(c.get("model"), "sim-130m");
         assert!(c.has("verbose"));
+    }
+
+    #[test]
+    fn get_opt_distinguishes_explicit_from_default() {
+        let c = Cli::new("t", "").opt("isa", "scalar", "")
+            .parse(&argv(&["--isa", "avx2"])).unwrap();
+        assert_eq!(c.get_opt("isa"), Some("avx2".to_string()));
+        let c = Cli::new("t", "").opt("isa", "scalar", "")
+            .parse(&argv(&[])).unwrap();
+        assert_eq!(c.get_opt("isa"), None, "default is not explicit");
+        assert_eq!(c.get("isa"), "scalar");
     }
 
     #[test]

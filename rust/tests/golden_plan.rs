@@ -14,13 +14,17 @@
 //! and commit the diff.
 
 use mamba2_serve::runtime::{Backend, PlanMode, ReferenceBackend};
+use mamba2_serve::tensor::kernels::Isa;
 
 const GOLDEN: &str =
     concat!(env!("CARGO_MANIFEST_DIR"), "/tests/goldens/plan_sim-130m.txt");
 
 fn current_dump() -> String {
+    // ISA pinned to scalar so the golden text stays host-independent
+    // even when the suite runs with M2_ISA=auto in the environment
     let b = ReferenceBackend::seeded("sim-130m", 0).unwrap()
         .with_threads(8)
+        .with_isa(Isa::Scalar)
         .with_plan_mode(PlanMode::On);
     let prefill = b.plan_dump("prefill", 512, 1).expect("prefill plan");
     let decode = b.plan_dump("decode_step", 1, 16).expect("decode plan");
@@ -65,4 +69,9 @@ fn golden_covers_both_entrypoints() {
     assert!(want.contains("weights=f32 layout=dense"));
     assert!(want.contains("w=f32.tile32"));
     assert!(want.contains("w=f32.tile16"));
+    // PR 8: the kernel tier is part of the pinned schedule; the golden
+    // is scalar-tier, so no per-node isa tags may appear
+    assert!(want.contains("layout=tile32 isa=scalar"));
+    assert!(want.contains("layout=dense isa=scalar"));
+    assert!(!want.contains("isa=avx2") && !want.contains("isa=neon"));
 }

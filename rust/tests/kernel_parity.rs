@@ -1,0 +1,228 @@
+//! Seeded ragged-shape sweeps pinning the vector kernel tiers against
+//! their scalar / lane-ordered oracles (PR 8, DESIGN.md §11) — the CI
+//! "kernel parity" step's target.
+//!
+//! Two contracts, both **bitwise** (no tolerances anywhere in this
+//! file):
+//!
+//!   * broadcast-A forms (`matmul_acc_*`, `axpy`, `add_assign`,
+//!     `scan_carry`) are j-vectorised — one mul + one add per element in
+//!     scalar order — so every tier must equal the scalar loops exactly;
+//!   * dot/reduction forms (`matmul_bt_*`, `dot`, the rmsnorm variance)
+//!     accumulate across k in SIMD lanes; their pinned reordering is the
+//!     fold-in-halves model of `dot_lanes`/`sum_sq_lanes`, and the
+//!     transcendental rows are a `silu_poly` map — all reproducible in
+//!     portable scalar code, which is what the oracles here are.
+//!
+//! Shapes are deliberately ragged: every (m, k, n) sweep crosses the
+//! 8-lane (AVX2) and 4-lane (NEON) boundaries so remainder tails, short
+//! rows (k < lanes) and strided views all get hit. On a host whose best
+//! tier IS scalar the sweeps still run (dispatch == oracle trivially),
+//! so the binary never reports a skip CI could mistake for coverage.
+
+use mamba2_serve::tensor::kernels::{bf16_to_f32, dot_lanes, pack_cols,
+                                    silu, silu_poly, sum_sq_lanes,
+                                    to_bf16, Dispatch, Isa};
+use mamba2_serve::util::prng::Rng;
+
+const SWEEPS: usize = 60;
+
+fn lanes(isa: Isa) -> usize {
+    match isa {
+        Isa::Scalar => 1,
+        Isa::Avx2 => 8,
+        Isa::Neon => 4,
+    }
+}
+
+fn vecf(rng: &mut Rng, n: usize, scale: f64) -> Vec<f32> {
+    (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+}
+
+/// Ragged (m, k, n): small enough to sweep densely, wide enough that k
+/// and n cross every lane boundary (1..=19 covers 8·2+tail).
+fn mkn(rng: &mut Rng) -> (usize, usize, usize) {
+    (rng.range(1, 8) as usize,
+     rng.range(1, 20) as usize,
+     rng.range(1, 20) as usize)
+}
+
+#[test]
+fn broadcast_matmuls_are_bitwise_scalar_on_ragged_strided_shapes() {
+    let dx = Dispatch::new(Isa::detect());
+    let or = Dispatch::scalar();
+    let mut rng = Rng::new(0x5EED_0001);
+    for sweep in 0..SWEEPS {
+        let (m, k, n) = mkn(&mut rng);
+        let lda = k + rng.range(0, 5) as usize;
+        let ldc = n + rng.range(0, 5) as usize;
+        let a = vecf(&mut rng, (m - 1) * lda + k, 1.0);
+        let b = vecf(&mut rng, k * n, 1.0);
+        let c0 = vecf(&mut rng, (m - 1) * ldc + n, 0.5);
+        let tag = format!("sweep {sweep}: m={m} k={k} n={n} \
+                           lda={lda} ldc={ldc}");
+
+        let (mut cv, mut cs) = (c0.clone(), c0.clone());
+        dx.matmul_acc_strided(&a, lda, &b, m, k, n, &mut cv, ldc);
+        or.matmul_acc_strided(&a, lda, &b, m, k, n, &mut cs, ldc);
+        assert_eq!(cv, cs, "dense: {tag}");
+
+        let tile = rng.range(1, n as i64 + 3) as usize;
+        let panels = pack_cols(&b, k, n, tile);
+        let (mut cv, mut cs) = (c0.clone(), c0.clone());
+        dx.matmul_acc_packed(&a, lda, &panels, tile, m, k, n, &mut cv,
+                             ldc);
+        or.matmul_acc_packed(&a, lda, &panels, tile, m, k, n, &mut cs,
+                             ldc);
+        assert_eq!(cv, cs, "packed tile={tile}: {tag}");
+
+        let bh = to_bf16(&b);
+        let (mut cv, mut cs) = (c0.clone(), c0);
+        dx.matmul_acc_strided_bf16(&a, lda, &bh, m, k, n, &mut cv, ldc);
+        or.matmul_acc_strided_bf16(&a, lda, &bh, m, k, n, &mut cs, ldc);
+        assert_eq!(cv, cs, "bf16: {tag}");
+    }
+}
+
+#[test]
+fn elementwise_kernels_are_bitwise_scalar_on_ragged_lengths() {
+    let dx = Dispatch::new(Isa::detect());
+    let or = Dispatch::scalar();
+    let mut rng = Rng::new(0x5EED_0002);
+    for len in 1..=40 {
+        let x = vecf(&mut rng, len, 1.5);
+        let y0 = vecf(&mut rng, len, 0.5);
+        let alpha = (rng.normal() * 0.7) as f32;
+
+        let (mut yv, mut ys) = (y0.clone(), y0.clone());
+        dx.axpy(alpha, &x, &mut yv);
+        or.axpy(alpha, &x, &mut ys);
+        assert_eq!(yv, ys, "axpy len={len}");
+
+        let (mut yv, mut ys) = (y0.clone(), y0.clone());
+        dx.add_assign(&mut yv, &x);
+        or.add_assign(&mut ys, &x);
+        assert_eq!(yv, ys, "add_assign len={len}");
+
+        let decay = (rng.f64() * 0.99) as f32;
+        let (mut yv, mut ys) = (y0.clone(), y0);
+        dx.scan_carry(&mut yv, decay, &x);
+        or.scan_carry(&mut ys, decay, &x);
+        assert_eq!(yv, ys, "scan_carry len={len}");
+    }
+}
+
+#[test]
+fn dot_form_matmuls_match_the_lane_oracle_per_element() {
+    let isa = Isa::detect();
+    let dx = Dispatch::new(isa);
+    let lane = lanes(dx.isa);
+    let mut rng = Rng::new(0x5EED_0003);
+    for sweep in 0..SWEEPS {
+        let (m, k, n) = mkn(&mut rng);
+        let lda = k + rng.range(0, 5) as usize;
+        let ldc = n + rng.range(0, 5) as usize;
+        let a = vecf(&mut rng, (m - 1) * lda + k, 1.0);
+        let bt = vecf(&mut rng, n * k, 1.0); // (n, k) row-major
+        let c0 = vecf(&mut rng, (m - 1) * ldc + n, 0.5);
+        let tag = format!("sweep {sweep}: m={m} k={k} n={n}");
+
+        // the pinned reordering: c[i,j] += dot_lanes(A_i, Bᵀ_j, lanes)
+        let oracle = |bt_row: &dyn Fn(usize) -> Vec<f32>| -> Vec<f32> {
+            let mut c = c0.clone();
+            for i in 0..m {
+                let ar = &a[i * lda..i * lda + k];
+                for j in 0..n {
+                    c[i * ldc + j] += dot_lanes(ar, &bt_row(j), lane);
+                }
+            }
+            c
+        };
+
+        let want = oracle(&|j| bt[j * k..(j + 1) * k].to_vec());
+        let mut c = c0.clone();
+        dx.matmul_bt_acc_strided(&a, lda, &bt, m, k, n, &mut c, ldc);
+        assert_eq!(c, want, "bt strided: {tag}");
+
+        // loop-tiling over output columns must not touch k-accumulation
+        let tile = rng.range(1, n as i64 + 3) as usize;
+        let mut c = c0.clone();
+        dx.matmul_bt_acc_tiled(&a, lda, &bt, tile, m, k, n, &mut c, ldc);
+        assert_eq!(c, want, "bt tiled tile={tile}: {tag}");
+
+        // bf16 Bᵀ: widening is exact, so the oracle is the same dot
+        // over the widened rows
+        let bth = to_bf16(&bt);
+        let want = oracle(&|j| {
+            bth[j * k..(j + 1) * k].iter().map(|&h| bf16_to_f32(h))
+                .collect()
+        });
+        let mut c = c0.clone();
+        dx.matmul_bt_acc_strided_bf16(&a, lda, &bth, m, k, n, &mut c,
+                                      ldc);
+        assert_eq!(c, want, "bt bf16: {tag}");
+
+        // and the bare dot kernel is the oracle at every ragged k
+        let x = &a[..k];
+        let y = &bt[..k];
+        assert_eq!(dx.dot(x, y), dot_lanes(x, y, lane), "dot: {tag}");
+    }
+}
+
+#[test]
+fn row_kernels_match_the_reduction_and_polynomial_oracles() {
+    let dx = Dispatch::new(Isa::detect());
+    let lane = lanes(dx.isa);
+    let vector = lane > 1;
+    let mut rng = Rng::new(0x5EED_0004);
+    let eps = 1e-5f32;
+    for len in 1..=40 {
+        // rmsnorm: lane-folded variance, then elementwise scale —
+        // reproducible exactly from sum_sq_lanes
+        let x0 = vecf(&mut rng, len, 1.2);
+        let w = vecf(&mut rng, len, 1.0);
+        let mut want = x0.clone();
+        let ss = sum_sq_lanes(&want, lane);
+        let scale = 1.0 / (ss / len as f32 + eps).sqrt();
+        for (v, wv) in want.iter_mut().zip(&w) {
+            *v = *v * scale * wv;
+        }
+        let mut got = x0.clone();
+        dx.rmsnorm_row(&mut got, &w, eps);
+        assert_eq!(got, want, "rmsnorm len={len}");
+
+        // silu rows: a silu_poly map on vector tiers (tails included),
+        // libm silu on scalar
+        let mapf: fn(f32) -> f32 = if vector { silu_poly } else { silu };
+        let mut got = x0.clone();
+        dx.silu_rows(&mut got);
+        let want: Vec<f32> = x0.iter().map(|&v| mapf(v)).collect();
+        assert_eq!(got, want, "silu_rows len={len}");
+
+        let z = vecf(&mut rng, len, 1.0);
+        let mut got = x0.clone();
+        dx.silu_gate_rows(&mut got, &z);
+        let want: Vec<f32> = x0.iter().zip(&z)
+            .map(|(&v, &zv)| v * mapf(zv)).collect();
+        assert_eq!(got, want, "silu_gate_rows len={len}");
+    }
+}
+
+#[test]
+fn requesting_every_tier_never_crashes_and_unavailable_falls_back() {
+    // Dispatch::new is total: on any host, any requested tier yields a
+    // runnable dispatch (unavailable → scalar), so a plan built on one
+    // machine executes on another
+    let mut rng = Rng::new(0x5EED_0005);
+    let a = vecf(&mut rng, 12, 1.0);
+    let b = vecf(&mut rng, 12, 1.0);
+    for isa in [Isa::Scalar, Isa::Avx2, Isa::Neon] {
+        let dx = Dispatch::new(isa);
+        assert!(dx.isa.available());
+        if !isa.available() {
+            assert_eq!(dx.isa, Isa::Scalar, "{isa:?} must fall back");
+        }
+        let d = dx.dot(&a, &b);
+        assert_eq!(d, dot_lanes(&a, &b, lanes(dx.isa)));
+    }
+}

@@ -1,0 +1,65 @@
+//! RuntimeOptions env layering + export, isolated in its own test
+//! binary.
+//!
+//! This file must contain exactly ONE test: `std::env::set_var` is not
+//! thread-safe against the `env::var` reads other tests perform
+//! (concurrent setenv/getenv is UB on glibc), and cargo runs all tests
+//! of one binary in parallel threads. A single test in a dedicated
+//! binary serialises by construction. The pure layering/validation
+//! tests live in `runtime::options` itself.
+
+use mamba2_serve::runtime::{Backend, CliOverrides, ReferenceBackend,
+                            RuntimeOptions};
+use mamba2_serve::tensor::kernels::Isa;
+
+#[test]
+fn env_layer_resolves_exports_and_reaches_backends() {
+    for k in ["M2_PLAN", "M2_WEIGHTS", "M2_THREADS", "M2_ISA"] {
+        std::env::remove_var(k);
+    }
+
+    // clean env → pure defaults
+    let o = RuntimeOptions::resolve(&CliOverrides::default()).unwrap();
+    assert_eq!(o, RuntimeOptions::default());
+
+    // env fills what the CLI leaves unset; CLI wins where both speak
+    std::env::set_var("M2_ISA", "scalar");
+    std::env::set_var("M2_THREADS", "3");
+    std::env::set_var("M2_WEIGHTS", "bf16");
+    let o = RuntimeOptions::resolve(&CliOverrides {
+        weights: Some("f32"),
+        ..Default::default()
+    }).unwrap();
+    assert_eq!(o.threads, Some(3), "env layer");
+    assert_eq!(o.isa, Isa::Scalar, "env layer");
+    assert_eq!(o.weights.as_str(), "f32", "cli beats env");
+
+    // an inherited typo is loud, not silently the default
+    std::env::set_var("M2_ISA", "avx512");
+    let err = RuntimeOptions::resolve(&CliOverrides::default())
+        .unwrap_err();
+    assert!(err.contains("--isa / M2_ISA"), "{err:?}");
+    // ...unless the CLI overrides it before it is ever read
+    std::env::remove_var("M2_THREADS");
+    let o = RuntimeOptions::resolve(&CliOverrides {
+        isa: Some("auto"),
+        ..Default::default()
+    }).unwrap();
+    assert_eq!(o.isa, Isa::detect(), "auto resolved to a host tier");
+
+    // export_env writes the *resolved* options back, and a backend
+    // opened afterwards (which reads the env at open time) sees them
+    o.export_env();
+    assert_eq!(std::env::var("M2_ISA").unwrap(),
+               Isa::detect().label(), "auto exported concretely");
+    assert_eq!(std::env::var("M2_WEIGHTS").unwrap(), "bf16");
+    assert!(std::env::var("M2_THREADS").is_err(),
+            "unset threads stays unset (backend auto-sizes)");
+    let b = ReferenceBackend::seeded("tiny", 0).unwrap();
+    assert_eq!(b.isa(), Isa::detect().label());
+    assert_eq!(b.weights_dtype(), "bf16");
+
+    for k in ["M2_PLAN", "M2_WEIGHTS", "M2_THREADS", "M2_ISA"] {
+        std::env::remove_var(k);
+    }
+}
