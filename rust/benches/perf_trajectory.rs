@@ -24,7 +24,12 @@
 //!     §9),
 //!   * the HTTP gateway (schema 1.4): completions admitted and shed by
 //!     driving `/v1/completions` against a live one-replica pool — the
-//!     serving surface measured end-to-end (DESIGN.md §10).
+//!     serving surface measured end-to-end (DESIGN.md §10),
+//!   * the fusion-region pass (schema 1.6): every row counts its
+//!     plan's cost-chosen regions, the top-level `fusion` block totals
+//!     regions planned and bytes elided, and a second B=1 decode
+//!     backend opened under `M2_FUSE=off` anchors the streamed-bytes
+//!     comparison (DESIGN.md §12).
 //!
 //! `--quick` trims the measurement protocol for CI smoke runs (the sweep
 //! itself is never trimmed — the schema pins it). `--check` exits
@@ -37,7 +42,11 @@
 //!     has no precision pass, e.g. XLA),
 //!   * vector-tier prefill L=2048 tok/s ≥ the scalar tier's (the
 //!     planner only re-tiers nodes its pricing says win, so losing is
-//!     a pricing bug — skipped with a notice on scalar-only hosts).
+//!     a pricing bug — skipped with a notice on scalar-only hosts),
+//!   * fusion-on decode B=1 `bytes_streamed_per_token` ≤ fusion-off
+//!     (schema 1.6): the region pass only fuses where its byte model
+//!     says DRAM traffic drops, so streaming *more* with the pass on
+//!     is a costing bug — skipped when the backend has no planner.
 //!
 //! `--baseline <BENCH_*.json>` additionally gates the f32 decode rows
 //! against a previous PR's artifact (fail on a >10% tok/s drop;
@@ -51,8 +60,8 @@ use mamba2_serve::bench_support::{batch_speedup, compare_to_baseline,
                                   isa_prefill_speedup, open_backend,
                                   prefill_point, quick, trajectory_json,
                                   write_trajectory, BaselineCheck,
-                                  DecodePoint, GatewayTraffic,
-                                  PrefillPoint};
+                                  DecodePoint, FusionSummary,
+                                  GatewayTraffic, PrefillPoint};
 use mamba2_serve::coordinator::{Engine, EngineConfig, GenerateParams,
                                 PrefixCacheStats};
 use mamba2_serve::eval::{corpus, Tokenizer};
@@ -63,7 +72,7 @@ use mamba2_serve::runtime::{reference, Backend, CacheState, PlanStats};
 use mamba2_serve::util::benchkit::{Bench, Table};
 use mamba2_serve::util::json::Json;
 
-const TAG: &str = "pr8";
+const TAG: &str = "pr9";
 const MODEL: &str = "sim-130m";
 const DECODE_BATCHES: [usize; 3] = [1, 4, 16];
 const PREFILL_LENS: [usize; 2] = [512, 2048];
@@ -80,7 +89,8 @@ fn arg_after(flag: &str) -> Option<String> {
 
 /// Decode sweep over one backend: B ∈ {1, 4, 16} from prefilled slots.
 fn decode_sweep(session: &dyn Backend, bench: &mut Bench,
-                out: &mut Vec<DecodePoint>) {
+                out: &mut Vec<DecodePoint>,
+                fusion: &mut FusionSummary) {
     let dt = session.weights_dtype();
     let prompt: Vec<i32> = (0..32).map(|i| ((i * 37 + 11) % 512) as i32)
         .collect();
@@ -97,15 +107,18 @@ fn decode_sweep(session: &dyn Backend, bench: &mut Bench,
             session.decode_step(&cache, &tokens).unwrap();
         });
         // the decode plan is warm after the measurement, so the byte
-        // model answers from the plan (halved weights under bf16)
+        // model and the fusion counters answer from the plan (halved
+        // weights under bf16)
+        let fstats = session.fusion_stats("decode_step", None, b);
+        fusion.add(fstats);
         out.push(decode_point(&session.cost("decode_step", None, b), b,
                               m.summary.mean, dt,
                               session.bytes_streamed_per_token(b),
-                              session.isa()));
+                              session.isa(), fstats.0));
         eprintln!("  decode[{dt}] B={b}: {:.2} ms/step, {:.1} tok/s, \
-                   {:.0} B/tok",
+                   {:.0} B/tok, {} fused regions",
                   m.summary.mean * 1e3, b as f64 / m.summary.mean,
-                  session.bytes_streamed_per_token(b));
+                  session.bytes_streamed_per_token(b), fstats.0);
     }
 }
 
@@ -126,13 +139,15 @@ fn main() {
 
     // ---- decode sweeps: f32 baseline, then the bf16 weight stream ----
     let mut decode: Vec<DecodePoint> = Vec::new();
-    decode_sweep(session.as_ref(), &mut bench, &mut decode);
+    let mut fusion = FusionSummary::default();
+    decode_sweep(session.as_ref(), &mut bench, &mut decode, &mut fusion);
     std::env::set_var("M2_WEIGHTS", "bf16");
     let session_bf16 = open_backend(MODEL);
     std::env::set_var("M2_WEIGHTS", "f32");
     let has_bf16 = session_bf16.weights_dtype() == "bf16";
     if has_bf16 {
-        decode_sweep(session_bf16.as_ref(), &mut bench, &mut decode);
+        decode_sweep(session_bf16.as_ref(), &mut bench, &mut decode,
+                     &mut fusion);
     } else {
         eprintln!("  backend {} has no bf16 weight stream — f32 rows \
                    only", session_bf16.name());
@@ -145,7 +160,8 @@ fn main() {
     // every row with its effective tier).
     let mut prefill: Vec<PrefillPoint> = Vec::new();
     let mut prefill_sweep = |session: &dyn Backend,
-                             prefill: &mut Vec<PrefillPoint>| {
+                             prefill: &mut Vec<PrefillPoint>,
+                             fusion: &mut FusionSummary| {
         let isa = session.isa();
         for &l in &PREFILL_LENS {
             let tokens: Vec<i32> =
@@ -154,24 +170,59 @@ fn main() {
                                   l as f64, || {
                 session.prefill(&tokens, 1).unwrap();
             });
+            let fstats = session.fusion_stats("prefill", Some(l), 1);
+            fusion.add(fstats);
             prefill.push(prefill_point(
                 &session.cost("prefill", Some(l), 1), l, m.summary.mean,
-                isa));
-            eprintln!("  prefill[{isa}] L={l}: {:.1} ms, {:.0} tok/s",
-                      m.summary.mean * 1e3, l as f64 / m.summary.mean);
+                isa, fstats.0));
+            eprintln!("  prefill[{isa}] L={l}: {:.1} ms, {:.0} tok/s, \
+                       {} fused regions",
+                      m.summary.mean * 1e3, l as f64 / m.summary.mean,
+                      fstats.0);
         }
     };
-    prefill_sweep(session.as_ref(), &mut prefill);
+    prefill_sweep(session.as_ref(), &mut prefill, &mut fusion);
     std::env::set_var("M2_ISA", "auto");
     let session_vec = open_backend(MODEL);
     std::env::set_var("M2_ISA", "scalar");
     let vec_isa = session_vec.isa();
     let has_vector = vec_isa != "scalar";
     if has_vector {
-        prefill_sweep(session_vec.as_ref(), &mut prefill);
+        prefill_sweep(session_vec.as_ref(), &mut prefill, &mut fusion);
     } else {
         eprintln!("  backend {} has no vector kernel tier on this host \
                    — scalar prefill rows only", session_vec.name());
+    }
+
+    // ---- fusion-off anchor for the streamed-bytes gate (1.6) ------------
+    // A second backend opened under M2_FUSE=off plans the same B=1
+    // decode without the region pass; one step warms its plan so the
+    // byte model answers from it. The pass only fuses where its byte
+    // model says DRAM traffic drops, so fused must stream ≤ unfused.
+    std::env::set_var("M2_FUSE", "off");
+    let session_off = open_backend(MODEL);
+    std::env::set_var("M2_FUSE", "on");
+    let has_fusion = session.fusion_stats("decode_step", None, 1).0 > 0;
+    let (on_bpt, off_bpt) = if has_fusion {
+        let prompt: Vec<i32> = (0..32)
+            .map(|i| ((i * 37 + 11) % 512) as i32).collect();
+        let (c, _) = session_off.prefill_any(&prompt).unwrap();
+        let mut cache = CacheState::zeros(session_off.cfg(), 1);
+        cache.copy_slot_from(0, &c, 0);
+        session_off.decode_step(&cache, &[3]).unwrap();
+        (session.bytes_streamed_per_token(1),
+         session_off.bytes_streamed_per_token(1))
+    } else {
+        (0.0, 0.0)
+    };
+    if has_fusion {
+        eprintln!("  fusion: {} regions planned, {:.0} B elided across \
+                   the measured plans; decode B=1 streams {on_bpt:.0} \
+                   B/tok fused vs {off_bpt:.0} unfused",
+                  fusion.regions_planned, fusion.bytes_elided);
+    } else {
+        eprintln!("  backend {} plans no fusion regions — zero fusion \
+                   block", session.name());
     }
 
     // ---- prefix cache: shared-prefix replay through an engine -----------
@@ -323,7 +374,8 @@ fn main() {
     }
     let doc = trajectory_json(TAG, MODEL, session.name(), threads, quick(),
                               &decode, &prefill, plan_stats,
-                              Some(prefix_stats), Some(gw_traffic));
+                              Some(prefix_stats), Some(gw_traffic),
+                              Some(fusion));
     let path = write_trajectory(TAG, &doc).unwrap_or_else(|e| {
         eprintln!("cannot write trajectory: {e}");
         std::process::exit(1);
@@ -382,6 +434,20 @@ fn main() {
         } else {
             println!("isa gate: skipped — no vector kernel tier on \
                       this host");
+        }
+        // fusion gate (1.6): with the region pass on, the planned B=1
+        // decode must stream no more bytes per token than with it off
+        // — fusing is only ever chosen to cut DRAM traffic
+        if has_fusion {
+            if on_bpt > off_bpt {
+                eprintln!("FAIL: fusion-on decode B=1 streams \
+                           {on_bpt:.0} B/tok > fusion-off \
+                           {off_bpt:.0} — the region pass must never \
+                           add DRAM traffic");
+                failed = true;
+            }
+        } else {
+            println!("fusion gate: skipped — backend plans no regions");
         }
     }
 

@@ -161,7 +161,15 @@ pub fn fmt_pct(x: f64) -> String {
 /// ratio, bf16 ratio, baseline compare, prefill coverage) is computed
 /// over the **scalar rows** only, so trajectories from hosts with
 /// different vector units stay comparable.
-pub const BENCH_SCHEMA_VERSION: f64 = 1.5;
+///
+/// 1.5 → 1.6 (PR 9): every decode AND prefill row carries
+/// `fused_regions` — the number of cost-chosen fusion regions in the
+/// plan that row measured ([`crate::runtime::Backend::fusion_stats`],
+/// DESIGN.md §12; 0 on planner-less backends or with `M2_FUSE=off`) —
+/// and the mandatory top-level `fusion` block (`regions_planned`,
+/// `bytes_elided`) totals the pass's decisions across every plan the
+/// run measured. Pre-1.6 rows are implicitly unfused.
+pub const BENCH_SCHEMA_VERSION: f64 = 1.6;
 
 /// Gateway traffic counters for the trajectory's HTTP leg (1.4):
 /// completions admitted, completions shed with 429, and the replica
@@ -171,6 +179,24 @@ pub struct GatewayTraffic {
     pub requests: u64,
     pub shed: u64,
     pub replicas: u64,
+}
+
+/// Fusion-region totals across every plan the trajectory run measured
+/// (1.6): regions the cost model chose, and the activation bytes its
+/// byte model says those regions keep out of DRAM (DESIGN.md §12).
+#[derive(Default)]
+pub struct FusionSummary {
+    pub regions_planned: u64,
+    pub bytes_elided: f64,
+}
+
+impl FusionSummary {
+    /// Fold one plan's counters ([`crate::runtime::Backend::fusion_stats`])
+    /// into the run total.
+    pub fn add(&mut self, stats: (u64, f64)) {
+        self.regions_planned += stats.0;
+        self.bytes_elided += stats.1;
+    }
 }
 
 /// One decode measurement: `tokens_per_s` is generated tokens per
@@ -190,6 +216,8 @@ pub struct DecodePoint {
     pub bytes_streamed_per_token: f64,
     /// effective kernel tier (1.5: `"scalar"` / `"avx2"` / `"neon"`)
     pub isa: String,
+    /// cost-chosen fusion regions in this row's plan (1.6; 0 = unfused)
+    pub fused_regions: u64,
 }
 
 /// One prefill measurement: `tokens_per_s = seq_len / mean seconds`.
@@ -201,16 +229,20 @@ pub struct PrefillPoint {
     pub hbu: f64,
     /// effective kernel tier (1.5: `"scalar"` / `"avx2"` / `"neon"`)
     pub isa: String,
+    /// cost-chosen fusion regions in this row's plan (1.6; 0 = unfused)
+    pub fused_regions: u64,
 }
 
 /// Build a decode point from a measured mean, the backend's cost, the
 /// weight stream's dtype + byte model
 /// ([`crate::runtime::Backend::weights_dtype`] /
-/// [`crate::runtime::Backend::bytes_streamed_per_token`]) and the
-/// effective kernel tier ([`crate::runtime::Backend::isa`]).
+/// [`crate::runtime::Backend::bytes_streamed_per_token`]), the
+/// effective kernel tier ([`crate::runtime::Backend::isa`]) and the
+/// plan's fusion-region count
+/// ([`crate::runtime::Backend::fusion_stats`]).
 pub fn decode_point(cost: &CostInfo, batch: usize, mean_seconds: f64,
                     weights_dtype: &str, bytes_streamed_per_token: f64,
-                    isa: &str)
+                    isa: &str, fused_regions: u64)
     -> DecodePoint {
     DecodePoint {
         batch,
@@ -221,13 +253,14 @@ pub fn decode_point(cost: &CostInfo, batch: usize, mean_seconds: f64,
         weights_dtype: weights_dtype.to_string(),
         bytes_streamed_per_token,
         isa: isa.to_string(),
+        fused_regions,
     }
 }
 
-/// Build a prefill point from a measured mean, the backend's cost and
-/// the effective kernel tier.
+/// Build a prefill point from a measured mean, the backend's cost, the
+/// effective kernel tier and the plan's fusion-region count.
 pub fn prefill_point(cost: &CostInfo, seq_len: usize, mean_seconds: f64,
-                     isa: &str)
+                     isa: &str, fused_regions: u64)
     -> PrefillPoint {
     PrefillPoint {
         seq_len,
@@ -236,6 +269,7 @@ pub fn prefill_point(cost: &CostInfo, seq_len: usize, mean_seconds: f64,
         mfu: mfu(cost, mean_seconds, CPU_HOST.peak_tflops),
         hbu: hbu(cost, mean_seconds, CPU_HOST.peak_gbps),
         isa: isa.to_string(),
+        fused_regions,
     }
 }
 
@@ -364,17 +398,22 @@ pub fn compare_to_baseline(new: &Json, old: &Json, tol: f64)
 /// ([`crate::coordinator::PrefixCacheStats`]); `None` reports the zero
 /// block (cache disabled). `gateway` (1.4) carries the HTTP leg's
 /// traffic counters; `None` reports the zero block (no HTTP leg).
+/// `fusion` (1.6) carries the fusion-region totals across the measured
+/// plans; `None` reports the zero block (planner-less backend or
+/// `M2_FUSE=off`).
 #[allow(clippy::too_many_arguments)]
 pub fn trajectory_json(tag: &str, model: &str, backend: &str,
                        threads: usize, quick: bool,
                        decode: &[DecodePoint], prefill: &[PrefillPoint],
                        plan: Option<PlanStats>,
                        prefix: Option<crate::coordinator::PrefixCacheStats>,
-                       gateway: Option<GatewayTraffic>)
+                       gateway: Option<GatewayTraffic>,
+                       fusion: Option<FusionSummary>)
     -> Json {
     let ps = plan.unwrap_or_default();
     let px = prefix.unwrap_or_default();
     let gw = gateway.unwrap_or_default();
+    let fu = fusion.unwrap_or_default();
     let dec = decode.iter().map(|p| Json::obj(vec![
         ("batch", Json::num(p.batch as f64)),
         ("ms_per_step", Json::num(p.ms_per_step)),
@@ -385,6 +424,7 @@ pub fn trajectory_json(tag: &str, model: &str, backend: &str,
         ("bytes_streamed_per_token",
          Json::num(p.bytes_streamed_per_token)),
         ("isa", Json::str(&p.isa)),
+        ("fused_regions", Json::num(p.fused_regions as f64)),
     ])).collect();
     let pre = prefill.iter().map(|p| Json::obj(vec![
         ("seq_len", Json::num(p.seq_len as f64)),
@@ -393,6 +433,7 @@ pub fn trajectory_json(tag: &str, model: &str, backend: &str,
         ("mfu", Json::num(p.mfu)),
         ("hbu", Json::num(p.hbu)),
         ("isa", Json::str(&p.isa)),
+        ("fused_regions", Json::num(p.fused_regions as f64)),
     ])).collect();
     Json::obj(vec![
         ("schema_version", Json::num(BENCH_SCHEMA_VERSION)),
@@ -418,6 +459,10 @@ pub fn trajectory_json(tag: &str, model: &str, backend: &str,
             ("requests", Json::num(gw.requests as f64)),
             ("shed", Json::num(gw.shed as f64)),
             ("replicas", Json::num(gw.replicas as f64)),
+        ])),
+        ("fusion", Json::obj(vec![
+            ("regions_planned", Json::num(fu.regions_planned as f64)),
+            ("bytes_elided", Json::num(fu.bytes_elided)),
         ])),
     ])
 }
@@ -465,10 +510,12 @@ pub fn validate_trajectory_json(j: &Json) -> Result<()> {
     if j.get("quick").and_then(Json::as_bool).is_none() {
         bail!("BENCH json: missing bool field \"quick\"");
     }
+    // 1.6: every row (decode and prefill alike) counts its plan's
+    // cost-chosen fusion regions
     require_points(
         j, "decode",
         &["batch", "ms_per_step", "tokens_per_s", "mfu", "hbu",
-          "bytes_streamed_per_token"])?;
+          "bytes_streamed_per_token", "fused_regions"])?;
     // 1.2/1.5: every decode row is dtype- and isa-tagged, and the
     // scalar f32 rows (the cross-PR comparable set) must still cover
     // B = 1 and B = 16
@@ -506,7 +553,8 @@ pub fn validate_trajectory_json(j: &Json) -> Result<()> {
     }
     require_points(
         j, "prefill",
-        &["seq_len", "ms_total", "tokens_per_s", "mfu", "hbu"])?;
+        &["seq_len", "ms_total", "tokens_per_s", "mfu", "hbu",
+          "fused_regions"])?;
     // 1.5: prefill rows are isa-tagged too; the scalar rows must keep
     // the L = 512 coverage
     let pre = j.get("prefill").and_then(Json::as_arr).unwrap();
@@ -554,6 +602,16 @@ pub fn validate_trajectory_json(j: &Json) -> Result<()> {
             bail!("BENCH json: gateway.{key} = {val} not finite ≥ 0");
         }
     }
+    // 1.6: the fusion totals block is mandatory
+    let fu = j.get("fusion")
+        .context("BENCH json: missing object \"fusion\"")?;
+    for key in ["regions_planned", "bytes_elided"] {
+        let val = fu.get(key).and_then(Json::as_f64).with_context(
+            || format!("BENCH json: fusion missing number {key:?}"))?;
+        if !val.is_finite() || val < 0.0 {
+            bail!("BENCH json: fusion.{key} = {val} not finite ≥ 0");
+        }
+    }
     Ok(())
 }
 
@@ -590,7 +648,8 @@ mod tests {
                     &cfg, "decode_step", None, b);
                 // fake 2× fusion win
                 decode_point(&cost, b, 0.004 / b as f64, "f32",
-                             cost.bytes_accessed / b as f64, "scalar")
+                             cost.bytes_accessed / b as f64, "scalar",
+                             6)
             }).collect();
         // a bf16 row set rides along (schema 1.2)
         for &b in &[1usize, 16] {
@@ -598,18 +657,19 @@ mod tests {
                 &cfg, "decode_step", None, b);
             decode.push(decode_point(&cost, b, 0.003 / b as f64, "bf16",
                                      cost.bytes_accessed * 0.55
-                                         / b as f64, "scalar"));
+                                         / b as f64, "scalar", 6));
         }
         let mut prefill: Vec<PrefillPoint> = [512usize, 2048].iter()
             .map(|&l| {
                 let cost = crate::runtime::analytic_cost(
                     &cfg, "prefill", Some(l), 1);
-                prefill_point(&cost, l, l as f64 * 1e-4, "scalar")
+                prefill_point(&cost, l, l as f64 * 1e-4, "scalar", 7)
             }).collect();
         // a vector-tier prefill row set rides along (schema 1.5)
         let cost = crate::runtime::analytic_cost(
             &cfg, "prefill", Some(2048), 1);
-        prefill.push(prefill_point(&cost, 2048, 2048.0 * 0.8e-4, "avx2"));
+        prefill.push(prefill_point(&cost, 2048, 2048.0 * 0.8e-4, "avx2",
+                                   7));
         let plan = PlanStats { built: 6, hits: 40, planning_ms: 1.5,
                                cached: 6 };
         let prefix = crate::coordinator::PrefixCacheStats {
@@ -617,9 +677,11 @@ mod tests {
             bytes: 1 << 18, entries: 2,
         };
         let gateway = GatewayTraffic { requests: 6, shed: 1, replicas: 1 };
+        let fusion = FusionSummary { regions_planned: 51,
+                                     bytes_elided: 7.3e6 };
         trajectory_json("test", "sim-130m", "reference", 4, true,
                         &decode, &prefill, Some(plan), Some(prefix),
-                        Some(gateway))
+                        Some(gateway), Some(fusion))
     }
 
     #[test]
@@ -641,7 +703,7 @@ mod tests {
         for key in ["schema_version", "pr", "model", "backend", "threads",
                     "quick", "decode", "prefill",
                     "batch_speedup_b16_vs_b1", "plan_cache",
-                    "prefix_cache", "gateway"] {
+                    "prefix_cache", "gateway", "fusion"] {
             let j = sample_doc();
             let mut m = j.as_obj().unwrap().clone();
             m.remove(key);
@@ -753,14 +815,56 @@ mod tests {
     }
 
     #[test]
+    fn trajectory_schema_pins_fusion_fields() {
+        // 1.6: dropping the per-row region count must fail, in decode
+        // and prefill rows alike
+        for key in ["decode", "prefill"] {
+            let j = sample_doc();
+            let mut m = j.as_obj().unwrap().clone();
+            let rows = m.get(key).unwrap().as_arr().unwrap().to_vec();
+            let mut p0 = rows[0].as_obj().unwrap().clone();
+            p0.remove("fused_regions");
+            let mut rows2 = rows.clone();
+            rows2[0] = Json::Obj(p0);
+            m.insert(key.into(), Json::Arr(rows2));
+            let e = validate_trajectory_json(&Json::Obj(m))
+                .expect_err(&format!(
+                    "must reject {key} row sans fused_regions"));
+            assert!(e.to_string().contains("fused_regions"), "{e}");
+        }
+        // each fusion-block counter is individually mandatory
+        for key in ["regions_planned", "bytes_elided"] {
+            let j = sample_doc();
+            let mut m = j.as_obj().unwrap().clone();
+            let mut fu = m.get("fusion").unwrap()
+                .as_obj().unwrap().clone();
+            fu.remove(key);
+            m.insert("fusion".into(), Json::Obj(fu));
+            let e = validate_trajectory_json(&Json::Obj(m))
+                .expect_err(&format!("must reject missing {key}"));
+            assert!(e.to_string().contains("fusion"), "{e}");
+        }
+        // negative byte totals are schema violations, not measurements
+        let j = sample_doc();
+        let mut m = j.as_obj().unwrap().clone();
+        let mut fu = m.get("fusion").unwrap().as_obj().unwrap().clone();
+        fu.insert("bytes_elided".into(), Json::num(-1.0));
+        m.insert("fusion".into(), Json::Obj(fu));
+        assert!(validate_trajectory_json(&Json::Obj(m)).is_err());
+        // the sample doc carries real totals
+        assert_eq!(sample_doc().at(&["fusion", "regions_planned"])
+                   .and_then(Json::as_f64), Some(51.0));
+    }
+
+    #[test]
     fn dtype_speedup_compares_same_batch_rows() {
         let cfg = crate::runtime::sim_config("sim-130m").unwrap();
         let cost = crate::runtime::analytic_cost(
             &cfg, "decode_step", None, 1);
         let points = vec![
-            decode_point(&cost, 1, 0.004, "f32", 1.0e6, "scalar"),
-            decode_point(&cost, 1, 0.003, "bf16", 0.55e6, "scalar"),
-            decode_point(&cost, 16, 0.010, "f32", 0.2e6, "scalar"),
+            decode_point(&cost, 1, 0.004, "f32", 1.0e6, "scalar", 6),
+            decode_point(&cost, 1, 0.003, "bf16", 0.55e6, "scalar", 6),
+            decode_point(&cost, 16, 0.010, "f32", 0.2e6, "scalar", 7),
         ];
         let r = dtype_speedup(&points, 1);
         assert!((r - 0.004 / 0.003).abs() < 1e-9);
@@ -769,7 +873,8 @@ mod tests {
         // vector-tier rows never stand in for the scalar baseline: an
         // avx2 f32 row at B=16 does not un-zero the gate (1.5)
         let mut mixed = points;
-        mixed.push(decode_point(&cost, 16, 0.002, "bf16", 0.1e6, "avx2"));
+        mixed.push(decode_point(&cost, 16, 0.002, "bf16", 0.1e6, "avx2",
+                                7));
         assert_eq!(dtype_speedup(&mixed, 16), 0.0);
     }
 
@@ -779,9 +884,9 @@ mod tests {
         let cost = crate::runtime::analytic_cost(
             &cfg, "prefill", Some(2048), 1);
         let points = vec![
-            prefill_point(&cost, 2048, 0.100, "scalar"),
-            prefill_point(&cost, 2048, 0.080, "avx2"),
-            prefill_point(&cost, 512, 0.030, "scalar"),
+            prefill_point(&cost, 2048, 0.100, "scalar", 7),
+            prefill_point(&cost, 2048, 0.080, "avx2", 7),
+            prefill_point(&cost, 512, 0.030, "scalar", 7),
         ];
         let r = isa_prefill_speedup(&points, 2048, "avx2");
         assert!((r - 0.100 / 0.080).abs() < 1e-9, "{r}");
@@ -867,17 +972,21 @@ mod tests {
             &cfg, "decode_step", None, 1);
         let decode = vec![
             decode_point(&cost, 1, 0.004, "f32", cost.bytes_accessed,
-                         "scalar"),
+                         "scalar", 0),
             decode_point(&cost, 16, 0.001, "f32",
-                         cost.bytes_accessed / 16.0, "scalar"),
+                         cost.bytes_accessed / 16.0, "scalar", 0),
         ];
         let pcost = crate::runtime::analytic_cost(
             &cfg, "prefill", Some(512), 1);
-        let prefill = vec![prefill_point(&pcost, 512, 0.05, "scalar")];
+        let prefill = vec![prefill_point(&pcost, 512, 0.05, "scalar", 0)];
         let j = trajectory_json("test", "sim-130m", "xla", 1, true,
-                                &decode, &prefill, None, None, None);
+                                &decode, &prefill, None, None, None,
+                                None);
         validate_trajectory_json(&j).unwrap();
         assert_eq!(j.at(&["plan_cache", "plans_built"])
+                   .and_then(Json::as_f64), Some(0.0));
+        // a planner-less backend's fusion block is the zero block (1.6)
+        assert_eq!(j.at(&["fusion", "regions_planned"])
                    .and_then(Json::as_f64), Some(0.0));
     }
 
@@ -946,8 +1055,8 @@ mod tests {
             &cfg, "decode_step", None, 1);
         // B=16 step takes 4× the B=1 step → 4× tokens/s ratio
         let points = vec![
-            decode_point(&cost, 1, 0.001, "f32", 1.0, "scalar"),
-            decode_point(&cost, 16, 0.004, "f32", 1.0, "scalar"),
+            decode_point(&cost, 1, 0.001, "f32", 1.0, "scalar", 6),
+            decode_point(&cost, 16, 0.004, "f32", 1.0, "scalar", 7),
         ];
         assert!((batch_speedup(&points) - 4.0).abs() < 1e-9);
         assert_eq!(batch_speedup(&[]), 0.0);
@@ -956,8 +1065,9 @@ mod tests {
         // both leave the scalar f32 ratio untouched
         let mut mixed = points;
         mixed.push(decode_point(&cost, 16, 0.0001, "bf16", 1.0,
-                                "scalar"));
-        mixed.push(decode_point(&cost, 16, 0.0001, "f32", 1.0, "avx2"));
+                                "scalar", 7));
+        mixed.push(decode_point(&cost, 16, 0.0001, "f32", 1.0, "avx2",
+                                7));
         assert!((batch_speedup(&mixed) - 4.0).abs() < 1e-9);
     }
 

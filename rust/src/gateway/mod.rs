@@ -35,7 +35,7 @@ pub mod sse;
 use std::io::{BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 
@@ -44,6 +44,7 @@ use crate::eval::Tokenizer;
 use crate::server::{pump_generate, serve_listener};
 use crate::util::error::Result;
 use crate::util::json::Json;
+use crate::util::stats::LogHistogram;
 
 use shed::ShedPolicy;
 
@@ -82,7 +83,49 @@ pub struct GatewayMetrics {
     pub http_requests: AtomicU64,
     /// requests currently inside a handler
     pub active: AtomicU64,
+    /// per-route request-latency histograms, rendered on `/metrics` as
+    /// `m2_http_request_seconds{route=...}` buckets (PR 9). Routes
+    /// appear on first hit; one mutex, recorded once per dispatch (the
+    /// same off-hot-loop pattern as `coordinator::Metrics`). For SSE
+    /// completions the latency spans the whole stream — route
+    /// histograms time the handler, TTFT/e2e stay the engine's.
+    route_hist: Mutex<Vec<(&'static str, LogHistogram)>>,
 }
+
+impl GatewayMetrics {
+    /// Record one dispatched request against its route's histogram.
+    pub fn record_route(&self, route: &'static str, secs: f64) {
+        let mut hists = self.route_hist.lock().unwrap();
+        match hists.iter_mut().find(|(r, _)| *r == route) {
+            Some((_, h)) => h.record(secs),
+            None => {
+                let mut h = LogHistogram::new();
+                h.record(secs);
+                hists.push((route, h));
+            }
+        }
+    }
+}
+
+/// The `route` label value for one request path: the fixed route set
+/// plus `other` for 404s, so label cardinality is bounded no matter
+/// what clients probe.
+fn route_label(path: &str) -> &'static str {
+    match path {
+        "/healthz" => "healthz",
+        "/metrics" => "metrics",
+        "/v1/models" => "models",
+        "/v1/completions" => "completions",
+        "/admin/drain" => "admin_drain",
+        _ => "other",
+    }
+}
+
+/// Histogram boundaries for `m2_http_request_seconds`: 1ms–60s in
+/// roughly 5× steps — wide enough that a full SSE generation lands in
+/// a finite bucket, fine enough to separate `/healthz` from prefill.
+const ROUTE_LATENCY_LE: [f64; 8] =
+    [0.001, 0.005, 0.025, 0.1, 0.5, 2.5, 10.0, 60.0];
 
 struct GwInner {
     router: Arc<Router>,
@@ -273,7 +316,10 @@ fn handle_conn(inner: &Arc<GwInner>, stream: TcpStream,
             || inner.stop.load(Ordering::Relaxed);
         inner.metrics.http_requests.fetch_add(1, Ordering::Relaxed);
         inner.metrics.active.fetch_add(1, Ordering::Relaxed);
+        let t0 = Instant::now();
         let r = dispatch(inner, &req, &mut writer, close_after);
+        inner.metrics.record_route(route_label(&req.path),
+                                   t0.elapsed().as_secs_f64());
         inner.metrics.active.fetch_sub(1, Ordering::Relaxed);
         match r {
             Ok(true) if !close_after
@@ -545,6 +591,13 @@ fn metrics_text(inner: &GwInner) -> String {
     p.sample("m2_gateway_replicas",
              "engine replicas behind the gateway", "gauge", &[],
              inner.router.n_replicas() as f64);
+    for (route, h) in m.route_hist.lock().unwrap().iter() {
+        p.histogram("m2_http_request_seconds",
+                    "HTTP request handler latency by route (SSE \
+                     completions span the whole stream)",
+                    &[("route", route.to_string())],
+                    &ROUTE_LATENCY_LE, h);
+    }
     prom::conn_error_samples(&mut p, &inner.conn_errors);
     p.render()
 }

@@ -9,6 +9,7 @@
 //! sample order, which is what makes the output valid exposition format.
 
 use crate::coordinator::{ConnErrorKind, ConnErrors, Router};
+use crate::util::stats::LogHistogram;
 
 /// Incremental exposition builder.
 #[derive(Default)]
@@ -37,11 +38,11 @@ impl Prom {
         }
     }
 
-    /// Append one sample. Non-finite values are clamped to 0 (the
-    /// exposition format has no NaN).
-    pub fn sample(&mut self, name: &str, help: &str, kind: &str,
-                  labels: &[(&str, String)], value: f64) {
-        self.family(name, help, kind);
+    /// One `name{labels} value` line, no HELP/TYPE bookkeeping (the
+    /// histogram renderer emits `_bucket`/`_sum`/`_count` samples under
+    /// the base family's single TYPE line).
+    fn line(&mut self, name: &str, labels: &[(&str, String)],
+            value: f64) {
         let v = if value.is_finite() { value } else { 0.0 };
         self.out.push_str(name);
         if !labels.is_empty() {
@@ -60,6 +61,37 @@ impl Prom {
         self.out.push(' ');
         self.out.push_str(&v.to_string());
         self.out.push('\n');
+    }
+
+    /// Append one sample. Non-finite values are clamped to 0 (the
+    /// exposition format has no NaN).
+    pub fn sample(&mut self, name: &str, help: &str, kind: &str,
+                  labels: &[(&str, String)], value: f64) {
+        self.family(name, help, kind);
+        self.line(name, labels, value);
+    }
+
+    /// Append one Prometheus histogram: cumulative `_bucket{le=...}`
+    /// samples at `les` boundaries (projected from the log-bucketed
+    /// [`LogHistogram`] via [`LogHistogram::count_le`]), the mandatory
+    /// `le="+Inf"` bucket, then `_sum` and `_count`. The family's
+    /// HELP/TYPE pair is emitted once under the base `name`, which is
+    /// how the text format declares all three sample suffixes.
+    pub fn histogram(&mut self, name: &str, help: &str,
+                     labels: &[(&str, String)], les: &[f64],
+                     h: &LogHistogram) {
+        self.family(name, help, "histogram");
+        let bucket = format!("{name}_bucket");
+        let mut l: Vec<(&str, String)> = labels.to_vec();
+        l.push(("le", String::new()));
+        for &le in les {
+            l.last_mut().unwrap().1 = le.to_string();
+            self.line(&bucket, &l, h.count_le(le) as f64);
+        }
+        l.last_mut().unwrap().1 = "+Inf".to_string();
+        self.line(&bucket, &l, h.total as f64);
+        self.line(&format!("{name}_sum"), labels, h.sum);
+        self.line(&format!("{name}_count"), labels, h.total as f64);
     }
 
     pub fn render(self) -> String {
@@ -176,7 +208,12 @@ pub fn validate_exposition(text: &str) -> Result<(), String> {
         let (name_part, value) = line.rsplit_once(' ')
             .ok_or_else(|| format!("no value in line: {line}"))?;
         let name = name_part.split('{').next().unwrap_or(name_part);
-        if !declared.contains(&name) {
+        // histogram families declare the base name once; their samples
+        // carry the _bucket/_sum/_count suffixes
+        let base = ["_bucket", "_sum", "_count"].iter()
+            .find_map(|s| name.strip_suffix(s))
+            .unwrap_or(name);
+        if !declared.contains(&name) && !declared.contains(&base) {
             return Err(format!("sample before TYPE: {name}"));
         }
         let v: f64 = value.parse()
@@ -237,6 +274,43 @@ mod tests {
             "m2_conn_errors_total{kind=\"protocol\"} 1\n"));
         assert!(out.contains(
             "m2_conn_errors_total{kind=\"too_large\"} 0\n"));
+        validate_exposition(&out).unwrap();
+    }
+
+    #[test]
+    fn histogram_renders_valid_cumulative_buckets() {
+        let mut h = LogHistogram::new();
+        for i in 1..=50 {
+            h.record(i as f64 * 1e-3); // 1ms .. 50ms
+        }
+        let mut p = Prom::new();
+        for route in ["completions", "metrics"] {
+            p.histogram("m2_http_request_seconds",
+                        "HTTP request latency by route",
+                        &[("route", route.to_string())],
+                        &[0.005, 0.05, 1.0], &h);
+        }
+        let out = p.render();
+        // one TYPE for the family, shared by every route's samples
+        assert_eq!(out.matches(
+            "# TYPE m2_http_request_seconds histogram").count(), 1);
+        assert!(out.contains("m2_http_request_seconds_bucket\
+                              {route=\"completions\",le=\"+Inf\"} 50\n"));
+        assert!(out.contains("m2_http_request_seconds_count\
+                              {route=\"metrics\"} 50\n"));
+        // buckets are cumulative: each boundary's count never exceeds
+        // the next one's, and +Inf equals _count
+        let count_at = |le: &str| -> f64 {
+            out.lines()
+                .find(|l| l.contains("route=\"completions\"")
+                          && l.contains(&format!("le=\"{le}\"")))
+                .and_then(|l| l.rsplit(' ').next())
+                .and_then(|v| v.parse().ok())
+                .unwrap()
+        };
+        assert!(count_at("0.005") <= count_at("0.05"));
+        assert!(count_at("0.05") <= count_at("1"));
+        assert!(count_at("1") <= count_at("+Inf"));
         validate_exposition(&out).unwrap();
     }
 

@@ -64,6 +64,9 @@ fn main() -> Result<()> {
         .opt("isa", "scalar", "kernel-tier ISA: scalar|avx2|neon|auto \
               (scalar is the bitwise baseline; auto picks the best \
               vector tier the host supports; reference backend only)")
+        .opt("fuse", "on", "planner fusion regions: on|off (off = the \
+              unfused oracle, bitwise identical; reference backend \
+              only)")
         .opt("backend-threads", "", "backend worker threads per replica \
               (default: M2_THREADS, else host parallelism; note \
               --threads is the listener thread count, not this)")
@@ -73,18 +76,20 @@ fn main() -> Result<()> {
         .parse_env();
 
     // one validated resolution point for the runtime knobs — CLI > env
-    // (M2_PLAN / M2_WEIGHTS / M2_THREADS / M2_ISA) > default, bad
-    // tokens from either layer fail loudly (runtime::options). The
+    // (M2_PLAN / M2_WEIGHTS / M2_THREADS / M2_ISA / M2_FUSE) > default,
+    // bad tokens from either layer fail loudly (runtime::options). The
     // resolved options are re-exported as env because backends read the
     // env at open time — every replica opened below inherits them.
-    let (plan, weights, bthreads, isa) =
+    let (plan, weights, bthreads, isa, fuse) =
         (cli.get_opt("plan"), cli.get_opt("weights"),
-         cli.get_opt("backend-threads"), cli.get_opt("isa"));
+         cli.get_opt("backend-threads"), cli.get_opt("isa"),
+         cli.get_opt("fuse"));
     let opts = RuntimeOptions::resolve(&CliOverrides {
         plan: plan.as_deref(),
         weights: weights.as_deref(),
         threads: bthreads.as_deref(),
         isa: isa.as_deref(),
+        fuse: fuse.as_deref(),
     }).unwrap_or_else(|e| {
         eprintln!("error: {e}");
         std::process::exit(2);

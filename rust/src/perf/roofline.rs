@@ -15,6 +15,14 @@ pub const NEON_COMPUTE_SCALE: f64 = 3.0;
 pub const AVX2_TRANSC_SCALE: f64 = 8.0;
 /// NEON transcendental scale (4-lane polynomial `exp`).
 pub const NEON_TRANSC_SCALE: f64 = 4.0;
+/// Per member-row loop re-entry cost of a fused region (one extra
+/// kernel-body call plus its pointer math per fused member per row).
+/// This is the *loop-overhead* side of the fusion-region pricing
+/// (`runtime::plan::planner`): a region saves the intermediate bytes it
+/// never re-materialises through DRAM, and pays this per extra member
+/// each output row — bandwidth-bound decode clears the bar easily,
+/// compute-bound prefill only where the epilogue is free.
+pub const FUSE_LOOP_S: f64 = 5.0e-9;
 
 /// Per-ISA `(compute, bandwidth, transcendental)` peak scales over the
 /// scalar tier. Bandwidth is 1.0 for every ISA — wider registers do not
@@ -185,6 +193,17 @@ mod tests {
             let (_, bw, _) = isa_scales(isa);
             assert_eq!(bw, 1.0, "{isa:?}: bandwidth peak is ISA-invariant");
         }
+    }
+
+    #[test]
+    fn fuse_loop_overhead_is_function_call_scale() {
+        // the fusion-region pricing rests on this ordering: one fused
+        // member-row re-entry is far cheaper than a pool dispatch
+        // (else regions could never beat fan-out on serial chains), and
+        // it is strictly positive (else every legal merge would fuse
+        // regardless of the bytes it saves)
+        assert!(FUSE_LOOP_S > 0.0);
+        assert!(FUSE_LOOP_S < CPU_HOST.per_op_dispatch_s);
     }
 
     #[test]

@@ -480,6 +480,19 @@ pub trait Backend: Send {
         None
     }
 
+    /// Fusion-region counters of the warm plan for `(entrypoint,
+    /// bucket, batch)`: `(regions chosen, activation bytes the byte
+    /// model says fusion keeps out of DRAM)` — DESIGN.md §12. Strictly
+    /// read-only like [`Backend::cost`]; `(0, 0.0)` on backends without
+    /// a planner, for cold shapes, or with the pass off. Feeds
+    /// `BENCH_*.json`'s per-row `fused_regions` and top-level `fusion`
+    /// block (schema 1.6).
+    fn fusion_stats(&self, entrypoint: &str, bucket: Option<usize>,
+                    batch: usize) -> (u64, f64) {
+        let _ = (entrypoint, bucket, batch);
+        (0, 0.0)
+    }
+
     /// Continue a prefill from an existing cache over a further
     /// `batch × t` tokens (t a chunk multiple), returning all logits for
     /// the new positions plus the advanced cache. This is what lets

@@ -73,6 +73,17 @@ impl WeightsDtype {
     }
 }
 
+/// One fusion region of a schedule: the member op labels in execution
+/// order plus the kernel-tier ISA recorded for the region
+/// (DESIGN.md §12).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RegionInfo {
+    /// member op labels, e.g. `["conv_step.L0", "ssm_step.L0"]`
+    pub members: Vec<String>,
+    /// recorded region tier, e.g. `scalar` / `avx2` / `neon`
+    pub isa: String,
+}
+
 /// The schedule chosen for one entrypoint — recorded per executable so
 /// tooling can see *how* a lowering was scheduled, not just what it
 /// cost. The reference backend's planner fills one per plan
@@ -87,8 +98,11 @@ pub struct ScheduleInfo {
     pub row_block: usize,
     /// worker fan-out the schedule was chosen for
     pub fanout: usize,
-    /// fusion decisions taken, e.g. `residual.out_proj`
-    pub fused: Vec<String>,
+    /// fusion regions chosen by the cost model (empty = unfused or a
+    /// pre-1.6 record; the legacy `"fused"` string list of hard-wired
+    /// pair names is tolerated on parse and folded in here as
+    /// single-member records so old manifests keep loading)
+    pub regions: Vec<RegionInfo>,
     /// storage dtype of the streamed weight matrices, e.g. `f32` /
     /// `bf16` ("" = not recorded, pre-1.2 manifests)
     pub weights_dtype: String,
@@ -145,14 +159,36 @@ fn schedule_from_json(s: &Json) -> ScheduleInfo {
     let st = |k: &str| {
         s.get(k).and_then(Json::as_str).unwrap_or("").to_string()
     };
+    // the region list ("regions": [{"members": [...], "isa": "..."}]);
+    // pre-1.6 records carried a flat "fused" string list of hard-wired
+    // pair names instead — the compat shim folds each name into a
+    // single-member region so old manifests keep parsing losslessly
+    let mut regions: Vec<RegionInfo> = s.get("regions")
+        .and_then(Json::as_arr)
+        .map(|a| a.iter().map(|r| RegionInfo {
+            members: r.get("members").and_then(Json::as_arr)
+                .map(|m| m.iter().filter_map(Json::as_str)
+                     .map(String::from).collect())
+                .unwrap_or_default(),
+            isa: r.get("isa").and_then(Json::as_str)
+                .unwrap_or("").to_string(),
+        }).collect())
+        .unwrap_or_default();
+    if regions.is_empty() {
+        if let Some(fused) = s.get("fused").and_then(Json::as_arr) {
+            regions = fused.iter().filter_map(Json::as_str)
+                .map(|name| RegionInfo {
+                    members: vec![name.to_string()],
+                    isa: String::new(),
+                })
+                .collect();
+        }
+    }
     ScheduleInfo {
         chunk_tile: u("chunk_tile"),
         row_block: u("row_block"),
         fanout: u("fanout"),
-        fused: s.get("fused").and_then(Json::as_arr)
-            .map(|a| a.iter().filter_map(Json::as_str)
-                 .map(String::from).collect())
-            .unwrap_or_default(),
+        regions,
         weights_dtype: st("weights_dtype"),
         weight_layout: st("weight_layout"),
         isa: st("isa"),
@@ -538,7 +574,8 @@ mod tests {
     fn schedule_record_parses() {
         let j = Json::parse(
             r#"{"chunk_tile": 24, "row_block": 64, "fanout": 8,
-                "fused": ["residual.out_proj"],
+                "regions": [{"members": ["conv_step.L0", "ssm_step.L0"],
+                             "isa": "scalar"}],
                 "weights_dtype": "bf16", "weight_layout": "bf16-rows",
                 "isa": "avx2"}"#)
             .unwrap();
@@ -546,7 +583,11 @@ mod tests {
         assert_eq!(s.chunk_tile, 24);
         assert_eq!(s.row_block, 64);
         assert_eq!(s.fanout, 8);
-        assert_eq!(s.fused, vec!["residual.out_proj".to_string()]);
+        assert_eq!(s.regions.len(), 1);
+        assert_eq!(s.regions[0].members,
+                   vec!["conv_step.L0".to_string(),
+                        "ssm_step.L0".to_string()]);
+        assert_eq!(s.regions[0].isa, "scalar");
         assert_eq!(s.weights_dtype, "bf16");
         assert_eq!(s.weight_layout, "bf16-rows");
         assert_eq!(s.isa, "avx2");
@@ -556,6 +597,32 @@ mod tests {
         let s = schedule_from_json(&Json::parse("{}").unwrap());
         assert_eq!(s, ScheduleInfo::default());
         assert_eq!(s.isa, "");
+    }
+
+    #[test]
+    fn legacy_fused_schedule_keys_still_parse() {
+        // pre-1.6 manifests recorded hard-wired fusion pairs as a flat
+        // "fused" string list; the shim folds each into a
+        // single-member region so old records load losslessly
+        let j = Json::parse(
+            r#"{"row_block": 64,
+                "fused": ["residual.out_proj", "skip.gather"]}"#)
+            .unwrap();
+        let s = schedule_from_json(&j);
+        assert_eq!(s.regions.len(), 2);
+        assert_eq!(s.regions[0].members,
+                   vec!["residual.out_proj".to_string()]);
+        assert_eq!(s.regions[1].members,
+                   vec!["skip.gather".to_string()]);
+        assert_eq!(s.regions[0].isa, "");
+        // a record carrying both keys prefers the region list
+        let j = Json::parse(
+            r#"{"fused": ["residual.out_proj"],
+                "regions": [{"members": ["a", "b"], "isa": "neon"}]}"#)
+            .unwrap();
+        let s = schedule_from_json(&j);
+        assert_eq!(s.regions.len(), 1);
+        assert_eq!(s.regions[0].members, vec!["a", "b"]);
     }
 
     #[test]

@@ -37,7 +37,7 @@ pub use backend::{analytic_cost, argmax, argmax_last, fnv1a64, Backend,
 pub use manifest::{sim_config, ConfigInfo, CostInfo, ExecutableSpec,
                    Manifest, ScheduleInfo, WeightsDtype};
 pub use options::{CliOverrides, RuntimeOptions};
-pub use plan::{Plan, PlanCache, PlanMode, PlanStats};
+pub use plan::{FuseMode, Plan, PlanCache, PlanMode, PlanStats};
 pub use reference::ReferenceBackend;
 #[cfg(feature = "xla")]
 pub use session::{ModelSession, Runtime};

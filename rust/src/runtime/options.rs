@@ -1,14 +1,15 @@
 //! One resolution point for the runtime knobs (DESIGN.md §11.4).
 //!
-//! Four knobs steer the reference backend — execution mode, weight
-//! stream precision, worker threads, kernel-tier ISA — and each is
-//! reachable two ways: a CLI flag and an `M2_*` env var. Before this
-//! module every binary re-implemented the precedence and validation by
-//! hand (and the env layer was lenient: a typo'd `M2_WEIGHTS=bf-16`
-//! silently meant f32). [`RuntimeOptions`] resolves all four in one
-//! place with one rule — **CLI > env > built-in default** — and a bad
-//! token from *either* layer is a loud [`Err`]; the binaries print it
-//! and exit 2 instead of guessing.
+//! Five knobs steer the reference backend — execution mode, weight
+//! stream precision, worker threads, kernel-tier ISA, and the planner's
+//! fusion-region pass — and each is reachable two ways: a CLI flag and
+//! an `M2_*` env var. Before this module every binary re-implemented
+//! the precedence and validation by hand (and the env layer was
+//! lenient: a typo'd `M2_WEIGHTS=bf-16` silently meant f32).
+//! [`RuntimeOptions`] resolves all five in one place with one rule —
+//! **CLI > env > built-in default** — and a bad token from *either*
+//! layer is a loud [`Err`]; the binaries print it and exit 2 instead of
+//! guessing.
 //!
 //! | knob    | CLI flag            | env          | default        |
 //! |---------|---------------------|--------------|----------------|
@@ -16,6 +17,7 @@
 //! | weights | `--weights`         | `M2_WEIGHTS` | `f32`          |
 //! | threads | `--backend-threads` | `M2_THREADS` | auto (host)    |
 //! | isa     | `--isa`             | `M2_ISA`     | `scalar`       |
+//! | fuse    | `--fuse`            | `M2_FUSE`    | `on`           |
 //!
 //! [`RuntimeOptions::export_env`] writes the resolved options back to
 //! the `M2_*` variables, because backends read the env at open time
@@ -25,10 +27,10 @@
 //! tier *here*, so every replica inherits one concrete tier.
 
 use crate::runtime::manifest::WeightsDtype;
-use crate::runtime::plan::PlanMode;
+use crate::runtime::plan::{FuseMode, PlanMode};
 use crate::tensor::kernels::Isa;
 
-/// The explicitly-passed CLI values for the four runtime knobs
+/// The explicitly-passed CLI values for the five runtime knobs
 /// (`None` = the flag was not on the command line, fall through to the
 /// env / default layers). Built by the binaries from `Cli::get_opt`.
 #[derive(Debug, Clone, Copy, Default)]
@@ -37,6 +39,7 @@ pub struct CliOverrides<'a> {
     pub weights: Option<&'a str>,
     pub threads: Option<&'a str>,
     pub isa: Option<&'a str>,
+    pub fuse: Option<&'a str>,
 }
 
 /// The resolved runtime knobs — see the module docs for the layering.
@@ -52,6 +55,9 @@ pub struct RuntimeOptions {
     /// kernel-tier ISA the planner prices nodes against (`auto` has
     /// already been resolved to a concrete host tier).
     pub isa: Isa,
+    /// the planner's fusion-region pass (DESIGN.md §12); `off` is the
+    /// bitwise-identical unfused oracle.
+    pub fuse: FuseMode,
 }
 
 impl Default for RuntimeOptions {
@@ -61,6 +67,7 @@ impl Default for RuntimeOptions {
             weights: WeightsDtype::F32,
             threads: None,
             isa: Isa::Scalar,
+            fuse: FuseMode::On,
         }
     }
 }
@@ -70,7 +77,8 @@ impl RuntimeOptions {
     /// winner of CLI-over-env for its knob); `None` means default. All
     /// validation lives here so both layers get identical errors.
     pub fn from_parts(plan: Option<&str>, weights: Option<&str>,
-                      threads: Option<&str>, isa: Option<&str>)
+                      threads: Option<&str>, isa: Option<&str>,
+                      fuse: Option<&str>)
         -> Result<RuntimeOptions, String> {
         let mut o = RuntimeOptions::default();
         if let Some(v) = plan {
@@ -107,6 +115,18 @@ impl RuntimeOptions {
             o.isa = Isa::from_flag(&v.trim().to_ascii_lowercase())
                 .map_err(|e| format!("--isa / M2_ISA: {e}"))?;
         }
+        if let Some(v) = fuse {
+            o.fuse = match v.trim() {
+                "on" => FuseMode::On,
+                // "0" mirrors the M2_PLAN legacy-off spelling
+                "off" | "0" => FuseMode::Off,
+                other => {
+                    return Err(format!(
+                        "--fuse / M2_FUSE: expected on|off (got {other:?})"
+                    ))
+                }
+            };
+        }
         Ok(o)
     }
 
@@ -117,7 +137,8 @@ impl RuntimeOptions {
         RuntimeOptions::from_parts(cli.plan.or(env.plan),
                                    cli.weights.or(env.weights),
                                    cli.threads.or(env.threads),
-                                   cli.isa.or(env.isa))
+                                   cli.isa.or(env.isa),
+                                   cli.fuse.or(env.fuse))
     }
 
     /// Resolve `cli` over this process's `M2_*` environment. An
@@ -129,13 +150,15 @@ impl RuntimeOptions {
         let var = |k: &str| std::env::var(k).ok().filter(|v| {
             !v.trim().is_empty()
         });
-        let (p, w, t, i) = (var("M2_PLAN"), var("M2_WEIGHTS"),
-                            var("M2_THREADS"), var("M2_ISA"));
+        let (p, w, t, i, f) = (var("M2_PLAN"), var("M2_WEIGHTS"),
+                               var("M2_THREADS"), var("M2_ISA"),
+                               var("M2_FUSE"));
         RuntimeOptions::from_layers(cli, &CliOverrides {
             plan: p.as_deref(),
             weights: w.as_deref(),
             threads: t.as_deref(),
             isa: i.as_deref(),
+            fuse: f.as_deref(),
         })
     }
 
@@ -150,6 +173,7 @@ impl RuntimeOptions {
         });
         std::env::set_var("M2_WEIGHTS", self.weights.as_str());
         std::env::set_var("M2_ISA", self.isa.label());
+        std::env::set_var("M2_FUSE", self.fuse.label());
         match self.threads {
             Some(n) => std::env::set_var("M2_THREADS", n.to_string()),
             None => std::env::remove_var("M2_THREADS"),
@@ -168,13 +192,14 @@ mod tests {
 
     #[test]
     fn defaults_when_nothing_is_set() {
-        let o = RuntimeOptions::from_parts(None, None, None, None)
+        let o = RuntimeOptions::from_parts(None, None, None, None, None)
             .unwrap();
         assert_eq!(o, RuntimeOptions::default());
         assert_eq!(o.plan, PlanMode::On);
         assert_eq!(o.weights, WeightsDtype::F32);
         assert_eq!(o.threads, None);
         assert_eq!(o.isa, Isa::Scalar);
+        assert_eq!(o.fuse, FuseMode::On);
     }
 
     #[test]
@@ -184,47 +209,63 @@ mod tests {
         let env = CliOverrides { weights: Some("f32"),
                                  threads: Some("3"),
                                  isa: Some("scalar"),
+                                 fuse: Some("off"),
                                  ..Default::default() };
         let o = RuntimeOptions::from_layers(&cli, &env).unwrap();
         assert_eq!(o.weights, WeightsDtype::Bf16, "cli wins");
         assert_eq!(o.threads, Some(3), "env fills cli gaps");
+        assert_eq!(o.fuse, FuseMode::Off, "env fills cli gaps");
         assert_eq!(o.plan, PlanMode::On, "default fills the rest");
     }
 
     #[test]
     fn every_knob_parses_its_documented_tokens() {
         let o = RuntimeOptions::from_parts(
-            Some("off"), Some("bf16"), Some("12"), Some("auto")).unwrap();
+            Some("off"), Some("bf16"), Some("12"), Some("auto"),
+            Some("off")).unwrap();
         assert_eq!(o.plan, PlanMode::Off);
         assert_eq!(o.weights, WeightsDtype::Bf16);
         assert_eq!(o.threads, Some(12));
         // `auto` resolves to a concrete host tier at parse time
         assert_eq!(o.isa, Isa::detect());
+        assert_eq!(o.fuse, FuseMode::Off);
         // legacy M2_PLAN spellings stay accepted
         for tok in ["legacy", "0"] {
             let o = RuntimeOptions::from_parts(
-                Some(tok), None, None, None).unwrap();
+                Some(tok), None, None, None, None).unwrap();
             assert_eq!(o.plan, PlanMode::Off);
         }
+        // the fuse knob mirrors the numeric off spelling
+        let o = RuntimeOptions::from_parts(
+            None, None, None, None, Some("0")).unwrap();
+        assert_eq!(o.fuse, FuseMode::Off);
         // isa tokens are case-insensitive (labels stay lowercase)
         let o = RuntimeOptions::from_parts(
-            None, None, None, Some("SCALAR")).unwrap();
+            None, None, None, Some("SCALAR"), None).unwrap();
         assert_eq!(o.isa, Isa::Scalar);
     }
 
     #[test]
     fn bad_tokens_are_loud_and_name_both_spellings() {
         let cases = [
-            (RuntimeOptions::from_parts(Some("maybe"), None, None, None),
+            (RuntimeOptions::from_parts(Some("maybe"), None, None, None,
+                                        None),
              "--plan / M2_PLAN"),
-            (RuntimeOptions::from_parts(None, Some("fp8"), None, None),
+            (RuntimeOptions::from_parts(None, Some("fp8"), None, None,
+                                        None),
              "--weights / M2_WEIGHTS"),
-            (RuntimeOptions::from_parts(None, None, Some("many"), None),
+            (RuntimeOptions::from_parts(None, None, Some("many"), None,
+                                        None),
              "--backend-threads / M2_THREADS"),
-            (RuntimeOptions::from_parts(None, None, Some("0"), None),
+            (RuntimeOptions::from_parts(None, None, Some("0"), None,
+                                        None),
              "--backend-threads / M2_THREADS"),
-            (RuntimeOptions::from_parts(None, None, None, Some("sse9")),
+            (RuntimeOptions::from_parts(None, None, None, Some("sse9"),
+                                        None),
              "--isa / M2_ISA"),
+            (RuntimeOptions::from_parts(None, None, None, None,
+                                        Some("sometimes")),
+             "--fuse / M2_FUSE"),
         ];
         for (res, want) in cases {
             let err = res.unwrap_err();

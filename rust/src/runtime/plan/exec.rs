@@ -9,7 +9,14 @@
 //! construction (`tensor::kernels` property sweeps + DESIGN.md §2.2) —
 //! so planned execution is bit-identical to the oracle for every
 //! schedule the planner can emit **at f32 weights on the scalar
-//! tier**. The bf16 weight stream ([`ir::WeightRepr::Bf16`])
+//! tier**. Fusion regions (DESIGN.md §12) keep the contract the same
+//! way: a region runs its members as one row-interleaved loop where
+//! each member's row body is the exact `r`-th iteration of its
+//! standalone loop — every output element is written exactly once by
+//! the same expression, so the interleaving is bitwise identical to
+//! the op-major unfused path (`M2_FUSE=off`), which
+//! `tests/fusion_parity.rs` pins across entrypoints, threads, dtypes
+//! and ISA tiers. The bf16 weight stream ([`ir::WeightRepr::Bf16`])
 //! deliberately differs from the oracle by exactly the weights'
 //! storage rounding; `tests/precision_parity.rs` bounds it.
 //! `tests/plan_parity.rs` pins the f32 contract across shape buckets,
@@ -298,7 +305,7 @@ fn embed_rows(tokens: &[i32], embed: &[f32], d: usize, v: usize,
 
 /// Execute the ops whose bodies are identical in the prefill and decode
 /// interpreters — embedding, pre-norm, the three weight contractions
-/// (incl. the fused/unfused residual epilogue and the planner-chosen
+/// (incl. the accumulated residual epilogue and the planner-chosen
 /// weight representation), gate-norm and the final norm — over `rows`
 /// output rows. Returns `Ok(false)` for ops the caller must handle
 /// itself, so the bitwise-parity surface lives in exactly one place
@@ -337,24 +344,15 @@ fn run_shared(node: &Node, arena: &mut Arena, params: &Params,
             let z = ro.buf(node.ins[1]);
             dx.gated_rmsnorm_rows(y, z, &lp.norm_w, di, NORM_EPS);
         }
-        Op::MatMul { kind: MatKind::OutProj, layer, fuse_residual,
-                     repr } => {
+        Op::MatMul { kind: MatKind::OutProj, layer, repr } => {
+            // x += y @ out_proj — the residual always rides the
+            // accumulating contraction: a copy-out-then-add form has no
+            // bitwise-equal decomposition (ir::MatKind docs), so this
+            // is the only schedule the op has
             let w = params.out_proj_stream(*layer, *repr, di, d);
             let (x, ro) = arena.out1(node);
             let y = ro.buf(node.ins[0]);
-            if *fuse_residual {
-                // x += y @ out_proj — residual rides the accumulating
-                // contraction (the oracle's schedule)
-                mm_acc(dx, pool, node.sched, y, di, &w, rows, di, d, x);
-            } else {
-                // cold fallback, never emitted by the current planner
-                // (fusion strictly dominates, a ladder-wide test pins
-                // it) — kept allocation-correct rather than arena-fed
-                let mut tmp = vec![0.0f32; rows * d];
-                mm_acc(dx, pool, node.sched, y, di, &w, rows, di, d,
-                       &mut tmp);
-                dx.add_assign(x, &tmp);
-            }
+            mm_acc(dx, pool, node.sched, y, di, &w, rows, di, d, x);
         }
         Op::FinalNorm => {
             let (x, _) = arena.out1(node);
@@ -372,6 +370,257 @@ fn run_shared(node: &Node, arena: &mut Arena, params: &Params,
         _ => return Ok(false),
     }
     Ok(true)
+}
+
+// --------------------------------------------------- fusion-region rows ---
+
+/// Slab row index for buffer `id` at logical row `r`: an elided
+/// intermediate (DESIGN.md §12) holds only the row currently in flight,
+/// so every access lands on row 0. Cache and token indexing always uses
+/// the real `r` — only planned-buffer rows are virtualised.
+fn erow(plan: &Plan, id: BufId, r: usize) -> usize {
+    if plan.elided[id.0] { 0 } else { r }
+}
+
+/// One output row of a shared-op region member — exactly the `r`-th
+/// iteration of the corresponding [`run_shared`] body (serial, 1-row
+/// kernel blocks), so a row-interleaved region loop reproduces the
+/// op-major scalar order bitwise. Returns `Ok(false)` for ops the
+/// entrypoint-specific row body must handle.
+fn shared_row(node: &Node, r: usize, plan: &Plan, arena: &mut Arena,
+              params: &Params, tokens: &[i32], cfg: &ConfigInfo)
+    -> Result<bool> {
+    let (d, di, dp, v) = (cfg.d_model, cfg.d_inner, cfg.d_in_proj(),
+                          cfg.vocab_size);
+    let dx = Dispatch::new(node.isa);
+    match &node.op {
+        Op::Embed => {
+            let (x, _) = arena.out1(node);
+            let xr = erow(plan, node.outs[0], r);
+            embed_rows(&tokens[r..r + 1], &params.embed, d, v,
+                       &mut x[xr * d..(xr + 1) * d])?;
+        }
+        Op::RmsNorm { layer } => {
+            let lp = &params.layers[*layer];
+            let (hn, ro) = arena.out1(node);
+            let hr = erow(plan, node.outs[0], r);
+            let ir = erow(plan, node.ins[0], r);
+            let xin = ro.buf(node.ins[0]);
+            let row = &mut hn[hr * d..(hr + 1) * d];
+            row.copy_from_slice(&xin[ir * d..(ir + 1) * d]);
+            dx.rmsnorm_row(row, &lp.ln_w, NORM_EPS);
+        }
+        Op::MatMul { kind: MatKind::InProj, layer, repr, .. } => {
+            let w = params.in_proj_stream(*layer, *repr, d, dp);
+            let (zx, ro) = arena.out1(node);
+            let zr = erow(plan, node.outs[0], r);
+            let ar = erow(plan, node.ins[0], r);
+            let a = ro.buf(node.ins[0]);
+            let crow = &mut zx[zr * dp..(zr + 1) * dp];
+            crow.fill(0.0);
+            mm_block(dx, &w, &a[ar * d..], d, 1, d, dp, crow);
+        }
+        Op::GateNorm { layer } => {
+            let lp = &params.layers[*layer];
+            let (y, ro) = arena.out1(node);
+            let yr = erow(plan, node.outs[0], r);
+            let zr = erow(plan, node.ins[1], r);
+            let z = ro.buf(node.ins[1]);
+            dx.gated_rmsnorm_rows(&mut y[yr * di..(yr + 1) * di],
+                                  &z[zr * di..(zr + 1) * di],
+                                  &lp.norm_w, di, NORM_EPS);
+        }
+        Op::MatMul { kind: MatKind::OutProj, layer, repr } => {
+            let w = params.out_proj_stream(*layer, *repr, di, d);
+            let (x, ro) = arena.out1(node);
+            let xr = erow(plan, node.outs[0], r);
+            let yr = erow(plan, node.ins[0], r);
+            let y = ro.buf(node.ins[0]);
+            mm_block(dx, &w, &y[yr * di..], di, 1, di, d,
+                     &mut x[xr * d..(xr + 1) * d]);
+        }
+        Op::FinalNorm => {
+            let (x, _) = arena.out1(node);
+            let xr = erow(plan, node.outs[0], r);
+            dx.rmsnorm_row(&mut x[xr * d..(xr + 1) * d], &params.lnf_w,
+                           NORM_EPS);
+        }
+        Op::MatMul { kind: MatKind::LmHead, repr, .. } => {
+            let w = params.embed_stream(*repr);
+            let (logits, ro) = arena.out1(node);
+            let lr = erow(plan, node.outs[0], r);
+            let ar = erow(plan, node.ins[0], r);
+            let a = ro.buf(node.ins[0]);
+            let crow = &mut logits[lr * v..(lr + 1) * v];
+            crow.fill(0.0);
+            mmbt_block(dx, &w, &a[ar * d..], d, 1, d, v, crow);
+        }
+        _ => return Ok(false),
+    }
+    Ok(true)
+}
+
+/// One row of a prefill region member (`r` over `batch·t` positions).
+fn prefill_row(node: &Node, r: usize, plan: &Plan, arena: &mut Arena,
+               cx: &PrefillCtx, t: usize) -> Result<()> {
+    let cfg = cx.cfg;
+    if shared_row(node, r, plan, arena, cx.params, cx.tokens, cfg)? {
+        return Ok(());
+    }
+    let (di, h, p) = (cfg.d_inner, cfg.nheads, cfg.headdim);
+    let (ch, dp) = (cfg.d_conv_ch, cfg.d_in_proj());
+    let lch = cfg.chunk_size;
+    let nc = t / lch;
+    let bw = lch * p;
+    match &node.op {
+        Op::DtDecay { layer } => {
+            let lp = &cx.params.layers[*layer];
+            let (dtv, da, ro) = arena.out2(node);
+            let dr = erow(plan, node.outs[0], r);
+            let dar = erow(plan, node.outs[1], r);
+            let zr = erow(plan, node.ins[0], r);
+            let zx = ro.buf(node.ins[0]);
+            for hh in 0..h {
+                let sp = softplus(zx[zr * dp + di + ch + hh]
+                                  + lp.dt_bias[hh]);
+                dtv[dr * h + hh] = sp;
+                da[dar * h + hh] = -lp.a_log[hh].exp() * sp;
+            }
+        }
+        Op::XDt { .. } => {
+            let (xdt, ro) = arena.out1(node);
+            let or = erow(plan, node.outs[0], r);
+            let xr = erow(plan, node.ins[0], r);
+            let tr = erow(plan, node.ins[1], r);
+            let xact = ro.buf(node.ins[0]);
+            let dtv = ro.buf(node.ins[1]);
+            for hh in 0..h {
+                let dtf = dtv[tr * h + hh];
+                for pp in 0..p {
+                    xdt[or * di + hh * p + pp] =
+                        xact[xr * ch + hh * p + pp] * dtf;
+                }
+            }
+        }
+        Op::Gather { .. } => {
+            let (y, z, ro) = arena.out2(node);
+            let yr = erow(plan, node.outs[0], r);
+            let zr = erow(plan, node.outs[1], r);
+            let zxr = erow(plan, node.ins[1], r);
+            let ybuf = ro.buf(node.ins[0]);
+            let zx = ro.buf(node.ins[1]);
+            let (bi, ti) = (r / t, r % t);
+            let (c, l) = (ti / lch, ti % lch);
+            for hh in 0..h {
+                let j = (bi * h + hh) * nc + c;
+                y[yr * di + hh * p..yr * di + hh * p + p]
+                    .copy_from_slice(
+                        &ybuf[j * bw + l * p..j * bw + (l + 1) * p]);
+            }
+            z[zr * di..(zr + 1) * di]
+                .copy_from_slice(&zx[zxr * dp..zxr * dp + di]);
+        }
+        Op::SkipAdd { layer } => {
+            let lp = &cx.params.layers[*layer];
+            let (y, ro) = arena.out1(node);
+            let yr = erow(plan, node.outs[0], r);
+            let xr = erow(plan, node.ins[0], r);
+            let xact = ro.buf(node.ins[0]);
+            for hh in 0..h {
+                let ds = lp.d_skip[hh];
+                for pp in 0..p {
+                    y[yr * di + hh * p + pp] +=
+                        xact[xr * ch + hh * p + pp] * ds;
+                }
+            }
+        }
+        op => unreachable!("op {op:?} fused in a prefill region"),
+    }
+    Ok(())
+}
+
+/// One row of a decode region member (`bi` over batch slots). Cache
+/// offsets use the real `bi`; only planned-buffer rows go through
+/// [`erow`].
+fn decode_row(node: &Node, bi: usize, plan: &Plan, arena: &mut Arena,
+              cx: &DecodeCtx, ssm_bytes: &mut [u8],
+              conv_bytes: &mut [u8]) -> Result<()> {
+    let cfg = cx.cfg;
+    if shared_row(node, bi, plan, arena, cx.params, cx.tokens, cfg)? {
+        return Ok(());
+    }
+    let (di, h, p, n) = (cfg.d_inner, cfg.nheads, cfg.headdim,
+                         cfg.d_state);
+    let (ch, k, dp) = (cfg.d_conv_ch, cfg.d_conv, cfg.d_in_proj());
+    let bsz = cx.tokens.len();
+    let kc = k - 1;
+    match &node.op {
+        Op::ConvStep { layer } => {
+            let li = *layer;
+            let lp = &cx.params.layers[li];
+            let (xact, ro) = arena.out1(node);
+            let xr = erow(plan, node.outs[0], bi);
+            let zr = erow(plan, node.ins[0], bi);
+            let zx = ro.buf(node.ins[0]);
+            for c in 0..ch {
+                let st = ((li * bsz + bi) * ch + c) * kc;
+                let xnew = zx[zr * dp + di + c];
+                let mut acc = lp.conv_b[c];
+                for j in 0..kc {
+                    acc += read_f32(conv_bytes, st + j)
+                        * lp.conv_w[j * ch + c];
+                }
+                acc += xnew * lp.conv_w[kc * ch + c];
+                xact[xr * ch + c] = silu(acc);
+                for j in 0..kc - 1 {
+                    let v = read_f32(conv_bytes, st + j + 1);
+                    write_f32(conv_bytes, st + j, v);
+                }
+                write_f32(conv_bytes, st + kc - 1, xnew);
+            }
+        }
+        Op::SsmStep { layer } => {
+            let li = *layer;
+            let lp = &cx.params.layers[li];
+            let (y, ro) = arena.out1(node);
+            let yr = erow(plan, node.outs[0], bi);
+            let zr = erow(plan, node.ins[0], bi);
+            let xr = erow(plan, node.ins[1], bi);
+            let zx = ro.buf(node.ins[0]);
+            let xact = ro.buf(node.ins[1]);
+            for hh in 0..h {
+                let sp = softplus(zx[zr * dp + di + ch + hh]
+                                  + lp.dt_bias[hh]);
+                let dae = (-lp.a_log[hh].exp() * sp).exp();
+                let boff = xr * ch + di + hh * n;
+                let coff = xr * ch + di + h * n + hh * n;
+                for pp in 0..p {
+                    let soff = (((li * bsz + bi) * h + hh) * p + pp) * n;
+                    let xv = xact[xr * ch + hh * p + pp] * sp;
+                    let mut acc = 0.0f32;
+                    for nn in 0..n {
+                        let snew = read_f32(ssm_bytes, soff + nn) * dae
+                            + xv * xact[boff + nn];
+                        write_f32(ssm_bytes, soff + nn, snew);
+                        acc += snew * xact[coff + nn];
+                    }
+                    y[yr * di + hh * p + pp] =
+                        acc + xact[xr * ch + hh * p + pp]
+                            * lp.d_skip[hh];
+                }
+            }
+        }
+        Op::CopyZ { .. } => {
+            let (z, ro) = arena.out1(node);
+            let zr = erow(plan, node.outs[0], bi);
+            let zxr = erow(plan, node.ins[0], bi);
+            let zx = ro.buf(node.ins[0]);
+            z[zr * di..(zr + 1) * di]
+                .copy_from_slice(&zx[zxr * dp..zxr * dp + di]);
+        }
+        op => unreachable!("op {op:?} fused in a decode region"),
+    }
+    Ok(())
 }
 
 /// Execute a prefill plan: logits for every position plus the cache
@@ -409,7 +658,26 @@ pub fn run_prefill(plan: &Plan, cx: &PrefillCtx)
     let boff = di; // B block offset inside an xact row
     let coff = di + h * n; // C block offset
 
-    for node in &plan.graph.nodes {
+    let nodes = &plan.graph.nodes;
+    let mut i = 0;
+    while i < nodes.len() {
+        // a fusion region runs its members as one row-interleaved loop
+        // on the calling thread: every member is row-pointwise over the
+        // region's row space, so per-row execution in node order keeps
+        // each member's exact standalone arithmetic (module docs;
+        // `tests/fusion_parity.rs` pins it bitwise)
+        if let Some(region) = plan.region_at(i) {
+            Dispatch::new(region.isa).fused_rows(rows, |r| {
+                for node in &nodes[region.lo..=region.hi] {
+                    prefill_row(node, r, plan, &mut arena, cx, t)?;
+                }
+                Ok(())
+            })?;
+            i = region.hi + 1;
+            continue;
+        }
+        let node = &nodes[i];
+        i += 1;
         if run_shared(node, &mut arena, cx.params, cx.pool, cx.tokens,
                       rows, cfg)? {
             continue;
@@ -603,53 +871,40 @@ pub fn run_prefill(plan: &Plan, cx: &PrefillCtx)
                     }
                 });
             }
-            Op::Gather { layer, fuse_skip } => {
-                let lp = &cx.params.layers[*layer];
+            Op::Gather { .. } => {
                 let (y, z, ro) = arena.out2(node);
                 let ybuf = ro.buf(node.ins[0]);
-                let xact = ro.buf(node.ins[1]);
-                let zx = ro.buf(node.ins[2]);
-                if *fuse_skip {
-                    // scatter with the D-skip add fused in: each output
-                    // element still receives exactly one add of
-                    // `xact·d_skip` onto its chunk value, so this is
-                    // bitwise identical to the unfused two-pass form
-                    for j in 0..njobs {
-                        let (bi, hh, c) = split(j);
+                let zx = ro.buf(node.ins[1]);
+                for j in 0..njobs {
+                    let (bi, hh, c) = split(j);
+                    for l in 0..lch {
+                        let r = bi * t + c * lch + l;
+                        y[r * di + hh * p..r * di + hh * p + p]
+                            .copy_from_slice(
+                                &ybuf[j * bw + l * p
+                                      ..j * bw + (l + 1) * p]);
+                    }
+                }
+                for r in 0..rows {
+                    z[r * di..(r + 1) * di]
+                        .copy_from_slice(&zx[r * dp..r * dp + di]);
+                }
+            }
+            Op::SkipAdd { layer } => {
+                // y += xact·D — each output element receives exactly
+                // one add onto its gathered chunk value, so running
+                // this as a separate pass (or fused per-row, where the
+                // planner groups it) is bitwise identical to the old
+                // scatter-fused form
+                let lp = &cx.params.layers[*layer];
+                let (y, ro) = arena.out1(node);
+                let xact = ro.buf(node.ins[0]);
+                for r in 0..rows {
+                    for hh in 0..h {
                         let ds = lp.d_skip[hh];
-                        for l in 0..lch {
-                            let r = bi * t + c * lch + l;
-                            for pp in 0..p {
-                                y[r * di + hh * p + pp] =
-                                    ybuf[j * bw + l * p + pp]
-                                    + xact[r * ch + hh * p + pp] * ds;
-                            }
-                        }
-                    }
-                    for r in 0..rows {
-                        z[r * di..(r + 1) * di]
-                            .copy_from_slice(&zx[r * dp..r * dp + di]);
-                    }
-                } else {
-                    for j in 0..njobs {
-                        let (bi, hh, c) = split(j);
-                        for l in 0..lch {
-                            let r = bi * t + c * lch + l;
-                            y[r * di + hh * p..r * di + hh * p + p]
-                                .copy_from_slice(
-                                    &ybuf[j * bw + l * p
-                                          ..j * bw + (l + 1) * p]);
-                        }
-                    }
-                    for r in 0..rows {
-                        z[r * di..(r + 1) * di]
-                            .copy_from_slice(&zx[r * dp..r * dp + di]);
-                        for hh in 0..h {
-                            let ds = lp.d_skip[hh];
-                            for pp in 0..p {
-                                y[r * di + hh * p + pp] +=
-                                    xact[r * ch + hh * p + pp] * ds;
-                            }
+                        for pp in 0..p {
+                            y[r * di + hh * p + pp] +=
+                                xact[r * ch + hh * p + pp] * ds;
                         }
                     }
                 }
@@ -691,7 +946,26 @@ pub fn run_decode(plan: &Plan, cx: &DecodeCtx) -> Result<StepOut> {
 
     let mut arena = Arena::new(plan);
 
-    for node in &plan.graph.nodes {
+    let nodes = &plan.graph.nodes;
+    let mut i = 0;
+    while i < nodes.len() {
+        // fusion region: one slot-interleaved loop over the batch; the
+        // conv window and ssm state slots are per-(layer, slot), so
+        // interleaving members across slots touches each cache element
+        // in the same read-once-then-write order as the op-major path
+        if let Some(region) = plan.region_at(i) {
+            Dispatch::new(region.isa).fused_rows(bsz, |bi| {
+                for node in &nodes[region.lo..=region.hi] {
+                    decode_row(node, bi, plan, &mut arena, cx,
+                               &mut ssm_bytes, &mut conv_bytes)?;
+                }
+                Ok(())
+            })?;
+            i = region.hi + 1;
+            continue;
+        }
+        let node = &nodes[i];
+        i += 1;
         if run_shared(node, &mut arena, cx.params, cx.pool, cx.tokens,
                       bsz, cfg)? {
             continue;

@@ -14,9 +14,10 @@
 //!
 //! The IR deliberately stays at *einsum altitude*: ops are whole
 //! contractions and whole scans, not loops — fusion and tiling are
-//! schedule annotations, never new ops — which is the paper's
-//! compiler-first premise (SSD's structure lets the compiler own the
-//! schedule) realised natively.
+//! schedule annotations, never new ops (fusion regions are index
+//! ranges over this node list, chosen by `super::planner`) — which is
+//! the paper's compiler-first premise (SSD's structure lets the
+//! compiler own the schedule) realised natively.
 
 use crate::runtime::ConfigInfo;
 use crate::tensor::kernels::{Isa, KernelClass};
@@ -51,8 +52,9 @@ impl BufSpec {
 pub enum MatKind {
     /// `zx = hn @ in_proj` (fresh output)
     InProj,
-    /// `x (+)= y @ out_proj` — the residual add fuses into the
-    /// accumulating contraction when the planner says so
+    /// `x += y @ out_proj` — always the accumulating contraction (the
+    /// oracle's schedule; a copy-out-then-add form has no bitwise-equal
+    /// decomposition, so the residual never leaves the matmul)
     OutProj,
     /// `logits = x @ embedᵀ` (tied lm head, transposed-B form)
     LmHead,
@@ -101,8 +103,7 @@ pub enum Op {
     RmsNorm { layer: usize },
     /// dense contraction against a weight matrix; `repr` is the
     /// planner-chosen storage the weight streams as (precision pass)
-    MatMul { kind: MatKind, layer: usize, fuse_residual: bool,
-             repr: WeightRepr },
+    MatMul { kind: MatKind, layer: usize, repr: WeightRepr },
     /// causal depthwise conv over time (prefill; seeds from the cache
     /// window on continuation, writes the cache tail)
     ConvScan { layer: usize },
@@ -118,10 +119,15 @@ pub enum Op {
     ChunkScan { layer: usize },
     /// stage C: intra-chunk dual form + cross-chunk read-out
     ChunkRead { layer: usize },
-    /// scatter chunk outputs back to `(rows, di)`, plus the D-skip add
-    /// (fused into the scatter when the planner says so) and the z gate
-    /// extraction
-    Gather { layer: usize, fuse_skip: bool },
+    /// scatter chunk outputs back to `(rows, di)` plus the z gate
+    /// extraction (each output element written exactly once, so any
+    /// row order is bitwise identical)
+    Gather { layer: usize },
+    /// the D-skip epilogue `y += xs ⊙ D` per head (prefill) — a
+    /// separate accumulate pass, bitwise equal to riding the scatter
+    /// because copy-then-add performs the identical single f32 add; the
+    /// fusion-region pass merges it back when the bytes say so
+    SkipAdd { layer: usize },
     /// decode z-gate extraction from the packed in_proj output
     CopyZ { layer: usize },
     /// diagonal state update + read-out + D-skip (decode)
@@ -152,7 +158,8 @@ impl Op {
             Op::ChunkState { layer } => format!("chunk_state.L{layer}"),
             Op::ChunkScan { layer } => format!("chunk_scan.L{layer}"),
             Op::ChunkRead { layer } => format!("chunk_read.L{layer}"),
-            Op::Gather { layer, .. } => format!("gather.L{layer}"),
+            Op::Gather { layer } => format!("gather.L{layer}"),
+            Op::SkipAdd { layer } => format!("skip_add.L{layer}"),
             Op::CopyZ { layer } => format!("copy_z.L{layer}"),
             Op::SsmStep { layer } => format!("ssm_step.L{layer}"),
             Op::GateNorm { layer } => format!("gate_norm.L{layer}"),
@@ -180,8 +187,33 @@ impl Op {
             }
             Op::Embed | Op::ConvScan { .. } | Op::ConvStep { .. }
             | Op::DtDecay { .. } | Op::XDt { .. } | Op::Gather { .. }
-            | Op::CopyZ { .. } | Op::SsmStep { .. } => None,
+            | Op::SkipAdd { .. } | Op::CopyZ { .. }
+            | Op::SsmStep { .. } => None,
         }
+    }
+
+    /// Whether this op may join a fusion region (DESIGN.md §12): true
+    /// for every op that is *row-pointwise in the invocation's row
+    /// space* — output row `r` depends only on row `r` of its in-region
+    /// inputs (whole pre-region buffers may be read freely) — so a
+    /// row-interleaved region loop reproduces the op-major scalar order
+    /// bitwise. The time-/cell-sequential ops (the conv scan and the
+    /// three chunk stages) are not row-decomposable and never fuse.
+    pub fn fusable(&self) -> bool {
+        !matches!(self,
+                  Op::ConvScan { .. } | Op::ChunkState { .. }
+                  | Op::ChunkScan { .. } | Op::ChunkRead { .. })
+    }
+
+    /// Whether this op *accumulates into* (reads) its output buffer
+    /// rather than overwriting it — an implicit read edge the fusion
+    /// pricing and the elision legality walk both need. Ops that list
+    /// the buffer in `ins` as well (gate norm, the final norm) don't
+    /// also need a flag here.
+    pub fn reads_out(&self) -> bool {
+        matches!(self,
+                 Op::MatMul { kind: MatKind::OutProj, .. }
+                 | Op::SkipAdd { .. })
     }
 }
 
@@ -323,7 +355,6 @@ pub fn lower_prefill(cfg: &ConfigInfo, batch: usize, t: usize) -> Graph {
                            2.0 * f(rows) * f(d) * 4.0)
                    .with_transc(f(rows)), None);
         g.node(Op::MatMul { kind: MatKind::InProj, layer: li,
-                            fuse_residual: false,
                             repr: WeightRepr::F32Dense },
                vec![hn], vec![zx], mm_work(rows, d, dp),
                Some((rows, d, dp)));
@@ -372,16 +403,20 @@ pub fn lower_prefill(cfg: &ConfigInfo, batch: usize, t: usize) -> Graph {
                    transc: f(njobs) * f(lch * (lch + 3) / 2),
                    jobs: njobs,
                }, None);
-        g.node(Op::Gather { layer: li, fuse_skip: true },
-               vec![ybuf, xact, zx], vec![y, z],
+        // the scatter (pure data movement) and the D-skip accumulate
+        // are separate nodes: the fusion-region pass re-merges them —
+        // and the gate norm after them — whenever the saved y/z bytes
+        // beat the loop overhead, instead of a hard-wired fused scatter
+        g.node(Op::Gather { layer: li }, vec![ybuf, zx], vec![y, z],
+               serial_work(0.0, 4.0 * f(rows) * f(di) * 4.0), None);
+        g.node(Op::SkipAdd { layer: li }, vec![xact], vec![y],
                serial_work(f(rows) * f(di),
-                           4.0 * f(rows) * f(di) * 4.0), None);
+                           3.0 * f(rows) * f(di) * 4.0), None);
         g.node(Op::GateNorm { layer: li }, vec![y, z], vec![y],
                serial_work(6.0 * f(rows) * f(di),
                            3.0 * f(rows) * f(di) * 4.0)
                    .with_transc(f(rows) * f(di) + f(rows)), None);
         g.node(Op::MatMul { kind: MatKind::OutProj, layer: li,
-                            fuse_residual: true,
                             repr: WeightRepr::F32Dense },
                vec![y], vec![x], mm_work(rows, di, d),
                Some((rows, di, d)));
@@ -391,7 +426,6 @@ pub fn lower_prefill(cfg: &ConfigInfo, batch: usize, t: usize) -> Graph {
                        2.0 * f(rows) * f(d) * 4.0)
                .with_transc(f(rows)), None);
     g.node(Op::MatMul { kind: MatKind::LmHead, layer: 0,
-                        fuse_residual: false,
                         repr: WeightRepr::F32Dense },
            vec![x], vec![logits], mm_work(rows, d, v),
            Some((rows, d, v)));
@@ -424,7 +458,6 @@ pub fn lower_decode(cfg: &ConfigInfo, batch: usize) -> Graph {
                    .with_transc(f(b)),
                None);
         g.node(Op::MatMul { kind: MatKind::InProj, layer: li,
-                            fuse_residual: false,
                             repr: WeightRepr::F32Dense },
                vec![hn], vec![zx], mm_work(b, d, dp), Some((b, d, dp)));
         g.node(Op::ConvStep { layer: li }, vec![zx], vec![xact],
@@ -443,7 +476,6 @@ pub fn lower_decode(cfg: &ConfigInfo, batch: usize) -> Graph {
                            3.0 * f(b) * f(di) * 4.0)
                    .with_transc(f(b) * f(di) + f(b)), None);
         g.node(Op::MatMul { kind: MatKind::OutProj, layer: li,
-                            fuse_residual: true,
                             repr: WeightRepr::F32Dense },
                vec![y], vec![x], mm_work(b, di, d), Some((b, di, d)));
     }
@@ -451,7 +483,6 @@ pub fn lower_decode(cfg: &ConfigInfo, batch: usize) -> Graph {
            serial_work(3.0 * f(b) * f(d), 2.0 * f(b) * f(d) * 4.0)
                .with_transc(f(b)), None);
     g.node(Op::MatMul { kind: MatKind::LmHead, layer: 0,
-                        fuse_residual: false,
                         repr: WeightRepr::F32Dense },
            vec![x], vec![logits], mm_work(b, d, v), Some((b, d, v)));
     g
@@ -470,8 +501,10 @@ mod tests {
     fn prefill_graph_shape() {
         let cfg = sim_config("tiny").unwrap();
         let g = lower_prefill(&cfg, 1, 32);
-        // 1 embed + 11 nodes per layer + final norm + lm head
-        assert_eq!(g.nodes.len(), 1 + 11 * cfg.n_layer + 2);
+        // 1 embed + 12 nodes per layer (the scatter and the D-skip
+        // accumulate are separate nodes since the fusion-region pass)
+        // + final norm + lm head
+        assert_eq!(g.nodes.len(), 1 + 12 * cfg.n_layer + 2);
         assert_eq!(g.bufs.len(), 15);
         // memory plan: buffers sized for (rows=32) and (njobs=b·h·nc=8)
         let by_name = |n: &str| {
@@ -553,6 +586,28 @@ mod tests {
                 // lowering leaves every node on the scalar tier; the
                 // planner owns retiering
                 assert_eq!(node.isa, Isa::Scalar);
+            }
+        }
+    }
+
+    #[test]
+    fn fusability_excludes_exactly_the_sequential_ops() {
+        let cfg = sim_config("tiny").unwrap();
+        for g in [lower_prefill(&cfg, 1, 32), lower_decode(&cfg, 2)] {
+            for node in &g.nodes {
+                let sequential = matches!(
+                    node.op, Op::ConvScan { .. } | Op::ChunkState { .. }
+                        | Op::ChunkScan { .. } | Op::ChunkRead { .. });
+                assert_eq!(node.op.fusable(), !sequential,
+                           "{}", node.op.label());
+                // accumulate-into-output edges: exactly the residual
+                // out_proj and the D-skip pass
+                let accumulates = matches!(
+                    node.op,
+                    Op::MatMul { kind: MatKind::OutProj, .. }
+                        | Op::SkipAdd { .. });
+                assert_eq!(node.op.reads_out(), accumulates,
+                           "{}", node.op.label());
             }
         }
     }

@@ -34,6 +34,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::runtime::manifest::{CostInfo, ScheduleInfo, WeightsDtype};
+use crate::tensor::kernels::Isa;
 
 use ir::Graph;
 use planner::Sched;
@@ -60,6 +61,48 @@ impl PlanMode {
             _ => PlanMode::On,
         }
     }
+}
+
+/// Whether the planner's fusion-region pass runs (the default,
+/// DESIGN.md §12) or every node executes standalone. The unfused plan
+/// is the bitwise parity oracle for the fused path
+/// (`tests/fusion_parity.rs`); `M2_FUSE=off` (or `--fuse off`) keeps it
+/// reachable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FuseMode {
+    On,
+    Off,
+}
+
+impl FuseMode {
+    /// Default from the `M2_FUSE` env var: `off` / `0` disable the
+    /// fusion-region pass, anything else enables it.
+    pub fn from_env() -> FuseMode {
+        match std::env::var("M2_FUSE") {
+            Ok(v) if matches!(v.trim(), "off" | "0") => FuseMode::Off,
+            _ => FuseMode::On,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            FuseMode::On => "on",
+            FuseMode::Off => "off",
+        }
+    }
+}
+
+/// One chosen fusion region: a contiguous, inclusive index range
+/// `[lo, hi]` over [`Graph::nodes`] whose members execute as a single
+/// row-interleaved loop (`exec`), plus the kernel-tier ISA recorded for
+/// the region (the max member tier — recording only; each member row
+/// body still dispatches through its own node ISA, so fusion never
+/// changes what the kernels compute).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExecRegion {
+    pub lo: usize,
+    pub hi: usize,
+    pub isa: Isa,
 }
 
 /// Which entrypoint a plan lowers.
@@ -119,8 +162,20 @@ pub struct Plan {
     pub stream_bytes: f64,
     /// wall-clock spent planning this plan
     pub planning_ms: f64,
+    /// fusion regions chosen by the cost model: ascending, disjoint
+    /// index ranges over `graph.nodes` (empty under [`FuseMode::Off`])
+    pub regions: Vec<ExecRegion>,
+    /// per-buffer elision flags (same order as `graph.bufs`): an elided
+    /// intermediate lives and dies inside fusion regions, so the slab
+    /// plan backs it with a single scratch row instead of `rows` rows
+    pub elided: Vec<bool>,
+    /// activation bytes the byte model says fusion keeps out of DRAM
+    /// per invocation (in-region read edges + fully-consumed
+    /// write-backs) — the `fusion.bytes_elided` bench field
+    pub bytes_elided: f64,
     /// memory plan: `(offset, len)` of each [`ir::BufSpec`] inside the
-    /// execution slab (dense, disjoint, same order as `graph.bufs`)
+    /// execution slab (dense, disjoint, same order as `graph.bufs`;
+    /// elided buffers map to one-row scratch at the slab tail)
     pub buf_offsets: Vec<(usize, usize)>,
     /// total slab length, f32 elements
     pub slab_len: usize,
@@ -189,6 +244,13 @@ impl Plan {
     pub fn arena_stats(&self) -> (u64, u64) {
         self.arenas.stats()
     }
+
+    /// The fusion region starting at node index `i`, if any — the
+    /// executor's entry test (regions are disjoint and keyed by their
+    /// first member).
+    pub fn region_at(&self, i: usize) -> Option<ExecRegion> {
+        self.regions.iter().copied().find(|r| r.lo == i)
+    }
 }
 
 impl Plan {
@@ -212,15 +274,10 @@ impl Plan {
             self.cost.flops as u64, self.cost.bytes_accessed as u64,
             self.cost.transcendentals as u64));
         s.push_str(&format!(
-            "schedule: row_block={} chunk_tile={} fanout={} fused={} \
+            "schedule: row_block={} chunk_tile={} fanout={} regions={} \
              weights={} layout={} isa={}\n",
             self.schedule.row_block, self.schedule.chunk_tile,
-            self.schedule.fanout,
-            if self.schedule.fused.is_empty() {
-                "-".to_string()
-            } else {
-                self.schedule.fused.join("+")
-            },
+            self.schedule.fanout, self.regions.len(),
             self.schedule.weights_dtype, self.schedule.weight_layout,
             self.schedule.isa));
         for (i, node) in self.graph.nodes.iter().enumerate() {
@@ -241,12 +298,10 @@ impl Plan {
                 Some((m, k, n)) => format!(" mm[{m}x{k}x{n}]"),
                 None => String::new(),
             };
-            let fuse = match &node.op {
-                ir::Op::MatMul { kind: ir::MatKind::OutProj,
-                                 fuse_residual: true, .. } => " fused-acc",
-                ir::Op::Gather { fuse_skip: true, .. } => " fused-skip",
-                _ => "",
-            };
+            let fuse = self.regions.iter()
+                .position(|r| i >= r.lo && i <= r.hi)
+                .map(|k| format!(" region={k}"))
+                .unwrap_or_default();
             let wtok = match &node.op {
                 ir::Op::MatMul { repr, .. } => {
                     format!(" w={}", repr.label())
@@ -383,7 +438,7 @@ mod tests {
     fn build(k: PlanKey) -> Plan {
         let cfg = sim_config("tiny").unwrap();
         planner::build_plan(&cfg, k, 4, WeightsDtype::F32,
-                            crate::tensor::kernels::Isa::Scalar)
+                            Isa::Scalar, FuseMode::On)
     }
 
     #[test]
@@ -442,7 +497,10 @@ mod tests {
         assert!(d.contains("in_proj.L0"));
         assert!(d.contains("chunk_scan.L0"));
         assert!(d.contains("lm_head"));
-        assert!(d.contains("fused-acc"));
+        // the fusion-region pass is part of the dumped schedule: the
+        // header counts the regions, member node lines carry the token
+        assert!(d.contains(" regions="), "{d}");
+        assert!(d.contains(" region=0"), "{d}");
         // the precision/layout pass is part of the dumped schedule
         assert!(d.contains("weights=f32"), "{d}");
         assert!(d.contains(" w=f32"), "{d}");
@@ -459,7 +517,7 @@ mod tests {
         let cfg = sim_config("sim-130m").unwrap();
         let k = PlanKey { entry: Entry::Prefill, batch: 1, t: 512 };
         let p = planner::build_plan(&cfg, k, 8, WeightsDtype::F32,
-                                    crate::tensor::kernels::Isa::Avx2);
+                                    Isa::Avx2, FuseMode::On);
         let d = p.dump();
         assert!(d.contains(" isa=avx2\n"), "schedule line: {d}");
         // at least the compute-bound contractions carry the tag, on

@@ -19,22 +19,28 @@
 //! out of the model instead of being pinned by hand: tiny contractions
 //! price out to serial, large ones to `W`-way row blocks.
 //!
-//! Fusion decisions go through the same loop: the planner prices the
-//! fused and unfused forms of the residual/D-skip adds and keeps the
-//! cheaper one (fused strictly dominates on every config of the ladder —
-//! a unit test pins that, because the bitwise-parity contract with the
-//! hand-scheduled oracle relies on the fused choice).
+//! Fusion decisions go through the same loop: a dataflow grouping pass
+//! (`choose_regions`) merges runs of row-pointwise producer→consumer
+//! nodes into fusion regions whenever the merged roofline price — the
+//! bytes the region never re-materialises through DRAM minus its
+//! per-row loop re-entry overhead (`perf::roofline::FUSE_LOOP_S`) —
+//! beats the members' standalone prices (DESIGN.md §12).
+//! Bandwidth-bound decode fuses aggressively; compute-bound prefill
+//! only where the epilogue is free. Membership is priced ISA-blind
+//! (scalar tier), so the kernel tier can never shift what fuses, and
+//! the whole pass is gated by `FuseMode` (`M2_FUSE`) so the unfused
+//! plan stays reachable as the bitwise parity oracle.
 
 use std::time::Instant;
 
-use crate::perf::roofline::{isa_scales, CPU_HOST};
+use crate::perf::roofline::{isa_scales, CPU_HOST, FUSE_LOOP_S};
 use crate::runtime::backend::analytic_cost;
-use crate::runtime::manifest::{ScheduleInfo, WeightsDtype};
+use crate::runtime::manifest::{RegionInfo, ScheduleInfo, WeightsDtype};
 use crate::runtime::ConfigInfo;
 use crate::tensor::kernels::Isa;
 
-use super::ir::{self, MatKind, Op, WeightRepr, Work};
-use super::{ArenaPool, Entry, Plan, PlanKey};
+use super::ir::{self, Op, WeightRepr, Work};
+use super::{ArenaPool, Entry, ExecRegion, FuseMode, Plan, PlanKey};
 
 /// Per-job dispatch cost of `util::threadpool` (mpsc enqueue + worker
 /// wake-up), measured envelope on the container class CI runs on — the
@@ -160,17 +166,205 @@ fn choose(w: &Work, threads: usize, row_block: bool) -> (Sched, f64) {
     best
 }
 
-/// Price the unfused form of an elementwise epilogue (`extra_rows ×
-/// width` adds as a separate pass): the cost the fused form saves.
-fn epilogue_time(rows: usize, width: usize, threads: usize) -> f64 {
-    let w = Work {
-        flops: (rows * width) as f64,
-        shared_bytes: 0.0,
-        stream_bytes: 3.0 * (rows * width) as f64 * 4.0,
-        transc: 0.0,
-        jobs: 1,
+/// At most one contraction per region: the row-interleaved region loop
+/// runs on the calling thread, so a second matmul would always pile
+/// serialised compute onto a region that the first one's saved bytes
+/// can never repay (and one accumulating contraction already gives the
+/// residual epilogue its free ride).
+const REGION_MM_CAP: usize = 1;
+
+/// Buffers node `j` reads: its declared inputs plus its own output when
+/// the op accumulates into it ([`Op::reads_out`]).
+fn read_set(node: &ir::Node) -> Vec<usize> {
+    let mut r: Vec<usize> = node.ins.iter().map(|b| b.0).collect();
+    if node.op.reads_out() {
+        for b in &node.outs {
+            if !r.contains(&b.0) {
+                r.push(b.0);
+            }
+        }
+    }
+    r
+}
+
+/// Latest writer of buffer `b` strictly before node `j`, if any.
+fn writer_before(graph: &ir::Graph, b: usize, j: usize) -> Option<usize> {
+    (0..j).rev().find(|&i| graph.nodes[i].outs.iter().any(|o| o.0 == b))
+}
+
+/// The readers of the value node `j` writes into buffer `b`: every
+/// later node that reads `b` up to and including the next writer (which
+/// reads the old value too when it accumulates or lists `b` as an
+/// input); the value is dead past that writer.
+fn readers_of_write(graph: &ir::Graph, b: usize, j: usize) -> Vec<usize> {
+    let mut readers = Vec::new();
+    for (i, node) in graph.nodes.iter().enumerate().skip(j + 1) {
+        let reads = node.ins.iter().any(|x| x.0 == b)
+            || (node.op.reads_out()
+                && node.outs.iter().any(|x| x.0 == b));
+        if reads {
+            readers.push(i);
+        }
+        if node.outs.iter().any(|x| x.0 == b) {
+            break;
+        }
+    }
+    readers
+}
+
+/// Merge nodes `lo..=hi` into one [`Work`], shaving off the streamed
+/// bytes the fused row loop never re-materialises through DRAM
+/// (DESIGN.md §12):
+///
+///   * read edges whose latest prior writer sits inside the candidate —
+///     the value is still cache-hot from the same row iteration,
+///   * writes whose every reader sits inside the candidate — the store
+///     never needs to reach DRAM at all (slab elision collects these).
+///
+/// Shared (weight) bytes are never saved: fusion does not change what a
+/// contraction streams from its weight matrix. Returns the merged work
+/// and the bytes actually shaved (clamped so a region can never price
+/// negative traffic).
+fn merged_work(graph: &ir::Graph, lo: usize, hi: usize) -> (Work, f64) {
+    let mut w = Work::default();
+    let mut stream = 0.0;
+    let mut saved = 0.0;
+    for j in lo..=hi {
+        let node = &graph.nodes[j];
+        w.flops += node.work.flops;
+        w.transc += node.work.transc;
+        w.shared_bytes += node.work.shared_bytes;
+        stream += node.work.stream_bytes;
+        for b in read_set(node) {
+            if let Some(wr) = writer_before(graph, b, j) {
+                if wr >= lo {
+                    saved += graph.bufs[b].len() as f64 * 4.0;
+                }
+            }
+        }
+        for out in &node.outs {
+            let readers = readers_of_write(graph, out.0, j);
+            if !readers.is_empty()
+                && readers.iter().all(|&r| r >= lo && r <= hi) {
+                saved += graph.bufs[out.0].len() as f64 * 4.0;
+            }
+        }
+    }
+    let saved = saved.min(stream);
+    w.stream_bytes = stream - saved;
+    w.jobs = 1;
+    (w, saved)
+}
+
+/// One chosen fusion region before it is written onto the plan.
+struct RegionPick {
+    lo: usize,
+    hi: usize,
+    /// merged work with the saved bytes already subtracted
+    work: Work,
+    /// streamed bytes the merge shaves off per invocation
+    saved: f64,
+}
+
+/// The greedy fusion-region pass: scan the node list forward, start a
+/// candidate at each fusable node, and extend it while the next node is
+/// fusable, the contraction cap holds, and the merged region prices
+/// strictly under the current region plus the next node's standalone
+/// (chosen-schedule) cost. The standalone baseline is what makes the
+/// pass cost-chosen rather than greedy-maximal: serialising a
+/// fanned-out matmul into a region must pay for itself against its
+/// parallel price, so compute-bound prefill keeps its row-blocked
+/// contractions unfused while bandwidth-bound decode chains fuse
+/// nearly end-to-end. Priced entirely on the scalar tier so the ISA
+/// request can never shift membership.
+fn choose_regions(graph: &ir::Graph, threads: usize, rows: usize,
+                  standalone: &[f64]) -> Vec<RegionPick> {
+    let n = graph.nodes.len();
+    let is_mm = |i: usize| {
+        matches!(graph.nodes[i].op, Op::MatMul { .. }) as usize
     };
-    serial_time(&w, threads)
+    let region_t = |w: &Work, members: usize| {
+        isa_time(w, Sched::Serial, threads, Isa::Scalar)
+            + rows as f64 * (members - 1) as f64 * FUSE_LOOP_S
+    };
+    let mut picks = Vec::new();
+    let mut i = 0;
+    while i < n {
+        if !graph.nodes[i].op.fusable() {
+            i += 1;
+            continue;
+        }
+        let mut hi = i;
+        let mut mms = is_mm(i);
+        let mut cur_t = standalone[i];
+        let mut cur: Option<(Work, f64)> = None;
+        loop {
+            let next = hi + 1;
+            if next >= n || !graph.nodes[next].op.fusable()
+                || mms + is_mm(next) > REGION_MM_CAP {
+                break;
+            }
+            let (w, saved) = merged_work(graph, i, next);
+            let cand_t = region_t(&w, next - i + 1);
+            if cand_t < cur_t + standalone[next] {
+                hi = next;
+                mms += is_mm(next);
+                cur_t = cand_t;
+                cur = Some((w, saved));
+            } else {
+                break;
+            }
+        }
+        if let Some((work, saved)) = cur {
+            picks.push(RegionPick { lo: i, hi, work, saved });
+            i = hi + 1;
+        } else {
+            i += 1;
+        }
+    }
+    picks
+}
+
+/// Per-buffer slab elision (DESIGN.md §12): a buffer whose every write
+/// happens inside a fusion region and is fully consumed inside that
+/// same region never holds more than one live row at a time in the
+/// row-interleaved loop, so the memory plan backs it with a single
+/// scratch row instead of `rows` rows. The graph's final output is
+/// never elided — it leaves the plan.
+fn elide_bufs(graph: &ir::Graph, picks: &[RegionPick]) -> Vec<bool> {
+    let region_of = |i: usize| {
+        picks.iter().position(|p| i >= p.lo && i <= p.hi)
+    };
+    let last_out = graph.nodes.last().map(|n| n.outs[0].0);
+    let mut elided = vec![false; graph.bufs.len()];
+    for b in 0..graph.bufs.len() {
+        if Some(b) == last_out {
+            continue;
+        }
+        let writers: Vec<usize> = (0..graph.nodes.len())
+            .filter(|&j| graph.nodes[j].outs.iter().any(|o| o.0 == b))
+            .collect();
+        if writers.is_empty() {
+            continue;
+        }
+        elided[b] = writers.iter().all(|&j| match region_of(j) {
+            Some(r) => readers_of_write(graph, b, j).iter()
+                .all(|&rd| region_of(rd) == Some(r)),
+            None => false,
+        });
+    }
+    elided
+}
+
+/// Recording rank for a region's ISA tag (scalar < neon < avx2): the
+/// region records the highest member tier, purely descriptive — each
+/// member row body still dispatches through its own node ISA.
+fn isa_rank(isa: Isa) -> u8 {
+    match isa {
+        Isa::Scalar => 0,
+        Isa::Neon => 1,
+        Isa::Avx2 => 2,
+    }
 }
 
 /// Panel width of the f32 tile pack for a `(k, n)` weight: the widest
@@ -225,24 +419,28 @@ fn choose_repr(entry: Entry, weights: WeightsDtype, threads: usize,
 }
 
 /// Build and schedule the plan for one `(entrypoint, batch, t)` shape
-/// bucket. Pure function of `(cfg, key, threads, weights, isa)` — the
-/// same inputs always produce the same schedule (the golden `plan_dump`
-/// test pins that).
+/// bucket. Pure function of `(cfg, key, threads, weights, isa, fuse)` —
+/// the same inputs always produce the same schedule (the golden
+/// `plan_dump` test pins that).
 ///
 /// `isa` is the backend's *requested* kernel tier (already resolved
 /// against host capability): fan-out and fusion are chosen ISA-blind,
 /// then every classed node is priced scalar-vs-requested through
 /// [`isa_time`] and retiers only on a ≥ [`ISA_MARGIN`] win. With
 /// `Isa::Scalar` the plan is identical to the pre-kernel-tier output.
+/// `fuse` gates the fusion-region pass; under [`FuseMode::Off`] every
+/// node executes standalone and the slab stays fully dense (the
+/// bitwise parity oracle of `tests/fusion_parity.rs`).
 pub fn build_plan(cfg: &ConfigInfo, key: PlanKey, threads: usize,
-                  weights: WeightsDtype, isa: Isa) -> Plan {
+                  weights: WeightsDtype, isa: Isa, fuse: FuseMode)
+    -> Plan {
     let t0 = Instant::now();
     let mut graph = match key.entry {
         Entry::Prefill => ir::lower_prefill(cfg, key.batch, key.t),
         Entry::Decode => ir::lower_decode(cfg, key.batch),
     };
-    let mut est = 0.0;
-    let mut fused: Vec<String> = Vec::new();
+    let mut node_secs: Vec<f64> = Vec::with_capacity(graph.nodes.len());
+    let mut scalar_secs: Vec<f64> = Vec::with_capacity(graph.nodes.len());
     let mut row_block = 0usize;
     let mut chunk_tile = 0usize;
     let mut layout = String::new();
@@ -270,7 +468,7 @@ pub fn build_plan(cfg: &ConfigInfo, key: PlanKey, threads: usize,
             *repr = r;
             node.work = w;
         }
-        let (sched, secs) = choose(&node.work, threads, is_mm);
+        let (sched, _) = choose(&node.work, threads, is_mm);
         node.sched = sched;
         // kernel-tier assignment: only classed nodes may leave the
         // scalar tier, and only when the requested ISA prices a clear
@@ -289,37 +487,8 @@ pub fn build_plan(cfg: &ConfigInfo, key: PlanKey, threads: usize,
             _ => (Isa::Scalar, t_scalar),
         };
         node.isa = node_isa;
-        est += isa_secs;
-        let mkn = node.mkn;
-        match &mut node.op {
-            Op::MatMul { kind: MatKind::OutProj, fuse_residual, .. } => {
-                // fused: the residual add rides the accumulating
-                // contraction for free; unfused: the same contraction
-                // into scratch plus a separate elementwise pass over
-                // the residual stream. The model prices both forms.
-                let (m, _, n) = mkn.expect("matmul dims");
-                let fused_t = secs;
-                let unfused_t = secs + epilogue_time(m, n, threads);
-                *fuse_residual = fused_t <= unfused_t;
-                if *fuse_residual && !fused.iter()
-                    .any(|s| s == "residual.out_proj") {
-                    fused.push("residual.out_proj".into());
-                }
-            }
-            Op::Gather { fuse_skip, .. } => {
-                // fused: the D-skip add rides the chunk-output scatter;
-                // unfused: a separate pass re-reading y and xact.
-                let rows = key.batch * key.t;
-                let fused_t = secs;
-                let unfused_t =
-                    secs + epilogue_time(rows, cfg.d_inner, threads);
-                *fuse_skip = fused_t <= unfused_t;
-                if *fuse_skip && !fused.iter().any(|s| s == "skip.gather") {
-                    fused.push("skip.gather".into());
-                }
-            }
-            _ => {}
-        }
+        node_secs.push(isa_secs);
+        scalar_secs.push(t_scalar);
         if row_block == 0 {
             if let Sched::RowBlock { rows, .. } = node.sched {
                 row_block = rows;
@@ -329,6 +498,38 @@ pub fn build_plan(cfg: &ConfigInfo, key: PlanKey, threads: usize,
             if let Sched::JobGroup { group, .. } = node.sched {
                 chunk_tile = group;
             }
+        }
+    }
+    // the fusion-region pass (DESIGN.md §12): ISA-blind, standalone
+    // prices as the baseline, gated by the M2_FUSE knob
+    let rows = key.batch * key.t;
+    let picks = match fuse {
+        FuseMode::On => choose_regions(&graph, threads, rows,
+                                       &scalar_secs),
+        FuseMode::Off => Vec::new(),
+    };
+    let regions: Vec<ExecRegion> = picks.iter().map(|p| {
+        let r_isa = (p.lo..=p.hi).map(|i| graph.nodes[i].isa)
+            .max_by_key(|&i| isa_rank(i)).unwrap_or(Isa::Scalar);
+        ExecRegion { lo: p.lo, hi: p.hi, isa: r_isa }
+    }).collect();
+    let bytes_elided: f64 = picks.iter().map(|p| p.saved).sum();
+    let elided = elide_bufs(&graph, &picks);
+    // predicted wall-clock: standalone nodes at their chosen tier,
+    // each region as one serial row-interleaved loop at its tier
+    let mut est = 0.0;
+    for (i, secs) in node_secs.iter().enumerate() {
+        match picks.iter().position(|p| i >= p.lo && i <= p.hi) {
+            Some(k) => {
+                if i == picks[k].lo {
+                    est += isa_time(&picks[k].work, Sched::Serial,
+                                    threads, regions[k].isa)
+                        + rows as f64
+                            * (picks[k].hi - picks[k].lo) as f64
+                            * FUSE_LOOP_S;
+                }
+            }
+            None => est += secs,
         }
     }
     // the whole-invocation analytic cost, computed ONCE here and stored
@@ -342,15 +543,22 @@ pub fn build_plan(cfg: &ConfigInfo, key: PlanKey, threads: usize,
     };
     cost.bytes_accessed -= bf16_saved_bytes;
     // the byte-model total the schedule was chosen against — what
-    // BENCH_*.json reports as bytes_streamed_per_token (÷ batch)
+    // BENCH_*.json reports as bytes_streamed_per_token (÷ batch);
+    // fusion shaves its elided bytes off here (never off CostInfo,
+    // which stays the entrypoint-level analytic model)
     let stream_bytes: f64 = graph.nodes.iter()
         .map(|n| n.work.shared_bytes + n.work.stream_bytes)
-        .sum();
+        .sum::<f64>() - bytes_elided;
     let schedule = ScheduleInfo {
         chunk_tile,
         row_block,
         fanout: threads,
-        fused,
+        regions: picks.iter().zip(&regions).map(|(p, r)| RegionInfo {
+            members: (p.lo..=p.hi)
+                .map(|i| graph.nodes[i].op.label())
+                .collect(),
+            isa: r.isa.label().to_string(),
+        }).collect(),
         weights_dtype: weights.as_str().to_string(),
         weight_layout: if layout.is_empty() {
             "dense".to_string()
@@ -361,12 +569,22 @@ pub fn build_plan(cfg: &ConfigInfo, key: PlanKey, threads: usize,
     };
     // the memory plan: every BufSpec compiles to an offset in one
     // per-plan slab, sized and seeded here so steady-state execution
-    // allocates nothing (exec::Arena checks slabs in and out)
-    let mut buf_offsets = Vec::with_capacity(graph.bufs.len());
+    // allocates nothing (exec::Arena checks slabs in and out).
+    // Non-elided buffers pack densely in declaration order; elided
+    // intermediates get one scratch row each at the slab tail.
+    let mut buf_offsets = vec![(0usize, 0usize); graph.bufs.len()];
     let mut slab_len = 0usize;
-    for b in &graph.bufs {
-        buf_offsets.push((slab_len, b.len()));
-        slab_len += b.len();
+    for (i, b) in graph.bufs.iter().enumerate() {
+        if !elided[i] {
+            buf_offsets[i] = (slab_len, b.len());
+            slab_len += b.len();
+        }
+    }
+    for (i, b) in graph.bufs.iter().enumerate() {
+        if elided[i] {
+            buf_offsets[i] = (slab_len, b.width);
+            slab_len += b.width;
+        }
     }
     Plan {
         key,
@@ -380,6 +598,9 @@ pub fn build_plan(cfg: &ConfigInfo, key: PlanKey, threads: usize,
         est_seconds: est,
         stream_bytes,
         planning_ms: t0.elapsed().as_secs_f64() * 1e3,
+        regions,
+        elided,
+        bytes_elided,
         buf_offsets,
         slab_len,
         arenas: ArenaPool::with_first(slab_len),
@@ -400,14 +621,21 @@ mod tests {
               threads: usize, weights: WeightsDtype) -> Plan {
         let cfg = sim_config(cfg_name).unwrap();
         build_plan(&cfg, PlanKey { entry, batch, t }, threads, weights,
-                   Isa::Scalar)
+                   Isa::Scalar, FuseMode::On)
     }
 
     fn plan_isa(cfg_name: &str, entry: Entry, batch: usize, t: usize,
                 threads: usize, isa: Isa) -> Plan {
         let cfg = sim_config(cfg_name).unwrap();
         build_plan(&cfg, PlanKey { entry, batch, t }, threads,
-                   WeightsDtype::F32, isa)
+                   WeightsDtype::F32, isa, FuseMode::On)
+    }
+
+    fn plan_fuse(cfg_name: &str, entry: Entry, batch: usize, t: usize,
+                 threads: usize, fuse: FuseMode) -> Plan {
+        let cfg = sim_config(cfg_name).unwrap();
+        build_plan(&cfg, PlanKey { entry, batch, t }, threads,
+                   WeightsDtype::F32, Isa::Scalar, fuse)
     }
 
     #[test]
@@ -456,27 +684,140 @@ mod tests {
 
     #[test]
     fn fusion_is_chosen_by_cost_on_every_config() {
-        // the bitwise-parity contract with the hand-scheduled oracle
-        // requires the fused residual; the cost model must keep choosing
-        // it across the whole ladder (an unfused pass is never free)
+        // the region pass must find savings everywhere on the ladder,
+        // and every region it picks must be legal: disjoint ascending
+        // index ranges, row-pointwise members only, at most one
+        // contraction, at least two members (a singleton "region" is
+        // just a standalone node)
         for name in ["tiny", "sim-130m", "sim-370m", "sim-780m",
                      "sim-1.3b", "sim-2.7b"] {
             for (entry, t) in [(Entry::Prefill, 64), (Entry::Decode, 1)] {
                 let p = plan(name, entry, 2, t, 8);
-                for node in &p.graph.nodes {
-                    match &node.op {
-                        Op::MatMul { kind: MatKind::OutProj,
-                                     fuse_residual, .. } => {
-                            assert!(*fuse_residual, "{name}");
-                        }
-                        Op::Gather { fuse_skip, .. } => {
-                            assert!(*fuse_skip, "{name}");
-                        }
-                        _ => {}
+                assert!(!p.regions.is_empty(), "{name} {entry:?}");
+                let mut prev_hi = None;
+                for r in &p.regions {
+                    assert!(r.lo < r.hi, "{name}: singleton region");
+                    assert!(r.hi < p.graph.nodes.len());
+                    if let Some(ph) = prev_hi {
+                        assert!(r.lo > ph, "{name}: overlapping regions");
+                    }
+                    prev_hi = Some(r.hi);
+                    let mms = (r.lo..=r.hi).filter(|&i| matches!(
+                        p.graph.nodes[i].op, Op::MatMul { .. })).count();
+                    assert!(mms <= REGION_MM_CAP, "{name}");
+                    for i in r.lo..=r.hi {
+                        assert!(p.graph.nodes[i].op.fusable(),
+                                "{name}: {}",
+                                p.graph.nodes[i].op.label());
                     }
                 }
-                assert!(p.schedule.fused.iter()
-                    .any(|s| s == "residual.out_proj"));
+                // ...and the manifest record mirrors the chosen list
+                assert_eq!(p.schedule.regions.len(), p.regions.len());
+                for (ri, r) in p.schedule.regions.iter()
+                    .zip(&p.regions) {
+                    assert_eq!(ri.members.len(), r.hi - r.lo + 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decode_fuses_more_than_prefill() {
+        // the ISSUE-level shape of the pass: bandwidth-bound decode
+        // chains fuse nearly end-to-end, compute-bound prefill only
+        // where the epilogue is free — so decode B=1 covers strictly
+        // more nodes with regions than a long prefill, and clears the
+        // acceptance floor of 3 regions
+        let cov = |p: &Plan| p.regions.iter()
+            .map(|r| r.hi - r.lo + 1).sum::<usize>();
+        let d = plan("sim-130m", Entry::Decode, 1, 1, 8);
+        let p = plan("sim-130m", Entry::Prefill, 1, 2048, 8);
+        assert!(d.regions.len() >= 3, "decode regions: {:?}", d.regions);
+        assert!(cov(&d) > cov(&p),
+                "decode coverage {} <= prefill coverage {}",
+                cov(&d), cov(&p));
+        // decode fuses the bulk of its graph...
+        assert!(cov(&d) * 2 > d.graph.nodes.len(),
+                "decode coverage {}/{}", cov(&d), d.graph.nodes.len());
+        // ...while prefill keeps every contraction out of regions (a
+        // fused matmul would serialise its row blocks)
+        for r in &p.regions {
+            for i in r.lo..=r.hi {
+                assert!(!matches!(p.graph.nodes[i].op, Op::MatMul { .. }),
+                        "prefill fused a contraction: {}",
+                        p.graph.nodes[i].op.label());
+            }
+        }
+    }
+
+    #[test]
+    fn fuse_off_is_the_unfused_oracle() {
+        for (entry, batch, t) in
+            [(Entry::Prefill, 1, 512), (Entry::Decode, 1, 1),
+             (Entry::Decode, 16, 1)] {
+            let on = plan_fuse("sim-130m", entry, batch, t, 8,
+                               FuseMode::On);
+            let off = plan_fuse("sim-130m", entry, batch, t, 8,
+                                FuseMode::Off);
+            // off: no regions, no elision, fully dense slab
+            assert!(off.regions.is_empty());
+            assert!(off.elided.iter().all(|&e| !e));
+            assert_eq!(off.bytes_elided, 0.0);
+            // fusion never perturbs the per-node schedule — the region
+            // pass runs after fan-out/tiling/retiering, so the members
+            // keep the exact scalar order the oracle runs
+            for (a, b) in on.graph.nodes.iter().zip(&off.graph.nodes) {
+                assert_eq!(a.sched, b.sched, "{}", a.op.label());
+                assert_eq!(a.isa, b.isa, "{}", a.op.label());
+            }
+            assert_eq!(on.schedule.row_block, off.schedule.row_block);
+            assert_eq!(on.schedule.chunk_tile, off.schedule.chunk_tile);
+            // the elided slab is never larger than the dense one
+            assert!(on.slab_len <= off.slab_len);
+        }
+    }
+
+    #[test]
+    fn fusion_savings_drop_streamed_bytes() {
+        // the BENCH_pr9.json gate: planned decode B=1 streamed bytes
+        // with fusion on strictly under fusion off, by exactly the
+        // bytes the regions elide
+        let on = plan_fuse("sim-130m", Entry::Decode, 1, 1, 8,
+                           FuseMode::On);
+        let off = plan_fuse("sim-130m", Entry::Decode, 1, 1, 8,
+                            FuseMode::Off);
+        assert!(on.bytes_elided > 0.0);
+        assert!(on.stream_bytes < off.stream_bytes);
+        assert_eq!(off.stream_bytes - on.stream_bytes, on.bytes_elided);
+        // CostInfo stays the entrypoint-level analytic model on both
+        assert_eq!(on.cost.bytes_accessed, off.cost.bytes_accessed);
+        assert_eq!(on.cost.flops, off.cost.flops);
+    }
+
+    #[test]
+    fn fusion_elides_single_use_intermediates() {
+        // decode B=1: the packed in_proj output, the conv activation
+        // and the z gate live and die inside their regions — one
+        // scratch row each. The residual stream, the normed copy (read
+        // across a region boundary) and the logits must survive.
+        let p = plan_fuse("sim-130m", Entry::Decode, 1, 1, 8,
+                          FuseMode::On);
+        let by_name = |n: &str| {
+            p.graph.bufs.iter().position(|b| b.name == n).unwrap()
+        };
+        for gone in ["zx", "xact", "z"] {
+            assert!(p.elided[by_name(gone)], "{gone} should be elided");
+        }
+        for kept in ["x", "hn", "y", "logits"] {
+            assert!(!p.elided[by_name(kept)], "{kept} must survive");
+        }
+        // elided buffers are backed by exactly one row of scratch
+        for (i, b) in p.graph.bufs.iter().enumerate() {
+            let (_, len) = p.buf_offsets[i];
+            if p.elided[i] {
+                assert_eq!(len, b.width, "{}", b.name);
+            } else {
+                assert_eq!(len, b.len(), "{}", b.name);
             }
         }
     }
@@ -581,16 +922,34 @@ mod tests {
 
     #[test]
     fn memory_plan_covers_every_buffer() {
-        let p = plan("sim-130m", Entry::Prefill, 1, 64, 8);
-        assert_eq!(p.buf_offsets.len(), p.graph.bufs.len());
-        let mut end = 0usize;
-        for ((off, len), spec) in
-            p.buf_offsets.iter().zip(&p.graph.bufs) {
-            assert_eq!(*off, end, "offsets are dense and disjoint");
-            assert_eq!(*len, spec.len());
-            end = off + len;
+        for fuse in [FuseMode::On, FuseMode::Off] {
+            let p = plan_fuse("sim-130m", Entry::Prefill, 1, 64, 8,
+                              fuse);
+            assert_eq!(p.buf_offsets.len(), p.graph.bufs.len());
+            assert_eq!(p.elided.len(), p.graph.bufs.len());
+            // spans are disjoint and tile the slab exactly: dense
+            // buffers first, one scratch row per elided buffer at the
+            // tail
+            let mut spans: Vec<(usize, usize)> =
+                p.buf_offsets.iter().copied().collect();
+            spans.sort_unstable();
+            let mut end = 0usize;
+            for (off, len) in spans {
+                assert_eq!(off, end, "offsets are dense and disjoint");
+                end = off + len;
+            }
+            assert_eq!(end, p.slab_len);
+            for (i, spec) in p.graph.bufs.iter().enumerate() {
+                let want = if p.elided[i] { spec.width }
+                           else { spec.len() };
+                assert_eq!(p.buf_offsets[i].1, want, "{}", spec.name);
+            }
+            if fuse == FuseMode::Off {
+                assert_eq!(
+                    p.slab_len,
+                    p.graph.bufs.iter().map(|b| b.len()).sum::<usize>());
+            }
         }
-        assert_eq!(end, p.slab_len);
     }
 
     #[test]
@@ -711,7 +1070,11 @@ mod tests {
                              Isa::Avx2);
             assert_eq!(s.schedule.row_block, v.schedule.row_block);
             assert_eq!(s.schedule.chunk_tile, v.schedule.chunk_tile);
-            assert_eq!(s.schedule.fused, v.schedule.fused);
+            // region *membership* is ISA-blind (the recorded region
+            // tier may legitimately differ — it mirrors the members)
+            let ranges = |p: &Plan| p.regions.iter()
+                .map(|r| (r.lo, r.hi)).collect::<Vec<_>>();
+            assert_eq!(ranges(&s), ranges(&v));
             assert_eq!(s.schedule.weight_layout, v.schedule.weight_layout);
             for (a, b) in s.graph.nodes.iter().zip(&v.graph.nodes) {
                 assert_eq!(a.sched, b.sched, "{}", a.op.label());

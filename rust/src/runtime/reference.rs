@@ -46,8 +46,8 @@ use super::manifest::{sim_config, ConfigInfo, CostInfo, WeightsDtype,
                       DECODE_LOOP_BUCKETS, FORWARD_BUCKETS,
                       PREFILL_BUCKETS, REFERENCE_BATCH_CAP};
 use super::plan::ir::{MatKind, Op, WeightRepr};
-use super::plan::{exec, planner, Entry, Plan, PlanCache, PlanKey,
-                  PlanMode, PlanStats};
+use super::plan::{exec, planner, Entry, FuseMode, Plan, PlanCache,
+                  PlanKey, PlanMode, PlanStats};
 
 pub(crate) const NORM_EPS: f32 = 1e-5;
 
@@ -377,6 +377,13 @@ pub struct ReferenceBackend {
     /// planner retier compute-bound nodes onto the vector kernels. The
     /// `M2_PLAN=off` oracle always runs scalar.
     isa: Isa,
+    /// fusion-region pass of the planned path (DESIGN.md §12): on by
+    /// default — cost-chosen producer→consumer regions execute as
+    /// row-interleaved loops with single-use intermediates elided from
+    /// the slab. `Off` is the unfused oracle; the two are bitwise
+    /// identical (`tests/fusion_parity.rs`). The `M2_PLAN=off` oracle
+    /// has no region pass to disable.
+    fuse: FuseMode,
     /// shape-keyed plans: build once per `(entrypoint, batch, t)`,
     /// execute many (DESIGN.md §7)
     plans: PlanCache,
@@ -402,6 +409,7 @@ impl ReferenceBackend {
                            plan_mode: PlanMode::from_env(),
                            weights: WeightsDtype::from_env(),
                            isa: Isa::from_env(),
+                           fuse: FuseMode::from_env(),
                            plans: PlanCache::new() }
     }
 
@@ -415,6 +423,7 @@ impl ReferenceBackend {
                               plan_mode: PlanMode::from_env(),
                               weights: WeightsDtype::from_env(),
                               isa: Isa::from_env(),
+                              fuse: FuseMode::from_env(),
                               plans: PlanCache::new() })
     }
 
@@ -468,6 +477,18 @@ impl ReferenceBackend {
         self
     }
 
+    /// Pin the planned path's fusion-region pass (also reachable via
+    /// `M2_FUSE=off` / `--fuse off`). Default on — regions are chosen
+    /// by cost, so turning them off never changes results, only the
+    /// bytes the plan streams; `tests/fusion_parity.rs` pins the
+    /// bitwise identity. Cached plans are dropped — regions, slab
+    /// layout and elision live in the plan.
+    pub fn with_fuse(mut self, fuse: FuseMode) -> ReferenceBackend {
+        self.fuse = fuse;
+        self.plans.clear();
+        self
+    }
+
     pub fn plan_mode(&self) -> PlanMode {
         self.plan_mode
     }
@@ -482,7 +503,7 @@ impl ReferenceBackend {
         let key = PlanKey { entry, batch, t };
         self.plans.get_or_build(key, || {
             planner::build_plan(&self.cfg, key, self.threads,
-                                self.weights, self.isa)
+                                self.weights, self.isa, self.fuse)
         })
     }
 
@@ -1164,6 +1185,27 @@ impl Backend for ReferenceBackend {
         }
     }
 
+    fn fusion_stats(&self, entrypoint: &str, bucket: Option<usize>,
+                    batch: usize) -> (u64, f64) {
+        // read off the warm plan, strictly read-only (PlanCache::peek):
+        // cold shapes report the zero pair rather than fabricate a plan
+        if self.plan_mode == PlanMode::Off || batch == 0 {
+            return (0, 0.0);
+        }
+        let key = match entrypoint {
+            "prefill" | "forward_full" => {
+                let t = bucket.unwrap_or(self.cfg.chunk_size);
+                PlanKey { entry: Entry::Prefill, batch, t }
+            }
+            "decode_step" => PlanKey { entry: Entry::Decode, batch, t: 1 },
+            _ => return (0, 0.0),
+        };
+        match self.plans.peek(key) {
+            Some(plan) => (plan.regions.len() as u64, plan.bytes_elided),
+            None => (0, 0.0),
+        }
+    }
+
     fn cost(&self, entrypoint: &str, bucket: Option<usize>, batch: usize)
         -> CostInfo {
         // read the CostInfo hoisted onto the plan at build time instead
@@ -1258,9 +1300,9 @@ impl Backend for ReferenceBackend {
 }
 
 // A second construction path used by tests and tools: rebuild from the
-// flat tensors this backend itself exported (worker count, plan mode
-// and weight precision preserved; the clone re-plans and re-packs
-// lazily from its own empty caches).
+// flat tensors this backend itself exported (worker count, plan mode,
+// weight precision, kernel tier and fuse mode preserved; the clone
+// re-plans and re-packs lazily from its own empty caches).
 impl Clone for ReferenceBackend {
     fn clone(&self) -> ReferenceBackend {
         ReferenceBackend::from_tensors(self.cfg.clone(),
@@ -1270,6 +1312,7 @@ impl Clone for ReferenceBackend {
             .with_plan_mode(self.plan_mode)
             .with_weights_dtype(self.weights)
             .with_isa(self.isa)
+            .with_fuse(self.fuse)
     }
 }
 

@@ -127,6 +127,12 @@ pub enum KernelClass {
     Scan,
     /// Pointwise row ops: silu, silu-gate, rmsnorm.
     Row,
+    /// A planner-chosen fusion region: several row-pointwise members
+    /// executed as one row-interleaved loop ([`Dispatch::fused_rows`],
+    /// DESIGN.md §12). Regions are not attached to a single plan node —
+    /// the planner records them in `Plan::regions` — but they dispatch
+    /// through the same tier table as every other class.
+    Fused,
 }
 
 /// The dispatch table: one copyable handle that routes every kernel call
@@ -154,6 +160,26 @@ impl Dispatch {
     /// The bitwise-oracle route.
     pub fn scalar() -> Dispatch {
         Dispatch { isa: Isa::Scalar }
+    }
+
+    /// Drive a fusion region ([`KernelClass::Fused`]): run `body(r)` for
+    /// each of `rows` output rows, serially, on the calling thread. The
+    /// row body visits every region member in node order, so this is
+    /// the loop interchange that keeps fused intermediates resident —
+    /// the tier handle carries the region's recorded [`Isa`] (members
+    /// still dispatch their own node tier inside the body), and the
+    /// scalar handle is the bitwise oracle like every other class.
+    /// Serial by construction: region members may share one-row elided
+    /// scratch, which a fan-out would race.
+    pub fn fused_rows<E>(
+        &self,
+        rows: usize,
+        mut body: impl FnMut(usize) -> std::result::Result<(), E>,
+    ) -> std::result::Result<(), E> {
+        for r in 0..rows {
+            body(r)?;
+        }
+        Ok(())
     }
 
     /// C (m,n) += A (m,k) @ B (k,n), strided rows — bitwise identical

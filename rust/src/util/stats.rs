@@ -117,6 +117,23 @@ impl LogHistogram {
             self.sum / self.total as f64
         }
     }
+
+    /// Cumulative count of recorded values that landed in buckets whose
+    /// upper edge is ≤ `le` — the projection of the log buckets onto a
+    /// Prometheus histogram boundary (`gateway::prom`). At most one
+    /// ~5%-wide straddling bucket is attributed to the next boundary
+    /// up, so the projection is conservative and monotone in `le`;
+    /// `le = ∞` recovers `total` exactly.
+    pub fn count_le(&self, le: f64) -> u64 {
+        let mut acc = 0;
+        for (i, c) in self.counts.iter().enumerate() {
+            if self.base * self.ratio.powi(i as i32 + 1) > le {
+                break;
+            }
+            acc += c;
+        }
+        acc
+    }
 }
 
 impl Default for LogHistogram {
@@ -165,5 +182,23 @@ mod tests {
         let p99 = h.quantile(0.99);
         assert!(p99 > 0.09 && p99 < 0.12, "p99={p99}");
         assert!((h.mean() - 0.050).abs() < 0.001);
+    }
+
+    #[test]
+    fn histogram_le_projection_is_monotone_and_exhaustive() {
+        let mut h = LogHistogram::new();
+        for i in 1..=100 {
+            h.record(i as f64 * 1e-3); // 1ms .. 100ms
+        }
+        // +Inf recovers the exact total; 0 catches nothing
+        assert_eq!(h.count_le(f64::INFINITY), h.total);
+        assert_eq!(h.count_le(0.0), 0);
+        // a mid boundary lands within a bucket's width of the truth
+        let mid = h.count_le(0.05);
+        assert!(mid >= 40 && mid <= 50, "mid={mid}");
+        // monotone in le — the Prometheus cumulative-bucket invariant
+        assert!(h.count_le(0.01) <= mid);
+        assert!(mid <= h.count_le(0.2));
+        assert!(h.count_le(0.2) <= h.count_le(f64::INFINITY));
     }
 }

@@ -1,0 +1,159 @@
+//! Fused-vs-unfused bitwise parity (PR 9, DESIGN.md §12).
+//!
+//! The fusion-region pass is a pure *schedule* transform: regions
+//! execute their members as one row-interleaved loop, with single-use
+//! intermediates backed by one scratch row instead of full buffers —
+//! but every member row body is the exact r-th iteration of the
+//! standalone op's scalar loop, so the fused plan must equal the
+//! unfused plan **bitwise**, on every entrypoint, worker count, weight
+//! precision and kernel tier. No tolerances anywhere in this file.
+//!
+//! The oracle is the same backend with the pass disabled
+//! (`with_fuse(FuseMode::Off)` — what `--fuse off` / `M2_FUSE=off`
+//! select; the env spelling itself is covered by
+//! `tests/runtime_options_env.rs`, since set_var is not thread-safe
+//! under cargo's parallel harness).
+
+use mamba2_serve::runtime::{argmax_last, Backend, CacheState, FuseMode,
+                            PlanMode, ReferenceBackend, WeightsDtype};
+use mamba2_serve::tensor::kernels::Isa;
+
+fn backend(threads: usize, weights: WeightsDtype, isa: Isa,
+           fuse: FuseMode) -> ReferenceBackend {
+    ReferenceBackend::seeded("tiny", 0).unwrap()
+        .with_threads(threads)
+        .with_plan_mode(PlanMode::On)
+        .with_weights_dtype(weights)
+        .with_isa(isa)
+        .with_fuse(fuse)
+}
+
+fn prompt(len: usize, salt: usize) -> Vec<i32> {
+    (0..len).map(|i| ((i * 41 + 13 * salt + 3) % 512) as i32).collect()
+}
+
+/// The kernel tiers to sweep: the scalar baseline always, plus the best
+/// tier this host actually has (on a scalar-only host the sweep
+/// degenerates to scalar twice, which still runs rather than skips).
+fn tiers() -> Vec<Isa> {
+    let mut v = vec![Isa::Scalar];
+    if Isa::detect() != Isa::Scalar {
+        v.push(Isa::detect());
+    }
+    v
+}
+
+#[test]
+fn prefill_and_continuation_parity_across_the_knob_matrix() {
+    for &threads in &[1usize, 4] {
+        for &weights in &[WeightsDtype::F32, WeightsDtype::Bf16] {
+            for isa in tiers() {
+                let fused = backend(threads, weights, isa, FuseMode::On);
+                let plain = backend(threads, weights, isa, FuseMode::Off);
+                let tag = format!("threads={threads} \
+                                   weights={} isa={}",
+                                  weights.as_str(), isa.label());
+                for &t in &[16usize, 64] {
+                    for &batch in &[1usize, 2] {
+                        let toks: Vec<i32> = (0..batch)
+                            .flat_map(|b| prompt(t, b + 1))
+                            .collect();
+                        let a = fused.prefill(&toks, batch).unwrap();
+                        let b = plain.prefill(&toks, batch).unwrap();
+                        assert_eq!(a.logits.as_f32(), b.logits.as_f32(),
+                                   "{tag} t={t} b={batch}: logits");
+                        assert_eq!(a.cache.ssm.as_f32(),
+                                   b.cache.ssm.as_f32(),
+                                   "{tag} t={t} b={batch}: ssm");
+                        assert_eq!(a.cache.conv.as_f32(),
+                                   b.cache.conv.as_f32(),
+                                   "{tag} t={t} b={batch}: conv");
+                    }
+                }
+                // continuation reuses the same plan + slab with cache
+                // seeds flowing through — the elided scratch rows must
+                // not leak state between rows or calls
+                let toks = prompt(48, 7);
+                let a1 = fused.prefill(&toks[..16], 1).unwrap();
+                let b1 = plain.prefill(&toks[..16], 1).unwrap();
+                let a2 = fused.prefill_continue(&a1.cache, &toks[16..], 1)
+                    .unwrap();
+                let b2 = plain.prefill_continue(&b1.cache, &toks[16..], 1)
+                    .unwrap();
+                assert_eq!(a2.logits.as_f32(), b2.logits.as_f32(),
+                           "{tag}: continuation logits");
+                assert_eq!(a2.cache.ssm.as_f32(), b2.cache.ssm.as_f32(),
+                           "{tag}: continuation ssm");
+            }
+        }
+    }
+}
+
+#[test]
+fn decode_parity_across_widths_and_the_knob_matrix() {
+    for &threads in &[1usize, 4] {
+        for &weights in &[WeightsDtype::F32, WeightsDtype::Bf16] {
+            for isa in tiers() {
+                let fused = backend(threads, weights, isa, FuseMode::On);
+                let plain = backend(threads, weights, isa, FuseMode::Off);
+                let tag = format!("threads={threads} weights={} isa={}",
+                                  weights.as_str(), isa.label());
+                for &bsz in &[1usize, 3, 8] {
+                    let mut cache = CacheState::zeros(fused.cfg(), bsz);
+                    for s in 0..bsz {
+                        let (c, _) = fused
+                            .prefill_any(&prompt(16 + 16 * (s % 2), s))
+                            .unwrap();
+                        cache.copy_slot_from(s, &c, 0);
+                    }
+                    let toks: Vec<i32> = (0..bsz)
+                        .map(|i| ((i * 29 + 5) % 512) as i32).collect();
+                    let a = fused.decode_step(&cache, &toks).unwrap();
+                    let b = plain.decode_step(&cache, &toks).unwrap();
+                    assert_eq!(a.logits.as_f32(), b.logits.as_f32(),
+                               "{tag} B={bsz}: logits");
+                    assert_eq!(a.cache.ssm.as_f32(), b.cache.ssm.as_f32(),
+                               "{tag} B={bsz}: ssm");
+                    assert_eq!(a.cache.conv.as_f32(),
+                               b.cache.conv.as_f32(),
+                               "{tag} B={bsz}: conv");
+                }
+                // a greedy decode chain keeps the identity step over step
+                let (cache, last) =
+                    fused.prefill_any(&prompt(32, 9)).unwrap();
+                let first = argmax_last(&last)[0];
+                let (ga, _) = fused.decode_loop(&cache, first, 12).unwrap();
+                let (gb, _) = plain.decode_loop(&cache, first, 12).unwrap();
+                assert_eq!(ga, gb, "{tag}: greedy generations diverged");
+            }
+        }
+    }
+}
+
+#[test]
+fn decode_b1_dump_shows_cost_chosen_regions() {
+    // the acceptance shape: bandwidth-bound decode at B=1 fuses nearly
+    // end-to-end (≥3 regions on sim-130m), and the off switch really
+    // reaches the planner — same backend, no regions, no region tokens
+    let on = ReferenceBackend::seeded("sim-130m", 0).unwrap()
+        .with_threads(8)
+        .with_isa(Isa::Scalar)
+        .with_fuse(FuseMode::On)
+        .with_plan_mode(PlanMode::On);
+    let dump = on.plan_dump("decode_step", 1, 1).expect("planned dump");
+    let regions = dump.lines()
+        .filter(|l| l.contains(" region="))
+        .filter_map(|l| l.split(" region=").nth(1))
+        .filter_map(|s| s.split_whitespace().next())
+        .collect::<std::collections::BTreeSet<_>>();
+    assert!(regions.len() >= 3,
+            "decode B=1 should fuse at least 3 regions, got \
+             {regions:?}\n{dump}");
+    assert!(dump.contains(&format!(" regions={} ", regions.len())),
+            "schedule line counts the regions\n{dump}");
+
+    let off = on.with_fuse(FuseMode::Off);
+    let dump = off.plan_dump("decode_step", 1, 1).expect("planned dump");
+    assert!(dump.contains(" regions=0 "), "off = zero regions\n{dump}");
+    assert!(!dump.contains(" region="), "off = no member tokens\n{dump}");
+}

@@ -13,18 +13,21 @@
 //!
 //! and commit the diff.
 
-use mamba2_serve::runtime::{Backend, PlanMode, ReferenceBackend};
+use mamba2_serve::runtime::{Backend, FuseMode, PlanMode,
+                            ReferenceBackend};
 use mamba2_serve::tensor::kernels::Isa;
 
 const GOLDEN: &str =
     concat!(env!("CARGO_MANIFEST_DIR"), "/tests/goldens/plan_sim-130m.txt");
 
 fn current_dump() -> String {
-    // ISA pinned to scalar so the golden text stays host-independent
-    // even when the suite runs with M2_ISA=auto in the environment
+    // ISA pinned to scalar and the fusion-region pass pinned on, so the
+    // golden text stays host- and environment-independent even when the
+    // suite runs with M2_ISA=auto or M2_FUSE=off in the environment
     let b = ReferenceBackend::seeded("sim-130m", 0).unwrap()
         .with_threads(8)
         .with_isa(Isa::Scalar)
+        .with_fuse(FuseMode::On)
         .with_plan_mode(PlanMode::On);
     let prefill = b.plan_dump("prefill", 512, 1).expect("prefill plan");
     let decode = b.plan_dump("decode_step", 1, 16).expect("decode plan");
@@ -61,7 +64,13 @@ fn golden_covers_both_entrypoints() {
     // tiles for the SSD stages
     assert!(want.contains("row_block="));
     assert!(want.contains("dispatches="));
-    assert!(want.contains("fused-acc"));
+    // PR 9: fixed fuse flags became cost-chosen fusion regions; both
+    // pinned shapes fuse (the schedule line counts regions, member
+    // nodes carry their region index)
+    assert!(want.contains(" regions="));
+    assert!(!want.contains(" regions=0 "));
+    assert!(want.contains(" region="));
+    assert!(!want.contains("fused-acc"));
     // PR 5: the precision/layout half of the schedule is pinned too —
     // prefill weights repacked into L1 panels, decode (16 rows, under
     // the repack threshold) dense, everything f32 by default

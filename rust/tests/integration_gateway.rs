@@ -339,6 +339,15 @@ fn overload_sheds_429_with_retry_after_while_admitted_work_completes() {
     validate_exposition(&text).unwrap();
     assert_eq!(metric_value(&text, "m2_gateway_shed_total"), 1.0);
     assert!(text.contains("# TYPE m2_gateway_shed_total counter"));
+    // the shed 429 already finished its handler, so the per-route
+    // latency histogram carries a completions sample (A and B are
+    // still streaming and record only once their handlers return)
+    assert!(text.contains("# TYPE m2_http_request_seconds histogram"));
+    assert!(text.contains(
+        "m2_http_request_seconds_bucket{route=\"completions\",le=\"+Inf\"}"));
+    assert!(metric_value(
+        &text, "m2_http_request_seconds_count{route=\"completions\"}")
+        >= 1.0);
     // shedding never touched the admitted requests
     assert_eq!(a.join().unwrap(), 200);
     assert_eq!(b.join().unwrap(), 200);

@@ -14,7 +14,8 @@ use mamba2_serve::tensor::kernels::Isa;
 
 #[test]
 fn env_layer_resolves_exports_and_reaches_backends() {
-    for k in ["M2_PLAN", "M2_WEIGHTS", "M2_THREADS", "M2_ISA"] {
+    for k in ["M2_PLAN", "M2_WEIGHTS", "M2_THREADS", "M2_ISA",
+              "M2_FUSE"] {
         std::env::remove_var(k);
     }
 
@@ -59,7 +60,19 @@ fn env_layer_resolves_exports_and_reaches_backends() {
     assert_eq!(b.isa(), Isa::detect().label());
     assert_eq!(b.weights_dtype(), "bf16");
 
-    for k in ["M2_PLAN", "M2_WEIGHTS", "M2_THREADS", "M2_ISA"] {
+    // the fuse knob rides the same transport: resolved → exported →
+    // read by the next backend open
+    assert_eq!(std::env::var("M2_FUSE").unwrap(), "on",
+               "default fuse mode exported explicitly");
+    let o = RuntimeOptions::resolve(&CliOverrides {
+        fuse: Some("off"),
+        ..Default::default()
+    }).unwrap();
+    o.export_env();
+    assert_eq!(std::env::var("M2_FUSE").unwrap(), "off");
+
+    for k in ["M2_PLAN", "M2_WEIGHTS", "M2_THREADS", "M2_ISA",
+              "M2_FUSE"] {
         std::env::remove_var(k);
     }
 }
