@@ -5,11 +5,14 @@
 //! `bench_support::validate_trajectory_json` and README §Benchmarks):
 //!
 //!   * batch-fused decode: tokens/s at B ∈ {1, 4, 16} from realistic
-//!     (prefilled) cache slots, **at both weight precisions** (schema
-//!     1.2): the f32 rows are the cross-PR comparable baseline, the
-//!     bf16 rows are the precision pass's headline — halved
+//!     (prefilled) cache slots, **at every weight precision** (schema
+//!     1.2/1.7): the f32 rows are the cross-PR comparable baseline,
+//!     the bf16 rows are the precision pass's headline — halved
 //!     `bytes_streamed_per_token`, and tokens/s that must beat f32 at
-//!     B = 1 (the pass exists because decode is bandwidth-bound),
+//!     B = 1 (the pass exists because decode is bandwidth-bound) —
+//!     and the int8/q4 rows (schema 1.7) measure the group-quantised
+//!     streams of DESIGN.md §13, whose B=1 byte models must order
+//!     strictly `q4 < int8 < bf16 < f32`,
 //!   * chunked-parallel prefill: tokens/s at L ∈ {512, 2048}, plus
 //!     analytic MFU/HBU against the host-CPU roofline — **per kernel
 //!     tier** (schema 1.5): the scalar rows are the cross-PR baseline,
@@ -46,7 +49,11 @@
 //!   * fusion-on decode B=1 `bytes_streamed_per_token` ≤ fusion-off
 //!     (schema 1.6): the region pass only fuses where its byte model
 //!     says DRAM traffic drops, so streaming *more* with the pass on
-//!     is a costing bug — skipped when the backend has no planner.
+//!     is a costing bug — skipped when the backend has no planner,
+//!   * the quantised byte models order strictly (schema 1.7,
+//!     `quant_bytes_ordering`): at B=1 every reduced dtype measured
+//!     must stream fewer bytes per token than the next wider one —
+//!     skipped only when no quantised rows exist.
 //!
 //! `--baseline <BENCH_*.json>` additionally gates the f32 decode rows
 //! against a previous PR's artifact (fail on a >10% tok/s drop;
@@ -58,7 +65,8 @@ use std::time::Duration;
 use mamba2_serve::bench_support::{batch_speedup, compare_to_baseline,
                                   decode_point, dtype_speedup,
                                   isa_prefill_speedup, open_backend,
-                                  prefill_point, quick, trajectory_json,
+                                  prefill_point, quant_bytes_ordering,
+                                  quick, trajectory_json,
                                   write_trajectory, BaselineCheck,
                                   DecodePoint, FusionSummary,
                                   GatewayTraffic, PrefillPoint};
@@ -72,7 +80,7 @@ use mamba2_serve::runtime::{reference, Backend, CacheState, PlanStats};
 use mamba2_serve::util::benchkit::{Bench, Table};
 use mamba2_serve::util::json::Json;
 
-const TAG: &str = "pr9";
+const TAG: &str = "pr10";
 const MODEL: &str = "sim-130m";
 const DECODE_BATCHES: [usize; 3] = [1, 4, 16];
 const PREFILL_LENS: [usize; 2] = [512, 2048];
@@ -137,21 +145,26 @@ fn main() {
     let threads = reference::default_threads();
     let mut bench = Bench::new().quiet();
 
-    // ---- decode sweeps: f32 baseline, then the bf16 weight stream ----
+    // ---- decode sweeps: f32 baseline, then each reduced weight stream
+    // (bf16, then the schema-1.7 group-quantised int8/q4) ----
     let mut decode: Vec<DecodePoint> = Vec::new();
     let mut fusion = FusionSummary::default();
     decode_sweep(session.as_ref(), &mut bench, &mut decode, &mut fusion);
-    std::env::set_var("M2_WEIGHTS", "bf16");
-    let session_bf16 = open_backend(MODEL);
-    std::env::set_var("M2_WEIGHTS", "f32");
-    let has_bf16 = session_bf16.weights_dtype() == "bf16";
-    if has_bf16 {
-        decode_sweep(session_bf16.as_ref(), &mut bench, &mut decode,
-                     &mut fusion);
-    } else {
-        eprintln!("  backend {} has no bf16 weight stream — f32 rows \
-                   only", session_bf16.name());
+    let mut reduced_sessions = Vec::new();
+    for dt in ["bf16", "int8", "q4"] {
+        std::env::set_var("M2_WEIGHTS", dt);
+        let s = open_backend(MODEL);
+        std::env::set_var("M2_WEIGHTS", "f32");
+        if s.weights_dtype() == dt {
+            decode_sweep(s.as_ref(), &mut bench, &mut decode,
+                         &mut fusion);
+            reduced_sessions.push(s);
+        } else {
+            eprintln!("  backend {} has no {dt} weight stream — rows \
+                       skipped", s.name());
+        }
     }
+    let has_bf16 = decode.iter().any(|p| p.weights_dtype == "bf16");
 
     // ---- prefill sweep (always f32: the pass is decode-only) --------
     // Scalar-tier rows first (the cross-PR baseline); when the host has
@@ -349,12 +362,10 @@ fn main() {
     tp.print();
 
     // the plan_cache block covers the WHOLE run: every measured
-    // session's plans (the bf16 and vector-tier sweeps build their own)
-    // summed together
-    let mut extra_stats = Vec::new();
-    if has_bf16 {
-        extra_stats.push(session_bf16.plan_stats());
-    }
+    // session's plans (the reduced-dtype and vector-tier sweeps build
+    // their own) summed together
+    let mut extra_stats: Vec<Option<PlanStats>> = reduced_sessions
+        .iter().map(|s| s.plan_stats()).collect();
     if has_vector {
         extra_stats.push(session_vec.plan_stats());
     }
@@ -383,10 +394,15 @@ fn main() {
     let speedup = batch_speedup(&decode);
     let bf16_ratio = dtype_speedup(&decode, 1);
     let isa_ratio = isa_prefill_speedup(&prefill, 2048, vec_isa);
+    let b1_bytes = |dt: &str| decode.iter()
+        .find(|p| p.batch == 1 && p.weights_dtype == dt)
+        .map(|p| p.bytes_streamed_per_token).unwrap_or(0.0);
     println!("wrote {} (f32 decode B=16 vs B=1: {speedup:.2}x; bf16 vs \
               f32 at B=1: {bf16_ratio:.2}x; {vec_isa} vs scalar \
-              prefill at L=2048: {isa_ratio:.2}x)",
-             path.display());
+              prefill at L=2048: {isa_ratio:.2}x; B=1 bytes/tok \
+              f32={:.0} bf16={:.0} int8={:.0} q4={:.0})",
+             path.display(), b1_bytes("f32"), b1_bytes("bf16"),
+             b1_bytes("int8"), b1_bytes("q4"));
 
     // ---- structural gates (--check) -------------------------------------
     let mut failed = false;
@@ -448,6 +464,20 @@ fn main() {
             }
         } else {
             println!("fusion gate: skipped — backend plans no regions");
+        }
+        // quantised-bytes gate (1.7): whatever reduced dtypes were
+        // measured, their B=1 byte models must order strictly — the
+        // planner prices the code stream plus the amortised scales,
+        // so a tie or inversion is a pricing bug
+        if decode.iter().any(|p| matches!(p.weights_dtype.as_str(),
+                                          "int8" | "q4")) {
+            if let Err(why) = quant_bytes_ordering(&decode) {
+                eprintln!("FAIL: {why} — the quantised stream must \
+                           shrink the modelled decode bytes");
+                failed = true;
+            }
+        } else {
+            println!("quant gate: skipped — no quantised decode rows");
         }
     }
 

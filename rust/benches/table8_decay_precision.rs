@@ -10,12 +10,63 @@
 //! the storage-rounding envelope the tolerance suite
 //! (`tests/precision_parity.rs`) bounds. Runs hermetically — no XLA,
 //! no artifacts.
+//!
+//! PR 10 appends the group-quantisation accuracy sweep (DESIGN.md
+//! §13): int8 and q4 streams at group ∈ {32, 64, 128}, each measured
+//! against the same f32 baseline by teacher-forced |ΔPPL| and max
+//! per-step |Δlogit|. Smaller groups spend more scale bytes per
+//! weight but track each group's amplitude tighter — the table shows
+//! that trade directly next to the per-weight stream cost.
 
+use mamba2_serve::runtime::plan::ir::WeightRepr;
 use mamba2_serve::runtime::{argmax_last, Backend, PlanMode,
                             ReferenceBackend, WeightsDtype};
 use mamba2_serve::util::benchkit::{save_results, Bench, Table};
 
 const MODEL: &str = "sim-130m";
+
+fn log_softmax(row: &[f32], idx: usize) -> f64 {
+    let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b)) as f64;
+    let z: f64 = row.iter().map(|&x| ((x as f64) - m).exp()).sum();
+    (row[idx] as f64) - m - z.ln()
+}
+
+/// Teacher-forced perplexity over `tokens[16..]` from a 16-token
+/// prefill — the Table 8 accuracy axis.
+fn teacher_forced_ppl(backend: &ReferenceBackend, tokens: &[i32]) -> f64 {
+    let (mut cache, mut logits) =
+        backend.prefill_any(&tokens[..16]).unwrap();
+    let mut sum = 0.0f64;
+    let mut n = 0usize;
+    for &t in &tokens[16..] {
+        let row = logits.as_f32();
+        sum -= log_softmax(&row, t as usize);
+        n += 1;
+        let s = backend.decode_step(&cache, &[t]).unwrap();
+        cache = s.cache;
+        logits = s.logits;
+    }
+    (sum / n as f64).exp()
+}
+
+/// Max per-step |Δlogit| along the f32 greedy trajectory, both
+/// backends teacher-forced from the shared (bitwise f32) prefill.
+fn max_logit_shift(f32b: &ReferenceBackend, qb: &ReferenceBackend,
+                   tokens: &[i32]) -> f32 {
+    let (mut cf, last) = f32b.prefill_any(&tokens[..16]).unwrap();
+    let mut cq = cf.clone();
+    let mut tok = argmax_last(&last)[0];
+    let mut err = 0.0f32;
+    for _ in 0..48 {
+        let sf = f32b.decode_step(&cf, &[tok]).unwrap();
+        let sq = qb.decode_step(&cq, &[tok]).unwrap();
+        err = err.max(sf.logits.max_abs_diff(&sq.logits));
+        tok = argmax_last(&sf.logits)[0];
+        cf = sf.cache;
+        cq = sq.cache;
+    }
+    err
+}
 
 fn main() {
     let f32b = ReferenceBackend::seeded(MODEL, 0).unwrap()
@@ -84,5 +135,44 @@ fn main() {
     println!("decode runtime delta: {:+.1}% (bf16 vs f32; negative = \
               the halved stream pays)",
              (mbf / m32 - 1.0) * 100.0);
-    save_results("table8_decay_precision", &[&t]);
+
+    // group-quantisation accuracy sweep (DESIGN.md §13): the same
+    // teacher-forced protocol over int8/q4 at group ∈ {32, 64, 128},
+    // every cell measured against the one f32 baseline
+    let ppl_f32 = teacher_forced_ppl(&f32b, &tokens);
+    let mut qt = Table::new(
+        &format!("Group-quantised weight streams ({MODEL}): accuracy \
+                  vs group size, teacher-forced vs f32"),
+        &["Stream", "group", "bytes/weight", "max |Δlogit|", "|ΔPPL|"]);
+    qt.row(vec!["f32 (baseline)".into(), "-".into(), "4.000".into(),
+                "0.0".into(), "0.0".into()]);
+    for dt in [WeightsDtype::Int8, WeightsDtype::Q4] {
+        for group in [32usize, 64, 128] {
+            let qb = ReferenceBackend::seeded(MODEL, 0).unwrap()
+                .with_plan_mode(PlanMode::On)
+                .with_weights_dtype(dt)
+                .with_quant_group(group);
+            qb.warm_up(1);
+            let shift = max_logit_shift(&f32b, &qb, &tokens);
+            let dppl = (teacher_forced_ppl(&qb, &tokens) - ppl_f32)
+                .abs();
+            let repr = match dt {
+                WeightsDtype::Int8 => WeightRepr::Int8Group { group },
+                _ => WeightRepr::Q4Group { group },
+            };
+            qt.row(vec![repr.label(), format!("{group}"),
+                        format!("{:.3}", repr.bytes_per_weight()),
+                        format!("{shift:.4}"), format!("{dppl:.3}")]);
+            // each quantised stream must move logits, and tighter
+            // groups must never be *pathologically* worse than the
+            // storage format allows — the table is diagnostic, the
+            // hard per-dtype bounds live in tests/precision_parity.rs
+            assert!(shift > 1e-6,
+                    "{}: quantised stream inert", repr.label());
+            assert!(shift.is_finite() && dppl.is_finite(),
+                    "{}: non-finite drift", repr.label());
+        }
+    }
+    qt.print();
+    save_results("table8_decay_precision", &[&t, &qt]);
 }

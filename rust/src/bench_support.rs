@@ -169,7 +169,17 @@ pub fn fmt_pct(x: f64) -> String {
 /// and the mandatory top-level `fusion` block (`regions_planned`,
 /// `bytes_elided`) totals the pass's decisions across every plan the
 /// run measured. Pre-1.6 rows are implicitly unfused.
-pub const BENCH_SCHEMA_VERSION: f64 = 1.6;
+///
+/// 1.6 → 1.7 (PR 10): decode rows may carry `"int8"` / `"q4"` in the
+/// (still mandatory) `weights_dtype` — the group-quantised weight
+/// streams of DESIGN.md §13 — with `bytes_streamed_per_token`
+/// reflecting the code stream *plus* the amortised per-group f32
+/// scales. The quantised row sets are optional; every cross-PR gate
+/// still runs over the scalar f32 rows, and a new structural gate
+/// ([`quant_bytes_ordering`]) requires the B=1 byte models to order
+/// strictly `q4 < int8 < bf16 < f32` whenever the quantised rows are
+/// present.
+pub const BENCH_SCHEMA_VERSION: f64 = 1.7;
 
 /// Gateway traffic counters for the trajectory's HTTP leg (1.4):
 /// completions admitted, completions shed with 429, and the replica
@@ -210,7 +220,8 @@ pub struct DecodePoint {
     pub tokens_per_s: f64,
     pub mfu: f64,
     pub hbu: f64,
-    /// weight stream precision of this row (`"f32"` / `"bf16"`)
+    /// weight stream precision of this row (`"f32"` / `"bf16"` /
+    /// `"int8"` / `"q4"`)
     pub weights_dtype: String,
     /// modelled bytes streamed per generated token at this width
     pub bytes_streamed_per_token: f64,
@@ -311,6 +322,40 @@ pub fn dtype_speedup(decode: &[DecodePoint], batch: usize) -> f64 {
         }
         _ => 0.0,
     }
+}
+
+/// The schema-1.7 structural gate on the quantised weight streams
+/// (DESIGN.md §13): at B = 1 (weight-dominated decode) the modelled
+/// bytes per token of every reduced dtype present must order strictly
+/// `q4 < int8 < bf16 < f32`, scale bytes included. Only dtypes that
+/// have a scalar B=1 row participate; `Err` names the first violated
+/// pair. Vacuously `Ok` when no quantised rows exist (pre-1.7 sweeps,
+/// planner-less backends).
+pub fn quant_bytes_ordering(decode: &[DecodePoint])
+    -> std::result::Result<(), String> {
+    let bytes = |dt: &str| decode.iter()
+        .find(|p| p.batch == 1 && p.weights_dtype == dt
+              && p.isa == "scalar")
+        .map(|p| p.bytes_streamed_per_token);
+    // adjacent-or-skip chain: each present dtype must beat the nearest
+    // present wider one
+    let chain = ["q4", "int8", "bf16", "f32"];
+    let present: Vec<(&str, f64)> = chain.iter()
+        .filter_map(|dt| bytes(dt).map(|b| (*dt, b)))
+        .collect();
+    // nothing narrower than f32 measured — nothing to gate
+    if present.len() < 2 || present.iter().all(|(dt, _)| *dt == "f32") {
+        return Ok(());
+    }
+    for w in present.windows(2) {
+        let ((narrow, nb), (wide, wb)) = (w[0], w[1]);
+        if nb >= wb {
+            return Err(format!(
+                "B=1 bytes/token not strictly ordered: {narrow} \
+                 ({nb:.0}) >= {wide} ({wb:.0})"));
+        }
+    }
+    Ok(())
 }
 
 /// Vector-over-scalar prefill throughput ratio at one prompt length
@@ -535,9 +580,9 @@ pub fn validate_trajectory_json(j: &Json) -> Result<()> {
             .with_context(|| format!(
                 "BENCH json: decode[{i}] missing string \
                  \"weights_dtype\""))?;
-        if !matches!(dt, "f32" | "bf16") {
+        if !matches!(dt, "f32" | "bf16" | "int8" | "q4") {
             bail!("BENCH json: decode[{i}].weights_dtype {dt:?} not \
-                   f32|bf16");
+                   f32|bf16|int8|q4");
         }
         let isa = isa_of(point, &format!("decode[{i}]"))?;
         if dt == "f32" && isa == "scalar" {
@@ -876,6 +921,41 @@ mod tests {
         mixed.push(decode_point(&cost, 16, 0.002, "bf16", 0.1e6, "avx2",
                                 7));
         assert_eq!(dtype_speedup(&mixed, 16), 0.0);
+    }
+
+    #[test]
+    fn quant_bytes_ordering_gates_b1_rows() {
+        let cfg = crate::runtime::sim_config("sim-130m").unwrap();
+        let cost = crate::runtime::analytic_cost(
+            &cfg, "decode_step", None, 1);
+        let dp = |dt: &str, bytes: f64| {
+            decode_point(&cost, 1, 0.004, dt, bytes, "scalar", 6)
+        };
+        // the full strictly-ordered chain passes
+        let full = vec![dp("f32", 100.0), dp("bf16", 60.0),
+                        dp("int8", 40.0), dp("q4", 25.0)];
+        assert!(quant_bytes_ordering(&full).is_ok());
+        // a quantised row that fails to beat the next wider dtype fails
+        let bad = vec![dp("f32", 100.0), dp("bf16", 60.0),
+                       dp("int8", 60.0)];
+        let e = quant_bytes_ordering(&bad).unwrap_err();
+        assert!(e.contains("int8") && e.contains("bf16"), "{e}");
+        // q4 must beat int8, not just f32
+        let bad2 = vec![dp("f32", 100.0), dp("int8", 40.0),
+                        dp("q4", 45.0)];
+        assert!(quant_bytes_ordering(&bad2).is_err());
+        // skipped dtypes compare against the nearest present one
+        let sparse = vec![dp("f32", 100.0), dp("q4", 25.0)];
+        assert!(quant_bytes_ordering(&sparse).is_ok());
+        // vacuous without quantised rows / without B=1 rows
+        assert!(quant_bytes_ordering(&[dp("f32", 100.0)]).is_ok());
+        assert!(quant_bytes_ordering(&[]).is_ok());
+        let b16 = decode_point(&cost, 16, 0.01, "int8", 1.0, "scalar",
+                               7);
+        assert!(quant_bytes_ordering(&[b16]).is_ok());
+        // the bf16-only legacy pair still gates (bf16 < f32)
+        let legacy = vec![dp("f32", 100.0), dp("bf16", 120.0)];
+        assert!(quant_bytes_ordering(&legacy).is_err());
     }
 
     #[test]

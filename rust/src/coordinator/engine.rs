@@ -253,6 +253,11 @@ impl Engine {
         // up front, so the first requests never pay planning latency
         // (no-op on backends without a planner)
         session.warm_up(slots);
+        // publish the weight-stream identity once the decode plans are
+        // warm (bytes/token reads the planner's B=1 byte model) — this
+        // is what /metrics exports as m2_bytes_streamed_per_token
+        metrics.set_backend_info(session.weights_dtype(),
+                                 session.bytes_streamed_per_token(1));
         let prefix_cache = PrefixCache::new(cfg.prefix_cache_bytes,
                                             model_cfg.chunk_size);
         let mut eng = Engine {

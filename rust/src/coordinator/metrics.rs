@@ -1,7 +1,7 @@
 //! Serving metrics: counters + latency histograms, lock-light.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
 
 use crate::util::stats::LogHistogram;
@@ -140,6 +140,11 @@ pub struct Metrics {
     pub prefix_insertions: AtomicU64,
     pub prefix_bytes: AtomicU64,
     pub prefix_entries: AtomicU64,
+    /// backend weight-stream identity, published once by the engine at
+    /// startup (DESIGN.md §13): the stream dtype (`f32`/`bf16`/`int8`/
+    /// `q4`) and the planner's modelled B=1 decode bytes per token —
+    /// what `/metrics` exports as `m2_bytes_streamed_per_token`
+    backend_info: OnceLock<(String, f64)>,
     /// histograms guarded by one mutex (recorded off the hot loop)
     hist: Mutex<Hists>,
     started: Mutex<Option<Instant>>,
@@ -229,6 +234,15 @@ impl Metrics {
         self.hist.lock().unwrap().step.record(secs);
     }
 
+    /// Publish the backend's weight-stream identity (dtype + modelled
+    /// B=1 decode bytes/token). Called once by the engine at startup;
+    /// later calls are ignored (the backend never changes under a
+    /// running engine).
+    pub fn set_backend_info(&self, dtype: &str, bytes_per_token: f64) {
+        let _ = self.backend_info.set((dtype.to_string(),
+                                       bytes_per_token));
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let h = self.hist.lock().unwrap();
         let elapsed = self.started.lock().unwrap()
@@ -258,6 +272,10 @@ impl Metrics {
                 self.prefix_insertions.load(Ordering::Relaxed),
             prefix_bytes: self.prefix_bytes.load(Ordering::Relaxed),
             prefix_entries: self.prefix_entries.load(Ordering::Relaxed),
+            weights_dtype: self.backend_info.get()
+                .map(|(d, _)| d.clone()).unwrap_or_default(),
+            bytes_streamed_per_token: self.backend_info.get()
+                .map(|(_, b)| *b).unwrap_or(0.0),
             ttft_p50: h.ttft.quantile(0.5),
             ttft_p99: h.ttft.quantile(0.99),
             e2e_p50: h.e2e.quantile(0.5),
@@ -287,6 +305,10 @@ pub struct Snapshot {
     pub prefix_insertions: u64,
     pub prefix_bytes: u64,
     pub prefix_entries: u64,
+    /// backend weight-stream identity (empty / 0.0 until the engine
+    /// publishes it at startup)
+    pub weights_dtype: String,
+    pub bytes_streamed_per_token: f64,
     pub ttft_p50: f64,
     pub ttft_p99: f64,
     pub e2e_p50: f64,

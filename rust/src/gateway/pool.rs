@@ -11,6 +11,7 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 use crate::coordinator::{Engine, EngineConfig, InFlightGauge, Router};
+use crate::runtime::manifest::WeightsDtype;
 use crate::runtime::open_backend_replicas;
 use crate::util::error::Result;
 
@@ -24,6 +25,13 @@ pub struct PoolConfig {
     pub prefix_cache_bytes: usize,
     /// optional trained checkpoint (.mbt), loaded into every replica
     pub checkpoint: Option<PathBuf>,
+    /// weight stream precision pinned across the pool. `None` keeps
+    /// whatever `M2_WEIGHTS` (normally written by
+    /// `RuntimeOptions::export_env`) already says; `Some` overrides it
+    /// before the replicas open, so every replica streams the same
+    /// dtype — mixed pools would report inconsistent
+    /// `bytes_streamed_per_token` and tokens/s.
+    pub weights: Option<WeightsDtype>,
 }
 
 impl Default for PoolConfig {
@@ -36,6 +44,7 @@ impl Default for PoolConfig {
             batch_cap: 4,
             prefix_cache_bytes: 16 << 20,
             checkpoint: None,
+            weights: None,
         }
     }
 }
@@ -46,6 +55,12 @@ impl Default for PoolConfig {
 /// process-wide in-flight number).
 pub fn build(cfg: PoolConfig) -> Result<(Arc<Router>, Arc<InFlightGauge>)> {
     let gauge = Arc::new(InFlightGauge::new());
+    if let Some(w) = cfg.weights {
+        // backends read the env at open time (the established knob
+        // transport — see `runtime::options`), so writing it here pins
+        // the whole pool to one stream dtype
+        std::env::set_var("M2_WEIGHTS", w.as_str());
+    }
     let backends = open_backend_replicas(&cfg.model, &cfg.backend,
                                          &cfg.artifacts, cfg.replicas)?;
     let mut replicas = Vec::with_capacity(cfg.replicas);

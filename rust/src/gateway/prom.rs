@@ -162,6 +162,19 @@ pub fn pool_samples(p: &mut Prom, router: &Router) {
         p.sample("m2_prefix_cache_entries",
                  "prompt-prefix cache entry count", "gauge", l,
                  s.prefix_entries as f64);
+        // weight-stream identity (DESIGN.md §13): the planner's
+        // modelled B=1 decode bytes/token, labelled by stream dtype so
+        // dashboards can watch the quantised saving per replica
+        if !s.weights_dtype.is_empty() {
+            let wl: &[(&str, String)] = &[
+                ("replica", i.to_string()),
+                ("dtype", s.weights_dtype.clone()),
+            ];
+            p.sample("m2_bytes_streamed_per_token",
+                     "modelled weight+state bytes streamed per decoded \
+                      token at batch 1, by weight-stream dtype",
+                     "gauge", wl, s.bytes_streamed_per_token);
+        }
     }
     p.sample("m2_in_flight_total",
              "in-flight requests across all replicas (shared gauge)",

@@ -58,9 +58,11 @@ fn main() -> Result<()> {
               (was --weights before schema 1.2)")
         .opt("plan", "on", "plan-driven lowering: on|off (off = the \
               legacy hand-scheduled forward; reference backend only)")
-        .opt("weights", "f32", "weight stream precision: f32|bf16 \
-              (bf16 halves decode weight bandwidth, f32 accumulate; \
-              f32 is the bitwise baseline; reference backend only)")
+        .opt("weights", "f32", "weight stream precision: \
+              f32|bf16|int8|q4 (reduced dtypes shrink decode weight \
+              bandwidth, f32 accumulate, prefill stays f32; int8/q4 \
+              are group-quantised, group via M2_WEIGHTS_GROUP; f32 is \
+              the bitwise baseline; reference backend only)")
         .opt("isa", "scalar", "kernel-tier ISA: scalar|avx2|neon|auto \
               (scalar is the bitwise baseline; auto picks the best \
               vector tier the host supports; reference backend only)")
@@ -114,6 +116,9 @@ fn main() -> Result<()> {
         } else {
             Some(cli.get("checkpoint").into())
         },
+        // already resolved + exported above; pinning it on the pool too
+        // keeps programmatic embedders and the CLI on one code path
+        weights: Some(opts.weights),
     })?;
     let tokenizer = Arc::new(Tokenizer::train(corpus::BUNDLED, 256));
     log_info!("tokenizer: vocab {}", tokenizer.vocab_size());

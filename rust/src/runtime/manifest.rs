@@ -24,15 +24,19 @@ pub struct CostInfo {
 }
 
 /// Weight storage precision of an executable's streamed weight
-/// matrices (DESIGN.md §8). `F32` is the default and the bitwise-parity
-/// baseline; `Bf16` halves streamed weight bytes on the
+/// matrices (DESIGN.md §8, §13). `F32` is the default and the
+/// bitwise-parity baseline; `Bf16` halves streamed weight bytes on the
 /// bandwidth-bound decode path (f32 accumulation throughout, paper
-/// §3.3 conventions).
+/// §3.3 conventions); `Int8` / `Q4` are group-quantised code streams
+/// (symmetric per-group f32 scales, dequant fused into the kernels)
+/// that drop the stream another 2–4×.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub enum WeightsDtype {
     #[default]
     F32,
     Bf16,
+    Int8,
+    Q4,
 }
 
 impl WeightsDtype {
@@ -40,6 +44,8 @@ impl WeightsDtype {
         match self {
             WeightsDtype::F32 => "f32",
             WeightsDtype::Bf16 => "bf16",
+            WeightsDtype::Int8 => "int8",
+            WeightsDtype::Q4 => "q4",
         }
     }
 
@@ -49,12 +55,14 @@ impl WeightsDtype {
         match s.trim() {
             "f32" | "float32" => Some(WeightsDtype::F32),
             "bf16" | "bfloat16" => Some(WeightsDtype::Bf16),
+            "int8" | "i8" => Some(WeightsDtype::Int8),
+            "q4" | "int4" => Some(WeightsDtype::Q4),
             _ => None,
         }
     }
 
-    /// Default from the `M2_WEIGHTS` env var (`bf16` selects the
-    /// half-width weight stream; anything else is f32, mirroring
+    /// Default from the `M2_WEIGHTS` env var (`bf16`/`int8`/`q4` select
+    /// a reduced weight stream; anything else is f32, mirroring
     /// `PlanMode::from_env`'s lenient reading — the `--weights` flag is
     /// the loud-failure path).
     pub fn from_env() -> WeightsDtype {
@@ -64,11 +72,15 @@ impl WeightsDtype {
         }
     }
 
-    /// Bytes per stored weight scalar.
+    /// Bytes per stored weight scalar — code stream only; the amortised
+    /// per-group scale bytes of the quantised forms are priced through
+    /// `WeightRepr::bytes_per_weight`, which knows the group size.
     pub fn bytes(&self) -> f64 {
         match self {
             WeightsDtype::F32 => 4.0,
             WeightsDtype::Bf16 => 2.0,
+            WeightsDtype::Int8 => 1.0,
+            WeightsDtype::Q4 => 0.5,
         }
     }
 }

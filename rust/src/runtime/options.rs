@@ -96,7 +96,7 @@ impl RuntimeOptions {
         if let Some(v) = weights {
             o.weights = WeightsDtype::parse(v.trim())
                 .ok_or_else(|| format!(
-                    "--weights / M2_WEIGHTS: expected f32|bf16 \
+                    "--weights / M2_WEIGHTS: expected f32|bf16|int8|q4 \
                      (got {v:?})"
                 ))?;
         }
@@ -226,6 +226,16 @@ mod tests {
         assert_eq!(o.plan, PlanMode::Off);
         assert_eq!(o.weights, WeightsDtype::Bf16);
         assert_eq!(o.threads, Some(12));
+        // the quantised streams parse through the same knob (aliases
+        // included)
+        for (tok, want) in [("int8", WeightsDtype::Int8),
+                            ("i8", WeightsDtype::Int8),
+                            ("q4", WeightsDtype::Q4),
+                            ("int4", WeightsDtype::Q4)] {
+            let o = RuntimeOptions::from_parts(
+                None, Some(tok), None, None, None).unwrap();
+            assert_eq!(o.weights, want, "{tok}");
+        }
         // `auto` resolves to a concrete host tier at parse time
         assert_eq!(o.isa, Isa::detect());
         assert_eq!(o.fuse, FuseMode::Off);

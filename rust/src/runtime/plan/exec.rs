@@ -182,8 +182,9 @@ impl Ro<'_> {
 // -------------------------------------------------- scheduled kernels ---
 
 /// One row block of `C += A @ B` through the node's chosen weight
-/// representation (DESIGN.md §8) on the node's kernel tier: dense f32,
-/// f32 column panels, or the bf16 stream — all with identical
+/// representation (DESIGN.md §8/§13) on the node's kernel tier: dense
+/// f32, f32 column panels, the bf16 stream, or a group-quantised
+/// int8/q4 stream dequantised inside the kernel — all with identical
 /// per-element accumulation order on every tier (broadcast kernels).
 fn mm_block(dx: Dispatch, w: &WeightStream, a: &[f32], lda: usize,
             rows: usize, k: usize, n: usize, cblk: &mut [f32]) {
@@ -197,6 +198,14 @@ fn mm_block(dx: Dispatch, w: &WeightStream, a: &[f32], lda: usize,
         }
         WeightStream::Bf16(b) => {
             dx.matmul_acc_strided_bf16(a, lda, b, rows, k, n, cblk, n);
+        }
+        WeightStream::I8g { group, codes, scales } => {
+            dx.matmul_acc_strided_i8(a, lda, codes, scales, *group, rows,
+                                     k, n, cblk, n);
+        }
+        WeightStream::Q4g { group, codes, scales } => {
+            dx.matmul_acc_strided_q4(a, lda, codes, scales, *group, rows,
+                                     k, n, cblk, n);
         }
     }
 }
@@ -216,6 +225,14 @@ fn mmbt_block(dx: Dispatch, w: &WeightStream, a: &[f32], lda: usize,
         }
         WeightStream::Bf16(b) => {
             dx.matmul_bt_acc_strided_bf16(a, lda, b, rows, k, n, cblk, n);
+        }
+        WeightStream::I8g { group, codes, scales } => {
+            dx.matmul_bt_acc_strided_i8(a, lda, codes, scales, *group,
+                                        rows, k, n, cblk, n);
+        }
+        WeightStream::Q4g { group, codes, scales } => {
+            dx.matmul_bt_acc_strided_q4(a, lda, codes, scales, *group,
+                                        rows, k, n, cblk, n);
         }
     }
 }

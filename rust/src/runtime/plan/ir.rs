@@ -78,15 +78,44 @@ pub enum WeightRepr {
     /// weight bytes the decode roofline is bound on. Not bitwise vs
     /// f32 (storage rounding); gated by the backend's precision mode.
     Bf16,
+    /// int8 row-major codes with one f32 scale per `group` elements
+    /// along each stored row, symmetric (`scale = max|w|/127`),
+    /// dequantised inside the matmul kernel
+    /// (`tensor::kernels` `matmul_acc_strided_i8` /
+    /// `matmul_bt_acc_strided_i8`). ~¼ the streamed bytes of f32 plus
+    /// the scale stream (4/group bytes per weight). Not bitwise vs f32;
+    /// gated by the backend's precision mode like `Bf16`.
+    Int8Group { group: usize },
+    /// 4-bit codes packed two per byte (offset-8 nibbles) with the same
+    /// per-group f32 scales — ~⅛ the f32 stream plus scales.
+    Q4Group { group: usize },
 }
 
 impl WeightRepr {
-    /// Short dump token, e.g. `f32`, `f32.tile32`, `bf16`.
+    /// Short dump token, e.g. `f32`, `f32.tile32`, `bf16`, `int8.g64`.
     pub fn label(&self) -> String {
         match self {
             WeightRepr::F32Dense => "f32".into(),
             WeightRepr::F32Tiled { tile } => format!("f32.tile{tile}"),
             WeightRepr::Bf16 => "bf16".into(),
+            WeightRepr::Int8Group { group } => format!("int8.g{group}"),
+            WeightRepr::Q4Group { group } => format!("q4.g{group}"),
+        }
+    }
+
+    /// Modelled streamed bytes per weight scalar: codes plus the
+    /// amortised per-group f32 scales. The planner prices the stream
+    /// with this exactly like the bf16 halving — no new cost terms.
+    pub fn bytes_per_weight(&self) -> f64 {
+        match self {
+            WeightRepr::F32Dense | WeightRepr::F32Tiled { .. } => 4.0,
+            WeightRepr::Bf16 => 2.0,
+            WeightRepr::Int8Group { group } => {
+                1.0 + 4.0 / *group as f64
+            }
+            WeightRepr::Q4Group { group } => {
+                0.5 + 4.0 / *group as f64
+            }
         }
     }
 }

@@ -437,7 +437,7 @@ mod tests {
 
     fn build(k: PlanKey) -> Plan {
         let cfg = sim_config("tiny").unwrap();
-        planner::build_plan(&cfg, k, 4, WeightsDtype::F32,
+        planner::build_plan(&cfg, k, 4, WeightsDtype::F32, 64,
                             Isa::Scalar, FuseMode::On)
     }
 
@@ -516,7 +516,7 @@ mod tests {
     fn dump_tags_retiered_nodes() {
         let cfg = sim_config("sim-130m").unwrap();
         let k = PlanKey { entry: Entry::Prefill, batch: 1, t: 512 };
-        let p = planner::build_plan(&cfg, k, 8, WeightsDtype::F32,
+        let p = planner::build_plan(&cfg, k, 8, WeightsDtype::F32, 64,
                                     Isa::Avx2, FuseMode::On);
         let d = p.dump();
         assert!(d.contains(" isa=avx2\n"), "schedule line: {d}");

@@ -383,33 +383,49 @@ pub fn tile_for(k: usize, n: usize) -> usize {
 /// (DESIGN.md §8): pick the weight representation, returning it with
 /// the node's `Work` adjusted to what that representation streams.
 ///
-///   * decode entrypoints in bf16 mode price the half-width weight
-///     stream against the f32 one over [`Roofline::worker_peaks`]'s
-///     bandwidth terms — with any shared weight bytes at all the bf16
-///     form is strictly cheaper, so the bandwidth-bound decode path
-///     always takes it (a unit test pins the strictness, since the
-///     BENCH acceptance gate relies on it),
-///   * prefill matmuls keep f32 (exactness is free where compute, not
-///     weight bandwidth, binds the roofline — see DESIGN.md §8 for the
-///     priced comparison) but repack into column panels once the
-///     weight exceeds the L1 budget and the row count re-streams it
-///     often enough to amortise panel residency. Bitwise identical to
-///     dense by construction.
-fn choose_repr(entry: Entry, weights: WeightsDtype, threads: usize,
-               mkn: (usize, usize, usize), work: &Work)
+///   * decode entrypoints in a reduced precision mode (bf16, int8, q4)
+///     price that representation's weight stream against the f32 one
+///     over [`Roofline::worker_peaks`]'s bandwidth terms — the shared
+///     weight bytes scale by `WeightRepr::bytes_per_weight() / 4`
+///     (code stream plus amortised group scales for the quantised
+///     forms), so with any shared weight bytes at all the reduced form
+///     is strictly cheaper and the bandwidth-bound decode path always
+///     takes it (a unit test pins the strictness, since the BENCH
+///     acceptance gate relies on it),
+///   * prefill matmuls keep f32 regardless of the knob (exactness is
+///     free where compute, not weight bandwidth, binds the roofline —
+///     see DESIGN.md §8/§13 for the priced comparison; this is also
+///     what keeps prefill bitwise under every `--weights` mode) but
+///     repack into column panels once the weight exceeds the L1 budget
+///     and the row count re-streams it often enough to amortise panel
+///     residency. Bitwise identical to dense by construction.
+fn choose_repr(entry: Entry, weights: WeightsDtype, quant_group: usize,
+               threads: usize, mkn: (usize, usize, usize), work: &Work)
     -> (WeightRepr, Work) {
     let (m, k, n) = mkn;
-    if entry == Entry::Decode && weights == WeightsDtype::Bf16 {
-        let mut w2 = work.clone();
-        w2.shared_bytes *= WeightsDtype::Bf16.bytes() / 4.0;
-        let f32_t = serial_time(work, threads);
-        let bf16_t = serial_time(&w2, threads);
-        if bf16_t < f32_t {
-            return (WeightRepr::Bf16, w2);
+    let reduced = match weights {
+        WeightsDtype::F32 => None,
+        WeightsDtype::Bf16 => Some(WeightRepr::Bf16),
+        WeightsDtype::Int8 => {
+            Some(WeightRepr::Int8Group { group: quant_group })
         }
-        // unreachable while weights have nonzero bytes; kept so the
-        // decision stays priced rather than hard-wired
-        return (WeightRepr::F32Dense, work.clone());
+        WeightsDtype::Q4 => {
+            Some(WeightRepr::Q4Group { group: quant_group })
+        }
+    };
+    if entry == Entry::Decode {
+        if let Some(r) = reduced {
+            let mut w2 = work.clone();
+            w2.shared_bytes *= r.bytes_per_weight() / 4.0;
+            let f32_t = serial_time(work, threads);
+            let red_t = serial_time(&w2, threads);
+            if red_t < f32_t {
+                return (r, w2);
+            }
+            // unreachable while weights have nonzero bytes; kept so the
+            // decision stays priced rather than hard-wired
+            return (WeightRepr::F32Dense, work.clone());
+        }
     }
     if m >= TILE_MIN_ROWS && k * n * 4 > L1_PANEL_BYTES {
         return (WeightRepr::F32Tiled { tile: tile_for(k, n) },
@@ -432,7 +448,8 @@ fn choose_repr(entry: Entry, weights: WeightsDtype, threads: usize,
 /// node executes standalone and the slab stays fully dense (the
 /// bitwise parity oracle of `tests/fusion_parity.rs`).
 pub fn build_plan(cfg: &ConfigInfo, key: PlanKey, threads: usize,
-                  weights: WeightsDtype, isa: Isa, fuse: FuseMode)
+                  weights: WeightsDtype, quant_group: usize, isa: Isa,
+                  fuse: FuseMode)
     -> Plan {
     let t0 = Instant::now();
     let mut graph = match key.entry {
@@ -444,24 +461,32 @@ pub fn build_plan(cfg: &ConfigInfo, key: PlanKey, threads: usize,
     let mut row_block = 0usize;
     let mut chunk_tile = 0usize;
     let mut layout = String::new();
-    let mut bf16_saved_bytes = 0.0f64;
+    let mut repr_saved_bytes = 0.0f64;
     for node in &mut graph.nodes {
         let is_mm = matches!(node.op, Op::MatMul { .. });
         // precision/layout first — the chosen representation changes
         // the bytes the fan-out loop below prices
         if let (Op::MatMul { repr, .. }, Some(mkn)) =
             (&mut node.op, node.mkn) {
-            let (r, w) = choose_repr(key.entry, weights, threads, mkn,
-                                     &node.work);
-            if r == WeightRepr::Bf16 {
-                // the invocation-level cost drops by the f32→bf16
-                // weight-byte saving (k·n·2 bytes per contraction)
-                bf16_saved_bytes += (mkn.1 * mkn.2) as f64 * 2.0;
+            let (r, w) = choose_repr(key.entry, weights, quant_group,
+                                     threads, mkn, &node.work);
+            let bpw = r.bytes_per_weight();
+            if bpw < 4.0 {
+                // the invocation-level cost drops by the f32→reduced
+                // weight-byte saving per contraction (k·n·2 for bf16,
+                // k·n·(4 − 1 − 4/g) for int8, … — scales included)
+                repr_saved_bytes += (mkn.1 * mkn.2) as f64 * (4.0 - bpw);
             }
             if layout.is_empty() && r != WeightRepr::F32Dense {
                 layout = match r {
                     WeightRepr::F32Tiled { tile } => format!("tile{tile}"),
                     WeightRepr::Bf16 => "bf16-rows".into(),
+                    WeightRepr::Int8Group { group } => {
+                        format!("int8-g{group}-rows")
+                    }
+                    WeightRepr::Q4Group { group } => {
+                        format!("q4-g{group}-rows")
+                    }
                     WeightRepr::F32Dense => unreachable!(),
                 };
             }
@@ -533,15 +558,16 @@ pub fn build_plan(cfg: &ConfigInfo, key: PlanKey, threads: usize,
         }
     }
     // the whole-invocation analytic cost, computed ONCE here and stored
-    // on the plan so benches/metrics never recompute it per call; bf16
-    // weight streams shave their saved bytes off the f32 model
+    // on the plan so benches/metrics never recompute it per call;
+    // reduced-precision weight streams (bf16/int8/q4) shave their saved
+    // bytes off the f32 model
     let mut cost = match key.entry {
         Entry::Prefill => analytic_cost(cfg, "prefill", Some(key.t),
                                         key.batch),
         Entry::Decode => analytic_cost(cfg, "decode_step", None,
                                        key.batch),
     };
-    cost.bytes_accessed -= bf16_saved_bytes;
+    cost.bytes_accessed -= repr_saved_bytes;
     // the byte-model total the schedule was chosen against — what
     // BENCH_*.json reports as bytes_streamed_per_token (÷ batch);
     // fusion shaves its elided bytes off here (never off CostInfo,
@@ -621,21 +647,21 @@ mod tests {
               threads: usize, weights: WeightsDtype) -> Plan {
         let cfg = sim_config(cfg_name).unwrap();
         build_plan(&cfg, PlanKey { entry, batch, t }, threads, weights,
-                   Isa::Scalar, FuseMode::On)
+                   64, Isa::Scalar, FuseMode::On)
     }
 
     fn plan_isa(cfg_name: &str, entry: Entry, batch: usize, t: usize,
                 threads: usize, isa: Isa) -> Plan {
         let cfg = sim_config(cfg_name).unwrap();
         build_plan(&cfg, PlanKey { entry, batch, t }, threads,
-                   WeightsDtype::F32, isa, FuseMode::On)
+                   WeightsDtype::F32, 64, isa, FuseMode::On)
     }
 
     fn plan_fuse(cfg_name: &str, entry: Entry, batch: usize, t: usize,
                  threads: usize, fuse: FuseMode) -> Plan {
         let cfg = sim_config(cfg_name).unwrap();
         build_plan(&cfg, PlanKey { entry, batch, t }, threads,
-                   WeightsDtype::F32, Isa::Scalar, fuse)
+                   WeightsDtype::F32, 64, Isa::Scalar, fuse)
     }
 
     #[test]
@@ -857,6 +883,69 @@ mod tests {
                 // at B=16 per-slot state amortises the weights — the
                 // saving shrinks but never vanishes
                 assert!(ratio < 0.95, "B={b}: ratio {ratio}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantised_decode_is_priced_and_bytes_order_strictly() {
+        // the schema-1.7 BENCH gate (q4 < int8 < bf16 < f32 streamed
+        // bytes at B=1) rests on the planner pricing each code stream
+        // plus its amortised group scales — again priced, not hard-wired
+        for &b in &[1usize, 16] {
+            let i8p = plan_w("sim-130m", Entry::Decode, b, 1, 8,
+                             WeightsDtype::Int8);
+            let q4p = plan_w("sim-130m", Entry::Decode, b, 1, 8,
+                             WeightsDtype::Q4);
+            for (p, want) in [(&i8p, WeightRepr::Int8Group { group: 64 }),
+                              (&q4p, WeightRepr::Q4Group { group: 64 })] {
+                for node in &p.graph.nodes {
+                    if let Op::MatMul { repr, .. } = node.op {
+                        assert_eq!(repr, want, "{}", node.op.label());
+                    }
+                }
+            }
+            assert_eq!(i8p.schedule.weights_dtype, "int8");
+            assert_eq!(i8p.schedule.weight_layout, "int8-g64-rows");
+            assert_eq!(q4p.schedule.weights_dtype, "q4");
+            assert_eq!(q4p.schedule.weight_layout, "q4-g64-rows");
+            let f = plan_w("sim-130m", Entry::Decode, b, 1, 8,
+                           WeightsDtype::F32);
+            let h = plan_w("sim-130m", Entry::Decode, b, 1, 8,
+                           WeightsDtype::Bf16);
+            assert!(q4p.stream_bytes < i8p.stream_bytes, "B={b}");
+            assert!(i8p.stream_bytes < h.stream_bytes, "B={b}");
+            assert!(h.stream_bytes < f.stream_bytes, "B={b}");
+            assert!(i8p.cost.bytes_accessed < h.cost.bytes_accessed);
+            assert!(q4p.cost.bytes_accessed < i8p.cost.bytes_accessed);
+            assert!(i8p.est_seconds < h.est_seconds, "B={b}");
+        }
+        // the group knob reaches the chosen repr and the layout token
+        let cfg = sim_config("sim-130m").unwrap();
+        let p = build_plan(&cfg,
+                           PlanKey { entry: Entry::Decode, batch: 1, t: 1 },
+                           8, WeightsDtype::Int8, 32, Isa::Scalar,
+                           FuseMode::On);
+        assert_eq!(p.schedule.weight_layout, "int8-g32-rows");
+        // a smaller group means more scale bytes, so g32 streams
+        // strictly more than g64 while staying under bf16
+        let g64 = plan_w("sim-130m", Entry::Decode, 1, 1, 8,
+                         WeightsDtype::Int8);
+        assert!(p.stream_bytes > g64.stream_bytes);
+    }
+
+    #[test]
+    fn prefill_stays_f32_under_quantised_knobs() {
+        // int8/q4 are decode-only, same as bf16: the prefill graph keeps
+        // the exact f32 stream (bitwise-prefill contract of DESIGN §13)
+        for dt in [WeightsDtype::Int8, WeightsDtype::Q4] {
+            let p = plan_w("sim-130m", Entry::Prefill, 1, 512, 8, dt);
+            for node in &p.graph.nodes {
+                if let Op::MatMul { repr, .. } = node.op {
+                    assert!(matches!(repr, WeightRepr::F32Dense
+                                         | WeightRepr::F32Tiled { .. }),
+                            "{}: {repr:?}", node.op.label());
+                }
             }
         }
     }

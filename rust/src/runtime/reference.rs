@@ -33,7 +33,9 @@ use crate::tensor::kernels::scalar::{axpy, dot, gated_rmsnorm_rows,
                                      matmul_acc_strided,
                                      matmul_bt_acc_strided, rmsnorm_row,
                                      silu_rows};
-use crate::tensor::kernels::{pack_cols, silu, softplus, to_bf16, Isa};
+use crate::tensor::kernels::{pack_cols, quantize_i8_rows,
+                             quantize_q4_rows, silu, softplus, to_bf16,
+                             Isa};
 use crate::bail;
 use crate::tensor::Tensor;
 use crate::util::error::{Context, Result};
@@ -88,6 +90,10 @@ pub(crate) struct Params {
 pub(crate) struct MatPacks {
     bf16: OnceLock<Vec<u16>>,
     tiled: OnceLock<(usize, Vec<f32>)>,
+    /// (group, codes, per-group scales) — symmetric int8, DESIGN.md §13
+    i8g: OnceLock<(usize, Vec<i8>, Vec<f32>)>,
+    /// (group, packed nibbles, per-group scales) — offset-8 q4
+    q4g: OnceLock<(usize, Vec<u8>, Vec<f32>)>,
 }
 
 impl MatPacks {
@@ -104,6 +110,29 @@ impl MatPacks {
         assert_eq!(*t, tile, "conflicting tile widths for one weight");
         p
     }
+
+    /// `rows` × `len` row-major, quantised per `group` columns. The
+    /// group size is a backend-level knob, so — like the tile width —
+    /// every plan over one backend asks for the same pack.
+    fn i8g(&self, dense: &[f32], rows: usize, len: usize, group: usize)
+        -> (&[i8], &[f32]) {
+        let (g, codes, scales) = self.i8g.get_or_init(|| {
+            let (c, s) = quantize_i8_rows(dense, rows, len, group);
+            (group, c, s)
+        });
+        assert_eq!(*g, group, "conflicting int8 groups for one weight");
+        (codes, scales)
+    }
+
+    fn q4g(&self, dense: &[f32], rows: usize, len: usize, group: usize)
+        -> (&[u8], &[f32]) {
+        let (g, codes, scales) = self.q4g.get_or_init(|| {
+            let (c, s) = quantize_q4_rows(dense, rows, len, group);
+            (group, c, s)
+        });
+        assert_eq!(*g, group, "conflicting q4 groups for one weight");
+        (codes, scales)
+    }
 }
 
 /// A weight matrix in the representation a plan's precision/layout pass
@@ -118,6 +147,11 @@ pub(crate) enum WeightStream<'a> {
     Tiled { tile: usize, panels: &'a [f32] },
     /// bf16 rows, f32 accumulate
     Bf16(&'a [u16]),
+    /// symmetric int8 rows + per-group f32 scales, dequantised inside
+    /// the kernel (DESIGN.md §13)
+    I8g { group: usize, codes: &'a [i8], scales: &'a [f32] },
+    /// offset-8 q4 nibble pairs + per-group f32 scales
+    Q4g { group: usize, codes: &'a [u8], scales: &'a [f32] },
 }
 
 fn stream<'a>(dense: &'a [f32], packs: &'a MatPacks, repr: WeightRepr,
@@ -129,6 +163,14 @@ fn stream<'a>(dense: &'a [f32], packs: &'a MatPacks, repr: WeightRepr,
             panels: packs.tiled(dense, k, n, tile),
         },
         WeightRepr::Bf16 => WeightStream::Bf16(packs.bf16(dense)),
+        WeightRepr::Int8Group { group } => {
+            let (codes, scales) = packs.i8g(dense, k, n, group);
+            WeightStream::I8g { group, codes, scales }
+        }
+        WeightRepr::Q4Group { group } => {
+            let (codes, scales) = packs.q4g(dense, k, n, group);
+            WeightStream::Q4g { group, codes, scales }
+        }
     }
 }
 
@@ -161,6 +203,20 @@ impl Params {
             },
             WeightRepr::Bf16 => {
                 WeightStream::Bf16(self.embed_packs.bf16(&self.embed))
+            }
+            // Bᵀ layout: rows are vocab entries of length d, which is
+            // exactly the contiguous axis the groups run along
+            WeightRepr::Int8Group { group } => {
+                let rows = self.embed.len() / self.lnf_w.len();
+                let (codes, scales) = self.embed_packs.i8g(
+                    &self.embed, rows, self.lnf_w.len(), group);
+                WeightStream::I8g { group, codes, scales }
+            }
+            WeightRepr::Q4Group { group } => {
+                let rows = self.embed.len() / self.lnf_w.len();
+                let (codes, scales) = self.embed_packs.q4g(
+                    &self.embed, rows, self.lnf_w.len(), group);
+                WeightStream::Q4g { group, codes, scales }
             }
         }
     }
@@ -384,9 +440,25 @@ pub struct ReferenceBackend {
     /// identical (`tests/fusion_parity.rs`). The `M2_PLAN=off` oracle
     /// has no region pass to disable.
     fuse: FuseMode,
+    /// quantisation group size (columns per shared f32 scale) for the
+    /// int8/q4 weight streams (DESIGN.md §13). Inert under f32/bf16.
+    quant_group: usize,
     /// shape-keyed plans: build once per `(entrypoint, batch, t)`,
     /// execute many (DESIGN.md §7)
     plans: PlanCache,
+}
+
+/// Default columns-per-scale of the quantised weight streams; override
+/// per backend via [`ReferenceBackend::with_quant_group`] /
+/// `M2_WEIGHTS_GROUP`.
+pub const DEFAULT_QUANT_GROUP: usize = 64;
+
+fn quant_group_from_env() -> usize {
+    match std::env::var("M2_WEIGHTS_GROUP") {
+        Ok(v) => v.trim().parse().ok().filter(|&g| g > 0)
+            .unwrap_or(DEFAULT_QUANT_GROUP),
+        Err(_) => DEFAULT_QUANT_GROUP,
+    }
 }
 
 impl ReferenceBackend {
@@ -410,6 +482,7 @@ impl ReferenceBackend {
                            weights: WeightsDtype::from_env(),
                            isa: Isa::from_env(),
                            fuse: FuseMode::from_env(),
+                           quant_group: quant_group_from_env(),
                            plans: PlanCache::new() }
     }
 
@@ -424,6 +497,7 @@ impl ReferenceBackend {
                               weights: WeightsDtype::from_env(),
                               isa: Isa::from_env(),
                               fuse: FuseMode::from_env(),
+                              quant_group: quant_group_from_env(),
                               plans: PlanCache::new() })
     }
 
@@ -489,6 +563,20 @@ impl ReferenceBackend {
         self
     }
 
+    /// Pin the quantisation group size of the int8/q4 weight streams
+    /// (also reachable via `M2_WEIGHTS_GROUP=<cols>`). Default 64
+    /// columns per f32 scale; smaller groups track outliers better at
+    /// more scale bytes per weight (1 + 4/g for int8, 0.5 + 4/g for
+    /// q4 — the planner prices exactly that). Inert under f32/bf16.
+    /// Cached plans are dropped — the chosen repr records the group.
+    /// Weight packs built under another group are NOT rebuilt (they are
+    /// write-once), so set this before the first planned call.
+    pub fn with_quant_group(mut self, group: usize) -> ReferenceBackend {
+        self.quant_group = group.max(1);
+        self.plans.clear();
+        self
+    }
+
     pub fn plan_mode(&self) -> PlanMode {
         self.plan_mode
     }
@@ -503,7 +591,8 @@ impl ReferenceBackend {
         let key = PlanKey { entry, batch, t };
         self.plans.get_or_build(key, || {
             planner::build_plan(&self.cfg, key, self.threads,
-                                self.weights, self.isa, self.fuse)
+                                self.weights, self.quant_group,
+                                self.isa, self.fuse)
         })
     }
 
@@ -1311,6 +1400,7 @@ impl Clone for ReferenceBackend {
             .with_threads(self.threads)
             .with_plan_mode(self.plan_mode)
             .with_weights_dtype(self.weights)
+            .with_quant_group(self.quant_group)
             .with_isa(self.isa)
             .with_fuse(self.fuse)
     }

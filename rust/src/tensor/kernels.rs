@@ -292,6 +292,146 @@ impl Dispatch {
         }
     }
 
+    /// Group-quantised int8 B variant of [`Dispatch::matmul_acc_strided`]:
+    /// B is (k,n) row-major i8 codes with one f32 scale per `group`
+    /// columns of each row ([`quantize_i8_rows`]). Dequant happens inside
+    /// the kernel — widen code, ·scale, ·a, add — the same two-rounding
+    /// op order on every tier, so this form is **bitwise identical**
+    /// across ISAs (vector windows share one scale when `group` is a
+    /// lane multiple; otherwise the vector tiers run the scalar body).
+    #[allow(clippy::too_many_arguments)]
+    pub fn matmul_acc_strided_i8(
+        &self,
+        a: &[f32],
+        lda: usize,
+        b: &[i8],
+        scales: &[f32],
+        group: usize,
+        m: usize,
+        k: usize,
+        n: usize,
+        c: &mut [f32],
+        ldc: usize,
+    ) {
+        match self.isa {
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => unsafe {
+                avx2::matmul_acc_strided_i8(a, lda, b, scales, group, m, k,
+                                            n, c, ldc)
+            },
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => {
+                neon::matmul_acc_strided_i8(a, lda, b, scales, group, m, k,
+                                            n, c, ldc)
+            }
+            _ => scalar::matmul_acc_strided_i8(a, lda, b, scales, group, m,
+                                               k, n, c, ldc),
+        }
+    }
+
+    /// Group-quantised int8 Bᵀ variant of
+    /// [`Dispatch::matmul_bt_acc_strided`] (Bᵀ (n,k) row-major codes,
+    /// groups along k) — dot-product form, lane-reordered on vector
+    /// tiers when `group` is a lane multiple (matches [`dot_lanes`] over
+    /// the dequantised row), scalar body otherwise.
+    #[allow(clippy::too_many_arguments)]
+    pub fn matmul_bt_acc_strided_i8(
+        &self,
+        a: &[f32],
+        lda: usize,
+        bt: &[i8],
+        scales: &[f32],
+        group: usize,
+        m: usize,
+        k: usize,
+        n: usize,
+        c: &mut [f32],
+        ldc: usize,
+    ) {
+        match self.isa {
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => unsafe {
+                avx2::matmul_bt_acc_strided_i8(a, lda, bt, scales, group, m,
+                                               k, n, c, ldc)
+            },
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => {
+                neon::matmul_bt_acc_strided_i8(a, lda, bt, scales, group, m,
+                                               k, n, c, ldc)
+            }
+            _ => scalar::matmul_bt_acc_strided_i8(a, lda, bt, scales, group,
+                                                  m, k, n, c, ldc),
+        }
+    }
+
+    /// Group-quantised 4-bit B variant of
+    /// [`Dispatch::matmul_acc_strided`]: B is (k,n) row-major packed
+    /// nibbles ([`quantize_q4_rows`] — offset-8, lo nibble = even
+    /// column), one f32 scale per `group` columns. Same bitwise-across-
+    /// ISAs contract as the int8 form.
+    #[allow(clippy::too_many_arguments)]
+    pub fn matmul_acc_strided_q4(
+        &self,
+        a: &[f32],
+        lda: usize,
+        b: &[u8],
+        scales: &[f32],
+        group: usize,
+        m: usize,
+        k: usize,
+        n: usize,
+        c: &mut [f32],
+        ldc: usize,
+    ) {
+        match self.isa {
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => unsafe {
+                avx2::matmul_acc_strided_q4(a, lda, b, scales, group, m, k,
+                                            n, c, ldc)
+            },
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => {
+                neon::matmul_acc_strided_q4(a, lda, b, scales, group, m, k,
+                                            n, c, ldc)
+            }
+            _ => scalar::matmul_acc_strided_q4(a, lda, b, scales, group, m,
+                                               k, n, c, ldc),
+        }
+    }
+
+    /// Group-quantised 4-bit Bᵀ variant of
+    /// [`Dispatch::matmul_bt_acc_strided`] — lane-reordered on vector
+    /// tiers when `group` is a lane multiple, scalar body otherwise.
+    #[allow(clippy::too_many_arguments)]
+    pub fn matmul_bt_acc_strided_q4(
+        &self,
+        a: &[f32],
+        lda: usize,
+        bt: &[u8],
+        scales: &[f32],
+        group: usize,
+        m: usize,
+        k: usize,
+        n: usize,
+        c: &mut [f32],
+        ldc: usize,
+    ) {
+        match self.isa {
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => unsafe {
+                avx2::matmul_bt_acc_strided_q4(a, lda, bt, scales, group, m,
+                                               k, n, c, ldc)
+            },
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => {
+                neon::matmul_bt_acc_strided_q4(a, lda, bt, scales, group, m,
+                                               k, n, c, ldc)
+            }
+            _ => scalar::matmul_bt_acc_strided_q4(a, lda, bt, scales, group,
+                                                  m, k, n, c, ldc),
+        }
+    }
+
     /// Panel-packed variant of [`Dispatch::matmul_acc_strided`] (B from
     /// [`pack_cols`]) — bitwise identical across ISAs.
     #[allow(clippy::too_many_arguments)]
@@ -491,6 +631,95 @@ pub fn to_bf16(xs: &[f32]) -> Vec<u16> {
     xs.iter().map(|&x| f32_to_bf16(x)).collect()
 }
 
+/// Scales per row of `len` elements quantised in groups of `group`
+/// (the last group may be ragged).
+pub fn quant_groups(len: usize, group: usize) -> usize {
+    assert!(group > 0, "quant_groups: zero group");
+    len.div_ceil(group)
+}
+
+/// Packed bytes per row of `len` 4-bit codes (two nibbles per byte; an
+/// odd tail leaves the final hi nibble at the offset-8 zero code).
+pub fn q4_row_bytes(len: usize) -> usize {
+    len.div_ceil(2)
+}
+
+/// Read 4-bit code `j` out of one packed row: even columns sit in the
+/// lo nibble, odd in the hi nibble, codes stored offset-8 so the byte
+/// value 0x88 is a pair of zeros. Returns the signed code in [-8, 7]
+/// (quantisation only ever emits [-7, 7]; -8 would be a corrupt pack).
+#[inline(always)]
+pub fn q4_code(row: &[u8], j: usize) -> i32 {
+    let nib = if j % 2 == 0 { row[j / 2] & 0xF } else { row[j / 2] >> 4 };
+    nib as i32 - 8
+}
+
+/// Symmetric per-group int8 quantisation of `rows` rows of `len` f32s
+/// (row-major): per group of `group` elements along the row,
+/// `scale = max|w| / 127` and `code = round(w / scale)` — a one-time
+/// prepack like [`to_bf16`]. An all-zero group stores scale 0 and zero
+/// codes (the dequant `code·scale` is then exactly 0, never a NaN).
+/// Returns `(codes, scales)` with `scales.len() = rows ·`
+/// [`quant_groups`]`(len, group)`.
+pub fn quantize_i8_rows(w: &[f32], rows: usize, len: usize, group: usize)
+    -> (Vec<i8>, Vec<f32>) {
+    assert_eq!(w.len(), rows * len, "quantize_i8_rows: shape");
+    let gpr = quant_groups(len, group);
+    let mut codes = Vec::with_capacity(rows * len);
+    let mut scales = Vec::with_capacity(rows * gpr);
+    for row in w.chunks_exact(len) {
+        for seg in row.chunks(group) {
+            let amax = seg.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let scale = amax / 127.0;
+            scales.push(scale);
+            if scale > 0.0 {
+                for &v in seg {
+                    codes.push(
+                        (v / scale).round().clamp(-127.0, 127.0) as i8);
+                }
+            } else {
+                codes.extend(std::iter::repeat(0i8).take(seg.len()));
+            }
+        }
+    }
+    (codes, scales)
+}
+
+/// Symmetric per-group 4-bit quantisation: `scale = max|w| / 7`,
+/// `code = round(w / scale)` clamped to [-7, 7], stored offset-8 two
+/// codes per byte (even column lo nibble — [`q4_code`] is the unpack).
+/// Returns `(bytes, scales)` with `bytes.len() = rows ·`
+/// [`q4_row_bytes`]`(len)`.
+pub fn quantize_q4_rows(w: &[f32], rows: usize, len: usize, group: usize)
+    -> (Vec<u8>, Vec<f32>) {
+    assert_eq!(w.len(), rows * len, "quantize_q4_rows: shape");
+    let gpr = quant_groups(len, group);
+    let bpr = q4_row_bytes(len);
+    let mut bytes = vec![0u8; rows * bpr];
+    let mut scales = Vec::with_capacity(rows * gpr);
+    for (r, row) in w.chunks_exact(len).enumerate() {
+        let mut q = vec![0i32; len];
+        for (g, seg) in row.chunks(group).enumerate() {
+            let amax = seg.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let scale = amax / 7.0;
+            scales.push(scale);
+            if scale > 0.0 {
+                for (t, &v) in seg.iter().enumerate() {
+                    q[g * group + t] =
+                        (v / scale).round().clamp(-7.0, 7.0) as i32;
+                }
+            }
+        }
+        for (t, b) in bytes[r * bpr..(r + 1) * bpr].iter_mut().enumerate() {
+            let lo = (q[2 * t] + 8) as u8;
+            let hi =
+                if 2 * t + 1 < len { (q[2 * t + 1] + 8) as u8 } else { 8 };
+            *b = lo | (hi << 4);
+        }
+    }
+    (bytes, scales)
+}
+
 /// Repack a (k, n) row-major B into column panels of `tile` columns:
 /// panel `t` holds rows 0..k of columns [t·tile, min(n, (t+1)·tile)),
 /// row-major within the panel, panels concatenated. Total length stays
@@ -632,7 +861,7 @@ pub fn sum_sq_lanes(x: &[f32], lanes: usize) -> f32 {
 /// The portable scalar loops — PR 1's `tensor::math` bodies moved here
 /// verbatim. This tier is the bitwise oracle every golden pins.
 pub mod scalar {
-    use super::{bf16_to_f32, silu};
+    use super::{bf16_to_f32, q4_code, q4_row_bytes, quant_groups, silu};
 
     /// C (m,n) += A (m,k) @ B (k,n) with row strides: A rows start `lda`
     /// apart, C rows `ldc` apart (both row-major views into larger
@@ -748,6 +977,139 @@ pub mod scalar {
                 let mut s = 0.0f32;
                 for (x, y) in arow.iter().zip(brow) {
                     s += x * bf16_to_f32(*y);
+                }
+                c[i * ldc + j] += s;
+            }
+        }
+    }
+
+    /// [`matmul_acc_strided`] with a group-quantised int8 B operand:
+    /// B is (k, n) row-major i8 codes, `scales` holds one f32 per
+    /// `group` columns of each row ([`super::quantize_i8_rows`]).
+    /// Dequant is fused into the inner loop — per element the ops are
+    /// widen (exact), ·scale, ·a, add, in that order — and the `ikj`
+    /// order and row-block bitwise invariance of the f32 form carry
+    /// over unchanged.
+    #[allow(clippy::too_many_arguments)]
+    pub fn matmul_acc_strided_i8(a: &[f32], lda: usize, b: &[i8],
+                                 scales: &[f32], group: usize, m: usize,
+                                 k: usize, n: usize, c: &mut [f32],
+                                 ldc: usize) {
+        assert!(lda >= k && ldc >= n,
+                "matmul_acc_strided_i8: stride < row");
+        assert!(m == 0 || a.len() >= (m - 1) * lda + k,
+                "matmul_acc_strided_i8: A view");
+        assert!(m == 0 || c.len() >= (m - 1) * ldc + n,
+                "matmul_acc_strided_i8: C view");
+        assert_eq!(b.len(), k * n, "matmul_acc_strided_i8: B shape");
+        let gpr = quant_groups(n, group);
+        assert_eq!(scales.len(), k * gpr,
+                   "matmul_acc_strided_i8: scales shape");
+        for i in 0..m {
+            let arow = &a[i * lda..i * lda + k];
+            let crow = &mut c[i * ldc..i * ldc + n];
+            for (p, &aip) in arow.iter().enumerate() {
+                let brow = &b[p * n..(p + 1) * n];
+                let srow = &scales[p * gpr..(p + 1) * gpr];
+                for (j, (cv, bv)) in crow.iter_mut().zip(brow).enumerate() {
+                    *cv += aip * (*bv as f32 * srow[j / group]);
+                }
+            }
+        }
+    }
+
+    /// [`matmul_bt_acc_strided`] with a group-quantised int8 Bᵀ operand
+    /// ((n, k) row-major codes, groups along k): sequential dot with
+    /// fused dequant — the quantised lm-head stream form.
+    #[allow(clippy::too_many_arguments)]
+    pub fn matmul_bt_acc_strided_i8(a: &[f32], lda: usize, bt: &[i8],
+                                    scales: &[f32], group: usize, m: usize,
+                                    k: usize, n: usize, c: &mut [f32],
+                                    ldc: usize) {
+        assert!(lda >= k && ldc >= n,
+                "matmul_bt_acc_strided_i8: stride < row");
+        assert!(m == 0 || a.len() >= (m - 1) * lda + k,
+                "matmul_bt_acc_strided_i8: A view");
+        assert!(m == 0 || c.len() >= (m - 1) * ldc + n,
+                "matmul_bt_acc_strided_i8: C view");
+        assert_eq!(bt.len(), n * k, "matmul_bt_acc_strided_i8: B shape");
+        let gpr = quant_groups(k, group);
+        assert_eq!(scales.len(), n * gpr,
+                   "matmul_bt_acc_strided_i8: scales shape");
+        for i in 0..m {
+            let arow = &a[i * lda..i * lda + k];
+            for j in 0..n {
+                let brow = &bt[j * k..(j + 1) * k];
+                let srow = &scales[j * gpr..(j + 1) * gpr];
+                let mut s = 0.0f32;
+                for (t, (x, q)) in arow.iter().zip(brow).enumerate() {
+                    s += x * (*q as f32 * srow[t / group]);
+                }
+                c[i * ldc + j] += s;
+            }
+        }
+    }
+
+    /// [`matmul_acc_strided`] with a group-quantised 4-bit B operand:
+    /// B is (k, n) row-major packed nibbles ([`super::quantize_q4_rows`]
+    /// — offset-8, even column in the lo nibble), dequantised in the
+    /// inner loop with the same op order as the int8 form.
+    #[allow(clippy::too_many_arguments)]
+    pub fn matmul_acc_strided_q4(a: &[f32], lda: usize, b: &[u8],
+                                 scales: &[f32], group: usize, m: usize,
+                                 k: usize, n: usize, c: &mut [f32],
+                                 ldc: usize) {
+        assert!(lda >= k && ldc >= n,
+                "matmul_acc_strided_q4: stride < row");
+        assert!(m == 0 || a.len() >= (m - 1) * lda + k,
+                "matmul_acc_strided_q4: A view");
+        assert!(m == 0 || c.len() >= (m - 1) * ldc + n,
+                "matmul_acc_strided_q4: C view");
+        let bpr = q4_row_bytes(n);
+        assert_eq!(b.len(), k * bpr, "matmul_acc_strided_q4: B shape");
+        let gpr = quant_groups(n, group);
+        assert_eq!(scales.len(), k * gpr,
+                   "matmul_acc_strided_q4: scales shape");
+        for i in 0..m {
+            let arow = &a[i * lda..i * lda + k];
+            let crow = &mut c[i * ldc..i * ldc + n];
+            for (p, &aip) in arow.iter().enumerate() {
+                let brow = &b[p * bpr..(p + 1) * bpr];
+                let srow = &scales[p * gpr..(p + 1) * gpr];
+                for (j, cv) in crow.iter_mut().enumerate() {
+                    *cv += aip
+                        * (q4_code(brow, j) as f32 * srow[j / group]);
+                }
+            }
+        }
+    }
+
+    /// [`matmul_bt_acc_strided`] with a group-quantised 4-bit Bᵀ
+    /// operand ((n, k) rows of packed nibbles, groups along k).
+    #[allow(clippy::too_many_arguments)]
+    pub fn matmul_bt_acc_strided_q4(a: &[f32], lda: usize, bt: &[u8],
+                                    scales: &[f32], group: usize, m: usize,
+                                    k: usize, n: usize, c: &mut [f32],
+                                    ldc: usize) {
+        assert!(lda >= k && ldc >= n,
+                "matmul_bt_acc_strided_q4: stride < row");
+        assert!(m == 0 || a.len() >= (m - 1) * lda + k,
+                "matmul_bt_acc_strided_q4: A view");
+        assert!(m == 0 || c.len() >= (m - 1) * ldc + n,
+                "matmul_bt_acc_strided_q4: C view");
+        let bpr = q4_row_bytes(k);
+        assert_eq!(bt.len(), n * bpr, "matmul_bt_acc_strided_q4: B shape");
+        let gpr = quant_groups(k, group);
+        assert_eq!(scales.len(), n * gpr,
+                   "matmul_bt_acc_strided_q4: scales shape");
+        for i in 0..m {
+            let arow = &a[i * lda..i * lda + k];
+            for j in 0..n {
+                let brow = &bt[j * bpr..(j + 1) * bpr];
+                let srow = &scales[j * gpr..(j + 1) * gpr];
+                let mut s = 0.0f32;
+                for (t, x) in arow.iter().enumerate() {
+                    s += x * (q4_code(brow, t) as f32 * srow[t / group]);
                 }
                 c[i * ldc + j] += s;
             }
@@ -899,9 +1261,10 @@ pub mod scalar {
 #[cfg(target_arch = "x86_64")]
 #[allow(clippy::too_many_arguments, clippy::missing_safety_doc)]
 mod avx2 {
-    use super::{bf16_to_f32, silu_poly, EXP_C0, EXP_C1, EXP_C2, EXP_C3,
-                EXP_C4, EXP_C5, EXP_HI, EXP_LN2_HI, EXP_LN2_LO, EXP_LO,
-                EXP_LOG2E, EXP_MAGIC};
+    use super::{bf16_to_f32, q4_code, q4_row_bytes, quant_groups,
+                silu_poly, EXP_C0, EXP_C1, EXP_C2, EXP_C3, EXP_C4, EXP_C5,
+                EXP_HI, EXP_LN2_HI, EXP_LN2_LO, EXP_LO, EXP_LOG2E,
+                EXP_MAGIC};
     use std::arch::x86_64::*;
 
     const LANES: usize = 8;
@@ -1075,6 +1438,239 @@ mod avx2 {
                 c[i * ldc + j] += dot_bf16(arow, &bt[j * k..(j + 1) * k]);
             }
         }
+    }
+
+    /// Widen 8 i8 codes to f32 lanes (exact).
+    #[target_feature(enable = "avx2")]
+    unsafe fn widen_i8(p: *const i8) -> __m256 {
+        let q = _mm_loadl_epi64(p as *const __m128i);
+        _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(q))
+    }
+
+    /// Widen 8 packed 4-bit codes (4 bytes, little-endian — code `e` of
+    /// the window is bits [4e, 4e+4)) to f32 lanes: splat the u32,
+    /// per-lane variable shift, mask, un-offset.
+    #[target_feature(enable = "avx2")]
+    unsafe fn widen_q4(p: *const u8) -> __m256 {
+        let raw = (p as *const u32).read_unaligned();
+        let v = _mm256_set1_epi32(raw as i32);
+        let sh = _mm256_setr_epi32(0, 4, 8, 12, 16, 20, 24, 28);
+        let nib = _mm256_and_si256(_mm256_srlv_epi32(v, sh),
+                                   _mm256_set1_epi32(0xF));
+        _mm256_cvtepi32_ps(_mm256_sub_epi32(nib, _mm256_set1_epi32(8)))
+    }
+
+    /// Vector windows dequantise with one splatted scale, so the tier
+    /// only vectorises when every aligned 8-lane window sits inside one
+    /// scale group; other group sizes run the scalar body (still exact —
+    /// the op order per element is identical either way).
+    fn group_vectorises(group: usize) -> bool {
+        group % LANES == 0
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn matmul_acc_strided_i8(a: &[f32], lda: usize, b: &[i8],
+                                        scales: &[f32], group: usize,
+                                        m: usize, k: usize, n: usize,
+                                        c: &mut [f32], ldc: usize) {
+        if !group_vectorises(group) {
+            return super::scalar::matmul_acc_strided_i8(
+                a, lda, b, scales, group, m, k, n, c, ldc);
+        }
+        assert!(lda >= k && ldc >= n,
+                "matmul_acc_strided_i8: stride < row");
+        assert!(m == 0 || a.len() >= (m - 1) * lda + k,
+                "matmul_acc_strided_i8: A view");
+        assert!(m == 0 || c.len() >= (m - 1) * ldc + n,
+                "matmul_acc_strided_i8: C view");
+        assert_eq!(b.len(), k * n, "matmul_acc_strided_i8: B shape");
+        let gpr = quant_groups(n, group);
+        assert_eq!(scales.len(), k * gpr,
+                   "matmul_acc_strided_i8: scales shape");
+        for i in 0..m {
+            let arow = &a[i * lda..i * lda + k];
+            let cptr = c.as_mut_ptr().add(i * ldc);
+            for (p, &aip) in arow.iter().enumerate() {
+                let bptr = b.as_ptr().add(p * n);
+                let srow = &scales[p * gpr..(p + 1) * gpr];
+                let va = _mm256_set1_ps(aip);
+                let mut j = 0;
+                while j + LANES <= n {
+                    let vs = _mm256_set1_ps(srow[j / group]);
+                    let w = _mm256_mul_ps(widen_i8(bptr.add(j)), vs);
+                    let vc = _mm256_loadu_ps(cptr.add(j));
+                    _mm256_storeu_ps(
+                        cptr.add(j),
+                        _mm256_add_ps(vc, _mm256_mul_ps(va, w)));
+                    j += LANES;
+                }
+                while j < n {
+                    *cptr.add(j) +=
+                        aip * (*bptr.add(j) as f32 * srow[j / group]);
+                    j += 1;
+                }
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn matmul_bt_acc_strided_i8(a: &[f32], lda: usize,
+                                           bt: &[i8], scales: &[f32],
+                                           group: usize, m: usize,
+                                           k: usize, n: usize,
+                                           c: &mut [f32], ldc: usize) {
+        if !group_vectorises(group) {
+            return super::scalar::matmul_bt_acc_strided_i8(
+                a, lda, bt, scales, group, m, k, n, c, ldc);
+        }
+        assert!(lda >= k && ldc >= n,
+                "matmul_bt_acc_strided_i8: stride < row");
+        assert!(m == 0 || a.len() >= (m - 1) * lda + k,
+                "matmul_bt_acc_strided_i8: A view");
+        assert!(m == 0 || c.len() >= (m - 1) * ldc + n,
+                "matmul_bt_acc_strided_i8: C view");
+        assert_eq!(bt.len(), n * k, "matmul_bt_acc_strided_i8: B shape");
+        let gpr = quant_groups(k, group);
+        assert_eq!(scales.len(), n * gpr,
+                   "matmul_bt_acc_strided_i8: scales shape");
+        for i in 0..m {
+            let arow = &a[i * lda..i * lda + k];
+            for j in 0..n {
+                c[i * ldc + j] += dot_i8(
+                    arow, &bt[j * k..(j + 1) * k],
+                    &scales[j * gpr..(j + 1) * gpr], group);
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn matmul_acc_strided_q4(a: &[f32], lda: usize, b: &[u8],
+                                        scales: &[f32], group: usize,
+                                        m: usize, k: usize, n: usize,
+                                        c: &mut [f32], ldc: usize) {
+        if !group_vectorises(group) {
+            return super::scalar::matmul_acc_strided_q4(
+                a, lda, b, scales, group, m, k, n, c, ldc);
+        }
+        assert!(lda >= k && ldc >= n,
+                "matmul_acc_strided_q4: stride < row");
+        assert!(m == 0 || a.len() >= (m - 1) * lda + k,
+                "matmul_acc_strided_q4: A view");
+        assert!(m == 0 || c.len() >= (m - 1) * ldc + n,
+                "matmul_acc_strided_q4: C view");
+        let bpr = q4_row_bytes(n);
+        assert_eq!(b.len(), k * bpr, "matmul_acc_strided_q4: B shape");
+        let gpr = quant_groups(n, group);
+        assert_eq!(scales.len(), k * gpr,
+                   "matmul_acc_strided_q4: scales shape");
+        for i in 0..m {
+            let arow = &a[i * lda..i * lda + k];
+            let cptr = c.as_mut_ptr().add(i * ldc);
+            for (p, &aip) in arow.iter().enumerate() {
+                let brow = &b[p * bpr..(p + 1) * bpr];
+                let srow = &scales[p * gpr..(p + 1) * gpr];
+                let va = _mm256_set1_ps(aip);
+                let mut j = 0;
+                while j + LANES <= n {
+                    let vs = _mm256_set1_ps(srow[j / group]);
+                    let w = _mm256_mul_ps(
+                        widen_q4(brow.as_ptr().add(j / 2)), vs);
+                    let vc = _mm256_loadu_ps(cptr.add(j));
+                    _mm256_storeu_ps(
+                        cptr.add(j),
+                        _mm256_add_ps(vc, _mm256_mul_ps(va, w)));
+                    j += LANES;
+                }
+                while j < n {
+                    *cptr.add(j) +=
+                        aip * (q4_code(brow, j) as f32 * srow[j / group]);
+                    j += 1;
+                }
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn matmul_bt_acc_strided_q4(a: &[f32], lda: usize,
+                                           bt: &[u8], scales: &[f32],
+                                           group: usize, m: usize,
+                                           k: usize, n: usize,
+                                           c: &mut [f32], ldc: usize) {
+        if !group_vectorises(group) {
+            return super::scalar::matmul_bt_acc_strided_q4(
+                a, lda, bt, scales, group, m, k, n, c, ldc);
+        }
+        assert!(lda >= k && ldc >= n,
+                "matmul_bt_acc_strided_q4: stride < row");
+        assert!(m == 0 || a.len() >= (m - 1) * lda + k,
+                "matmul_bt_acc_strided_q4: A view");
+        assert!(m == 0 || c.len() >= (m - 1) * ldc + n,
+                "matmul_bt_acc_strided_q4: C view");
+        let bpr = q4_row_bytes(k);
+        assert_eq!(bt.len(), n * bpr, "matmul_bt_acc_strided_q4: B shape");
+        let gpr = quant_groups(k, group);
+        assert_eq!(scales.len(), n * gpr,
+                   "matmul_bt_acc_strided_q4: scales shape");
+        for i in 0..m {
+            let arow = &a[i * lda..i * lda + k];
+            for j in 0..n {
+                c[i * ldc + j] += dot_q4(
+                    arow, &bt[j * bpr..(j + 1) * bpr],
+                    &scales[j * gpr..(j + 1) * gpr], group);
+            }
+        }
+    }
+
+    /// 8-lane dot over a dequantised int8 row: per lane
+    /// `a · (code · scale)`, [`hsum`] fold, sequential tail — equals
+    /// `dot_lanes(a, dequant(row), 8)` bitwise. Caller guarantees
+    /// `group % 8 == 0` so each window shares one scale.
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot_i8(a: &[f32], bt: &[i8], scales: &[f32], group: usize)
+        -> f32 {
+        debug_assert_eq!(a.len(), bt.len());
+        let n = a.len();
+        let (pa, pb) = (a.as_ptr(), bt.as_ptr());
+        let mut acc = _mm256_setzero_ps();
+        let mut j = 0;
+        while j + LANES <= n {
+            let va = _mm256_loadu_ps(pa.add(j));
+            let vs = _mm256_set1_ps(scales[j / group]);
+            let w = _mm256_mul_ps(widen_i8(pb.add(j)), vs);
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(va, w));
+            j += LANES;
+        }
+        let mut s = hsum(acc);
+        while j < n {
+            s += *pa.add(j) * (*pb.add(j) as f32 * scales[j / group]);
+            j += 1;
+        }
+        s
+    }
+
+    /// 8-lane dot over a dequantised q4 row (same contract as
+    /// [`dot_i8`]).
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot_q4(a: &[f32], brow: &[u8], scales: &[f32], group: usize)
+        -> f32 {
+        let n = a.len();
+        debug_assert_eq!(brow.len(), q4_row_bytes(n));
+        let pa = a.as_ptr();
+        let mut acc = _mm256_setzero_ps();
+        let mut j = 0;
+        while j + LANES <= n {
+            let va = _mm256_loadu_ps(pa.add(j));
+            let vs = _mm256_set1_ps(scales[j / group]);
+            let w = _mm256_mul_ps(widen_q4(brow.as_ptr().add(j / 2)), vs);
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(va, w));
+            j += LANES;
+        }
+        let mut s = hsum(acc);
+        while j < n {
+            s += *pa.add(j) * (q4_code(brow, j) as f32 * scales[j / group]);
+            j += 1;
+        }
+        s
     }
 
     #[target_feature(enable = "avx2")]
@@ -1299,9 +1895,10 @@ mod avx2 {
 #[cfg(target_arch = "aarch64")]
 #[allow(clippy::too_many_arguments, clippy::missing_safety_doc)]
 mod neon {
-    use super::{bf16_to_f32, silu_poly, EXP_C0, EXP_C1, EXP_C2, EXP_C3,
-                EXP_C4, EXP_C5, EXP_HI, EXP_LN2_HI, EXP_LN2_LO, EXP_LO,
-                EXP_LOG2E, EXP_MAGIC};
+    use super::{bf16_to_f32, q4_code, q4_row_bytes, quant_groups,
+                silu_poly, EXP_C0, EXP_C1, EXP_C2, EXP_C3, EXP_C4, EXP_C5,
+                EXP_HI, EXP_LN2_HI, EXP_LN2_LO, EXP_LO, EXP_LOG2E,
+                EXP_MAGIC};
     use std::arch::aarch64::*;
 
     const LANES: usize = 4;
@@ -1462,6 +2059,233 @@ mod neon {
             for j in 0..n {
                 c[i * ldc + j] += dot_bf16(arow, &bt[j * k..(j + 1) * k]);
             }
+        }
+    }
+
+    /// Widen 4 i8 codes to f32 lanes (exact).
+    #[inline]
+    unsafe fn widen_i8(p: *const i8) -> float32x4_t {
+        let raw = (p as *const u32).read_unaligned();
+        let q8 = vreinterpret_s8_u8(vcreate_u8(raw as u64));
+        vcvtq_f32_s32(vmovl_s16(vget_low_s16(vmovl_s8(q8))))
+    }
+
+    /// Widen 4 packed 4-bit codes (2 bytes — code `e` of the window is
+    /// bits [4e, 4e+4)) to f32 lanes: splat the u16, per-lane right
+    /// shift (vshl with negative counts), mask, un-offset.
+    #[inline]
+    unsafe fn widen_q4(p: *const u8) -> float32x4_t {
+        let raw = (p as *const u16).read_unaligned() as u32;
+        let sh = vld1q_s32([0i32, -4, -8, -12].as_ptr());
+        let nib = vandq_u32(vshlq_u32(vdupq_n_u32(raw), sh),
+                            vdupq_n_u32(0xF));
+        vcvtq_f32_s32(vsubq_s32(vreinterpretq_s32_u32(nib),
+                                vdupq_n_s32(8)))
+    }
+
+    /// Same vectorisation guard as the AVX2 tier, at 4 lanes.
+    fn group_vectorises(group: usize) -> bool {
+        group % LANES == 0
+    }
+
+    pub fn matmul_acc_strided_i8(a: &[f32], lda: usize, b: &[i8],
+                                 scales: &[f32], group: usize, m: usize,
+                                 k: usize, n: usize, c: &mut [f32],
+                                 ldc: usize) {
+        if !group_vectorises(group) {
+            return super::scalar::matmul_acc_strided_i8(
+                a, lda, b, scales, group, m, k, n, c, ldc);
+        }
+        assert!(lda >= k && ldc >= n,
+                "matmul_acc_strided_i8: stride < row");
+        assert!(m == 0 || a.len() >= (m - 1) * lda + k,
+                "matmul_acc_strided_i8: A view");
+        assert!(m == 0 || c.len() >= (m - 1) * ldc + n,
+                "matmul_acc_strided_i8: C view");
+        assert_eq!(b.len(), k * n, "matmul_acc_strided_i8: B shape");
+        let gpr = quant_groups(n, group);
+        assert_eq!(scales.len(), k * gpr,
+                   "matmul_acc_strided_i8: scales shape");
+        for i in 0..m {
+            let arow = &a[i * lda..i * lda + k];
+            for (p, &aip) in arow.iter().enumerate() {
+                let srow = &scales[p * gpr..(p + 1) * gpr];
+                unsafe {
+                    let bptr = b.as_ptr().add(p * n);
+                    let cptr = c.as_mut_ptr().add(i * ldc);
+                    let va = vdupq_n_f32(aip);
+                    let mut j = 0;
+                    while j + LANES <= n {
+                        let vs = vdupq_n_f32(srow[j / group]);
+                        let w = vmulq_f32(widen_i8(bptr.add(j)), vs);
+                        let vc = vld1q_f32(cptr.add(j));
+                        vst1q_f32(cptr.add(j),
+                                  vaddq_f32(vc, vmulq_f32(va, w)));
+                        j += LANES;
+                    }
+                    while j < n {
+                        *cptr.add(j) +=
+                            aip * (*bptr.add(j) as f32 * srow[j / group]);
+                        j += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn matmul_bt_acc_strided_i8(a: &[f32], lda: usize, bt: &[i8],
+                                    scales: &[f32], group: usize, m: usize,
+                                    k: usize, n: usize, c: &mut [f32],
+                                    ldc: usize) {
+        if !group_vectorises(group) {
+            return super::scalar::matmul_bt_acc_strided_i8(
+                a, lda, bt, scales, group, m, k, n, c, ldc);
+        }
+        assert!(lda >= k && ldc >= n,
+                "matmul_bt_acc_strided_i8: stride < row");
+        assert!(m == 0 || a.len() >= (m - 1) * lda + k,
+                "matmul_bt_acc_strided_i8: A view");
+        assert!(m == 0 || c.len() >= (m - 1) * ldc + n,
+                "matmul_bt_acc_strided_i8: C view");
+        assert_eq!(bt.len(), n * k, "matmul_bt_acc_strided_i8: B shape");
+        let gpr = quant_groups(k, group);
+        assert_eq!(scales.len(), n * gpr,
+                   "matmul_bt_acc_strided_i8: scales shape");
+        for i in 0..m {
+            let arow = &a[i * lda..i * lda + k];
+            for j in 0..n {
+                c[i * ldc + j] += dot_i8(
+                    arow, &bt[j * k..(j + 1) * k],
+                    &scales[j * gpr..(j + 1) * gpr], group);
+            }
+        }
+    }
+
+    pub fn matmul_acc_strided_q4(a: &[f32], lda: usize, b: &[u8],
+                                 scales: &[f32], group: usize, m: usize,
+                                 k: usize, n: usize, c: &mut [f32],
+                                 ldc: usize) {
+        if !group_vectorises(group) {
+            return super::scalar::matmul_acc_strided_q4(
+                a, lda, b, scales, group, m, k, n, c, ldc);
+        }
+        assert!(lda >= k && ldc >= n,
+                "matmul_acc_strided_q4: stride < row");
+        assert!(m == 0 || a.len() >= (m - 1) * lda + k,
+                "matmul_acc_strided_q4: A view");
+        assert!(m == 0 || c.len() >= (m - 1) * ldc + n,
+                "matmul_acc_strided_q4: C view");
+        let bpr = q4_row_bytes(n);
+        assert_eq!(b.len(), k * bpr, "matmul_acc_strided_q4: B shape");
+        let gpr = quant_groups(n, group);
+        assert_eq!(scales.len(), k * gpr,
+                   "matmul_acc_strided_q4: scales shape");
+        for i in 0..m {
+            let arow = &a[i * lda..i * lda + k];
+            for (p, &aip) in arow.iter().enumerate() {
+                let brow = &b[p * bpr..(p + 1) * bpr];
+                let srow = &scales[p * gpr..(p + 1) * gpr];
+                unsafe {
+                    let cptr = c.as_mut_ptr().add(i * ldc);
+                    let va = vdupq_n_f32(aip);
+                    let mut j = 0;
+                    while j + LANES <= n {
+                        let vs = vdupq_n_f32(srow[j / group]);
+                        let w = vmulq_f32(
+                            widen_q4(brow.as_ptr().add(j / 2)), vs);
+                        let vc = vld1q_f32(cptr.add(j));
+                        vst1q_f32(cptr.add(j),
+                                  vaddq_f32(vc, vmulq_f32(va, w)));
+                        j += LANES;
+                    }
+                    while j < n {
+                        *cptr.add(j) += aip
+                            * (q4_code(brow, j) as f32 * srow[j / group]);
+                        j += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn matmul_bt_acc_strided_q4(a: &[f32], lda: usize, bt: &[u8],
+                                    scales: &[f32], group: usize, m: usize,
+                                    k: usize, n: usize, c: &mut [f32],
+                                    ldc: usize) {
+        if !group_vectorises(group) {
+            return super::scalar::matmul_bt_acc_strided_q4(
+                a, lda, bt, scales, group, m, k, n, c, ldc);
+        }
+        assert!(lda >= k && ldc >= n,
+                "matmul_bt_acc_strided_q4: stride < row");
+        assert!(m == 0 || a.len() >= (m - 1) * lda + k,
+                "matmul_bt_acc_strided_q4: A view");
+        assert!(m == 0 || c.len() >= (m - 1) * ldc + n,
+                "matmul_bt_acc_strided_q4: C view");
+        let bpr = q4_row_bytes(k);
+        assert_eq!(bt.len(), n * bpr, "matmul_bt_acc_strided_q4: B shape");
+        let gpr = quant_groups(k, group);
+        assert_eq!(scales.len(), n * gpr,
+                   "matmul_bt_acc_strided_q4: scales shape");
+        for i in 0..m {
+            let arow = &a[i * lda..i * lda + k];
+            for j in 0..n {
+                c[i * ldc + j] += dot_q4(
+                    arow, &bt[j * bpr..(j + 1) * bpr],
+                    &scales[j * gpr..(j + 1) * gpr], group);
+            }
+        }
+    }
+
+    /// 4-lane dot over a dequantised int8 row — equals
+    /// `dot_lanes(a, dequant(row), 4)` bitwise (`group % 4 == 0`).
+    fn dot_i8(a: &[f32], bt: &[i8], scales: &[f32], group: usize) -> f32 {
+        debug_assert_eq!(a.len(), bt.len());
+        let n = a.len();
+        unsafe {
+            let (pa, pb) = (a.as_ptr(), bt.as_ptr());
+            let mut acc = vdupq_n_f32(0.0);
+            let mut j = 0;
+            while j + LANES <= n {
+                let va = vld1q_f32(pa.add(j));
+                let vs = vdupq_n_f32(scales[j / group]);
+                let w = vmulq_f32(widen_i8(pb.add(j)), vs);
+                acc = vaddq_f32(acc, vmulq_f32(va, w));
+                j += LANES;
+            }
+            let mut s = hsum(acc);
+            while j < n {
+                s += *pa.add(j) * (*pb.add(j) as f32 * scales[j / group]);
+                j += 1;
+            }
+            s
+        }
+    }
+
+    /// 4-lane dot over a dequantised q4 row (same contract as
+    /// [`dot_i8`]).
+    fn dot_q4(a: &[f32], brow: &[u8], scales: &[f32], group: usize)
+        -> f32 {
+        let n = a.len();
+        debug_assert_eq!(brow.len(), q4_row_bytes(n));
+        unsafe {
+            let pa = a.as_ptr();
+            let mut acc = vdupq_n_f32(0.0);
+            let mut j = 0;
+            while j + LANES <= n {
+                let va = vld1q_f32(pa.add(j));
+                let vs = vdupq_n_f32(scales[j / group]);
+                let w = vmulq_f32(widen_q4(brow.as_ptr().add(j / 2)), vs);
+                acc = vaddq_f32(acc, vmulq_f32(va, w));
+                j += LANES;
+            }
+            let mut s = hsum(acc);
+            while j < n {
+                s += *pa.add(j)
+                    * (q4_code(brow, j) as f32 * scales[j / group]);
+                j += 1;
+            }
+            s
         }
     }
 
@@ -2245,6 +3069,249 @@ mod tests {
             let want: Vec<f32> = x0.iter().zip(&z)
                 .map(|(&xv, &zv)| xv * silu_poly(zv)).collect();
             assert_eq!(gated, want, "silu_gate_rows len={len}");
+        }
+    }
+
+    // --------------------------------------- group-quantised kernels --
+
+    fn deq_i8(codes: &[i8], scales: &[f32], rows: usize, len: usize,
+              group: usize) -> Vec<f32> {
+        let gpr = quant_groups(len, group);
+        (0..rows * len)
+            .map(|idx| {
+                let (r, j) = (idx / len, idx % len);
+                codes[idx] as f32 * scales[r * gpr + j / group]
+            })
+            .collect()
+    }
+
+    fn deq_q4(bytes: &[u8], scales: &[f32], rows: usize, len: usize,
+              group: usize) -> Vec<f32> {
+        let gpr = quant_groups(len, group);
+        let bpr = q4_row_bytes(len);
+        (0..rows * len)
+            .map(|idx| {
+                let (r, j) = (idx / len, idx % len);
+                q4_code(&bytes[r * bpr..(r + 1) * bpr], j) as f32
+                    * scales[r * gpr + j / group]
+            })
+            .collect()
+    }
+
+    #[test]
+    fn quantize_i8_round_trips_on_grid_values() {
+        // values already on the code grid with a power-of-two scale
+        // survive quantisation exactly: amax = 127·2⁻³ makes the group
+        // scale exactly 2⁻³, and round(v/scale) recovers each code
+        let codes: Vec<i32> = vec![127, -127, 3, -64, 0, 5, 100, -1];
+        let w: Vec<f32> = codes.iter().map(|&c| c as f32 * 0.125).collect();
+        let (q, s) = quantize_i8_rows(&w, 1, w.len(), 4);
+        assert_eq!(s, vec![0.125, 0.125]);
+        assert_eq!(q.iter().map(|&v| v as i32).collect::<Vec<_>>(), codes);
+        assert_eq!(deq_i8(&q, &s, 1, w.len(), 4), w);
+    }
+
+    #[test]
+    fn quantize_q4_layout_and_tail() {
+        // codes [3, -5, 7] at scale 1: offset-8 nibbles 0xB, 0x3, 0xF,
+        // even column in the lo nibble, odd tail hi nibble = 8 (zero)
+        let (b, s) = quantize_q4_rows(&[3.0, -5.0, 7.0], 1, 3, 4);
+        assert_eq!(s, vec![1.0]);
+        assert_eq!(b, vec![0x3B, 0x8F]);
+        assert_eq!(q4_code(&b, 0), 3);
+        assert_eq!(q4_code(&b, 1), -5);
+        assert_eq!(q4_code(&b, 2), 7);
+        assert_eq!(q4_row_bytes(3), 2);
+        assert_eq!(quant_groups(3, 4), 1);
+    }
+
+    #[test]
+    fn quantize_handles_zero_groups_and_clamps() {
+        let (q, s) = quantize_i8_rows(&[0.0; 6], 2, 3, 2);
+        assert!(q.iter().all(|&v| v == 0));
+        assert!(s.iter().all(|&v| v == 0.0));
+        assert_eq!(s.len(), 4);
+        let (b, s) = quantize_q4_rows(&[0.0; 4], 1, 4, 2);
+        assert!(b.iter().all(|&v| v == 0x88), "zero pair is 0x88");
+        assert!(s.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn prop_quantised_matmul_equals_dequantised_dense() {
+        // the fused-dequant contract: the quantised kernels must equal
+        // the f32 kernels run on the pre-dequantised matrix BITWISE —
+        // dequant (code·scale) happens before the a· multiply, exactly
+        // like the pack-time rounding of the bf16 path
+        let mut rng = Rng::new(0x0148);
+        for group in [2usize, 4, 8, 32] {
+            for _ in 0..30 {
+                let m = 1 + rng.below(5) as usize;
+                let k = 1 + rng.below(10) as usize;
+                let n = 1 + rng.below(20) as usize;
+                let a = rand_vec(&mut rng, m * k);
+                let b = rand_vec(&mut rng, k * n);
+                let cinit = rand_vec(&mut rng, m * n);
+
+                let (qi, si) = quantize_i8_rows(&b, k, n, group);
+                let deq = deq_i8(&qi, &si, k, n, group);
+                let mut want = cinit.clone();
+                scalar::matmul_acc_strided(&a, k, &deq, m, k, n, &mut want,
+                                           n);
+                let mut got = cinit.clone();
+                scalar::matmul_acc_strided_i8(&a, k, &qi, &si, group, m, k,
+                                              n, &mut got, n);
+                assert_eq!(got, want, "i8 g={group} m={m} k={k} n={n}");
+
+                let (qb, sb) = quantize_q4_rows(&b, k, n, group);
+                let deq = deq_q4(&qb, &sb, k, n, group);
+                let mut want = cinit.clone();
+                scalar::matmul_acc_strided(&a, k, &deq, m, k, n, &mut want,
+                                           n);
+                let mut got = cinit.clone();
+                scalar::matmul_acc_strided_q4(&a, k, &qb, &sb, group, m, k,
+                                              n, &mut got, n);
+                assert_eq!(got, want, "q4 g={group} m={m} k={k} n={n}");
+
+                let bt = rand_vec(&mut rng, n * k);
+                let (qi, si) = quantize_i8_rows(&bt, n, k, group);
+                let deq = deq_i8(&qi, &si, n, k, group);
+                let mut want = cinit.clone();
+                scalar::matmul_bt_acc_strided(&a, k, &deq, m, k, n,
+                                              &mut want, n);
+                let mut got = cinit.clone();
+                scalar::matmul_bt_acc_strided_i8(&a, k, &qi, &si, group, m,
+                                                 k, n, &mut got, n);
+                assert_eq!(got, want, "i8 bt g={group} m={m} k={k} n={n}");
+
+                let (qb, sb) = quantize_q4_rows(&bt, n, k, group);
+                let deq = deq_q4(&qb, &sb, n, k, group);
+                let mut want = cinit.clone();
+                scalar::matmul_bt_acc_strided(&a, k, &deq, m, k, n,
+                                              &mut want, n);
+                let mut got = cinit.clone();
+                scalar::matmul_bt_acc_strided_q4(&a, k, &qb, &sb, group, m,
+                                                 k, n, &mut got, n);
+                assert_eq!(got, want, "q4 bt g={group} m={m} k={k} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantisation_error_is_bounded_by_half_step() {
+        // |w - deq(quant(w))| ≤ scale/2 per element (symmetric rounding)
+        let mut rng = Rng::new(0x0149);
+        let w = rand_vec(&mut rng, 4 * 64);
+        for group in [32usize, 64] {
+            let (q, s) = quantize_i8_rows(&w, 4, 64, group);
+            let deq = deq_i8(&q, &s, 4, 64, group);
+            let gpr = quant_groups(64, group);
+            for (idx, (&wv, &dv)) in w.iter().zip(&deq).enumerate() {
+                let sc = s[(idx / 64) * gpr + (idx % 64) / group];
+                assert!((wv - dv).abs() <= sc * 0.5 + 1e-12,
+                        "i8 idx={idx}");
+            }
+            let (b, s) = quantize_q4_rows(&w, 4, 64, group);
+            let deq = deq_q4(&b, &s, 4, 64, group);
+            for (idx, (&wv, &dv)) in w.iter().zip(&deq).enumerate() {
+                let sc = s[(idx / 64) * gpr + (idx % 64) / group];
+                assert!((wv - dv).abs() <= sc * 0.5 + 1e-12,
+                        "q4 idx={idx}");
+            }
+        }
+    }
+
+    /// Broadcast-form quantised kernels are bitwise scalar on the
+    /// detected tier (vector windows share one scale; op order per
+    /// element is unchanged) — for lane-multiple groups AND for groups
+    /// that force the scalar-body fallback.
+    #[test]
+    fn detected_tier_quantised_broadcast_kernels_are_bitwise_scalar() {
+        let d = Dispatch::new(Isa::detect());
+        let s = Dispatch::scalar();
+        let mut rng = Rng::new(0x014A);
+        for group in [3usize, 8, 32, 64] {
+            for _ in 0..20 {
+                let m = 1 + rng.below(5) as usize;
+                let k = 1 + rng.below(8) as usize;
+                let n = 1 + rng.below(40) as usize;
+                let lda = k + rng.below(3) as usize;
+                let ldc = n + rng.below(3) as usize;
+                let a = rand_vec(&mut rng, m * lda);
+                let b = rand_vec(&mut rng, k * n);
+                let cinit = rand_vec(&mut rng, m * ldc);
+
+                let (qi, si) = quantize_i8_rows(&b, k, n, group);
+                let mut want = cinit.clone();
+                s.matmul_acc_strided_i8(&a, lda, &qi, &si, group, m, k, n,
+                                        &mut want, ldc);
+                let mut got = cinit.clone();
+                d.matmul_acc_strided_i8(&a, lda, &qi, &si, group, m, k, n,
+                                        &mut got, ldc);
+                assert_eq!(got, want, "i8 g={group} m={m} k={k} n={n}");
+
+                let (qb, sb) = quantize_q4_rows(&b, k, n, group);
+                let mut want = cinit.clone();
+                s.matmul_acc_strided_q4(&a, lda, &qb, &sb, group, m, k, n,
+                                        &mut want, ldc);
+                let mut got = cinit.clone();
+                d.matmul_acc_strided_q4(&a, lda, &qb, &sb, group, m, k, n,
+                                        &mut got, ldc);
+                assert_eq!(got, want, "q4 g={group} m={m} k={k} n={n}");
+            }
+        }
+    }
+
+    /// Quantised bt (dot-form) kernels on the detected vector tier equal
+    /// [`dot_lanes`] over the dequantised row for lane-multiple groups.
+    #[test]
+    fn detected_tier_quantised_bt_matches_lane_oracle() {
+        let isa = Isa::detect();
+        if isa == Isa::Scalar {
+            return;
+        }
+        let lanes = match isa {
+            Isa::Avx2 => 8,
+            Isa::Neon => 4,
+            Isa::Scalar => unreachable!(),
+        };
+        let d = Dispatch::new(isa);
+        let mut rng = Rng::new(0x014B);
+        for group in [8usize, 32] {
+            for _ in 0..20 {
+                let m = 1 + rng.below(3) as usize;
+                let k = 1 + rng.below(40) as usize;
+                let n = 1 + rng.below(6) as usize;
+                let a = rand_vec(&mut rng, m * k);
+                let bt = rand_vec(&mut rng, n * k);
+                let (qi, si) = quantize_i8_rows(&bt, n, k, group);
+                let deq = deq_i8(&qi, &si, n, k, group);
+                let mut got = vec![0.0f32; m * n];
+                d.matmul_bt_acc_strided_i8(&a, k, &qi, &si, group, m, k, n,
+                                           &mut got, n);
+                for i in 0..m {
+                    for j in 0..n {
+                        let want = dot_lanes(&a[i * k..(i + 1) * k],
+                                             &deq[j * k..(j + 1) * k],
+                                             lanes);
+                        assert_eq!(got[i * n + j], want,
+                                   "i8 bt ({i},{j}) g={group} k={k}");
+                    }
+                }
+                let (qb, sb) = quantize_q4_rows(&bt, n, k, group);
+                let deq = deq_q4(&qb, &sb, n, k, group);
+                let mut got = vec![0.0f32; m * n];
+                d.matmul_bt_acc_strided_q4(&a, k, &qb, &sb, group, m, k, n,
+                                           &mut got, n);
+                for i in 0..m {
+                    for j in 0..n {
+                        let want = dot_lanes(&a[i * k..(i + 1) * k],
+                                             &deq[j * k..(j + 1) * k],
+                                             lanes);
+                        assert_eq!(got[i * n + j], want,
+                                   "q4 bt ({i},{j}) g={group} k={k}");
+                    }
+                }
+            }
         }
     }
 }

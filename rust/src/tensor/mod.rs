@@ -4,8 +4,11 @@
 //! The store format is defined by `python/compile/params.py` (magic
 //! "MBT1"): parameters, goldens and trained checkpoints all travel
 //! through it. The `kernels` submodule is the ISA-dispatched kernel tier
-//! the pure-Rust reference backend is built from (DESIGN.md §11); the
-//! `math` submodule is its deprecated free-function facade.
+//! the pure-Rust reference backend is built from (DESIGN.md §11). The
+//! deprecated `tensor::math` free-function facade (a byte-identical
+//! forwarding shim kept through the 0.3 series) was removed in 0.4.0 —
+//! callers hold a [`kernels::Dispatch`] or call [`kernels::scalar`]
+//! directly.
 
 use std::fmt;
 use std::io::{Read, Write};
@@ -15,7 +18,6 @@ use crate::util::error::{Context, Result};
 use crate::bail;
 
 pub mod kernels;
-pub mod math;
 
 pub const MBT_MAGIC: u32 = 0x4D42_5431;
 

@@ -530,6 +530,13 @@ fn prefix_cache_hits_identically_over_http() {
         &text, "m2_prefix_cache_misses_total{replica=\"0\"}") >= 1.0);
     assert!(metric_value(
         &text, "m2_prefix_cache_bytes{replica=\"0\"}") > 0.0);
+    // the weight-stream identity gauge is exported per replica with a
+    // dtype label (f32 default in this stack) and a positive byte model
+    assert!(text.contains("# TYPE m2_bytes_streamed_per_token gauge"));
+    assert!(metric_value(
+        &text,
+        "m2_bytes_streamed_per_token{replica=\"0\",dtype=\"f32\"}")
+        > 0.0);
     // and the cached second request decodes the same tokens
     let c1 = &j1.get("choices").and_then(Json::as_arr).unwrap()[0];
     let c2 = &j2.get("choices").and_then(Json::as_arr).unwrap()[0];

@@ -21,6 +21,8 @@
 //! so the binary never reports a skip CI could mistake for coverage.
 
 use mamba2_serve::tensor::kernels::{bf16_to_f32, dot_lanes, pack_cols,
+                                    q4_code, q4_row_bytes, quant_groups,
+                                    quantize_i8_rows, quantize_q4_rows,
                                     silu, silu_poly, sum_sq_lanes,
                                     to_bf16, Dispatch, Isa};
 use mamba2_serve::util::prng::Rng;
@@ -81,6 +83,111 @@ fn broadcast_matmuls_are_bitwise_scalar_on_ragged_strided_shapes() {
         dx.matmul_acc_strided_bf16(&a, lda, &bh, m, k, n, &mut cv, ldc);
         or.matmul_acc_strided_bf16(&a, lda, &bh, m, k, n, &mut cs, ldc);
         assert_eq!(cv, cs, "bf16: {tag}");
+    }
+}
+
+/// Ragged quantisation group: crosses lane multiples (8, 16), odd
+/// widths that force the vector tiers onto their scalar-body fallback,
+/// and groups wider than the row (one scale per row).
+fn group_of(rng: &mut Rng) -> usize {
+    rng.range(1, 24) as usize
+}
+
+#[test]
+fn quantised_broadcast_matmuls_are_bitwise_scalar_on_ragged_shapes() {
+    // the int8/q4 broadcast kernels dequantise in-kernel with the same
+    // per-element op order on every tier (widen → ·scale → ·a → add),
+    // and non-lane-multiple groups take the scalar body — so every
+    // tier must equal the scalar loops exactly, at every group size
+    let dx = Dispatch::new(Isa::detect());
+    let or = Dispatch::scalar();
+    let mut rng = Rng::new(0x5EED_0006);
+    for sweep in 0..SWEEPS {
+        let (m, k, n) = mkn(&mut rng);
+        let lda = k + rng.range(0, 5) as usize;
+        let ldc = n + rng.range(0, 5) as usize;
+        let group = group_of(&mut rng);
+        let a = vecf(&mut rng, (m - 1) * lda + k, 1.0);
+        let b = vecf(&mut rng, k * n, 1.0);
+        let c0 = vecf(&mut rng, (m - 1) * ldc + n, 0.5);
+        let tag = format!("sweep {sweep}: m={m} k={k} n={n} \
+                           lda={lda} ldc={ldc} g={group}");
+
+        let (codes, scales) = quantize_i8_rows(&b, k, n, group);
+        let (mut cv, mut cs) = (c0.clone(), c0.clone());
+        dx.matmul_acc_strided_i8(&a, lda, &codes, &scales, group, m, k,
+                                 n, &mut cv, ldc);
+        or.matmul_acc_strided_i8(&a, lda, &codes, &scales, group, m, k,
+                                 n, &mut cs, ldc);
+        assert_eq!(cv, cs, "int8: {tag}");
+
+        let (codes, scales) = quantize_q4_rows(&b, k, n, group);
+        let (mut cv, mut cs) = (c0.clone(), c0);
+        dx.matmul_acc_strided_q4(&a, lda, &codes, &scales, group, m, k,
+                                 n, &mut cv, ldc);
+        or.matmul_acc_strided_q4(&a, lda, &codes, &scales, group, m, k,
+                                 n, &mut cs, ldc);
+        assert_eq!(cv, cs, "q4: {tag}");
+    }
+}
+
+#[test]
+fn quantised_bt_matmuls_match_the_dequantised_lane_oracle() {
+    // dot-form contract: when the group vectorises (group % lanes == 0)
+    // the tier's pinned reordering is dot_lanes over the dequantised
+    // row; otherwise the kernel takes its scalar body, i.e. the
+    // sequential (1-lane) dot. Widen and ·scale are per-element, so
+    // "dequantise then dot" reproduces the in-kernel order exactly.
+    let dx = Dispatch::new(Isa::detect());
+    let lane = lanes(dx.isa);
+    let mut rng = Rng::new(0x5EED_0007);
+    for sweep in 0..SWEEPS {
+        let (m, k, n) = mkn(&mut rng);
+        let lda = k + rng.range(0, 5) as usize;
+        let ldc = n + rng.range(0, 5) as usize;
+        let group = group_of(&mut rng);
+        let eff = if group % lane == 0 { lane } else { 1 };
+        let a = vecf(&mut rng, (m - 1) * lda + k, 1.0);
+        let bt = vecf(&mut rng, n * k, 1.0); // (n, k) row-major
+        let c0 = vecf(&mut rng, (m - 1) * ldc + n, 0.5);
+        let tag = format!("sweep {sweep}: m={m} k={k} n={n} g={group} \
+                           eff_lanes={eff}");
+
+        let oracle = |deq_row: &dyn Fn(usize) -> Vec<f32>| -> Vec<f32> {
+            let mut c = c0.clone();
+            for i in 0..m {
+                let ar = &a[i * lda..i * lda + k];
+                for j in 0..n {
+                    c[i * ldc + j] += dot_lanes(ar, &deq_row(j), eff);
+                }
+            }
+            c
+        };
+
+        let (codes, scales) = quantize_i8_rows(&bt, n, k, group);
+        let gpr = quant_groups(k, group);
+        let want = oracle(&|j| {
+            codes[j * k..(j + 1) * k].iter().enumerate()
+                .map(|(t, &q)| q as f32 * scales[j * gpr + t / group])
+                .collect()
+        });
+        let mut c = c0.clone();
+        dx.matmul_bt_acc_strided_i8(&a, lda, &codes, &scales, group, m,
+                                    k, n, &mut c, ldc);
+        assert_eq!(c, want, "bt int8: {tag}");
+
+        let (codes, scales) = quantize_q4_rows(&bt, n, k, group);
+        let bpr = q4_row_bytes(k);
+        let want = oracle(&|j| {
+            let row = &codes[j * bpr..(j + 1) * bpr];
+            (0..k).map(|t| {
+                q4_code(row, t) as f32 * scales[j * gpr + t / group]
+            }).collect()
+        });
+        let mut c = c0.clone();
+        dx.matmul_bt_acc_strided_q4(&a, lda, &codes, &scales, group, m,
+                                    k, n, &mut c, ldc);
+        assert_eq!(c, want, "bt q4: {tag}");
     }
 }
 
